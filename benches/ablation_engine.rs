@@ -1,0 +1,20 @@
+//! Ablation: serial-FFT engine choice on the distributed hot path —
+//! native rust planner (f64) vs the AOT JAX+Pallas artifacts through PJRT
+//! (f32 planes, per-call literal marshalling). Documents the cost of the
+//! TPU-shaped path on CPU PJRT.
+
+use a2wfft::coordinator::benchkit::*;
+use a2wfft::coordinator::EngineKind;
+use a2wfft::pfft::{Kind, RedistMethod};
+
+fn main() {
+    banner("ablation: serial engine (native vs xla-aot), 32x16x64 c2c, 4 ranks");
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    real_header();
+    real_row("native", &[32, 16, 64], 4, 2, Kind::C2c, RedistMethod::Alltoallw, EngineKind::Native);
+    if artifacts.join("manifest.tsv").exists() {
+        real_row("xla-aot", &[32, 16, 64], 4, 2, Kind::C2c, RedistMethod::Alltoallw, EngineKind::Xla);
+    } else {
+        println!("xla-aot\t-\t-\t(skipped: run `make artifacts`)");
+    }
+}

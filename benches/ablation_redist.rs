@@ -1,0 +1,37 @@
+//! Ablation: the paper's core claim isolated — one `alltoallw` over
+//! subarray datatypes vs the traditional remap + `alltoallv`, on identical
+//! substrate/transport, across mesh sizes and group sizes. Reports the
+//! redistribution-only time (the Figs. 6b/7b/8b/9b quantity).
+
+use a2wfft::coordinator::benchkit::*;
+use a2wfft::coordinator::EngineKind;
+use a2wfft::pfft::{Kind, RedistMethod};
+
+fn main() {
+    banner("ablation: redistribution method (same substrate, redist-only column)");
+    real_header();
+    for (global, ranks, grid) in [
+        ([48usize, 48, 48], 4usize, 1usize),
+        ([48, 48, 48], 4, 2),
+        ([96, 96, 96], 8, 2),
+        ([64, 64, 64], 16, 2),
+    ] {
+        let mut rep_new = None;
+        let mut rep_trad = None;
+        for (label, method) in
+            [("alltoallw", RedistMethod::Alltoallw), ("traditional", RedistMethod::Traditional)]
+        {
+            let rep = real_row(label, &global, ranks, grid, Kind::C2c, method, EngineKind::Native);
+            if method == RedistMethod::Alltoallw {
+                rep_new = Some(rep);
+            } else {
+                rep_trad = Some(rep);
+            }
+        }
+        let (n, t) = (rep_new.unwrap(), rep_trad.unwrap());
+        println!(
+            "# global={global:?} ranks={ranks}: redist speedup (trad/new) = {:.3}x",
+            t.redist / n.redist
+        );
+    }
+}

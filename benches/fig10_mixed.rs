@@ -1,0 +1,21 @@
+//! Paper Fig. 10: strong scaling with mixed inter/intra-node placement
+//! (16 cores/node), 2048^3. The real section exercises the in-process
+//! substrate at 16 ranks (all "intra-node" by construction) to verify the
+//! relative method costs; the netmodel section reproduces the paper-scale
+//! crossover where optimized ALLTOALL(V) wins on fat nodes.
+
+use a2wfft::coordinator::benchkit::*;
+use a2wfft::coordinator::EngineKind;
+use a2wfft::netmodel::figures;
+use a2wfft::pfft::{Kind, RedistMethod};
+
+fn main() {
+    banner("fig10 real: pencil 64^3 on 16 ranks (single-node analogue)");
+    real_header();
+    for (label, method) in
+        [("alltoallw", RedistMethod::Alltoallw), ("traditional", RedistMethod::Traditional)]
+    {
+        real_row(label, &[64, 64, 64], 16, 2, Kind::R2c, method, EngineKind::Native);
+    }
+    model_table(10, &figures::run_figure(10).unwrap());
+}

@@ -1,0 +1,20 @@
+//! Paper Fig. 11: 4-D transform (128^4 in the paper) on a 3-D process
+//! grid, ours vs PFFT. Real runs: 16^4 and 20^4 on 8 ranks.
+
+use a2wfft::coordinator::benchkit::*;
+use a2wfft::coordinator::EngineKind;
+use a2wfft::netmodel::figures;
+use a2wfft::pfft::{Kind, RedistMethod};
+
+fn main() {
+    banner("fig11 real: 4-D c2c on a 3-D grid (8 ranks), simmpi");
+    real_header();
+    for global in [[16usize, 16, 16, 16], [20, 20, 20, 20]] {
+        for (label, method) in
+            [("alltoallw", RedistMethod::Alltoallw), ("traditional(pfft-like)", RedistMethod::Traditional)]
+        {
+            real_row(label, &global, 8, 3, Kind::C2c, method, EngineKind::Native);
+        }
+    }
+    model_table(11, &figures::run_figure(11).unwrap());
+}

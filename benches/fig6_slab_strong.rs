@@ -1,0 +1,22 @@
+//! Paper Fig. 6: strong scaling, slab decomposition, r2c transform.
+//! Real runs use a 96^3 mesh on 1..8 simulated ranks (both methods);
+//! the netmodel section reproduces the paper's 700^3 / 1..32-core curves
+//! (shared vs distributed placement).
+
+use a2wfft::coordinator::benchkit::*;
+use a2wfft::coordinator::EngineKind;
+use a2wfft::netmodel::figures;
+use a2wfft::pfft::{Kind, RedistMethod};
+
+fn main() {
+    banner("fig6 real: slab strong scaling, 96^3 r2c, simmpi");
+    real_header();
+    for ranks in [1usize, 2, 4, 8] {
+        for (label, method) in
+            [("alltoallw", RedistMethod::Alltoallw), ("traditional", RedistMethod::Traditional)]
+        {
+            real_row(label, &[96, 96, 96], ranks, 1, Kind::R2c, method, EngineKind::Native);
+        }
+    }
+    model_table(6, &figures::run_figure(6).unwrap());
+}

@@ -1,0 +1,20 @@
+//! Paper Fig. 7: strong scaling, pencil decomposition, r2c transform.
+//! Real runs: 64^3 on 4..16 ranks (2-D grids); netmodel: 512^3, 64..8192.
+
+use a2wfft::coordinator::benchkit::*;
+use a2wfft::coordinator::EngineKind;
+use a2wfft::netmodel::figures;
+use a2wfft::pfft::{Kind, RedistMethod};
+
+fn main() {
+    banner("fig7 real: pencil strong scaling, 64^3 r2c, simmpi");
+    real_header();
+    for ranks in [4usize, 8, 16] {
+        for (label, method) in
+            [("alltoallw", RedistMethod::Alltoallw), ("traditional", RedistMethod::Traditional)]
+        {
+            real_row(label, &[64, 64, 64], ranks, 2, Kind::R2c, method, EngineKind::Native);
+        }
+    }
+    model_table(7, &figures::run_figure(7).unwrap());
+}

@@ -1,0 +1,21 @@
+//! Paper Fig. 8: weak scaling, slab decomposition (524288 points/core in
+//! the paper; 32^3 points/rank in the reduced real runs).
+
+use a2wfft::coordinator::benchkit::*;
+use a2wfft::coordinator::EngineKind;
+use a2wfft::netmodel::figures;
+use a2wfft::pfft::{Kind, RedistMethod};
+
+fn main() {
+    banner("fig8 real: slab weak scaling, 32^3 per rank, simmpi");
+    real_header();
+    for ranks in [1usize, 2, 4, 8] {
+        let global = [32 * ranks, 32, 32];
+        for (label, method) in
+            [("alltoallw", RedistMethod::Alltoallw), ("traditional", RedistMethod::Traditional)]
+        {
+            real_row(label, &global, ranks, 1, Kind::R2c, method, EngineKind::Native);
+        }
+    }
+    model_table(8, &figures::run_figure(8).unwrap());
+}

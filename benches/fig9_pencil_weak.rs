@@ -1,0 +1,19 @@
+//! Paper Fig. 9: weak scaling, pencil decomposition.
+
+use a2wfft::coordinator::benchkit::*;
+use a2wfft::coordinator::EngineKind;
+use a2wfft::netmodel::figures;
+use a2wfft::pfft::{Kind, RedistMethod};
+
+fn main() {
+    banner("fig9 real: pencil weak scaling, ~32^3 per rank, simmpi");
+    real_header();
+    for (ranks, global) in [(4usize, [64usize, 64, 32]), (8, [64, 64, 64]), (16, [128, 64, 64])] {
+        for (label, method) in
+            [("alltoallw", RedistMethod::Alltoallw), ("traditional", RedistMethod::Traditional)]
+        {
+            real_row(label, &global, ranks, 2, Kind::R2c, method, EngineKind::Native);
+        }
+    }
+    model_table(9, &figures::run_figure(9).unwrap());
+}

@@ -1,0 +1,27 @@
+//! Microbenchmark: the native serial FFT substrate across plan classes
+//! (radix-2 iterative, mixed radix, Bluestein) — MFLOP/s per line length,
+//! with the O(N^2) naive DFT as the baseline it must dominate.
+
+use a2wfft::coordinator::benchkit::time_best;
+use a2wfft::fft::{Complex64, Direction, FftPlan};
+
+fn main() {
+    println!("=== micro: serial FFT throughput (5 n log2 n flop convention) ===");
+    println!("n\tclass\tus_per_line\tMFLOPs");
+    for &n in &[64usize, 256, 1024, 4096, 700, 360, 1000, 67, 251, 521] {
+        let plan = FftPlan::new(n);
+        let class = if n.is_power_of_two() {
+            "pow2"
+        } else if a2wfft::fft::factorize(n).iter().all(|&f| f <= 61) {
+            "mixed"
+        } else {
+            "bluestein"
+        };
+        let mut data: Vec<Complex64> =
+            (0..n).map(|k| Complex64::new((k as f64 * 0.7).sin(), (k as f64 * 0.3).cos())).collect();
+        let iters = (200_000 / n).max(8);
+        let t = time_best(iters, || plan.process(&mut data, Direction::Forward));
+        let flops = 5.0 * n as f64 * (n as f64).log2();
+        println!("{n}\t{class}\t{:.2}\t{:.1}", t * 1e6, flops / t / 1e6);
+    }
+}

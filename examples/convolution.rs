@@ -1,0 +1,77 @@
+//! Distributed spectral convolution using the high-level [`DistArray`]
+//! API: circular convolution of two 3-D fields via forward transform,
+//! pointwise product, inverse transform — validated against the direct
+//! O(N^2) convolution on the gathered arrays.
+//!
+//! Run: `cargo run --release --example convolution`
+
+use a2wfft::distarray::DistArray;
+use a2wfft::fft::{Complex64, NativeFft};
+use a2wfft::pfft::{Kind, PfftPlan, RedistMethod};
+use a2wfft::simmpi::World;
+
+fn main() {
+    let global = vec![8usize, 6, 4];
+    let ranks = 4;
+    println!("Distributed circular convolution of {global:?} fields over {ranks} ranks");
+    World::run(ranks, |comm| {
+        let mut plan = PfftPlan::with_dims(
+            &comm,
+            &global,
+            &[2, 2],
+            Kind::C2c,
+            RedistMethod::Alltoallw,
+        );
+        // Two input fields as DistArrays with the plan's input alignment.
+        let mut a: DistArray<Complex64> = DistArray::new(&comm, &global, 2);
+        let mut b: DistArray<Complex64> = DistArray::new(&comm, &global, 2);
+        a.fill(|idx| Complex64::new(((idx[0] + 2 * idx[1]) % 5) as f64, 0.0));
+        b.fill(|idx| Complex64::new(((idx[1] * idx[2] + 1) % 3) as f64, 0.0));
+        let ga = a.gather(0);
+        let gb = b.gather(0);
+        // conv = ifft(fft(a) * fft(b)).
+        let mut eng = NativeFft::new();
+        let mut fa = vec![Complex64::ZERO; plan.output_len()];
+        let mut fb = vec![Complex64::ZERO; plan.output_len()];
+        plan.forward(&mut eng, a.local(), &mut fa);
+        plan.forward(&mut eng, b.local(), &mut fb);
+        for (x, y) in fa.iter_mut().zip(&fb) {
+            *x = *x * *y;
+        }
+        let mut conv: DistArray<Complex64> = DistArray::new(&comm, &global, 2);
+        let mut out = vec![Complex64::ZERO; plan.input_len()];
+        plan.backward(&mut eng, &fa, &mut out);
+        conv.local_mut().copy_from_slice(&out);
+        let gconv = conv.gather(0);
+        if comm.rank() == 0 {
+            // Direct circular convolution on rank 0 as the oracle.
+            let (ga, gb, gc) = (ga.unwrap(), gb.unwrap(), gconv.unwrap());
+            let (n0, n1, n2) = (global[0], global[1], global[2]);
+            let idx = |i: usize, j: usize, k: usize| (i * n1 + j) * n2 + k;
+            let mut maxerr = 0.0f64;
+            for i in 0..n0 {
+                for j in 0..n1 {
+                    for k in 0..n2 {
+                        let mut acc = Complex64::ZERO;
+                        for p in 0..n0 {
+                            for q in 0..n1 {
+                                for r in 0..n2 {
+                                    let w = gb[idx(
+                                        (i + n0 - p) % n0,
+                                        (j + n1 - q) % n1,
+                                        (k + n2 - r) % n2,
+                                    )];
+                                    acc += ga[idx(p, q, r)] * w;
+                                }
+                            }
+                        }
+                        maxerr = maxerr.max((gc[idx(i, j, k)] - acc).abs());
+                    }
+                }
+            }
+            println!("max |spectral - direct| = {maxerr:.3e}");
+            assert!(maxerr < 1e-9, "convolution mismatch");
+            println!("convolution OK (convolution theorem through the distributed stack)");
+        }
+    });
+}

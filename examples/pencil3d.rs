@@ -1,0 +1,57 @@
+//! Line-by-line mirror of the paper's Appendix A: a full 3-D complex FFT
+//! with a 2-D pencil decomposition, written against the *low-level* API
+//! (subgroups + explicit `exchange` calls + serial `seqxfftn`-style
+//! transforms) rather than the [`a2wfft::pfft::PfftPlan`] driver — this is
+//! exactly the ~50-line program the paper argues the method enables.
+//!
+//! Run: `cargo run --release --example pencil3d`
+
+use a2wfft::decomp::local_len;
+use a2wfft::fft::{fft_axis, Complex64, Direction, Planner};
+use a2wfft::redistribute::exchange;
+use a2wfft::simmpi::topology::subcomms;
+use a2wfft::simmpi::World;
+
+fn main() {
+    // Global 3-D array sizes — the paper's N = {42, 127, 256}, shrunk a
+    // little to keep the demo quick (127 is prime: Bluestein territory).
+    let n = [42usize, 127, 64];
+    let ranks = 6;
+    println!("Appendix A: 3-D c2c FFT of {n:?} with a 2-D pencil decomposition, {ranks} ranks");
+    World::run(ranks, |comm| {
+        // Create subgroups from the 2-D process grid (Listing 4).
+        let p = subcomms(&comm, 2);
+        let lsz = |nn: usize, c: &a2wfft::simmpi::Comm| local_len(nn, c.size(), c.rank());
+        // Local sizes of the three alignments (paper's sizesA/B/C).
+        let sizes_a = [lsz(n[0], &p[0]), lsz(n[1], &p[1]), n[2]];
+        let sizes_b = [lsz(n[0], &p[0]), n[1], lsz(n[2], &p[1])];
+        let sizes_c = [n[0], lsz(n[1], &p[0]), lsz(n[2], &p[1])];
+        let mut array_a: Vec<Complex64> = (0..sizes_a.iter().product::<usize>())
+            .map(|j| Complex64::new(j as f64, j as f64)) // arrayA[j] = j + j*I
+            .collect();
+        let mut array_b = vec![Complex64::ZERO; sizes_b.iter().product()];
+        let mut array_c = vec![Complex64::ZERO; sizes_c.iter().product()];
+        let mut planner = Planner::new();
+        // Forward FFT (paper lines 54-59).
+        fft_axis(&mut planner, &mut array_a, &sizes_a, 2, Direction::Forward);
+        exchange(&p[1], &array_a, &sizes_a, 2, &mut array_b, &sizes_b, 1);
+        fft_axis(&mut planner, &mut array_b, &sizes_b, 1, Direction::Forward);
+        exchange(&p[0], &array_b, &sizes_b, 1, &mut array_c, &sizes_c, 0);
+        fft_axis(&mut planner, &mut array_c, &sizes_c, 0, Direction::Forward);
+        // Backward FFT (paper lines 61-66).
+        fft_axis(&mut planner, &mut array_c, &sizes_c, 0, Direction::Backward);
+        exchange(&p[0], &array_c, &sizes_c, 0, &mut array_b, &sizes_b, 1);
+        fft_axis(&mut planner, &mut array_b, &sizes_b, 1, Direction::Backward);
+        exchange(&p[1], &array_b, &sizes_b, 1, &mut array_a, &sizes_a, 2);
+        fft_axis(&mut planner, &mut array_a, &sizes_a, 2, Direction::Backward);
+        // Check result (paper lines 68-70): arrayA[j] == j + j*I again.
+        for (j, v) in array_a.iter().enumerate() {
+            assert!(
+                (v.re - j as f64).abs() < 1e-8 && (v.im - j as f64).abs() < 1e-8,
+                "rank {}: element {j} corrupted: {v:?}",
+                comm.rank()
+            );
+        }
+    });
+    println!("pencil3d OK (Appendix A reproduced, including the prime length 127)");
+}

@@ -1,0 +1,68 @@
+"""AOT compile path: lower the Layer-2 batched FFT to HLO **text**
+artifacts the rust runtime loads via the PJRT C API.
+
+Why HLO text and not ``lowered.compile()`` / serialized protos: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The HLO *text* parser reassigns ids on load, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  fft_{fwd|bwd}_b{B}_n{N}.hlo.txt   one module per (direction, batch, n)
+  manifest.tsv                      name, direction, batch, n, file
+
+Run once at build time (``make artifacts``); python never runs on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+from . import model
+
+# Default artifact set: the serial-FFT line lengths the rust coordinator's
+# examples and benches ship to the XLA engine. Batch is the padded row
+# block (rust pads partial batches with zeros).
+DEFAULT_BATCH = 64
+DEFAULT_SIZES = (16, 32, 64, 128)
+
+
+def emit(out_dir: str, batch: int, sizes, force: bool = False) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    written = []
+    for n in sizes:
+        for forward in (True, False):
+            tag = "fwd" if forward else "bwd"
+            name = f"fft_{tag}_b{batch}_n{n}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            rows.append((name, tag, batch, n, os.path.basename(path)))
+            if os.path.exists(path) and not force:
+                continue
+            text = model.lowered_hlo_text(batch, n, forward)
+            with open(path, "w") as f:
+                f.write(text)
+            written.append(path)
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# name\tdir\tbatch\tn\tfile\n")
+        for row in rows:
+            f.write("\t".join(str(x) for x in row) + "\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--sizes", type=int, nargs="*", default=list(DEFAULT_SIZES))
+    ap.add_argument("--force", action="store_true", help="re-lower even if files exist")
+    args = ap.parse_args()
+    written = emit(args.out_dir, args.batch, args.sizes, args.force)
+    print(f"artifacts: {len(written)} modules written to {os.path.abspath(args.out_dir)}")
+
+
+if __name__ == "__main__":
+    main()

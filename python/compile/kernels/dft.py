@@ -1,0 +1,165 @@
+"""Layer-1 Pallas kernels: the batched DFT-stage matmul.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the serial-FFT leaf is
+expressed as dense matrix multiplication against precomputed DFT matrices so
+the hot loop is MXU (systolic-array) work rather than branchy butterflies.
+Complex arithmetic is carried as separate real/imaginary planes and each
+complex matmul uses the 3-real-matmul Karatsuba decomposition:
+
+    t1 = xr @ Fr,  t2 = xi @ Fi,  t3 = (xr + xi) @ (Fr + Fi)
+    yr = t1 - t2,  yi = t3 - t1 - t2
+
+The kernel computes one (block_b, n) output panel per grid step; the DFT
+matrix (n, n) panels stay VMEM-resident across the batch sweep (BlockSpec
+index maps pin them to block (0, 0)).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness is what the build-time pytest checks.
+Real-TPU VMEM/MXU estimates live in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile. 128 rows x 128-lane rows is the natural MXU panel; we keep it
+# modest so small batches do not over-pad.
+DEFAULT_BLOCK_B = 64
+
+
+def _dft_matmul_kernel(xr_ref, xi_ref, fr_ref, fi_ref, or_ref, oi_ref):
+    """One grid step: (block_b, n) complex rows times (n, n) DFT matrix.
+
+    ``F`` is passed already transposed (``F[k, j] -> F^T[j, k]``) so the
+    contraction is a plain row-major matmul ``x (b, n) @ Ft (n, n)``.
+    """
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    fr = fr_ref[...]
+    fi = fi_ref[...]
+    # Karatsuba: 3 real matmuls instead of 4.
+    t1 = jnp.dot(xr, fr, preferred_element_type=jnp.float32)
+    t2 = jnp.dot(xi, fi, preferred_element_type=jnp.float32)
+    t3 = jnp.dot(xr + xi, fr + fi, preferred_element_type=jnp.float32)
+    or_ref[...] = t1 - t2
+    oi_ref[...] = t3 - t1 - t2
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def dft_matmul(xr, xi, ftr, fti, block_b: int = DEFAULT_BLOCK_B):
+    """Batched complex DFT-stage: ``y[b, k] = sum_j x[b, j] * F[k, j]``.
+
+    Args:
+      xr, xi: (batch, n) float32 — real/imag planes of the input rows.
+      ftr, fti: (n, n) float32 — the *transposed* DFT matrix planes
+        (``ftr[j, k] = Re W^{jk}``), so the kernel contracts ``x @ Ft``.
+      block_b: batch tile per grid step (batch must divide evenly; callers
+        pad — see :func:`pad_batch`).
+
+    Returns:
+      (yr, yi): (batch, n) float32.
+    """
+    b, n = xr.shape
+    assert xr.shape == xi.shape
+    assert ftr.shape == (n, n) and fti.shape == (n, n)
+    block_b = choose_block(b, block_b)
+    grid = (b // block_b,)
+    row_spec = pl.BlockSpec((block_b, n), lambda i: (i, 0))
+    mat_spec = pl.BlockSpec((n, n), lambda i: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((b, n), jnp.float32)
+    return pl.pallas_call(
+        _dft_matmul_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, mat_spec, mat_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(xr, xi, ftr, fti)
+
+
+def _twiddle_kernel(xr_ref, xi_ref, tr_ref, ti_ref, or_ref, oi_ref):
+    """Pointwise complex multiply of a (block_b, n1, n2) panel by the
+    (n1, n2) four-step twiddle factors."""
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    tr = tr_ref[...]
+    ti = ti_ref[...]
+    or_ref[...] = xr * tr - xi * ti
+    oi_ref[...] = xr * ti + xi * tr
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def twiddle_multiply(xr, xi, tr, ti, block_b: int = DEFAULT_BLOCK_B):
+    """Elementwise multiply by twiddles: x (b, n1, n2) * t (n1, n2)."""
+    b, n1, n2 = xr.shape
+    assert tr.shape == (n1, n2)
+    block_b = choose_block(b, block_b)
+    grid = (b // block_b,)
+    row_spec = pl.BlockSpec((block_b, n1, n2), lambda i: (i, 0, 0))
+    tw_spec = pl.BlockSpec((n1, n2), lambda i: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((b, n1, n2), jnp.float32)
+    return pl.pallas_call(
+        _twiddle_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, tw_spec, tw_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(xr, xi, tr, ti)
+
+
+def choose_block(b: int, block_b: int) -> int:
+    """Largest divisor of ``b`` that is ``<= block_b`` (grid tiling needs
+    the batch to divide evenly; ``b`` is static at trace time)."""
+    block_b = min(block_b, b)
+    while b % block_b != 0:
+        block_b -= 1
+    return max(block_b, 1)
+
+
+def dft_matrix(n: int, sign: float = -1.0):
+    """Transposed DFT matrix planes ``Ft[j, k] = exp(sign * 2 pi i jk / n)``
+    as float32 (re, im). ``sign=-1`` is the forward transform."""
+    j = jnp.arange(n)
+    # (j * k) mod n computed in int space to keep angles exact for large n.
+    jk = (j[:, None] * j[None, :]) % n
+    # jk < n, so theta < 2*pi and float32 keeps full precision.
+    theta = sign * 2.0 * jnp.pi * jk.astype(jnp.float32) / n
+    return jnp.cos(theta), jnp.sin(theta)
+
+
+def four_step_twiddles(n1: int, n2: int, sign: float = -1.0):
+    """Four-step twiddle factors ``T[k1, j2] = exp(sign 2 pi i k1 j2 / n)``
+    with ``n = n1 * n2``, as float32 (re, im)."""
+    n = n1 * n2
+    k1 = jnp.arange(n1)
+    j2 = jnp.arange(n2)
+    prod = (k1[:, None] * j2[None, :]) % n
+    theta = sign * 2.0 * jnp.pi * prod.astype(jnp.float32) / n
+    return jnp.cos(theta), jnp.sin(theta)
+
+
+def split_length(n: int) -> tuple[int, int]:
+    """Factor ``n = n1 * n2`` with ``n1 <= n2`` as square as possible (the
+    four-step split). Returns (1, n) for primes."""
+    best = (1, n)
+    f = 1
+    while f * f <= n:
+        if n % f == 0:
+            best = (f, n // f)
+        f += 1
+    return best
+
+
+def pad_batch(x, block_b: int):
+    """Pad axis 0 up to a multiple of ``block_b`` (zeros)."""
+    b = x.shape[0]
+    rem = (-b) % block_b
+    if rem == 0:
+        return x
+    pad = [(0, rem)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)

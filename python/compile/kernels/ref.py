@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Pallas kernels and the L2 model.
+
+Everything here is straight ``jnp.fft`` (or explicit matrix DFT) — no
+Pallas, no custom lowering — and is what pytest compares kernel and model
+outputs against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fft_ref(xr, xi):
+    """Forward complex FFT along the last axis via jnp.fft, planes in/out."""
+    y = jnp.fft.fft(xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64))
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def ifft_ref(xr, xi):
+    """Backward (1/N-scaled) complex FFT along the last axis via jnp.fft."""
+    y = jnp.fft.ifft(xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64))
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def dft_matmul_ref(xr, xi, sign: float = -1.0):
+    """O(N^2) matrix DFT of (batch, n) rows — the kernel-level oracle."""
+    n = xr.shape[-1]
+    j = jnp.arange(n)
+    theta = sign * 2.0 * jnp.pi * ((j[:, None] * j[None, :]) % n) / n
+    fr = jnp.cos(theta).astype(jnp.float32)
+    fi = jnp.sin(theta).astype(jnp.float32)
+    yr = xr @ fr - xi @ fi
+    yi = xr @ fi + xi @ fr
+    return yr, yi

@@ -1,0 +1,115 @@
+"""Layer-2 JAX model: the batched serial FFT the rust coordinator executes
+through PJRT on its hot path.
+
+The transform of ``(batch, n)`` complex rows is built from the Layer-1
+Pallas kernels via the four-step (Cooley-Tukey ``n = n1 * n2``)
+factorization:
+
+  1. view rows as ``(batch, n1, n2)`` (j = j1 * n2 + j2);
+  2. DFT over the ``n1`` axis (a batched n1-point DFT matmul);
+  3. multiply by twiddles ``W_n^{k1 j2}``;
+  4. DFT over the ``n2`` axis;
+  5. output index is ``k = k2 * n1 + k1`` — a transpose + reshape.
+
+Each DFT step is a dense matmul against a precomputed DFT matrix
+(kernels/dft.py), so the compute lands on the MXU. For prime ``n`` the
+model falls back to the single O(n^2) DFT matmul, which is still one dense
+matmul — acceptable for the sizes the coordinator ships to this engine.
+
+Complex data crosses the rust <-> XLA boundary as separate float32
+real/imag planes (the ``xla`` crate's Literal API has no complex dtype).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dft
+
+
+def _four_step(xr, xi, n1: int, n2: int, sign: float, block_b: int):
+    """Four-step FFT of (b, n1*n2) rows; returns (b, n1*n2) planes."""
+    b = xr.shape[0]
+    n = n1 * n2
+    # Step 1: (b, n) -> (b, n1, n2), j = j1 * n2 + j2.
+    xr3 = xr.reshape(b, n1, n2)
+    xi3 = xi.reshape(b, n1, n2)
+    # Step 2: DFT over axis 1 (length n1). Move n1 last: (b, n2, n1).
+    f1r, f1i = dft.dft_matrix(n1, sign)
+    tr = jnp.swapaxes(xr3, 1, 2).reshape(b * n2, n1)
+    ti = jnp.swapaxes(xi3, 1, 2).reshape(b * n2, n1)
+    yr, yi = dft.dft_matmul(tr, ti, f1r, f1i, block_b)
+    # Back to (b, n1(k1), n2(j2)).
+    yr = jnp.swapaxes(yr.reshape(b, n2, n1), 1, 2)
+    yi = jnp.swapaxes(yi.reshape(b, n2, n1), 1, 2)
+    # Step 3: twiddles T[k1, j2] = W_n^{k1 j2}.
+    twr, twi = dft.four_step_twiddles(n1, n2, sign)
+    yr, yi = dft.twiddle_multiply(yr, yi, twr, twi, block_b)
+    # Step 4: DFT over axis 2 (length n2).
+    f2r, f2i = dft.dft_matrix(n2, sign)
+    zr, zi = dft.dft_matmul(
+        yr.reshape(b * n1, n2), yi.reshape(b * n1, n2), f2r, f2i, block_b
+    )
+    # Step 5: output ordering k = k2 * n1 + k1: (b, k1, k2) -> (b, k2, k1).
+    zr = jnp.swapaxes(zr.reshape(b, n1, n2), 1, 2).reshape(b, n)
+    zi = jnp.swapaxes(zi.reshape(b, n1, n2), 1, 2).reshape(b, n)
+    return zr, zi
+
+
+def fft_rows(xr, xi, sign: float = -1.0, block_b: int = dft.DEFAULT_BLOCK_B):
+    """Unnormalized FFT of (batch, n) complex rows (planes in/out).
+
+    ``sign=-1`` forward; ``sign=+1`` is the *unnormalized* backward
+    transform (callers scale by 1/n; :func:`ifft_rows` does it for you).
+    """
+    b, n = xr.shape
+    if n == 1:
+        return xr, xi
+    n1, n2 = dft.split_length(n)
+    if n1 == 1:
+        # Prime length: single dense DFT matmul.
+        fr, fi = dft.dft_matrix(n, sign)
+        return dft.dft_matmul(xr, xi, fr, fi, block_b)
+    return _four_step(xr, xi, n1, n2, sign, block_b)
+
+
+def ifft_rows(xr, xi, block_b: int = dft.DEFAULT_BLOCK_B):
+    """Normalized (1/n) inverse FFT of (batch, n) rows."""
+    n = xr.shape[-1]
+    yr, yi = fft_rows(xr, xi, sign=+1.0, block_b=block_b)
+    return yr / n, yi / n
+
+
+def make_fft_fn(batch: int, n: int, forward: bool):
+    """A closed (batch, n)-static function suitable for AOT lowering.
+
+    Returns ``(xr, xi) -> (yr, yi)`` over float32 (batch, n) planes.
+    Backward includes the 1/n normalization, matching the rust native
+    engine's convention.
+    """
+    del batch  # shapes are pinned by the example args at lowering time
+
+    def fn(xr, xi):
+        if forward:
+            return fft_rows(xr, xi, sign=-1.0)
+        return ifft_rows(xr, xi)
+
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def lowered_hlo_text(batch: int, n: int, forward: bool) -> str:
+    """Lower the (batch, n) transform to HLO text (the AOT interchange
+    format — see aot.py for why text, not serialized proto)."""
+    from jax._src.lib import xla_client as xc
+
+    spec = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+    lowered = jax.jit(make_fft_fn(batch, n, forward)).lower(spec, spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,106 @@
+"""L2 correctness: the four-step Pallas-backed FFT model vs jnp.fft, plus
+the AOT lowering contract (HLO text shape) the rust runtime relies on."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def rows(batch, n, seed):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.standard_normal((batch, n)).astype(np.float32),
+        rng.standard_normal((batch, n)).astype(np.float32),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([2, 4, 6, 8, 12, 15, 16, 20, 32, 36, 64, 100, 128, 13, 17]),
+    batch=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fft_rows_matches_jnp(n, batch, seed):
+    xr, xi = rows(batch, n, seed)
+    yr, yi = model.fft_rows(jnp.array(xr), jnp.array(xi))
+    wr, wi = ref.fft_ref(xr, xi)
+    scale = max(1.0, float(np.abs(np.array(wr)).max()), float(np.abs(np.array(wi)).max()))
+    np.testing.assert_allclose(np.array(yr) / scale, np.array(wr) / scale, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.array(yi) / scale, np.array(wi) / scale, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 9, 16, 25, 64, 128]),
+    batch=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_roundtrip_identity(n, batch, seed):
+    xr, xi = rows(batch, n, seed)
+    yr, yi = model.fft_rows(jnp.array(xr), jnp.array(xi))
+    br, bi = model.ifft_rows(yr, yi)
+    np.testing.assert_allclose(np.array(br), xr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(bi), xi, rtol=1e-4, atol=1e-4)
+
+
+def test_ifft_matches_jnp():
+    xr, xi = rows(6, 32, 3)
+    yr, yi = model.ifft_rows(jnp.array(xr), jnp.array(xi))
+    wr, wi = ref.ifft_ref(xr, xi)
+    np.testing.assert_allclose(np.array(yr), np.array(wr), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.array(yi), np.array(wi), rtol=1e-4, atol=1e-5)
+
+
+def test_parseval():
+    xr, xi = rows(4, 64, 11)
+    yr, yi = model.fft_rows(jnp.array(xr), jnp.array(xi))
+    ex = float((xr**2 + xi**2).sum())
+    ey = float((np.array(yr) ** 2 + np.array(yi) ** 2).sum()) / 64
+    assert abs(ex - ey) / ex < 1e-4
+
+
+def test_impulse_response_flat():
+    n = 16
+    xr = np.zeros((1, n), np.float32)
+    xr[0, 0] = 1.0
+    xi = np.zeros_like(xr)
+    yr, yi = model.fft_rows(jnp.array(xr), jnp.array(xi))
+    np.testing.assert_allclose(np.array(yr), np.ones((1, n), np.float32), atol=1e-5)
+    np.testing.assert_allclose(np.array(yi), np.zeros((1, n), np.float32), atol=1e-5)
+
+
+def test_linearity():
+    ar, ai = rows(3, 24, 1)
+    br, bi = rows(3, 24, 2)
+    fa = model.fft_rows(jnp.array(ar), jnp.array(ai))
+    fb = model.fft_rows(jnp.array(br), jnp.array(bi))
+    fs = model.fft_rows(jnp.array(ar + 2 * br), jnp.array(ai + 2 * bi))
+    np.testing.assert_allclose(
+        np.array(fs[0]), np.array(fa[0]) + 2 * np.array(fb[0]), rtol=1e-3, atol=1e-3
+    )
+    np.testing.assert_allclose(
+        np.array(fs[1]), np.array(fa[1]) + 2 * np.array(fb[1]), rtol=1e-3, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("forward", [True, False])
+def test_lowered_hlo_is_text_with_entry(forward):
+    text = model.lowered_hlo_text(8, 16, forward)
+    assert "ENTRY" in text, "expected parseable HLO text"
+    assert "f32[8,16]" in text, "expected the (batch, n) parameter shape"
+    # Two outputs (re, im) as a tuple — the rust side unwraps to_tuple2.
+    assert "(f32[8,16]" in text
+
+
+def test_prime_path_uses_single_matmul():
+    # For prime n the model takes the dense-DFT path; verify numerics there.
+    xr, xi = rows(5, 13, 9)
+    yr, yi = model.fft_rows(jnp.array(xr), jnp.array(xi))
+    wr, wi = ref.fft_ref(xr, xi)
+    np.testing.assert_allclose(np.array(yr), np.array(wr), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.array(yi), np.array(wi), rtol=1e-3, atol=1e-3)

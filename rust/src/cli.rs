@@ -1,0 +1,105 @@
+//! Minimal dependency-free CLI argument handling (the offline crate set has
+//! no clap). Supports `--key value` / `--key=value` options and positional
+//! arguments, with typed accessors.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals + options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without the program name).
+    /// `known_flags` lists boolean options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.options.insert(stripped.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: not a number: {v}"))).unwrap_or(default)
+    }
+
+    /// Comma-separated usize list.
+    pub fn get_usizes(&self, key: &str) -> Option<Vec<usize>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .map(|p| p.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad list: {v}")))
+                .collect()
+        })
+    }
+
+    /// Boolean flag.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose"])
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--global", "8,8,8", "--ranks=4", "--verbose", "extra"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("global"), Some("8,8,8"));
+        assert_eq!(a.get_usize("ranks", 0), 4);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["--grid", "3,2"]);
+        assert_eq!(a.get_usizes("grid"), Some(vec![3, 2]));
+        assert_eq!(a.get_usizes("absent"), None);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--check"]);
+        assert!(a.has_flag("check"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("ranks", 7), 7);
+    }
+}

@@ -1,0 +1,80 @@
+//! Shared helpers for the `benches/` harness (the offline crate set has no
+//! criterion, so the benches are plain `harness = false` binaries built on
+//! these utilities).
+//!
+//! Every paper figure gets two sections:
+//! * **real** — actual execution of the reduced-scale counterpart on the
+//!   simmpi substrate (both redistribution methods where relevant);
+//! * **model** — the netmodel reproduction at the paper's scale.
+
+use crate::coordinator::config::{EngineKind, RunConfig};
+use crate::coordinator::driver::{run_config, RunReport};
+use crate::netmodel::figures::{FigRow, HEADER};
+use crate::pfft::{Kind, RedistMethod};
+
+/// Print a section banner.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print the real-execution table header.
+pub fn real_header() {
+    println!("method\tranks\tglobal\ttotal_s\tfft_s\tredist_s\tbytes\terr");
+}
+
+/// Run one real configuration and print a row; returns the report.
+pub fn real_row(
+    label: &str,
+    global: &[usize],
+    ranks: usize,
+    grid_ndims: usize,
+    kind: Kind,
+    method: RedistMethod,
+    engine: EngineKind,
+) -> RunReport {
+    let cfg = RunConfig {
+        global: global.to_vec(),
+        grid: Vec::new(),
+        ranks,
+        kind,
+        method,
+        engine,
+        inner: 2,
+        outer: 3,
+    };
+    let rep = run_config(&cfg, grid_ndims);
+    println!(
+        "{label}\t{ranks}\t{global:?}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1e}",
+        rep.total, rep.fft, rep.redist, rep.bytes, rep.max_err
+    );
+    // The XLA engine carries f32 planes; the native engine is f64.
+    let tol = match engine {
+        EngineKind::Native => 1e-8,
+        EngineKind::Xla => 1e-3,
+    };
+    assert!(rep.max_err < tol, "bench roundtrip failed: {}", rep.max_err);
+    rep
+}
+
+/// Print a netmodel figure table.
+pub fn model_table(fig: usize, rows: &[FigRow]) {
+    banner(&format!("paper figure {fig} — netmodel @ Shaheen scale"));
+    println!("{HEADER}");
+    for r in rows {
+        println!("{}", r.tsv());
+    }
+}
+
+/// Simple wall-clock measurement of `f` repeated `iters` times, returning
+/// seconds per iteration (best of 3 samples).
+pub fn time_best<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    best
+}

@@ -1,0 +1,87 @@
+//! Run configuration for the driver and CLI.
+
+use crate::pfft::{Kind, RedistMethod};
+
+/// Which serial FFT engine the ranks use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The native rust planner (FFTW stand-in, f64).
+    Native,
+    /// The AOT JAX+Pallas artifacts through PJRT (f32 planes).
+    Xla,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Xla => "xla-aot",
+        }
+    }
+}
+
+/// A complete description of one measured run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Global real-space mesh.
+    pub global: Vec<usize>,
+    /// Process grid extents (empty => `dims_create(ranks, grid_ndims)`).
+    pub grid: Vec<usize>,
+    /// Number of simulated ranks.
+    pub ranks: usize,
+    /// Transform kind.
+    pub kind: Kind,
+    /// Redistribution method.
+    pub method: RedistMethod,
+    /// Serial engine.
+    pub engine: EngineKind,
+    /// Inner loop length (consecutive fwd+bwd pairs per timing sample).
+    pub inner: usize,
+    /// Outer loop length (timing samples; fastest is reported).
+    pub outer: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            global: vec![32, 32, 32],
+            grid: Vec::new(),
+            ranks: 4,
+            kind: Kind::R2c,
+            method: RedistMethod::Alltoallw,
+            engine: EngineKind::Native,
+            inner: 3,
+            outer: 5,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Resolve the grid extents (applying `dims_create` when unset).
+    pub fn resolved_grid(&self, grid_ndims: usize) -> Vec<usize> {
+        if self.grid.is_empty() {
+            crate::simmpi::dims_create(self.ranks, grid_ndims)
+        } else {
+            assert_eq!(self.grid.iter().product::<usize>(), self.ranks, "grid/ranks mismatch");
+            self.grid.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_resolves_grid() {
+        let c = RunConfig::default();
+        assert_eq!(c.resolved_grid(2), vec![2, 2]);
+        assert_eq!(c.resolved_grid(1), vec![4]);
+    }
+
+    #[test]
+    fn explicit_grid_kept() {
+        let c = RunConfig { grid: vec![4, 1], ..Default::default() };
+        assert_eq!(c.resolved_grid(2), vec![4, 1]);
+    }
+}

@@ -1,0 +1,169 @@
+//! The measurement driver: spawn the world, build plans, run the paper's
+//! timing protocol, aggregate.
+
+use std::time::Instant;
+
+use crate::coordinator::config::{EngineKind, RunConfig};
+use crate::coordinator::metrics::RankMetrics;
+use crate::fft::{Complex64, NativeFft, SerialFft};
+use crate::pfft::{Kind, PfftPlan};
+use crate::runtime::XlaFftEngine;
+use crate::simmpi::World;
+
+/// Aggregated result of one configuration (the paper's "fastest of the
+/// outer loop, divided by the inner length", max-reduced across ranks).
+#[derive(Debug, Clone, Copy)]
+pub struct RunReport {
+    /// Seconds per forward+backward pair.
+    pub total: f64,
+    /// Serial FFT portion.
+    pub fft: f64,
+    /// Redistribution portion.
+    pub redist: f64,
+    /// Bytes exchanged per pair (summed over ranks).
+    pub bytes: u64,
+    /// Max roundtrip error observed (input vs forward+backward output).
+    pub max_err: f64,
+}
+
+impl RunReport {
+    /// Grid points transformed per second (one fwd+bwd pair of the full
+    /// mesh counts the mesh once).
+    pub fn throughput(&self, global: &[usize]) -> f64 {
+        global.iter().product::<usize>() as f64 / self.total
+    }
+}
+
+fn make_engine(kind: EngineKind) -> Box<dyn SerialFft> {
+    match kind {
+        EngineKind::Native => Box::new(NativeFft::new()),
+        EngineKind::Xla => {
+            let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            Box::new(XlaFftEngine::load(&dir).expect("loading XLA artifacts (run `make artifacts`)"))
+        }
+    }
+}
+
+/// Execute `cfg` and return the aggregated report (grid dimensionality is
+/// taken from `cfg.grid` or defaults to pencil for 3-D+, slab for 2-D).
+pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
+    let cfg = cfg.clone();
+    let grid = cfg.resolved_grid(grid_ndims);
+    let reports = World::run(cfg.ranks, |comm| {
+        let mut plan =
+            PfftPlan::with_dims(&comm, &cfg.global, &grid, cfg.kind, cfg.method);
+        let mut engine = make_engine(cfg.engine);
+        // Deterministic input.
+        let ilen = plan.input_len();
+        let olen = plan.output_len();
+        let seed = comm.rank() as f64 + 1.0;
+        let mut best = f64::INFINITY;
+        let mut best_timers = Default::default();
+        let max_err;
+        let bytes0 = comm.world_bytes_sent();
+        match cfg.kind {
+            Kind::C2c => {
+                let input: Vec<Complex64> = (0..ilen)
+                    .map(|k| Complex64::new((k as f64 * 0.61 + seed).sin(), (k as f64 * 0.23).cos()))
+                    .collect();
+                let mut spec = vec![Complex64::ZERO; olen];
+                let mut back = vec![Complex64::ZERO; ilen];
+                for _ in 0..cfg.outer {
+                    comm.barrier();
+                    plan.timers.reset();
+                    let t0 = Instant::now();
+                    for _ in 0..cfg.inner {
+                        plan.forward(engine.as_mut(), &input, &mut spec);
+                        plan.backward(engine.as_mut(), &spec, &mut back);
+                    }
+                    let dt = t0.elapsed().as_secs_f64() / cfg.inner as f64;
+                    if dt < best {
+                        best = dt;
+                        best_timers = plan.timers;
+                    }
+                }
+                max_err = input
+                    .iter()
+                    .zip(&back)
+                    .map(|(a, b)| (*a - *b).abs())
+                    .fold(0.0, f64::max);
+            }
+            Kind::R2c => {
+                let input: Vec<f64> =
+                    (0..ilen).map(|k| (k as f64 * 0.61 + seed).sin()).collect();
+                let mut spec = vec![Complex64::ZERO; olen];
+                let mut back = vec![0.0f64; ilen];
+                for _ in 0..cfg.outer {
+                    comm.barrier();
+                    plan.timers.reset();
+                    let t0 = Instant::now();
+                    for _ in 0..cfg.inner {
+                        plan.forward_r2c(engine.as_mut(), &input, &mut spec);
+                        plan.backward_c2r(engine.as_mut(), &spec, &mut back);
+                    }
+                    let dt = t0.elapsed().as_secs_f64() / cfg.inner as f64;
+                    if dt < best {
+                        best = dt;
+                        best_timers = plan.timers;
+                    }
+                }
+                max_err = input
+                    .iter()
+                    .zip(&back)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f64::max);
+            }
+        }
+        let bytes = comm.world_bytes_sent() - bytes0;
+        let scale = 1.0 / (cfg.inner * cfg.outer) as f64;
+        let m = RankMetrics {
+            total: best,
+            fft: best_timers.fft / cfg.inner as f64,
+            redist: best_timers.redist / cfg.inner as f64,
+            bytes: (bytes as f64 * scale) as u64,
+        }
+        .reduce_max(&comm);
+        let mut err = [max_err];
+        comm.allreduce_f64(&mut err, crate::simmpi::collective::ReduceOp::Max);
+        (m, err[0])
+    });
+    let (m, err) = reports[0];
+    RunReport { total: m.total, fft: m.fft, redist: m.redist, bytes: m.bytes, max_err: err }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pfft::RedistMethod;
+
+    #[test]
+    fn driver_runs_r2c_and_roundtrips() {
+        let cfg = RunConfig {
+            global: vec![16, 12, 10],
+            ranks: 4,
+            inner: 1,
+            outer: 2,
+            ..Default::default()
+        };
+        let rep = run_config(&cfg, 2);
+        assert!(rep.total > 0.0);
+        assert!(rep.max_err < 1e-10, "roundtrip err {}", rep.max_err);
+        assert!(rep.bytes > 0);
+        assert!(rep.throughput(&cfg.global) > 0.0);
+    }
+
+    #[test]
+    fn driver_runs_c2c_traditional() {
+        let cfg = RunConfig {
+            global: vec![8, 8, 8],
+            ranks: 4,
+            kind: Kind::C2c,
+            method: RedistMethod::Traditional,
+            inner: 1,
+            outer: 1,
+            ..Default::default()
+        };
+        let rep = run_config(&cfg, 2);
+        assert!(rep.max_err < 1e-10);
+    }
+}

@@ -1,0 +1,56 @@
+//! Cross-rank metric aggregation.
+//!
+//! The paper reduces per-rank times with a max across the group before
+//! picking the fastest outer iteration; [`RankMetrics`] carries a rank's
+//! raw numbers and [`RankMetrics::reduce_max`] performs that reduction as
+//! a collective.
+
+use crate::simmpi::collective::ReduceOp;
+use crate::simmpi::Comm;
+
+/// Per-rank timing sample (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankMetrics {
+    pub total: f64,
+    pub fft: f64,
+    pub redist: f64,
+    /// Bytes this rank shipped through redistributions.
+    pub bytes: u64,
+}
+
+impl RankMetrics {
+    /// Max-reduce the times over `comm` (bytes are summed); every rank
+    /// returns the reduced value.
+    pub fn reduce_max(&self, comm: &Comm) -> RankMetrics {
+        let mut t = [self.total, self.fft, self.redist];
+        comm.allreduce_f64(&mut t, ReduceOp::Max);
+        let mut b = [self.bytes];
+        comm.allreduce_u64(&mut b, ReduceOp::Sum);
+        RankMetrics { total: t[0], fft: t[1], redist: t[2], bytes: b[0] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simmpi::World;
+
+    #[test]
+    fn reduce_takes_max_times_and_sums_bytes() {
+        let outs = World::run(4, |comm| {
+            let m = RankMetrics {
+                total: comm.rank() as f64,
+                fft: 10.0 - comm.rank() as f64,
+                redist: 1.0,
+                bytes: 100,
+            };
+            m.reduce_max(&comm)
+        });
+        for m in outs {
+            assert_eq!(m.total, 3.0);
+            assert_eq!(m.fft, 10.0);
+            assert_eq!(m.redist, 1.0);
+            assert_eq!(m.bytes, 400);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! The leader/driver layer: run configurations, the measurement protocol,
+//! and cross-rank metric aggregation.
+//!
+//! This is the part of L3 that owns process topology and the benchmark
+//! loop; the paper's measurement protocol (§4) is reproduced in
+//! [`driver::run_config`]: an inner loop of `inner` uninterrupted
+//! forward+backward pairs, an outer loop of `outer` repetitions with a
+//! barrier at the outset, per-rank times reduced with a max, and the
+//! fastest outer iteration reported divided by `inner`.
+
+pub mod benchkit;
+pub mod config;
+pub mod driver;
+pub mod metrics;
+
+pub use config::{EngineKind, RunConfig};
+pub use driver::{run_config, RunReport};
+pub use metrics::RankMetrics;

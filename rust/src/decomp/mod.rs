@@ -1,0 +1,134 @@
+//! Balanced block-contiguous decompositions (paper §3.1, Alg. 1 /
+//! Listing 1) and local-shape bookkeeping for distributed arrays.
+//!
+//! The decomposition formula is the PETSc one the paper credits to Barry
+//! Smith: `N` elements over `M` parts gives part `p` the length
+//! `q + (r > p)` with `q = N / M`, `r = N mod M`, so leading parts absorb
+//! the remainder one element each.
+
+/// Alg. 1: length and start index of part `p` when decomposing `N` elements
+/// into `M` balanced block-contiguous parts.
+///
+/// ```
+/// use a2wfft::decomp::decompose;
+/// // 10 elements over 4 parts: lengths 3,3,2,2, starts 0,3,6,8.
+/// assert_eq!((0..4).map(|p| decompose(10, 4, p)).collect::<Vec<_>>(),
+///            vec![(3, 0), (3, 3), (2, 6), (2, 8)]);
+/// ```
+pub fn decompose(n: usize, m: usize, p: usize) -> (usize, usize) {
+    assert!(m > 0, "decompose: M must be positive");
+    assert!(p < m, "decompose: part index {p} out of range for M={m}");
+    let q = n / m;
+    let r = n % m;
+    if r > p {
+        (q + 1, (q + 1) * p)
+    } else {
+        (q, q * p + r)
+    }
+}
+
+/// Local length of part `p` (the `lsz` helper of the paper's appendices).
+pub fn local_len(n: usize, m: usize, p: usize) -> usize {
+    decompose(n, m, p).0
+}
+
+/// All `(len, start)` pairs of a decomposition, rank-major.
+pub fn decompose_all(n: usize, m: usize) -> Vec<(usize, usize)> {
+    (0..m).map(|p| decompose(n, m, p)).collect()
+}
+
+/// Description of how a global array is laid across a Cartesian grid in a
+/// given alignment: `axis_groups[a] = Some(g)` means global axis `a` is
+/// distributed over process-direction `g`; `None` means the axis is local
+/// in full (the *aligned* axes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layout {
+    /// Global array shape.
+    pub global: Vec<usize>,
+    /// Per-axis distribution: group index or None (axis local).
+    pub dist: Vec<Option<usize>>,
+}
+
+impl Layout {
+    /// New layout; `dist.len() == global.len()`.
+    pub fn new(global: &[usize], dist: &[Option<usize>]) -> Layout {
+        assert_eq!(global.len(), dist.len(), "layout: rank mismatch");
+        Layout { global: global.to_vec(), dist: dist.to_vec() }
+    }
+
+    /// Local shape on a process whose coordinate in group `g` is
+    /// `coords[g]`, with `group_sizes[g]` processes in that group.
+    pub fn local_shape(&self, group_sizes: &[usize], coords: &[usize]) -> Vec<usize> {
+        self.global
+            .iter()
+            .zip(&self.dist)
+            .map(|(&n, d)| match d {
+                None => n,
+                Some(g) => local_len(n, group_sizes[*g], coords[*g]),
+            })
+            .collect()
+    }
+
+    /// Number of local elements.
+    pub fn local_elems(&self, group_sizes: &[usize], coords: &[usize]) -> usize {
+        self.local_shape(group_sizes, coords).iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_listing1() {
+        // Mirror of the paper's C Listing 1 for a grid of cases.
+        fn listing1(n: usize, m: usize, p: usize) -> (usize, usize) {
+            let q = n / m;
+            let r = n % m;
+            (q + usize::from(r > p), q * p + r.min(p))
+        }
+        for n in 0..50 {
+            for m in 1..10 {
+                for p in 0..m {
+                    assert_eq!(decompose(n, m, p), listing1(n, m, p), "n={n} m={m} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_covers_exactly() {
+        for n in [0usize, 1, 7, 100, 701] {
+            for m in [1usize, 2, 3, 8, 13] {
+                let parts = decompose_all(n, m);
+                // Starts are the prefix sums of lengths; total is N.
+                let mut expect_start = 0;
+                for &(len, start) in &parts {
+                    assert_eq!(start, expect_start);
+                    expect_start += len;
+                }
+                assert_eq!(expect_start, n);
+                // Balanced: lengths differ by at most 1, non-increasing.
+                let lens: Vec<usize> = parts.iter().map(|&(l, _)| l).collect();
+                assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+                assert!(lens.windows(2).all(|w| w[0] >= w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn layout_shapes_pencil() {
+        // 3D array on a 2D grid, z-aligned: (N0/P0, N1/P1, N2).
+        let lay = Layout::new(&[12, 13, 14], &[Some(0), Some(1), None]);
+        assert_eq!(lay.local_shape(&[3, 4], &[0, 0]), vec![4, 4, 14]);
+        assert_eq!(lay.local_shape(&[3, 4], &[2, 3]), vec![4, 3, 14]);
+        // Sum of local elems over the grid == global elems.
+        let mut total = 0;
+        for c0 in 0..3 {
+            for c1 in 0..4 {
+                total += lay.local_elems(&[3, 4], &[c0, c1]);
+            }
+        }
+        assert_eq!(total, 12 * 13 * 14);
+    }
+}

@@ -1,0 +1,197 @@
+//! Double-precision complex arithmetic (`repr(C)`, Pod-transportable).
+//!
+//! The paper works in double precision throughout; this is the element type
+//! of all native transforms and of the redistribution payloads.
+
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A complex number with `f64` components, laid out `[re, im]` like
+/// C `double complex` / numpy `complex128`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(C)]
+pub struct Complex64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+// SAFETY: repr(C) pair of f64 — valid for any bit pattern, no padding.
+unsafe impl crate::simmpi::Pod for Complex64 {}
+
+impl Complex64 {
+    pub const ZERO: Complex64 = Complex64 { re: 0.0, im: 0.0 };
+    pub const ONE: Complex64 = Complex64 { re: 1.0, im: 0.0 };
+    pub const I: Complex64 = Complex64 { re: 0.0, im: 1.0 };
+
+    #[inline(always)]
+    pub fn new(re: f64, im: f64) -> Complex64 {
+        Complex64 { re, im }
+    }
+
+    /// `exp(i * theta)`.
+    #[inline]
+    pub fn expi(theta: f64) -> Complex64 {
+        let (s, c) = theta.sin_cos();
+        Complex64 { re: c, im: s }
+    }
+
+    #[inline(always)]
+    pub fn conj(self) -> Complex64 {
+        Complex64 { re: self.re, im: -self.im }
+    }
+
+    #[inline(always)]
+    pub fn scale(self, s: f64) -> Complex64 {
+        Complex64 { re: self.re * s, im: self.im * s }
+    }
+
+    #[inline(always)]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    /// Multiply by `i` (a rotation, cheaper than a full complex multiply).
+    #[inline(always)]
+    pub fn mul_i(self) -> Complex64 {
+        Complex64 { re: -self.im, im: self.re }
+    }
+
+    /// Multiply by `-i`.
+    #[inline(always)]
+    pub fn mul_neg_i(self) -> Complex64 {
+        Complex64 { re: self.im, im: -self.re }
+    }
+}
+
+impl Add for Complex64 {
+    type Output = Complex64;
+    #[inline(always)]
+    fn add(self, o: Complex64) -> Complex64 {
+        Complex64 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl Sub for Complex64 {
+    type Output = Complex64;
+    #[inline(always)]
+    fn sub(self, o: Complex64) -> Complex64 {
+        Complex64 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for Complex64 {
+    type Output = Complex64;
+    #[inline(always)]
+    fn mul(self, o: Complex64) -> Complex64 {
+        Complex64 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Div for Complex64 {
+    type Output = Complex64;
+    #[inline]
+    fn div(self, o: Complex64) -> Complex64 {
+        let d = o.norm_sqr();
+        Complex64 {
+            re: (self.re * o.re + self.im * o.im) / d,
+            im: (self.im * o.re - self.re * o.im) / d,
+        }
+    }
+}
+
+impl Neg for Complex64 {
+    type Output = Complex64;
+    #[inline(always)]
+    fn neg(self) -> Complex64 {
+        Complex64 { re: -self.re, im: -self.im }
+    }
+}
+
+impl AddAssign for Complex64 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: Complex64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl SubAssign for Complex64 {
+    #[inline(always)]
+    fn sub_assign(&mut self, o: Complex64) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl MulAssign for Complex64 {
+    #[inline(always)]
+    fn mul_assign(&mut self, o: Complex64) {
+        *self = *self * o;
+    }
+}
+
+impl From<f64> for Complex64 {
+    fn from(re: f64) -> Complex64 {
+        Complex64 { re, im: 0.0 }
+    }
+}
+
+/// Max |a - b| over a pair of complex slices (test / validation helper).
+pub fn max_abs_diff(a: &[Complex64], b: &[Complex64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_ops() {
+        let a = Complex64::new(1.0, 2.0);
+        let b = Complex64::new(3.0, -4.0);
+        assert_eq!(a + b, Complex64::new(4.0, -2.0));
+        assert_eq!(a - b, Complex64::new(-2.0, 6.0));
+        assert_eq!(a * b, Complex64::new(11.0, 2.0));
+        let q = a / b;
+        let back = q * b;
+        assert!((back - a).abs() < 1e-12);
+        assert_eq!(-a, Complex64::new(-1.0, -2.0));
+        assert_eq!(a.conj(), Complex64::new(1.0, -2.0));
+    }
+
+    #[test]
+    fn expi_unit_circle() {
+        for k in 0..8 {
+            let t = 2.0 * std::f64::consts::PI * k as f64 / 8.0;
+            let w = Complex64::expi(t);
+            assert!((w.abs() - 1.0).abs() < 1e-15);
+        }
+        let w = Complex64::expi(std::f64::consts::FRAC_PI_2);
+        assert!((w - Complex64::I).abs() < 1e-15);
+    }
+
+    #[test]
+    fn mul_i_shortcuts() {
+        let a = Complex64::new(2.5, -1.5);
+        assert_eq!(a.mul_i(), a * Complex64::I);
+        assert_eq!(a.mul_neg_i(), a * -Complex64::I);
+    }
+
+    #[test]
+    fn assign_ops() {
+        let mut a = Complex64::new(1.0, 1.0);
+        a += Complex64::new(2.0, 3.0);
+        assert_eq!(a, Complex64::new(3.0, 4.0));
+        a -= Complex64::new(1.0, 1.0);
+        assert_eq!(a, Complex64::new(2.0, 3.0));
+        a *= Complex64::new(0.0, 1.0);
+        assert_eq!(a, Complex64::new(-3.0, 2.0));
+    }
+}

@@ -1,0 +1,95 @@
+//! The pluggable serial-FFT engine interface.
+//!
+//! The paper assumes "there is a serial FFT code already available" and
+//! builds only the parallel decomposition/communication around it. We keep
+//! that separation: [`crate::pfft`] drives any [`SerialFft`], and two
+//! engines are provided — the native rust planner ([`NativeFft`], the
+//! FFTW/MKL stand-in) and the AOT JAX+Pallas artifact executor
+//! ([`crate::runtime::XlaFftEngine`]).
+
+use super::complex::Complex64;
+use super::nd::{fft_axis, irfft_last, rfft_last, Planner};
+use super::plan::Direction;
+
+/// A serial (single-rank) FFT engine for multidimensional arrays.
+pub trait SerialFft {
+    /// In-place complex transform of `data` (row-major `shape`) along `axis`.
+    fn c2c(&mut self, data: &mut [Complex64], shape: &[usize], axis: usize, dir: Direction);
+
+    /// Real-to-complex forward transform along the **last** axis:
+    /// `real` has shape `shape`, `out` has shape `(..., n/2+1)`.
+    fn r2c(&mut self, real: &[f64], shape: &[usize], out: &mut [Complex64]);
+
+    /// Complex-to-real backward transform along the **last** axis, the
+    /// inverse of [`SerialFft::r2c`] (`shape` is the *real* shape).
+    fn c2r(&mut self, cplx: &[Complex64], shape: &[usize], out: &mut [f64]);
+
+    /// Engine name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// The native planner-backed engine.
+#[derive(Default)]
+pub struct NativeFft {
+    planner: Planner,
+}
+
+impl NativeFft {
+    pub fn new() -> NativeFft {
+        NativeFft { planner: Planner::new() }
+    }
+}
+
+impl SerialFft for NativeFft {
+    fn c2c(&mut self, data: &mut [Complex64], shape: &[usize], axis: usize, dir: Direction) {
+        fft_axis(&mut self.planner, data, shape, axis, dir);
+    }
+
+    fn r2c(&mut self, real: &[f64], shape: &[usize], out: &mut [Complex64]) {
+        rfft_last(&mut self.planner, real, shape, out);
+    }
+
+    fn c2r(&mut self, cplx: &[Complex64], shape: &[usize], out: &mut [f64]) {
+        irfft_last(&mut self.planner, cplx, shape, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::max_abs_diff;
+
+    #[test]
+    fn native_engine_roundtrip_c2c() {
+        let shape = [4usize, 5, 6];
+        let total: usize = shape.iter().product();
+        let x: Vec<Complex64> =
+            (0..total).map(|k| Complex64::new((k % 7) as f64, (k % 3) as f64)).collect();
+        let mut eng = NativeFft::new();
+        let mut y = x.clone();
+        for a in (0..3).rev() {
+            eng.c2c(&mut y, &shape, a, Direction::Forward);
+        }
+        for a in 0..3 {
+            eng.c2c(&mut y, &shape, a, Direction::Backward);
+        }
+        assert!(max_abs_diff(&x, &y) < 1e-10);
+    }
+
+    #[test]
+    fn native_engine_r2c_c2r() {
+        let shape = [3usize, 8];
+        let real: Vec<f64> = (0..24).map(|k| (k as f64 * 0.7).sin()).collect();
+        let mut eng = NativeFft::new();
+        let mut half = vec![Complex64::ZERO; 3 * 5];
+        eng.r2c(&real, &shape, &mut half);
+        let mut back = vec![0.0; 24];
+        eng.c2r(&half, &shape, &mut back);
+        let err = real.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-12);
+    }
+}

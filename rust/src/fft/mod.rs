@@ -1,0 +1,13 @@
+//! Serial FFT substrate: complex arithmetic, 1-D plans (mixed radix +
+//! Bluestein), partial multidimensional transforms, and the pluggable
+//! [`SerialFft`] engine interface used by the parallel driver.
+
+pub mod complex;
+pub mod engine;
+pub mod nd;
+pub mod plan;
+
+pub use complex::{max_abs_diff, Complex64};
+pub use engine::{NativeFft, SerialFft};
+pub use nd::{fft_axis, irfft_last, rfft_last, Planner};
+pub use plan::{factorize, naive_dft, Direction, FftPlan};

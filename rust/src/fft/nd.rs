@@ -1,0 +1,296 @@
+//! Partial (single-axis) transforms of multidimensional arrays — the
+//! `seqxfftn(..., axis, sign)` routine of the paper's appendices.
+//!
+//! A row-major array of shape `shape` is transformed along `axis` for all
+//! other indices. Lines along the last axis are contiguous and transformed
+//! in place; lines along other axes are gathered into a contiguous scratch
+//! panel (a block of lines at a time for cache friendliness), transformed,
+//! and scattered back.
+
+use super::complex::Complex64;
+use super::plan::{Direction, FftPlan};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// FFTW-style plan cache: one [`FftPlan`] per line length, reused across
+/// calls. Not `Send` — each simulated rank owns one.
+#[derive(Default)]
+pub struct Planner {
+    plans: HashMap<usize, Rc<FftPlan>>,
+}
+
+impl Planner {
+    pub fn new() -> Planner {
+        Planner { plans: HashMap::new() }
+    }
+
+    /// Get or create the plan for length `n`.
+    pub fn plan(&mut self, n: usize) -> Rc<FftPlan> {
+        self.plans.entry(n).or_insert_with(|| Rc::new(FftPlan::new(n))).clone()
+    }
+}
+
+/// Number of lines gathered per strided panel. Chosen so a panel of
+/// `PANEL * n` complex doubles stays L2-resident for typical line lengths.
+const PANEL: usize = 16;
+
+/// Transform `data` (row-major, shape `shape`) along `axis`.
+pub fn fft_axis(
+    planner: &mut Planner,
+    data: &mut [Complex64],
+    shape: &[usize],
+    axis: usize,
+    dir: Direction,
+) {
+    let d = shape.len();
+    assert!(axis < d, "axis {axis} out of range for rank {d}");
+    let total: usize = shape.iter().product();
+    assert_eq!(data.len(), total, "data length does not match shape");
+    let n = shape[axis];
+    if n == 0 || total == 0 {
+        return;
+    }
+    let plan = planner.plan(n);
+    // stride between consecutive elements along `axis`; `outer` iterates
+    // over all other indices split as (before-axis, after-axis).
+    let stride: usize = shape[axis + 1..].iter().product();
+    let before: usize = shape[..axis].iter().product();
+    if stride == 1 {
+        // Contiguous lines: whole array is `before * n` back-to-back rows
+        // (axis is last).
+        plan.process_batch(data, before, dir);
+        return;
+    }
+    // Strided lines: for each `b` (before-axis index) the lines start at
+    // b*n*stride + s for s in 0..stride. Gather PANEL lines at a time.
+    let mut panel = vec![Complex64::ZERO; PANEL.min(stride) * n];
+    for b in 0..before {
+        let base = b * n * stride;
+        let mut s0 = 0;
+        while s0 < stride {
+            let w = PANEL.min(stride - s0);
+            // Gather: panel[l*n + t] = data[base + t*stride + s0 + l].
+            // Iterate t-major so reads of `data` are sequential runs of w.
+            for t in 0..n {
+                let src = base + t * stride + s0;
+                for l in 0..w {
+                    panel[l * n + t] = data[src + l];
+                }
+            }
+            plan.process_batch(&mut panel[..w * n], w, dir);
+            for t in 0..n {
+                let dst = base + t * stride + s0;
+                for l in 0..w {
+                    data[dst + l] = panel[l * n + t];
+                }
+            }
+            s0 += w;
+        }
+    }
+}
+
+/// Real-to-complex transform along the **last** axis: input shape
+/// `(..., n)` real, output shape `(..., n/2 + 1)` complex (Hermitian half,
+/// numpy `rfft` convention, unnormalized).
+pub fn rfft_last(
+    planner: &mut Planner,
+    real: &[f64],
+    shape: &[usize],
+    out: &mut [Complex64],
+) {
+    let d = shape.len();
+    assert!(d >= 1);
+    let n = shape[d - 1];
+    let nh = n / 2 + 1;
+    let rows: usize = shape[..d - 1].iter().product();
+    assert_eq!(real.len(), rows * n, "rfft: input length mismatch");
+    assert_eq!(out.len(), rows * nh, "rfft: output length mismatch");
+    let plan = planner.plan(n);
+    let mut line = vec![Complex64::ZERO; n];
+    for r in 0..rows {
+        for (t, l) in line.iter_mut().enumerate() {
+            *l = Complex64::new(real[r * n + t], 0.0);
+        }
+        plan.process(&mut line, Direction::Forward);
+        out[r * nh..(r + 1) * nh].copy_from_slice(&line[..nh]);
+    }
+}
+
+/// Complex-to-real inverse of [`rfft_last`]: input shape `(..., n/2 + 1)`
+/// complex, output `(..., n)` real, scaled by `1/n` (numpy `irfft`).
+pub fn irfft_last(
+    planner: &mut Planner,
+    cplx: &[Complex64],
+    shape_real: &[usize],
+    out: &mut [f64],
+) {
+    let d = shape_real.len();
+    assert!(d >= 1);
+    let n = shape_real[d - 1];
+    let nh = n / 2 + 1;
+    let rows: usize = shape_real[..d - 1].iter().product();
+    assert_eq!(cplx.len(), rows * nh, "irfft: input length mismatch");
+    assert_eq!(out.len(), rows * n, "irfft: output length mismatch");
+    let plan = planner.plan(n);
+    let mut line = vec![Complex64::ZERO; n];
+    for r in 0..rows {
+        let src = &cplx[r * nh..(r + 1) * nh];
+        line[..nh].copy_from_slice(src);
+        // Hermitian extension: X[n-k] = conj(X[k]).
+        for k in 1..n - nh + 1 {
+            line[n - k] = src[k].conj();
+        }
+        plan.process(&mut line, Direction::Backward);
+        for t in 0..n {
+            out[r * n + t] = line[t].re;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::max_abs_diff;
+    use crate::fft::plan::naive_dft;
+
+    fn signal(n: usize, seed: u64) -> Vec<Complex64> {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        };
+        (0..n).map(|_| Complex64::new(next(), next())).collect()
+    }
+
+    /// Reference: transform along `axis` by brute-force line extraction.
+    fn fft_axis_ref(data: &[Complex64], shape: &[usize], axis: usize, dir: Direction) -> Vec<Complex64> {
+        let n = shape[axis];
+        let stride: usize = shape[axis + 1..].iter().product();
+        let before: usize = shape[..axis].iter().product();
+        let mut out = data.to_vec();
+        for b in 0..before {
+            for s in 0..stride {
+                let line: Vec<Complex64> =
+                    (0..n).map(|t| data[b * n * stride + t * stride + s]).collect();
+                let tr = naive_dft(&line, dir);
+                for t in 0..n {
+                    out[b * n * stride + t * stride + s] = tr[t];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn axis_transforms_match_reference_3d() {
+        let shape = [4usize, 6, 5];
+        let total: usize = shape.iter().product();
+        let x = signal(total, 42);
+        let mut planner = Planner::new();
+        for axis in 0..3 {
+            for dir in [Direction::Forward, Direction::Backward] {
+                let mut got = x.clone();
+                fft_axis(&mut planner, &mut got, &shape, axis, dir);
+                let want = fft_axis_ref(&x, &shape, axis, dir);
+                assert!(
+                    max_abs_diff(&got, &want) < 1e-11,
+                    "axis={axis} dir={dir:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axis_transforms_match_reference_4d() {
+        let shape = [3usize, 4, 2, 6];
+        let total: usize = shape.iter().product();
+        let x = signal(total, 5);
+        let mut planner = Planner::new();
+        for axis in 0..4 {
+            let mut got = x.clone();
+            fft_axis(&mut planner, &mut got, &shape, axis, Direction::Forward);
+            let want = fft_axis_ref(&x, &shape, axis, Direction::Forward);
+            assert!(max_abs_diff(&got, &want) < 1e-11, "axis={axis}");
+        }
+    }
+
+    #[test]
+    fn full_nd_roundtrip() {
+        let shape = [5usize, 8, 7];
+        let total: usize = shape.iter().product();
+        let x = signal(total, 11);
+        let mut planner = Planner::new();
+        let mut y = x.clone();
+        for axis in (0..3).rev() {
+            fft_axis(&mut planner, &mut y, &shape, axis, Direction::Forward);
+        }
+        for axis in 0..3 {
+            fft_axis(&mut planner, &mut y, &shape, axis, Direction::Backward);
+        }
+        assert!(max_abs_diff(&x, &y) < 1e-10);
+    }
+
+    #[test]
+    fn strided_panel_boundary() {
+        // stride (= trailing product) around PANEL boundary: 15, 16, 17.
+        for last in [15usize, 16, 17] {
+            let shape = [6usize, last];
+            let x = signal(6 * last, last as u64);
+            let mut planner = Planner::new();
+            let mut got = x.clone();
+            fft_axis(&mut planner, &mut got, &shape, 0, Direction::Forward);
+            let want = fft_axis_ref(&x, &shape, 0, Direction::Forward);
+            assert!(max_abs_diff(&got, &want) < 1e-11, "last={last}");
+        }
+    }
+
+    #[test]
+    fn rfft_matches_full_fft() {
+        let shape = [3usize, 10];
+        let real: Vec<f64> = (0..30).map(|k| ((k * k + 3) % 17) as f64 - 8.0).collect();
+        let mut planner = Planner::new();
+        let mut half = vec![Complex64::ZERO; 3 * 6];
+        rfft_last(&mut planner, &real, &shape, &mut half);
+        // Oracle: full complex transform.
+        let mut full: Vec<Complex64> = real.iter().map(|&r| Complex64::new(r, 0.0)).collect();
+        fft_axis(&mut planner, &mut full, &shape, 1, Direction::Forward);
+        for r in 0..3 {
+            for k in 0..6 {
+                assert!((half[r * 6 + k] - full[r * 10 + k]).abs() < 1e-11);
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_irfft_roundtrip() {
+        for n in [8usize, 12, 10, 16] {
+            let shape = [4usize, n];
+            let real: Vec<f64> = (0..4 * n).map(|k| (k as f64 * 0.37).sin() * 3.0).collect();
+            let mut planner = Planner::new();
+            let nh = n / 2 + 1;
+            let mut half = vec![Complex64::ZERO; 4 * nh];
+            rfft_last(&mut planner, &real, &shape, &mut half);
+            let mut back = vec![0.0f64; 4 * n];
+            irfft_last(&mut planner, &half, &shape, &mut back);
+            let err = real.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-11, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn odd_length_rfft_roundtrip() {
+        let n = 9usize;
+        let shape = [2usize, n];
+        let real: Vec<f64> = (0..2 * n).map(|k| (k as f64).cos()).collect();
+        let mut planner = Planner::new();
+        let nh = n / 2 + 1; // 5
+        let mut half = vec![Complex64::ZERO; 2 * nh];
+        rfft_last(&mut planner, &real, &shape, &mut half);
+        let mut back = vec![0.0f64; 2 * n];
+        irfft_last(&mut planner, &half, &shape, &mut back);
+        let err = real.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-11);
+    }
+}

@@ -1,0 +1,541 @@
+//! Serial 1-D FFT plans — the "vendor FFT" the paper assumes is available
+//! (FFTW / MKL / ESSL stand-in).
+//!
+//! A [`FftPlan`] is built once per length and reused (FFTW-style planning):
+//!
+//! * power-of-two lengths: iterative in-place radix-4/radix-2 DIT with a
+//!   precomputed twiddle table and bit-reversal permutation;
+//! * smooth lengths: recursive mixed-radix Cooley–Tukey over the prime
+//!   factorization (naive O(r²) combine for each prime factor `r`, which is
+//!   exact DFT behaviour for the small primes 2,3,5,7,...);
+//! * lengths with a prime factor > 61: Bluestein's chirp-z algorithm over a
+//!   padded power-of-two convolution.
+//!
+//! Forward transforms are unnormalized, backward transforms scale by `1/N`
+//! (numpy/FFTW convention), so `bwd(fwd(x)) == x`.
+
+use super::complex::Complex64;
+
+/// Transform direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Backward,
+}
+
+impl Direction {
+    /// Sign of the exponent: forward is `e^{-i...}`.
+    #[inline]
+    pub fn sign(self) -> f64 {
+        match self {
+            Direction::Forward => -1.0,
+            Direction::Backward => 1.0,
+        }
+    }
+}
+
+/// Largest prime factor handled by the direct mixed-radix combine; above
+/// this, Bluestein is used.
+const MAX_DIRECT_PRIME: usize = 61;
+
+enum Kind {
+    /// N == 1.
+    Identity,
+    /// Power of two: iterative radix-4 + final radix-2 stage.
+    Pow2,
+    /// General smooth N: recursive Cooley–Tukey over `factors`.
+    Mixed { factors: Vec<usize> },
+    /// Prime (or containing a large prime factor) N via chirp-z.
+    Bluestein {
+        /// Padded convolution length (power of two >= 2N-1).
+        m: usize,
+        /// Plan for the length-`m` convolution FFTs.
+        inner: Box<FftPlan>,
+        /// Chirp `exp(-i pi k^2 / n)`, k < n (forward direction).
+        chirp: Vec<Complex64>,
+        /// Forward FFT of the (conjugate) chirp filter, length m.
+        filter_f: Vec<Complex64>,
+    },
+}
+
+/// A reusable plan for 1-D complex transforms of a fixed length.
+pub struct FftPlan {
+    n: usize,
+    kind: Kind,
+    /// Twiddle table `w[k] = exp(-2 pi i k / n)`, `k < n` (forward sign);
+    /// backward uses conjugates. Empty for Identity/Bluestein.
+    tw: Vec<Complex64>,
+    /// Bit-reversal permutation for the Pow2 path.
+    bitrev: Vec<u32>,
+}
+
+impl FftPlan {
+    /// Plan a transform of length `n`.
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n > 0, "FFT length must be positive");
+        if n == 1 {
+            return FftPlan { n, kind: Kind::Identity, tw: Vec::new(), bitrev: Vec::new() };
+        }
+        let factors = factorize(n);
+        let largest = *factors.last().unwrap();
+        if largest > MAX_DIRECT_PRIME {
+            // Bluestein: convolution length m = next pow2 >= 2n - 1.
+            let m = (2 * n - 1).next_power_of_two();
+            let inner = Box::new(FftPlan::new(m));
+            let chirp: Vec<Complex64> = (0..n)
+                .map(|k| {
+                    // Compute k^2 mod 2n in u128 to avoid overflow, then the
+                    // angle; the chirp is periodic in k^2 with period 2n.
+                    let k2 = (k as u128 * k as u128) % (2 * n as u128);
+                    Complex64::expi(-std::f64::consts::PI * k2 as f64 / n as f64)
+                })
+                .collect();
+            // Filter b[k] = conj(chirp)[|k|] wrapped on length m.
+            let mut b = vec![Complex64::ZERO; m];
+            b[0] = chirp[0].conj();
+            for k in 1..n {
+                b[k] = chirp[k].conj();
+                b[m - k] = chirp[k].conj();
+            }
+            let mut filter_f = b;
+            inner.process(&mut filter_f, Direction::Forward);
+            return FftPlan { n, kind: Kind::Bluestein { m, inner, chirp, filter_f }, tw: Vec::new(), bitrev: Vec::new() };
+        }
+        let tw: Vec<Complex64> = (0..n)
+            .map(|k| Complex64::expi(-2.0 * std::f64::consts::PI * k as f64 / n as f64))
+            .collect();
+        if n.is_power_of_two() {
+            let bits = n.trailing_zeros();
+            let bitrev: Vec<u32> =
+                (0..n as u32).map(|i| i.reverse_bits() >> (32 - bits)).collect();
+            FftPlan { n, kind: Kind::Pow2, tw, bitrev }
+        } else {
+            // Perf-pass note (EXPERIMENTS.md §Perf): grouping 2x2 factors
+            // into radix-4 levels was tried and measured within noise
+            // (<2%), so the plain prime factorization is kept.
+            FftPlan { n, kind: Kind::Mixed { factors }, tw, bitrev: Vec::new() }
+        }
+    }
+
+    /// Transform length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if `len() == 1`.
+    pub fn is_empty(&self) -> bool {
+        self.n == 1
+    }
+
+    /// In-place transform of one line of `n` elements.
+    pub fn process(&self, data: &mut [Complex64], dir: Direction) {
+        assert_eq!(data.len(), self.n, "plan length mismatch");
+        match &self.kind {
+            Kind::Identity => {}
+            Kind::Pow2 => self.pow2(data, dir),
+            Kind::Mixed { factors } => {
+                let mut scratch = vec![Complex64::ZERO; self.n];
+                self.mixed(data, &mut scratch, factors, dir);
+            }
+            Kind::Bluestein { .. } => self.bluestein(data, dir),
+        }
+        if dir == Direction::Backward {
+            let s = 1.0 / self.n as f64;
+            for v in data.iter_mut() {
+                *v = v.scale(s);
+            }
+        }
+    }
+
+    /// In-place transform of `count` contiguous lines.
+    pub fn process_batch(&self, data: &mut [Complex64], count: usize, dir: Direction) {
+        assert_eq!(data.len(), self.n * count, "batch size mismatch");
+        match &self.kind {
+            Kind::Mixed { factors } => {
+                // Share one scratch allocation across the batch.
+                let mut scratch = vec![Complex64::ZERO; self.n];
+                for row in data.chunks_exact_mut(self.n) {
+                    self.mixed(row, &mut scratch, factors, dir);
+                    if dir == Direction::Backward {
+                        let s = 1.0 / self.n as f64;
+                        for v in row.iter_mut() {
+                            *v = v.scale(s);
+                        }
+                    }
+                }
+            }
+            _ => {
+                for row in data.chunks_exact_mut(self.n) {
+                    self.process(row, dir);
+                }
+            }
+        }
+    }
+
+    /// Twiddle lookup with direction: `w^k` forward, `conj(w^k)` backward.
+    #[inline(always)]
+    fn w(&self, k: usize, dir: Direction) -> Complex64 {
+        let t = self.tw[k % self.n];
+        match dir {
+            Direction::Forward => t,
+            Direction::Backward => t.conj(),
+        }
+    }
+
+    /// Iterative in-place DIT for powers of two: bit-reversal, then radix-2
+    /// first stage (twiddle-free), then radix-2 stages with table twiddles.
+    fn pow2(&self, data: &mut [Complex64], dir: Direction) {
+        let n = self.n;
+        // Bit-reversal permutation.
+        for i in 0..n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                data.swap(i, j);
+            }
+        }
+        // First stage (len = 2) has unit twiddles.
+        for pair in data.chunks_exact_mut(2) {
+            let (a, b) = (pair[0], pair[1]);
+            pair[0] = a + b;
+            pair[1] = a - b;
+        }
+        // Remaining stages.
+        let mut len = 4usize;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len; // twiddle stride in the length-n table
+            let mut base = 0;
+            while base < n {
+                // k = 0: unit twiddle.
+                let (a, b) = (data[base], data[base + half]);
+                data[base] = a + b;
+                data[base + half] = a - b;
+                for k in 1..half {
+                    let w = self.w(k * step, dir);
+                    let a = data[base + k];
+                    let b = data[base + k + half] * w;
+                    data[base + k] = a + b;
+                    data[base + k + half] = a - b;
+                }
+                base += len;
+            }
+            len *= 2;
+        }
+    }
+
+    /// Recursive mixed-radix Cooley–Tukey.
+    ///
+    /// `data` holds one line of length `product(factors)` at unit stride;
+    /// `factors` is the remaining factorization (ascending). The first
+    /// factor `r` splits the line into `r` decimated subsequences which are
+    /// gathered into `scratch`, recursively transformed there (ping-pong:
+    /// the child uses the matching `data` region as its scratch), and
+    /// combined back into `data` — no extra copy passes.
+    fn mixed(&self, data: &mut [Complex64], scratch: &mut [Complex64], factors: &[usize], dir: Direction) {
+        let n = data.len();
+        debug_assert_eq!(n, factors.iter().product::<usize>());
+        if factors.len() <= 1 {
+            // Single prime (or 1): naive DFT via the global table.
+            if n > 1 {
+                let mult = self.n / n;
+                let s = &mut scratch[..n];
+                s.copy_from_slice(data);
+                for (k, out) in data.iter_mut().enumerate() {
+                    let mut acc = s[0];
+                    for (j, &v) in s.iter().enumerate().skip(1) {
+                        acc += v * self.w((j * k % n) * mult, dir);
+                    }
+                    *out = acc;
+                }
+            }
+            return;
+        }
+        let r = factors[0];
+        let m = n / r;
+        let rest = &factors[1..];
+        // Decimate: scratch[j*m + t] = data[t*r + j].
+        {
+            let s = &mut scratch[..n];
+            for j in 0..r {
+                for (t, v) in s[j * m..(j + 1) * m].iter_mut().enumerate() {
+                    *v = data[t * r + j];
+                }
+            }
+        }
+        // Recurse on each decimated subsequence *in scratch*, lending the
+        // corresponding `data` region as the child's scratch space.
+        for j in 0..r {
+            self.mixed(&mut scratch[j * m..(j + 1) * m], &mut data[j * m..(j + 1) * m], rest, dir);
+        }
+        // Combine: X[q*m + t] = sum_j w_n^{j*(q*m+t)} * Y_j[t]
+        //                     = sum_j (Y_j[t] * w_n^{j t}) * w_n^{j q m},
+        // reading Y from scratch, writing X into data.
+        //
+        // Per-t twiddles w^{j t} are stepped multiplicatively (one complex
+        // multiply instead of a modular table lookup per element, resynced
+        // from the exact table every RESYNC steps to bound drift); the
+        // r x r table w^{j q m} is precomputed exactly.
+        let mult = self.n / n;
+        const RESYNC: usize = 32;
+        if r == 2 {
+            // Radix-2 butterfly: w^{q m} is exactly -1 for q = 1.
+            let mut wt = Complex64::ONE;
+            let wstep = self.w(mult, dir);
+            for t in 0..m {
+                if t % RESYNC == 0 && t != 0 {
+                    wt = self.w((t % n) * mult, dir);
+                }
+                let a = scratch[t];
+                let b = scratch[m + t] * wt;
+                data[t] = a + b;
+                data[m + t] = a - b;
+                wt *= wstep;
+            }
+            return;
+        }
+        let wq: Vec<Complex64> = (0..r * r)
+            .map(|qj| {
+                let (q, j) = (qj / r, qj % r);
+                self.w((j * ((q * m) % n) % n) * mult, dir)
+            })
+            .collect();
+        let mut wstep = [Complex64::ZERO; MAX_DIRECT_PRIME + 1];
+        let mut wt = [Complex64::ZERO; MAX_DIRECT_PRIME + 1];
+        for j in 0..r {
+            wstep[j] = self.w(j * mult, dir);
+            wt[j] = Complex64::ONE;
+        }
+        let mut tmp = [Complex64::ZERO; MAX_DIRECT_PRIME + 1];
+        for t in 0..m {
+            if t % RESYNC == 0 && t != 0 {
+                for (j, v) in wt.iter_mut().enumerate().take(r) {
+                    *v = self.w((j * t % n) * mult, dir);
+                }
+            }
+            for j in 0..r {
+                tmp[j] = scratch[j * m + t] * wt[j];
+                wt[j] *= wstep[j];
+            }
+            for q in 0..r {
+                let row = &wq[q * r..(q + 1) * r];
+                let mut acc = tmp[0];
+                for (j, &v) in tmp[..r].iter().enumerate().skip(1) {
+                    acc += v * row[j];
+                }
+                data[q * m + t] = acc;
+            }
+        }
+    }
+
+    /// Bluestein chirp-z transform (forward); backward goes through the
+    /// conjugation identity `ifft(x) * n == conj(fft(conj(x)))`.
+    fn bluestein(&self, data: &mut [Complex64], dir: Direction) {
+        if dir == Direction::Backward {
+            for v in data.iter_mut() {
+                *v = v.conj();
+            }
+            self.bluestein(data, Direction::Forward);
+            for v in data.iter_mut() {
+                *v = v.conj();
+            }
+            // The final 1/n scaling happens in `process`.
+            return;
+        }
+        let Kind::Bluestein { m, inner, chirp, filter_f } = &self.kind else { unreachable!() };
+        let n = self.n;
+        // X[j] = chirp[j] * sum_k (x[k] chirp[k]) b[j-k],  b[t] = conj(chirp[t]).
+        let mut a = vec![Complex64::ZERO; *m];
+        for k in 0..n {
+            a[k] = data[k] * chirp[k];
+        }
+        inner.process(&mut a, Direction::Forward);
+        for (av, fv) in a.iter_mut().zip(filter_f) {
+            *av = *av * *fv;
+        }
+        inner.process(&mut a, Direction::Backward);
+        for k in 0..n {
+            data[k] = a[k] * chirp[k];
+        }
+    }
+}
+
+/// Prime factorization in ascending order (with multiplicity).
+pub fn factorize(mut n: usize) -> Vec<usize> {
+    let mut f = Vec::new();
+    let mut d = 2usize;
+    while d * d <= n {
+        while n % d == 0 {
+            f.push(d);
+            n /= d;
+        }
+        d += 1;
+    }
+    if n > 1 {
+        f.push(n);
+    }
+    f
+}
+
+/// Reference naive DFT, O(N^2) — the correctness oracle for plans.
+pub fn naive_dft(input: &[Complex64], dir: Direction) -> Vec<Complex64> {
+    let n = input.len();
+    let sign = dir.sign();
+    let mut out = vec![Complex64::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Complex64::ZERO;
+        for (j, &x) in input.iter().enumerate() {
+            let theta = sign * 2.0 * std::f64::consts::PI * ((j * k) % n) as f64 / n as f64;
+            acc += x * Complex64::expi(theta);
+        }
+        *o = if dir == Direction::Backward { acc.scale(1.0 / n as f64) } else { acc };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::max_abs_diff;
+
+    /// Deterministic pseudo-random test signal.
+    fn signal(n: usize, seed: u64) -> Vec<Complex64> {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        };
+        (0..n).map(|_| Complex64::new(next(), next())).collect()
+    }
+
+    fn check_len(n: usize) {
+        let x = signal(n, n as u64 + 1);
+        let plan = FftPlan::new(n);
+        let mut y = x.clone();
+        plan.process(&mut y, Direction::Forward);
+        let want = naive_dft(&x, Direction::Forward);
+        let scale = (n as f64).max(1.0);
+        assert!(
+            max_abs_diff(&y, &want) / scale < 1e-12,
+            "forward mismatch at n={n}: {}",
+            max_abs_diff(&y, &want)
+        );
+        // Roundtrip.
+        plan.process(&mut y, Direction::Backward);
+        assert!(max_abs_diff(&y, &x) < 1e-10, "roundtrip mismatch at n={n}");
+    }
+
+    #[test]
+    fn pow2_lengths() {
+        for n in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024] {
+            check_len(n);
+        }
+    }
+
+    #[test]
+    fn mixed_lengths() {
+        // 700 = 2^2 * 5^2 * 7 — the paper's Fig. 6 mesh extent.
+        for n in [3usize, 5, 6, 7, 9, 10, 12, 15, 21, 30, 35, 49, 100, 700, 360] {
+            check_len(n);
+        }
+    }
+
+    #[test]
+    fn prime_and_bluestein_lengths() {
+        // 61 direct; 67, 127, 251 via Bluestein; 262 = 2*131 mixed+Bluestein?
+        // (131 > 61 so the whole plan goes Bluestein).
+        for n in [11usize, 13, 31, 61, 67, 127, 251, 131, 257] {
+            check_len(n);
+        }
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let n = 16;
+        let mut x = vec![Complex64::ZERO; n];
+        x[0] = Complex64::ONE;
+        FftPlan::new(n).process(&mut x, Direction::Forward);
+        for v in x {
+            assert!((v - Complex64::ONE).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn constant_concentrates() {
+        let n = 12;
+        let mut x = vec![Complex64::ONE; n];
+        FftPlan::new(n).process(&mut x, Direction::Forward);
+        assert!((x[0] - Complex64::new(n as f64, 0.0)).abs() < 1e-12);
+        for v in &x[1..] {
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 48;
+        let a = signal(n, 3);
+        let b = signal(n, 4);
+        let plan = FftPlan::new(n);
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        plan.process(&mut fa, Direction::Forward);
+        plan.process(&mut fb, Direction::Forward);
+        let mut ab: Vec<Complex64> = a.iter().zip(&b).map(|(&x, &y)| x + y.scale(2.5)).collect();
+        plan.process(&mut ab, Direction::Forward);
+        let want: Vec<Complex64> = fa.iter().zip(&fb).map(|(&x, &y)| x + y.scale(2.5)).collect();
+        assert!(max_abs_diff(&ab, &want) < 1e-11);
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 96;
+        let x = signal(n, 7);
+        let mut y = x.clone();
+        FftPlan::new(n).process(&mut y, Direction::Forward);
+        let ex: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        let ey: f64 = y.iter().map(|v| v.norm_sqr()).sum::<f64>() / n as f64;
+        assert!((ex - ey).abs() / ex < 1e-12);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let n = 20;
+        let count = 5;
+        let plan = FftPlan::new(n);
+        let mut batch: Vec<Complex64> = (0..count).flat_map(|s| signal(n, 100 + s as u64)).collect();
+        let mut singles = batch.clone();
+        plan.process_batch(&mut batch, count, Direction::Forward);
+        for row in singles.chunks_exact_mut(n) {
+            plan.process(row, Direction::Forward);
+        }
+        assert!(max_abs_diff(&batch, &singles) < 1e-13);
+    }
+
+    #[test]
+    fn shift_theorem() {
+        // x shifted by 1 => spectrum multiplied by w^k.
+        let n = 32;
+        let x = signal(n, 9);
+        let shifted: Vec<Complex64> = (0..n).map(|j| x[(j + 1) % n]).collect();
+        let plan = FftPlan::new(n);
+        let mut fx = x.clone();
+        let mut fs = shifted;
+        plan.process(&mut fx, Direction::Forward);
+        plan.process(&mut fs, Direction::Forward);
+        for k in 0..n {
+            let w = Complex64::expi(2.0 * std::f64::consts::PI * k as f64 / n as f64);
+            assert!((fs[k] - fx[k] * w).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn factorize_cases() {
+        assert_eq!(factorize(1), Vec::<usize>::new());
+        assert_eq!(factorize(2), vec![2]);
+        assert_eq!(factorize(700), vec![2, 2, 5, 5, 7]);
+        assert_eq!(factorize(97), vec![97]);
+        assert_eq!(factorize(128), vec![2; 7]);
+    }
+}

@@ -1,0 +1,53 @@
+//! # `a2wfft` — Fast parallel multidimensional FFT using advanced MPI
+//!
+//! A production-grade reproduction of Dalcin, Mortensen & Keyes (2018),
+//! *Fast parallel multidimensional FFT using advanced MPI*.
+//!
+//! The paper replaces the traditional two-step global redistribution used by
+//! every major parallel FFT library (local transpose + `MPI_ALLTOALL(V)` on
+//! contiguous buffers) with a **single** call to the generalized all-to-all
+//! (`MPI_ALLTOALLW`) operating on **subarray datatypes**, eliminating all
+//! local remapping. The method is fully generic: it redistributes
+//! `d`-dimensional arrays between any two axes of alignment, over Cartesian
+//! process grids of dimension up to `d-1` (slabs, pencils, and beyond).
+//!
+//! This crate provides:
+//!
+//! * [`simmpi`] — a faithful in-process message-passing substrate (one OS
+//!   thread per rank) with communicators, Cartesian topologies, derived
+//!   datatypes (including **subarray** types) and the full collective set
+//!   (`alltoall`, `alltoallv`, **`alltoallw`**, …) backed by a real
+//!   pack/unpack datatype engine. This stands in for MPICH on the paper's
+//!   Cray XC40 (see `DESIGN.md` §3 for the substitution argument).
+//! * [`decomp`] — Alg. 1: balanced block-contiguous decompositions, and
+//!   local-shape computation for arbitrary alignments/grids.
+//! * [`distarray`] — the mpi4py-fft-style high-level `DistArray` with
+//!   layout tracking, one-call redistribution and subarray-datatype gather.
+//! * [`redistribute`] — the paper's contribution (Alg. 2 + Alg. 3): subarray
+//!   datatype sequences and the one-call `alltoallw` exchange, plus the
+//!   *traditional* baseline (local transpose + `alltoallv`) for
+//!   head-to-head comparison (FFTW's transposed-out schedule is priced in
+//!   [`netmodel`]).
+//! * [`fft`] — a native serial FFT substrate (mixed-radix + Bluestein,
+//!   c2c/r2c/c2r, strided batched application) standing in for FFTW/MKL.
+//! * [`pfft`] — the parallel FFT driver: slab, pencil and general
+//!   `(d-1)`-dimensional decompositions, forward/backward, per-stage timers.
+//! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX+Pallas batched FFT
+//!   artifacts (`artifacts/*.hlo.txt`), pluggable as a serial FFT engine.
+//! * [`netmodel`] — an analytic performance model of the Shaheen II Cray
+//!   XC40 used to regenerate the paper's figures at full scale.
+//! * [`coordinator`] — configuration, metrics, workload drivers and the CLI
+//!   entry points used by `repro` and the benchmark harness.
+
+pub mod cli;
+pub mod coordinator;
+pub mod decomp;
+pub mod distarray;
+pub mod fft;
+pub mod netmodel;
+pub mod pfft;
+pub mod redistribute;
+pub mod runtime;
+pub mod simmpi;
+
+pub use fft::Complex64;

@@ -1,0 +1,162 @@
+//! `repro` — the leader CLI of the alltoallw-fft reproduction.
+//!
+//! Subcommands:
+//!
+//! * `repro run [--global 64,64,64] [--ranks 4] [--grid 2,2] [--kind r2c|c2c]`
+//!   `[--method alltoallw|traditional] [--engine native|xla] [--inner 3] [--outer 5]`
+//!   — execute a distributed transform on the simulated world and print the
+//!   timing breakdown (the paper's measurement protocol).
+//! * `repro figure <6..11>` — print the netmodel reproduction of a paper
+//!   figure as a TSV table.
+//! * `repro selftest` — quick end-to-end correctness pass on several
+//!   decompositions.
+//! * `repro info` — artifact and configuration summary.
+
+use a2wfft::cli::Args;
+use a2wfft::coordinator::{run_config, EngineKind, RunConfig};
+use a2wfft::netmodel::figures;
+use a2wfft::pfft::{Kind, RedistMethod};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv, &["help"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "figure" => cmd_figure(&args),
+        "selftest" => cmd_selftest(),
+        "info" => cmd_info(),
+        _ => print_help(),
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — parallel multidimensional FFT via advanced MPI (reproduction)\n\
+         \n\
+         USAGE:\n\
+         \x20 repro run [--global N,N,N] [--ranks R] [--grid G,G] [--kind r2c|c2c]\n\
+         \x20           [--method alltoallw|traditional] [--engine native|xla]\n\
+         \x20           [--inner I] [--outer O]\n\
+         \x20 repro figure <6|7|8|9|10|11>\n\
+         \x20 repro selftest\n\
+         \x20 repro info"
+    );
+}
+
+fn cmd_run(args: &Args) {
+    let global = args.get_usizes("global").unwrap_or_else(|| vec![64, 64, 64]);
+    let ranks = args.get_usize("ranks", 4);
+    let grid = args.get_usizes("grid").unwrap_or_default();
+    let grid_ndims = args.get_usize(
+        "grid-ndims",
+        if grid.is_empty() { 2.min(global.len() - 1) } else { grid.len() },
+    );
+    let kind = match args.get("kind").unwrap_or("r2c") {
+        "c2c" => Kind::C2c,
+        "r2c" => Kind::R2c,
+        other => panic!("--kind: unknown {other}"),
+    };
+    let method = match args.get("method").unwrap_or("alltoallw") {
+        "alltoallw" | "a2aw" | "new" => RedistMethod::Alltoallw,
+        "traditional" | "trad" => RedistMethod::Traditional,
+        other => panic!("--method: unknown {other}"),
+    };
+    let engine = match args.get("engine").unwrap_or("native") {
+        "native" => EngineKind::Native,
+        "xla" => EngineKind::Xla,
+        other => panic!("--engine: unknown {other}"),
+    };
+    let cfg = RunConfig {
+        global: global.clone(),
+        grid,
+        ranks,
+        kind,
+        method,
+        engine,
+        inner: args.get_usize("inner", 3),
+        outer: args.get_usize("outer", 5),
+    };
+    let rep = run_config(&cfg, grid_ndims);
+    println!(
+        "# global={global:?} ranks={ranks} kind={kind:?} method={method:?} engine={}",
+        engine.name()
+    );
+    println!("total_s\tfft_s\tredist_s\tbytes\tthroughput_pts_per_s\tmax_err");
+    println!(
+        "{:.6}\t{:.6}\t{:.6}\t{}\t{:.3e}\t{:.3e}",
+        rep.total,
+        rep.fft,
+        rep.redist,
+        rep.bytes,
+        rep.throughput(&global),
+        rep.max_err
+    );
+}
+
+fn cmd_figure(args: &Args) {
+    let n: usize = args
+        .positional
+        .get(1)
+        .expect("figure number required (6..11)")
+        .parse()
+        .expect("figure number must be an integer");
+    match figures::run_figure(n) {
+        Some(rows) => {
+            println!("# Paper figure {n} (netmodel, Shaheen XC40 calibration)");
+            println!("{}", figures::HEADER);
+            for r in rows {
+                println!("{}", r.tsv());
+            }
+        }
+        None => {
+            eprintln!("unknown figure {n}; the paper's evaluation figures are 6..=11");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_selftest() {
+    let cases: Vec<(Vec<usize>, usize, usize, Kind)> = vec![
+        (vec![16, 12, 10], 4, 1, Kind::C2c),
+        (vec![16, 12, 10], 4, 2, Kind::R2c),
+        (vec![8, 8, 8, 8], 8, 3, Kind::C2c),
+    ];
+    let mut ok = true;
+    for (global, ranks, grid_ndims, kind) in cases {
+        let cfg = RunConfig {
+            global: global.clone(),
+            ranks,
+            kind,
+            inner: 1,
+            outer: 1,
+            ..Default::default()
+        };
+        let rep = run_config(&cfg, grid_ndims);
+        let pass = rep.max_err < 1e-9;
+        ok &= pass;
+        println!(
+            "selftest global={global:?} ranks={ranks} grid_ndims={grid_ndims} kind={kind:?}: err={:.2e} {}",
+            rep.max_err,
+            if pass { "OK" } else { "FAIL" }
+        );
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+    println!("selftest OK");
+}
+
+fn cmd_info() {
+    println!("alltoallw-fft reproduction — Dalcin, Mortensen, Keyes (2018)");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match a2wfft::runtime::Manifest::read(&dir.join("manifest.tsv")) {
+        Ok(m) => {
+            println!("artifacts: {} modules in {}", m.entries.len(), dir.display());
+            for e in &m.entries {
+                println!("  {}\t(batch={}, n={})", e.name, e.batch, e.n);
+            }
+        }
+        Err(_) => println!("artifacts: none (run `make artifacts`)"),
+    }
+}

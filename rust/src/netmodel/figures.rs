@@ -1,0 +1,269 @@
+//! Paper-figure scenario builders: one function per evaluation figure,
+//! each returning the modeled series (per-library totals + breakdowns)
+//! that `repro figure N` and the `fig*` benches print.
+
+use super::scenario::{Breakdown, Library, MachineParams, Placement, Scenario};
+use crate::simmpi::dims_create;
+
+/// One modeled data point of a figure.
+#[derive(Debug, Clone)]
+pub struct FigRow {
+    /// Series label, e.g. `ours(a2aw)/distributed`.
+    pub series: String,
+    /// X value (cores).
+    pub cores: usize,
+    pub breakdown: Breakdown,
+}
+
+impl FigRow {
+    pub fn tsv(&self) -> String {
+        format!(
+            "{}\t{}\t{:.6}\t{:.6}\t{:.6}",
+            self.series,
+            self.cores,
+            self.breakdown.total(),
+            self.breakdown.redist,
+            self.breakdown.fft
+        )
+    }
+}
+
+/// Header shared by all figure tables.
+pub const HEADER: &str = "series\tcores\ttotal_s\tredist_s\tfft_s";
+
+fn slab_scenario(global: [usize; 3], cores: usize, placement: Placement) -> Scenario {
+    Scenario {
+        global: global.to_vec(),
+        grid: vec![cores],
+        cores,
+        cores_per_node: match placement {
+            Placement::Distributed => 1,
+            Placement::Shared => cores,
+            Placement::Mixed(c) => c,
+        },
+        r2c: true,
+    }
+}
+
+fn pencil_scenario(global: [usize; 3], cores: usize, cores_per_node: usize) -> Scenario {
+    Scenario {
+        global: global.to_vec(),
+        grid: dims_create(cores, 2),
+        cores,
+        cores_per_node,
+        r2c: true,
+    }
+}
+
+/// Balanced power-of-two global mesh with `2^19 * cores` points — the
+/// paper's weak-scaling workload (524,288 = 64^2 x 128 per core).
+pub fn weak_global(cores: usize) -> Vec<usize> {
+    assert!(cores.is_power_of_two(), "weak scaling cores must be 2^k");
+    let e = 19 + cores.trailing_zeros() as usize;
+    let base = e / 3;
+    let rem = e % 3;
+    // Larger exponents first (row-major C order: first axes longest).
+    (0..3).map(|i| 1usize << (base + usize::from(i < rem))).collect()
+}
+
+/// Weak-scaling scenario at `cores` over a `grid_ndims`-dimensional grid.
+pub fn weak_scenario(cores: usize, grid_ndims: usize) -> Scenario {
+    Scenario {
+        global: weak_global(cores),
+        grid: dims_create(cores, grid_ndims),
+        cores,
+        cores_per_node: 1,
+        r2c: true,
+    }
+}
+
+/// Fig. 6: strong scaling, slab, 700^3 r2c, shared vs distributed, 1..32
+/// cores. Series: ours / FFTW (slab) / P3DFFT, each in both placements.
+pub fn fig6(m: &MachineParams) -> Vec<FigRow> {
+    let mut rows = Vec::new();
+    for placement in [Placement::Distributed, Placement::Shared] {
+        let pname = match placement {
+            Placement::Distributed => "distributed",
+            _ => "shared",
+        };
+        for lib in [Library::OursA2aw, Library::FftwSlab, Library::P3dfft] {
+            for cores in [1usize, 2, 4, 8, 16, 32] {
+                let sc = slab_scenario([700, 700, 700], cores, placement);
+                rows.push(FigRow {
+                    series: format!("{}/{}", lib.name(), pname),
+                    cores,
+                    breakdown: m.simulate(lib, &sc),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Fig. 7: strong scaling, pencil, 512^3 r2c, distributed, 64..8192 cores.
+pub fn fig7(m: &MachineParams) -> Vec<FigRow> {
+    let mut rows = Vec::new();
+    for lib in [Library::OursA2aw, Library::P3dfft, Library::Decomp2d] {
+        for cores in [64usize, 128, 256, 512, 1024, 2048, 4096, 8192] {
+            let sc = pencil_scenario([512, 512, 512], cores, 1);
+            rows.push(FigRow {
+                series: lib.name().to_string(),
+                cores,
+                breakdown: m.simulate(lib, &sc),
+            });
+        }
+    }
+    rows
+}
+
+/// Fig. 8: weak scaling, slab, 524288 points/core, 4..512 cores.
+pub fn fig8(m: &MachineParams) -> Vec<FigRow> {
+    let mut rows = Vec::new();
+    for lib in [Library::OursA2aw, Library::FftwSlab, Library::P3dfft] {
+        for cores in [4usize, 8, 16, 32, 64, 128, 256, 512] {
+            let mut sc = weak_scenario(cores, 1);
+            sc.grid = vec![cores];
+            rows.push(FigRow {
+                series: lib.name().to_string(),
+                cores,
+                breakdown: m.simulate(lib, &sc),
+            });
+        }
+    }
+    rows
+}
+
+/// Fig. 9: weak scaling, pencil, 524288 points/core, 4..512 cores.
+pub fn fig9(m: &MachineParams) -> Vec<FigRow> {
+    let mut rows = Vec::new();
+    for lib in [Library::OursA2aw, Library::P3dfft, Library::Decomp2d] {
+        for cores in [4usize, 8, 16, 32, 64, 128, 256, 512] {
+            let sc = weak_scenario(cores, 2);
+            rows.push(FigRow {
+                series: lib.name().to_string(),
+                cores,
+                breakdown: m.simulate(lib, &sc),
+            });
+        }
+    }
+    rows
+}
+
+/// Fig. 10: strong scaling, pencil, 2048^3 r2c, 16 cores/node (mixed
+/// inter/intra-node), 512..8192 cores.
+pub fn fig10(m: &MachineParams) -> Vec<FigRow> {
+    let mut rows = Vec::new();
+    for lib in [Library::OursA2aw, Library::P3dfft, Library::Decomp2d] {
+        for cores in [512usize, 1024, 2048, 4096, 8192] {
+            let sc = pencil_scenario([2048, 2048, 2048], cores, 16);
+            rows.push(FigRow {
+                series: lib.name().to_string(),
+                cores,
+                breakdown: m.simulate(lib, &sc),
+            });
+        }
+    }
+    rows
+}
+
+/// Fig. 11: strong scaling, 128^4 real transform on a 3-D process grid,
+/// ours vs PFFT, 128..4096 cores.
+pub fn fig11(m: &MachineParams) -> Vec<FigRow> {
+    let mut rows = Vec::new();
+    for lib in [Library::OursA2aw, Library::Pfft] {
+        for cores in [128usize, 256, 512, 1024, 2048, 4096] {
+            let sc = Scenario {
+                global: vec![128, 128, 128, 128],
+                grid: dims_create(cores, 3),
+                cores,
+                cores_per_node: 16,
+                r2c: true,
+            };
+            rows.push(FigRow {
+                series: lib.name().to_string(),
+                cores,
+                breakdown: m.simulate(lib, &sc),
+            });
+        }
+    }
+    rows
+}
+
+/// Run figure `n` (6..=11) on the Shaheen calibration.
+pub fn run_figure(n: usize) -> Option<Vec<FigRow>> {
+    let m = MachineParams::shaheen();
+    Some(match n {
+        6 => fig6(&m),
+        7 => fig7(&m),
+        8 => fig8(&m),
+        9 => fig9(&m),
+        10 => fig10(&m),
+        11 => fig11(&m),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weak_global_sizes() {
+        assert_eq!(weak_global(4).iter().product::<usize>(), 524288 * 4);
+        assert_eq!(weak_global(4), vec![128, 128, 128]);
+        assert_eq!(weak_global(512).iter().product::<usize>(), 524288 * 512);
+        // Non-increasing extents.
+        for c in [4usize, 8, 16, 64, 512] {
+            let g = weak_global(c);
+            assert!(g.windows(2).all(|w| w[0] >= w[1]), "{g:?}");
+        }
+    }
+
+    #[test]
+    fn all_figures_produce_rows() {
+        for n in 6..=11 {
+            let rows = run_figure(n).unwrap();
+            assert!(!rows.is_empty(), "figure {n} empty");
+            for r in &rows {
+                assert!(r.breakdown.total() > 0.0, "figure {n}: nonpositive time");
+                assert!(r.breakdown.total().is_finite());
+            }
+        }
+        assert!(run_figure(5).is_none());
+    }
+
+    #[test]
+    fn fig7_totals_ours_fastest_or_close() {
+        // Paper: ours 5-10% faster than P3DFFT, 1-5% than 2DECOMP overall.
+        let rows = run_figure(7).unwrap();
+        for cores in [64usize, 256, 1024, 4096] {
+            let get = |s: &str| {
+                rows.iter()
+                    .find(|r| r.series == s && r.cores == cores)
+                    .unwrap()
+                    .breakdown
+                    .total()
+            };
+            let ours = get("ours(a2aw)");
+            let p3d = get("p3dfft");
+            let dec = get("2decomp");
+            assert!(ours <= p3d * 1.02, "cores={cores}: ours {ours} vs p3dfft {p3d}");
+            assert!(ours <= dec * 1.05, "cores={cores}: ours {ours} vs 2decomp {dec}");
+        }
+    }
+
+    #[test]
+    fn fig6_shared_slower_than_distributed() {
+        let rows = run_figure(6).unwrap();
+        let get = |series: &str, cores: usize| {
+            rows.iter()
+                .find(|r| r.series == series && r.cores == cores)
+                .unwrap()
+                .breakdown
+                .total()
+        };
+        for cores in [8usize, 16, 32] {
+            assert!(get("ours(a2aw)/shared", cores) > get("ours(a2aw)/distributed", cores));
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Analytic performance model of the paper's testbed — Shaheen II, a Cray
+//! XC40 (dual-socket 16-core Haswell @2.3 GHz nominal, 128 GB DDR4, Aries
+//! dragonfly interconnect) — used to regenerate the *shapes* of the paper's
+//! Figures 6–11 at full scale.
+//!
+//! ## Why a model
+//!
+//! The paper's meshes (700³ … 2048³ doubles on up to 8192 cores) exceed a
+//! single machine by orders of magnitude. The in-process substrate
+//! ([`crate::simmpi`]) validates correctness and the *relative local-work*
+//! trade-off at reduced scale; this module prices the same communication
+//! schedules with calibrated wire/memory constants so the paper-scale
+//! curves (who wins, by what factor, where the crossovers sit) can be
+//! reproduced. See DESIGN.md §3.
+//!
+//! ## What is priced
+//!
+//! For one **forward + backward** r2c/c2r transform pair (the quantity the
+//! paper's figures plot):
+//!
+//! * serial FFT flops at a clock that *rises* when fewer cores per node are
+//!   active (the paper measured 3.5 GHz single-core vs ~2.5 GHz full-node —
+//!   the source of its "superunitary scaling");
+//! * explicit local transposes (traditional method) at strided-copy
+//!   bandwidth, plus the contiguous staging copies inside optimized
+//!   `alltoall(v)`;
+//! * datatype-engine pack/unpack (new method) at discontiguous-walk
+//!   bandwidth;
+//! * the wire: per-message latency + bytes over per-node injection
+//!   bandwidth (inter-node), or shared-memory bandwidth (intra-node), with
+//!   `MPI_ALLTOALL(V)`'s architecture-specific optimizations granted to the
+//!   traditional method only — `MPI_ALLTOALLW` always uses the
+//!   isend/irecv algorithm (paper §4).
+
+pub mod figures;
+pub mod scenario;
+
+pub use scenario::{Breakdown, Library, MachineParams, Placement, Scenario};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slab(cores: usize, placement: Placement) -> Scenario {
+        Scenario {
+            global: vec![700, 700, 700],
+            grid: vec![cores],
+            cores,
+            cores_per_node: match placement {
+                Placement::Distributed => 1,
+                Placement::Shared => cores,
+                Placement::Mixed(c) => c,
+            },
+            r2c: true,
+        }
+    }
+
+    #[test]
+    fn strong_scaling_decreases_total() {
+        let m = MachineParams::shaheen();
+        let mut prev = f64::INFINITY;
+        for cores in [2usize, 4, 8, 16, 32] {
+            let b = m.simulate(Library::OursA2aw, &slab(cores, Placement::Distributed));
+            assert!(b.total() < prev, "no strong scaling at {cores} cores");
+            prev = b.total();
+        }
+    }
+
+    #[test]
+    fn distributed_beats_shared_at_scale() {
+        // Fig 6: the purely shared intra-node mode scales poorly (clock
+        // drop + memory contention).
+        let m = MachineParams::shaheen();
+        let dist = m.simulate(Library::OursA2aw, &slab(16, Placement::Distributed));
+        let shared = m.simulate(Library::OursA2aw, &slab(16, Placement::Shared));
+        assert!(shared.total() > dist.total());
+        assert!(shared.fft > dist.fft, "clock drop must slow serial FFTs");
+    }
+
+    #[test]
+    fn ours_redist_beats_p3dfft_distributed_slab() {
+        // Fig 6b: our global redistributions are faster over the whole
+        // distributed range.
+        let m = MachineParams::shaheen();
+        for cores in [2usize, 4, 8, 16, 32] {
+            let ours = m.simulate(Library::OursA2aw, &slab(cores, Placement::Distributed));
+            let p3d = m.simulate(Library::P3dfft, &slab(cores, Placement::Distributed));
+            assert!(
+                ours.redist < p3d.redist,
+                "cores={cores}: ours {:.3} !< p3dfft {:.3}",
+                ours.redist,
+                p3d.redist
+            );
+        }
+    }
+
+    #[test]
+    fn p3dfft_serial_ffts_slightly_faster() {
+        // Fig 6c / Fig 8c: P3DFFT's aligned intermediates give it somewhat
+        // faster serial FFTs.
+        let m = MachineParams::shaheen();
+        let ours = m.simulate(Library::OursA2aw, &slab(8, Placement::Distributed));
+        let p3d = m.simulate(Library::P3dfft, &slab(8, Placement::Distributed));
+        assert!(p3d.fft < ours.fft);
+    }
+
+    #[test]
+    fn mixed_mode_large_mesh_favors_traditional() {
+        // Fig 10: with 16 cores/node and a large mesh per node, the
+        // optimized ALLTOALL(V) redistribution is faster; the gap closes
+        // as core counts grow.
+        let m = MachineParams::shaheen();
+        let mk = |cores: usize| Scenario {
+            global: vec![2048, 2048, 2048],
+            grid: crate::simmpi::dims_create(cores, 2),
+            cores,
+            cores_per_node: 16,
+            r2c: true,
+        };
+        let ours_lo = m.simulate(Library::OursA2aw, &mk(512));
+        let p3d_lo = m.simulate(Library::P3dfft, &mk(512));
+        assert!(p3d_lo.redist < ours_lo.redist, "large mesh/node must favor alltoallv");
+        let ours_hi = m.simulate(Library::OursA2aw, &mk(8192));
+        let p3d_hi = m.simulate(Library::P3dfft, &mk(8192));
+        let gap_lo = ours_lo.redist / p3d_lo.redist;
+        let gap_hi = ours_hi.redist / p3d_hi.redist;
+        assert!(gap_hi < gap_lo, "gap must close as cores grow");
+    }
+
+    #[test]
+    fn pencil_4d_ours_beats_pfft() {
+        // Fig 11: ours ~5-15% faster than PFFT on 128^4 / 3-D grid.
+        let m = MachineParams::shaheen();
+        for cores in [128usize, 512, 4096] {
+            let sc = Scenario {
+                global: vec![128, 128, 128, 128],
+                grid: crate::simmpi::dims_create(cores, 3),
+                cores,
+                cores_per_node: 1,
+                r2c: true,
+            };
+            let ours = m.simulate(Library::OursA2aw, &sc).total();
+            let pfft = m.simulate(Library::Pfft, &sc).total();
+            let ratio = pfft / ours;
+            assert!(
+                (1.02..1.35).contains(&ratio),
+                "cores={cores}: pfft/ours = {ratio:.3} outside the paper's 5-15% band"
+            );
+        }
+    }
+
+    #[test]
+    fn weak_scaling_roughly_flat_then_grows() {
+        // Fig 9a: pencil weak scaling stays within a small factor over the
+        // whole range (communication grows slowly).
+        let m = MachineParams::shaheen();
+        let t4 = m
+            .simulate(Library::OursA2aw, &figures::weak_scenario(4, 2))
+            .total();
+        let t512 = m
+            .simulate(Library::OursA2aw, &figures::weak_scenario(512, 2))
+            .total();
+        assert!(t512 / t4 < 4.0, "weak scaling blew up: {:.2}x", t512 / t4);
+        assert!(t512 > t4 * 0.8, "weak scaling cannot be superlinear overall");
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let m = MachineParams::shaheen();
+        let b = m.simulate(Library::OursA2aw, &slab(8, Placement::Distributed));
+        assert!((b.total() - (b.fft + b.redist)).abs() < 1e-12);
+        assert!(b.fft > 0.0 && b.redist > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Parallel multidimensional FFT driver — slab (§3.3), pencil (§3.5) and
+//! general higher-dimensional (§3.6) decompositions over the global
+//! redistribution engine of [`crate::redistribute`].
+//!
+//! The decomposition dimensionality is a parameter, not a code path: a slab
+//! plan is a pencil plan with a 1-D grid, the paper's 4-D proof-of-concept
+//! is the same plan with a 3-D grid. See [`PfftPlan`].
+
+pub mod plan;
+
+pub use plan::{Kind, PfftPlan, RedistMethod, StageTimers};

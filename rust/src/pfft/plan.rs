@@ -1,0 +1,407 @@
+//! The distributed FFT plan: alignment states, redistribution schedule and
+//! the forward/backward drivers (paper §3.3, §3.5, §3.6).
+//!
+//! A `d`-dimensional global array on an `r`-dimensional process grid
+//! (`r <= d-1`) passes through `r+1` *alignment states* `t = r, ..., 0`:
+//!
+//! * state `t`: axes `0..t` are distributed over grid directions `0..t`,
+//!   axis `t` is locally complete, axes `t+1..=r` are distributed over grid
+//!   directions `t..r`, and axes beyond `r` are complete.
+//! * state `r` (the input layout) has all trailing axes `r..d` complete —
+//!   these are transformed first.
+//! * the exchange `t+1 -> t` is a global redistribution within the 1-D
+//!   process subgroup of grid direction `t` (the paper's key observation in
+//!   §3.5: a pencil/general decomposition is a *collection of slab
+//!   decompositions* over the direction subgroups).
+//!
+//! A forward transform is then `d` partial serial FFTs interleaved with `r`
+//! redistributions — Eqs. (12–14) for slabs, (21–25) for pencils, (26–32)
+//! for the 4-D/3-D-grid case — and the backward transform retraces the
+//! sequence exactly.
+
+use std::time::Instant;
+
+use crate::decomp::local_len;
+use crate::fft::{Complex64, Direction, SerialFft};
+use crate::redistribute::{RedistPlan, TraditionalPlan};
+use crate::simmpi::topology::{subcomms_with_dims, CartComm};
+use crate::simmpi::{dims_create, Comm};
+
+/// Which global redistribution implementation a plan uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RedistMethod {
+    /// The paper's method: one `alltoallw` over subarray datatypes.
+    Alltoallw,
+    /// The baseline: local transpose + `alltoallv` of contiguous buffers.
+    Traditional,
+}
+
+enum RedistKind {
+    New(RedistPlan),
+    Trad(TraditionalPlan),
+}
+
+impl RedistKind {
+    fn execute(&self, a: &[Complex64], b: &mut [Complex64]) {
+        match self {
+            RedistKind::New(p) => p.execute(a, b),
+            RedistKind::Trad(p) => p.execute(a, b),
+        }
+    }
+
+    fn execute_back(&self, b: &[Complex64], a: &mut [Complex64]) {
+        match self {
+            RedistKind::New(p) => p.execute_back(b, a),
+            RedistKind::Trad(p) => p.execute_back(b, a),
+        }
+    }
+}
+
+/// Wall-clock accounting per transform phase — the paper's Figs. 6–10
+/// report (a) total, (b) redistribution, (c) serial FFT.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimers {
+    /// Seconds inside serial FFT calls.
+    pub fft: f64,
+    /// Seconds inside global redistributions.
+    pub redist: f64,
+}
+
+impl StageTimers {
+    pub fn total(&self) -> f64 {
+        self.fft + self.redist
+    }
+
+    pub fn reset(&mut self) {
+        *self = StageTimers::default();
+    }
+}
+
+/// Transform kind of a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Complex-to-complex in both directions.
+    C2c,
+    /// Real-to-complex forward / complex-to-real backward (Hermitian halved
+    /// last axis, like the paper's benchmark transforms).
+    R2c,
+}
+
+/// A distributed multidimensional FFT plan over a Cartesian process grid.
+///
+/// Created collectively by every rank of `comm`; holds the per-rank local
+/// buffers, the redistribution plans for every alignment step, and stage
+/// timers. Drive it with [`PfftPlan::forward`] / [`PfftPlan::backward`].
+pub struct PfftPlan {
+    /// Global *real-space* shape (for `C2c` this equals the complex shape).
+    global: Vec<usize>,
+    /// Global complex shape (last axis halved for `R2c`).
+    global_c: Vec<usize>,
+    kind: Kind,
+    /// Grid extents (`r = dims.len()` directions).
+    dims: Vec<usize>,
+    /// This rank's grid coordinates.
+    coords: Vec<usize>,
+    /// Local complex shape at every alignment state `t = 0..=r`.
+    shapes: Vec<Vec<usize>>,
+    /// `redists[t]` exchanges state `t+1` (v-aligned, v = t+1) with state
+    /// `t` (w-aligned, w = t), within direction subgroup `t`.
+    redists: Vec<RedistKind>,
+    /// Work buffers, one per state.
+    bufs: Vec<Vec<Complex64>>,
+    /// Local real shape at state `r` (`R2c` only).
+    real_shape: Vec<usize>,
+    pub timers: StageTimers,
+}
+
+impl PfftPlan {
+    /// Plan a transform of the global array `global` over an
+    /// `grid_ndims`-dimensional process grid with extents from
+    /// `dims_create`, using the paper's `alltoallw` redistribution.
+    pub fn new(comm: &Comm, global: &[usize], grid_ndims: usize, kind: Kind) -> PfftPlan {
+        let dims = dims_create(comm.size(), grid_ndims);
+        Self::with_dims(comm, global, &dims, kind, RedistMethod::Alltoallw)
+    }
+
+    /// Full-control constructor: explicit grid extents and redistribution
+    /// method. `dims.len() <= global.len() - 1` so at least one axis starts
+    /// locally complete.
+    pub fn with_dims(
+        comm: &Comm,
+        global: &[usize],
+        dims: &[usize],
+        kind: Kind,
+        method: RedistMethod,
+    ) -> PfftPlan {
+        let d = global.len();
+        let r = dims.len();
+        assert!(d >= 2, "pfft: need at least 2 dimensions");
+        assert!(r >= 1 && r <= d - 1, "pfft: grid rank {r} out of range for array rank {d}");
+        assert_eq!(dims.iter().product::<usize>(), comm.size(), "pfft: grid size != comm size");
+        if kind == Kind::R2c {
+            assert!(global[d - 1] >= 2, "pfft: r2c needs last axis >= 2");
+        }
+        let mut global_c = global.to_vec();
+        if kind == Kind::R2c {
+            global_c[d - 1] = global[d - 1] / 2 + 1;
+        }
+        let cart = CartComm::create(comm, dims);
+        let coords = cart.coords().to_vec();
+        let subs = subcomms_with_dims(comm, dims);
+        // Local complex shape at each alignment state.
+        let shapes: Vec<Vec<usize>> = (0..=r)
+            .map(|t| {
+                (0..d)
+                    .map(|a| {
+                        if a < t {
+                            local_len(global_c[a], dims[a], coords[a])
+                        } else if a == t {
+                            global_c[a]
+                        } else if a <= r {
+                            local_len(global_c[a], dims[a - 1], coords[a - 1])
+                        } else {
+                            global_c[a]
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        // Redistribution plans: state t+1 -> state t over subgroup t,
+        // v = t+1 (aligned in A), w = t (aligned in B).
+        let elem = std::mem::size_of::<Complex64>();
+        let redists: Vec<RedistKind> = (0..r)
+            .map(|t| {
+                let (a, b) = (&shapes[t + 1], &shapes[t]);
+                match method {
+                    RedistMethod::Alltoallw => {
+                        RedistKind::New(RedistPlan::new(&subs[t], elem, a, t + 1, b, t))
+                    }
+                    RedistMethod::Traditional => {
+                        RedistKind::Trad(TraditionalPlan::new(&subs[t], elem, a, t + 1, b, t))
+                    }
+                }
+            })
+            .collect();
+        let bufs: Vec<Vec<Complex64>> =
+            shapes.iter().map(|s| vec![Complex64::ZERO; s.iter().product()]).collect();
+        // Real-space local shape at state r (axes 0..r distributed).
+        let real_shape: Vec<usize> = (0..d)
+            .map(|a| if a < r { local_len(global[a], dims[a], coords[a]) } else { global[a] })
+            .collect();
+        PfftPlan {
+            global: global.to_vec(),
+            global_c,
+            kind,
+            dims: dims.to_vec(),
+            coords,
+            shapes,
+            redists,
+            bufs,
+            real_shape,
+            timers: StageTimers::default(),
+        }
+    }
+
+    /// Grid extents.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// This rank's grid coordinates.
+    pub fn coords(&self) -> &[usize] {
+        &self.coords
+    }
+
+    /// Global real-space shape.
+    pub fn global(&self) -> &[usize] {
+        &self.global
+    }
+
+    /// Local *real-space* input shape (state `r`): what
+    /// [`PfftPlan::forward_r2c`] consumes and what [`PfftPlan::forward`]
+    /// consumes for `C2c` plans.
+    pub fn input_shape(&self) -> &[usize] {
+        match self.kind {
+            Kind::C2c => &self.shapes[self.dims.len()],
+            Kind::R2c => &self.real_shape,
+        }
+    }
+
+    /// Local spectral-space output shape (state `0`).
+    pub fn output_shape(&self) -> &[usize] {
+        &self.shapes[0]
+    }
+
+    /// Local input element count.
+    pub fn input_len(&self) -> usize {
+        self.input_shape().iter().product()
+    }
+
+    /// Local output element count.
+    pub fn output_len(&self) -> usize {
+        self.output_shape().iter().product()
+    }
+
+    /// Per-axis `(start, len)` global window of this rank's *input* block
+    /// (real-space window for `R2c` plans).
+    pub fn input_window(&self) -> Vec<(usize, usize)> {
+        let r = self.dims.len();
+        (0..self.global.len())
+            .map(|a| {
+                if a < r {
+                    let (n, s) = crate::decomp::decompose(self.global[a], self.dims[a], self.coords[a]);
+                    (s, n)
+                } else {
+                    (0, self.global[a])
+                }
+            })
+            .collect()
+    }
+
+    /// Per-axis `(start, len)` global window of this rank's *output* block
+    /// (in the complex global shape — last axis halved for `R2c`).
+    pub fn output_window(&self) -> Vec<(usize, usize)> {
+        let r = self.dims.len();
+        (0..self.global_c.len())
+            .map(|a| {
+                if a == 0 || a > r {
+                    (0, self.global_c[a])
+                } else {
+                    let (n, s) =
+                        crate::decomp::decompose(self.global_c[a], self.dims[a - 1], self.coords[a - 1]);
+                    (s, n)
+                }
+            })
+            .collect()
+    }
+
+    /// Forward complex transform: `input` in state-`r` layout (shape
+    /// [`PfftPlan::input_shape`]), `output` in state-0 layout.
+    pub fn forward(&mut self, engine: &mut dyn SerialFft, input: &[Complex64], output: &mut [Complex64]) {
+        assert_eq!(self.kind, Kind::C2c, "forward: use forward_r2c on an R2c plan");
+        let r = self.dims.len();
+        let d = self.global.len();
+        assert_eq!(input.len(), self.input_len(), "forward: input length");
+        assert_eq!(output.len(), self.output_len(), "forward: output length");
+        self.bufs[r].copy_from_slice(input);
+        // Transform all trailing complete axes at state r.
+        let t0 = Instant::now();
+        {
+            let shape = self.shapes[r].clone();
+            for axis in (r..d).rev() {
+                engine.c2c(&mut self.bufs[r], &shape, axis, Direction::Forward);
+            }
+        }
+        self.timers.fft += t0.elapsed().as_secs_f64();
+        self.descend(engine, Direction::Forward);
+        output.copy_from_slice(&self.bufs[0]);
+    }
+
+    /// Backward complex transform: `input` in state-0 layout, `output` in
+    /// state-`r` layout. Scales by `1/prod(N)` (numpy `ifftn` convention).
+    pub fn backward(&mut self, engine: &mut dyn SerialFft, input: &[Complex64], output: &mut [Complex64]) {
+        assert_eq!(self.kind, Kind::C2c, "backward: use backward_c2r on an R2c plan");
+        let r = self.dims.len();
+        let d = self.global.len();
+        assert_eq!(input.len(), self.output_len(), "backward: input length");
+        assert_eq!(output.len(), self.input_len(), "backward: output length");
+        self.bufs[0].copy_from_slice(input);
+        self.ascend(engine);
+        let t0 = Instant::now();
+        {
+            let shape = self.shapes[r].clone();
+            for axis in r..d {
+                engine.c2c(&mut self.bufs[r], &shape, axis, Direction::Backward);
+            }
+        }
+        self.timers.fft += t0.elapsed().as_secs_f64();
+        output.copy_from_slice(&self.bufs[r]);
+    }
+
+    /// Forward real-to-complex transform (paper's benchmark workload):
+    /// `input` real in state-`r` layout (shape [`PfftPlan::input_shape`]),
+    /// `output` complex in state-0 layout with halved last axis.
+    pub fn forward_r2c(&mut self, engine: &mut dyn SerialFft, input: &[f64], output: &mut [Complex64]) {
+        assert_eq!(self.kind, Kind::R2c, "forward_r2c: plan is not R2c");
+        let r = self.dims.len();
+        let d = self.global.len();
+        assert_eq!(input.len(), self.input_len(), "forward_r2c: input length");
+        assert_eq!(output.len(), self.output_len(), "forward_r2c: output length");
+        let t0 = Instant::now();
+        {
+            // r2c along the last axis into the state-r complex buffer...
+            let rs = self.real_shape.clone();
+            engine.r2c(input, &rs, &mut self.bufs[r]);
+            // ...then c2c on the remaining complete axes.
+            let shape = self.shapes[r].clone();
+            for axis in (r..d - 1).rev() {
+                engine.c2c(&mut self.bufs[r], &shape, axis, Direction::Forward);
+            }
+        }
+        self.timers.fft += t0.elapsed().as_secs_f64();
+        self.descend(engine, Direction::Forward);
+        output.copy_from_slice(&self.bufs[0]);
+    }
+
+    /// Backward complex-to-real transform, inverse of
+    /// [`PfftPlan::forward_r2c`] including the `1/prod(N)` scaling.
+    pub fn backward_c2r(&mut self, engine: &mut dyn SerialFft, input: &[Complex64], output: &mut [f64]) {
+        assert_eq!(self.kind, Kind::R2c, "backward_c2r: plan is not R2c");
+        let r = self.dims.len();
+        let d = self.global.len();
+        assert_eq!(input.len(), self.output_len(), "backward_c2r: input length");
+        assert_eq!(output.len(), self.input_len(), "backward_c2r: output length");
+        self.bufs[0].copy_from_slice(input);
+        self.ascend(engine);
+        let t0 = Instant::now();
+        {
+            let shape = self.shapes[r].clone();
+            for axis in r..d - 1 {
+                engine.c2c(&mut self.bufs[r], &shape, axis, Direction::Backward);
+            }
+            let rs = self.real_shape.clone();
+            engine.c2r(&self.bufs[r], &rs, output);
+        }
+        self.timers.fft += t0.elapsed().as_secs_f64();
+    }
+
+    /// Forward alignment walk: states `r-1, ..., 0`; exchange into state
+    /// `t`, then transform axis `t`.
+    fn descend(&mut self, engine: &mut dyn SerialFft, dir: Direction) {
+        let r = self.dims.len();
+        for t in (0..r).rev() {
+            let t0 = Instant::now();
+            {
+                let (lo, hi) = self.bufs.split_at_mut(t + 1);
+                self.redists[t].execute(&hi[0], &mut lo[t]);
+            }
+            self.timers.redist += t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            {
+                let shape = self.shapes[t].clone();
+                engine.c2c(&mut self.bufs[t], &shape, t, dir);
+            }
+            self.timers.fft += t1.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Backward alignment walk: states `0, ..., r-1`; inverse-transform
+    /// axis `t`, then exchange back into state `t+1`.
+    fn ascend(&mut self, engine: &mut dyn SerialFft) {
+        let r = self.dims.len();
+        for t in 0..r {
+            let t0 = Instant::now();
+            {
+                let shape = self.shapes[t].clone();
+                engine.c2c(&mut self.bufs[t], &shape, t, Direction::Backward);
+            }
+            self.timers.fft += t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            {
+                let (lo, hi) = self.bufs.split_at_mut(t + 1);
+                self.redists[t].execute_back(&lo[t], &mut hi[0]);
+            }
+            self.timers.redist += t1.elapsed().as_secs_f64();
+        }
+    }
+}

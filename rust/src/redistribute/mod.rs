@@ -1,0 +1,22 @@
+//! Global redistribution of distributed multidimensional arrays — the
+//! paper's contribution (§3.3.2, Algs. 2–3) plus the traditional baseline
+//! (§3.3.1) it is evaluated against.
+//!
+//! A *global redistribution* `v -> w` moves a d-dimensional array from
+//! "v-aligned" (axis `v` locally complete, axis `w` distributed over the
+//! process group) to "w-aligned" (axis `w` complete, axis `v` distributed).
+//! All other axes are untouched; the operation is what parallel FFT codes
+//! call a (global) transpose.
+//!
+//! * [`exchange`] / [`RedistPlan`] — the **new method**: one
+//!   `alltoallw` over subarray datatypes, no local remapping.
+//! * [`traditional`] — the baseline every established library uses:
+//!   explicit local transpose into per-destination contiguous chunks,
+//!   then `alltoallv` of contiguous buffers (+ receive-side remap when
+//!   the chunks cannot land in place).
+
+pub mod exchange;
+pub mod traditional;
+
+pub use exchange::{exchange, subarray_types, RedistPlan};
+pub use traditional::{traditional_exchange, TraditionalPlan};

@@ -1,0 +1,93 @@
+//! The artifact manifest (`artifacts/manifest.tsv`) written by
+//! `python/compile/aot.py`: one line per AOT-lowered executable.
+//!
+//! Format (tab-separated, `#` comments):
+//! `name  dir(fwd|bwd)  batch  n  file`
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// One artifact record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub forward: bool,
+    pub batch: usize,
+    pub n: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Read and parse `path`.
+    pub fn read(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                return Err(anyhow!("manifest line {}: expected 5 columns, got {}", lineno + 1, cols.len()));
+            }
+            let forward = match cols[1] {
+                "fwd" => true,
+                "bwd" => false,
+                other => return Err(anyhow!("manifest line {}: bad direction {other:?}", lineno + 1)),
+            };
+            entries.push(ManifestEntry {
+                name: cols[0].to_string(),
+                forward,
+                batch: cols[2].parse().with_context(|| format!("line {}: batch", lineno + 1))?,
+                n: cols[3].parse().with_context(|| format!("line {}: n", lineno + 1))?,
+                file: cols[4].to_string(),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(
+            "# name\tdir\tbatch\tn\tfile\nfft_fwd_b64_n16\tfwd\t64\t16\tfft_fwd_b64_n16.hlo.txt\nfft_bwd_b64_n16\tbwd\t64\t16\tf.hlo.txt\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert!(m.entries[0].forward);
+        assert!(!m.entries[1].forward);
+        assert_eq!(m.entries[0].batch, 64);
+        assert_eq!(m.entries[0].n, 16);
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(Manifest::parse("a\tfwd\t64\n").is_err());
+        assert!(Manifest::parse("a\tsideways\t64\t16\tf\n").is_err());
+        assert!(Manifest::parse("a\tfwd\tx\t16\tf\n").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# c\n\n  \n").unwrap();
+        assert!(m.entries.is_empty());
+    }
+}

@@ -1,0 +1,472 @@
+//! Communicators, point-to-point transport and `comm_split`.
+//!
+//! A [`World`] spawns one OS thread per rank and hands each a [`Comm`] over
+//! the full process group (the analogue of `MPI_COMM_WORLD`). Point-to-point
+//! messages are byte payloads deposited into the destination rank's mailbox
+//! (a `Mutex<Vec<Msg>>` + condvar); receive matches on `(source, tag)` in
+//! FIFO order per match key, exactly like MPI's non-overtaking rule.
+//!
+//! New communicators are created collectively with [`Comm::split`], the
+//! analogue of `MPI_COMM_SPLIT`, which is the primitive under Cartesian
+//! sub-grids ([`super::topology`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::{as_bytes, as_bytes_mut, Pod};
+
+/// One in-flight point-to-point message.
+struct Msg {
+    src: usize,
+    tag: u32,
+    data: Vec<u8>,
+}
+
+/// Per-rank mailbox: unordered store with FIFO matching per `(src, tag)`.
+struct Mailbox {
+    q: Mutex<Vec<Msg>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Mailbox { q: Mutex::new(Vec::new()), cv: Condvar::new() }
+    }
+
+    fn push(&self, m: Msg) {
+        self.q.lock().unwrap().push(m);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self, src: usize, tag: u32) -> Vec<u8> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(i) = q.iter().position(|m| m.src == src && m.tag == tag) {
+                return q.remove(i).data;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// Reusable sense-reversing barrier.
+struct BarrierState {
+    m: Mutex<(usize, u64)>, // (count, phase)
+    cv: Condvar,
+}
+
+impl BarrierState {
+    fn new() -> Self {
+        BarrierState { m: Mutex::new((0, 0)), cv: Condvar::new() }
+    }
+
+    fn wait(&self, size: usize) {
+        let mut g = self.m.lock().unwrap();
+        let phase = g.1;
+        g.0 += 1;
+        if g.0 == size {
+            g.0 = 0;
+            g.1 = g.1.wrapping_add(1);
+            self.cv.notify_all();
+        } else {
+            while g.1 == phase {
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+    }
+}
+
+/// Collective rendezvous state for `split`.
+struct SplitInner {
+    entries: Vec<Option<(i64, i64)>>, // rank -> (color, key)
+    arrived: usize,
+    departed: usize,
+    /// rank -> (new comm state, new rank); None for color < 0 (MPI_UNDEFINED).
+    result: Option<Vec<Option<(Arc<CommState>, usize)>>>,
+}
+
+struct SplitState {
+    m: Mutex<SplitInner>,
+    cv: Condvar,
+}
+
+impl SplitState {
+    fn new(size: usize) -> Self {
+        SplitState {
+            m: Mutex::new(SplitInner {
+                entries: vec![None; size],
+                arrived: 0,
+                departed: 0,
+                result: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Global (per-`World::run` invocation) shared state.
+pub(crate) struct WorldState {
+    next_ctx: AtomicU64,
+    /// Bytes moved through mailboxes, for coarse traffic accounting.
+    pub(crate) bytes_sent: AtomicU64,
+    pub(crate) messages_sent: AtomicU64,
+}
+
+impl WorldState {
+    fn new() -> Self {
+        WorldState {
+            next_ctx: AtomicU64::new(1),
+            bytes_sent: AtomicU64::new(0),
+            messages_sent: AtomicU64::new(0),
+        }
+    }
+
+    fn alloc_ctx(&self) -> u64 {
+        self.next_ctx.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// Shared state of one communicator (one per process group).
+pub(crate) struct CommState {
+    #[allow(dead_code)]
+    ctx: u64,
+    size: usize,
+    world: Arc<WorldState>,
+    mailboxes: Vec<Mailbox>,
+    barrier: BarrierState,
+    split: SplitState,
+}
+
+impl CommState {
+    fn new(world: Arc<WorldState>, size: usize) -> Arc<Self> {
+        let ctx = world.alloc_ctx();
+        Arc::new(CommState {
+            ctx,
+            size,
+            world,
+            mailboxes: (0..size).map(|_| Mailbox::new()).collect(),
+            barrier: BarrierState::new(),
+            split: SplitState::new(size),
+        })
+    }
+}
+
+/// A rank's handle on a process group — the analogue of an `MPI_Comm` plus
+/// the calling rank's identity.
+///
+/// `Comm` is cheap to clone (it is an `Arc` plus a rank id); every collective
+/// must be entered by all ranks of the group, as in MPI.
+#[derive(Clone)]
+pub struct Comm {
+    rank: usize,
+    pub(crate) state: Arc<CommState>,
+}
+
+impl Comm {
+    /// Rank of the caller within this communicator.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks in this communicator.
+    pub fn size(&self) -> usize {
+        self.state.size
+    }
+
+    /// Total bytes pushed through mailboxes world-wide so far (all comms).
+    pub fn world_bytes_sent(&self) -> u64 {
+        self.state.world.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    /// Total messages pushed world-wide so far (all comms).
+    pub fn world_messages_sent(&self) -> u64 {
+        self.state.world.messages_sent.load(Ordering::Relaxed)
+    }
+
+    /// Non-blocking-buffered send of a raw byte payload (like `MPI_Send` with
+    /// a buffered protocol: it never blocks, the mailbox is unbounded).
+    pub fn send_bytes(&self, to: usize, tag: u32, data: Vec<u8>) {
+        assert!(to < self.size(), "send to rank {to} out of range");
+        self.state.world.bytes_sent.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.state.world.messages_sent.fetch_add(1, Ordering::Relaxed);
+        self.state.mailboxes[to].push(Msg { src: self.rank, tag, data });
+    }
+
+    /// Blocking receive of the next byte payload matching `(from, tag)`.
+    pub fn recv_bytes(&self, from: usize, tag: u32) -> Vec<u8> {
+        assert!(from < self.size(), "recv from rank {from} out of range");
+        self.state.mailboxes[self.rank].pop(from, tag)
+    }
+
+    /// Typed send: copies `data` into a byte payload.
+    pub fn send_slice<T: Pod>(&self, to: usize, tag: u32, data: &[T]) {
+        self.send_bytes(to, tag, as_bytes(data).to_vec());
+    }
+
+    /// Typed receive of exactly `count` elements.
+    pub fn recv_vec<T: Pod>(&self, from: usize, tag: u32, count: usize) -> Vec<T> {
+        let bytes = self.recv_bytes(from, tag);
+        assert_eq!(
+            bytes.len(),
+            count * std::mem::size_of::<T>(),
+            "recv_vec: message size mismatch (from={from} tag={tag})"
+        );
+        let mut out = vec![unsafe { std::mem::zeroed::<T>() }; count];
+        as_bytes_mut(&mut out).copy_from_slice(&bytes);
+        out
+    }
+
+    /// Typed receive into a caller-provided buffer.
+    pub fn recv_into<T: Pod>(&self, from: usize, tag: u32, out: &mut [T]) {
+        let bytes = self.recv_bytes(from, tag);
+        assert_eq!(bytes.len(), std::mem::size_of_val(out), "recv_into: size mismatch");
+        as_bytes_mut(out).copy_from_slice(&bytes);
+    }
+
+    /// Synchronize all ranks of this communicator (`MPI_Barrier`).
+    pub fn barrier(&self) {
+        self.state.barrier.wait(self.state.size);
+    }
+
+    /// Collectively split this communicator (`MPI_COMM_SPLIT`).
+    ///
+    /// Ranks supplying the same non-negative `color` end up in the same new
+    /// communicator, ordered by `(key, old rank)`. A negative color returns
+    /// `None` (the analogue of `MPI_UNDEFINED`).
+    pub fn split(&self, color: i64, key: i64) -> Option<Comm> {
+        let st = &self.state.split;
+        let size = self.state.size;
+        let mut g = st.m.lock().unwrap();
+        // Wait for the previous split generation to fully drain.
+        while g.result.is_some() && g.departed < size {
+            g = st.cv.wait(g).unwrap();
+        }
+        if g.result.is_some() {
+            // Last generation fully departed; reset.
+            g.result = None;
+            g.entries.iter_mut().for_each(|e| *e = None);
+            g.arrived = 0;
+            g.departed = 0;
+        }
+        g.entries[self.rank] = Some((color, key));
+        g.arrived += 1;
+        if g.arrived == size {
+            // Build the new communicators, one per distinct color >= 0.
+            let entries: Vec<(usize, i64, i64)> = g
+                .entries
+                .iter()
+                .enumerate()
+                .map(|(r, e)| {
+                    let (c, k) = e.expect("split: missing entry");
+                    (r, c, k)
+                })
+                .collect();
+            let mut colors: Vec<i64> = entries.iter().map(|&(_, c, _)| c).filter(|&c| c >= 0).collect();
+            colors.sort_unstable();
+            colors.dedup();
+            let mut result: Vec<Option<(Arc<CommState>, usize)>> = vec![None; size];
+            for c in colors {
+                let mut members: Vec<(usize, i64)> = entries
+                    .iter()
+                    .filter(|&&(_, ec, _)| ec == c)
+                    .map(|&(r, _, k)| (r, k))
+                    .collect();
+                members.sort_by_key(|&(r, k)| (k, r));
+                let new_state = CommState::new(self.state.world.clone(), members.len());
+                for (new_rank, &(old_rank, _)) in members.iter().enumerate() {
+                    result[old_rank] = Some((new_state.clone(), new_rank));
+                }
+            }
+            g.result = Some(result);
+            st.cv.notify_all();
+        } else {
+            while g.result.is_none() {
+                g = st.cv.wait(g).unwrap();
+            }
+        }
+        let mine = g.result.as_ref().unwrap()[self.rank].clone();
+        g.departed += 1;
+        if g.departed == size {
+            st.cv.notify_all();
+        }
+        drop(g);
+        mine.map(|(state, rank)| Comm { rank, state })
+    }
+
+    /// Duplicate this communicator (`MPI_COMM_DUP`): same group, fresh
+    /// context — messages on the dup never match messages on the parent.
+    pub fn dup(&self) -> Comm {
+        self.split(0, self.rank as i64).expect("dup: split returned None")
+    }
+}
+
+/// Factory for simulated process worlds.
+pub struct World;
+
+impl World {
+    /// Spawn `size` ranks, run `f` on each with its world communicator, and
+    /// return the per-rank results in rank order.
+    ///
+    /// Panics in any rank propagate (the whole world aborts), mirroring an
+    /// MPI job failure.
+    pub fn run<F, R>(size: usize, f: F) -> Vec<R>
+    where
+        F: Fn(Comm) -> R + Sync,
+        R: Send,
+    {
+        assert!(size > 0, "world size must be positive");
+        let world = Arc::new(WorldState::new());
+        let state = CommState::new(world, size);
+        let mut results: Vec<Option<R>> = (0..size).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(size);
+            for (rank, slot) in results.iter_mut().enumerate() {
+                let comm = Comm { rank, state: state.clone() };
+                let f = &f;
+                handles.push(scope.spawn(move || {
+                    *slot = Some(f(comm));
+                }));
+            }
+            for h in handles {
+                if let Err(e) = h.join() {
+                    std::panic::resume_unwind(e);
+                }
+            }
+        });
+        results.into_iter().map(|r| r.expect("rank produced no result")).collect()
+    }
+}
+
+/// Deterministic map rank -> node id when simulating `cores_per_node`
+/// placement (block placement, like `aprun -N`). Used by the netmodel's
+/// placement reasoning and exposed for downstream schedulers.
+#[allow(dead_code)]
+pub fn node_of(rank: usize, cores_per_node: usize) -> usize {
+    rank / cores_per_node.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_tags_do_not_cross() {
+        World::run(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send_slice(1, 5, &[5u64]);
+                comm.send_slice(1, 4, &[4u64]);
+            } else {
+                // Receive in the opposite order of sending; tags must match.
+                let a: Vec<u64> = comm.recv_vec(0, 4, 1);
+                let b: Vec<u64> = comm.recv_vec(0, 5, 1);
+                assert_eq!((a[0], b[0]), (4, 5));
+            }
+        });
+    }
+
+    #[test]
+    fn p2p_fifo_per_match_key() {
+        World::run(2, |comm| {
+            if comm.rank() == 0 {
+                for i in 0..10u64 {
+                    comm.send_slice(1, 9, &[i]);
+                }
+            } else {
+                for i in 0..10u64 {
+                    let got: Vec<u64> = comm.recv_vec(0, 9, 1);
+                    assert_eq!(got[0], i, "non-overtaking order violated");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn barrier_many_times() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        World::run(4, |comm| {
+            for round in 0..25 {
+                counter.fetch_add(1, Ordering::SeqCst);
+                comm.barrier();
+                assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 4);
+                comm.barrier();
+            }
+        });
+    }
+
+    #[test]
+    fn split_even_odd() {
+        World::run(5, |comm| {
+            let color = (comm.rank() % 2) as i64;
+            let sub = comm.split(color, comm.rank() as i64).unwrap();
+            if comm.rank() % 2 == 0 {
+                assert_eq!(sub.size(), 3);
+                assert_eq!(sub.rank(), comm.rank() / 2);
+            } else {
+                assert_eq!(sub.size(), 2);
+                assert_eq!(sub.rank(), comm.rank() / 2);
+            }
+            // Messages inside the subgroup use subgroup ranks.
+            if sub.size() == 3 {
+                let next = (sub.rank() + 1) % 3;
+                sub.send_slice(next, 0, &[sub.rank() as u32]);
+                let prev = (sub.rank() + 2) % 3;
+                let got: Vec<u32> = sub.recv_vec(prev, 0, 1);
+                assert_eq!(got[0] as usize, prev);
+            }
+        });
+    }
+
+    #[test]
+    fn split_undefined_color() {
+        World::run(4, |comm| {
+            let color = if comm.rank() < 2 { 0 } else { -1 };
+            let sub = comm.split(color, 0);
+            assert_eq!(sub.is_some(), comm.rank() < 2);
+        });
+    }
+
+    #[test]
+    fn split_key_reorders() {
+        World::run(4, |comm| {
+            // Reverse rank order via key.
+            let sub = comm.split(0, -(comm.rank() as i64)).unwrap();
+            assert_eq!(sub.rank(), comm.size() - 1 - comm.rank());
+        });
+    }
+
+    #[test]
+    fn repeated_splits() {
+        World::run(4, |comm| {
+            for _ in 0..20 {
+                let sub = comm.split((comm.rank() % 2) as i64, 0).unwrap();
+                assert_eq!(sub.size(), 2);
+            }
+        });
+    }
+
+    #[test]
+    fn dup_isolates_traffic() {
+        World::run(2, |comm| {
+            let d = comm.dup();
+            if comm.rank() == 0 {
+                comm.send_slice(1, 3, &[1u8]);
+                d.send_slice(1, 3, &[2u8]);
+            } else {
+                // Same (src, tag) but different communicators.
+                let on_dup: Vec<u8> = d.recv_vec(0, 3, 1);
+                let on_parent: Vec<u8> = comm.recv_vec(0, 3, 1);
+                assert_eq!(on_dup, vec![2]);
+                assert_eq!(on_parent, vec![1]);
+            }
+        });
+    }
+
+    #[test]
+    fn node_placement() {
+        assert_eq!(node_of(0, 16), 0);
+        assert_eq!(node_of(15, 16), 0);
+        assert_eq!(node_of(16, 16), 1);
+        assert_eq!(node_of(5, 1), 5);
+    }
+}

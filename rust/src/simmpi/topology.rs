@@ -1,0 +1,210 @@
+//! Cartesian process topologies (`MPI_DIMS_CREATE`, `MPI_CART_CREATE`,
+//! `MPI_CART_SUB`) — §3.4 of the paper, including the Listing-4 idiom
+//! ([`subcomms`]) that carves a grid into its one-dimensional direction
+//! subgroups for use by the pencil / higher-dimensional decompositions.
+
+use super::comm::Comm;
+
+/// Balanced factorization of `nprocs` over `ndims` dimensions
+/// (`MPI_DIMS_CREATE` semantics: dims non-increasing, product == nprocs,
+/// as close to equal as possible).
+pub fn dims_create(nprocs: usize, ndims: usize) -> Vec<usize> {
+    assert!(nprocs > 0 && ndims > 0, "dims_create: positive arguments required");
+    let mut dims = vec![1usize; ndims];
+    // Prime-factorize nprocs, largest factor first, and greedily assign each
+    // factor to the currently smallest dimension.
+    let mut factors = Vec::new();
+    let mut n = nprocs;
+    let mut f = 2usize;
+    while f * f <= n {
+        while n % f == 0 {
+            factors.push(f);
+            n /= f;
+        }
+        f += 1;
+    }
+    if n > 1 {
+        factors.push(n);
+    }
+    factors.sort_unstable_by(|a, b| b.cmp(a));
+    for f in factors {
+        let i = (0..ndims).min_by_key(|&i| dims[i]).unwrap();
+        dims[i] *= f;
+    }
+    dims.sort_unstable_by(|a, b| b.cmp(a));
+    dims
+}
+
+/// A communicator with an attached Cartesian topology (row-major rank
+/// ordering, non-periodic — the FFT redistributions never need wraparound).
+pub struct CartComm {
+    comm: Comm,
+    dims: Vec<usize>,
+    coords: Vec<usize>,
+}
+
+impl CartComm {
+    /// `MPI_CART_CREATE` over all ranks of `comm`. `dims` must multiply to
+    /// `comm.size()`.
+    pub fn create(comm: &Comm, dims: &[usize]) -> CartComm {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            comm.size(),
+            "cart_create: dims product != comm size"
+        );
+        let comm = comm.dup();
+        let coords = rank_to_coords(comm.rank(), dims);
+        CartComm { comm, dims: dims.to_vec(), coords }
+    }
+
+    /// The underlying communicator.
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    /// Grid extents.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// This rank's grid coordinates.
+    pub fn coords(&self) -> &[usize] {
+        &self.coords
+    }
+
+    /// `MPI_CART_SUB`: keep the dimensions flagged in `remain`, collapsing
+    /// the rest; returns the subgroup containing the caller.
+    pub fn sub(&self, remain: &[bool]) -> Comm {
+        assert_eq!(remain.len(), self.dims.len(), "cart_sub: remain length mismatch");
+        // Color = coordinates along dropped dims; key = linearized coords
+        // along kept dims (row-major), matching MPI's rank ordering.
+        let mut color = 0i64;
+        let mut key = 0i64;
+        for i in 0..self.dims.len() {
+            if remain[i] {
+                key = key * self.dims[i] as i64 + self.coords[i] as i64;
+            } else {
+                color = color * self.dims[i] as i64 + self.coords[i] as i64;
+            }
+        }
+        self.comm.split(color, key).expect("cart_sub: split returned None")
+    }
+}
+
+/// Row-major rank -> coordinates.
+pub fn rank_to_coords(rank: usize, dims: &[usize]) -> Vec<usize> {
+    let mut coords = vec![0usize; dims.len()];
+    let mut r = rank;
+    for i in (0..dims.len()).rev() {
+        coords[i] = r % dims[i];
+        r /= dims[i];
+    }
+    coords
+}
+
+/// Row-major coordinates -> rank.
+pub fn coords_to_rank(coords: &[usize], dims: &[usize]) -> usize {
+    coords.iter().zip(dims).fold(0, |acc, (&c, &d)| acc * d + c)
+}
+
+/// Listing 4 of the paper: build a `ndims`-dimensional Cartesian grid over
+/// `comm` (extents from [`dims_create`]) and return the one-dimensional
+/// direction subgroup communicators `P_0, ..., P_{ndims-1}` for this rank.
+///
+/// `P_i` varies coordinate `i` while holding all others fixed — the process
+/// groups over which the pencil/general decompositions redistribute.
+pub fn subcomms(comm: &Comm, ndims: usize) -> Vec<Comm> {
+    let dims = dims_create(comm.size(), ndims);
+    subcomms_with_dims(comm, &dims)
+}
+
+/// [`subcomms`] with caller-chosen grid extents.
+pub fn subcomms_with_dims(comm: &Comm, dims: &[usize]) -> Vec<Comm> {
+    let cart = CartComm::create(comm, dims);
+    (0..dims.len())
+        .map(|i| {
+            let remain: Vec<bool> = (0..dims.len()).map(|j| j == i).collect();
+            cart.sub(&remain)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simmpi::World;
+
+    #[test]
+    fn dims_create_balanced() {
+        assert_eq!(dims_create(12, 2), vec![4, 3]);
+        assert_eq!(dims_create(16, 2), vec![4, 4]);
+        assert_eq!(dims_create(8, 3), vec![2, 2, 2]);
+        assert_eq!(dims_create(24, 3), vec![4, 3, 2]);
+        assert_eq!(dims_create(7, 2), vec![7, 1]);
+        assert_eq!(dims_create(1, 3), vec![1, 1, 1]);
+        assert_eq!(dims_create(36, 2), vec![6, 6]);
+    }
+
+    #[test]
+    fn dims_create_product_invariant() {
+        for n in 1..=64 {
+            for d in 1..=4 {
+                let dims = dims_create(n, d);
+                assert_eq!(dims.iter().product::<usize>(), n, "n={n} d={d}");
+                assert!(dims.windows(2).all(|w| w[0] >= w[1]), "non-increasing: {dims:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let dims = [3, 4, 5];
+        for r in 0..60 {
+            let c = rank_to_coords(r, &dims);
+            assert_eq!(coords_to_rank(&c, &dims), r);
+            assert!(c.iter().zip(&dims).all(|(&ci, &di)| ci < di));
+        }
+    }
+
+    #[test]
+    fn cart_sub_groups_match_fig3() {
+        // The paper's Fig. 3: 12 processes on a 3x4 grid. P0 varies the first
+        // coordinate (|P0| = 3), P1 the second (|P1| = 4).
+        World::run(12, |comm| {
+            let cart = CartComm::create(&comm, &[3, 4]);
+            let p0 = cart.sub(&[true, false]);
+            let p1 = cart.sub(&[false, true]);
+            assert_eq!(p0.size(), 3);
+            assert_eq!(p1.size(), 4);
+            // Subgroup rank equals the corresponding grid coordinate.
+            assert_eq!(p0.rank(), cart.coords()[0]);
+            assert_eq!(p1.rank(), cart.coords()[1]);
+        });
+    }
+
+    #[test]
+    fn subcomms_listing4() {
+        World::run(8, |comm| {
+            let subs = subcomms(&comm, 3); // dims_create(8,3) = [2,2,2]
+            assert_eq!(subs.len(), 3);
+            for s in &subs {
+                assert_eq!(s.size(), 2);
+            }
+        });
+    }
+
+    #[test]
+    fn cart_sub_traffic_stays_in_group() {
+        World::run(6, |comm| {
+            let cart = CartComm::create(&comm, &[2, 3]);
+            let rows = cart.sub(&[false, true]); // vary second coord, size 3
+            // Ring within the row group.
+            let nxt = (rows.rank() + 1) % rows.size();
+            rows.send_slice(nxt, 1, &[cart.coords()[0] as u64]);
+            let prv = (rows.rank() + rows.size() - 1) % rows.size();
+            let got: Vec<u64> = rows.recv_vec(prv, 1, 1);
+            // Everyone in my row shares my first coordinate.
+            assert_eq!(got[0] as usize, cart.coords()[0]);
+        });
+    }
+}

@@ -1,0 +1,255 @@
+//! Integration tests: the distributed FFT against a serial reference, for
+//! every decomposition the paper exercises (slab, pencil, 3-D grid on 4-D
+//! data — Appendices A and B), both transform kinds and both
+//! redistribution methods.
+
+use a2wfft::fft::{fft_axis, max_abs_diff, Complex64, Direction, NativeFft, Planner};
+use a2wfft::pfft::{Kind, PfftPlan, RedistMethod};
+use a2wfft::simmpi::World;
+
+/// Deterministic global test field.
+fn field(gidx: usize) -> Complex64 {
+    let x = gidx as f64;
+    Complex64::new((x * 0.37).sin() + 0.25 * (x * 0.11).cos(), (x * 0.23).cos() - 0.5)
+}
+
+/// Linear global index from a multi-index.
+fn lin(global: &[usize], idx: &[usize]) -> usize {
+    idx.iter().zip(global).fold(0, |acc, (&i, &n)| acc * n + i)
+}
+
+/// Fill this rank's window of the global complex array.
+fn fill_local(global: &[usize], window: &[(usize, usize)]) -> Vec<Complex64> {
+    let total: usize = window.iter().map(|&(_, l)| l).product();
+    let d = global.len();
+    (0..total)
+        .map(|k| {
+            let mut rem = k;
+            let mut idx = vec![0usize; d];
+            for a in (0..d).rev() {
+                idx[a] = window[a].0 + rem % window[a].1;
+                rem /= window[a].1;
+            }
+            field(lin(global, &idx))
+        })
+        .collect()
+}
+
+/// Serial full ND forward transform of the deterministic field.
+fn serial_reference(global: &[usize], dir: Direction) -> Vec<Complex64> {
+    let total: usize = global.iter().product();
+    let mut data: Vec<Complex64> = (0..total).map(field).collect();
+    let mut planner = Planner::new();
+    let axes: Vec<usize> = (0..global.len()).collect();
+    for &a in axes.iter().rev() {
+        fft_axis(&mut planner, &mut data, global, a, dir);
+    }
+    data
+}
+
+/// Extract a window from a global array.
+fn window_of(global: &[usize], data: &[Complex64], window: &[(usize, usize)]) -> Vec<Complex64> {
+    let d = global.len();
+    let total: usize = window.iter().map(|&(_, l)| l).product();
+    (0..total)
+        .map(|k| {
+            let mut rem = k;
+            let mut idx = vec![0usize; d];
+            for a in (0..d).rev() {
+                idx[a] = window[a].0 + rem % window[a].1;
+                rem /= window[a].1;
+            }
+            data[lin(global, &idx)]
+        })
+        .collect()
+}
+
+/// Forward + roundtrip check for a c2c plan against the serial reference.
+fn check_c2c(global: &[usize], grid_ndims: usize, nprocs: usize, method: RedistMethod) {
+    let global = global.to_vec();
+    World::run(nprocs, move |comm| {
+        let dims = a2wfft::simmpi::dims_create(comm.size(), grid_ndims);
+        let mut plan = PfftPlan::with_dims(&comm, &global, &dims, Kind::C2c, method);
+        let mut eng = NativeFft::new();
+        let input = fill_local(&global, &plan.input_window());
+        let mut output = vec![Complex64::ZERO; plan.output_len()];
+        plan.forward(&mut eng, &input, &mut output);
+        // Compare against this rank's window of the serial reference.
+        let reference = serial_reference(&global, Direction::Forward);
+        let want = window_of(&global, &reference, &plan.output_window());
+        let scale: f64 = global.iter().product::<usize>() as f64;
+        let err = max_abs_diff(&output, &want) / scale.max(1.0);
+        assert!(err < 1e-12, "rank {}: forward err {err}", comm.rank());
+        // Roundtrip.
+        let mut back = vec![Complex64::ZERO; plan.input_len()];
+        plan.backward(&mut eng, &output, &mut back);
+        let err = max_abs_diff(&back, &input);
+        assert!(err < 1e-10, "rank {}: roundtrip err {err}", comm.rank());
+        // Timers recorded something.
+        assert!(plan.timers.fft > 0.0);
+        if comm.size() > 1 {
+            assert!(plan.timers.redist > 0.0);
+        }
+    });
+}
+
+#[test]
+fn slab_3d_c2c() {
+    check_c2c(&[8, 12, 10], 1, 4, RedistMethod::Alltoallw);
+}
+
+#[test]
+fn slab_3d_c2c_traditional() {
+    check_c2c(&[8, 12, 10], 1, 4, RedistMethod::Traditional);
+}
+
+#[test]
+fn slab_3d_uneven() {
+    check_c2c(&[7, 9, 5], 1, 3, RedistMethod::Alltoallw);
+}
+
+#[test]
+fn pencil_3d_c2c() {
+    check_c2c(&[8, 12, 10], 2, 6, RedistMethod::Alltoallw);
+}
+
+#[test]
+fn pencil_3d_c2c_traditional() {
+    check_c2c(&[8, 12, 10], 2, 6, RedistMethod::Traditional);
+}
+
+#[test]
+fn pencil_3d_uneven_grid() {
+    // 7 x 9 x 5 over a 3 x 2 grid: nothing divides evenly.
+    check_c2c(&[7, 9, 5], 2, 6, RedistMethod::Alltoallw);
+}
+
+#[test]
+fn pencil_4d_c2c() {
+    // 4-D array on a 2-D grid.
+    check_c2c(&[6, 8, 4, 5], 2, 4, RedistMethod::Alltoallw);
+}
+
+#[test]
+fn grid3d_4d_c2c_appendix_b() {
+    // The paper's Appendix B shape class: 4-D array, 3-D process grid.
+    check_c2c(&[6, 6, 6, 6], 3, 8, RedistMethod::Alltoallw);
+}
+
+#[test]
+fn grid3d_4d_uneven() {
+    check_c2c(&[5, 7, 6, 4], 3, 8, RedistMethod::Traditional);
+}
+
+#[test]
+fn slab_2d_c2c() {
+    check_c2c(&[16, 12], 1, 4, RedistMethod::Alltoallw);
+}
+
+#[test]
+fn single_rank_matches_serial() {
+    check_c2c(&[4, 6, 8], 1, 1, RedistMethod::Alltoallw);
+}
+
+#[test]
+fn methods_agree_bitwise() {
+    // The two redistribution methods must give *identical* spectra.
+    let global = vec![8usize, 12, 10];
+    let outs = World::run(6, |comm| {
+        let mut eng = NativeFft::new();
+        let mut res = Vec::new();
+        for method in [RedistMethod::Alltoallw, RedistMethod::Traditional] {
+            let mut plan = PfftPlan::with_dims(&comm, &global, &[3, 2], Kind::C2c, method);
+            let input = fill_local(&global, &plan.input_window());
+            let mut output = vec![Complex64::ZERO; plan.output_len()];
+            plan.forward(&mut eng, &input, &mut output);
+            res.push(output);
+        }
+        let eq = res[0]
+            .iter()
+            .zip(&res[1])
+            .all(|(a, b)| a.re.to_bits() == b.re.to_bits() && a.im.to_bits() == b.im.to_bits());
+        assert!(eq, "rank {}: methods differ bitwise", comm.rank());
+        true
+    });
+    assert!(outs.into_iter().all(|x| x));
+}
+
+#[test]
+fn r2c_pencil_matches_serial() {
+    let global = vec![8usize, 6, 10];
+    World::run(4, |comm| {
+        let mut plan = PfftPlan::with_dims(&comm, &global, &[2, 2], Kind::R2c, RedistMethod::Alltoallw);
+        let mut eng = NativeFft::new();
+        // Real input: the real part of the test field.
+        let win = plan.input_window();
+        let input: Vec<f64> = fill_local(&global, &win).iter().map(|c| c.re).collect();
+        let mut output = vec![Complex64::ZERO; plan.output_len()];
+        plan.forward_r2c(&mut eng, &input, &mut output);
+        // Serial reference: full c2c of the real field, truncated last axis.
+        let total: usize = global.iter().product();
+        let mut reference: Vec<Complex64> =
+            (0..total).map(|g| Complex64::new(field(g).re, 0.0)).collect();
+        let mut planner = Planner::new();
+        for a in (0..3).rev() {
+            fft_axis(&mut planner, &mut reference, &global, a, Direction::Forward);
+        }
+        let global_c = vec![global[0], global[1], global[2] / 2 + 1];
+        // Build the truncated global reference.
+        let mut ref_c = vec![Complex64::ZERO; global_c.iter().product()];
+        for i0 in 0..global[0] {
+            for i1 in 0..global[1] {
+                for k in 0..global_c[2] {
+                    ref_c[lin(&global_c, &[i0, i1, k])] = reference[lin(&global, &[i0, i1, k])];
+                }
+            }
+        }
+        let want = window_of(&global_c, &ref_c, &plan.output_window());
+        let err = max_abs_diff(&output, &want) / total as f64;
+        assert!(err < 1e-12, "rank {}: r2c err {err}", comm.rank());
+        // Roundtrip c2r.
+        let mut back = vec![0.0f64; plan.input_len()];
+        plan.backward_c2r(&mut eng, &output, &mut back);
+        let err =
+            input.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+        assert!(err < 1e-10, "rank {}: c2r roundtrip err {err}", comm.rank());
+    });
+}
+
+#[test]
+fn r2c_slab_odd_last_axis() {
+    let global = vec![6usize, 4, 9];
+    World::run(3, |comm| {
+        let mut plan = PfftPlan::with_dims(&comm, &global, &[3], Kind::R2c, RedistMethod::Alltoallw);
+        let mut eng = NativeFft::new();
+        let win = plan.input_window();
+        let input: Vec<f64> = fill_local(&global, &win).iter().map(|c| c.re).collect();
+        let mut output = vec![Complex64::ZERO; plan.output_len()];
+        plan.forward_r2c(&mut eng, &input, &mut output);
+        let mut back = vec![0.0f64; plan.input_len()];
+        plan.backward_c2r(&mut eng, &output, &mut back);
+        let err = input.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+        assert!(err < 1e-10, "rank {}: odd c2r roundtrip err {err}", comm.rank());
+    });
+}
+
+#[test]
+fn linearity_of_distributed_transform() {
+    let global = vec![8usize, 8, 6];
+    World::run(4, |comm| {
+        let mut plan = PfftPlan::with_dims(&comm, &global, &[2, 2], Kind::C2c, RedistMethod::Alltoallw);
+        let mut eng = NativeFft::new();
+        let x = fill_local(&global, &plan.input_window());
+        let y: Vec<Complex64> = x.iter().map(|c| c.mul_i() + Complex64::new(0.5, 0.0)).collect();
+        let mut fx = vec![Complex64::ZERO; plan.output_len()];
+        let mut fy = vec![Complex64::ZERO; plan.output_len()];
+        let mut fxy = vec![Complex64::ZERO; plan.output_len()];
+        plan.forward(&mut eng, &x, &mut fx);
+        plan.forward(&mut eng, &y, &mut fy);
+        let xy: Vec<Complex64> = x.iter().zip(&y).map(|(&a, &b)| a + b.scale(2.0)).collect();
+        plan.forward(&mut eng, &xy, &mut fxy);
+        let want: Vec<Complex64> = fx.iter().zip(&fy).map(|(&a, &b)| a + b.scale(2.0)).collect();
+        let scale: f64 = global.iter().product::<usize>() as f64;
+        assert!(max_abs_diff(&fxy, &want) / scale < 1e-12);
+    });
+}

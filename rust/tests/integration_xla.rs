@@ -1,0 +1,64 @@
+//! Three-layer integration: the distributed transform with serial-FFT
+//! leaves on the AOT JAX+Pallas artifacts (PJRT), validated against the
+//! native f64 engine. Skips gracefully when `make artifacts` has not run.
+
+use a2wfft::fft::{max_abs_diff, Complex64, NativeFft};
+use a2wfft::pfft::{Kind, PfftPlan, RedistMethod};
+use a2wfft::runtime::XlaFftEngine;
+use a2wfft::simmpi::World;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn distributed_c2c_xla_vs_native() {
+    if !artifacts_dir().join("manifest.tsv").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let global = vec![16usize, 32, 16];
+    World::run(2, |comm| {
+        let mut plan =
+            PfftPlan::with_dims(&comm, &global, &[2], Kind::C2c, RedistMethod::Alltoallw);
+        let input: Vec<Complex64> = (0..plan.input_len())
+            .map(|k| Complex64::new(((k * 5) % 11) as f64 / 11.0, ((k * 3) % 7) as f64 / 7.0))
+            .collect();
+        let mut native = NativeFft::new();
+        let mut want = vec![Complex64::ZERO; plan.output_len()];
+        plan.forward(&mut native, &input, &mut want);
+        let mut xeng = XlaFftEngine::load(&artifacts_dir()).expect("artifacts");
+        let mut got = vec![Complex64::ZERO; plan.output_len()];
+        plan.forward(&mut xeng, &input, &mut got);
+        let err = max_abs_diff(&want, &got);
+        assert!(err < 2e-2, "rank {}: engines diverged: {err}", comm.rank());
+        // Full roundtrip on the XLA engine alone.
+        let mut back = vec![Complex64::ZERO; plan.input_len()];
+        plan.backward(&mut xeng, &got, &mut back);
+        let rerr = max_abs_diff(&input, &back);
+        assert!(rerr < 1e-3, "rank {}: xla roundtrip: {rerr}", comm.rank());
+    });
+}
+
+#[test]
+fn distributed_r2c_on_xla_engine() {
+    if !artifacts_dir().join("manifest.tsv").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let global = vec![16usize, 16, 32];
+    World::run(4, |comm| {
+        let mut plan =
+            PfftPlan::with_dims(&comm, &global, &[2, 2], Kind::R2c, RedistMethod::Alltoallw);
+        let mut xeng = XlaFftEngine::load(&artifacts_dir()).expect("artifacts");
+        let input: Vec<f64> =
+            (0..plan.input_len()).map(|k| ((k % 19) as f64 - 9.0) / 9.0).collect();
+        let mut spec = vec![Complex64::ZERO; plan.output_len()];
+        plan.forward_r2c(&mut xeng, &input, &mut spec);
+        let mut back = vec![0.0f64; plan.input_len()];
+        plan.backward_c2r(&mut xeng, &spec, &mut back);
+        let err =
+            input.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+        assert!(err < 1e-4, "rank {}: r2c/c2r roundtrip on xla engine: {err}", comm.rank());
+    });
+}

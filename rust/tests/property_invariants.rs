@@ -1,0 +1,217 @@
+//! Property-based tests (deterministic xorshift sweeps — the offline crate
+//! set has no proptest) over the system's core invariants:
+//!
+//! * decomposition: coverage, balance, monotone starts — for arbitrary N, M;
+//! * datatype engine: pack/unpack roundtrip for random subarrays; packed
+//!   size consistency; run-merging equivalence with the naive odometer;
+//! * redistribution: exchange followed by its reverse is the identity, and
+//!   the new method agrees element-wise with the traditional baseline, for
+//!   random shapes / axis pairs / group sizes;
+//! * serial FFT: random lengths vs the O(N^2) DFT.
+
+use a2wfft::decomp::{decompose, decompose_all};
+use a2wfft::fft::{max_abs_diff, naive_dft, Complex64, Direction, FftPlan};
+use a2wfft::redistribute::{exchange, traditional_exchange};
+use a2wfft::simmpi::datatype::Datatype;
+use a2wfft::simmpi::World;
+
+/// Small deterministic PRNG (xorshift64*).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+    }
+}
+
+#[test]
+fn prop_decompose_invariants() {
+    let mut rng = Rng::new(1);
+    for _ in 0..500 {
+        let n = rng.below(2000);
+        let m = rng.range(1, 64);
+        let parts = decompose_all(n, m);
+        let mut covered = 0usize;
+        let mut prev_len = usize::MAX;
+        for (p, &(len, start)) in parts.iter().enumerate() {
+            assert_eq!(start, covered, "n={n} m={m} p={p}");
+            covered += len;
+            assert!(len <= prev_len, "lengths must be non-increasing");
+            prev_len = len;
+            assert_eq!((len, start), decompose(n, m, p));
+        }
+        assert_eq!(covered, n);
+        // Balance: max - min <= 1.
+        let lens: Vec<usize> = parts.iter().map(|&(l, _)| l).collect();
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+}
+
+#[test]
+fn prop_subarray_pack_unpack_roundtrip() {
+    let mut rng = Rng::new(2);
+    for case in 0..200 {
+        let d = rng.range(1, 4);
+        let sizes: Vec<usize> = (0..d).map(|_| rng.range(1, 9)).collect();
+        let subsizes: Vec<usize> = sizes.iter().map(|&s| rng.range(0, s)).collect();
+        let starts: Vec<usize> =
+            sizes.iter().zip(&subsizes).map(|(&s, &ss)| rng.below(s - ss + 1)).collect();
+        let elem = [1usize, 2, 4, 8][rng.below(4)];
+        let dt = Datatype::subarray(&sizes, &subsizes, &starts, elem)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let total = sizes.iter().product::<usize>() * elem;
+        let src: Vec<u8> = (0..total).map(|_| rng.next_u64() as u8).collect();
+        let packed = dt.pack_to_vec(&src);
+        assert_eq!(packed.len(), dt.packed_size());
+        // Unpack into a clean buffer, re-pack: must match.
+        let mut dst = vec![0u8; total];
+        dt.unpack(&packed, &mut dst);
+        let repacked = dt.pack_to_vec(&dst);
+        assert_eq!(packed, repacked, "case {case}: pack(unpack(x)) != x");
+        // Run decomposition bookkeeping.
+        let runs = dt.runs();
+        assert_eq!(runs.count() * runs.run_len, dt.packed_size(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_runs_match_naive_odometer() {
+    let mut rng = Rng::new(3);
+    for _ in 0..100 {
+        let d = rng.range(2, 5);
+        let sizes: Vec<usize> = (0..d).map(|_| rng.range(1, 6)).collect();
+        let subsizes: Vec<usize> = sizes.iter().map(|&s| rng.range(1, s)).collect();
+        let starts: Vec<usize> =
+            sizes.iter().zip(&subsizes).map(|(&s, &ss)| rng.below(s - ss + 1)).collect();
+        let dt = Datatype::subarray(&sizes, &subsizes, &starts, 1).unwrap();
+        // Collect all selected offsets via the run decomposition.
+        let runs = dt.runs();
+        let mut via_runs = Vec::new();
+        runs.for_each_offset(|o| via_runs.extend(o..o + runs.run_len));
+        // Naive enumeration in row-major order.
+        let mut naive = Vec::new();
+        let mut idx = vec![0usize; d];
+        loop {
+            let mut off = 0;
+            for a in 0..d {
+                off = off * sizes[a] + starts[a] + idx[a];
+            }
+            naive.push(off);
+            let mut a = d;
+            loop {
+                if a == 0 {
+                    break;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < subsizes[a] {
+                    break;
+                }
+                idx[a] = 0;
+            }
+            if idx.iter().all(|&i| i == 0) {
+                break;
+            }
+        }
+        assert_eq!(via_runs, naive, "sizes={sizes:?} sub={subsizes:?} starts={starts:?}");
+    }
+}
+
+#[test]
+fn prop_exchange_roundtrip_and_method_agreement() {
+    let mut rng = Rng::new(4);
+    for case in 0..25 {
+        let d = rng.range(2, 4);
+        let global: Vec<usize> = (0..d).map(|_| rng.range(2, 10)).collect();
+        let nprocs = rng.range(2, 5);
+        let axis_a = rng.below(d);
+        let mut axis_b = rng.below(d);
+        while axis_b == axis_a {
+            axis_b = rng.below(d);
+        }
+        let seed = rng.next_u64();
+        let global_c = global.clone();
+        World::run(nprocs, move |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let mut sizes_a = global_c.clone();
+            let mut sizes_b = global_c.clone();
+            sizes_a[axis_b] = decompose(global_c[axis_b], m, me).0;
+            sizes_b[axis_a] = decompose(global_c[axis_a], m, me).0;
+            let elems_a: usize = sizes_a.iter().product();
+            let mut lr = Rng::new(seed ^ (me as u64 + 1));
+            let a: Vec<f64> = (0..elems_a).map(|_| lr.f64()).collect();
+            let mut b1 = vec![0.0f64; sizes_b.iter().product()];
+            let mut b2 = vec![0.0f64; sizes_b.iter().product()];
+            exchange(&comm, &a, &sizes_a, axis_a, &mut b1, &sizes_b, axis_b);
+            traditional_exchange(&comm, &a, &sizes_a, axis_a, &mut b2, &sizes_b, axis_b);
+            assert_eq!(b1, b2, "case {case}: methods disagree");
+            // Reverse exchange restores A.
+            let mut back = vec![0.0f64; elems_a];
+            exchange(&comm, &b1, &sizes_b, axis_b, &mut back, &sizes_a, axis_a);
+            assert_eq!(a, back, "case {case}: roundtrip failed");
+        });
+    }
+}
+
+#[test]
+fn prop_fft_matches_naive_dft_random_lengths() {
+    let mut rng = Rng::new(5);
+    for _ in 0..40 {
+        let n = rng.range(1, 300);
+        let x: Vec<Complex64> = (0..n).map(|_| Complex64::new(rng.f64(), rng.f64())).collect();
+        let plan = FftPlan::new(n);
+        let mut y = x.clone();
+        plan.process(&mut y, Direction::Forward);
+        let want = naive_dft(&x, Direction::Forward);
+        let err = max_abs_diff(&y, &want) / (n as f64).max(1.0);
+        assert!(err < 1e-11, "n={n}: err={err}");
+        plan.process(&mut y, Direction::Backward);
+        assert!(max_abs_diff(&x, &y) < 1e-10, "n={n}: roundtrip");
+    }
+}
+
+#[test]
+fn prop_alltoallw_conservation() {
+    // Total "mass" (sum of all elements) is conserved by any exchange.
+    let mut rng = Rng::new(6);
+    for _ in 0..10 {
+        let nprocs = rng.range(2, 6);
+        let n0 = rng.range(nprocs, 12);
+        let n1 = rng.range(nprocs, 12);
+        let global = [n0, n1, rng.range(1, 6)];
+        World::run(nprocs, move |comm| {
+            use a2wfft::simmpi::collective::ReduceOp;
+            let m = comm.size();
+            let me = comm.rank();
+            let sizes_a = [decompose(global[0], m, me).0, global[1], global[2]];
+            let sizes_b = [global[0], decompose(global[1], m, me).0, global[2]];
+            let a: Vec<f64> =
+                (0..sizes_a.iter().product::<usize>()).map(|k| (me * 31 + k) as f64).collect();
+            let mut b = vec![0.0f64; sizes_b.iter().product()];
+            exchange(&comm, &a, &sizes_a, 1, &mut b, &sizes_b, 0);
+            let mut sums = [a.iter().sum::<f64>(), b.iter().sum::<f64>()];
+            comm.allreduce_f64(&mut sums, ReduceOp::Sum);
+            assert!((sums[0] - sums[1]).abs() < 1e-9, "mass not conserved");
+        });
+    }
+}
