@@ -1,0 +1,150 @@
+//! Ablation: the pipelined, compute/comm-overlapped redistribution engine.
+//!
+//! Three comparisons, on identical substrate:
+//!
+//! 1. **redistribution-only** — one-shot `exchange` (datatypes rebuilt per
+//!    call) vs a reused blocking `RedistPlan` vs a persistent
+//!    `alltoallw_init` plan (flattening cached) vs `PipelinedRedistPlan`
+//!    at several overlap depths;
+//! 2. **end-to-end transforms** — `ExecMode::Blocking` vs
+//!    `ExecMode::Pipelined{depth}` on slab and pencil decompositions (the
+//!    overlap hides exchange time behind per-chunk serial FFTs);
+//! 3. **netmodel** — the paper-scale pipeline model
+//!    (`simulate_pipelined`), pricing overlap as max(comm, compute) per
+//!    chunk plus the k-fold per-message latency tax.
+
+use std::time::Instant;
+
+use a2wfft::coordinator::benchkit::{banner, real_header, real_row_exec};
+use a2wfft::coordinator::EngineKind;
+use a2wfft::decomp::decompose;
+use a2wfft::netmodel::{Library, MachineParams, Scenario};
+use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
+use a2wfft::redistribute::{
+    exchange, subarray_types, PipelinedRedistPlan, RedistPlan,
+};
+use a2wfft::simmpi::{Comm, World};
+
+/// Max-across-ranks seconds per iteration of `f`, best of 3 samples.
+fn timed_collective<F: FnMut()>(comm: &Comm, iters: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        comm.barrier();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        let mut t = [dt];
+        comm.allreduce_f64(&mut t, a2wfft::simmpi::collective::ReduceOp::Max);
+        best = best.min(t[0]);
+    }
+    best
+}
+
+fn redist_only_section(global: [usize; 3], ranks: usize) {
+    banner(&format!(
+        "redistribution-only: {global:?} over {ranks} ranks (axis 1 -> 0)"
+    ));
+    println!("schedule\tseconds_per_exchange\tvs_oneshot");
+    let rows = World::run(ranks, move |comm| {
+        let m = comm.size();
+        let me = comm.rank();
+        let sizes_a = [global[0], decompose(global[1], m, me).0, global[2]];
+        let sizes_b = [decompose(global[0], m, me).0, global[1], global[2]];
+        let a: Vec<f64> =
+            (0..sizes_a.iter().product::<usize>()).map(|k| (me * 131 + k) as f64).collect();
+        let mut b = vec![0.0f64; sizes_b.iter().product()];
+        let iters = 6;
+        // One-shot: rebuild the subarray datatypes on every call.
+        let t_oneshot = timed_collective(&comm, iters, || {
+            exchange(&comm, &a, &sizes_a, 0, &mut b, &sizes_b, 1);
+        });
+        // Reused blocking plan (datatypes built once, flattened per call).
+        let plan = RedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1);
+        let t_plan = timed_collective(&comm, iters, || plan.execute(&a, &mut b));
+        // Persistent collective plan (flattening cached in the plan).
+        let send_t = subarray_types(&sizes_a, 0, m, 8);
+        let recv_t = subarray_types(&sizes_b, 1, m, 8);
+        let pplan = comm.alltoallw_init(&send_t, &recv_t);
+        let t_persistent = timed_collective(&comm, iters, || pplan.execute_typed(&a, &mut b));
+        // Pipelined at several depths.
+        let mut piped = Vec::new();
+        for depth in [2usize, 4, 8] {
+            let pl = PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, depth, depth);
+            let t = timed_collective(&comm, iters, || pl.execute(&a, &mut b));
+            piped.push((depth, t));
+        }
+        (t_oneshot, t_plan, t_persistent, piped)
+    });
+    let (t_oneshot, t_plan, t_persistent, piped) = rows.into_iter().next().unwrap();
+    let rel = |t: f64| t_oneshot / t;
+    println!("oneshot(exchange)\t{t_oneshot:.6}\t1.00x");
+    println!("blocking-plan-reuse\t{t_plan:.6}\t{:.2}x", rel(t_plan));
+    println!("persistent(alltoallw_init)\t{t_persistent:.6}\t{:.2}x", rel(t_persistent));
+    for (depth, t) in piped {
+        println!("pipelined(depth={depth})\t{t:.6}\t{:.2}x", rel(t));
+    }
+}
+
+fn end_to_end_section() {
+    banner("end-to-end: blocking vs pipelined transforms (simmpi substrate)");
+    real_header();
+    for (global, ranks, grid_ndims, label) in [
+        ([64usize, 64, 64], 4usize, 1usize, "slab"),
+        ([64, 64, 64], 8, 2, "pencil"),
+    ] {
+        for (mode_label, exec) in [
+            ("blocking", ExecMode::Blocking),
+            ("pipelined-d2", ExecMode::Pipelined { depth: 2 }),
+            ("pipelined-d4", ExecMode::Pipelined { depth: 4 }),
+            ("pipelined-d8", ExecMode::Pipelined { depth: 8 }),
+        ] {
+            real_row_exec(
+                &format!("{label}/{mode_label}"),
+                &global,
+                ranks,
+                grid_ndims,
+                Kind::C2c,
+                RedistMethod::Alltoallw,
+                EngineKind::Native,
+                exec,
+            );
+        }
+    }
+}
+
+fn netmodel_section() {
+    banner("netmodel: pipelined overlap at paper scale (700^3 r2c slab, distributed)");
+    println!("cores\tblocking_s\tpiped_k4_s\tpiped_k8_s\tpiped_k16_s\tbest_speedup");
+    let m = MachineParams::shaheen();
+    for cores in [8usize, 16, 32, 64] {
+        let sc = Scenario {
+            global: vec![700, 700, 700],
+            grid: vec![cores],
+            cores,
+            cores_per_node: 1, // distributed placement
+            r2c: true,
+        };
+        let blocking = m.simulate(Library::OursA2aw, &sc).total();
+        let ks: Vec<f64> = [4usize, 8, 16]
+            .iter()
+            .map(|&k| m.simulate_pipelined(Library::OursA2aw, &sc, k).total())
+            .collect();
+        let best = ks.iter().cloned().fold(f64::INFINITY, f64::min);
+        println!(
+            "{cores}\t{blocking:.4}\t{:.4}\t{:.4}\t{:.4}\t{:.2}x",
+            ks[0],
+            ks[1],
+            ks[2],
+            blocking / best
+        );
+    }
+}
+
+fn main() {
+    redist_only_section([48, 48, 48], 4);
+    redist_only_section([96, 96, 96], 8);
+    end_to_end_section();
+    netmodel_section();
+}

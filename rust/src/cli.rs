@@ -1,6 +1,18 @@
 //! Minimal dependency-free CLI argument handling (the offline crate set has
 //! no clap). Supports `--key value` / `--key=value` options and positional
 //! arguments, with typed accessors.
+//!
+//! The `repro run` subcommand understands, among others (see `repro help`
+//! for the full list):
+//!
+//! * `--exec blocking|pipelined` — redistribution execution mode
+//!   ([`crate::pfft::ExecMode`]): `blocking` issues one blocking
+//!   `ALLTOALLW` per redistribution (the paper's protocol); `pipelined`
+//!   routes every redistribution through the overlap engine
+//!   ([`crate::redistribute::PipelinedRedistPlan`]).
+//! * `--overlap-depth K` — chunk count and in-flight window of the
+//!   pipelined mode (default 4). `K = 1`, or a mesh with no free axis to
+//!   chunk (2-D arrays), falls back to blocking behaviour.
 
 use std::collections::HashMap;
 

@@ -10,7 +10,7 @@
 use crate::coordinator::config::{EngineKind, RunConfig};
 use crate::coordinator::driver::{run_config, RunReport};
 use crate::netmodel::figures::{FigRow, HEADER};
-use crate::pfft::{Kind, RedistMethod};
+use crate::pfft::{ExecMode, Kind, RedistMethod};
 
 /// Print a section banner.
 pub fn banner(title: &str) {
@@ -32,20 +32,42 @@ pub fn real_row(
     method: RedistMethod,
     engine: EngineKind,
 ) -> RunReport {
+    real_row_exec(label, global, ranks, grid_ndims, kind, method, engine, ExecMode::Blocking)
+}
+
+/// [`real_row`] with an explicit redistribution [`ExecMode`].
+#[allow(clippy::too_many_arguments)]
+pub fn real_row_exec(
+    label: &str,
+    global: &[usize],
+    ranks: usize,
+    grid_ndims: usize,
+    kind: Kind,
+    method: RedistMethod,
+    engine: EngineKind,
+    exec: ExecMode,
+) -> RunReport {
     let cfg = RunConfig {
         global: global.to_vec(),
         grid: Vec::new(),
         ranks,
         kind,
         method,
+        exec,
         engine,
         inner: 2,
         outer: 3,
     };
     let rep = run_config(&cfg, grid_ndims);
+    // Overlapped stages report in their own buckets; fold them into the
+    // fft/redist columns (redist column = *exposed* communication).
     println!(
         "{label}\t{ranks}\t{global:?}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1e}",
-        rep.total, rep.fft, rep.redist, rep.bytes, rep.max_err
+        rep.total,
+        rep.fft + rep.overlap_fft,
+        rep.redist + rep.overlap_comm,
+        rep.bytes,
+        rep.max_err
     );
     // The XLA engine carries f32 planes; the native engine is f64.
     let tol = match engine {

@@ -1,6 +1,6 @@
 //! Run configuration for the driver and CLI.
 
-use crate::pfft::{Kind, RedistMethod};
+use crate::pfft::{ExecMode, Kind, RedistMethod};
 
 /// Which serial FFT engine the ranks use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,6 +33,8 @@ pub struct RunConfig {
     pub kind: Kind,
     /// Redistribution method.
     pub method: RedistMethod,
+    /// Redistribution execution mode (blocking vs pipelined overlap).
+    pub exec: ExecMode,
     /// Serial engine.
     pub engine: EngineKind,
     /// Inner loop length (consecutive fwd+bwd pairs per timing sample).
@@ -49,6 +51,7 @@ impl Default for RunConfig {
             ranks: 4,
             kind: Kind::R2c,
             method: RedistMethod::Alltoallw,
+            exec: ExecMode::Blocking,
             engine: EngineKind::Native,
             inner: 3,
             outer: 5,

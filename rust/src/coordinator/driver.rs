@@ -16,10 +16,14 @@ use crate::simmpi::World;
 pub struct RunReport {
     /// Seconds per forward+backward pair.
     pub total: f64,
-    /// Serial FFT portion.
+    /// Serial FFT portion (non-overlapped stages).
     pub fft: f64,
-    /// Redistribution portion.
+    /// Redistribution portion (blocking stages).
     pub redist: f64,
+    /// Compute portion of pipelined (overlapped) stages.
+    pub overlap_fft: f64,
+    /// Exposed communication of pipelined stages.
+    pub overlap_comm: f64,
     /// Bytes exchanged per pair (summed over ranks).
     pub bytes: u64,
     /// Max roundtrip error observed (input vs forward+backward output).
@@ -51,7 +55,7 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
     let grid = cfg.resolved_grid(grid_ndims);
     let reports = World::run(cfg.ranks, |comm| {
         let mut plan =
-            PfftPlan::with_dims(&comm, &cfg.global, &grid, cfg.kind, cfg.method);
+            PfftPlan::with_exec(&comm, &cfg.global, &grid, cfg.kind, cfg.method, cfg.exec);
         let mut engine = make_engine(cfg.engine);
         // Deterministic input.
         let ilen = plan.input_len();
@@ -120,6 +124,8 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
             total: best,
             fft: best_timers.fft / cfg.inner as f64,
             redist: best_timers.redist / cfg.inner as f64,
+            overlap_fft: best_timers.overlap_fft / cfg.inner as f64,
+            overlap_comm: best_timers.overlap_comm / cfg.inner as f64,
             bytes: (bytes as f64 * scale) as u64,
         }
         .reduce_max(&comm);
@@ -128,7 +134,15 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
         (m, err[0])
     });
     let (m, err) = reports[0];
-    RunReport { total: m.total, fft: m.fft, redist: m.redist, bytes: m.bytes, max_err: err }
+    RunReport {
+        total: m.total,
+        fft: m.fft,
+        redist: m.redist,
+        overlap_fft: m.overlap_fft,
+        overlap_comm: m.overlap_comm,
+        bytes: m.bytes,
+        max_err: err,
+    }
 }
 
 #[cfg(test)]
@@ -165,5 +179,23 @@ mod tests {
         };
         let rep = run_config(&cfg, 2);
         assert!(rep.max_err < 1e-10);
+    }
+
+    #[test]
+    fn driver_runs_pipelined_overlap() {
+        use crate::pfft::ExecMode;
+        let cfg = RunConfig {
+            global: vec![16, 12, 10],
+            ranks: 4,
+            kind: Kind::R2c,
+            exec: ExecMode::Pipelined { depth: 3 },
+            inner: 1,
+            outer: 2,
+            ..Default::default()
+        };
+        let rep = run_config(&cfg, 1);
+        assert!(rep.max_err < 1e-10, "pipelined roundtrip err {}", rep.max_err);
+        // Overlapped stages report their time in the overlap buckets.
+        assert!(rep.overlap_fft + rep.overlap_comm > 0.0);
     }
 }

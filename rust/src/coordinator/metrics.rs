@@ -14,6 +14,10 @@ pub struct RankMetrics {
     pub total: f64,
     pub fft: f64,
     pub redist: f64,
+    /// Compute seconds inside pipelined (overlapped) stages.
+    pub overlap_fft: f64,
+    /// Exposed communication seconds of pipelined stages.
+    pub overlap_comm: f64,
     /// Bytes this rank shipped through redistributions.
     pub bytes: u64,
 }
@@ -22,11 +26,18 @@ impl RankMetrics {
     /// Max-reduce the times over `comm` (bytes are summed); every rank
     /// returns the reduced value.
     pub fn reduce_max(&self, comm: &Comm) -> RankMetrics {
-        let mut t = [self.total, self.fft, self.redist];
+        let mut t = [self.total, self.fft, self.redist, self.overlap_fft, self.overlap_comm];
         comm.allreduce_f64(&mut t, ReduceOp::Max);
         let mut b = [self.bytes];
         comm.allreduce_u64(&mut b, ReduceOp::Sum);
-        RankMetrics { total: t[0], fft: t[1], redist: t[2], bytes: b[0] }
+        RankMetrics {
+            total: t[0],
+            fft: t[1],
+            redist: t[2],
+            overlap_fft: t[3],
+            overlap_comm: t[4],
+            bytes: b[0],
+        }
     }
 }
 
@@ -43,6 +54,7 @@ mod tests {
                 fft: 10.0 - comm.rank() as f64,
                 redist: 1.0,
                 bytes: 100,
+                ..Default::default()
             };
             m.reduce_max(&comm)
         });

@@ -17,8 +17,12 @@
 //!   thread per rank) with communicators, Cartesian topologies, derived
 //!   datatypes (including **subarray** types) and the full collective set
 //!   (`alltoall`, `alltoallv`, **`alltoallw`**, …) backed by a real
-//!   pack/unpack datatype engine. This stands in for MPICH on the paper's
-//!   Cray XC40 (see `DESIGN.md` §3 for the substitution argument).
+//!   pack/unpack datatype engine, plus the MPI-3/4 **nonblocking**
+//!   (`ialltoallv`/`ialltoallw` with `Request::{test,wait}`/`waitall`) and
+//!   **persistent** (`alltoallw_init` → `start` → `wait`) collectives of
+//!   [`simmpi::nonblocking`], which cache the flattened datatype
+//!   representation across executions. This stands in for MPICH on the
+//!   paper's Cray XC40 (see `DESIGN.md` §3 for the substitution argument).
 //! * [`decomp`] — Alg. 1: balanced block-contiguous decompositions, and
 //!   local-shape computation for arbitrary alignments/grids.
 //! * [`distarray`] — the mpi4py-fft-style high-level `DistArray` with
@@ -27,11 +31,15 @@
 //!   datatype sequences and the one-call `alltoallw` exchange, plus the
 //!   *traditional* baseline (local transpose + `alltoallv`) for
 //!   head-to-head comparison (FFTW's transposed-out schedule is priced in
-//!   [`netmodel`]).
+//!   [`netmodel`]), and the **pipelined redistribution engine**
+//!   ([`redistribute::pipeline`]): chunked persistent `ialltoallw`
+//!   sub-exchanges overlapping communication with the serial FFT of
+//!   already-received chunks, bitwise identical to the one-shot exchange.
 //! * [`fft`] — a native serial FFT substrate (mixed-radix + Bluestein,
 //!   c2c/r2c/c2r, strided batched application) standing in for FFTW/MKL.
 //! * [`pfft`] — the parallel FFT driver: slab, pencil and general
-//!   `(d-1)`-dimensional decompositions, forward/backward, per-stage timers.
+//!   `(d-1)`-dimensional decompositions, forward/backward, per-stage timers,
+//!   and the `ExecMode` selector (blocking vs pipelined overlap).
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX+Pallas batched FFT
 //!   artifacts (`artifacts/*.hlo.txt`), pluggable as a serial FFT engine.
 //! * [`netmodel`] — an analytic performance model of the Shaheen II Cray

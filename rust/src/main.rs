@@ -15,7 +15,7 @@
 use a2wfft::cli::Args;
 use a2wfft::coordinator::{run_config, EngineKind, RunConfig};
 use a2wfft::netmodel::figures;
-use a2wfft::pfft::{Kind, RedistMethod};
+use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -37,10 +37,19 @@ fn print_help() {
          USAGE:\n\
          \x20 repro run [--global N,N,N] [--ranks R] [--grid G,G] [--kind r2c|c2c]\n\
          \x20           [--method alltoallw|traditional] [--engine native|xla]\n\
+         \x20           [--exec blocking|pipelined] [--overlap-depth K]\n\
          \x20           [--inner I] [--outer O]\n\
          \x20 repro figure <6|7|8|9|10|11>\n\
          \x20 repro selftest\n\
-         \x20 repro info"
+         \x20 repro info\n\
+         \n\
+         EXECUTION MODES (--exec):\n\
+         \x20 blocking   one blocking ALLTOALLW per redistribution (paper protocol)\n\
+         \x20 pipelined  split each redistribution into --overlap-depth chunks of\n\
+         \x20            persistent nonblocking ALLTOALLW exchanges and overlap the\n\
+         \x20            serial FFT of received chunks with in-flight communication\n\
+         \x20            (requires --method alltoallw; default depth 4; depth 1 or a\n\
+         \x20            2-D mesh falls back to blocking)"
     );
 }
 
@@ -67,27 +76,38 @@ fn cmd_run(args: &Args) {
         "xla" => EngineKind::Xla,
         other => panic!("--engine: unknown {other}"),
     };
+    let depth = args.get_usize("overlap-depth", 4);
+    let exec = match args.get("exec").unwrap_or("blocking") {
+        "blocking" | "block" => ExecMode::Blocking,
+        "pipelined" | "pipeline" | "overlap" => ExecMode::Pipelined { depth },
+        other => panic!("--exec: unknown {other} (blocking|pipelined)"),
+    };
     let cfg = RunConfig {
         global: global.clone(),
         grid,
         ranks,
         kind,
         method,
+        exec,
         engine,
         inner: args.get_usize("inner", 3),
         outer: args.get_usize("outer", 5),
     };
     let rep = run_config(&cfg, grid_ndims);
     println!(
-        "# global={global:?} ranks={ranks} kind={kind:?} method={method:?} engine={}",
+        "# global={global:?} ranks={ranks} kind={kind:?} method={method:?} exec={exec:?} engine={}",
         engine.name()
     );
-    println!("total_s\tfft_s\tredist_s\tbytes\tthroughput_pts_per_s\tmax_err");
     println!(
-        "{:.6}\t{:.6}\t{:.6}\t{}\t{:.3e}\t{:.3e}",
+        "total_s\tfft_s\tredist_s\toverlap_fft_s\toverlap_comm_s\tbytes\tthroughput_pts_per_s\tmax_err"
+    );
+    println!(
+        "{:.6}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.3e}\t{:.3e}",
         rep.total,
         rep.fft,
         rep.redist,
+        rep.overlap_fft,
+        rep.overlap_comm,
         rep.bytes,
         rep.throughput(&global),
         rep.max_err
@@ -117,17 +137,20 @@ fn cmd_figure(args: &Args) {
 }
 
 fn cmd_selftest() {
-    let cases: Vec<(Vec<usize>, usize, usize, Kind)> = vec![
-        (vec![16, 12, 10], 4, 1, Kind::C2c),
-        (vec![16, 12, 10], 4, 2, Kind::R2c),
-        (vec![8, 8, 8, 8], 8, 3, Kind::C2c),
+    let cases: Vec<(Vec<usize>, usize, usize, Kind, ExecMode)> = vec![
+        (vec![16, 12, 10], 4, 1, Kind::C2c, ExecMode::Blocking),
+        (vec![16, 12, 10], 4, 2, Kind::R2c, ExecMode::Blocking),
+        (vec![16, 12, 10], 4, 2, Kind::R2c, ExecMode::Pipelined { depth: 3 }),
+        (vec![8, 8, 8, 8], 8, 3, Kind::C2c, ExecMode::Blocking),
+        (vec![8, 8, 8, 8], 8, 3, Kind::C2c, ExecMode::Pipelined { depth: 4 }),
     ];
     let mut ok = true;
-    for (global, ranks, grid_ndims, kind) in cases {
+    for (global, ranks, grid_ndims, kind, exec) in cases {
         let cfg = RunConfig {
             global: global.clone(),
             ranks,
             kind,
+            exec,
             inner: 1,
             outer: 1,
             ..Default::default()
@@ -136,7 +159,7 @@ fn cmd_selftest() {
         let pass = rep.max_err < 1e-9;
         ok &= pass;
         println!(
-            "selftest global={global:?} ranks={ranks} grid_ndims={grid_ndims} kind={kind:?}: err={:.2e} {}",
+            "selftest global={global:?} ranks={ranks} grid_ndims={grid_ndims} kind={kind:?} exec={exec:?}: err={:.2e} {}",
             rep.max_err,
             if pass { "OK" } else { "FAIL" }
         );

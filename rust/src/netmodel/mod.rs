@@ -171,4 +171,55 @@ mod tests {
         assert!((b.total() - (b.fft + b.redist)).abs() < 1e-12);
         assert!(b.fft > 0.0 && b.redist > 0.0);
     }
+
+    #[test]
+    fn pipelined_one_chunk_equals_blocking() {
+        let m = MachineParams::shaheen();
+        for cores in [2usize, 8, 32] {
+            let sc = slab(cores, Placement::Distributed);
+            let blocking = m.simulate(Library::OursA2aw, &sc);
+            let piped = m.simulate_pipelined(Library::OursA2aw, &sc, 1);
+            assert!((blocking.total() - piped.total()).abs() < 1e-12, "cores={cores}");
+            assert!((blocking.fft - piped.fft).abs() < 1e-12);
+            assert!((blocking.redist - piped.redist).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pipelined_hides_communication_behind_compute() {
+        // Distributed slab, compute-heavy: a modest chunk count should
+        // strictly beat the blocking schedule, because most chunk exchanges
+        // hide behind the serial FFT of already-received chunks.
+        let m = MachineParams::shaheen();
+        let sc = slab(16, Placement::Distributed);
+        let blocking = m.simulate(Library::OursA2aw, &sc);
+        let piped = m.simulate_pipelined(Library::OursA2aw, &sc, 8);
+        assert!(
+            piped.total() < blocking.total(),
+            "pipelined {:.4} !< blocking {:.4}",
+            piped.total(),
+            blocking.total()
+        );
+        // The win is bounded below by the fully-overlapped ideal (plus
+        // latency): never better than max(fft, comm) of the blocking run.
+        assert!(piped.total() >= blocking.fft.max(blocking.redist) * 0.99);
+    }
+
+    #[test]
+    fn pipelined_latency_tax_grows_with_chunks() {
+        // In the comm-dominated Fig. 10 regime (16 ranks/node, huge mesh)
+        // the exchange never hides behind compute, so chunking k-fold
+        // multiplies the per-message latency and the total must turn up.
+        let m = MachineParams::shaheen();
+        let sc = Scenario {
+            global: vec![2048, 2048, 2048],
+            grid: crate::simmpi::dims_create(512, 2),
+            cores: 512,
+            cores_per_node: 16,
+            r2c: true,
+        };
+        let few = m.simulate_pipelined(Library::OursA2aw, &sc, 4).total();
+        let many = m.simulate_pipelined(Library::OursA2aw, &sc, 4096).total();
+        assert!(many > few, "latency tax missing: k=4096 {many:.5} !> k=4 {few:.5}");
+    }
 }

@@ -70,6 +70,23 @@ impl Breakdown {
     }
 }
 
+/// Per-scenario derived quantities shared by the simulators (see
+/// [`MachineParams::simulate`] / [`MachineParams::simulate_pipelined`]).
+struct ModelDims {
+    /// Array rank.
+    d: usize,
+    /// Grid rank.
+    r: usize,
+    /// Active cores per node.
+    cpn: usize,
+    /// Complex global extents (r2c halves the last axis).
+    gc: Vec<f64>,
+    /// Complex elements per rank.
+    elems_per_rank: f64,
+    /// Bytes per rank (complex doubles).
+    bytes_per_rank: f64,
+}
+
 /// Calibrated machine constants. All bandwidths in bytes/s, times in s.
 ///
 /// The constants are calibrated so the *relative* behaviour of the modeled
@@ -273,8 +290,12 @@ impl MachineParams {
         }
     }
 
-    /// Model one **forward + backward** transform pair of `sc` with `lib`.
-    pub fn simulate(&self, lib: Library, sc: &Scenario) -> Breakdown {
+    /// Shared prelude of [`MachineParams::simulate`] and
+    /// [`MachineParams::simulate_pipelined`]: validate the scenario and
+    /// derive the per-rank quantities both simulators price. Keeping this
+    /// in one place keeps the two models from silently desynchronizing
+    /// (they are asserted equal at `chunks == 1`).
+    fn model_dims(sc: &Scenario) -> ModelDims {
         let d = sc.global.len();
         let r = sc.grid.len();
         assert!(r <= d - 1, "grid rank too large");
@@ -288,18 +309,77 @@ impl MachineParams {
         let total_c: f64 = gc.iter().product();
         let elems_per_rank = total_c / sc.cores as f64;
         let bytes_per_rank = elems_per_rank * 16.0; // complex doubles
+        ModelDims { d, r, cpn, gc, elems_per_rank, bytes_per_rank }
+    }
+
+    /// Serial-FFT library factor (Fig. 6c/8c/9c differences).
+    fn fft_lib_factor(lib: Library) -> f64 {
+        match lib {
+            Library::P3dfft | Library::Decomp2d => 0.965,
+            Library::FftwSlab => 1.10,
+            Library::Pfft => 1.0,
+            Library::OursA2aw => 1.0,
+        }
+    }
+
+    /// Model one forward + backward pair executed through the **pipelined
+    /// overlap engine** (`ExecMode::Pipelined`): every redistribution is
+    /// split into `chunks` sub-exchanges, and the serial FFT of the axis
+    /// aligned by an exchange runs chunk-by-chunk behind the remaining
+    /// sub-exchanges. Per stage the model charges
+    ///
+    /// `T = comm_chunk + (k-1) * max(comm_chunk, fft_chunk) + fft_chunk`
+    ///
+    /// — the first chunk's communication and the last chunk's compute are
+    /// exposed, every middle step costs the larger of the two — where
+    /// `comm_chunk` carries the full per-message latency (`alpha * peers`
+    /// per sub-exchange: chunking multiplies message count by `k`, the
+    /// pipelining tax). `chunks == 1` reproduces [`MachineParams::simulate`]
+    /// exactly. The breakdown attributes all compute to `fft` and the
+    /// remainder (exposed communication) to `redist`.
+    pub fn simulate_pipelined(&self, lib: Library, sc: &Scenario, chunks: usize) -> Breakdown {
+        let k = chunks.max(1);
+        let ModelDims { d, r, cpn, gc, elems_per_rank, bytes_per_rank } = Self::model_dims(sc);
+        let lib_factor = Self::fft_lib_factor(lib);
+        let mut fft = 0.0;
+        let mut redist = 0.0;
+        // Axes with no preceding exchange are never overlapped.
+        for ax in r..d {
+            let n = sc.global[ax];
+            let lines = elems_per_rank / gc[ax];
+            let kind_factor = if ax == d - 1 && sc.r2c { 0.55 } else { 1.0 };
+            fft += 2.0 * self.fft_axis_time(lines, n, cpn, lib_factor * kind_factor);
+        }
+        // Exchange stages: axis t's serial FFT pipelines behind the
+        // chunked exchange of stage t, in both directions.
+        for t in 0..r {
+            let m = sc.grid[t];
+            let stride: usize = sc.grid[t + 1..].iter().product();
+            let lines = elems_per_rank / gc[t];
+            let fft_chunk =
+                self.fft_axis_time(lines / k as f64, sc.global[t], cpn, lib_factor);
+            for in_place in [t == 0, t != 0] {
+                let comm_chunk =
+                    self.redist_time(lib, m, bytes_per_rank / k as f64, cpn, in_place, stride);
+                let total =
+                    comm_chunk + (k - 1) as f64 * comm_chunk.max(fft_chunk) + fft_chunk;
+                fft += k as f64 * fft_chunk;
+                redist += total - k as f64 * fft_chunk;
+            }
+        }
+        Breakdown { fft, redist }
+    }
+
+    /// Model one **forward + backward** transform pair of `sc` with `lib`.
+    pub fn simulate(&self, lib: Library, sc: &Scenario) -> Breakdown {
+        let ModelDims { d, r, cpn, gc, elems_per_rank, bytes_per_rank } = Self::model_dims(sc);
         // Serial FFT per axis: lines per rank = elems_per_rank / n.
         // r2c on the last axis costs ~half of a complex transform.
         // Serial FFT differences between the codes are small (Fig. 9c:
         // "hardly any difference at all"); P3DFFT's aligned intermediates
         // are slightly faster (Fig. 6c), FFTW's transposed-out runs the
         // output transform strided (slower).
-        let fft_lib_factor = match lib {
-            Library::P3dfft | Library::Decomp2d => 0.965,
-            Library::FftwSlab => 1.10,
-            Library::Pfft => 1.0,
-            Library::OursA2aw => 1.0,
-        };
+        let fft_lib_factor = Self::fft_lib_factor(lib);
         let mut fft = 0.0;
         for ax in 0..d {
             let n = sc.global[ax];

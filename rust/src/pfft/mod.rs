@@ -5,7 +5,12 @@
 //! The decomposition dimensionality is a parameter, not a code path: a slab
 //! plan is a pencil plan with a 1-D grid, the paper's 4-D proof-of-concept
 //! is the same plan with a 3-D grid. See [`PfftPlan`].
+//!
+//! Redistributions run either as blocking collectives
+//! ([`ExecMode::Blocking`], the paper's protocol) or through the pipelined
+//! overlap engine ([`ExecMode::Pipelined`]), which hides communication
+//! behind the serial FFT of already-received chunks.
 
 pub mod plan;
 
-pub use plan::{Kind, PfftPlan, RedistMethod, StageTimers};
+pub use plan::{ExecMode, Kind, PfftPlan, RedistMethod, StageTimers};

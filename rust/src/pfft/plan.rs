@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use crate::decomp::local_len;
 use crate::fft::{Complex64, Direction, SerialFft};
-use crate::redistribute::{RedistPlan, TraditionalPlan};
+use crate::redistribute::{PipelinedRedistPlan, RedistPlan, TraditionalPlan};
 use crate::simmpi::topology::{subcomms_with_dims, CartComm};
 use crate::simmpi::{dims_create, Comm};
 
@@ -36,9 +36,30 @@ pub enum RedistMethod {
     Traditional,
 }
 
+/// How the redistribution steps of a transform are executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// One blocking collective per redistribution (the paper's protocol).
+    #[default]
+    Blocking,
+    /// The pipelined engine ([`PipelinedRedistPlan`]): every
+    /// redistribution is split into `depth` sub-exchanges issued as
+    /// persistent nonblocking collectives, and the serial FFT of each
+    /// already-received chunk overlaps the communication of the chunks
+    /// still in flight. Requires [`RedistMethod::Alltoallw`].
+    /// `depth == 1` (or a redistribution with no free axis to chunk, e.g.
+    /// 2-D arrays) degrades to `Blocking` behaviour.
+    Pipelined {
+        /// Chunk count and in-flight window of the pipeline
+        /// (`overlap_depth` in the CLI).
+        depth: usize,
+    },
+}
+
 enum RedistKind {
     New(RedistPlan),
     Trad(TraditionalPlan),
+    Piped(PipelinedRedistPlan),
 }
 
 impl RedistKind {
@@ -46,6 +67,7 @@ impl RedistKind {
         match self {
             RedistKind::New(p) => p.execute(a, b),
             RedistKind::Trad(p) => p.execute(a, b),
+            RedistKind::Piped(p) => p.execute(a, b),
         }
     }
 
@@ -53,23 +75,34 @@ impl RedistKind {
         match self {
             RedistKind::New(p) => p.execute_back(b, a),
             RedistKind::Trad(p) => p.execute_back(b, a),
+            RedistKind::Piped(p) => p.execute_back(b, a),
         }
     }
 }
 
 /// Wall-clock accounting per transform phase — the paper's Figs. 6–10
-/// report (a) total, (b) redistribution, (c) serial FFT.
+/// report (a) total, (b) redistribution, (c) serial FFT. Pipelined
+/// execution attributes its time to the `overlap_*` buckets instead:
+/// `overlap_fft` is the compute spent inside per-chunk serial FFTs and
+/// `overlap_comm` is the *exposed* communication (wait + chunk
+/// gather/scatter) around it — their sum is the wall time of the
+/// overlapped stages, so `overlap_comm` shrinking relative to a blocking
+/// run's `redist` is the overlap win.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageTimers {
-    /// Seconds inside serial FFT calls.
+    /// Seconds inside serial FFT calls (non-overlapped stages).
     pub fft: f64,
-    /// Seconds inside global redistributions.
+    /// Seconds inside blocking global redistributions.
     pub redist: f64,
+    /// Seconds inside per-chunk serial FFTs of pipelined stages.
+    pub overlap_fft: f64,
+    /// Exposed (non-hidden) communication seconds of pipelined stages.
+    pub overlap_comm: f64,
 }
 
 impl StageTimers {
     pub fn total(&self) -> f64 {
-        self.fft + self.redist
+        self.fft + self.redist + self.overlap_fft + self.overlap_comm
     }
 
     pub fn reset(&mut self) {
@@ -111,6 +144,8 @@ pub struct PfftPlan {
     bufs: Vec<Vec<Complex64>>,
     /// Local real shape at state `r` (`R2c` only).
     real_shape: Vec<usize>,
+    /// How redistributions are executed (blocking vs pipelined).
+    exec: ExecMode,
     pub timers: StageTimers,
 }
 
@@ -132,6 +167,20 @@ impl PfftPlan {
         dims: &[usize],
         kind: Kind,
         method: RedistMethod,
+    ) -> PfftPlan {
+        Self::with_exec(comm, global, dims, kind, method, ExecMode::Blocking)
+    }
+
+    /// [`PfftPlan::with_dims`] plus an explicit [`ExecMode`].
+    /// `ExecMode::Pipelined` requires [`RedistMethod::Alltoallw`] (the
+    /// traditional baseline has no nonblocking schedule).
+    pub fn with_exec(
+        comm: &Comm,
+        global: &[usize],
+        dims: &[usize],
+        kind: Kind,
+        method: RedistMethod,
+        exec: ExecMode,
     ) -> PfftPlan {
         let d = global.len();
         let r = dims.len();
@@ -168,15 +217,34 @@ impl PfftPlan {
             .collect();
         // Redistribution plans: state t+1 -> state t over subgroup t,
         // v = t+1 (aligned in A), w = t (aligned in B).
+        if let ExecMode::Pipelined { .. } = exec {
+            assert_eq!(
+                method,
+                RedistMethod::Alltoallw,
+                "pfft: ExecMode::Pipelined requires RedistMethod::Alltoallw"
+            );
+        }
         let elem = std::mem::size_of::<Complex64>();
         let redists: Vec<RedistKind> = (0..r)
             .map(|t| {
                 let (a, b) = (&shapes[t + 1], &shapes[t]);
-                match method {
-                    RedistMethod::Alltoallw => {
+                match (method, exec) {
+                    (RedistMethod::Alltoallw, ExecMode::Pipelined { depth }) if depth > 1 => {
+                        RedistKind::Piped(PipelinedRedistPlan::new(
+                            &subs[t],
+                            elem,
+                            a,
+                            t + 1,
+                            b,
+                            t,
+                            depth,
+                            depth,
+                        ))
+                    }
+                    (RedistMethod::Alltoallw, _) => {
                         RedistKind::New(RedistPlan::new(&subs[t], elem, a, t + 1, b, t))
                     }
-                    RedistMethod::Traditional => {
+                    (RedistMethod::Traditional, _) => {
                         RedistKind::Trad(TraditionalPlan::new(&subs[t], elem, a, t + 1, b, t))
                     }
                 }
@@ -198,8 +266,14 @@ impl PfftPlan {
             redists,
             bufs,
             real_shape,
+            exec,
             timers: StageTimers::default(),
         }
+    }
+
+    /// How this plan executes its redistributions.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.exec
     }
 
     /// Grid extents.
@@ -367,41 +441,67 @@ impl PfftPlan {
 
     /// Forward alignment walk: states `r-1, ..., 0`; exchange into state
     /// `t`, then transform axis `t`.
+    ///
+    /// In `ExecMode::Pipelined`, the exchange and the axis-`t` transform
+    /// are fused: the serial FFT runs on every dense chunk as soon as its
+    /// sub-exchange completes, while later chunks are still in flight.
+    /// The per-line transforms are identical either way, so the spectra
+    /// are bitwise equal across modes.
     fn descend(&mut self, engine: &mut dyn SerialFft, dir: Direction) {
         let r = self.dims.len();
         for t in (0..r).rev() {
-            let t0 = Instant::now();
-            {
-                let (lo, hi) = self.bufs.split_at_mut(t + 1);
+            let (lo, hi) = self.bufs.split_at_mut(t + 1);
+            if let RedistKind::Piped(p) = &self.redists[t] {
+                let mut fft_s = 0.0f64;
+                let t0 = Instant::now();
+                p.execute_chunked(&hi[0], &mut lo[t], |chunk, shape| {
+                    let tc = Instant::now();
+                    engine.c2c(chunk, shape, t, dir);
+                    fft_s += tc.elapsed().as_secs_f64();
+                });
+                let wall = t0.elapsed().as_secs_f64();
+                self.timers.overlap_fft += fft_s;
+                self.timers.overlap_comm += wall - fft_s;
+            } else {
+                let t0 = Instant::now();
                 self.redists[t].execute(&hi[0], &mut lo[t]);
-            }
-            self.timers.redist += t0.elapsed().as_secs_f64();
-            let t1 = Instant::now();
-            {
+                self.timers.redist += t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
                 let shape = self.shapes[t].clone();
-                engine.c2c(&mut self.bufs[t], &shape, t, dir);
+                engine.c2c(&mut lo[t], &shape, t, dir);
+                self.timers.fft += t1.elapsed().as_secs_f64();
             }
-            self.timers.fft += t1.elapsed().as_secs_f64();
         }
     }
 
     /// Backward alignment walk: states `0, ..., r-1`; inverse-transform
-    /// axis `t`, then exchange back into state `t+1`.
+    /// axis `t`, then exchange back into state `t+1`. Pipelined plans fuse
+    /// the two: each chunk is inverse-transformed and posted while the
+    /// previous chunk's exchange drains.
     fn ascend(&mut self, engine: &mut dyn SerialFft) {
         let r = self.dims.len();
         for t in 0..r {
-            let t0 = Instant::now();
-            {
+            let (lo, hi) = self.bufs.split_at_mut(t + 1);
+            if let RedistKind::Piped(p) = &self.redists[t] {
+                let mut fft_s = 0.0f64;
+                let t0 = Instant::now();
+                p.execute_back_chunked(&lo[t], &mut hi[0], |chunk, shape| {
+                    let tc = Instant::now();
+                    engine.c2c(chunk, shape, t, Direction::Backward);
+                    fft_s += tc.elapsed().as_secs_f64();
+                });
+                let wall = t0.elapsed().as_secs_f64();
+                self.timers.overlap_fft += fft_s;
+                self.timers.overlap_comm += wall - fft_s;
+            } else {
+                let t0 = Instant::now();
                 let shape = self.shapes[t].clone();
-                engine.c2c(&mut self.bufs[t], &shape, t, Direction::Backward);
-            }
-            self.timers.fft += t0.elapsed().as_secs_f64();
-            let t1 = Instant::now();
-            {
-                let (lo, hi) = self.bufs.split_at_mut(t + 1);
+                engine.c2c(&mut lo[t], &shape, t, Direction::Backward);
+                self.timers.fft += t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
                 self.redists[t].execute_back(&lo[t], &mut hi[0]);
+                self.timers.redist += t1.elapsed().as_secs_f64();
             }
-            self.timers.redist += t1.elapsed().as_secs_f64();
         }
     }
 }

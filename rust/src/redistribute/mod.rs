@@ -14,9 +14,19 @@
 //!   explicit local transpose into per-destination contiguous chunks,
 //!   then `alltoallv` of contiguous buffers (+ receive-side remap when
 //!   the chunks cannot land in place).
+//! * [`pipeline`] / [`PipelinedRedistPlan`] — the overlap engine built on
+//!   the nonblocking/persistent collectives of
+//!   [`crate::simmpi::nonblocking`]: the exchange is split into `k`
+//!   sub-exchanges along an axis untouched by the redistribution, each a
+//!   persistent `ialltoallw`, with up to `overlap_depth` chunks in flight
+//!   while completed chunks are consumed (or transformed — see
+//!   `ExecMode::Pipelined` in [`crate::pfft`]). Bitwise identical to the
+//!   one-shot exchange for every chunking.
 
 pub mod exchange;
+pub mod pipeline;
 pub mod traditional;
 
 pub use exchange::{exchange, subarray_types, RedistPlan};
+pub use pipeline::PipelinedRedistPlan;
 pub use traditional::{traditional_exchange, TraditionalPlan};

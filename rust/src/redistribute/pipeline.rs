@@ -1,0 +1,437 @@
+//! The pipelined, compute/comm-overlapped redistribution engine.
+//!
+//! The paper's one-shot exchange ([`super::RedistPlan`]) is a single
+//! blocking `alltoallw`: every byte must land before the next serial FFT
+//! stage may start. This module splits the exchange along a **pipeline
+//! axis** — an axis untouched by the redistribution, so the global
+//! operation decomposes into `k` independent sub-exchanges — and issues the
+//! sub-exchanges as *persistent nonblocking* collectives
+//! ([`crate::simmpi::nonblocking`]): while chunk `i` is being consumed
+//! (scattered into the output array, or handed to the caller's per-chunk
+//! compute callback), chunks `i+1 .. i+depth` are already on the wire.
+//!
+//! Chunked receive buffers are *dense* sub-blocks (the pipeline axis
+//! restricted, every other axis full), so a serial FFT along the newly
+//! aligned axis can run directly on a completed chunk before the rest of
+//! the exchange has finished — the overlap [`crate::pfft::PfftPlan`]
+//! exploits in `ExecMode::Pipelined`. Because the chunk datatypes are an
+//! exact partition of the one-shot subarray datatypes, the result is
+//! **bitwise identical** to [`super::exchange`] for any chunk count and
+//! overlap depth (see `rust/tests/pipeline_equivalence.rs`).
+//!
+//! When no pipeline axis exists (2-D arrays: both axes are exchanged) or
+//! `chunks == 1`, the plan degrades gracefully to the one-shot blocking
+//! exchange.
+
+use std::collections::VecDeque;
+
+use crate::decomp::decompose;
+use crate::simmpi::datatype::Datatype;
+use crate::simmpi::nonblocking::{AlltoallwPlan, Request};
+use crate::simmpi::{as_bytes, as_bytes_mut, Comm, Pod};
+
+use super::exchange::RedistPlan;
+
+/// One sub-exchange of the pipeline: the slice of the redistribution whose
+/// pipeline-axis window is `[start, start + len)`.
+struct ChunkPlan {
+    /// Dense local shape of the chunk on the A (send) side.
+    shape_a: Vec<usize>,
+    /// Dense local shape of the chunk on the B (receive) side.
+    shape_b: Vec<usize>,
+    /// Persistent collective: A (full array) -> dense chunk-of-B buffer.
+    fwd: AlltoallwPlan,
+    /// Persistent collective: dense chunk-of-B buffer -> dense chunk-of-A.
+    bwd: AlltoallwPlan,
+    /// Gather/scatter between the full A array and the dense chunk-of-A
+    /// buffer (and likewise for B): the chunk's subarray datatype.
+    a_dt: Datatype,
+    b_dt: Datatype,
+}
+
+impl ChunkPlan {
+    fn elems_a(&self) -> usize {
+        self.shape_a.iter().product()
+    }
+
+    fn elems_b(&self) -> usize {
+        self.shape_b.iter().product()
+    }
+}
+
+/// A chunked, overlap-capable redistribution plan between the same pair of
+/// alignments as [`RedistPlan`].
+///
+/// * `chunks` — how many sub-exchanges the redistribution is split into
+///   (clamped to the pipeline-axis extent; `1` disables pipelining).
+/// * `overlap_depth` — how many sub-exchanges may be in flight at once
+///   (clamped to `[1, chunks]`).
+///
+/// [`PipelinedRedistPlan::execute`] / [`PipelinedRedistPlan::execute_back`]
+/// produce bitwise-identical results to the blocking plan; the `_chunked`
+/// variants additionally invoke a caller callback on every dense completed
+/// chunk, which is where [`crate::pfft::PfftPlan`] hooks the serial FFT of
+/// already-received pencils.
+pub struct PipelinedRedistPlan {
+    sizes_a: Vec<usize>,
+    sizes_b: Vec<usize>,
+    elem: usize,
+    overlap_depth: usize,
+    /// The chunking axis, `None` when pipelining is not applicable.
+    pipe_axis: Option<usize>,
+    chunks: Vec<ChunkPlan>,
+    /// Fallback one-shot plan (also performs the shape validation).
+    oneshot: RedistPlan,
+}
+
+impl PipelinedRedistPlan {
+    /// Build a pipelined plan. Arguments mirror [`RedistPlan::new`] plus
+    /// the chunking knobs. The pipeline axis is chosen automatically: the
+    /// longest local axis not involved in the exchange.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        comm: &Comm,
+        elem: usize,
+        sizes_a: &[usize],
+        axis_a: usize,
+        sizes_b: &[usize],
+        axis_b: usize,
+        chunks: usize,
+        overlap_depth: usize,
+    ) -> PipelinedRedistPlan {
+        let oneshot = RedistPlan::new(comm, elem, sizes_a, axis_a, sizes_b, axis_b);
+        let d = sizes_a.len();
+        let m = comm.size();
+        // Pipeline axis: untouched by the exchange, so its local extent is
+        // identical in A and B; prefer the longest one.
+        let pipe_axis = (0..d)
+            .filter(|&ax| ax != axis_a && ax != axis_b && sizes_a[ax] > 1)
+            .max_by_key(|&ax| sizes_a[ax]);
+        let k = match pipe_axis {
+            Some(ax) => chunks.clamp(1, sizes_a[ax]),
+            None => 1,
+        };
+        let mut chunk_plans = Vec::new();
+        if k > 1 {
+            let pipe = pipe_axis.unwrap();
+            let extent = sizes_a[pipe];
+            for c in 0..k {
+                let (clen, cstart) = decompose(extent, k, c);
+                let mut shape_a = sizes_a.to_vec();
+                shape_a[pipe] = clen;
+                let mut shape_b = sizes_b.to_vec();
+                shape_b[pipe] = clen;
+                let mut starts = vec![0usize; d];
+                starts[pipe] = cstart;
+                let a_dt = Datatype::subarray(sizes_a, &shape_a, &starts, elem)
+                    .expect("pipeline: chunk-of-A datatype");
+                let b_dt = Datatype::subarray(sizes_b, &shape_b, &starts, elem)
+                    .expect("pipeline: chunk-of-B datatype");
+                // Forward sub-exchange: send straight out of the full A
+                // array (peer slice of axis_a ∩ chunk window), receive into
+                // the dense chunk-of-B buffer (peer slice of axis_b, chunk
+                // window already implicit in the buffer shape).
+                let fwd_send: Vec<Datatype> = (0..m)
+                    .map(|p| {
+                        let (n, s) = decompose(sizes_a[axis_a], m, p);
+                        let mut sub = sizes_a.to_vec();
+                        sub[axis_a] = n;
+                        sub[pipe] = clen;
+                        let mut st = vec![0usize; d];
+                        st[axis_a] = s;
+                        st[pipe] = cstart;
+                        Datatype::subarray(sizes_a, &sub, &st, elem)
+                            .expect("pipeline: fwd send datatype")
+                    })
+                    .collect();
+                let fwd_recv: Vec<Datatype> = (0..m)
+                    .map(|q| {
+                        let (n, s) = decompose(sizes_b[axis_b], m, q);
+                        let mut sub = shape_b.clone();
+                        sub[axis_b] = n;
+                        let mut st = vec![0usize; d];
+                        st[axis_b] = s;
+                        Datatype::subarray(&shape_b, &sub, &st, elem)
+                            .expect("pipeline: fwd recv datatype")
+                    })
+                    .collect();
+                // Backward sub-exchange: send out of the dense chunk-of-B
+                // buffer (same datatypes as the forward receive side),
+                // receive into the dense chunk-of-A buffer.
+                let bwd_recv: Vec<Datatype> = (0..m)
+                    .map(|q| {
+                        let (n, s) = decompose(sizes_a[axis_a], m, q);
+                        let mut sub = shape_a.clone();
+                        sub[axis_a] = n;
+                        let mut st = vec![0usize; d];
+                        st[axis_a] = s;
+                        Datatype::subarray(&shape_a, &sub, &st, elem)
+                            .expect("pipeline: bwd recv datatype")
+                    })
+                    .collect();
+                let fwd = comm.alltoallw_init(&fwd_send, &fwd_recv);
+                let bwd = comm.alltoallw_init(&fwd_recv, &bwd_recv);
+                chunk_plans.push(ChunkPlan { shape_a, shape_b, fwd, bwd, a_dt, b_dt });
+            }
+        }
+        PipelinedRedistPlan {
+            sizes_a: sizes_a.to_vec(),
+            sizes_b: sizes_b.to_vec(),
+            elem,
+            overlap_depth: overlap_depth.max(1),
+            pipe_axis: if k > 1 { pipe_axis } else { None },
+            chunks: chunk_plans,
+            oneshot,
+        }
+    }
+
+    /// Number of local elements of `A`.
+    pub fn elems_a(&self) -> usize {
+        self.sizes_a.iter().product()
+    }
+
+    /// Number of local elements of `B`.
+    pub fn elems_b(&self) -> usize {
+        self.sizes_b.iter().product()
+    }
+
+    /// Number of sub-exchanges (`1` = one-shot fallback).
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len().max(1)
+    }
+
+    /// The chosen pipeline axis, if the plan is actually chunked.
+    pub fn pipe_axis(&self) -> Option<usize> {
+        self.pipe_axis
+    }
+
+    /// Whether this plan actually pipelines (false = one-shot fallback).
+    pub fn is_pipelined(&self) -> bool {
+        !self.chunks.is_empty()
+    }
+
+    /// Configured in-flight window.
+    pub fn overlap_depth(&self) -> usize {
+        self.overlap_depth
+    }
+
+    /// Redistribution `A -> B`, bitwise identical to
+    /// [`RedistPlan::execute`].
+    pub fn execute<T: Pod>(&self, a: &[T], b: &mut [T]) {
+        self.execute_chunked(a, b, |_, _| {});
+    }
+
+    /// Redistribution `A -> B` invoking `on_chunk(chunk, chunk_shape)` on
+    /// every *dense, completed* chunk of `B` before it is scattered into
+    /// `b` — while later sub-exchanges are still in flight. The callback
+    /// sees each element of `B` exactly once. With the one-shot fallback
+    /// the callback runs once over the whole of `b`.
+    pub fn execute_chunked<T: Pod>(
+        &self,
+        a: &[T],
+        b: &mut [T],
+        mut on_chunk: impl FnMut(&mut [T], &[usize]),
+    ) {
+        assert_eq!(std::mem::size_of::<T>(), self.elem, "pipeline: element size mismatch");
+        assert_eq!(a.len(), self.elems_a(), "pipeline: A length mismatch");
+        assert_eq!(b.len(), self.elems_b(), "pipeline: B length mismatch");
+        if self.chunks.is_empty() {
+            self.oneshot.execute(a, b);
+            on_chunk(b, &self.sizes_b);
+            return;
+        }
+        let k = self.chunks.len();
+        let depth = self.overlap_depth.min(k);
+        let send = as_bytes(a);
+        let mut inflight: VecDeque<Request> = VecDeque::with_capacity(depth);
+        for chunk in self.chunks.iter().take(depth) {
+            inflight.push_back(chunk.fwd.start(send));
+        }
+        for c in 0..k {
+            let req = inflight.pop_front().expect("pipeline: request queue underrun");
+            let chunk = &self.chunks[c];
+            let mut buf = vec![unsafe { std::mem::zeroed::<T>() }; chunk.elems_b()];
+            req.wait(as_bytes_mut(&mut buf));
+            // Keep the window full before consuming the chunk, so the next
+            // exchanges progress while we compute.
+            if c + depth < k {
+                inflight.push_back(self.chunks[c + depth].fwd.start(send));
+            }
+            on_chunk(&mut buf, &chunk.shape_b);
+            chunk.b_dt.unpack(as_bytes(&buf), as_bytes_mut(b));
+        }
+    }
+
+    /// Reverse redistribution `B -> A`, bitwise identical to
+    /// [`RedistPlan::execute_back`].
+    pub fn execute_back<T: Pod>(&self, b: &[T], a: &mut [T]) {
+        if self.chunks.is_empty() {
+            // Bypass execute_back_chunked: its fallback stages a full copy
+            // of `b` for the callback, pointless with a no-op callback.
+            assert_eq!(std::mem::size_of::<T>(), self.elem, "pipeline: element size mismatch");
+            self.oneshot.execute_back(b, a);
+            return;
+        }
+        self.execute_back_chunked(b, a, |_, _| {});
+    }
+
+    /// Reverse redistribution invoking `pre_chunk(chunk, chunk_shape)` on
+    /// every dense chunk of `B` *before* its sub-exchange is posted, so the
+    /// caller's compute on chunk `i+1` overlaps the communication of chunk
+    /// `i`. With the one-shot fallback the callback runs once over a full
+    /// staging copy of `b`.
+    pub fn execute_back_chunked<T: Pod>(
+        &self,
+        b: &[T],
+        a: &mut [T],
+        mut pre_chunk: impl FnMut(&mut [T], &[usize]),
+    ) {
+        assert_eq!(std::mem::size_of::<T>(), self.elem, "pipeline: element size mismatch");
+        assert_eq!(b.len(), self.elems_b(), "pipeline: B length mismatch");
+        assert_eq!(a.len(), self.elems_a(), "pipeline: A length mismatch");
+        if self.chunks.is_empty() {
+            let mut staged = b.to_vec();
+            pre_chunk(&mut staged, &self.sizes_b);
+            self.oneshot.execute_back(&staged, a);
+            return;
+        }
+        let k = self.chunks.len();
+        let depth = self.overlap_depth.min(k);
+        let mut inflight: VecDeque<(usize, Request)> = VecDeque::with_capacity(depth);
+        for c in 0..k {
+            let chunk = &self.chunks[c];
+            // Gather the dense chunk, let the caller transform it, post it.
+            let mut buf = vec![unsafe { std::mem::zeroed::<T>() }; chunk.elems_b()];
+            chunk.b_dt.pack(as_bytes(b), as_bytes_mut(&mut buf));
+            pre_chunk(&mut buf, &chunk.shape_b);
+            inflight.push_back((c, chunk.bwd.start(as_bytes(&buf))));
+            if inflight.len() == depth {
+                self.drain_one_back(&mut inflight, a);
+            }
+        }
+        while !inflight.is_empty() {
+            self.drain_one_back(&mut inflight, a);
+        }
+    }
+
+    fn drain_one_back<T: Pod>(&self, inflight: &mut VecDeque<(usize, Request)>, a: &mut [T]) {
+        let (c, req) = inflight.pop_front().expect("pipeline: empty backward queue");
+        let chunk = &self.chunks[c];
+        let mut buf = vec![unsafe { std::mem::zeroed::<T>() }; chunk.elems_a()];
+        req.wait(as_bytes_mut(&mut buf));
+        chunk.a_dt.unpack(as_bytes(&buf), as_bytes_mut(a));
+    }
+
+    /// Total bytes this rank sends per forward execute.
+    pub fn bytes_per_exchange(&self) -> usize {
+        if self.chunks.is_empty() {
+            self.oneshot.bytes_per_exchange()
+        } else {
+            self.chunks.iter().map(|c| c.fwd.bytes_per_start()).sum()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::redistribute::exchange::exchange;
+    use crate::simmpi::World;
+
+    fn run_case(
+        global: [usize; 3],
+        axis_a: usize,
+        axis_b: usize,
+        nprocs: usize,
+        chunks: usize,
+        depth: usize,
+    ) {
+        World::run(nprocs, move |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let mut sizes_a = global.to_vec();
+            let mut sizes_b = global.to_vec();
+            sizes_a[axis_b] = decompose(global[axis_b], m, me).0;
+            sizes_b[axis_a] = decompose(global[axis_a], m, me).0;
+            let a: Vec<f64> =
+                (0..sizes_a.iter().product::<usize>()).map(|x| (me * 10_000 + x) as f64).collect();
+            let mut want = vec![0.0f64; sizes_b.iter().product()];
+            exchange(&comm, &a, &sizes_a, axis_a, &mut want, &sizes_b, axis_b);
+            let plan = PipelinedRedistPlan::new(
+                &comm, 8, &sizes_a, axis_a, &sizes_b, axis_b, chunks, depth,
+            );
+            let mut got = vec![0.0f64; sizes_b.iter().product()];
+            plan.execute(&a, &mut got);
+            assert_eq!(want, got, "rank {me}: pipelined != blocking");
+            // Roundtrip restores A exactly.
+            let mut back = vec![0.0f64; a.len()];
+            plan.execute_back(&got, &mut back);
+            assert_eq!(a, back, "rank {me}: pipelined roundtrip failed");
+        });
+    }
+
+    #[test]
+    fn pipelined_matches_blocking_slab() {
+        run_case([8, 12, 6], 1, 0, 4, 3, 2);
+    }
+
+    #[test]
+    fn pipelined_matches_blocking_deep_window() {
+        run_case([8, 12, 6], 1, 0, 4, 6, 6);
+    }
+
+    #[test]
+    fn pipelined_matches_blocking_uneven() {
+        run_case([7, 9, 5], 0, 2, 3, 4, 2);
+    }
+
+    #[test]
+    fn depth_one_still_correct() {
+        run_case([6, 8, 10], 0, 1, 4, 5, 1);
+    }
+
+    #[test]
+    fn fallback_2d_has_no_pipe_axis() {
+        World::run(2, |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let global = [8usize, 6];
+            let sizes_a = [global[0], decompose(global[1], m, me).0];
+            let sizes_b = [decompose(global[0], m, me).0, global[1]];
+            let plan = PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, 4, 2);
+            assert!(!plan.is_pipelined());
+            assert_eq!(plan.chunk_count(), 1);
+            let a: Vec<f64> = (0..plan.elems_a()).map(|x| (me * 100 + x) as f64).collect();
+            let mut want = vec![0.0f64; plan.elems_b()];
+            exchange(&comm, &a, &sizes_a, 0, &mut want, &sizes_b, 1);
+            let mut got = vec![0.0f64; plan.elems_b()];
+            plan.execute(&a, &mut got);
+            assert_eq!(want, got);
+        });
+    }
+
+    #[test]
+    fn chunk_callback_sees_every_element_once() {
+        World::run(3, |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let global = [6usize, 9, 4];
+            let sizes_a = [global[0], decompose(global[1], m, me).0, global[2]];
+            let sizes_b = [decompose(global[0], m, me).0, global[1], global[2]];
+            let plan = PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, 3, 2);
+            assert!(plan.is_pipelined());
+            assert_eq!(plan.pipe_axis(), Some(2));
+            let a: Vec<f64> = (0..plan.elems_a()).map(|x| (me * 1000 + x) as f64).collect();
+            let mut b = vec![0.0f64; plan.elems_b()];
+            let mut seen = 0usize;
+            let mut calls = 0usize;
+            plan.execute_chunked(&a, &mut b, |chunk, shape| {
+                assert_eq!(chunk.len(), shape.iter().product::<usize>());
+                seen += chunk.len();
+                calls += 1;
+            });
+            assert_eq!(seen, plan.elems_b());
+            assert_eq!(calls, plan.chunk_count());
+        });
+    }
+}

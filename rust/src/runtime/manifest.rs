@@ -6,7 +6,9 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use super::RuntimeError;
+
+type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// One artifact record.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -28,7 +30,7 @@ impl Manifest {
     /// Read and parse `path`.
     pub fn read(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
+            .map_err(|e| RuntimeError(format!("reading {}: {e}", path.display())))?;
         Self::parse(&text)
     }
 
@@ -42,18 +44,31 @@ impl Manifest {
             }
             let cols: Vec<&str> = line.split('\t').collect();
             if cols.len() != 5 {
-                return Err(anyhow!("manifest line {}: expected 5 columns, got {}", lineno + 1, cols.len()));
+                return Err(RuntimeError(format!(
+                    "manifest line {}: expected 5 columns, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
             }
             let forward = match cols[1] {
                 "fwd" => true,
                 "bwd" => false,
-                other => return Err(anyhow!("manifest line {}: bad direction {other:?}", lineno + 1)),
+                other => {
+                    return Err(RuntimeError(format!(
+                        "manifest line {}: bad direction {other:?}",
+                        lineno + 1
+                    )))
+                }
             };
             entries.push(ManifestEntry {
                 name: cols[0].to_string(),
                 forward,
-                batch: cols[2].parse().with_context(|| format!("line {}: batch", lineno + 1))?,
-                n: cols[3].parse().with_context(|| format!("line {}: n", lineno + 1))?,
+                batch: cols[2]
+                    .parse()
+                    .map_err(|e| RuntimeError(format!("line {}: batch: {e}", lineno + 1)))?,
+                n: cols[3]
+                    .parse()
+                    .map_err(|e| RuntimeError(format!("line {}: n: {e}", lineno + 1)))?,
                 file: cols[4].to_string(),
             });
         }

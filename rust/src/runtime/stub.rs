@@ -1,0 +1,61 @@
+//! API-compatible stand-in for the PJRT engine, built when the `xla`
+//! feature is off (the offline crate set has no `xla` crate). Loading
+//! always fails with a descriptive error; the transform entry points are
+//! unreachable because no engine can be constructed.
+
+use std::path::Path;
+
+use super::RuntimeError;
+use crate::fft::{Complex64, Direction, SerialFft};
+
+/// Stub of the PJRT-backed serial FFT engine (see
+/// `rust/src/runtime/xla_engine.rs` for the real one, behind the `xla`
+/// feature).
+pub struct XlaFftEngine {
+    _unconstructible: (),
+}
+
+impl XlaFftEngine {
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn load(dir: &Path) -> Result<XlaFftEngine, RuntimeError> {
+        Err(RuntimeError::new(format!(
+            "XLA engine unavailable: a2wfft was built without the `xla` cargo feature \
+             (artifacts dir: {})",
+            dir.display()
+        )))
+    }
+
+    /// Line lengths this engine has executables for (none, in the stub).
+    pub fn supported_sizes(&self) -> Vec<usize> {
+        Vec::new()
+    }
+}
+
+impl SerialFft for XlaFftEngine {
+    fn c2c(&mut self, _data: &mut [Complex64], _shape: &[usize], _axis: usize, _dir: Direction) {
+        unreachable!("stub XlaFftEngine cannot be constructed");
+    }
+
+    fn r2c(&mut self, _real: &[f64], _shape: &[usize], _out: &mut [Complex64]) {
+        unreachable!("stub XlaFftEngine cannot be constructed");
+    }
+
+    fn c2r(&mut self, _cplx: &[Complex64], _shape: &[usize], _out: &mut [f64]) {
+        unreachable!("stub XlaFftEngine cannot be constructed");
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-aot(stub)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = XlaFftEngine::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("xla"), "unhelpful error: {err}");
+    }
+}

@@ -10,7 +10,7 @@
 //! analogue of `MPI_COMM_SPLIT`, which is the primitive under Cartesian
 //! sub-grids ([`super::topology`]).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::{as_bytes, as_bytes_mut, Pod};
@@ -46,6 +46,15 @@ impl Mailbox {
             }
             q = self.cv.wait(q).unwrap();
         }
+    }
+
+    /// Non-blocking variant of [`Mailbox::pop`]: returns `None` when no
+    /// matching message has arrived yet (the transport under `MPI_Test`).
+    fn try_pop(&self, src: usize, tag: u32) -> Option<Vec<u8>> {
+        let mut q = self.q.lock().unwrap();
+        q.iter()
+            .position(|m| m.src == src && m.tag == tag)
+            .map(|i| q.remove(i).data)
     }
 }
 
@@ -135,6 +144,12 @@ pub(crate) struct CommState {
     mailboxes: Vec<Mailbox>,
     barrier: BarrierState,
     split: SplitState,
+    /// Per-rank count of nonblocking collectives *initiated* on this
+    /// communicator. Because every rank must enter collectives in the same
+    /// order (the MPI ordering rule), the per-rank counters agree at each
+    /// operation, giving all ranks a matching wire tag without any extra
+    /// synchronization.
+    nb_seq: Vec<AtomicU32>,
 }
 
 impl CommState {
@@ -147,9 +162,18 @@ impl CommState {
             mailboxes: (0..size).map(|_| Mailbox::new()).collect(),
             barrier: BarrierState::new(),
             split: SplitState::new(size),
+            nb_seq: (0..size).map(|_| AtomicU32::new(0)).collect(),
         })
     }
 }
+
+/// Tag namespace of the nonblocking collectives: bit 31 marks collectives
+/// (shared with the blocking set), bit 30 marks *nonblocking* operations,
+/// and the low 30 bits carry the per-communicator operation sequence
+/// number, so concurrent outstanding collectives never steal each other's
+/// messages even when completed out of order.
+const NB_TAG_BASE: u32 = 0xC000_0000;
+const NB_TAG_MASK: u32 = 0x3FFF_FFFF;
 
 /// A rank's handle on a process group — the analogue of an `MPI_Comm` plus
 /// the calling rank's identity.
@@ -196,6 +220,21 @@ impl Comm {
     pub fn recv_bytes(&self, from: usize, tag: u32) -> Vec<u8> {
         assert!(from < self.size(), "recv from rank {from} out of range");
         self.state.mailboxes[self.rank].pop(from, tag)
+    }
+
+    /// Non-blocking receive: `Some(payload)` if a message matching
+    /// `(from, tag)` has already arrived, `None` otherwise (the transport
+    /// primitive under `MPI_Test`).
+    pub fn try_recv_bytes(&self, from: usize, tag: u32) -> Option<Vec<u8>> {
+        assert!(from < self.size(), "try_recv from rank {from} out of range");
+        self.state.mailboxes[self.rank].try_pop(from, tag)
+    }
+
+    /// Allocate the wire tag of the next nonblocking collective initiated by
+    /// this rank on this communicator (see [`NB_TAG_BASE`]).
+    pub(crate) fn next_nb_tag(&self) -> u32 {
+        let seq = self.state.nb_seq[self.rank].fetch_add(1, Ordering::Relaxed);
+        NB_TAG_BASE | (seq & NB_TAG_MASK)
     }
 
     /// Typed send: copies `data` into a byte payload.

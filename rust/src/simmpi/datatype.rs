@@ -159,17 +159,14 @@ impl Datatype {
 
     /// Copy the selected bytes of `src` into contiguous `dst`
     /// (`MPI_Pack`). `dst.len()` must equal [`Datatype::packed_size`].
+    ///
+    /// Flattens on every call; hot paths that reuse a datatype (persistent
+    /// collective plans, [`crate::redistribute::RedistPlan`] executions)
+    /// should cache [`Datatype::runs`] once and call [`Runs::pack`].
     pub fn pack(&self, src: &[u8], dst: &mut [u8]) {
         debug_assert_eq!(dst.len(), self.packed_size(), "pack: dst size mismatch");
         debug_assert!(src.len() >= self.extent(), "pack: src too small");
-        let runs = self.runs();
-        let run = runs.run_len;
-        let mut out = 0usize;
-        runs.for_each_offset(|off| {
-            dst[out..out + run].copy_from_slice(&src[off..off + run]);
-            out += run;
-        });
-        debug_assert_eq!(out, dst.len());
+        self.runs().pack(src, dst);
     }
 
     /// Scatter contiguous `src` into the selected bytes of `dst`
@@ -177,14 +174,7 @@ impl Datatype {
     pub fn unpack(&self, src: &[u8], dst: &mut [u8]) {
         debug_assert_eq!(src.len(), self.packed_size(), "unpack: src size mismatch");
         debug_assert!(dst.len() >= self.extent(), "unpack: dst too small");
-        let runs = self.runs();
-        let run = runs.run_len;
-        let mut inp = 0usize;
-        runs.for_each_offset(|off| {
-            dst[off..off + run].copy_from_slice(&src[inp..inp + run]);
-            inp += run;
-        });
-        debug_assert_eq!(inp, src.len());
+        self.runs().unpack(src, dst);
     }
 
     /// Pack into a freshly allocated buffer.
@@ -212,6 +202,35 @@ pub struct Runs {
 }
 
 impl Runs {
+    /// Number of payload bytes this flattened datatype selects (equals
+    /// [`Datatype::packed_size`] of the datatype it was derived from).
+    pub fn packed_size(&self) -> usize {
+        self.count() * self.run_len
+    }
+
+    /// [`Datatype::pack`] over a pre-flattened representation: no
+    /// re-flattening, no allocation — the persistent-plan fast path.
+    pub fn pack(&self, src: &[u8], dst: &mut [u8]) {
+        let run = self.run_len;
+        let mut out = 0usize;
+        self.for_each_offset(|off| {
+            dst[out..out + run].copy_from_slice(&src[off..off + run]);
+            out += run;
+        });
+        debug_assert_eq!(out, dst.len());
+    }
+
+    /// [`Datatype::unpack`] over a pre-flattened representation.
+    pub fn unpack(&self, src: &[u8], dst: &mut [u8]) {
+        let run = self.run_len;
+        let mut inp = 0usize;
+        self.for_each_offset(|off| {
+            dst[off..off + run].copy_from_slice(&src[inp..inp + run]);
+            inp += run;
+        });
+        debug_assert_eq!(inp, src.len());
+    }
+
     /// Number of contiguous runs.
     pub fn count(&self) -> usize {
         if self.run_len == 0 {

@@ -11,6 +11,15 @@
 //! about — local remap work vs. datatype-engine work vs. wire traffic — are
 //! all present and measurable.
 //!
+//! Beyond the blocking MPI-2 set, [`nonblocking`] provides the MPI-3/MPI-4
+//! *immediate* collectives (`ialltoallv`, `ialltoallw`) with
+//! [`Request`]-based completion (`test`/`wait`/[`waitall`]) and
+//! **persistent** collective plans ([`Comm::alltoallw_init`] →
+//! [`AlltoallwPlan::start`]), which cache the flattened datatype
+//! representation across repeated executions — the "future speedups from
+//! optimizations in the internal datatype handling engines" the paper
+//! anticipates.
+//!
 //! ## Why this is a faithful substrate
 //!
 //! The paper's claims are *algorithmic*: one `alltoallw` over discontiguous
@@ -39,28 +48,37 @@
 mod comm;
 pub mod collective;
 pub mod datatype;
+pub mod nonblocking;
 pub mod topology;
 
 pub use comm::{Comm, World};
 pub use datatype::Datatype;
+pub use nonblocking::{waitall, AlltoallwPlan, Request};
 pub use topology::{dims_create, CartComm};
-
-use thiserror::Error;
 
 /// Errors surfaced by the simmpi layer.
 ///
 /// Most internal invariant violations panic (they indicate a bug in the
 /// calling rank program, the moral equivalent of an MPI abort), while
 /// user-facing construction problems return `Err`.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum MpiError {
     /// A datatype description is inconsistent (e.g. subarray out of bounds).
-    #[error("invalid datatype: {0}")]
     InvalidDatatype(String),
     /// A communicator operation was given inconsistent arguments.
-    #[error("invalid communicator argument: {0}")]
     InvalidComm(String),
 }
+
+impl std::fmt::Display for MpiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MpiError::InvalidDatatype(msg) => write!(f, "invalid datatype: {msg}"),
+            MpiError::InvalidComm(msg) => write!(f, "invalid communicator argument: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for MpiError {}
 
 /// Marker trait for plain-old-data element types that can be transported
 /// through byte mailboxes and described by datatypes.

@@ -1,0 +1,488 @@
+//! Nonblocking and persistent collectives — the MPI-3/MPI-4 layer the
+//! paper's closing remark points at ("future speedups from optimizations in
+//! the internal datatype handling engines").
+//!
+//! Three pieces:
+//!
+//! * [`Request`] — the completion handle of an immediate operation, with
+//!   `MPI_Test`/`MPI_Wait`/`MPI_Waitall` analogues ([`Request::test`],
+//!   [`Request::wait`], [`waitall`]). Because rust forbids the aliasing MPI
+//!   tolerates (the library writing into a buffer the caller still owns),
+//!   the receive buffer is handed over at the *completion* call instead of
+//!   at initiation; everything else follows MPI semantics, including the
+//!   rule that all ranks must initiate collectives in the same order.
+//! * immediate collectives — [`Comm::ialltoallv`] and [`Comm::ialltoallw`]:
+//!   send-side packing happens at initiation (the buffered-eager protocol
+//!   of the mailbox transport), receives complete lazily, so the caller can
+//!   compute while peers are still packing/sending. Each operation gets a
+//!   unique wire tag from a per-communicator sequence, so any number of
+//!   operations may be outstanding and completed in any order.
+//! * persistent plans — [`Comm::alltoallw_init`] returns an
+//!   [`AlltoallwPlan`] whose subarray datatypes are **flattened once**
+//!   ([`Datatype::runs`]) and cached; every [`AlltoallwPlan::start`] then
+//!   packs through the cached [`Runs`] with zero per-call datatype-engine
+//!   setup. This is the `MPI_Alltoallw_init` → `MPI_Start` → `MPI_Wait`
+//!   cycle of MPI-4 persistent collectives, and the execution mode the
+//!   pipelined redistribution engine ([`crate::redistribute::pipeline`]) is
+//!   built on.
+
+use super::comm::Comm;
+use super::datatype::{Datatype, Runs};
+use super::{as_bytes, as_bytes_mut, Pod};
+
+/// One outstanding peer receive of a nonblocking collective.
+struct PendingRecv {
+    src: usize,
+    /// Wire tag of the operation (unique per outstanding collective).
+    tag: u32,
+    /// Flattened receive datatype: where the payload scatters into the
+    /// caller's buffer at completion.
+    runs: Runs,
+    /// Expected payload size (type-signature check, as in MPI matching).
+    bytes: usize,
+}
+
+/// Completion handle of a nonblocking collective (`MPI_Request`).
+///
+/// Obtain one from [`Comm::ialltoallv`], [`Comm::ialltoallw`] or
+/// [`AlltoallwPlan::start`]; complete it with [`Request::wait`] (or poll
+/// with [`Request::test`]), passing the receive buffer the operation
+/// scatters into. Outstanding requests on the same communicator carry
+/// distinct wire tags, so they may be completed in **any order** — waiting
+/// in any permutation yields the same buffers.
+///
+/// Dropping an un-waited request leaks its in-flight messages (the moral
+/// equivalent of `MPI_Request_free` on an active request — avoid it).
+pub struct Request {
+    comm: Comm,
+    pending: Vec<PendingRecv>,
+    /// Self-contribution: packed at initiation, scattered at completion.
+    local: Option<(Vec<u8>, Runs)>,
+    done: bool,
+}
+
+impl Request {
+    /// Poll for completion (`MPI_Test`): drains every already-arrived peer
+    /// payload into `recv` and returns `true` once the operation is
+    /// complete. Until then `recv` is partially written (MPI leaves the
+    /// buffer undefined before completion; so do we).
+    pub fn test(&mut self, recv: &mut [u8]) -> bool {
+        if self.done {
+            return true;
+        }
+        if let Some((payload, runs)) = self.local.take() {
+            runs.unpack(&payload, recv);
+        }
+        let mut i = 0;
+        while i < self.pending.len() {
+            let p = &self.pending[i];
+            match self.comm.try_recv_bytes(p.src, p.tag) {
+                Some(payload) => {
+                    assert_eq!(
+                        payload.len(),
+                        p.bytes,
+                        "nonblocking collective: type signature mismatch with rank {}",
+                        p.src
+                    );
+                    p.runs.unpack(&payload, recv);
+                    self.pending.swap_remove(i);
+                }
+                None => i += 1,
+            }
+        }
+        self.done = self.pending.is_empty();
+        self.done
+    }
+
+    /// Typed convenience wrapper over [`Request::test`].
+    pub fn test_typed<T: Pod>(&mut self, recv: &mut [T]) -> bool {
+        self.test(as_bytes_mut(recv))
+    }
+
+    /// Block until the operation completes (`MPI_Wait`), scattering every
+    /// peer payload into `recv`.
+    pub fn wait(mut self, recv: &mut [u8]) {
+        if self.done {
+            return;
+        }
+        if let Some((payload, runs)) = self.local.take() {
+            runs.unpack(&payload, recv);
+        }
+        for p in self.pending.drain(..) {
+            let payload = self.comm.recv_bytes(p.src, p.tag);
+            assert_eq!(
+                payload.len(),
+                p.bytes,
+                "nonblocking collective: type signature mismatch with rank {}",
+                p.src
+            );
+            p.runs.unpack(&payload, recv);
+        }
+        self.done = true;
+    }
+
+    /// Typed convenience wrapper over [`Request::wait`].
+    pub fn wait_typed<T: Pod>(self, recv: &mut [T]) {
+        self.wait(as_bytes_mut(recv));
+    }
+}
+
+/// Complete a set of requests (`MPI_Waitall`), each into its own buffer.
+/// Completion order is immaterial — see [`Request`].
+pub fn waitall(items: Vec<(Request, &mut [u8])>) {
+    for (req, buf) in items {
+        req.wait(buf);
+    }
+}
+
+impl Comm {
+    /// Immediate contiguous variable-block all-to-all (`MPI_Ialltoallv`).
+    ///
+    /// Send blocks leave immediately (buffered-eager); the returned
+    /// [`Request`] completes into a buffer laid out by
+    /// `recvcounts`/`rdispls` (elements, like the blocking
+    /// [`Comm::alltoallv`]).
+    pub fn ialltoallv<T: Pod>(
+        &self,
+        send: &[T],
+        sendcounts: &[usize],
+        sdispls: &[usize],
+        recvcounts: &[usize],
+        rdispls: &[usize],
+    ) -> Request {
+        let n = self.size();
+        assert!(sendcounts.len() == n && sdispls.len() == n, "ialltoallv: bad send metadata");
+        assert!(recvcounts.len() == n && rdispls.len() == n, "ialltoallv: bad recv metadata");
+        let elem = std::mem::size_of::<T>();
+        let tag = self.next_nb_tag();
+        let me = self.rank();
+        let bytes = as_bytes(send);
+        for p in 0..n {
+            if p != me {
+                let s = sdispls[p] * elem;
+                let l = sendcounts[p] * elem;
+                self.send_bytes(p, tag, bytes[s..s + l].to_vec());
+            }
+        }
+        let contig = |p: usize| Runs {
+            base: rdispls[p] * elem,
+            run_len: recvcounts[p] * elem,
+            outer: Vec::new(),
+        };
+        let local = {
+            assert_eq!(sendcounts[me], recvcounts[me], "ialltoallv: self block mismatch");
+            let s = sdispls[me] * elem;
+            let l = sendcounts[me] * elem;
+            Some((bytes[s..s + l].to_vec(), contig(me)))
+        };
+        let pending = (0..n)
+            .filter(|&p| p != me)
+            .map(|p| PendingRecv { src: p, tag, runs: contig(p), bytes: recvcounts[p] * elem })
+            .collect();
+        Request { comm: self.clone(), pending, local, done: false }
+    }
+
+    /// Immediate generalized all-to-all over derived datatypes
+    /// (`MPI_Ialltoallw`), the nonblocking twin of [`Comm::alltoallw`].
+    pub fn ialltoallw(
+        &self,
+        send: &[u8],
+        sendtypes: &[Datatype],
+        recvtypes: &[Datatype],
+    ) -> Request {
+        let n = self.size();
+        assert_eq!(sendtypes.len(), n, "ialltoallw: sendtypes length");
+        assert_eq!(recvtypes.len(), n, "ialltoallw: recvtypes length");
+        let tag = self.next_nb_tag();
+        let me = self.rank();
+        for p in 0..n {
+            if p != me {
+                self.send_bytes(p, tag, sendtypes[p].pack_to_vec(send));
+            }
+        }
+        let local = Some((sendtypes[me].pack_to_vec(send), recvtypes[me].runs()));
+        let pending = (0..n)
+            .filter(|&p| p != me)
+            .map(|p| PendingRecv {
+                src: p,
+                tag,
+                runs: recvtypes[p].runs(),
+                bytes: recvtypes[p].packed_size(),
+            })
+            .collect();
+        Request { comm: self.clone(), pending, local, done: false }
+    }
+
+    /// Typed convenience wrapper over [`Comm::ialltoallw`].
+    pub fn ialltoallw_typed<T: Pod>(
+        &self,
+        send: &[T],
+        sendtypes: &[Datatype],
+        recvtypes: &[Datatype],
+    ) -> Request {
+        self.ialltoallw(as_bytes(send), sendtypes, recvtypes)
+    }
+
+    /// Create a **persistent** generalized all-to-all plan
+    /// (`MPI_Alltoallw_init`): flattens every send/receive datatype once and
+    /// caches the result, so repeated [`AlltoallwPlan::start`] calls pay no
+    /// datatype-engine setup. Collective: every rank of the communicator
+    /// must create the matching plan.
+    pub fn alltoallw_init(
+        &self,
+        sendtypes: &[Datatype],
+        recvtypes: &[Datatype],
+    ) -> AlltoallwPlan {
+        let n = self.size();
+        assert_eq!(sendtypes.len(), n, "alltoallw_init: sendtypes length");
+        assert_eq!(recvtypes.len(), n, "alltoallw_init: recvtypes length");
+        let flatten = |t: &Datatype| FlatType { runs: t.runs(), bytes: t.packed_size() };
+        AlltoallwPlan {
+            comm: self.clone(),
+            send: sendtypes.iter().map(flatten).collect(),
+            recv: recvtypes.iter().map(flatten).collect(),
+        }
+    }
+}
+
+/// A datatype flattened once at plan-creation time.
+#[derive(Clone)]
+struct FlatType {
+    runs: Runs,
+    bytes: usize,
+}
+
+/// A persistent `alltoallw` plan: create once ([`Comm::alltoallw_init`]),
+/// then [`AlltoallwPlan::start`] → [`Request::wait`] any number of times.
+/// The per-peer subarray flattening is cached in the plan, amortizing the
+/// datatype-engine setup across every execution.
+pub struct AlltoallwPlan {
+    comm: Comm,
+    send: Vec<FlatType>,
+    recv: Vec<FlatType>,
+}
+
+impl AlltoallwPlan {
+    /// Begin one execution (`MPI_Start` on a persistent request): packs and
+    /// posts every peer payload through the cached flattened datatypes and
+    /// returns the completion handle. The plan is reusable — `start` may be
+    /// called again as soon as the previous request has been waited.
+    pub fn start(&self, send: &[u8]) -> Request {
+        let n = self.comm.size();
+        let me = self.comm.rank();
+        let tag = self.comm.next_nb_tag();
+        for p in 0..n {
+            if p != me {
+                let ft = &self.send[p];
+                let mut payload = vec![0u8; ft.bytes];
+                ft.runs.pack(send, &mut payload);
+                self.comm.send_bytes(p, tag, payload);
+            }
+        }
+        let local = {
+            let ft = &self.send[me];
+            let mut payload = vec![0u8; ft.bytes];
+            ft.runs.pack(send, &mut payload);
+            Some((payload, self.recv[me].runs.clone()))
+        };
+        let pending = (0..n)
+            .filter(|&p| p != me)
+            .map(|p| PendingRecv {
+                src: p,
+                tag,
+                runs: self.recv[p].runs.clone(),
+                bytes: self.recv[p].bytes,
+            })
+            .collect();
+        Request { comm: self.comm.clone(), pending, local, done: false }
+    }
+
+    /// Typed convenience wrapper over [`AlltoallwPlan::start`].
+    pub fn start_typed<T: Pod>(&self, send: &[T]) -> Request {
+        self.start(as_bytes(send))
+    }
+
+    /// One full blocking execution (`MPI_Start` + `MPI_Wait`).
+    pub fn execute(&self, send: &[u8], recv: &mut [u8]) {
+        self.start(send).wait(recv);
+    }
+
+    /// Typed convenience wrapper over [`AlltoallwPlan::execute`].
+    pub fn execute_typed<T: Pod>(&self, send: &[T], recv: &mut [T]) {
+        self.start(as_bytes(send)).wait(as_bytes_mut(recv));
+    }
+
+    /// Bytes this rank sends per execution (diagnostics/benchmarks).
+    pub fn bytes_per_start(&self) -> usize {
+        self.send.iter().map(|t| t.bytes).sum()
+    }
+
+    /// The process group this plan communicates over.
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simmpi::World;
+
+    /// Subarray datatype sequences of the blocking-collective tests, reused
+    /// so the nonblocking results can be checked against `alltoallw`.
+    fn slab_types(
+        me: usize,
+        nprocs: usize,
+        rows: usize,
+        cols: usize,
+    ) -> (Vec<Datatype>, Vec<Datatype>) {
+        let local = rows / nprocs;
+        let block = cols / nprocs;
+        let send: Vec<Datatype> = (0..nprocs)
+            .map(|p| {
+                Datatype::subarray(&[local, cols], &[local, block], &[0, block * p], 8).unwrap()
+            })
+            .collect();
+        let recv: Vec<Datatype> = (0..nprocs)
+            .map(|q| {
+                Datatype::subarray(&[rows, block], &[local, block], &[local * q, 0], 8).unwrap()
+            })
+            .collect();
+        let _ = me;
+        (send, recv)
+    }
+
+    #[test]
+    fn ialltoallw_matches_blocking() {
+        World::run(4, |comm| {
+            let me = comm.rank();
+            let (send_t, recv_t) = slab_types(me, 4, 8, 12);
+            let a: Vec<f64> = (0..2 * 12).map(|k| (me * 1000 + k) as f64).collect();
+            let mut blocking = vec![0.0f64; 8 * 3];
+            comm.alltoallw_typed(&a, &send_t, &mut blocking, &recv_t);
+            let req = comm.ialltoallw_typed(&a, &send_t, &recv_t);
+            let mut nonblocking = vec![0.0f64; 8 * 3];
+            req.wait_typed(&mut nonblocking);
+            assert_eq!(blocking, nonblocking);
+        });
+    }
+
+    #[test]
+    fn test_polls_to_completion() {
+        World::run(3, |comm| {
+            let me = comm.rank();
+            // Uneven arrival: each rank sleeps proportionally to its rank
+            // before entering, so rank 0's test() loop observes gradual
+            // completion.
+            std::thread::sleep(std::time::Duration::from_millis(5 * me as u64));
+            let counts = vec![2usize; 3];
+            let displs = vec![0usize, 2, 4];
+            let send: Vec<u64> = (0..6).map(|k| (me * 10 + k) as u64).collect();
+            let mut req = comm.ialltoallv(&send, &counts, &displs, &counts, &displs);
+            let mut out = vec![0u64; 6];
+            let mut spins = 0usize;
+            while !req.test_typed(&mut out) {
+                spins += 1;
+                std::thread::yield_now();
+                assert!(spins < 10_000_000, "test never completed");
+            }
+            // Block q of out came from rank q: q*10 + me*2, q*10 + me*2 + 1.
+            for q in 0..3 {
+                assert_eq!(out[2 * q], (q * 10 + me * 2) as u64);
+                assert_eq!(out[2 * q + 1], (q * 10 + me * 2 + 1) as u64);
+            }
+        });
+    }
+
+    #[test]
+    fn ialltoallv_matches_blocking() {
+        World::run(4, |comm| {
+            let me = comm.rank();
+            // Rank r sends (p+1) elements to rank p.
+            let sendcounts: Vec<usize> = (0..4).map(|p| p + 1).collect();
+            let mut sdispls = vec![0usize; 4];
+            for p in 1..4 {
+                sdispls[p] = sdispls[p - 1] + sendcounts[p - 1];
+            }
+            let total: usize = sendcounts.iter().sum();
+            let send: Vec<u32> = (0..total).map(|k| (me * 100 + k) as u32).collect();
+            let recvcounts = vec![me + 1; 4];
+            let rdispls: Vec<usize> = (0..4).map(|q| q * (me + 1)).collect();
+            let mut blocking = vec![0u32; 4 * (me + 1)];
+            comm.alltoallv(&send, &sendcounts, &sdispls, &mut blocking, &recvcounts, &rdispls);
+            let req = comm.ialltoallv(&send, &sendcounts, &sdispls, &recvcounts, &rdispls);
+            let mut nonblocking = vec![0u32; 4 * (me + 1)];
+            req.wait_typed(&mut nonblocking);
+            assert_eq!(blocking, nonblocking);
+        });
+    }
+
+    #[test]
+    fn outstanding_requests_complete_out_of_order() {
+        World::run(3, |comm| {
+            let me = comm.rank();
+            let counts = vec![1usize; 3];
+            let displs = vec![0usize, 1, 2];
+            // Three outstanding ialltoallv operations with distinct data...
+            let sends: Vec<Vec<u64>> = (0..3)
+                .map(|op| (0..3).map(|k| (op * 100 + me * 10 + k) as u64).collect())
+                .collect();
+            let reqs: Vec<Request> = sends
+                .iter()
+                .map(|s| comm.ialltoallv(s, &counts, &displs, &counts, &displs))
+                .collect();
+            // ...waited in reverse initiation order.
+            let mut outs = vec![vec![0u64; 3]; 3];
+            for (op, req) in reqs.into_iter().enumerate().rev() {
+                req.wait_typed(&mut outs[op]);
+            }
+            for op in 0..3 {
+                for q in 0..3 {
+                    assert_eq!(outs[op][q], (op * 100 + q * 10 + me) as u64, "op {op} src {q}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn persistent_plan_reuse_matches_blocking() {
+        World::run(4, |comm| {
+            let me = comm.rank();
+            let (send_t, recv_t) = slab_types(me, 4, 8, 8);
+            let plan = comm.alltoallw_init(&send_t, &recv_t);
+            assert_eq!(plan.bytes_per_start(), 2 * 8 * 8);
+            for round in 0..4 {
+                let a: Vec<f64> =
+                    (0..2 * 8).map(|k| (round * 10_000 + me * 100 + k) as f64).collect();
+                let mut blocking = vec![0.0f64; 8 * 2];
+                comm.alltoallw_typed(&a, &send_t, &mut blocking, &recv_t);
+                let mut persistent = vec![0.0f64; 8 * 2];
+                plan.execute_typed(&a, &mut persistent);
+                assert_eq!(blocking, persistent, "round {round}");
+            }
+        });
+    }
+
+    #[test]
+    fn waitall_drains_every_request() {
+        World::run(2, |comm| {
+            let me = comm.rank();
+            let counts = vec![2usize; 2];
+            let displs = vec![0usize, 2];
+            let s1: Vec<u64> = (0..4).map(|k| (me * 10 + k) as u64).collect();
+            let s2: Vec<u64> = (0..4).map(|k| (me * 10 + k + 500) as u64).collect();
+            let r1 = comm.ialltoallv(&s1, &counts, &displs, &counts, &displs);
+            let r2 = comm.ialltoallv(&s2, &counts, &displs, &counts, &displs);
+            let mut b1 = vec![0u64; 4];
+            let mut b2 = vec![0u64; 4];
+            waitall(vec![
+                (r2, crate::simmpi::as_bytes_mut(&mut b2)),
+                (r1, crate::simmpi::as_bytes_mut(&mut b1)),
+            ]);
+            for q in 0..2 {
+                assert_eq!(b1[2 * q], (q * 10 + me * 2) as u64);
+                assert_eq!(b2[2 * q], (q * 10 + me * 2 + 500) as u64);
+            }
+        });
+    }
+}

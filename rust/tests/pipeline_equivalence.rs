@@ -1,0 +1,247 @@
+//! Equivalence suite for the pipelined/persistent execution paths: every
+//! overlapped or plan-reusing schedule must produce **bitwise-identical**
+//! results to the blocking one-shot `alltoallw` exchange — chunking and
+//! overlap only reorder the data movement, never the data.
+
+use a2wfft::decomp::decompose;
+use a2wfft::fft::{Complex64, NativeFft};
+use a2wfft::pfft::{ExecMode, Kind, PfftPlan, RedistMethod};
+use a2wfft::redistribute::{exchange, subarray_types, PipelinedRedistPlan};
+use a2wfft::simmpi::World;
+
+/// Small deterministic PRNG (xorshift64*), as in `property_invariants`.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+    }
+}
+
+#[test]
+fn pipelined_redist_bitwise_matches_blocking_random_cases() {
+    let mut rng = Rng::new(11);
+    for case in 0..20 {
+        let d = rng.range(3, 4);
+        let global: Vec<usize> = (0..d).map(|_| rng.range(2, 9)).collect();
+        let nprocs = rng.range(2, 5);
+        let axis_a = rng.below(d);
+        let mut axis_b = rng.below(d);
+        while axis_b == axis_a {
+            axis_b = rng.below(d);
+        }
+        let chunks = rng.range(1, 6);
+        let depth = rng.range(1, chunks);
+        let seed = rng.next_u64();
+        let global_c = global.clone();
+        World::run(nprocs, move |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let mut sizes_a = global_c.clone();
+            let mut sizes_b = global_c.clone();
+            sizes_a[axis_b] = decompose(global_c[axis_b], m, me).0;
+            sizes_b[axis_a] = decompose(global_c[axis_a], m, me).0;
+            let mut lr = Rng::new(seed ^ (me as u64 + 1));
+            let a: Vec<f64> =
+                (0..sizes_a.iter().product::<usize>()).map(|_| lr.f64()).collect();
+            let mut blocking = vec![0.0f64; sizes_b.iter().product()];
+            exchange(&comm, &a, &sizes_a, axis_a, &mut blocking, &sizes_b, axis_b);
+            let plan = PipelinedRedistPlan::new(
+                &comm, 8, &sizes_a, axis_a, &sizes_b, axis_b, chunks, depth,
+            );
+            let mut piped = vec![0.0f64; sizes_b.iter().product()];
+            plan.execute(&a, &mut piped);
+            let bitwise = blocking
+                .iter()
+                .zip(&piped)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(
+                bitwise,
+                "case {case} rank {me}: pipelined (chunks={chunks}, depth={depth}) != blocking"
+            );
+            // And the reverse path restores A bitwise.
+            let mut back = vec![0.0f64; a.len()];
+            plan.execute_back(&piped, &mut back);
+            assert!(
+                a.iter().zip(&back).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "case {case} rank {me}: pipelined roundtrip not bitwise"
+            );
+        });
+    }
+}
+
+#[test]
+fn overlap_depth_sweep_is_invariant() {
+    // Same exchange, every (chunks, depth) combination: all results equal.
+    let global = [8usize, 10, 6];
+    World::run(4, |comm| {
+        let m = comm.size();
+        let me = comm.rank();
+        let sizes_a = [global[0], decompose(global[1], m, me).0, global[2]];
+        let sizes_b = [decompose(global[0], m, me).0, global[1], global[2]];
+        let a: Vec<f64> =
+            (0..sizes_a.iter().product::<usize>()).map(|k| (me * 7919 + k) as f64).collect();
+        let mut reference = vec![0.0f64; sizes_b.iter().product()];
+        exchange(&comm, &a, &sizes_a, 0, &mut reference, &sizes_b, 1);
+        for chunks in [1usize, 2, 3, 6] {
+            for depth in [1usize, 2, chunks.max(1)] {
+                let plan = PipelinedRedistPlan::new(
+                    &comm, 8, &sizes_a, 0, &sizes_b, 1, chunks, depth,
+                );
+                let mut got = vec![0.0f64; reference.len()];
+                plan.execute(&a, &mut got);
+                assert_eq!(
+                    reference, got,
+                    "rank {me}: chunks={chunks} depth={depth} diverged"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn persistent_plan_three_executions_bitwise_stable() {
+    // The satellite requirement: >= 3 executions of one persistent plan,
+    // each bitwise identical to the blocking collective on the same data.
+    World::run(4, |comm| {
+        let me = comm.rank();
+        let sizes = [4usize, 12, 5];
+        // Partition axis 1 for sends, axis 0 of the transposed shape for
+        // receives — the standard slab exchange datatypes.
+        let sizes_b = [16usize, 3, 5];
+        let send_t = subarray_types(&sizes, 1, 4, 8);
+        let recv_t = subarray_types(&sizes_b, 0, 4, 8);
+        let plan = comm.alltoallw_init(&send_t, &recv_t);
+        for round in 0..3 {
+            let a: Vec<f64> = (0..sizes.iter().product::<usize>())
+                .map(|k| ((me + 1) * (round + 2) * 1000 + k) as f64 * 1.25)
+                .collect();
+            let mut blocking = vec![0.0f64; sizes_b.iter().product()];
+            comm.alltoallw_typed(&a, &send_t, &mut blocking, &recv_t);
+            let mut persistent = vec![0.0f64; sizes_b.iter().product()];
+            plan.execute_typed(&a, &mut persistent);
+            let bitwise = blocking
+                .iter()
+                .zip(&persistent)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(bitwise, "rank {me} round {round}: persistent plan diverged");
+        }
+    });
+}
+
+/// Forward spectra of the same input under blocking and pipelined
+/// execution must agree bitwise (the per-line serial transforms are
+/// identical; only their interleaving with communication changes).
+fn check_exec_modes_bitwise(global: &[usize], dims: &[usize], nprocs: usize, kind: Kind) {
+    let global = global.to_vec();
+    let dims = dims.to_vec();
+    World::run(nprocs, move |comm| {
+        let mut eng = NativeFft::new();
+        let mut spectra: Vec<Vec<Complex64>> = Vec::new();
+        for exec in [
+            ExecMode::Blocking,
+            ExecMode::Pipelined { depth: 2 },
+            ExecMode::Pipelined { depth: 4 },
+        ] {
+            let mut plan = PfftPlan::with_exec(
+                &comm,
+                &global,
+                &dims,
+                kind,
+                RedistMethod::Alltoallw,
+                exec,
+            );
+            let mut output = vec![Complex64::ZERO; plan.output_len()];
+            match kind {
+                Kind::C2c => {
+                    let input: Vec<Complex64> = (0..plan.input_len())
+                        .map(|k| {
+                            Complex64::new(
+                                ((k * 31 + comm.rank() * 7) % 101) as f64 / 101.0,
+                                ((k * 17) % 89) as f64 / 89.0,
+                            )
+                        })
+                        .collect();
+                    plan.forward(&mut eng, &input, &mut output);
+                }
+                Kind::R2c => {
+                    let input: Vec<f64> = (0..plan.input_len())
+                        .map(|k| ((k * 31 + comm.rank() * 7) % 101) as f64 / 101.0)
+                        .collect();
+                    plan.forward_r2c(&mut eng, &input, &mut output);
+                }
+            }
+            spectra.push(output);
+        }
+        for (i, spec) in spectra.iter().enumerate().skip(1) {
+            let bitwise = spectra[0].iter().zip(spec).all(|(x, y)| {
+                x.re.to_bits() == y.re.to_bits() && x.im.to_bits() == y.im.to_bits()
+            });
+            assert!(bitwise, "rank {}: exec mode variant {i} diverged", comm.rank());
+        }
+    });
+}
+
+#[test]
+fn pfft_slab_c2c_exec_modes_bitwise_equal() {
+    check_exec_modes_bitwise(&[8, 12, 10], &[4], 4, Kind::C2c);
+}
+
+#[test]
+fn pfft_pencil_c2c_exec_modes_bitwise_equal() {
+    check_exec_modes_bitwise(&[8, 12, 10], &[3, 2], 6, Kind::C2c);
+}
+
+#[test]
+fn pfft_pencil_r2c_exec_modes_bitwise_equal() {
+    check_exec_modes_bitwise(&[8, 6, 10], &[2, 2], 4, Kind::R2c);
+}
+
+#[test]
+fn pfft_pipelined_roundtrip_uneven() {
+    // Uneven mesh over an uneven grid, full forward+backward in pipelined
+    // mode: must reproduce the input to fp accuracy (same as blocking).
+    let global = vec![7usize, 9, 5];
+    World::run(3, |comm| {
+        let mut plan = PfftPlan::with_exec(
+            &comm,
+            &global,
+            &[3],
+            Kind::C2c,
+            RedistMethod::Alltoallw,
+            ExecMode::Pipelined { depth: 3 },
+        );
+        let mut eng = NativeFft::new();
+        let input: Vec<Complex64> = (0..plan.input_len())
+            .map(|k| Complex64::new((k as f64 * 0.37).sin(), (k as f64 * 0.23).cos()))
+            .collect();
+        let mut spec = vec![Complex64::ZERO; plan.output_len()];
+        plan.forward(&mut eng, &input, &mut spec);
+        let mut back = vec![Complex64::ZERO; plan.input_len()];
+        plan.backward(&mut eng, &spec, &mut back);
+        let err = a2wfft::fft::max_abs_diff(&input, &back);
+        assert!(err < 1e-10, "rank {}: pipelined roundtrip err {err}", comm.rank());
+        // Overlap timers recorded the pipelined stages.
+        assert!(plan.timers.overlap_fft + plan.timers.overlap_comm > 0.0);
+        assert_eq!(plan.exec_mode(), ExecMode::Pipelined { depth: 3 });
+    });
+}

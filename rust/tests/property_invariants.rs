@@ -7,6 +7,9 @@
 //! * redistribution: exchange followed by its reverse is the identity, and
 //!   the new method agrees element-wise with the traditional baseline, for
 //!   random shapes / axis pairs / group sizes;
+//! * nonblocking collectives: a batch of outstanding requests waited in an
+//!   arbitrary per-rank permutation yields the same buffers as the
+//!   blocking collectives (completion-order independence);
 //! * serial FFT: random lengths vs the O(N^2) DFT.
 
 use a2wfft::decomp::{decompose, decompose_all};
@@ -169,6 +172,64 @@ fn prop_exchange_roundtrip_and_method_agreement() {
             let mut back = vec![0.0f64; elems_a];
             exchange(&comm, &b1, &sizes_b, axis_b, &mut back, &sizes_a, axis_a);
             assert_eq!(a, back, "case {case}: roundtrip failed");
+        });
+    }
+}
+
+#[test]
+fn prop_waitall_completion_order_independence() {
+    // N outstanding nonblocking collectives, waited in a random (per-rank,
+    // per-case) permutation: every buffer must match the corresponding
+    // blocking collective. Initiation order is identical on all ranks (the
+    // MPI ordering rule); completion order is deliberately scrambled and
+    // may differ across ranks.
+    let mut rng = Rng::new(7);
+    for case in 0..12 {
+        let nprocs = rng.range(2, 5);
+        let nops = rng.range(2, 6);
+        let seed = rng.next_u64();
+        World::run(nprocs, move |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let counts = vec![3usize; m];
+            let displs: Vec<usize> = (0..m).map(|p| 3 * p).collect();
+            let mut lr = Rng::new(seed ^ (me as u64).wrapping_mul(0x5851F42D4C957F2D));
+            // Deterministic per-op payloads (recomputable for the blocking
+            // reference below).
+            let payload = |op: usize| -> Vec<u64> {
+                (0..3 * m)
+                    .map(|k| (op * 1_000_000 + me * 1000 + k) as u64)
+                    .collect()
+            };
+            // Blocking reference, one op at a time.
+            let mut want: Vec<Vec<u64>> = Vec::new();
+            for op in 0..nops {
+                let mut out = vec![0u64; 3 * m];
+                comm.alltoall(&payload(op), &mut out);
+                want.push(out);
+            }
+            // All ops outstanding at once, then waited in a random
+            // permutation (different on every rank).
+            let reqs: Vec<a2wfft::simmpi::Request> = (0..nops)
+                .map(|op| comm.ialltoallv(&payload(op), &counts, &displs, &counts, &displs))
+                .collect();
+            let mut order: Vec<usize> = (0..nops).collect();
+            for i in (1..nops).rev() {
+                order.swap(i, lr.below(i + 1));
+            }
+            let mut got: Vec<Vec<u64>> = vec![vec![0u64; 3 * m]; nops];
+            let mut slots: Vec<Option<a2wfft::simmpi::Request>> =
+                reqs.into_iter().map(Some).collect();
+            for &op in &order {
+                let req = slots[op].take().unwrap();
+                req.wait_typed(&mut got[op]);
+            }
+            for op in 0..nops {
+                assert_eq!(
+                    want[op], got[op],
+                    "case {case} rank {me} op {op}: permuted wait diverged (order {order:?})"
+                );
+            }
         });
     }
 }
