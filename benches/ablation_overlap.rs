@@ -68,10 +68,12 @@ fn redist_only_section(global: [usize; 3], ranks: usize) {
         let recv_t = subarray_types(&sizes_b, 1, m, 8);
         let pplan = comm.alltoallw_init(&send_t, &recv_t);
         let t_persistent = timed_collective(&comm, iters, || pplan.execute_typed(&a, &mut b));
-        // Pipelined at several depths.
+        // Pipelined at several depths (plans own their arenas and in-flight
+        // state, hence the `mut` binding).
         let mut piped = Vec::new();
         for depth in [2usize, 4, 8] {
-            let pl = PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, depth, depth);
+            let mut pl =
+                PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, depth, depth);
             let t = timed_collective(&comm, iters, || pl.execute(&a, &mut b));
             piped.push((depth, t));
         }

@@ -1,10 +1,22 @@
-//! Ablation: the datatype-engine fast paths. Measures pack/unpack
-//! throughput of subarray datatypes (the engine work inside `alltoallw`)
-//! against a plain memcpy upper bound and a naive element-wise walk lower
-//! bound, across chunk geometries (contiguous-run lengths).
+//! Ablation: the datatype-engine copy paths. Two sections:
+//!
+//! 1. **pack throughput** — pack/unpack of subarray datatypes (the engine
+//!    work inside `alltoallw`) against a plain memcpy upper bound and a
+//!    naive element-wise walk lower bound, across chunk geometries
+//!    (contiguous-run lengths).
+//! 2. **staged vs fused** — the compiled [`TransferPlan`] fused copy
+//!    (`src -> dst` directly, the intra-rank path of every compiled
+//!    redistribution) against the staged reference (pack into a contiguous
+//!    buffer, then unpack) and the memcpy ceiling, at paper-like pencil
+//!    shapes, reporting effective bandwidth on the payload bytes.
+//!
+//! Pass `--tiny` (the CI smoke mode) to shrink every geometry so the whole
+//! binary finishes in well under a second. Results are also written to
+//! `BENCH_ablation_pack.json` for cross-PR tracking.
 
-use a2wfft::coordinator::benchkit::time_best;
-use a2wfft::simmpi::datatype::Datatype;
+use a2wfft::coordinator::benchkit::{time_best, write_bench_json, JsonObj};
+use a2wfft::redistribute::subarray_types;
+use a2wfft::simmpi::datatype::{Datatype, TransferPlan};
 
 fn naive_pack(sizes: &[usize; 3], sub: &[usize; 3], start: &[usize; 3], src: &[u8], dst: &mut [u8]) {
     let mut o = 0;
@@ -19,36 +31,148 @@ fn naive_pack(sizes: &[usize; 3], sub: &[usize; 3], start: &[usize; 3], src: &[u
     }
 }
 
-fn main() {
+fn pack_section(tiny: bool, rows: &mut Vec<String>) {
     println!("=== ablation: datatype-engine pack throughput ===");
     println!("geometry\trun_bytes\tengine_GBs\tnaive_GBs\tmemcpy_GBs");
     // Three geometries: long runs (axis-0 slice), medium (axis-1), short (axis-2).
-    let sizes = [64usize, 64, 128];
+    let sizes = if tiny { [8usize, 8, 16] } else { [64usize, 64, 128] };
     let elem = 8usize;
+    let iters = if tiny { 2 } else { 20 };
     let total = sizes.iter().product::<usize>() * elem;
     let src = vec![7u8; total];
+    let q = |n: usize| n / 4; // quarter-extent slices scale with the mesh
     for (name, sub, start) in [
-        ("axis0-slice(long runs)", [16usize, 64, 128], [24usize, 0, 0]),
-        ("axis1-slice(mid runs)", [64, 16, 128], [0, 24, 0]),
-        ("axis2-slice(short runs)", [64, 64, 32], [0, 0, 48]),
+        ("axis0-slice(long runs)", [q(sizes[0]), sizes[1], sizes[2]], [q(sizes[0]), 0, 0]),
+        ("axis1-slice(mid runs)", [sizes[0], q(sizes[1]), sizes[2]], [0, q(sizes[1]), 0]),
+        ("axis2-slice(short runs)", [sizes[0], sizes[1], q(sizes[2])], [0, 0, q(sizes[2])]),
     ] {
         let dt = Datatype::subarray(&sizes, &sub, &start, elem).unwrap();
         let packed = dt.packed_size();
         let mut dst = vec![0u8; packed];
-        let t_engine = time_best(20, || dt.pack(&src, &mut dst));
+        let t_engine = time_best(iters, || dt.pack(&src, &mut dst));
         let mut dst2 = vec![0u8; sub.iter().product::<usize>()];
-        let src1 = vec![7u8; sub.iter().product::<usize>()];
-        let t_naive = time_best(20, || naive_pack(&sizes, &sub, &start, &src, &mut dst2));
+        let t_naive = time_best(iters, || naive_pack(&sizes, &sub, &start, &src, &mut dst2));
         let mut dstm = vec![0u8; packed];
-        let t_memcpy = time_best(20, || dstm.copy_from_slice(&src[..packed]));
+        let t_memcpy = time_best(iters, || dstm.copy_from_slice(&src[..packed]));
         let runs = dt.runs();
-        println!(
-            "{name}\t{}\t{:.2}\t{:.2}\t{:.2}",
-            runs.run_len,
+        let (engine_gbs, naive_gbs, memcpy_gbs) = (
             packed as f64 / t_engine / 1e9,
             dst2.len() as f64 / t_naive / 1e9,
-            packed as f64 / t_memcpy / 1e9
+            packed as f64 / t_memcpy / 1e9,
         );
-        let _ = src1;
+        println!(
+            "{name}\t{}\t{engine_gbs:.2}\t{naive_gbs:.2}\t{memcpy_gbs:.2}",
+            runs.run_len
+        );
+        rows.push(
+            JsonObj::new()
+                .str("section", "pack")
+                .str("geometry", name)
+                .int("run_bytes", runs.run_len as u64)
+                .int("payload_bytes", packed as u64)
+                .num("engine_gb_per_s", engine_gbs)
+                .num("naive_gb_per_s", naive_gbs)
+                .num("memcpy_gb_per_s", memcpy_gbs)
+                .render(),
+        );
+    }
+}
+
+/// Paper-like pencil/slab shapes: the intra-rank (self) block of a real
+/// redistribution — the `me`-th entry of the Alg. 2 subarray partitions on
+/// both sides — staged through pack->unpack vs the compiled fused copy.
+/// Returns the acceptance failures (fused not beating staged) so `main`
+/// can report them *after* the JSON artifact is safely written.
+fn fused_section(tiny: bool, rows: &mut Vec<String>) -> Vec<String> {
+    let mut failures = Vec::new();
+    println!("\n=== ablation: staged pack->unpack vs fused TransferPlan vs memcpy ===");
+    println!("shape\tops\tstaged_GBs\tfused_GBs\tmemcpy_GBs\tfused_vs_staged");
+    let elem = 16usize; // Complex64 payloads, as in the transforms
+    let iters = if tiny { 3 } else { 30 };
+    // (label, sizes_a, axis_a, sizes_b, axis_b, ranks): local shapes of a
+    // v->w exchange over an m-rank subgroup, as in RedistPlan::new.
+    type Case = (&'static str, [usize; 3], usize, [usize; 3], usize, usize);
+    let shapes: &[Case] = if tiny {
+        &[("slab-16/p4-1to0", [4, 16, 8], 1, [16, 4, 8], 0, 4)]
+    } else {
+        &[
+            // Slab step 1->0: recv side lands contiguously (long runs).
+            ("slab-128^3/p8-1to0", [16, 128, 128], 1, [128, 16, 128], 0, 8),
+            // Pencil step 2->1: both sides strided (short vs mid runs).
+            ("pencil-128^3/p8-2to1", [16, 16, 128], 2, [16, 128, 16], 1, 8),
+            ("pencil-256/p8-2to1", [8, 32, 256], 2, [8, 256, 32], 1, 8),
+        ]
+    };
+    for &(name, sizes_a, axis_a, sizes_b, axis_b, m) in shapes {
+        let me = m / 2; // a middle rank's block
+        let send = subarray_types(&sizes_a, axis_a, m, elem).swap_remove(me);
+        let recv = subarray_types(&sizes_b, axis_b, m, elem).swap_remove(me);
+        let payload = send.packed_size();
+        assert_eq!(payload, recv.packed_size(), "{name}: inconsistent case");
+        let src = vec![5u8; sizes_a.iter().product::<usize>() * elem];
+        let mut dst = vec![0u8; sizes_b.iter().product::<usize>() * elem];
+        // Staged reference: pack through cached runs into a preallocated
+        // staging buffer, then unpack (the pre-TransferPlan engine).
+        let (sruns, rruns) = (send.runs(), recv.runs());
+        let mut staging = vec![0u8; payload];
+        let t_staged = time_best(iters, || {
+            sruns.pack(&src, &mut staging);
+            rruns.unpack(&staging, &mut dst);
+        });
+        // Fused: compiled once, zero staging.
+        let plan = TransferPlan::from_runs(&sruns, &rruns);
+        let t_fused = time_best(iters, || plan.execute(&src, &mut dst));
+        // Ceiling: one contiguous pass over the payload.
+        let mut flat = vec![0u8; payload];
+        let t_memcpy = time_best(iters, || flat.copy_from_slice(&src[..payload]));
+        let (staged_gbs, fused_gbs, memcpy_gbs) = (
+            payload as f64 / t_staged / 1e9,
+            payload as f64 / t_fused / 1e9,
+            payload as f64 / t_memcpy / 1e9,
+        );
+        println!(
+            "{name}\t{}\t{staged_gbs:.2}\t{fused_gbs:.2}\t{memcpy_gbs:.2}\t{:.2}x",
+            plan.op_count(),
+            fused_gbs / staged_gbs
+        );
+        rows.push(
+            JsonObj::new()
+                .str("section", "fused")
+                .str("shape", name)
+                .int("payload_bytes", payload as u64)
+                .int("fused_ops", plan.op_count() as u64)
+                .num("staged_gb_per_s", staged_gbs)
+                .num("fused_gb_per_s", fused_gbs)
+                .num("memcpy_gb_per_s", memcpy_gbs)
+                .num("fused_vs_staged", fused_gbs / staged_gbs)
+                .render(),
+        );
+        if !tiny && t_fused >= t_staged {
+            // The fused path must beat the staged path: it touches the
+            // payload once instead of twice (acceptance gate; skipped in
+            // the noisy tiny/CI mode, and reported only after the JSON
+            // artifact is written).
+            failures.push(format!(
+                "{name}: fused ({t_fused:.3e}s) not faster than staged ({t_staged:.3e}s)"
+            ));
+        }
+    }
+    failures
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let mut rows = Vec::new();
+    pack_section(tiny, &mut rows);
+    let failures = fused_section(tiny, &mut rows);
+    match write_bench_json("ablation_pack", &rows) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_ablation_pack.json: {e}"),
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("ACCEPTANCE FAILURE: {f}");
+        }
+        std::process::exit(1);
     }
 }

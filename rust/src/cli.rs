@@ -13,6 +13,9 @@
 //! * `--overlap-depth K` — chunk count and in-flight window of the
 //!   pipelined mode (default 4). `K = 1`, or a mesh with no free axis to
 //!   chunk (2-D arrays), falls back to blocking behaviour.
+//! * `--json` — print the run result as one machine-readable JSON object
+//!   (same row shape as the `BENCH_*.json` files the benches emit; see
+//!   [`crate::coordinator::benchkit::report_json`]).
 
 use std::collections::HashMap;
 

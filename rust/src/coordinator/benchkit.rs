@@ -6,6 +6,15 @@
 //! * **real** — actual execution of the reduced-scale counterpart on the
 //!   simmpi substrate (both redistribution methods where relevant);
 //! * **model** — the netmodel reproduction at the paper's scale.
+//!
+//! Benches additionally emit machine-readable `BENCH_<name>.json` files
+//! ([`write_bench_json`]) carrying per-stage timings and the datatype
+//! engine's fused-vs-staged byte attribution, so the perf trajectory is
+//! comparable across PRs; `repro run --json` prints the same row shape
+//! ([`report_json`]) to stdout.
+
+use std::io::Write as _;
+use std::path::PathBuf;
 
 use crate::coordinator::config::{EngineKind, RunConfig};
 use crate::coordinator::driver::{run_config, RunReport};
@@ -99,4 +108,135 @@ pub fn time_best<F: FnMut()>(iters: usize, mut f: F) -> f64 {
         best = best.min(t0.elapsed().as_secs_f64() / iters as f64);
     }
     best
+}
+
+/// Minimal JSON object builder (the offline crate set has no serde).
+/// Field order is preserved; values are escaped/validated per type.
+#[derive(Debug, Default)]
+pub struct JsonObj {
+    fields: Vec<(String, String)>,
+}
+
+impl JsonObj {
+    pub fn new() -> JsonObj {
+        JsonObj::default()
+    }
+
+    fn push(mut self, key: &str, rendered: String) -> JsonObj {
+        self.fields.push((json_escape(key), rendered));
+        self
+    }
+
+    /// String field (escaped).
+    pub fn str(self, key: &str, value: &str) -> JsonObj {
+        let v = format!("\"{}\"", json_escape(value));
+        self.push(key, v)
+    }
+
+    /// Floating-point field (`null` when non-finite — JSON has no inf/NaN).
+    pub fn num(self, key: &str, value: f64) -> JsonObj {
+        let v = if value.is_finite() { format!("{value}") } else { "null".to_string() };
+        self.push(key, v)
+    }
+
+    /// Integer field.
+    pub fn int(self, key: &str, value: u64) -> JsonObj {
+        self.push(key, format!("{value}"))
+    }
+
+    /// Pre-rendered JSON value (arrays, nested objects); the caller
+    /// guarantees validity.
+    pub fn raw(self, key: &str, value: String) -> JsonObj {
+        self.push(key, value)
+    }
+
+    pub fn render(&self) -> String {
+        let body: Vec<String> = self.fields.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        format!("{{{}}}", body.join(", "))
+    }
+}
+
+/// Escape a string for inclusion in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a `[a, b, c]` JSON array of integers (for shapes/grids).
+pub fn json_usize_array(xs: &[usize]) -> String {
+    let body: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", body.join(", "))
+}
+
+/// One machine-readable result row: label, configuration, per-stage
+/// timings, wire bytes and the engine's fused-vs-staged copy attribution.
+pub fn report_json(label: &str, global: &[usize], ranks: usize, rep: &RunReport) -> String {
+    JsonObj::new()
+        .str("label", label)
+        .raw("global", json_usize_array(global))
+        .int("ranks", ranks as u64)
+        .num("total_s", rep.total)
+        .num("fft_s", rep.fft)
+        .num("redist_s", rep.redist)
+        .num("overlap_fft_s", rep.overlap_fft)
+        .num("overlap_comm_s", rep.overlap_comm)
+        .int("bytes", rep.bytes)
+        .int("fused_copy_bytes", rep.fused_bytes)
+        .int("staged_pack_unpack_bytes", rep.staged_bytes)
+        .num("throughput_pts_per_s", rep.throughput(global))
+        .num("max_err", rep.max_err)
+        .render()
+}
+
+/// Write `BENCH_<name>.json` in the current directory: a single object
+/// with the bench name and the collected rows. Returns the path written.
+pub fn write_bench_json(name: &str, rows: &[String]) -> std::io::Result<PathBuf> {
+    let path = PathBuf::from(format!("BENCH_{name}.json"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"{}\",", json_escape(name))?;
+    writeln!(f, "  \"rows\": [")?;
+    for (i, row) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        writeln!(f, "    {row}{sep}")?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_obj_renders_in_order() {
+        let s = JsonObj::new()
+            .str("label", "a\"b")
+            .int("n", 7)
+            .num("t", 1.5)
+            .num("bad", f64::NAN)
+            .raw("shape", json_usize_array(&[4, 5]))
+            .render();
+        assert_eq!(
+            s,
+            "{\"label\": \"a\\\"b\", \"n\": 7, \"t\": 1.5, \"bad\": null, \"shape\": [4, 5]}"
+        );
+    }
+
+    #[test]
+    fn json_escape_control_chars() {
+        assert_eq!(json_escape("x\ny\t\u{1}"), "x\\ny\\t\\u0001");
+    }
 }

@@ -26,6 +26,12 @@ pub struct RunReport {
     pub overlap_comm: f64,
     /// Bytes exchanged per pair (summed over ranks).
     pub bytes: u64,
+    /// Datatype-engine bytes per pair moved by fused transfer-plan copies
+    /// (summed over ranks; approximate when other worlds run concurrently —
+    /// the engine counters are process-global).
+    pub fused_bytes: u64,
+    /// Datatype-engine bytes per pair moved through staged pack/unpack.
+    pub staged_bytes: u64,
     /// Max roundtrip error observed (input vs forward+backward output).
     pub max_err: f64,
 }
@@ -53,6 +59,7 @@ fn make_engine(kind: EngineKind) -> Box<dyn SerialFft> {
 pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
     let cfg = cfg.clone();
     let grid = cfg.resolved_grid(grid_ndims);
+    let engine_stats0 = crate::simmpi::datatype::stats::snapshot();
     let reports = World::run(cfg.ranks, |comm| {
         let mut plan =
             PfftPlan::with_exec(&comm, &cfg.global, &grid, cfg.kind, cfg.method, cfg.exec);
@@ -134,6 +141,11 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
         (m, err[0])
     });
     let (m, err) = reports[0];
+    // Engine-side copy accounting: process-global counter delta over the
+    // whole run (all ranks, warmups included), scaled to one fwd+bwd pair
+    // like the wire bytes.
+    let es = crate::simmpi::datatype::stats::snapshot().since(&engine_stats0);
+    let pair_scale = 1.0 / (cfg.inner * cfg.outer) as f64;
     RunReport {
         total: m.total,
         fft: m.fft,
@@ -141,6 +153,8 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
         overlap_fft: m.overlap_fft,
         overlap_comm: m.overlap_comm,
         bytes: m.bytes,
+        fused_bytes: (es.fused_bytes as f64 * pair_scale) as u64,
+        staged_bytes: ((es.packed_bytes + es.unpacked_bytes) as f64 * pair_scale) as u64,
         max_err: err,
     }
 }

@@ -21,7 +21,12 @@
 //!   (`ialltoallv`/`ialltoallw` with `Request::{test,wait}`/`waitall`) and
 //!   **persistent** (`alltoallw_init` → `start` → `wait`) collectives of
 //!   [`simmpi::nonblocking`], which cache the flattened datatype
-//!   representation across executions. This stands in for MPICH on the
+//!   representation across executions. The engine's second layer compiles
+//!   (send, recv) datatype pairs into fused **transfer plans**
+//!   ([`simmpi::TransferPlan`]): intra-rank bytes copy `src -> dst` with no
+//!   intermediate buffer, wire staging recycles through arenas, and
+//!   steady-state plan executions perform zero heap allocations (see
+//!   `EXPERIMENTS.md`). This stands in for MPICH on the
 //!   paper's Cray XC40 (see `DESIGN.md` §3 for the substitution argument).
 //! * [`decomp`] — Alg. 1: balanced block-contiguous decompositions, and
 //!   local-shape computation for arbitrary alignments/grids.

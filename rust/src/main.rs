@@ -19,7 +19,7 @@ use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["help"]);
+    let args = Args::parse(argv, &["help", "json"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
@@ -38,7 +38,7 @@ fn print_help() {
          \x20 repro run [--global N,N,N] [--ranks R] [--grid G,G] [--kind r2c|c2c]\n\
          \x20           [--method alltoallw|traditional] [--engine native|xla]\n\
          \x20           [--exec blocking|pipelined] [--overlap-depth K]\n\
-         \x20           [--inner I] [--outer O]\n\
+         \x20           [--inner I] [--outer O] [--json]\n\
          \x20 repro figure <6|7|8|9|10|11>\n\
          \x20 repro selftest\n\
          \x20 repro info\n\
@@ -49,7 +49,14 @@ fn print_help() {
          \x20            persistent nonblocking ALLTOALLW exchanges and overlap the\n\
          \x20            serial FFT of received chunks with in-flight communication\n\
          \x20            (requires --method alltoallw; default depth 4; depth 1 or a\n\
-         \x20            2-D mesh falls back to blocking)"
+         \x20            2-D mesh falls back to blocking)\n\
+         \n\
+         OUTPUT:\n\
+         \x20 --json     print the run result as one machine-readable JSON object\n\
+         \x20            (per-stage timings, wire bytes, and the datatype engine's\n\
+         \x20            fused-copy vs staged pack/unpack byte attribution) instead\n\
+         \x20            of the TSV row — the same row shape the benches write to\n\
+         \x20            BENCH_*.json files"
     );
 }
 
@@ -94,21 +101,28 @@ fn cmd_run(args: &Args) {
         outer: args.get_usize("outer", 5),
     };
     let rep = run_config(&cfg, grid_ndims);
+    if args.has_flag("json") {
+        let label = format!("run/{:?}/{:?}/{:?}/{}", kind, method, exec, engine.name());
+        println!("{}", a2wfft::coordinator::benchkit::report_json(&label, &global, ranks, &rep));
+        return;
+    }
     println!(
         "# global={global:?} ranks={ranks} kind={kind:?} method={method:?} exec={exec:?} engine={}",
         engine.name()
     );
     println!(
-        "total_s\tfft_s\tredist_s\toverlap_fft_s\toverlap_comm_s\tbytes\tthroughput_pts_per_s\tmax_err"
+        "total_s\tfft_s\tredist_s\toverlap_fft_s\toverlap_comm_s\tbytes\tfused_bytes\tstaged_bytes\tthroughput_pts_per_s\tmax_err"
     );
     println!(
-        "{:.6}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.3e}\t{:.3e}",
+        "{:.6}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{}\t{}\t{:.3e}\t{:.3e}",
         rep.total,
         rep.fft,
         rep.redist,
         rep.overlap_fft,
         rep.overlap_comm,
         rep.bytes,
+        rep.fused_bytes,
+        rep.staged_bytes,
         rep.throughput(&global),
         rep.max_err
     );

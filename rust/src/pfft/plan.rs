@@ -63,7 +63,9 @@ enum RedistKind {
 }
 
 impl RedistKind {
-    fn execute(&self, a: &[Complex64], b: &mut [Complex64]) {
+    // Plans own their execution state (staging arenas, in-flight windows),
+    // so execution takes `&mut self` across every kind.
+    fn execute(&mut self, a: &[Complex64], b: &mut [Complex64]) {
         match self {
             RedistKind::New(p) => p.execute(a, b),
             RedistKind::Trad(p) => p.execute(a, b),
@@ -71,7 +73,7 @@ impl RedistKind {
         }
     }
 
-    fn execute_back(&self, b: &[Complex64], a: &mut [Complex64]) {
+    fn execute_back(&mut self, b: &[Complex64], a: &mut [Complex64]) {
         match self {
             RedistKind::New(p) => p.execute_back(b, a),
             RedistKind::Trad(p) => p.execute_back(b, a),
@@ -125,6 +127,12 @@ pub enum Kind {
 /// Created collectively by every rank of `comm`; holds the per-rank local
 /// buffers, the redistribution plans for every alignment step, and stage
 /// timers. Drive it with [`PfftPlan::forward`] / [`PfftPlan::backward`].
+///
+/// Each redistribution plan carries its *compiled* execution state —
+/// flattened datatypes, fused [`crate::simmpi::TransferPlan`]s, staging
+/// arenas and chunk scratch — created once here and reused by every
+/// forward/backward transform across all alignment stages, so steady-state
+/// transforms do not re-flatten datatypes or reallocate staging.
 pub struct PfftPlan {
     /// Global *real-space* shape (for `C2c` this equals the complex shape).
     global: Vec<usize>,
@@ -451,25 +459,28 @@ impl PfftPlan {
         let r = self.dims.len();
         for t in (0..r).rev() {
             let (lo, hi) = self.bufs.split_at_mut(t + 1);
-            if let RedistKind::Piped(p) = &self.redists[t] {
-                let mut fft_s = 0.0f64;
-                let t0 = Instant::now();
-                p.execute_chunked(&hi[0], &mut lo[t], |chunk, shape| {
-                    let tc = Instant::now();
-                    engine.c2c(chunk, shape, t, dir);
-                    fft_s += tc.elapsed().as_secs_f64();
-                });
-                let wall = t0.elapsed().as_secs_f64();
-                self.timers.overlap_fft += fft_s;
-                self.timers.overlap_comm += wall - fft_s;
-            } else {
-                let t0 = Instant::now();
-                self.redists[t].execute(&hi[0], &mut lo[t]);
-                self.timers.redist += t0.elapsed().as_secs_f64();
-                let t1 = Instant::now();
-                let shape = self.shapes[t].clone();
-                engine.c2c(&mut lo[t], &shape, t, dir);
-                self.timers.fft += t1.elapsed().as_secs_f64();
+            match &mut self.redists[t] {
+                RedistKind::Piped(p) => {
+                    let mut fft_s = 0.0f64;
+                    let t0 = Instant::now();
+                    p.execute_chunked(&hi[0], &mut lo[t], |chunk, shape| {
+                        let tc = Instant::now();
+                        engine.c2c(chunk, shape, t, dir);
+                        fft_s += tc.elapsed().as_secs_f64();
+                    });
+                    let wall = t0.elapsed().as_secs_f64();
+                    self.timers.overlap_fft += fft_s;
+                    self.timers.overlap_comm += wall - fft_s;
+                }
+                blocking => {
+                    let t0 = Instant::now();
+                    blocking.execute(&hi[0], &mut lo[t]);
+                    self.timers.redist += t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    let shape = self.shapes[t].clone();
+                    engine.c2c(&mut lo[t], &shape, t, dir);
+                    self.timers.fft += t1.elapsed().as_secs_f64();
+                }
             }
         }
     }
@@ -482,25 +493,28 @@ impl PfftPlan {
         let r = self.dims.len();
         for t in 0..r {
             let (lo, hi) = self.bufs.split_at_mut(t + 1);
-            if let RedistKind::Piped(p) = &self.redists[t] {
-                let mut fft_s = 0.0f64;
-                let t0 = Instant::now();
-                p.execute_back_chunked(&lo[t], &mut hi[0], |chunk, shape| {
-                    let tc = Instant::now();
-                    engine.c2c(chunk, shape, t, Direction::Backward);
-                    fft_s += tc.elapsed().as_secs_f64();
-                });
-                let wall = t0.elapsed().as_secs_f64();
-                self.timers.overlap_fft += fft_s;
-                self.timers.overlap_comm += wall - fft_s;
-            } else {
-                let t0 = Instant::now();
-                let shape = self.shapes[t].clone();
-                engine.c2c(&mut lo[t], &shape, t, Direction::Backward);
-                self.timers.fft += t0.elapsed().as_secs_f64();
-                let t1 = Instant::now();
-                self.redists[t].execute_back(&lo[t], &mut hi[0]);
-                self.timers.redist += t1.elapsed().as_secs_f64();
+            match &mut self.redists[t] {
+                RedistKind::Piped(p) => {
+                    let mut fft_s = 0.0f64;
+                    let t0 = Instant::now();
+                    p.execute_back_chunked(&lo[t], &mut hi[0], |chunk, shape| {
+                        let tc = Instant::now();
+                        engine.c2c(chunk, shape, t, Direction::Backward);
+                        fft_s += tc.elapsed().as_secs_f64();
+                    });
+                    let wall = t0.elapsed().as_secs_f64();
+                    self.timers.overlap_fft += fft_s;
+                    self.timers.overlap_comm += wall - fft_s;
+                }
+                blocking => {
+                    let t0 = Instant::now();
+                    let shape = self.shapes[t].clone();
+                    engine.c2c(&mut lo[t], &shape, t, Direction::Backward);
+                    self.timers.fft += t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    blocking.execute_back(&lo[t], &mut hi[0]);
+                    self.timers.redist += t1.elapsed().as_secs_f64();
+                }
             }
         }
     }

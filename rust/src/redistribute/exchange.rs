@@ -14,7 +14,7 @@
 
 use crate::decomp::decompose;
 use crate::simmpi::datatype::Datatype;
-use crate::simmpi::{Comm, Pod};
+use crate::simmpi::{AlltoallwPlan, Comm, Pod};
 
 /// Alg. 2: subarray datatypes partitioning `axis` of a local array of shape
 /// `sizes` (element size `elem` bytes) into `nparts` balanced parts.
@@ -43,10 +43,14 @@ pub struct RedistPlan {
     sizes_a: Vec<usize>,
     /// Local shape of the w-aligned array `B`.
     sizes_b: Vec<usize>,
-    /// Send datatypes: partition of `A` along axis `v`.
-    types_a: Vec<Datatype>,
-    /// Receive datatypes: partition of `B` along axis `w`.
-    types_b: Vec<Datatype>,
+    /// Compiled forward collective (`A -> B`): the send datatypes partition
+    /// `A` along axis `v`, the receive datatypes partition `B` along axis
+    /// `w`; flattenings cached, fused self-exchange, arena-recycled payload
+    /// staging.
+    fwd: AlltoallwPlan,
+    /// Compiled reverse collective (`B -> A`): same datatypes, roles
+    /// swapped.
+    bwd: AlltoallwPlan,
     elem: usize,
 }
 
@@ -65,36 +69,21 @@ impl RedistPlan {
         sizes_b: &[usize],
         axis_b: usize,
     ) -> RedistPlan {
-        let d = sizes_a.len();
-        assert_eq!(d, sizes_b.len(), "redist: rank mismatch");
-        assert!(axis_a < d && axis_b < d && axis_a != axis_b, "redist: bad axes");
+        validate_shapes(comm, sizes_a, axis_a, sizes_b, axis_b);
         let m = comm.size();
-        let me = comm.rank();
-        // A is aligned in axis_a: its full global extent is local.
-        // B is aligned in axis_b. The exchanged extents must correspond:
-        // B's axis_a extent is this rank's balanced share of A's axis_a,
-        // and A's axis_b extent is this rank's share of B's axis_b.
-        assert_eq!(
-            sizes_b[axis_a],
-            decompose(sizes_a[axis_a], m, me).0,
-            "redist: B's axis {axis_a} extent is not this rank's share of A's"
-        );
-        assert_eq!(
-            sizes_a[axis_b],
-            decompose(sizes_b[axis_b], m, me).0,
-            "redist: A's axis {axis_b} extent is not this rank's share of B's"
-        );
-        for ax in 0..d {
-            if ax != axis_a && ax != axis_b {
-                assert_eq!(sizes_a[ax], sizes_b[ax], "redist: mismatched axis {ax}");
-            }
-        }
+        let types_a = subarray_types(sizes_a, axis_a, m, elem);
+        let types_b = subarray_types(sizes_b, axis_b, m, elem);
+        // Compile both directions once: the flattenings, the fused
+        // self-exchange and the staging arenas live in the persistent
+        // collective plans and are reused by every execute.
+        let fwd = comm.alltoallw_init(&types_a, &types_b);
+        let bwd = comm.alltoallw_init(&types_b, &types_a);
         RedistPlan {
             comm: comm.clone(),
             sizes_a: sizes_a.to_vec(),
             sizes_b: sizes_b.to_vec(),
-            types_a: subarray_types(sizes_a, axis_a, m, elem),
-            types_b: subarray_types(sizes_b, axis_b, m, elem),
+            fwd,
+            bwd,
             elem,
         }
     }
@@ -110,12 +99,14 @@ impl RedistPlan {
     }
 
     /// Perform the redistribution `A (v-aligned) -> B (w-aligned)`:
-    /// one `alltoallw`, no local remapping (Alg. 3).
+    /// one `alltoallw`, no local remapping (Alg. 3). Executes through the
+    /// compiled persistent plan: cached flattenings, fused intra-rank copy,
+    /// arena-recycled wire staging.
     pub fn execute<T: Pod>(&self, a: &[T], b: &mut [T]) {
         assert_eq!(std::mem::size_of::<T>(), self.elem, "redist: element size mismatch");
         assert_eq!(a.len(), self.elems_a(), "redist: A length mismatch");
         assert_eq!(b.len(), self.elems_b(), "redist: B length mismatch");
-        self.comm.alltoallw_typed(a, &self.types_a, b, &self.types_b);
+        self.fwd.execute_typed(a, b);
     }
 
     /// Perform the reverse redistribution `B (w-aligned) -> A (v-aligned)`.
@@ -125,7 +116,7 @@ impl RedistPlan {
         assert_eq!(std::mem::size_of::<T>(), self.elem, "redist: element size mismatch");
         assert_eq!(b.len(), self.elems_b(), "redist: B length mismatch");
         assert_eq!(a.len(), self.elems_a(), "redist: A length mismatch");
-        self.comm.alltoallw_typed(b, &self.types_b, a, &self.types_a);
+        self.bwd.execute_typed(b, a);
     }
 
     /// The process group this plan redistributes over.
@@ -135,7 +126,44 @@ impl RedistPlan {
 
     /// Total bytes this rank sends per execute (diagnostics/benchmarks).
     pub fn bytes_per_exchange(&self) -> usize {
-        self.types_a.iter().map(|t| t.packed_size()).sum()
+        self.fwd.bytes_per_start()
+    }
+}
+
+/// Check the shape compatibility of a `v -> w` redistribution pair on this
+/// rank (same global array, axes v/w swap their distributed/local role, all
+/// other axes identical), panicking with a precise message otherwise.
+/// Shared by every plan kind over the same alignment pair.
+pub(crate) fn validate_shapes(
+    comm: &Comm,
+    sizes_a: &[usize],
+    axis_a: usize,
+    sizes_b: &[usize],
+    axis_b: usize,
+) {
+    let d = sizes_a.len();
+    assert_eq!(d, sizes_b.len(), "redist: rank mismatch");
+    assert!(axis_a < d && axis_b < d && axis_a != axis_b, "redist: bad axes");
+    let m = comm.size();
+    let me = comm.rank();
+    // A is aligned in axis_a: its full global extent is local.
+    // B is aligned in axis_b. The exchanged extents must correspond:
+    // B's axis_a extent is this rank's balanced share of A's axis_a,
+    // and A's axis_b extent is this rank's share of B's axis_b.
+    assert_eq!(
+        sizes_b[axis_a],
+        decompose(sizes_a[axis_a], m, me).0,
+        "redist: B's axis {axis_a} extent is not this rank's share of A's"
+    );
+    assert_eq!(
+        sizes_a[axis_b],
+        decompose(sizes_b[axis_b], m, me).0,
+        "redist: A's axis {axis_b} extent is not this rank's share of B's"
+    );
+    for ax in 0..d {
+        if ax != axis_a && ax != axis_b {
+            assert_eq!(sizes_a[ax], sizes_b[ax], "redist: mismatched axis {ax}");
+        }
     }
 }
 

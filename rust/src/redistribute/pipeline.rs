@@ -19,6 +19,14 @@
 //! **bitwise identical** to [`super::exchange`] for any chunk count and
 //! overlap depth (see `rust/tests/pipeline_equivalence.rs`).
 //!
+//! The plan owns its entire execution state: per-chunk scratch buffers
+//! ([`AlignedScratch`], preallocated once), compiled gather/scatter
+//! [`TransferPlan`]s between the full arrays and the dense chunk buffers,
+//! and the in-flight request window — which is why the execute methods
+//! take `&mut self`. Steady-state executions allocate nothing on the
+//! intra-rank path and recycle wire payloads through the persistent plans'
+//! staging arenas.
+//!
 //! When no pipeline axis exists (2-D arrays: both axes are exchanged) or
 //! `chunks == 1`, the plan degrades gracefully to the one-shot blocking
 //! exchange.
@@ -26,7 +34,7 @@
 use std::collections::VecDeque;
 
 use crate::decomp::decompose;
-use crate::simmpi::datatype::Datatype;
+use crate::simmpi::datatype::{AlignedScratch, Datatype, TransferPlan};
 use crate::simmpi::nonblocking::{AlltoallwPlan, Request};
 use crate::simmpi::{as_bytes, as_bytes_mut, Comm, Pod};
 
@@ -43,10 +51,13 @@ struct ChunkPlan {
     fwd: AlltoallwPlan,
     /// Persistent collective: dense chunk-of-B buffer -> dense chunk-of-A.
     bwd: AlltoallwPlan,
-    /// Gather/scatter between the full A array and the dense chunk-of-A
-    /// buffer (and likewise for B): the chunk's subarray datatype.
-    a_dt: Datatype,
-    b_dt: Datatype,
+    /// Compiled fused copies between the full arrays and the dense chunk
+    /// buffers (the chunk's subarray datatype against a contiguous type):
+    /// scatter a completed chunk-of-B into `B`, gather a chunk out of `B`
+    /// for the backward path, scatter a returned chunk-of-A into `A`.
+    scatter_b: TransferPlan,
+    gather_b: TransferPlan,
+    scatter_a: TransferPlan,
 }
 
 impl ChunkPlan {
@@ -80,8 +91,20 @@ pub struct PipelinedRedistPlan {
     /// The chunking axis, `None` when pipelining is not applicable.
     pipe_axis: Option<usize>,
     chunks: Vec<ChunkPlan>,
-    /// Fallback one-shot plan (also performs the shape validation).
-    oneshot: RedistPlan,
+    /// Preallocated dense chunk buffers, one per chunk per side; executions
+    /// reuse them with no allocation and no zero-fill (every byte of a
+    /// chunk buffer is overwritten before it is read).
+    scratch_a: Vec<AlignedScratch>,
+    scratch_b: Vec<AlignedScratch>,
+    /// Reusable in-flight window state (capacity kept across executions).
+    inflight_fwd: VecDeque<Request>,
+    inflight_bwd: VecDeque<(usize, Request)>,
+    /// Staging for the one-shot `execute_back_chunked` fallback.
+    fallback_stage: AlignedScratch,
+    /// Fallback one-shot plan, compiled only when no pipeline axis exists
+    /// (`chunks` empty) — a chunked plan never executes it, so it would be
+    /// two full-array persistent collectives of dead weight.
+    oneshot: Option<RedistPlan>,
 }
 
 impl PipelinedRedistPlan {
@@ -99,7 +122,7 @@ impl PipelinedRedistPlan {
         chunks: usize,
         overlap_depth: usize,
     ) -> PipelinedRedistPlan {
-        let oneshot = RedistPlan::new(comm, elem, sizes_a, axis_a, sizes_b, axis_b);
+        super::exchange::validate_shapes(comm, sizes_a, axis_a, sizes_b, axis_b);
         let d = sizes_a.len();
         let m = comm.size();
         // Pipeline axis: untouched by the exchange, so its local extent is
@@ -171,18 +194,68 @@ impl PipelinedRedistPlan {
                     .collect();
                 let fwd = comm.alltoallw_init(&fwd_send, &fwd_recv);
                 let bwd = comm.alltoallw_init(&fwd_recv, &bwd_recv);
-                chunk_plans.push(ChunkPlan { shape_a, shape_b, fwd, bwd, a_dt, b_dt });
+                // Compile the chunk gather/scatter copies once: a dense
+                // (contiguous) chunk buffer against the chunk's subarray
+                // window of the full local array.
+                let contig_a = Datatype::Contiguous {
+                    offset: 0,
+                    count: shape_a.iter().product(),
+                    elem,
+                };
+                let contig_b = Datatype::Contiguous {
+                    offset: 0,
+                    count: shape_b.iter().product(),
+                    elem,
+                };
+                let scatter_b = TransferPlan::compile(&contig_b, &b_dt)
+                    .expect("pipeline: chunk-of-B scatter plan");
+                let gather_b = TransferPlan::compile(&b_dt, &contig_b)
+                    .expect("pipeline: chunk-of-B gather plan");
+                let scatter_a = TransferPlan::compile(&contig_a, &a_dt)
+                    .expect("pipeline: chunk-of-A scatter plan");
+                chunk_plans.push(ChunkPlan {
+                    shape_a,
+                    shape_b,
+                    fwd,
+                    bwd,
+                    scatter_b,
+                    gather_b,
+                    scatter_a,
+                });
             }
         }
+        let scratch_a: Vec<AlignedScratch> =
+            chunk_plans.iter().map(|c| AlignedScratch::new(c.elems_a() * elem)).collect();
+        let scratch_b: Vec<AlignedScratch> =
+            chunk_plans.iter().map(|c| AlignedScratch::new(c.elems_b() * elem)).collect();
+        let depth = overlap_depth.max(1);
+        let (oneshot, fallback_stage) = if chunk_plans.is_empty() {
+            (
+                Some(RedistPlan::new(comm, elem, sizes_a, axis_a, sizes_b, axis_b)),
+                AlignedScratch::new(sizes_b.iter().product::<usize>() * elem),
+            )
+        } else {
+            (None, AlignedScratch::new(0))
+        };
         PipelinedRedistPlan {
             sizes_a: sizes_a.to_vec(),
             sizes_b: sizes_b.to_vec(),
             elem,
-            overlap_depth: overlap_depth.max(1),
+            overlap_depth: depth,
             pipe_axis: if k > 1 { pipe_axis } else { None },
+            inflight_fwd: VecDeque::with_capacity(depth.min(k)),
+            inflight_bwd: VecDeque::with_capacity(depth.min(k)),
             chunks: chunk_plans,
+            scratch_a,
+            scratch_b,
+            fallback_stage,
             oneshot,
         }
+    }
+
+    /// The one-shot fallback plan; exists exactly when `chunks` is empty.
+    fn fallback_plan(&self) -> &RedistPlan {
+        self.oneshot.as_ref().expect("pipeline: fallback plan only exists for unchunked plans")
     }
 
     /// Number of local elements of `A`.
@@ -215,9 +288,25 @@ impl PipelinedRedistPlan {
         self.overlap_depth
     }
 
+    /// Arena effectiveness of the persistent sub-exchanges:
+    /// `(reuses, fresh_allocs)` summed over every chunk plan, both
+    /// directions (see [`AlltoallwPlan::arena_stats`]).
+    pub fn arena_stats(&self) -> (u64, u64) {
+        let mut reuses = 0;
+        let mut fresh = 0;
+        for c in &self.chunks {
+            for plan in [&c.fwd, &c.bwd] {
+                let (r, f) = plan.arena_stats();
+                reuses += r;
+                fresh += f;
+            }
+        }
+        (reuses, fresh)
+    }
+
     /// Redistribution `A -> B`, bitwise identical to
     /// [`RedistPlan::execute`].
-    pub fn execute<T: Pod>(&self, a: &[T], b: &mut [T]) {
+    pub fn execute<T: Pod>(&mut self, a: &[T], b: &mut [T]) {
         self.execute_chunked(a, b, |_, _| {});
     }
 
@@ -227,7 +316,7 @@ impl PipelinedRedistPlan {
     /// sees each element of `B` exactly once. With the one-shot fallback
     /// the callback runs once over the whole of `b`.
     pub fn execute_chunked<T: Pod>(
-        &self,
+        &mut self,
         a: &[T],
         b: &mut [T],
         mut on_chunk: impl FnMut(&mut [T], &[usize]),
@@ -236,40 +325,44 @@ impl PipelinedRedistPlan {
         assert_eq!(a.len(), self.elems_a(), "pipeline: A length mismatch");
         assert_eq!(b.len(), self.elems_b(), "pipeline: B length mismatch");
         if self.chunks.is_empty() {
-            self.oneshot.execute(a, b);
+            self.fallback_plan().execute(a, b);
             on_chunk(b, &self.sizes_b);
             return;
         }
         let k = self.chunks.len();
         let depth = self.overlap_depth.min(k);
         let send = as_bytes(a);
-        let mut inflight: VecDeque<Request> = VecDeque::with_capacity(depth);
+        // Reuse the plan's window queue (take/restore keeps its capacity
+        // while leaving `self` free to borrow field-wise in the loop).
+        let mut inflight = std::mem::take(&mut self.inflight_fwd);
+        debug_assert!(inflight.is_empty());
         for chunk in self.chunks.iter().take(depth) {
             inflight.push_back(chunk.fwd.start(send));
         }
         for c in 0..k {
             let req = inflight.pop_front().expect("pipeline: request queue underrun");
-            let chunk = &self.chunks[c];
-            let mut buf = vec![unsafe { std::mem::zeroed::<T>() }; chunk.elems_b()];
-            req.wait(as_bytes_mut(&mut buf));
+            let buf = self.scratch_b[c].as_pod_mut::<T>();
+            req.wait(as_bytes_mut(buf));
             // Keep the window full before consuming the chunk, so the next
             // exchanges progress while we compute.
             if c + depth < k {
                 inflight.push_back(self.chunks[c + depth].fwd.start(send));
             }
-            on_chunk(&mut buf, &chunk.shape_b);
-            chunk.b_dt.unpack(as_bytes(&buf), as_bytes_mut(b));
+            let chunk = &self.chunks[c];
+            on_chunk(self.scratch_b[c].as_pod_mut::<T>(), &chunk.shape_b);
+            chunk.scatter_b.execute(self.scratch_b[c].as_bytes(), as_bytes_mut(b));
         }
+        self.inflight_fwd = inflight;
     }
 
     /// Reverse redistribution `B -> A`, bitwise identical to
     /// [`RedistPlan::execute_back`].
-    pub fn execute_back<T: Pod>(&self, b: &[T], a: &mut [T]) {
+    pub fn execute_back<T: Pod>(&mut self, b: &[T], a: &mut [T]) {
         if self.chunks.is_empty() {
             // Bypass execute_back_chunked: its fallback stages a full copy
             // of `b` for the callback, pointless with a no-op callback.
             assert_eq!(std::mem::size_of::<T>(), self.elem, "pipeline: element size mismatch");
-            self.oneshot.execute_back(b, a);
+            self.fallback_plan().execute_back(b, a);
             return;
         }
         self.execute_back_chunked(b, a, |_, _| {});
@@ -281,7 +374,7 @@ impl PipelinedRedistPlan {
     /// `i`. With the one-shot fallback the callback runs once over a full
     /// staging copy of `b`.
     pub fn execute_back_chunked<T: Pod>(
-        &self,
+        &mut self,
         b: &[T],
         a: &mut [T],
         mut pre_chunk: impl FnMut(&mut [T], &[usize]),
@@ -290,42 +383,48 @@ impl PipelinedRedistPlan {
         assert_eq!(b.len(), self.elems_b(), "pipeline: B length mismatch");
         assert_eq!(a.len(), self.elems_a(), "pipeline: A length mismatch");
         if self.chunks.is_empty() {
-            let mut staged = b.to_vec();
-            pre_chunk(&mut staged, &self.sizes_b);
-            self.oneshot.execute_back(&staged, a);
+            let staged = self.fallback_stage.as_pod_mut::<T>();
+            staged.copy_from_slice(b);
+            pre_chunk(staged, &self.sizes_b);
+            self.fallback_plan().execute_back(self.fallback_stage.as_pod::<T>(), a);
             return;
         }
         let k = self.chunks.len();
         let depth = self.overlap_depth.min(k);
-        let mut inflight: VecDeque<(usize, Request)> = VecDeque::with_capacity(depth);
+        let mut inflight = std::mem::take(&mut self.inflight_bwd);
+        debug_assert!(inflight.is_empty());
         for c in 0..k {
             let chunk = &self.chunks[c];
             // Gather the dense chunk, let the caller transform it, post it.
-            let mut buf = vec![unsafe { std::mem::zeroed::<T>() }; chunk.elems_b()];
-            chunk.b_dt.pack(as_bytes(b), as_bytes_mut(&mut buf));
-            pre_chunk(&mut buf, &chunk.shape_b);
-            inflight.push_back((c, chunk.bwd.start(as_bytes(&buf))));
+            chunk.gather_b.execute(as_bytes(b), self.scratch_b[c].as_bytes_mut());
+            pre_chunk(self.scratch_b[c].as_pod_mut::<T>(), &chunk.shape_b);
+            inflight.push_back((c, chunk.bwd.start(self.scratch_b[c].as_bytes())));
             if inflight.len() == depth {
-                self.drain_one_back(&mut inflight, a);
+                Self::drain_one_back(&self.chunks, &mut self.scratch_a, &mut inflight, a);
             }
         }
         while !inflight.is_empty() {
-            self.drain_one_back(&mut inflight, a);
+            Self::drain_one_back(&self.chunks, &mut self.scratch_a, &mut inflight, a);
         }
+        self.inflight_bwd = inflight;
     }
 
-    fn drain_one_back<T: Pod>(&self, inflight: &mut VecDeque<(usize, Request)>, a: &mut [T]) {
+    fn drain_one_back<T: Pod>(
+        chunks: &[ChunkPlan],
+        scratch_a: &mut [AlignedScratch],
+        inflight: &mut VecDeque<(usize, Request)>,
+        a: &mut [T],
+    ) {
         let (c, req) = inflight.pop_front().expect("pipeline: empty backward queue");
-        let chunk = &self.chunks[c];
-        let mut buf = vec![unsafe { std::mem::zeroed::<T>() }; chunk.elems_a()];
-        req.wait(as_bytes_mut(&mut buf));
-        chunk.a_dt.unpack(as_bytes(&buf), as_bytes_mut(a));
+        let chunk = &chunks[c];
+        req.wait(scratch_a[c].as_bytes_mut());
+        chunk.scatter_a.execute(scratch_a[c].as_bytes(), as_bytes_mut(a));
     }
 
     /// Total bytes this rank sends per forward execute.
     pub fn bytes_per_exchange(&self) -> usize {
         if self.chunks.is_empty() {
-            self.oneshot.bytes_per_exchange()
+            self.fallback_plan().bytes_per_exchange()
         } else {
             self.chunks.iter().map(|c| c.fwd.bytes_per_start()).sum()
         }
@@ -357,7 +456,7 @@ mod tests {
                 (0..sizes_a.iter().product::<usize>()).map(|x| (me * 10_000 + x) as f64).collect();
             let mut want = vec![0.0f64; sizes_b.iter().product()];
             exchange(&comm, &a, &sizes_a, axis_a, &mut want, &sizes_b, axis_b);
-            let plan = PipelinedRedistPlan::new(
+            let mut plan = PipelinedRedistPlan::new(
                 &comm, 8, &sizes_a, axis_a, &sizes_b, axis_b, chunks, depth,
             );
             let mut got = vec![0.0f64; sizes_b.iter().product()];
@@ -398,7 +497,7 @@ mod tests {
             let global = [8usize, 6];
             let sizes_a = [global[0], decompose(global[1], m, me).0];
             let sizes_b = [decompose(global[0], m, me).0, global[1]];
-            let plan = PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, 4, 2);
+            let mut plan = PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, 4, 2);
             assert!(!plan.is_pipelined());
             assert_eq!(plan.chunk_count(), 1);
             let a: Vec<f64> = (0..plan.elems_a()).map(|x| (me * 100 + x) as f64).collect();
@@ -418,20 +517,60 @@ mod tests {
             let global = [6usize, 9, 4];
             let sizes_a = [global[0], decompose(global[1], m, me).0, global[2]];
             let sizes_b = [decompose(global[0], m, me).0, global[1], global[2]];
-            let plan = PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, 3, 2);
+            let mut plan = PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, 3, 2);
             assert!(plan.is_pipelined());
             assert_eq!(plan.pipe_axis(), Some(2));
             let a: Vec<f64> = (0..plan.elems_a()).map(|x| (me * 1000 + x) as f64).collect();
             let mut b = vec![0.0f64; plan.elems_b()];
             let mut seen = 0usize;
             let mut calls = 0usize;
+            let chunk_total = plan.chunk_count();
             plan.execute_chunked(&a, &mut b, |chunk, shape| {
                 assert_eq!(chunk.len(), shape.iter().product::<usize>());
                 seen += chunk.len();
                 calls += 1;
             });
             assert_eq!(seen, plan.elems_b());
-            assert_eq!(calls, plan.chunk_count());
+            assert_eq!(calls, chunk_total);
+        });
+    }
+
+    #[test]
+    fn repeated_executions_recycle_arenas() {
+        // Steady-state reuse: after the first execution primes the payload
+        // arenas, further executions are served from recycled buffers.
+        World::run(2, |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let global = [6usize, 8, 10];
+            let sizes_a = [global[0], decompose(global[1], m, me).0, global[2]];
+            let sizes_b = [decompose(global[0], m, me).0, global[1], global[2]];
+            let mut plan = PipelinedRedistPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, 4, 2);
+            assert!(plan.is_pipelined());
+            let a: Vec<f64> = (0..plan.elems_a()).map(|x| (me * 77 + x) as f64).collect();
+            let mut b = vec![0.0f64; plan.elems_b()];
+            let mut back = vec![0.0f64; plan.elems_a()];
+            for _ in 0..2 {
+                plan.execute(&a, &mut b);
+                plan.execute_back(&b, &mut back);
+            }
+            comm.barrier();
+            let (_, fresh_before) = plan.arena_stats();
+            for _ in 0..3 {
+                plan.execute(&a, &mut b);
+                plan.execute_back(&b, &mut back);
+            }
+            // Wire payload arrival order is nondeterministic, so a send may
+            // occasionally outrun the recycled supply; but steady state must
+            // be overwhelmingly served from the arenas.
+            let (reuses_after, fresh_after) = plan.arena_stats();
+            assert!(
+                fresh_after - fresh_before <= 2,
+                "rank {me}: steady-state executions kept allocating \
+                 ({fresh_before} -> {fresh_after} fresh)"
+            );
+            assert!(reuses_after > 0, "rank {me}: arena never recycled");
+            assert_eq!(a, back, "rank {me}: roundtrip broken");
         });
     }
 }

@@ -16,7 +16,7 @@
 //! algorithmic difference the paper evaluates.
 
 use crate::decomp::decompose;
-use crate::simmpi::datatype::Datatype;
+use crate::simmpi::datatype::{AlignedScratch, Runs};
 use crate::simmpi::{as_bytes, as_bytes_mut, Comm, Pod};
 
 use super::exchange::subarray_types;
@@ -26,12 +26,13 @@ pub struct TraditionalPlan {
     comm: Comm,
     sizes_a: Vec<usize>,
     sizes_b: Vec<usize>,
-    /// Chunk datatypes of `A` along axis v (used for the explicit local
-    /// remap — the engine packs, but into *our* staging buffer, which is
-    /// exactly what a hand-written transpose loop produces).
-    types_a: Vec<Datatype>,
-    /// Chunk datatypes of `B` along axis w (receive-side remap).
-    types_b: Vec<Datatype>,
+    /// Flattened chunk datatypes of `A` along axis v, compiled once (used
+    /// for the explicit local remap — the engine packs, but into *our*
+    /// staging buffer, which is exactly what a hand-written transpose loop
+    /// produces; no per-call datatype-engine setup).
+    runs_a: Vec<Runs>,
+    /// Flattened chunk datatypes of `B` along axis w (receive-side remap).
+    runs_b: Vec<Runs>,
     /// Element counts per peer (for `alltoallv`).
     sendcounts: Vec<usize>,
     sdispls: Vec<usize>,
@@ -39,6 +40,10 @@ pub struct TraditionalPlan {
     rdispls: Vec<usize>,
     /// Received chunks land in place iff the new aligned axis is axis 0.
     recv_in_place: bool,
+    /// Plan-owned staging arenas for the local and receive-side remaps,
+    /// sized once at creation; the remap steps never allocate again.
+    stage_a: AlignedScratch,
+    stage_b: AlignedScratch,
     elem: usize,
 }
 
@@ -74,17 +79,23 @@ impl TraditionalPlan {
         // (then chunk q occupies rows [start_q, start_q + len_q) of B, which
         // is exactly the rdispls window).
         let recv_in_place = axis_b == 0;
+        let runs_a: Vec<Runs> = types_a.iter().map(|t| t.runs()).collect();
+        let runs_b: Vec<Runs> = types_b.iter().map(|t| t.runs()).collect();
+        let elems_a: usize = sizes_a.iter().product();
+        let elems_b: usize = sizes_b.iter().product();
         TraditionalPlan {
             comm: comm.clone(),
             sizes_a: sizes_a.to_vec(),
             sizes_b: sizes_b.to_vec(),
-            types_a,
-            types_b,
+            runs_a,
+            runs_b,
             sendcounts,
             sdispls,
             recvcounts,
             rdispls,
             recv_in_place,
+            stage_a: AlignedScratch::new(elems_a * elem),
+            stage_b: AlignedScratch::new(elems_b * elem),
             elem,
         }
     }
@@ -99,13 +110,14 @@ impl TraditionalPlan {
 
     /// Step 1 only: the explicit local remap into peer-ordered contiguous
     /// staging (exposed separately so benches can time remap vs. wire).
+    /// Remaps through the plan's cached flattenings.
     pub fn local_remap<T: Pod>(&self, a: &[T], staging: &mut [T]) {
         debug_assert_eq!(staging.len(), self.elems_a());
         let src = as_bytes(a);
         let dst = as_bytes_mut(staging);
-        for (p, t) in self.types_a.iter().enumerate() {
+        for (p, r) in self.runs_a.iter().enumerate() {
             let off = self.sdispls[p] * self.elem;
-            t.pack(src, &mut dst[off..off + self.sendcounts[p] * self.elem]);
+            r.pack(src, &mut dst[off..off + self.sendcounts[p] * self.elem]);
         }
     }
 
@@ -113,23 +125,28 @@ impl TraditionalPlan {
     pub fn recv_remap<T: Pod>(&self, staging: &[T], b: &mut [T]) {
         let src = as_bytes(staging);
         let dst = as_bytes_mut(b);
-        for (q, t) in self.types_b.iter().enumerate() {
+        for (q, r) in self.runs_b.iter().enumerate() {
             let off = self.rdispls[q] * self.elem;
-            t.unpack(&src[off..off + self.recvcounts[q] * self.elem], dst);
+            r.unpack(&src[off..off + self.recvcounts[q] * self.elem], dst);
         }
     }
 
     /// Full traditional redistribution `A -> B`: remap, `alltoallv`, and
-    /// (if the chunks cannot land in place) a receive-side remap.
-    pub fn execute<T: Pod>(&self, a: &[T], b: &mut [T]) {
+    /// (if the chunks cannot land in place) a receive-side remap. Staging
+    /// lives in plan-owned arenas (hence `&mut self`), so the remap side
+    /// allocates nothing after construction; the contiguous `alltoallv`
+    /// wire payloads still allocate, as in the baseline libraries.
+    pub fn execute<T: Pod>(&mut self, a: &[T], b: &mut [T]) {
         assert_eq!(std::mem::size_of::<T>(), self.elem);
         assert_eq!(a.len(), self.elems_a(), "traditional: A length mismatch");
         assert_eq!(b.len(), self.elems_b(), "traditional: B length mismatch");
-        let mut staging = vec![unsafe { std::mem::zeroed::<T>() }; self.elems_a()];
-        self.local_remap(a, &mut staging);
+        // Local remap into the plan arena (borrow the scratch out of self
+        // so the remap helper can take &self).
+        let mut stage_a = std::mem::replace(&mut self.stage_a, AlignedScratch::new(0));
+        self.local_remap(a, stage_a.as_pod_mut::<T>());
         if self.recv_in_place {
             self.comm.alltoallv(
-                &staging,
+                stage_a.as_pod::<T>(),
                 &self.sendcounts,
                 &self.sdispls,
                 b,
@@ -137,47 +154,53 @@ impl TraditionalPlan {
                 &self.rdispls,
             );
         } else {
-            let mut rstage = vec![unsafe { std::mem::zeroed::<T>() }; self.elems_b()];
+            let mut stage_b = std::mem::replace(&mut self.stage_b, AlignedScratch::new(0));
             self.comm.alltoallv(
-                &staging,
+                stage_a.as_pod::<T>(),
                 &self.sendcounts,
                 &self.sdispls,
-                &mut rstage,
+                stage_b.as_pod_mut::<T>(),
                 &self.recvcounts,
                 &self.rdispls,
             );
-            self.recv_remap(&rstage, b);
+            self.recv_remap(stage_b.as_pod::<T>(), b);
+            self.stage_b = stage_b;
         }
+        self.stage_a = stage_a;
     }
 
     /// Reverse redistribution `B -> A` (swap the two type sequences; the
     /// remap moves to the other side).
-    pub fn execute_back<T: Pod>(&self, b: &[T], a: &mut [T]) {
+    pub fn execute_back<T: Pod>(&mut self, b: &[T], a: &mut [T]) {
         assert_eq!(std::mem::size_of::<T>(), self.elem);
-        let mut staging = vec![unsafe { std::mem::zeroed::<T>() }; self.elems_b()];
+        assert_eq!(b.len(), self.elems_b(), "traditional: B length mismatch");
+        assert_eq!(a.len(), self.elems_a(), "traditional: A length mismatch");
+        let mut stage_b = std::mem::replace(&mut self.stage_b, AlignedScratch::new(0));
         {
             let src = as_bytes(b);
-            let dst = as_bytes_mut(&mut staging);
-            for (p, t) in self.types_b.iter().enumerate() {
+            let dst = stage_b.as_bytes_mut();
+            for (p, r) in self.runs_b.iter().enumerate() {
                 let off = self.rdispls[p] * self.elem;
-                t.pack(src, &mut dst[off..off + self.recvcounts[p] * self.elem]);
+                r.pack(src, &mut dst[off..off + self.recvcounts[p] * self.elem]);
             }
         }
-        let mut rstage = vec![unsafe { std::mem::zeroed::<T>() }; self.elems_a()];
+        let mut stage_a = std::mem::replace(&mut self.stage_a, AlignedScratch::new(0));
         self.comm.alltoallv(
-            &staging,
+            stage_b.as_pod::<T>(),
             &self.recvcounts,
             &self.rdispls,
-            &mut rstage,
+            stage_a.as_pod_mut::<T>(),
             &self.sendcounts,
             &self.sdispls,
         );
-        let src = as_bytes(&rstage);
+        let src = stage_a.as_bytes();
         let dst = as_bytes_mut(a);
-        for (q, t) in self.types_a.iter().enumerate() {
+        for (q, r) in self.runs_a.iter().enumerate() {
             let off = self.sdispls[q] * self.elem;
-            t.unpack(&src[off..off + self.sendcounts[q] * self.elem], dst);
+            r.unpack(&src[off..off + self.sendcounts[q] * self.elem], dst);
         }
+        self.stage_a = stage_a;
+        self.stage_b = stage_b;
     }
 }
 
@@ -193,7 +216,7 @@ pub fn traditional_exchange<T: Pod>(
     sizes_b: &[usize],
     axis_b: usize,
 ) {
-    let plan =
+    let mut plan =
         TraditionalPlan::new(comm, std::mem::size_of::<T>(), sizes_a, axis_a, sizes_b, axis_b);
     plan.execute(a, b);
 }
@@ -226,7 +249,7 @@ mod tests {
             traditional_exchange(&comm, &a, &sizes_a, axis_a, &mut b_trad, &sizes_b, axis_b);
             assert_eq!(b_new, b_trad, "rank {me}: methods disagree (d={d})");
             // And the reverse paths agree with the original.
-            let plan_t = TraditionalPlan::new(&comm, 8, &sizes_a, axis_a, &sizes_b, axis_b);
+            let mut plan_t = TraditionalPlan::new(&comm, 8, &sizes_a, axis_a, &sizes_b, axis_b);
             let mut back = vec![0.0f64; elems_a];
             plan_t.execute_back(&b_trad, &mut back);
             assert_eq!(back, a, "rank {me}: traditional roundtrip failed");
@@ -274,7 +297,7 @@ mod tests {
             // v = 0 aligned A -> w = ... careful: here A aligned axis 0,
             // B aligned axis 1; exchange 0 -> 1 means axis_a = 0.
             // Use axis_b = 1 (recv remap) to exercise staging on both sides.
-            let plan = TraditionalPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1);
+            let mut plan = TraditionalPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1);
             let a: Vec<f64> =
                 (0..plan.elems_a()).map(|k| (me * 1000 + k) as f64).collect();
             let mut fused = vec![0.0f64; plan.elems_b()];

@@ -217,10 +217,11 @@ impl Comm {
                 self.send_bytes(p, TAG_A2AW, payload);
             }
         }
-        // Self-exchange: pack+unpack without touching the mailbox.
+        // Self-exchange: fused send -> recv copy, no intermediate buffer.
         {
-            let payload = sendtypes[me].pack_to_vec(send);
-            recvtypes[me].unpack(&payload, recv);
+            let fused = crate::simmpi::TransferPlan::compile(&sendtypes[me], &recvtypes[me])
+                .expect("alltoallw: self type signature mismatch");
+            fused.execute(send, recv);
         }
         for p in 0..n {
             if p != me {

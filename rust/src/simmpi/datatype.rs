@@ -13,7 +13,22 @@
 //! optimizations of `MPI_ALLTOALL(V)` and that *"our approach enables future
 //! speedups from optimizations in the internal datatype handling engines"*.
 //! The run-merging, odometer-free fast paths here are exactly such
-//! optimizations (see `EXPERIMENTS.md` §Perf for measured effect).
+//! optimizations (see `EXPERIMENTS.md` § "Fused vs staged copy" for the
+//! ablation protocol and measured effect).
+//!
+//! ## Compiled transfer plans
+//!
+//! The second layer of the engine is [`TransferPlan`]: a (send, recv)
+//! datatype pair compiled **once** into a fused copy schedule — the
+//! intersection of the sender's contiguous runs with the receiver's — so a
+//! transfer whose two endpoints live in the same address space copies
+//! `src -> dst` directly, with *zero* intermediate buffer and zero per-call
+//! datatype-engine work. Where a contiguous wire representation is
+//! genuinely needed (peer messages), callers pack/unpack through cached
+//! [`Runs`] into buffers recycled by a [`StagingArena`] (or a plan-owned
+//! [`AlignedScratch`]), so steady-state plan executions perform no heap
+//! allocation on the intra-rank path. [`stats`] counts bytes moved through
+//! the fused vs the staged paths for the benchmark harness.
 
 use super::MpiError;
 
@@ -218,6 +233,7 @@ impl Runs {
             out += run;
         });
         debug_assert_eq!(out, dst.len());
+        stats::add_packed(out);
     }
 
     /// [`Datatype::unpack`] over a pre-flattened representation.
@@ -229,6 +245,7 @@ impl Runs {
             inp += run;
         });
         debug_assert_eq!(inp, src.len());
+        stats::add_unpacked(inp);
     }
 
     /// Number of contiguous runs.
@@ -300,6 +317,309 @@ impl Runs {
                 }
             }
         }
+    }
+}
+
+/// One fused copy step of a [`TransferPlan`]: `len` bytes from `src` in the
+/// send buffer to `dst` in the receive buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CopyOp {
+    pub src: usize,
+    pub dst: usize,
+    pub len: usize,
+}
+
+/// A (send datatype, recv datatype) pair compiled once into a fused
+/// `src -> dst` copy schedule.
+///
+/// The schedule is the *intersection* of the sender's contiguous runs with
+/// the receiver's: walking both packed streams in lockstep yields maximal
+/// `(src, dst, len)` spans, merged further whenever consecutive spans are
+/// contiguous on both sides. Executing the plan moves every selected byte
+/// with one `copy_from_slice` per span — no intermediate (packed) buffer,
+/// no per-call flattening, no allocation. This is the engine the paper's
+/// closing remark anticipates: `MPI_ALLTOALLW`'s self-exchange and every
+/// staged gather/scatter between an array and a dense chunk buffer reduce
+/// to one of these.
+///
+/// Compile with [`TransferPlan::compile`] (descriptor pair) or
+/// [`TransferPlan::from_runs`] (pre-flattened pair); both sides must select
+/// the same number of bytes, as in MPI type matching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransferPlan {
+    ops: Vec<CopyOp>,
+    bytes: usize,
+    /// Minimum source/destination buffer sizes the schedule touches.
+    src_extent: usize,
+    dst_extent: usize,
+}
+
+impl TransferPlan {
+    /// Compile a fused plan from a send/recv descriptor pair.
+    pub fn compile(send: &Datatype, recv: &Datatype) -> Result<TransferPlan, MpiError> {
+        if send.packed_size() != recv.packed_size() {
+            return Err(MpiError::InvalidDatatype(format!(
+                "transfer type signature mismatch: send selects {} bytes, recv {}",
+                send.packed_size(),
+                recv.packed_size()
+            )));
+        }
+        Ok(Self::from_runs(&send.runs(), &recv.runs()))
+    }
+
+    /// Compile from pre-flattened runs. Panics when the two sides select a
+    /// different number of bytes (use [`TransferPlan::compile`] for the
+    /// checked form).
+    pub fn from_runs(src: &Runs, dst: &Runs) -> TransferPlan {
+        let total = src.packed_size();
+        assert_eq!(total, dst.packed_size(), "from_runs: packed size mismatch");
+        let mut s_offs = Vec::with_capacity(src.count());
+        src.for_each_offset(|o| s_offs.push(o));
+        let mut d_offs = Vec::with_capacity(dst.count());
+        dst.for_each_offset(|o| d_offs.push(o));
+        let mut ops: Vec<CopyOp> = Vec::new();
+        let (mut si, mut sp) = (0usize, 0usize); // source run index, byte position in run
+        let (mut di, mut dp) = (0usize, 0usize);
+        let mut moved = 0usize;
+        while moved < total {
+            let n = (src.run_len - sp).min(dst.run_len - dp);
+            let s = s_offs[si] + sp;
+            let d = d_offs[di] + dp;
+            match ops.last_mut() {
+                Some(last) if last.src + last.len == s && last.dst + last.len == d => {
+                    last.len += n;
+                }
+                _ => ops.push(CopyOp { src: s, dst: d, len: n }),
+            }
+            moved += n;
+            sp += n;
+            dp += n;
+            if sp == src.run_len {
+                si += 1;
+                sp = 0;
+            }
+            if dp == dst.run_len {
+                di += 1;
+                dp = 0;
+            }
+        }
+        let src_extent = s_offs.last().map_or(0, |&o| o + src.run_len);
+        let dst_extent = d_offs.last().map_or(0, |&o| o + dst.run_len);
+        stats::add_compiled();
+        TransferPlan { ops, bytes: total, src_extent, dst_extent }
+    }
+
+    /// Fused execution: copy every selected byte of `src` straight into its
+    /// destination in `dst`. Zero staging, zero allocation.
+    pub fn execute(&self, src: &[u8], dst: &mut [u8]) {
+        debug_assert!(src.len() >= self.src_extent, "transfer: src too small");
+        debug_assert!(dst.len() >= self.dst_extent, "transfer: dst too small");
+        for op in &self.ops {
+            dst[op.dst..op.dst + op.len].copy_from_slice(&src[op.src..op.src + op.len]);
+        }
+        stats::add_fused(self.bytes);
+    }
+
+    /// Payload bytes one execution moves.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Number of fused copy spans (diagnostics: lower is closer to memcpy).
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+/// A recycling pool of staging byte buffers.
+///
+/// Wire transfers genuinely need a contiguous payload (ownership of the
+/// bytes crosses rank boundaries); the arena keeps returned payload buffers
+/// and hands them back on the next execution, so steady-state persistent
+/// plans stop allocating. The `reuses`/`fresh` counters let tests assert
+/// arena effectiveness without a counting allocator.
+///
+/// The free list is bounded: once [`StagingArena::MAX_FREE`] buffers are
+/// pooled, a returned buffer replaces the first pooled buffer of smaller
+/// capacity (or is dropped when none is smaller), so pool size is capped
+/// and capacities ratchet upward — a plan whose received payloads never
+/// match its send sizes cannot grow memory without bound.
+#[derive(Debug, Default)]
+pub struct StagingArena {
+    free: Vec<Vec<u8>>,
+    reuses: u64,
+    fresh: u64,
+}
+
+impl StagingArena {
+    /// Upper bound on pooled buffers. A persistent collective keeps at most
+    /// one local capture plus one payload per peer outstanding per
+    /// execution, and plans own private arenas, so steady pools stay far
+    /// below this; the cap only clips pathological accumulation.
+    pub const MAX_FREE: usize = 64;
+
+    pub fn new() -> StagingArena {
+        StagingArena::default()
+    }
+
+    /// Check out a buffer of exactly `len` bytes, recycling a returned one
+    /// when any has sufficient capacity.
+    pub fn take(&mut self, len: usize) -> Vec<u8> {
+        match self.free.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                self.reuses += 1;
+                let mut b = self.free.swap_remove(i);
+                b.resize(len, 0);
+                b
+            }
+            None => {
+                self.fresh += 1;
+                vec![0u8; len]
+            }
+        }
+    }
+
+    /// Return a buffer to the arena for reuse. When the pool is full, the
+    /// buffer replaces the first pooled buffer of smaller capacity, or is
+    /// dropped when every pooled buffer is at least as large.
+    pub fn put(&mut self, buf: Vec<u8>) {
+        if self.free.len() < Self::MAX_FREE {
+            self.free.push(buf);
+            return;
+        }
+        if let Some(i) = self.free.iter().position(|b| b.capacity() < buf.capacity()) {
+            self.free[i] = buf;
+        }
+    }
+
+    /// How many checkouts were served from recycled buffers.
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+
+    /// How many checkouts had to heap-allocate.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh
+    }
+}
+
+/// A preallocated, 8-byte-aligned scratch buffer with typed views.
+///
+/// Plan structs own one per staged buffer they need (dense chunk buffers,
+/// local-remap staging), sized once at plan creation; executions reuse it
+/// with no allocation and no zero-fill. Backed by `u64` words so viewing it
+/// as any [`Pod`] element type (all of which have alignment <= 8) is sound.
+#[derive(Debug, Clone)]
+pub struct AlignedScratch {
+    words: Vec<u64>,
+    bytes: usize,
+}
+
+impl AlignedScratch {
+    /// Allocate a zero-initialized scratch of `bytes` length.
+    pub fn new(bytes: usize) -> AlignedScratch {
+        AlignedScratch { words: vec![0u64; bytes.div_ceil(8)], bytes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes == 0
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &super::as_bytes(&self.words)[..self.bytes]
+    }
+
+    pub fn as_bytes_mut(&mut self) -> &mut [u8] {
+        &mut super::as_bytes_mut(&mut self.words)[..self.bytes]
+    }
+
+    /// View as a typed slice. `bytes` must divide evenly into `T`s.
+    pub fn as_pod<T: super::Pod>(&self) -> &[T] {
+        let size = std::mem::size_of::<T>();
+        assert!(std::mem::align_of::<T>() <= std::mem::align_of::<u64>());
+        assert_eq!(self.bytes % size, 0, "scratch: length not a multiple of element size");
+        // SAFETY: the backing is a live Vec<u64> allocation of at least
+        // `bytes` bytes, alignment 8 >= align_of::<T>(), and Pod types are
+        // valid for any bit pattern.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const T, self.bytes / size) }
+    }
+
+    /// Mutable typed view. `bytes` must divide evenly into `T`s.
+    pub fn as_pod_mut<T: super::Pod>(&mut self) -> &mut [T] {
+        let size = std::mem::size_of::<T>();
+        assert!(std::mem::align_of::<T>() <= std::mem::align_of::<u64>());
+        assert_eq!(self.bytes % size, 0, "scratch: length not a multiple of element size");
+        // SAFETY: see `as_pod`; the &mut receiver guarantees uniqueness.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut T, self.bytes / size)
+        }
+    }
+}
+
+/// Process-global datatype-engine traffic counters (relaxed atomics; cheap
+/// enough for hot paths). The benchmark harness snapshots these around a
+/// run to attribute bytes to the fused vs the staged copy engine.
+pub mod stats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static FUSED_BYTES: AtomicU64 = AtomicU64::new(0);
+    static PACKED_BYTES: AtomicU64 = AtomicU64::new(0);
+    static UNPACKED_BYTES: AtomicU64 = AtomicU64::new(0);
+    static PLANS_COMPILED: AtomicU64 = AtomicU64::new(0);
+
+    /// A snapshot of the engine counters (monotone; diff two snapshots to
+    /// measure an interval).
+    #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+    pub struct EngineStats {
+        /// Bytes moved by fused [`super::TransferPlan`] executions.
+        pub fused_bytes: u64,
+        /// Bytes gathered into contiguous staging ([`super::Runs::pack`]).
+        pub packed_bytes: u64,
+        /// Bytes scattered out of contiguous staging ([`super::Runs::unpack`]).
+        pub unpacked_bytes: u64,
+        /// Transfer plans compiled so far.
+        pub plans_compiled: u64,
+    }
+
+    impl EngineStats {
+        /// Counter deltas since `earlier`.
+        pub fn since(&self, earlier: &EngineStats) -> EngineStats {
+            EngineStats {
+                fused_bytes: self.fused_bytes.wrapping_sub(earlier.fused_bytes),
+                packed_bytes: self.packed_bytes.wrapping_sub(earlier.packed_bytes),
+                unpacked_bytes: self.unpacked_bytes.wrapping_sub(earlier.unpacked_bytes),
+                plans_compiled: self.plans_compiled.wrapping_sub(earlier.plans_compiled),
+            }
+        }
+    }
+
+    pub fn snapshot() -> EngineStats {
+        EngineStats {
+            fused_bytes: FUSED_BYTES.load(Ordering::Relaxed),
+            packed_bytes: PACKED_BYTES.load(Ordering::Relaxed),
+            unpacked_bytes: UNPACKED_BYTES.load(Ordering::Relaxed),
+            plans_compiled: PLANS_COMPILED.load(Ordering::Relaxed),
+        }
+    }
+
+    pub(super) fn add_fused(n: usize) {
+        FUSED_BYTES.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub(super) fn add_packed(n: usize) {
+        PACKED_BYTES.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub(super) fn add_unpacked(n: usize) {
+        UNPACKED_BYTES.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub(super) fn add_compiled() {
+        PLANS_COMPILED.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -466,5 +786,142 @@ mod tests {
         let dt = sub(&[6, 5, 4], &[3, 2, 4], &[2, 1, 0], 8);
         let r = dt.runs();
         assert_eq!(r.count() * r.run_len, dt.packed_size());
+    }
+
+    /// Reference semantics of a transfer: pack through a staging buffer,
+    /// then unpack.
+    fn staged(send: &Datatype, recv: &Datatype, src: &[u8], dst: &mut [u8]) {
+        let staging = send.pack_to_vec(src);
+        recv.unpack(&staging, dst);
+    }
+
+    #[test]
+    fn transfer_plan_matches_staged_pack_unpack() {
+        // 2-D row slab -> column slab self-exchange (the alltoallw self
+        // block of the collective tests).
+        let send = sub(&[2, 4], &[2, 2], &[0, 2], 1);
+        let recv = sub(&[4, 2], &[2, 2], &[2, 0], 1);
+        let src: Vec<u8> = (0..8).collect();
+        let plan = TransferPlan::compile(&send, &recv).unwrap();
+        assert_eq!(plan.bytes(), 4);
+        let mut fused = vec![0xAAu8; 8];
+        plan.execute(&src, &mut fused);
+        let mut want = vec![0xAAu8; 8];
+        staged(&send, &recv, &src, &mut want);
+        assert_eq!(fused, want);
+    }
+
+    #[test]
+    fn transfer_plan_contiguous_pair_is_one_memcpy() {
+        let send = sub(&[4, 6], &[2, 6], &[1, 0], 8);
+        let recv = Datatype::Contiguous { offset: 16, count: 12, elem: 8 };
+        let plan = TransferPlan::compile(&send, &recv).unwrap();
+        assert_eq!(plan.op_count(), 1, "both sides one run -> one fused span");
+        let src: Vec<u8> = (0..192u32).map(|x| x as u8).collect();
+        let mut dst = vec![0u8; 16 + 96];
+        plan.execute(&src, &mut dst);
+        assert_eq!(&dst[16..], &src[48..144]);
+        assert_eq!(&dst[..16], &[0u8; 16]);
+    }
+
+    #[test]
+    fn transfer_plan_mismatched_sizes_rejected() {
+        let a = sub(&[4, 4], &[2, 2], &[0, 0], 1);
+        let b = sub(&[4, 4], &[2, 3], &[0, 0], 1);
+        assert!(TransferPlan::compile(&a, &b).is_err());
+    }
+
+    #[test]
+    fn transfer_plan_empty_selection() {
+        let a = sub(&[4, 4], &[0, 4], &[2, 0], 1);
+        let b = sub(&[4, 4], &[4, 0], &[0, 2], 1);
+        let plan = TransferPlan::compile(&a, &b).unwrap();
+        assert_eq!(plan.op_count(), 0);
+        let src = vec![9u8; 16];
+        let mut dst = vec![3u8; 16];
+        plan.execute(&src, &mut dst);
+        assert_eq!(dst, vec![3u8; 16]);
+    }
+
+    #[test]
+    fn transfer_plan_mismatched_run_structure() {
+        // Send runs of 4 bytes against recv runs of 6: spans split at every
+        // boundary of either side, but the data must still match staged.
+        let send = sub(&[3, 8], &[3, 4], &[0, 1], 1); // 3 runs of 4
+        let recv = sub(&[2, 10], &[2, 6], &[0, 3], 1); // 2 runs of 6
+        let plan = TransferPlan::compile(&send, &recv).unwrap();
+        let src: Vec<u8> = (0..24).collect();
+        let mut fused = vec![0xEEu8; 20];
+        plan.execute(&src, &mut fused);
+        let mut want = vec![0xEEu8; 20];
+        staged(&send, &recv, &src, &mut want);
+        assert_eq!(fused, want);
+        // 3 src boundaries + 2 dst boundaries, none aligned -> 4 spans.
+        assert_eq!(plan.op_count(), 4);
+    }
+
+    #[test]
+    fn staging_arena_recycles() {
+        let mut arena = StagingArena::new();
+        let b1 = arena.take(64);
+        assert_eq!(b1.len(), 64);
+        assert_eq!(arena.fresh_allocs(), 1);
+        arena.put(b1);
+        let b2 = arena.take(48);
+        assert_eq!(b2.len(), 48);
+        assert_eq!(arena.reuses(), 1);
+        assert_eq!(arena.fresh_allocs(), 1);
+        arena.put(b2);
+        // Larger than anything pooled: fresh allocation.
+        let b3 = arena.take(128);
+        assert_eq!(b3.len(), 128);
+        assert_eq!(arena.fresh_allocs(), 2);
+    }
+
+    #[test]
+    fn staging_arena_free_list_is_bounded() {
+        let mut arena = StagingArena::new();
+        for i in 0..(StagingArena::MAX_FREE + 10) {
+            arena.put(vec![0u8; i + 1]);
+        }
+        // Overflow evicted smaller buffers, keeping the larger capacities:
+        // a request at the top of the range is still served from the pool.
+        let b = arena.take(StagingArena::MAX_FREE + 5);
+        assert_eq!(b.len(), StagingArena::MAX_FREE + 5);
+        assert_eq!(arena.reuses(), 1);
+        assert_eq!(arena.fresh_allocs(), 0);
+    }
+
+    #[test]
+    fn aligned_scratch_views() {
+        let mut s = AlignedScratch::new(24);
+        assert_eq!(s.len(), 24);
+        s.as_pod_mut::<f64>().copy_from_slice(&[1.5, -2.0, 3.25]);
+        assert_eq!(s.as_pod::<f64>(), &[1.5, -2.0, 3.25]);
+        assert_eq!(s.as_bytes().len(), 24);
+        // Odd byte length still valid for byte views.
+        let mut t = AlignedScratch::new(13);
+        t.as_bytes_mut()[12] = 7;
+        assert_eq!(t.as_bytes()[12], 7);
+        assert!(!t.is_empty());
+        assert!(AlignedScratch::new(0).is_empty());
+    }
+
+    #[test]
+    fn engine_stats_accumulate() {
+        let s0 = stats::snapshot();
+        let dt = sub(&[4, 4], &[2, 2], &[1, 1], 1);
+        let src: Vec<u8> = (0..16).collect();
+        let packed = dt.pack_to_vec(&src);
+        let mut back = vec![0u8; 16];
+        dt.unpack(&packed, &mut back);
+        let plan = TransferPlan::compile(&dt, &dt).unwrap();
+        let mut out = vec![0u8; 16];
+        plan.execute(&src, &mut out);
+        let d = stats::snapshot().since(&s0);
+        assert!(d.packed_bytes >= 4);
+        assert!(d.unpacked_bytes >= 4);
+        assert!(d.fused_bytes >= 4);
+        assert!(d.plans_compiled >= 1);
     }
 }

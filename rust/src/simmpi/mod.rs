@@ -52,7 +52,7 @@ pub mod nonblocking;
 pub mod topology;
 
 pub use comm::{Comm, World};
-pub use datatype::Datatype;
+pub use datatype::{AlignedScratch, Datatype, StagingArena, TransferPlan};
 pub use nonblocking::{waitall, AlltoallwPlan, Request};
 pub use topology::{dims_create, CartComm};
 

@@ -25,9 +25,19 @@
 //!   cycle of MPI-4 persistent collectives, and the execution mode the
 //!   pipelined redistribution engine ([`crate::redistribute::pipeline`]) is
 //!   built on.
+//!
+//! Persistent plans additionally own a [`StagingArena`]: payload buffers
+//! checked out at [`AlltoallwPlan::start`] are returned to the arena when
+//! the completion call scatters them (received peer payloads are recycled
+//! into future sends), so steady-state executions stop allocating. The
+//! blocking [`AlltoallwPlan::execute`] goes further: the self-exchange is
+//! compiled once into a fused [`TransferPlan`] and copies `send -> recv`
+//! directly with no staging buffer at all.
+
+use std::sync::{Arc, Mutex};
 
 use super::comm::Comm;
-use super::datatype::{Datatype, Runs};
+use super::datatype::{Datatype, Runs, StagingArena, TransferPlan};
 use super::{as_bytes, as_bytes_mut, Pod};
 
 /// One outstanding peer receive of a nonblocking collective.
@@ -36,8 +46,9 @@ struct PendingRecv {
     /// Wire tag of the operation (unique per outstanding collective).
     tag: u32,
     /// Flattened receive datatype: where the payload scatters into the
-    /// caller's buffer at completion.
-    runs: Runs,
+    /// caller's buffer at completion. Shared with the owning plan so
+    /// persistent starts never clone the axis vectors.
+    runs: Arc<Runs>,
     /// Expected payload size (type-signature check, as in MPI matching).
     bytes: usize,
 }
@@ -57,11 +68,22 @@ pub struct Request {
     comm: Comm,
     pending: Vec<PendingRecv>,
     /// Self-contribution: packed at initiation, scattered at completion.
-    local: Option<(Vec<u8>, Runs)>,
+    local: Option<(Vec<u8>, Arc<Runs>)>,
+    /// Arena of the owning persistent plan, when there is one: every
+    /// payload buffer this request consumes (the local capture and the
+    /// received peer payloads) is returned there after scattering, so the
+    /// plan's next `start` reuses it instead of allocating.
+    arena: Option<Arc<Mutex<StagingArena>>>,
     done: bool,
 }
 
 impl Request {
+    fn recycle(&self, payload: Vec<u8>) {
+        if let Some(arena) = &self.arena {
+            arena.lock().unwrap().put(payload);
+        }
+    }
+
     /// Poll for completion (`MPI_Test`): drains every already-arrived peer
     /// payload into `recv` and returns `true` once the operation is
     /// complete. Until then `recv` is partially written (MPI leaves the
@@ -72,6 +94,7 @@ impl Request {
         }
         if let Some((payload, runs)) = self.local.take() {
             runs.unpack(&payload, recv);
+            self.recycle(payload);
         }
         let mut i = 0;
         while i < self.pending.len() {
@@ -86,6 +109,7 @@ impl Request {
                     );
                     p.runs.unpack(&payload, recv);
                     self.pending.swap_remove(i);
+                    self.recycle(payload);
                 }
                 None => i += 1,
             }
@@ -107,8 +131,10 @@ impl Request {
         }
         if let Some((payload, runs)) = self.local.take() {
             runs.unpack(&payload, recv);
+            self.recycle(payload);
         }
-        for p in self.pending.drain(..) {
+        let pending = std::mem::take(&mut self.pending);
+        for p in pending {
             let payload = self.comm.recv_bytes(p.src, p.tag);
             assert_eq!(
                 payload.len(),
@@ -117,6 +143,7 @@ impl Request {
                 p.src
             );
             p.runs.unpack(&payload, recv);
+            self.recycle(payload);
         }
         self.done = true;
     }
@@ -164,10 +191,12 @@ impl Comm {
                 self.send_bytes(p, tag, bytes[s..s + l].to_vec());
             }
         }
-        let contig = |p: usize| Runs {
-            base: rdispls[p] * elem,
-            run_len: recvcounts[p] * elem,
-            outer: Vec::new(),
+        let contig = |p: usize| {
+            Arc::new(Runs {
+                base: rdispls[p] * elem,
+                run_len: recvcounts[p] * elem,
+                outer: Vec::new(),
+            })
         };
         let local = {
             assert_eq!(sendcounts[me], recvcounts[me], "ialltoallv: self block mismatch");
@@ -179,7 +208,7 @@ impl Comm {
             .filter(|&p| p != me)
             .map(|p| PendingRecv { src: p, tag, runs: contig(p), bytes: recvcounts[p] * elem })
             .collect();
-        Request { comm: self.clone(), pending, local, done: false }
+        Request { comm: self.clone(), pending, local, arena: None, done: false }
     }
 
     /// Immediate generalized all-to-all over derived datatypes
@@ -200,17 +229,17 @@ impl Comm {
                 self.send_bytes(p, tag, sendtypes[p].pack_to_vec(send));
             }
         }
-        let local = Some((sendtypes[me].pack_to_vec(send), recvtypes[me].runs()));
+        let local = Some((sendtypes[me].pack_to_vec(send), Arc::new(recvtypes[me].runs())));
         let pending = (0..n)
             .filter(|&p| p != me)
             .map(|p| PendingRecv {
                 src: p,
                 tag,
-                runs: recvtypes[p].runs(),
+                runs: Arc::new(recvtypes[p].runs()),
                 bytes: recvtypes[p].packed_size(),
             })
             .collect();
-        Request { comm: self.clone(), pending, local, done: false }
+        Request { comm: self.clone(), pending, local, arena: None, done: false }
     }
 
     /// Typed convenience wrapper over [`Comm::ialltoallw`].
@@ -236,56 +265,77 @@ impl Comm {
         let n = self.size();
         assert_eq!(sendtypes.len(), n, "alltoallw_init: sendtypes length");
         assert_eq!(recvtypes.len(), n, "alltoallw_init: recvtypes length");
-        let flatten = |t: &Datatype| FlatType { runs: t.runs(), bytes: t.packed_size() };
+        let flatten = |t: &Datatype| FlatType { runs: Arc::new(t.runs()), bytes: t.packed_size() };
+        let send: Vec<FlatType> = sendtypes.iter().map(flatten).collect();
+        let recv: Vec<FlatType> = recvtypes.iter().map(flatten).collect();
+        let me = self.rank();
+        assert_eq!(send[me].bytes, recv[me].bytes, "alltoallw_init: self type signature mismatch");
+        // Compile the fused self-exchange once: the blocking execute path
+        // copies send -> recv directly through it, no staging buffer.
+        let self_fused = TransferPlan::from_runs(&send[me].runs, &recv[me].runs);
         AlltoallwPlan {
             comm: self.clone(),
-            send: sendtypes.iter().map(flatten).collect(),
-            recv: recvtypes.iter().map(flatten).collect(),
+            send,
+            recv,
+            self_fused,
+            arena: Arc::new(Mutex::new(StagingArena::new())),
         }
     }
 }
 
-/// A datatype flattened once at plan-creation time.
+/// A datatype flattened once at plan-creation time. The runs are shared
+/// (`Arc`) with every request the plan starts, so starts never re-clone
+/// the axis vectors.
 #[derive(Clone)]
 struct FlatType {
-    runs: Runs,
+    runs: Arc<Runs>,
     bytes: usize,
 }
 
 /// A persistent `alltoallw` plan: create once ([`Comm::alltoallw_init`]),
 /// then [`AlltoallwPlan::start`] → [`Request::wait`] any number of times.
-/// The per-peer subarray flattening is cached in the plan, amortizing the
-/// datatype-engine setup across every execution.
+///
+/// Three compiled artifacts are cached at creation and amortized across
+/// every execution:
+///
+/// * the per-peer flattened datatypes ([`Runs`], shared by `Arc` with the
+///   in-flight requests);
+/// * a fused [`TransferPlan`] for the self-exchange, used by the blocking
+///   [`AlltoallwPlan::execute`] to copy `send -> recv` with **zero**
+///   intermediate buffer;
+/// * a [`StagingArena`] recycling payload buffers: completion calls return
+///   consumed payloads (the local capture and received peer messages) to
+///   the arena, and subsequent starts draw from it, so steady-state
+///   executions stop heap-allocating on this rank.
 pub struct AlltoallwPlan {
     comm: Comm,
     send: Vec<FlatType>,
     recv: Vec<FlatType>,
+    self_fused: TransferPlan,
+    arena: Arc<Mutex<StagingArena>>,
 }
 
 impl AlltoallwPlan {
-    /// Begin one execution (`MPI_Start` on a persistent request): packs and
-    /// posts every peer payload through the cached flattened datatypes and
-    /// returns the completion handle. The plan is reusable — `start` may be
-    /// called again as soon as the previous request has been waited.
-    pub fn start(&self, send: &[u8]) -> Request {
+    /// Pack and post every *peer* payload; the self contribution is handled
+    /// by the caller (captured for nonblocking starts, fused for blocking
+    /// executes).
+    fn post_peers(&self, send: &[u8], tag: u32) {
         let n = self.comm.size();
         let me = self.comm.rank();
-        let tag = self.comm.next_nb_tag();
         for p in 0..n {
             if p != me {
                 let ft = &self.send[p];
-                let mut payload = vec![0u8; ft.bytes];
+                let mut payload = self.arena.lock().unwrap().take(ft.bytes);
                 ft.runs.pack(send, &mut payload);
                 self.comm.send_bytes(p, tag, payload);
             }
         }
-        let local = {
-            let ft = &self.send[me];
-            let mut payload = vec![0u8; ft.bytes];
-            ft.runs.pack(send, &mut payload);
-            Some((payload, self.recv[me].runs.clone()))
-        };
-        let pending = (0..n)
+    }
+
+    fn pending_for(&self, tag: u32) -> Vec<PendingRecv> {
+        let n = self.comm.size();
+        let me = self.comm.rank();
+        (0..n)
             .filter(|&p| p != me)
             .map(|p| PendingRecv {
                 src: p,
@@ -293,8 +343,33 @@ impl AlltoallwPlan {
                 runs: self.recv[p].runs.clone(),
                 bytes: self.recv[p].bytes,
             })
-            .collect();
-        Request { comm: self.comm.clone(), pending, local, done: false }
+            .collect()
+    }
+
+    /// Begin one execution (`MPI_Start` on a persistent request): packs and
+    /// posts every peer payload through the cached flattened datatypes and
+    /// returns the completion handle. The plan is reusable — `start` may be
+    /// called again as soon as the previous request has been waited.
+    pub fn start(&self, send: &[u8]) -> Request {
+        let me = self.comm.rank();
+        let tag = self.comm.next_nb_tag();
+        self.post_peers(send, tag);
+        // Self contribution: captured now (MPI forbids touching the send
+        // buffer before completion; rust's borrows end at return), staged
+        // through an arena buffer that comes back at the completion call.
+        let local = {
+            let ft = &self.send[me];
+            let mut payload = self.arena.lock().unwrap().take(ft.bytes);
+            ft.runs.pack(send, &mut payload);
+            Some((payload, self.recv[me].runs.clone()))
+        };
+        Request {
+            comm: self.comm.clone(),
+            pending: self.pending_for(tag),
+            local,
+            arena: Some(self.arena.clone()),
+            done: false,
+        }
     }
 
     /// Typed convenience wrapper over [`AlltoallwPlan::start`].
@@ -302,19 +377,43 @@ impl AlltoallwPlan {
         self.start(as_bytes(send))
     }
 
-    /// One full blocking execution (`MPI_Start` + `MPI_Wait`).
+    /// One full blocking execution (`MPI_Start` + `MPI_Wait`), with the
+    /// self-exchange routed through the compiled fused [`TransferPlan`]:
+    /// intra-rank bytes go `send -> recv` directly, no staging buffer.
     pub fn execute(&self, send: &[u8], recv: &mut [u8]) {
-        self.start(send).wait(recv);
+        let tag = self.comm.next_nb_tag();
+        self.post_peers(send, tag);
+        self.self_fused.execute(send, recv);
+        let req = Request {
+            comm: self.comm.clone(),
+            pending: self.pending_for(tag),
+            local: None,
+            arena: Some(self.arena.clone()),
+            done: false,
+        };
+        req.wait(recv);
     }
 
     /// Typed convenience wrapper over [`AlltoallwPlan::execute`].
     pub fn execute_typed<T: Pod>(&self, send: &[T], recv: &mut [T]) {
-        self.start(as_bytes(send)).wait(as_bytes_mut(recv));
+        self.execute(as_bytes(send), as_bytes_mut(recv));
     }
 
     /// Bytes this rank sends per execution (diagnostics/benchmarks).
     pub fn bytes_per_start(&self) -> usize {
         self.send.iter().map(|t| t.bytes).sum()
+    }
+
+    /// Arena effectiveness counters: `(reuses, fresh_allocs)` of the
+    /// payload staging arena so far.
+    pub fn arena_stats(&self) -> (u64, u64) {
+        let a = self.arena.lock().unwrap();
+        (a.reuses(), a.fresh_allocs())
+    }
+
+    /// Fused copy spans of the compiled self-exchange (diagnostics).
+    pub fn self_op_count(&self) -> usize {
+        self.self_fused.op_count()
     }
 
     /// The process group this plan communicates over.

@@ -1,0 +1,117 @@
+//! Steady-state allocation accounting for the compiled transfer-plan
+//! engine: after warmup, executions of compiled plans must perform **zero
+//! heap allocations** on the intra-rank path (fused copies + arena-recycled
+//! staging).
+//!
+//! Uses a counting global allocator with a *thread-local* counter, so each
+//! measurement only observes its own thread (the cargo test harness runs
+//! tests concurrently; a process-global counter would be polluted).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use a2wfft::redistribute::PipelinedRedistPlan;
+use a2wfft::simmpi::datatype::{Datatype, TransferPlan};
+use a2wfft::simmpi::World;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: defers to the system allocator; the counter is a plain Cell of a
+// primitive with no destructor, safe to touch from the allocator hook.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn fused_transfer_plan_execute_never_allocates() {
+    let send = Datatype::subarray(&[8, 10, 6], &[4, 5, 6], &[2, 3, 0], 8).unwrap();
+    let recv = Datatype::subarray(&[5, 9, 8], &[4, 5, 6], &[1, 2, 1], 8).unwrap();
+    let plan = TransferPlan::compile(&send, &recv).unwrap();
+    let src = vec![0xABu8; send.extent()];
+    let mut dst = vec![0u8; recv.extent()];
+    plan.execute(&src, &mut dst); // warmup (nothing to warm, but symmetric)
+    let n0 = allocs_on_this_thread();
+    for _ in 0..100 {
+        plan.execute(&src, &mut dst);
+    }
+    let delta = allocs_on_this_thread() - n0;
+    assert_eq!(delta, 0, "fused execute allocated {delta} times in 100 runs");
+}
+
+#[test]
+fn steady_state_pipelined_redistribution_never_allocates() {
+    // Single-rank world: every byte of the redistribution moves through the
+    // intra-rank engine (fused self-exchange, arena-staged local capture,
+    // preallocated chunk scratch). After two warmup round-trips the arenas
+    // are primed and further executions must not touch the heap.
+    World::run(1, |comm| {
+        let sizes = [4usize, 6, 8];
+        let mut plan = PipelinedRedistPlan::new(&comm, 8, &sizes, 0, &sizes, 1, 4, 2);
+        assert!(plan.is_pipelined(), "expected a chunked plan (pipe axis 2)");
+        let a: Vec<f64> = (0..plan.elems_a()).map(|x| x as f64 * 1.5).collect();
+        let mut b = vec![0.0f64; plan.elems_b()];
+        let mut back = vec![0.0f64; plan.elems_a()];
+        for _ in 0..2 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        assert_eq!(a, back, "roundtrip broken");
+        let n0 = allocs_on_this_thread();
+        for _ in 0..5 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        let delta = allocs_on_this_thread() - n0;
+        let msg = format!("steady-state pipelined executions allocated {delta} times in 5 trips");
+        assert_eq!(delta, 0, "{msg}");
+        assert_eq!(a, back, "roundtrip broken after steady-state runs");
+    });
+}
+
+#[test]
+fn steady_state_blocking_redist_plan_single_rank_never_allocates() {
+    // The blocking compiled RedistPlan at one rank is a pure fused
+    // TransferPlan execution (plus one wire-tag fetch): zero allocations
+    // from the very first execute.
+    World::run(1, |comm| {
+        let sizes = [6usize, 5, 4];
+        let plan = a2wfft::redistribute::RedistPlan::new(&comm, 8, &sizes, 2, &sizes, 0);
+        let a: Vec<f64> = (0..plan.elems_a()).map(|x| x as f64 - 7.0).collect();
+        let mut b = vec![0.0f64; plan.elems_b()];
+        plan.execute(&a, &mut b);
+        let n0 = allocs_on_this_thread();
+        for _ in 0..10 {
+            plan.execute(&a, &mut b);
+        }
+        let delta = allocs_on_this_thread() - n0;
+        assert_eq!(delta, 0, "blocking fused executions allocated {delta} times");
+    });
+}

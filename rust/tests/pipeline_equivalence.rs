@@ -6,7 +6,7 @@
 use a2wfft::decomp::decompose;
 use a2wfft::fft::{Complex64, NativeFft};
 use a2wfft::pfft::{ExecMode, Kind, PfftPlan, RedistMethod};
-use a2wfft::redistribute::{exchange, subarray_types, PipelinedRedistPlan};
+use a2wfft::redistribute::{exchange, subarray_types, PipelinedRedistPlan, RedistPlan};
 use a2wfft::simmpi::World;
 
 /// Small deterministic PRNG (xorshift64*), as in `property_invariants`.
@@ -65,7 +65,7 @@ fn pipelined_redist_bitwise_matches_blocking_random_cases() {
                 (0..sizes_a.iter().product::<usize>()).map(|_| lr.f64()).collect();
             let mut blocking = vec![0.0f64; sizes_b.iter().product()];
             exchange(&comm, &a, &sizes_a, axis_a, &mut blocking, &sizes_b, axis_b);
-            let plan = PipelinedRedistPlan::new(
+            let mut plan = PipelinedRedistPlan::new(
                 &comm, 8, &sizes_a, axis_a, &sizes_b, axis_b, chunks, depth,
             );
             let mut piped = vec![0.0f64; sizes_b.iter().product()];
@@ -104,7 +104,7 @@ fn overlap_depth_sweep_is_invariant() {
         exchange(&comm, &a, &sizes_a, 0, &mut reference, &sizes_b, 1);
         for chunks in [1usize, 2, 3, 6] {
             for depth in [1usize, 2, chunks.max(1)] {
-                let plan = PipelinedRedistPlan::new(
+                let mut plan = PipelinedRedistPlan::new(
                     &comm, 8, &sizes_a, 0, &sizes_b, 1, chunks, depth,
                 );
                 let mut got = vec![0.0f64; reference.len()];
@@ -146,6 +146,59 @@ fn persistent_plan_three_executions_bitwise_stable() {
             assert!(bitwise, "rank {me} round {round}: persistent plan diverged");
         }
     });
+}
+
+#[test]
+fn compiled_redist_plan_fused_path_bitwise_matches_oneshot() {
+    // The compiled RedistPlan routes the intra-rank block through a fused
+    // TransferPlan (no staging buffer) and the wire blocks through
+    // arena-recycled persistent collectives; reused >= 3 times it must stay
+    // bitwise identical to the raw blocking alltoallw on the same types.
+    let mut rng = Rng::new(23);
+    for case in 0..10 {
+        let d = rng.range(3, 4);
+        let global: Vec<usize> = (0..d).map(|_| rng.range(2, 9)).collect();
+        let nprocs = rng.range(1, 4); // nprocs == 1 exercises the pure fused path
+        let axis_a = rng.below(d);
+        let mut axis_b = rng.below(d);
+        while axis_b == axis_a {
+            axis_b = rng.below(d);
+        }
+        let seed = rng.next_u64();
+        let global_c = global.clone();
+        World::run(nprocs, move |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let mut sizes_a = global_c.clone();
+            let mut sizes_b = global_c.clone();
+            sizes_a[axis_b] = decompose(global_c[axis_b], m, me).0;
+            sizes_b[axis_a] = decompose(global_c[axis_a], m, me).0;
+            let send_t = subarray_types(&sizes_a, axis_a, m, 8);
+            let recv_t = subarray_types(&sizes_b, axis_b, m, 8);
+            let plan = RedistPlan::new(&comm, 8, &sizes_a, axis_a, &sizes_b, axis_b);
+            for round in 0..3 {
+                let mut lr = Rng::new(seed ^ ((me * 31 + round + 1) as u64));
+                let a: Vec<f64> =
+                    (0..sizes_a.iter().product::<usize>()).map(|_| lr.f64()).collect();
+                let mut reference = vec![0.0f64; sizes_b.iter().product()];
+                comm.alltoallw_typed(&a, &send_t, &mut reference, &recv_t);
+                let mut compiled = vec![0.0f64; sizes_b.iter().product()];
+                plan.execute(&a, &mut compiled);
+                let bitwise = reference
+                    .iter()
+                    .zip(&compiled)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(bitwise, "case {case} rank {me} round {round}: fused path diverged");
+                // Reverse direction through the compiled bwd plan.
+                let mut back = vec![0.0f64; a.len()];
+                plan.execute_back(&compiled, &mut back);
+                assert!(
+                    a.iter().zip(&back).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "case {case} rank {me} round {round}: fused roundtrip diverged"
+                );
+            }
+        });
+    }
 }
 
 /// Forward spectra of the same input under blocking and pipelined

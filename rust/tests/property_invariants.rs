@@ -15,7 +15,7 @@
 use a2wfft::decomp::{decompose, decompose_all};
 use a2wfft::fft::{max_abs_diff, naive_dft, Complex64, Direction, FftPlan};
 use a2wfft::redistribute::{exchange, traditional_exchange};
-use a2wfft::simmpi::datatype::Datatype;
+use a2wfft::simmpi::datatype::{Datatype, TransferPlan};
 use a2wfft::simmpi::World;
 
 /// Small deterministic PRNG (xorshift64*).
@@ -93,6 +93,80 @@ fn prop_subarray_pack_unpack_roundtrip() {
         // Run decomposition bookkeeping.
         let runs = dt.runs();
         assert_eq!(runs.count() * runs.run_len, dt.packed_size(), "case {case}");
+    }
+}
+
+/// Draw a random subarray datatype that selects exactly `subsizes` (in
+/// some random enclosing array), for the transfer-plan properties below.
+fn random_enclosing(rng: &mut Rng, subsizes: &[usize], elem: usize) -> Datatype {
+    let sizes: Vec<usize> = subsizes.iter().map(|&ss| ss + rng.below(5)).collect();
+    let starts: Vec<usize> =
+        sizes.iter().zip(subsizes).map(|(&s, &ss)| rng.below(s - ss + 1)).collect();
+    Datatype::subarray(&sizes, subsizes, &starts, elem).unwrap()
+}
+
+#[test]
+fn prop_transfer_plan_fused_bitwise_equals_staged_pack_unpack() {
+    // For random (send, recv) datatype pairs selecting the same number of
+    // bytes, the fused TransferPlan copy must be bitwise identical to the
+    // reference semantics: pack through a contiguous staging buffer, then
+    // unpack — including every byte *outside* the selection (untouched).
+    let mut rng = Rng::new(21);
+    for case in 0..200 {
+        let d = rng.range(1, 4);
+        let subsizes: Vec<usize> = (0..d).map(|_| rng.range(0, 6)).collect();
+        let elem = [1usize, 2, 4, 8][rng.below(4)];
+        let send = random_enclosing(&mut rng, &subsizes, elem);
+        // The receive side selects the same block, possibly through a
+        // permuted-axes enclosing shape (same products, different run
+        // structure).
+        let mut recv_sub = subsizes.clone();
+        if d > 1 && rng.below(2) == 0 {
+            let i = rng.below(d);
+            let j = rng.below(d);
+            recv_sub.swap(i, j);
+        }
+        let recv = random_enclosing(&mut rng, &recv_sub, elem);
+        let plan = TransferPlan::compile(&send, &recv)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let src: Vec<u8> = (0..send.extent()).map(|_| rng.next_u64() as u8).collect();
+        // Reference: staged pack -> unpack.
+        let staging = send.pack_to_vec(&src);
+        let mut want = vec![0x5Au8; recv.extent()];
+        recv.unpack(&staging, &mut want);
+        // Fused, over the same initial destination contents.
+        let mut got = vec![0x5Au8; recv.extent()];
+        plan.execute(&src, &mut got);
+        assert_eq!(got, want, "case {case}: fused != staged");
+        assert_eq!(plan.bytes(), send.packed_size(), "case {case}: byte accounting");
+    }
+}
+
+#[test]
+fn prop_transfer_plan_reuse_never_diverges_from_one_shot() {
+    // A plan compiled once and executed >= 3 times over changing data must
+    // match a freshly compiled plan (and the staged reference) every time.
+    let mut rng = Rng::new(22);
+    for case in 0..50 {
+        let d = rng.range(2, 4);
+        let subsizes: Vec<usize> = (0..d).map(|_| rng.range(1, 5)).collect();
+        let elem = [1usize, 4, 8][rng.below(3)];
+        let send = random_enclosing(&mut rng, &subsizes, elem);
+        let recv = random_enclosing(&mut rng, &subsizes, elem);
+        let reused = TransferPlan::compile(&send, &recv).unwrap();
+        for round in 0..3 {
+            let src: Vec<u8> = (0..send.extent()).map(|_| rng.next_u64() as u8).collect();
+            let one_shot = TransferPlan::compile(&send, &recv).unwrap();
+            let mut via_reused = vec![0u8; recv.extent()];
+            reused.execute(&src, &mut via_reused);
+            let mut via_fresh = vec![0u8; recv.extent()];
+            one_shot.execute(&src, &mut via_fresh);
+            assert_eq!(via_reused, via_fresh, "case {case} round {round}: reuse diverged");
+            let staging = send.pack_to_vec(&src);
+            let mut staged = vec![0u8; recv.extent()];
+            recv.unpack(&staging, &mut staged);
+            assert_eq!(via_reused, staged, "case {case} round {round}: plan != staged");
+        }
     }
 }
 
