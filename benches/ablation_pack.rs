@@ -1,4 +1,4 @@
-//! Ablation: the datatype-engine copy paths. Two sections:
+//! Ablation: the datatype-engine copy paths. Three sections:
 //!
 //! 1. **pack throughput** — pack/unpack of subarray datatypes (the engine
 //!    work inside `alltoallw`) against a plain memcpy upper bound and a
@@ -9,12 +9,22 @@
 //!    redistribution) against the staged reference (pack into a contiguous
 //!    buffer, then unpack) and the memcpy ceiling, at paper-like pencil
 //!    shapes, reporting effective bandwidth on the payload bytes.
+//! 3. **wire bytes per dtype** — full distributed transforms at the same
+//!    shape in `f64` and `f32`: the single-precision exchange must ship
+//!    exactly half the wire bytes (the alltoallw collective is wire-bound,
+//!    so this is the scale/speed headroom of `--dtype f32`).
 //!
 //! Pass `--tiny` (the CI smoke mode) to shrink every geometry so the whole
-//! binary finishes in well under a second. Results are also written to
-//! `BENCH_ablation_pack.json` for cross-PR tracking.
+//! binary finishes quickly, and `--dtype f32|f64` to pick the element size
+//! of the pack/fused sections; the wire section measures both precisions
+//! and therefore runs only in the default and `--dtype f64` invocations
+//! (an f32 run would just duplicate it). With an explicit `--dtype` the
+//! JSON artifact is suffixed (`BENCH_ablation_pack_f32.json`), so CI can
+//! upload one matrix per precision.
 
 use a2wfft::coordinator::benchkit::{time_best, write_bench_json, JsonObj};
+use a2wfft::coordinator::{run_config, Dtype, RunConfig};
+use a2wfft::pfft::Kind;
 use a2wfft::redistribute::subarray_types;
 use a2wfft::simmpi::datatype::{Datatype, TransferPlan};
 
@@ -31,12 +41,12 @@ fn naive_pack(sizes: &[usize; 3], sub: &[usize; 3], start: &[usize; 3], src: &[u
     }
 }
 
-fn pack_section(tiny: bool, rows: &mut Vec<String>) {
-    println!("=== ablation: datatype-engine pack throughput ===");
+fn pack_section(tiny: bool, dtype: Dtype, rows: &mut Vec<String>) {
+    println!("=== ablation: datatype-engine pack throughput ({}) ===", dtype.name());
     println!("geometry\trun_bytes\tengine_GBs\tnaive_GBs\tmemcpy_GBs");
     // Three geometries: long runs (axis-0 slice), medium (axis-1), short (axis-2).
     let sizes = if tiny { [8usize, 8, 16] } else { [64usize, 64, 128] };
-    let elem = 8usize;
+    let elem = dtype.real_bytes();
     let iters = if tiny { 2 } else { 20 };
     let total = sizes.iter().product::<usize>() * elem;
     let src = vec![7u8; total];
@@ -67,6 +77,7 @@ fn pack_section(tiny: bool, rows: &mut Vec<String>) {
         rows.push(
             JsonObj::new()
                 .str("section", "pack")
+                .str("dtype", dtype.name())
                 .str("geometry", name)
                 .int("run_bytes", runs.run_len as u64)
                 .int("payload_bytes", packed as u64)
@@ -83,11 +94,14 @@ fn pack_section(tiny: bool, rows: &mut Vec<String>) {
 /// both sides — staged through pack->unpack vs the compiled fused copy.
 /// Returns the acceptance failures (fused not beating staged) so `main`
 /// can report them *after* the JSON artifact is safely written.
-fn fused_section(tiny: bool, rows: &mut Vec<String>) -> Vec<String> {
+fn fused_section(tiny: bool, dtype: Dtype, rows: &mut Vec<String>) -> Vec<String> {
     let mut failures = Vec::new();
-    println!("\n=== ablation: staged pack->unpack vs fused TransferPlan vs memcpy ===");
+    println!(
+        "\n=== ablation: staged pack->unpack vs fused TransferPlan vs memcpy ({}) ===",
+        dtype.name()
+    );
     println!("shape\tops\tstaged_GBs\tfused_GBs\tmemcpy_GBs\tfused_vs_staged");
-    let elem = 16usize; // Complex64 payloads, as in the transforms
+    let elem = dtype.complex_bytes(); // complex payloads, as in the transforms
     let iters = if tiny { 3 } else { 30 };
     // (label, sizes_a, axis_a, sizes_b, axis_b, ranks): local shapes of a
     // v->w exchange over an m-rank subgroup, as in RedistPlan::new.
@@ -138,6 +152,7 @@ fn fused_section(tiny: bool, rows: &mut Vec<String>) -> Vec<String> {
         rows.push(
             JsonObj::new()
                 .str("section", "fused")
+                .str("dtype", dtype.name())
                 .str("shape", name)
                 .int("payload_bytes", payload as u64)
                 .int("fused_ops", plan.op_count() as u64)
@@ -160,14 +175,106 @@ fn fused_section(tiny: bool, rows: &mut Vec<String>) -> Vec<String> {
     failures
 }
 
+/// Wire-byte matrix: the same distributed transform at both precisions,
+/// paper-like slab and pencil shapes. Asserts the f32 exchange ships
+/// exactly half the f64 wire bytes — the collective is wire-bound, so this
+/// is the headroom `--dtype f32` buys.
+fn wire_section(tiny: bool, rows: &mut Vec<String>) {
+    println!("\n=== ablation: wire bytes per dtype (same shape, f32 vs f64) ===");
+    println!("shape\tgrid\tdtype\twire_bytes\ttotal_s\tvs_f64_bytes");
+    let cases: Vec<(&str, Vec<usize>, usize, usize)> = if tiny {
+        vec![("slab-16x12x10/p4", vec![16, 12, 10], 4, 1)]
+    } else {
+        vec![
+            ("slab-64^3/p4", vec![64, 64, 64], 4, 1),
+            ("pencil-64^3/p8", vec![64, 64, 64], 8, 2),
+        ]
+    };
+    for (name, global, ranks, grid_ndims) in cases {
+        let mut f64_bytes = 0u64;
+        for dtype in [Dtype::F64, Dtype::F32] {
+            let cfg = RunConfig {
+                global: global.clone(),
+                ranks,
+                kind: Kind::R2c,
+                dtype,
+                inner: 1,
+                outer: if tiny { 1 } else { 2 },
+                ..Default::default()
+            };
+            let rep = run_config(&cfg, grid_ndims);
+            assert!(
+                rep.max_err < dtype.roundtrip_tol(),
+                "{name} {}: roundtrip err {}",
+                dtype.name(),
+                rep.max_err
+            );
+            if dtype == Dtype::F64 {
+                f64_bytes = rep.bytes;
+            } else {
+                assert_eq!(
+                    rep.bytes * 2,
+                    f64_bytes,
+                    "{name}: f32 wire bytes must be exactly half of f64"
+                );
+            }
+            println!(
+                "{name}\t{grid_ndims}d\t{}\t{}\t{:.6}\t{:.2}x",
+                dtype.name(),
+                rep.bytes,
+                rep.total,
+                rep.bytes as f64 / f64_bytes as f64
+            );
+            rows.push(
+                JsonObj::new()
+                    .str("section", "wire")
+                    .str("shape", name)
+                    .str("dtype", dtype.name())
+                    .int("ranks", ranks as u64)
+                    .int("bytes", rep.bytes)
+                    .num("total_s", rep.total)
+                    .num("max_err", rep.max_err)
+                    .render(),
+            );
+        }
+    }
+}
+
 fn main() {
-    let tiny = std::env::args().any(|a| a == "--tiny");
+    let args: Vec<String> = std::env::args().collect();
+    let tiny = args.iter().any(|a| a == "--tiny");
+    // Optional --dtype f32|f64 (or --dtype=f32): element size of the
+    // pack/fused sections, and a suffix for the JSON artifact so CI can
+    // upload one matrix per precision. The wire section always runs both.
+    let dtype_arg: Option<Dtype> = args
+        .iter()
+        .position(|a| a == "--dtype")
+        .map(|i| {
+            args.get(i + 1)
+                .map(|s| s.as_str())
+                .unwrap_or_else(|| panic!("--dtype: missing value (f32|f64)"))
+        })
+        .or_else(|| args.iter().find_map(|a| a.strip_prefix("--dtype=")))
+        .map(|s| Dtype::parse(s).unwrap_or_else(|| panic!("--dtype: unknown {s} (f32|f64)")));
+    let dtype = dtype_arg.unwrap_or(Dtype::F64);
+    let bench_name = match dtype_arg {
+        None => "ablation_pack".to_string(),
+        Some(d) => format!("ablation_pack_{}", d.name()),
+    };
     let mut rows = Vec::new();
-    pack_section(tiny, &mut rows);
-    let failures = fused_section(tiny, &mut rows);
-    match write_bench_json("ablation_pack", &rows) {
+    pack_section(tiny, dtype, &mut rows);
+    let failures = fused_section(tiny, dtype, &mut rows);
+    // The wire section always measures *both* precisions, so running it
+    // from the f32 invocation too would just duplicate the slowest part of
+    // the bench into a second artifact; the default and f64 runs carry it.
+    if dtype != Dtype::F32 {
+        wire_section(tiny, &mut rows);
+    } else {
+        println!("\n(wire section skipped for --dtype f32: the f64 artifact carries both precisions)");
+    }
+    match write_bench_json(&bench_name, &rows) {
         Ok(path) => println!("\nwrote {}", path.display()),
-        Err(e) => eprintln!("could not write BENCH_ablation_pack.json: {e}"),
+        Err(e) => eprintln!("could not write BENCH_{bench_name}.json: {e}"),
     }
     if !failures.is_empty() {
         for f in &failures {

@@ -1,11 +1,46 @@
 //! Ablation: the paper's core claim isolated — one `alltoallw` over
 //! subarray datatypes vs the traditional remap + `alltoallv`, on identical
 //! substrate/transport, across mesh sizes and group sizes. Reports the
-//! redistribution-only time (the Figs. 6b/7b/8b/9b quantity).
+//! redistribution-only time (the Figs. 6b/7b/8b/9b quantity) — and the
+//! dtype matrix: the same exchanges at `f32`, which halve the wire bytes
+//! the collective is bound by.
 
 use a2wfft::coordinator::benchkit::*;
-use a2wfft::coordinator::EngineKind;
-use a2wfft::pfft::{Kind, RedistMethod};
+use a2wfft::coordinator::{Dtype, EngineKind};
+use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
+
+fn dtype_matrix_section() {
+    banner("ablation: dtype matrix (f64 vs f32, both methods, wire bytes halve)");
+    real_header();
+    let (global, ranks, grid) = ([48usize, 48, 48], 4usize, 2usize);
+    for (mlabel, method) in
+        [("alltoallw", RedistMethod::Alltoallw), ("traditional", RedistMethod::Traditional)]
+    {
+        let mut f64_bytes = 0;
+        for dtype in [Dtype::F64, Dtype::F32] {
+            let rep = real_row_full(
+                &format!("{mlabel}/{}", dtype.name()),
+                &global,
+                ranks,
+                grid,
+                Kind::C2c,
+                method,
+                EngineKind::Native,
+                ExecMode::Blocking,
+                dtype,
+            );
+            if dtype == Dtype::F64 {
+                f64_bytes = rep.bytes;
+            } else {
+                assert_eq!(
+                    rep.bytes * 2,
+                    f64_bytes,
+                    "{mlabel}: f32 wire bytes must be half of f64"
+                );
+            }
+        }
+    }
+}
 
 fn main() {
     banner("ablation: redistribution method (same substrate, redist-only column)");
@@ -34,4 +69,5 @@ fn main() {
             t.redist / n.redist
         );
     }
+    dtype_matrix_section();
 }

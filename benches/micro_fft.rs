@@ -9,7 +9,7 @@ fn main() {
     println!("=== micro: serial FFT throughput (5 n log2 n flop convention) ===");
     println!("n\tclass\tus_per_line\tMFLOPs");
     for &n in &[64usize, 256, 1024, 4096, 700, 360, 1000, 67, 251, 521] {
-        let plan = FftPlan::new(n);
+        let plan = FftPlan::<f64>::new(n);
         let class = if n.is_power_of_two() {
             "pow2"
         } else if a2wfft::fft::factorize(n).iter().all(|&f| f <= 61) {

@@ -15,7 +15,7 @@ fn main() {
     let ranks = 4;
     println!("Distributed circular convolution of {global:?} fields over {ranks} ranks");
     World::run(ranks, |comm| {
-        let mut plan = PfftPlan::with_dims(
+        let mut plan = PfftPlan::<f64>::with_dims(
             &comm,
             &global,
             &[2, 2],
@@ -30,7 +30,7 @@ fn main() {
         let ga = a.gather(0);
         let gb = b.gather(0);
         // conv = ifft(fft(a) * fft(b)).
-        let mut eng = NativeFft::new();
+        let mut eng = NativeFft::<f64>::new();
         let mut fa = vec![Complex64::ZERO; plan.output_len()];
         let mut fb = vec![Complex64::ZERO; plan.output_len()];
         plan.forward(&mut eng, a.local(), &mut fa);

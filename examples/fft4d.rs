@@ -14,14 +14,14 @@ fn main() {
     let ranks = 8;
     println!("4-D c2c transform of {global:?} over {ranks} ranks (3-D grid)");
     let errs = World::run(ranks, |comm| {
-        let mut plan = PfftPlan::with_dims(
+        let mut plan = PfftPlan::<f64>::with_dims(
             &comm,
             &global,
             &[2, 2, 2],
             Kind::C2c,
             RedistMethod::Alltoallw,
         );
-        let mut engine = NativeFft::new();
+        let mut engine = NativeFft::<f64>::new();
         // arrayA[j] = j + j*I, as in the paper's listing (local index).
         let input: Vec<Complex64> =
             (0..plan.input_len()).map(|j| Complex64::new(j as f64, j as f64)).collect();

@@ -23,21 +23,26 @@ fn wavenumber(idx: usize, n: usize) -> f64 {
 }
 
 fn main() {
-    let global = vec![48usize, 48, 48];
+    // Optional mesh extent (default 48 — CI runs tiny shapes).
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48);
+    let global = vec![n, n, n];
     let ranks = 4;
     // Manufactured solution: u = sin(3x) cos(2y) sin(z); f = -(9+4+1) u.
     let (a, b, c) = (3.0, 2.0, 1.0);
     let lam = a * a + b * b + c * c;
     println!("Spectral Poisson solve on {global:?}, {ranks} ranks (pencil)");
     let max_errs = World::run(ranks, |comm| {
-        let mut plan = PfftPlan::with_dims(
+        let mut plan = PfftPlan::<f64>::with_dims(
             &comm,
             &global,
             &[2, 2],
             Kind::R2c,
             RedistMethod::Alltoallw,
         );
-        let mut engine = NativeFft::new();
+        let mut engine = NativeFft::<f64>::new();
         let win = plan.input_window();
         let shape = plan.input_shape().to_vec();
         let tau = std::f64::consts::TAU;

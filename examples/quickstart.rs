@@ -1,26 +1,31 @@
 //! Quickstart: a distributed 3-D real-to-complex FFT on a 2x2 pencil grid
 //! of simulated ranks, with the paper's single-`alltoallw` redistribution.
 //!
-//! Run: `cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart [-- N]`
+//! (optional mesh extent N, default 64 — CI runs tiny shapes).
 
 use a2wfft::fft::{Complex64, NativeFft};
 use a2wfft::pfft::{Kind, PfftPlan, RedistMethod};
 use a2wfft::simmpi::World;
 
 fn main() {
-    let global = vec![64usize, 64, 64];
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let global = vec![n, n, n];
     let ranks = 4;
     println!("3-D r2c transform of {global:?} over {ranks} ranks (2-D pencil grid)");
     let reports = World::run(ranks, |comm| {
         // Every rank builds the collective plan (like MPI planning).
-        let mut plan = PfftPlan::with_dims(
+        let mut plan = PfftPlan::<f64>::with_dims(
             &comm,
             &global,
             &[2, 2],
             Kind::R2c,
             RedistMethod::Alltoallw,
         );
-        let mut engine = NativeFft::new();
+        let mut engine = NativeFft::<f64>::new();
         // Fill this rank's block of a smooth global field.
         let win = plan.input_window();
         let shape = plan.input_shape().to_vec();

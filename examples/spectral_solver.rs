@@ -58,7 +58,7 @@ impl Solver {
             mask[i] = if kx[i].abs() < cutoff && ky[i] < cutoff { 1.0 } else { 0.0 };
         }
         let ilen = plan.input_len();
-        Solver { plan, engine: NativeFft::new(), kx, ky, mask, nu, scratch_r: vec![0.0; ilen] }
+        Solver { plan, engine: NativeFft::<f64>::new(), kx, ky, mask, nu, scratch_r: vec![0.0; ilen] }
     }
 
     /// dw/dt in spectral space: -dealias(F(u . grad w)) - nu k^2 w.
@@ -117,7 +117,7 @@ fn main() {
     let results = World::run(ranks, |comm| {
         let global = vec![n, n];
         let plan =
-            PfftPlan::with_dims(&comm, &global, &[ranks], Kind::R2c, RedistMethod::Alltoallw);
+            PfftPlan::<f64>::with_dims(&comm, &global, &[ranks], Kind::R2c, RedistMethod::Alltoallw);
         let win = plan.input_window();
         let ishape = plan.input_shape().to_vec();
         let ilen = plan.input_len();

@@ -24,19 +24,19 @@ fn main() {
     println!("3-D c2c over {ranks} ranks; engines: native (f64) vs xla-aot (f32 Pallas)");
     let diffs = World::run(ranks, |comm| {
         let mut plan =
-            PfftPlan::with_dims(&comm, &global, &[2, 2], Kind::C2c, RedistMethod::Alltoallw);
+            PfftPlan::<f64>::with_dims(&comm, &global, &[2, 2], Kind::C2c, RedistMethod::Alltoallw);
         let input: Vec<Complex64> = (0..plan.input_len())
             .map(|k| {
                 Complex64::new(((k * 7 + comm.rank()) % 23) as f64 / 23.0, ((k * 3) % 17) as f64 / 17.0)
             })
             .collect();
         // Native (double-precision) spectrum.
-        let mut native = NativeFft::new();
+        let mut native = NativeFft::<f64>::new();
         let mut spec_native = vec![Complex64::ZERO; plan.output_len()];
         plan.forward(&mut native, &input, &mut spec_native);
         // XLA engine: the pallas four-step matmul FFT, AOT-lowered.
         let mut xeng = XlaFftEngine::load(&artifacts).expect("load artifacts");
-        assert_eq!(xeng.name(), "xla-aot");
+        assert_eq!(<XlaFftEngine as SerialFft<f64>>::name(&xeng), "xla-aot");
         let mut spec_xla = vec![Complex64::ZERO; plan.output_len()];
         plan.forward(&mut xeng, &input, &mut spec_xla);
         // And the roundtrip entirely on the XLA engine.

@@ -5,6 +5,11 @@
 //! The `repro run` subcommand understands, among others (see `repro help`
 //! for the full list):
 //!
+//! * `--dtype f32|f64` — element precision
+//!   ([`crate::coordinator::Dtype`]): the driver monomorphizes the whole
+//!   transform stack (twiddle tables, serial FFTs, redistribution
+//!   payloads) over the chosen [`crate::fft::Real`] type; `f32` halves
+//!   every wire byte of the exchange. Default `f64` (the paper's setting).
 //! * `--exec blocking|pipelined` — redistribution execution mode
 //!   ([`crate::pfft::ExecMode`]): `blocking` issues one blocking
 //!   `ALLTOALLW` per redistribution (the paper's protocol); `pipelined`

@@ -16,7 +16,7 @@
 use std::io::Write as _;
 use std::path::PathBuf;
 
-use crate::coordinator::config::{EngineKind, RunConfig};
+use crate::coordinator::config::{Dtype, EngineKind, RunConfig};
 use crate::coordinator::driver::{run_config, RunReport};
 use crate::netmodel::figures::{FigRow, HEADER};
 use crate::pfft::{ExecMode, Kind, RedistMethod};
@@ -44,7 +44,7 @@ pub fn real_row(
     real_row_exec(label, global, ranks, grid_ndims, kind, method, engine, ExecMode::Blocking)
 }
 
-/// [`real_row`] with an explicit redistribution [`ExecMode`].
+/// [`real_row`] with an explicit redistribution [`ExecMode`] (dtype f64).
 #[allow(clippy::too_many_arguments)]
 pub fn real_row_exec(
     label: &str,
@@ -56,6 +56,24 @@ pub fn real_row_exec(
     engine: EngineKind,
     exec: ExecMode,
 ) -> RunReport {
+    real_row_full(label, global, ranks, grid_ndims, kind, method, engine, exec, Dtype::F64)
+}
+
+/// The full bench-matrix row: explicit [`ExecMode`] *and* [`Dtype`] — the
+/// dtype selects the precision the whole stack is monomorphized over and
+/// the roundtrip acceptance tolerance.
+#[allow(clippy::too_many_arguments)]
+pub fn real_row_full(
+    label: &str,
+    global: &[usize],
+    ranks: usize,
+    grid_ndims: usize,
+    kind: Kind,
+    method: RedistMethod,
+    engine: EngineKind,
+    exec: ExecMode,
+    dtype: Dtype,
+) -> RunReport {
     let cfg = RunConfig {
         global: global.to_vec(),
         grid: Vec::new(),
@@ -64,6 +82,7 @@ pub fn real_row_exec(
         method,
         exec,
         engine,
+        dtype,
         inner: 2,
         outer: 3,
     };
@@ -78,10 +97,11 @@ pub fn real_row_exec(
         rep.bytes,
         rep.max_err
     );
-    // The XLA engine carries f32 planes; the native engine is f64.
+    // The XLA engine carries f32 planes whatever the interface precision;
+    // the native engine roundtrips at the dtype's own tolerance.
     let tol = match engine {
-        EngineKind::Native => 1e-8,
-        EngineKind::Xla => 1e-3,
+        EngineKind::Native => dtype.roundtrip_tol(),
+        EngineKind::Xla => 1e-3_f64.max(dtype.roundtrip_tol()),
     };
     assert!(rep.max_err < tol, "bench roundtrip failed: {}", rep.max_err);
     rep
@@ -179,13 +199,14 @@ pub fn json_usize_array(xs: &[usize]) -> String {
     format!("[{}]", body.join(", "))
 }
 
-/// One machine-readable result row: label, configuration, per-stage
+/// One machine-readable result row: label, configuration, dtype, per-stage
 /// timings, wire bytes and the engine's fused-vs-staged copy attribution.
 pub fn report_json(label: &str, global: &[usize], ranks: usize, rep: &RunReport) -> String {
     JsonObj::new()
         .str("label", label)
         .raw("global", json_usize_array(global))
         .int("ranks", ranks as u64)
+        .str("dtype", rep.dtype)
         .num("total_s", rep.total)
         .num("fft_s", rep.fft)
         .num("redist_s", rep.redist)

@@ -1,13 +1,14 @@
 //! Run configuration for the driver and CLI.
 
+use crate::fft::Real;
 use crate::pfft::{ExecMode, Kind, RedistMethod};
 
 /// Which serial FFT engine the ranks use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
-    /// The native rust planner (FFTW stand-in, f64).
+    /// The native rust planner (FFTW stand-in, either precision).
     Native,
-    /// The AOT JAX+Pallas artifacts through PJRT (f32 planes).
+    /// The AOT JAX+Pallas artifacts through PJRT (f32 planes internally).
     Xla,
 }
 
@@ -16,6 +17,63 @@ impl EngineKind {
         match self {
             EngineKind::Native => "native",
             EngineKind::Xla => "xla-aot",
+        }
+    }
+}
+
+/// The element precision of a run — a first-class runtime dimension: the
+/// driver monomorphizes the whole transform stack over it, and single
+/// precision halves every wire byte of the redistribution exchange.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    /// Single precision (`Complex32` payloads, 8 wire bytes per element).
+    F32,
+    /// Double precision (`Complex64` payloads, 16 wire bytes per element —
+    /// the paper's setting and the default).
+    #[default]
+    F64,
+}
+
+impl Dtype {
+    /// Dtype name (`"f32"`/`"f64"`), matching [`Real::NAME`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => <f32 as Real>::NAME,
+            Dtype::F64 => <f64 as Real>::NAME,
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" | "single" | "float" => Some(Dtype::F32),
+            "f64" | "double" => Some(Dtype::F64),
+            _ => None,
+        }
+    }
+
+    /// Bytes per real scalar.
+    pub fn real_bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    /// Bytes per complex element (the redistribution payload element).
+    pub fn complex_bytes(self) -> usize {
+        2 * self.real_bytes()
+    }
+
+    /// Acceptance tolerance for a full forward+backward roundtrip at this
+    /// precision. Deliberately generous and shape-independent at bench
+    /// scales: `1e-3` (~1e4 x epsilon) for f32, and `1e-8` for f64 — the
+    /// historical bench gate, several orders above observed f64 error, so
+    /// timing noise never masquerades as a precision failure.
+    pub fn roundtrip_tol(self) -> f64 {
+        match self {
+            Dtype::F32 => 1e-3,
+            Dtype::F64 => 1e-8,
         }
     }
 }
@@ -37,6 +95,8 @@ pub struct RunConfig {
     pub exec: ExecMode,
     /// Serial engine.
     pub engine: EngineKind,
+    /// Element precision (the driver monomorphizes over this).
+    pub dtype: Dtype,
     /// Inner loop length (consecutive fwd+bwd pairs per timing sample).
     pub inner: usize,
     /// Outer loop length (timing samples; fastest is reported).
@@ -53,6 +113,7 @@ impl Default for RunConfig {
             method: RedistMethod::Alltoallw,
             exec: ExecMode::Blocking,
             engine: EngineKind::Native,
+            dtype: Dtype::F64,
             inner: 3,
             outer: 5,
         }
@@ -86,5 +147,16 @@ mod tests {
     fn explicit_grid_kept() {
         let c = RunConfig { grid: vec![4, 1], ..Default::default() };
         assert_eq!(c.resolved_grid(2), vec![4, 1]);
+    }
+
+    #[test]
+    fn dtype_dimensions() {
+        assert_eq!(Dtype::default(), Dtype::F64);
+        assert_eq!(Dtype::F32.complex_bytes() * 2, Dtype::F64.complex_bytes());
+        assert_eq!(Dtype::parse("f32"), Some(Dtype::F32));
+        assert_eq!(Dtype::parse("double"), Some(Dtype::F64));
+        assert_eq!(Dtype::parse("f16"), None);
+        assert_eq!(Dtype::F32.name(), "f32");
+        assert!(Dtype::F32.roundtrip_tol() > Dtype::F64.roundtrip_tol());
     }
 }

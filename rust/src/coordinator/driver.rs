@@ -1,11 +1,16 @@
 //! The measurement driver: spawn the world, build plans, run the paper's
 //! timing protocol, aggregate.
+//!
+//! The precision is a runtime dimension of the configuration
+//! ([`RunConfig::dtype`]); [`run_config`] dispatches once and the whole
+//! stack below it — plans, buffers, redistribution payloads — is
+//! monomorphized over the chosen [`Real`] type.
 
 use std::time::Instant;
 
-use crate::coordinator::config::{EngineKind, RunConfig};
+use crate::coordinator::config::{Dtype, EngineKind, RunConfig};
 use crate::coordinator::metrics::RankMetrics;
-use crate::fft::{Complex64, NativeFft, SerialFft};
+use crate::fft::{Complex, NativeFft, Real, SerialFft};
 use crate::pfft::{Kind, PfftPlan};
 use crate::runtime::XlaFftEngine;
 use crate::simmpi::World;
@@ -32,8 +37,11 @@ pub struct RunReport {
     pub fused_bytes: u64,
     /// Datatype-engine bytes per pair moved through staged pack/unpack.
     pub staged_bytes: u64,
-    /// Max roundtrip error observed (input vs forward+backward output).
+    /// Max roundtrip error observed (input vs forward+backward output),
+    /// widened to f64.
     pub max_err: f64,
+    /// Dtype name of the run (`"f32"`/`"f64"`), for labels and JSON rows.
+    pub dtype: &'static str,
 }
 
 impl RunReport {
@@ -44,9 +52,9 @@ impl RunReport {
     }
 }
 
-fn make_engine(kind: EngineKind) -> Box<dyn SerialFft> {
+fn make_engine<T: Real>(kind: EngineKind) -> Box<dyn SerialFft<T>> {
     match kind {
-        EngineKind::Native => Box::new(NativeFft::new()),
+        EngineKind::Native => Box::new(NativeFft::<T>::new()),
         EngineKind::Xla => {
             let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
             Box::new(XlaFftEngine::load(&dir).expect("loading XLA artifacts (run `make artifacts`)"))
@@ -56,14 +64,24 @@ fn make_engine(kind: EngineKind) -> Box<dyn SerialFft> {
 
 /// Execute `cfg` and return the aggregated report (grid dimensionality is
 /// taken from `cfg.grid` or defaults to pencil for 3-D+, slab for 2-D).
+/// Dispatches on [`RunConfig::dtype`] and monomorphizes the whole stack.
 pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
+    match cfg.dtype {
+        Dtype::F32 => run_config_typed::<f32>(cfg, grid_ndims),
+        Dtype::F64 => run_config_typed::<f64>(cfg, grid_ndims),
+    }
+}
+
+/// The monomorphic driver body: every buffer, twiddle table and
+/// redistribution payload below this call is `T`-typed.
+pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
     let cfg = cfg.clone();
     let grid = cfg.resolved_grid(grid_ndims);
     let engine_stats0 = crate::simmpi::datatype::stats::snapshot();
     let reports = World::run(cfg.ranks, |comm| {
         let mut plan =
-            PfftPlan::with_exec(&comm, &cfg.global, &grid, cfg.kind, cfg.method, cfg.exec);
-        let mut engine = make_engine(cfg.engine);
+            PfftPlan::<T>::with_exec(&comm, &cfg.global, &grid, cfg.kind, cfg.method, cfg.exec);
+        let mut engine = make_engine::<T>(cfg.engine);
         // Deterministic input.
         let ilen = plan.input_len();
         let olen = plan.output_len();
@@ -74,11 +92,13 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
         let bytes0 = comm.world_bytes_sent();
         match cfg.kind {
             Kind::C2c => {
-                let input: Vec<Complex64> = (0..ilen)
-                    .map(|k| Complex64::new((k as f64 * 0.61 + seed).sin(), (k as f64 * 0.23).cos()))
+                let input: Vec<Complex<T>> = (0..ilen)
+                    .map(|k| {
+                        Complex::from_f64((k as f64 * 0.61 + seed).sin(), (k as f64 * 0.23).cos())
+                    })
                     .collect();
-                let mut spec = vec![Complex64::ZERO; olen];
-                let mut back = vec![Complex64::ZERO; ilen];
+                let mut spec = vec![Complex::<T>::ZERO; olen];
+                let mut back = vec![Complex::<T>::ZERO; ilen];
                 for _ in 0..cfg.outer {
                     comm.barrier();
                     plan.timers.reset();
@@ -96,14 +116,14 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
                 max_err = input
                     .iter()
                     .zip(&back)
-                    .map(|(a, b)| (*a - *b).abs())
+                    .map(|(a, b)| (*a - *b).abs().to_f64())
                     .fold(0.0, f64::max);
             }
             Kind::R2c => {
-                let input: Vec<f64> =
-                    (0..ilen).map(|k| (k as f64 * 0.61 + seed).sin()).collect();
-                let mut spec = vec![Complex64::ZERO; olen];
-                let mut back = vec![0.0f64; ilen];
+                let input: Vec<T> =
+                    (0..ilen).map(|k| T::from_f64((k as f64 * 0.61 + seed).sin())).collect();
+                let mut spec = vec![Complex::<T>::ZERO; olen];
+                let mut back = vec![T::ZERO; ilen];
                 for _ in 0..cfg.outer {
                     comm.barrier();
                     plan.timers.reset();
@@ -121,7 +141,7 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
                 max_err = input
                     .iter()
                     .zip(&back)
-                    .map(|(a, b)| (a - b).abs())
+                    .map(|(a, b)| (*a - *b).abs().to_f64())
                     .fold(0.0, f64::max);
             }
         }
@@ -156,6 +176,7 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
         fused_bytes: (es.fused_bytes as f64 * pair_scale) as u64,
         staged_bytes: ((es.packed_bytes + es.unpacked_bytes) as f64 * pair_scale) as u64,
         max_err: err,
+        dtype: T::NAME,
     }
 }
 
@@ -178,6 +199,7 @@ mod tests {
         assert!(rep.max_err < 1e-10, "roundtrip err {}", rep.max_err);
         assert!(rep.bytes > 0);
         assert!(rep.throughput(&cfg.global) > 0.0);
+        assert_eq!(rep.dtype, "f64");
     }
 
     #[test]
@@ -211,5 +233,36 @@ mod tests {
         assert!(rep.max_err < 1e-10, "pipelined roundtrip err {}", rep.max_err);
         // Overlapped stages report their time in the overlap buckets.
         assert!(rep.overlap_fft + rep.overlap_comm > 0.0);
+    }
+
+    #[test]
+    fn driver_runs_f32_with_half_the_wire_bytes() {
+        // Same shape, both precisions, both transform kinds: the f32 run
+        // must roundtrip within f32 tolerance and ship half the bytes.
+        for kind in [Kind::R2c, Kind::C2c] {
+            let base = RunConfig {
+                global: vec![16, 12, 10],
+                ranks: 4,
+                kind,
+                inner: 1,
+                outer: 1,
+                ..Default::default()
+            };
+            let f64_rep = run_config(&base, 2);
+            let f32_rep =
+                run_config(&RunConfig { dtype: Dtype::F32, ..base.clone() }, 2);
+            assert_eq!(f32_rep.dtype, "f32");
+            assert!(
+                f32_rep.max_err < Dtype::F32.roundtrip_tol(),
+                "{kind:?} f32 roundtrip err {}",
+                f32_rep.max_err
+            );
+            assert!(f64_rep.max_err < Dtype::F64.roundtrip_tol());
+            assert_eq!(
+                f32_rep.bytes * 2,
+                f64_rep.bytes,
+                "{kind:?}: f32 wire bytes must be exactly half of f64"
+            );
+        }
     }
 }

@@ -6,13 +6,18 @@
 //! [`driver::run_config`]: an inner loop of `inner` uninterrupted
 //! forward+backward pairs, an outer loop of `outer` repetitions with a
 //! barrier at the outset, per-rank times reduced with a max, and the
-//! fastest outer iteration reported divided by `inner`.
+//! fastest outer iteration reported divided by `inner`. The element
+//! precision ([`config::Dtype`]) is a first-class run dimension: the driver
+//! monomorphizes the whole stack over it, and [`trend`] aggregates the
+//! `BENCH_*.json` artifacts (which record dtype and wire bytes) across
+//! commits.
 
 pub mod benchkit;
 pub mod config;
 pub mod driver;
 pub mod metrics;
+pub mod trend;
 
-pub use config::{EngineKind, RunConfig};
-pub use driver::{run_config, RunReport};
+pub use config::{Dtype, EngineKind, RunConfig};
+pub use driver::{run_config, run_config_typed, RunReport};
 pub use metrics::RankMetrics;

@@ -1,0 +1,570 @@
+//! `repro trend` — collect the `BENCH_*.json` artifacts the benches and
+//! `repro run --json` emit into one compact per-bench trend table.
+//!
+//! The offline crate set has no serde, so this module carries a minimal
+//! recursive-descent JSON reader ([`JsonValue::parse`]) sized for the rows
+//! [`super::benchkit`] writes: objects, arrays, strings, numbers, bools,
+//! null. It is intentionally strict about structure and lenient about
+//! unknown fields, so rows from older/newer commits aggregate together —
+//! the point of the report is comparing the same bench *across* commits.
+//!
+//! Output: a TSV table on stdout (one line per `(bench, label-ish group)`)
+//! and a `BENCH_trend.json` artifact with the aggregated rows.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::benchkit::{json_escape, JsonObj};
+
+/// A parsed JSON value (the subset the bench artifacts use).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Parse a complete JSON document (trailing whitespace allowed).
+    pub fn parse(text: &str) -> Result<JsonValue, String> {
+        let b = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected '{}' at byte {}", c as char, *pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(JsonValue::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                expect(b, pos, b':')?;
+                let val = parse_value(b, pos)?;
+                fields.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(JsonValue::Obj(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(JsonValue::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(JsonValue::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'"') => Ok(JsonValue::Str(parse_string(b, pos)?)),
+        Some(b't') => parse_lit(b, pos, "true", JsonValue::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", JsonValue::Bool(false)),
+        Some(b'n') => parse_lit(b, pos, "null", JsonValue::Null),
+        Some(_) => {
+            // Number: scan the maximal [-+0-9.eE] run and defer to the
+            // std float parser for the grammar.
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+            {
+                *pos += 1;
+            }
+            if start == *pos {
+                return Err(format!("unexpected character at byte {start}"));
+            }
+            let s = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+            s.parse::<f64>()
+                .map(JsonValue::Num)
+                .map_err(|_| format!("bad number '{s}' at byte {start}"))
+        }
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: JsonValue) -> Result<JsonValue, String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {}", *pos))
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at byte {}", *pos));
+    }
+    *pos += 1;
+    let mut out = Vec::new();
+    while let Some(&c) = b.get(*pos) {
+        *pos += 1;
+        match c {
+            b'"' => {
+                return String::from_utf8(out).map_err(|e| e.to_string());
+            }
+            b'\\' => {
+                let esc = *b.get(*pos).ok_or("unterminated escape")?;
+                *pos += 1;
+                match esc {
+                    b'"' => out.push(b'"'),
+                    b'\\' => out.push(b'\\'),
+                    b'/' => out.push(b'/'),
+                    b'n' => out.push(b'\n'),
+                    b'r' => out.push(b'\r'),
+                    b't' => out.push(b'\t'),
+                    b'b' => out.push(0x08),
+                    b'f' => out.push(0x0C),
+                    b'u' => {
+                        let hex = b
+                            .get(*pos..*pos + 4)
+                            .ok_or("truncated \\u escape")?;
+                        *pos += 4;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                            16,
+                        )
+                        .map_err(|e| e.to_string())?;
+                        // Bench artifacts only escape C0 controls; surrogate
+                        // pairs are out of scope for this reader.
+                        let ch = char::from_u32(code).ok_or("bad \\u code point")?;
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                    }
+                    other => return Err(format!("bad escape '\\{}'", other as char)),
+                }
+            }
+            other => out.push(other),
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+/// Aggregated statistics of one `(bench, key)` row group.
+#[derive(Debug, Clone, Default)]
+pub struct TrendRow {
+    /// Bench artifact name (from the file's `"bench"` field).
+    pub bench: String,
+    /// Row group key: the row's `label`/`shape`/`geometry`/`section` field,
+    /// whichever it carries first.
+    pub key: String,
+    /// Rows aggregated into this group.
+    pub count: u64,
+    /// Mean seconds (rows carrying `total_s`).
+    pub mean_total_s: Option<f64>,
+    /// Mean wire bytes per pair (rows carrying `bytes`).
+    pub mean_bytes: Option<f64>,
+    /// Mean fused-copy bytes (rows carrying `fused_copy_bytes`).
+    pub mean_fused_bytes: Option<f64>,
+    /// Mean staged pack/unpack bytes.
+    pub mean_staged_bytes: Option<f64>,
+    /// Dtype of the rows, when uniform across the group.
+    pub dtype: Option<String>,
+}
+
+fn mean(values: &[f64]) -> Option<f64> {
+    if values.is_empty() {
+        None
+    } else {
+        Some(values.iter().sum::<f64>() / values.len() as f64)
+    }
+}
+
+/// Group key of one row: its most specific identity field.
+fn row_key(row: &JsonValue) -> String {
+    for field in ["label", "shape", "geometry", "section"] {
+        if let Some(s) = row.get(field).and_then(|v| v.as_str()) {
+            return s.to_string();
+        }
+    }
+    "<row>".to_string()
+}
+
+/// Aggregate the rows of parsed bench documents into trend groups.
+///
+/// The group identity is `(bench, key, dtype)`: rows of the same label at
+/// different precisions must *not* pool (a mixed-precision mean of wire
+/// bytes tracks neither dtype), so a bench emitting f32 and f64 rows for
+/// the same shape yields two trend groups.
+pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
+    // (bench, key, dtype) -> collected numeric samples.
+    #[derive(Default)]
+    struct Acc {
+        count: u64,
+        total_s: Vec<f64>,
+        bytes: Vec<f64>,
+        fused: Vec<f64>,
+        staged: Vec<f64>,
+    }
+    let mut groups: BTreeMap<(String, String, Option<String>), Acc> = BTreeMap::new();
+    for (fallback_name, doc) in docs {
+        let bench = doc
+            .get("bench")
+            .and_then(|v| v.as_str())
+            .unwrap_or(fallback_name)
+            .to_string();
+        let rows: &[JsonValue] = match doc.get("rows").and_then(|v| v.as_arr()) {
+            Some(rows) => rows,
+            // A bare row object (`repro run --json` output saved to a file).
+            None => std::slice::from_ref(doc),
+        };
+        for row in rows {
+            let dtype = row.get("dtype").and_then(|v| v.as_str()).map(str::to_string);
+            let acc = groups.entry((bench.clone(), row_key(row), dtype)).or_default();
+            acc.count += 1;
+            let mut push = |field: &str, into: &mut Vec<f64>| {
+                if let Some(x) = row.get(field).and_then(|v| v.as_num()) {
+                    into.push(x);
+                }
+            };
+            push("total_s", &mut acc.total_s);
+            push("bytes", &mut acc.bytes);
+            push("fused_copy_bytes", &mut acc.fused);
+            push("staged_pack_unpack_bytes", &mut acc.staged);
+        }
+    }
+    groups
+        .into_iter()
+        .map(|((bench, key, dtype), acc)| TrendRow {
+            bench,
+            key,
+            count: acc.count,
+            mean_total_s: mean(&acc.total_s),
+            mean_bytes: mean(&acc.bytes),
+            mean_fused_bytes: mean(&acc.fused),
+            mean_staged_bytes: mean(&acc.staged),
+            dtype,
+        })
+        .collect()
+}
+
+/// Find every `BENCH_*.json` under `dir` (non-recursive), excluding the
+/// trend artifact itself, sorted by file name.
+pub fn find_bench_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if name.starts_with("BENCH_") && name.ends_with(".json") && name != "BENCH_trend.json" {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn fmt_opt(x: Option<f64>) -> String {
+    match x {
+        Some(v) => format!("{v:.6e}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Run the trend report over `dir`: print the per-group table to stdout and
+/// write `BENCH_trend.json` next to the inputs. Returns the number of rows
+/// aggregated, or an error string for the CLI to surface.
+pub fn run_trend(dir: &Path) -> Result<usize, String> {
+    let files = find_bench_files(dir).map_err(|e| format!("scanning {}: {e}", dir.display()))?;
+    if files.is_empty() {
+        return Err(format!(
+            "no BENCH_*.json files in {} (run the benches or `repro run --json` first)",
+            dir.display()
+        ));
+    }
+    let mut docs = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let doc = JsonValue::parse(&text)
+            .map_err(|e| format!("parsing {}: {e}", path.display()))?;
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("bench")
+            .trim_start_matches("BENCH_")
+            .to_string();
+        docs.push((stem, doc));
+    }
+    let rows = aggregate(&docs);
+    println!("# trend over {} artifact file(s) in {}", files.len(), dir.display());
+    println!("bench\tgroup\tdtype\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_staged_bytes");
+    for r in &rows {
+        println!(
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+            r.bench,
+            r.key,
+            r.dtype.as_deref().unwrap_or("-"),
+            r.count,
+            fmt_opt(r.mean_total_s),
+            fmt_opt(r.mean_bytes),
+            fmt_opt(r.mean_fused_bytes),
+            fmt_opt(r.mean_staged_bytes),
+        );
+    }
+    // Machine-readable artifact, same JsonObj emitter as the benches.
+    let json_rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let mut obj = JsonObj::new()
+                .str("bench", &r.bench)
+                .str("group", &r.key)
+                .int("rows", r.count);
+            if let Some(d) = &r.dtype {
+                obj = obj.str("dtype", d);
+            }
+            obj.num("mean_total_s", r.mean_total_s.unwrap_or(f64::NAN))
+                .num("mean_bytes", r.mean_bytes.unwrap_or(f64::NAN))
+                .num("mean_fused_bytes", r.mean_fused_bytes.unwrap_or(f64::NAN))
+                .num("mean_staged_bytes", r.mean_staged_bytes.unwrap_or(f64::NAN))
+                .render()
+        })
+        .collect();
+    let out_path = dir.join("BENCH_trend.json");
+    let mut f = std::fs::File::create(&out_path)
+        .map_err(|e| format!("creating {}: {e}", out_path.display()))?;
+    let write = |f: &mut std::fs::File| -> std::io::Result<()> {
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"bench\": \"{}\",", json_escape("trend"))?;
+        writeln!(f, "  \"sources\": {},", files.len())?;
+        writeln!(f, "  \"rows\": [")?;
+        for (i, row) in json_rows.iter().enumerate() {
+            let sep = if i + 1 == json_rows.len() { "" } else { "," };
+            writeln!(f, "    {row}{sep}")?;
+        }
+        writeln!(f, "  ]")?;
+        writeln!(f, "}}")?;
+        Ok(())
+    };
+    write(&mut f).map_err(|e| format!("writing {}: {e}", out_path.display()))?;
+    println!("wrote {}", out_path.display());
+    Ok(rows.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_structure() {
+        let v = JsonValue::parse(
+            r#"{"a": 1.5, "b": "x\ty", "c": [1, 2, 3], "d": null, "e": true, "f": -2e3}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("a").unwrap().as_num(), Some(1.5));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x\ty"));
+        assert_eq!(v.get("c").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("d"), Some(&JsonValue::Null));
+        assert_eq!(v.get("e"), Some(&JsonValue::Bool(true)));
+        assert_eq!(v.get("f").unwrap().as_num(), Some(-2000.0));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(JsonValue::parse("{").is_err());
+        assert!(JsonValue::parse("[1, 2,]").is_err());
+        assert!(JsonValue::parse("{\"a\": 1} extra").is_err());
+        assert!(JsonValue::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn parses_benchkit_output_roundtrip() {
+        // A row exactly as JsonObj renders it (incl. escapes and null).
+        let row = JsonObj::new()
+            .str("label", "run/\"x\"\n")
+            .int("ranks", 8)
+            .num("total_s", 0.25)
+            .num("bad", f64::NAN)
+            .render();
+        let v = JsonValue::parse(&row).unwrap();
+        assert_eq!(v.get("label").unwrap().as_str(), Some("run/\"x\"\n"));
+        assert_eq!(v.get("ranks").unwrap().as_num(), Some(8.0));
+        assert_eq!(v.get("bad"), Some(&JsonValue::Null));
+    }
+
+    fn doc(bench: &str, rows: &[&str]) -> (String, JsonValue) {
+        let body: Vec<String> = rows.iter().map(|r| r.to_string()).collect();
+        let text = format!(
+            "{{\"bench\": \"{bench}\", \"rows\": [{}]}}",
+            body.join(", ")
+        );
+        (bench.to_string(), JsonValue::parse(&text).unwrap())
+    }
+
+    #[test]
+    fn aggregates_across_documents() {
+        // The same bench appearing twice (two commits' artifacts): rows with
+        // the same label *and dtype* pool together; a different precision of
+        // the same label is its own group (mixed-precision means would track
+        // neither dtype).
+        let d1 = doc(
+            "pack",
+            &[
+                r#"{"label": "a", "total_s": 1.0, "bytes": 100, "dtype": "f64"}"#,
+                r#"{"label": "a", "total_s": 1.0, "bytes": 50, "dtype": "f32"}"#,
+            ],
+        );
+        let d2 = doc(
+            "pack",
+            &[
+                r#"{"label": "a", "total_s": 3.0, "bytes": 300, "dtype": "f64"}"#,
+                r#"{"label": "b", "total_s": 5.0}"#,
+            ],
+        );
+        let rows = aggregate(&[d1, d2]);
+        assert_eq!(rows.len(), 3);
+        let a64 = rows
+            .iter()
+            .find(|r| r.key == "a" && r.dtype.as_deref() == Some("f64"))
+            .unwrap();
+        assert_eq!(a64.count, 2);
+        assert_eq!(a64.mean_total_s, Some(2.0));
+        assert_eq!(a64.mean_bytes, Some(200.0));
+        let a32 = rows
+            .iter()
+            .find(|r| r.key == "a" && r.dtype.as_deref() == Some("f32"))
+            .unwrap();
+        assert_eq!(a32.count, 1);
+        assert_eq!(a32.mean_bytes, Some(50.0));
+        let b = rows.iter().find(|r| r.key == "b").unwrap();
+        assert_eq!(b.count, 1);
+        assert_eq!(b.mean_bytes, None);
+        assert_eq!(b.dtype, None);
+    }
+
+    #[test]
+    fn bare_row_documents_aggregate_too() {
+        // `repro run --json` output saved straight to a BENCH_ file.
+        let text = r#"{"label": "run/R2c", "total_s": 0.5, "bytes": 64, "dtype": "f32"}"#;
+        let docs = vec![("run".to_string(), JsonValue::parse(text).unwrap())];
+        let rows = aggregate(&docs);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].bench, "run");
+        assert_eq!(rows[0].key, "run/R2c");
+        assert_eq!(rows[0].dtype.as_deref(), Some("f32"));
+    }
+
+    #[test]
+    fn end_to_end_trend_over_tempdir() {
+        // Write two artifacts into a temp dir, run the report, parse the
+        // emitted BENCH_trend.json back.
+        let dir = std::env::temp_dir().join(format!(
+            "a2wfft_trend_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("BENCH_one.json"),
+            "{\"bench\": \"one\", \"rows\": [\n  {\"label\": \"x\", \"total_s\": 2.0, \"bytes\": 10}\n]}\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_two.json"),
+            "{\"bench\": \"two\", \"rows\": [\n  {\"label\": \"y\", \"total_s\": 4.0}\n]}\n",
+        )
+        .unwrap();
+        let n = run_trend(&dir).unwrap();
+        assert_eq!(n, 2);
+        let trend = std::fs::read_to_string(dir.join("BENCH_trend.json")).unwrap();
+        let v = JsonValue::parse(&trend).unwrap();
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        // Re-running includes the same sources but not BENCH_trend.json.
+        let n2 = run_trend(&dir).unwrap();
+        assert_eq!(n2, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_dir_is_an_error() {
+        let dir = std::env::temp_dir().join(format!(
+            "a2wfft_trend_empty_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(run_trend(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,151 +1,180 @@
-//! Double-precision complex arithmetic (`repr(C)`, Pod-transportable).
+//! Precision-generic complex arithmetic (`repr(C)`, Pod-transportable).
 //!
-//! The paper works in double precision throughout; this is the element type
-//! of all native transforms and of the redistribution payloads.
+//! The paper works in double precision throughout; production FFT libraries
+//! (P3DFFT, FLUPS) ship single precision as well, which halves every wire
+//! byte of the redistribution exchange. [`Complex<T>`] is the element type
+//! of all native transforms and redistribution payloads, generic over the
+//! [`Real`] scalar; [`Complex64`]/[`Complex32`] are the two concrete
+//! precisions.
 
 use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
 
-/// A complex number with `f64` components, laid out `[re, im]` like
-/// C `double complex` / numpy `complex128`.
+use super::real::Real;
+
+/// A complex number with [`Real`] components, laid out `[re, im]` like
+/// C `double complex` / numpy `complex128` (or `complex64` for `f32`).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 #[repr(C)]
-pub struct Complex64 {
-    pub re: f64,
-    pub im: f64,
+pub struct Complex<T> {
+    pub re: T,
+    pub im: T,
 }
 
-// SAFETY: repr(C) pair of f64 — valid for any bit pattern, no padding.
-unsafe impl crate::simmpi::Pod for Complex64 {}
+/// Double-precision complex (`numpy complex128`), the paper's element type.
+pub type Complex64 = Complex<f64>;
 
-impl Complex64 {
-    pub const ZERO: Complex64 = Complex64 { re: 0.0, im: 0.0 };
-    pub const ONE: Complex64 = Complex64 { re: 1.0, im: 0.0 };
-    pub const I: Complex64 = Complex64 { re: 0.0, im: 1.0 };
+/// Single-precision complex (`numpy complex64`): same transform stack, half
+/// the wire bytes per element.
+pub type Complex32 = Complex<f32>;
+
+// SAFETY: repr(C) pair of a Pod scalar — valid for any bit pattern, no
+// padding (f32/f64 are their own alignment; two of them tile exactly).
+unsafe impl<T: Real> crate::simmpi::Pod for Complex<T> {}
+
+impl<T: Real> Complex<T> {
+    pub const ZERO: Complex<T> = Complex { re: T::ZERO, im: T::ZERO };
+    pub const ONE: Complex<T> = Complex { re: T::ONE, im: T::ZERO };
+    pub const I: Complex<T> = Complex { re: T::ZERO, im: T::ONE };
 
     #[inline(always)]
-    pub fn new(re: f64, im: f64) -> Complex64 {
-        Complex64 { re, im }
+    pub fn new(re: T, im: T) -> Complex<T> {
+        Complex { re, im }
     }
 
-    /// `exp(i * theta)`.
+    /// `exp(i * theta)`. The angle is always taken in `f64` and rounded to
+    /// `T` afterwards, so `f32` twiddle tables carry correctly-rounded
+    /// values instead of single-precision trigonometric error.
     #[inline]
-    pub fn expi(theta: f64) -> Complex64 {
+    pub fn expi(theta: f64) -> Complex<T> {
         let (s, c) = theta.sin_cos();
-        Complex64 { re: c, im: s }
+        Complex { re: T::from_f64(c), im: T::from_f64(s) }
+    }
+
+    /// Construct from `f64` parts, rounding to `T`.
+    #[inline(always)]
+    pub fn from_f64(re: f64, im: f64) -> Complex<T> {
+        Complex { re: T::from_f64(re), im: T::from_f64(im) }
+    }
+
+    /// Convert between precisions (through `f64`, exact when widening).
+    #[inline(always)]
+    pub fn cast<U: Real>(self) -> Complex<U> {
+        Complex { re: U::from_f64(self.re.to_f64()), im: U::from_f64(self.im.to_f64()) }
     }
 
     #[inline(always)]
-    pub fn conj(self) -> Complex64 {
-        Complex64 { re: self.re, im: -self.im }
+    pub fn conj(self) -> Complex<T> {
+        Complex { re: self.re, im: -self.im }
     }
 
     #[inline(always)]
-    pub fn scale(self, s: f64) -> Complex64 {
-        Complex64 { re: self.re * s, im: self.im * s }
+    pub fn scale(self, s: T) -> Complex<T> {
+        Complex { re: self.re * s, im: self.im * s }
     }
 
     #[inline(always)]
-    pub fn norm_sqr(self) -> f64 {
+    pub fn norm_sqr(self) -> T {
         self.re * self.re + self.im * self.im
     }
 
-    pub fn abs(self) -> f64 {
+    pub fn abs(self) -> T {
         self.norm_sqr().sqrt()
     }
 
     /// Multiply by `i` (a rotation, cheaper than a full complex multiply).
     #[inline(always)]
-    pub fn mul_i(self) -> Complex64 {
-        Complex64 { re: -self.im, im: self.re }
+    pub fn mul_i(self) -> Complex<T> {
+        Complex { re: -self.im, im: self.re }
     }
 
     /// Multiply by `-i`.
     #[inline(always)]
-    pub fn mul_neg_i(self) -> Complex64 {
-        Complex64 { re: self.im, im: -self.re }
+    pub fn mul_neg_i(self) -> Complex<T> {
+        Complex { re: self.im, im: -self.re }
     }
 }
 
-impl Add for Complex64 {
-    type Output = Complex64;
+impl<T: Real> Add for Complex<T> {
+    type Output = Complex<T>;
     #[inline(always)]
-    fn add(self, o: Complex64) -> Complex64 {
-        Complex64 { re: self.re + o.re, im: self.im + o.im }
+    fn add(self, o: Complex<T>) -> Complex<T> {
+        Complex { re: self.re + o.re, im: self.im + o.im }
     }
 }
 
-impl Sub for Complex64 {
-    type Output = Complex64;
+impl<T: Real> Sub for Complex<T> {
+    type Output = Complex<T>;
     #[inline(always)]
-    fn sub(self, o: Complex64) -> Complex64 {
-        Complex64 { re: self.re - o.re, im: self.im - o.im }
+    fn sub(self, o: Complex<T>) -> Complex<T> {
+        Complex { re: self.re - o.re, im: self.im - o.im }
     }
 }
 
-impl Mul for Complex64 {
-    type Output = Complex64;
+impl<T: Real> Mul for Complex<T> {
+    type Output = Complex<T>;
     #[inline(always)]
-    fn mul(self, o: Complex64) -> Complex64 {
-        Complex64 {
+    fn mul(self, o: Complex<T>) -> Complex<T> {
+        Complex {
             re: self.re * o.re - self.im * o.im,
             im: self.re * o.im + self.im * o.re,
         }
     }
 }
 
-impl Div for Complex64 {
-    type Output = Complex64;
+impl<T: Real> Div for Complex<T> {
+    type Output = Complex<T>;
     #[inline]
-    fn div(self, o: Complex64) -> Complex64 {
+    fn div(self, o: Complex<T>) -> Complex<T> {
         let d = o.norm_sqr();
-        Complex64 {
+        Complex {
             re: (self.re * o.re + self.im * o.im) / d,
             im: (self.im * o.re - self.re * o.im) / d,
         }
     }
 }
 
-impl Neg for Complex64 {
-    type Output = Complex64;
+impl<T: Real> Neg for Complex<T> {
+    type Output = Complex<T>;
     #[inline(always)]
-    fn neg(self) -> Complex64 {
-        Complex64 { re: -self.re, im: -self.im }
+    fn neg(self) -> Complex<T> {
+        Complex { re: -self.re, im: -self.im }
     }
 }
 
-impl AddAssign for Complex64 {
+impl<T: Real> AddAssign for Complex<T> {
     #[inline(always)]
-    fn add_assign(&mut self, o: Complex64) {
+    fn add_assign(&mut self, o: Complex<T>) {
         self.re += o.re;
         self.im += o.im;
     }
 }
 
-impl SubAssign for Complex64 {
+impl<T: Real> SubAssign for Complex<T> {
     #[inline(always)]
-    fn sub_assign(&mut self, o: Complex64) {
+    fn sub_assign(&mut self, o: Complex<T>) {
         self.re -= o.re;
         self.im -= o.im;
     }
 }
 
-impl MulAssign for Complex64 {
+impl<T: Real> MulAssign for Complex<T> {
     #[inline(always)]
-    fn mul_assign(&mut self, o: Complex64) {
+    fn mul_assign(&mut self, o: Complex<T>) {
         *self = *self * o;
     }
 }
 
-impl From<f64> for Complex64 {
-    fn from(re: f64) -> Complex64 {
-        Complex64 { re, im: 0.0 }
+impl<T: Real> From<T> for Complex<T> {
+    fn from(re: T) -> Complex<T> {
+        Complex { re, im: T::ZERO }
     }
 }
 
-/// Max |a - b| over a pair of complex slices (test / validation helper).
-pub fn max_abs_diff(a: &[Complex64], b: &[Complex64]) -> f64 {
+/// Max |a - b| over a pair of complex slices, widened to `f64` (test /
+/// validation helper for either precision).
+pub fn max_abs_diff<T: Real>(a: &[Complex<T>], b: &[Complex<T>]) -> f64 {
     assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+    a.iter().zip(b).map(|(x, y)| (*x - *y).abs().to_f64()).fold(0.0, f64::max)
 }
 
 #[cfg(test)]
@@ -167,11 +196,23 @@ mod tests {
     }
 
     #[test]
+    fn field_ops_f32() {
+        let a = Complex32::new(1.0, 2.0);
+        let b = Complex32::new(3.0, -4.0);
+        assert_eq!(a + b, Complex32::new(4.0, -2.0));
+        assert_eq!(a * b, Complex32::new(11.0, 2.0));
+        let back = (a / b) * b;
+        assert!((back - a).abs() < 1e-5);
+    }
+
+    #[test]
     fn expi_unit_circle() {
         for k in 0..8 {
             let t = 2.0 * std::f64::consts::PI * k as f64 / 8.0;
             let w = Complex64::expi(t);
             assert!((w.abs() - 1.0).abs() < 1e-15);
+            let w32 = Complex32::expi(t);
+            assert!((w32.abs() - 1.0).abs() < 1e-6);
         }
         let w = Complex64::expi(std::f64::consts::FRAC_PI_2);
         assert!((w - Complex64::I).abs() < 1e-15);
@@ -193,5 +234,25 @@ mod tests {
         assert_eq!(a, Complex64::new(2.0, 3.0));
         a *= Complex64::new(0.0, 1.0);
         assert_eq!(a, Complex64::new(-3.0, 2.0));
+    }
+
+    #[test]
+    fn cast_between_precisions() {
+        let a = Complex64::new(1.0 / 3.0, -2.0 / 7.0);
+        let narrow: Complex32 = a.cast();
+        let wide: Complex64 = narrow.cast();
+        // Narrowing rounds; the roundtrip stays within f32 epsilon.
+        assert!((wide - a).abs() < 1e-7);
+        // Exact values survive both ways.
+        let e = Complex32::new(0.5, -2.0);
+        assert_eq!(e.cast::<f64>().cast::<f32>(), e);
+    }
+
+    #[test]
+    fn layout_is_two_scalars() {
+        assert_eq!(std::mem::size_of::<Complex64>(), 16);
+        assert_eq!(std::mem::size_of::<Complex32>(), 8);
+        assert_eq!(std::mem::align_of::<Complex64>(), 8);
+        assert_eq!(std::mem::align_of::<Complex32>(), 4);
     }
 }

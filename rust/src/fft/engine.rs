@@ -1,55 +1,64 @@
-//! The pluggable serial-FFT engine interface.
+//! The pluggable serial-FFT engine interface, generic over the [`Real`]
+//! precision.
 //!
 //! The paper assumes "there is a serial FFT code already available" and
 //! builds only the parallel decomposition/communication around it. We keep
 //! that separation: [`crate::pfft`] drives any [`SerialFft`], and two
 //! engines are provided — the native rust planner ([`NativeFft`], the
-//! FFTW/MKL stand-in) and the AOT JAX+Pallas artifact executor
-//! ([`crate::runtime::XlaFftEngine`]).
+//! FFTW/MKL stand-in, either precision) and the AOT JAX+Pallas artifact
+//! executor ([`crate::runtime::XlaFftEngine`], f32 planes internally,
+//! exposed at any precision).
 
-use super::complex::Complex64;
+use super::complex::Complex;
 use super::nd::{fft_axis, irfft_last, rfft_last, Planner};
 use super::plan::Direction;
+use super::real::Real;
 
-/// A serial (single-rank) FFT engine for multidimensional arrays.
-pub trait SerialFft {
+/// A serial (single-rank) FFT engine for multidimensional arrays of
+/// `Complex<T>` elements.
+pub trait SerialFft<T: Real = f64> {
     /// In-place complex transform of `data` (row-major `shape`) along `axis`.
-    fn c2c(&mut self, data: &mut [Complex64], shape: &[usize], axis: usize, dir: Direction);
+    fn c2c(&mut self, data: &mut [Complex<T>], shape: &[usize], axis: usize, dir: Direction);
 
     /// Real-to-complex forward transform along the **last** axis:
     /// `real` has shape `shape`, `out` has shape `(..., n/2+1)`.
-    fn r2c(&mut self, real: &[f64], shape: &[usize], out: &mut [Complex64]);
+    fn r2c(&mut self, real: &[T], shape: &[usize], out: &mut [Complex<T>]);
 
     /// Complex-to-real backward transform along the **last** axis, the
     /// inverse of [`SerialFft::r2c`] (`shape` is the *real* shape).
-    fn c2r(&mut self, cplx: &[Complex64], shape: &[usize], out: &mut [f64]);
+    fn c2r(&mut self, cplx: &[Complex<T>], shape: &[usize], out: &mut [T]);
 
     /// Engine name for logs/benches.
     fn name(&self) -> &'static str;
 }
 
-/// The native planner-backed engine.
-#[derive(Default)]
-pub struct NativeFft {
-    planner: Planner,
+/// The native planner-backed engine at precision `T`.
+pub struct NativeFft<T = f64> {
+    planner: Planner<T>,
 }
 
-impl NativeFft {
-    pub fn new() -> NativeFft {
+impl<T: Real> Default for NativeFft<T> {
+    fn default() -> NativeFft<T> {
+        NativeFft::new()
+    }
+}
+
+impl<T: Real> NativeFft<T> {
+    pub fn new() -> NativeFft<T> {
         NativeFft { planner: Planner::new() }
     }
 }
 
-impl SerialFft for NativeFft {
-    fn c2c(&mut self, data: &mut [Complex64], shape: &[usize], axis: usize, dir: Direction) {
+impl<T: Real> SerialFft<T> for NativeFft<T> {
+    fn c2c(&mut self, data: &mut [Complex<T>], shape: &[usize], axis: usize, dir: Direction) {
         fft_axis(&mut self.planner, data, shape, axis, dir);
     }
 
-    fn r2c(&mut self, real: &[f64], shape: &[usize], out: &mut [Complex64]) {
+    fn r2c(&mut self, real: &[T], shape: &[usize], out: &mut [Complex<T>]) {
         rfft_last(&mut self.planner, real, shape, out);
     }
 
-    fn c2r(&mut self, cplx: &[Complex64], shape: &[usize], out: &mut [f64]) {
+    fn c2r(&mut self, cplx: &[Complex<T>], shape: &[usize], out: &mut [T]) {
         irfft_last(&mut self.planner, cplx, shape, out);
     }
 
@@ -61,7 +70,7 @@ impl SerialFft for NativeFft {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fft::complex::max_abs_diff;
+    use crate::fft::complex::{max_abs_diff, Complex32, Complex64};
 
     #[test]
     fn native_engine_roundtrip_c2c() {
@@ -69,7 +78,7 @@ mod tests {
         let total: usize = shape.iter().product();
         let x: Vec<Complex64> =
             (0..total).map(|k| Complex64::new((k % 7) as f64, (k % 3) as f64)).collect();
-        let mut eng = NativeFft::new();
+        let mut eng = NativeFft::<f64>::new();
         let mut y = x.clone();
         for a in (0..3).rev() {
             eng.c2c(&mut y, &shape, a, Direction::Forward);
@@ -81,10 +90,27 @@ mod tests {
     }
 
     #[test]
+    fn native_engine_roundtrip_c2c_f32() {
+        let shape = [4usize, 5, 6];
+        let total: usize = shape.iter().product();
+        let x: Vec<Complex32> =
+            (0..total).map(|k| Complex32::new((k % 7) as f32, (k % 3) as f32)).collect();
+        let mut eng = NativeFft::<f32>::new();
+        let mut y = x.clone();
+        for a in (0..3).rev() {
+            eng.c2c(&mut y, &shape, a, Direction::Forward);
+        }
+        for a in 0..3 {
+            eng.c2c(&mut y, &shape, a, Direction::Backward);
+        }
+        assert!(max_abs_diff(&x, &y) < 1e-3);
+    }
+
+    #[test]
     fn native_engine_r2c_c2r() {
         let shape = [3usize, 8];
         let real: Vec<f64> = (0..24).map(|k| (k as f64 * 0.7).sin()).collect();
-        let mut eng = NativeFft::new();
+        let mut eng = NativeFft::<f64>::new();
         let mut half = vec![Complex64::ZERO; 3 * 5];
         eng.r2c(&real, &shape, &mut half);
         let mut back = vec![0.0; 24];

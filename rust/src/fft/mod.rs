@@ -1,13 +1,17 @@
-//! Serial FFT substrate: complex arithmetic, 1-D plans (mixed radix +
-//! Bluestein), partial multidimensional transforms, and the pluggable
-//! [`SerialFft`] engine interface used by the parallel driver.
+//! Serial FFT substrate: the [`Real`] precision abstraction, generic
+//! complex arithmetic, 1-D plans (mixed radix + Bluestein), partial
+//! multidimensional transforms, and the pluggable [`SerialFft`] engine
+//! interface used by the parallel driver. Every piece is generic over
+//! `f32`/`f64`; `Complex64`/`Complex32` are the concrete element types.
 
 pub mod complex;
 pub mod engine;
 pub mod nd;
 pub mod plan;
+pub mod real;
 
-pub use complex::{max_abs_diff, Complex64};
+pub use complex::{max_abs_diff, Complex, Complex32, Complex64};
 pub use engine::{NativeFft, SerialFft};
 pub use nd::{fft_axis, irfft_last, rfft_last, Planner};
 pub use plan::{factorize, naive_dft, Direction, FftPlan};
+pub use real::Real;

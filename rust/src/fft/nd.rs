@@ -1,5 +1,6 @@
 //! Partial (single-axis) transforms of multidimensional arrays — the
-//! `seqxfftn(..., axis, sign)` routine of the paper's appendices.
+//! `seqxfftn(..., axis, sign)` routine of the paper's appendices, generic
+//! over the [`Real`] precision.
 //!
 //! A row-major array of shape `shape` is transformed along `axis` for all
 //! other indices. Lines along the last axis are contiguous and transformed
@@ -7,25 +8,31 @@
 //! panel (a block of lines at a time for cache friendliness), transformed,
 //! and scattered back.
 
-use super::complex::Complex64;
+use super::complex::Complex;
 use super::plan::{Direction, FftPlan};
+use super::real::Real;
 use std::collections::HashMap;
 use std::rc::Rc;
 
 /// FFTW-style plan cache: one [`FftPlan`] per line length, reused across
 /// calls. Not `Send` — each simulated rank owns one.
-#[derive(Default)]
-pub struct Planner {
-    plans: HashMap<usize, Rc<FftPlan>>,
+pub struct Planner<T = f64> {
+    plans: HashMap<usize, Rc<FftPlan<T>>>,
 }
 
-impl Planner {
-    pub fn new() -> Planner {
+impl<T: Real> Default for Planner<T> {
+    fn default() -> Planner<T> {
+        Planner::new()
+    }
+}
+
+impl<T: Real> Planner<T> {
+    pub fn new() -> Planner<T> {
         Planner { plans: HashMap::new() }
     }
 
     /// Get or create the plan for length `n`.
-    pub fn plan(&mut self, n: usize) -> Rc<FftPlan> {
+    pub fn plan(&mut self, n: usize) -> Rc<FftPlan<T>> {
         self.plans.entry(n).or_insert_with(|| Rc::new(FftPlan::new(n))).clone()
     }
 }
@@ -35,9 +42,9 @@ impl Planner {
 const PANEL: usize = 16;
 
 /// Transform `data` (row-major, shape `shape`) along `axis`.
-pub fn fft_axis(
-    planner: &mut Planner,
-    data: &mut [Complex64],
+pub fn fft_axis<T: Real>(
+    planner: &mut Planner<T>,
+    data: &mut [Complex<T>],
     shape: &[usize],
     axis: usize,
     dir: Direction,
@@ -63,7 +70,7 @@ pub fn fft_axis(
     }
     // Strided lines: for each `b` (before-axis index) the lines start at
     // b*n*stride + s for s in 0..stride. Gather PANEL lines at a time.
-    let mut panel = vec![Complex64::ZERO; PANEL.min(stride) * n];
+    let mut panel = vec![Complex::<T>::ZERO; PANEL.min(stride) * n];
     for b in 0..before {
         let base = b * n * stride;
         let mut s0 = 0;
@@ -92,11 +99,11 @@ pub fn fft_axis(
 /// Real-to-complex transform along the **last** axis: input shape
 /// `(..., n)` real, output shape `(..., n/2 + 1)` complex (Hermitian half,
 /// numpy `rfft` convention, unnormalized).
-pub fn rfft_last(
-    planner: &mut Planner,
-    real: &[f64],
+pub fn rfft_last<T: Real>(
+    planner: &mut Planner<T>,
+    real: &[T],
     shape: &[usize],
-    out: &mut [Complex64],
+    out: &mut [Complex<T>],
 ) {
     let d = shape.len();
     assert!(d >= 1);
@@ -106,10 +113,10 @@ pub fn rfft_last(
     assert_eq!(real.len(), rows * n, "rfft: input length mismatch");
     assert_eq!(out.len(), rows * nh, "rfft: output length mismatch");
     let plan = planner.plan(n);
-    let mut line = vec![Complex64::ZERO; n];
+    let mut line = vec![Complex::<T>::ZERO; n];
     for r in 0..rows {
         for (t, l) in line.iter_mut().enumerate() {
-            *l = Complex64::new(real[r * n + t], 0.0);
+            *l = Complex::new(real[r * n + t], T::ZERO);
         }
         plan.process(&mut line, Direction::Forward);
         out[r * nh..(r + 1) * nh].copy_from_slice(&line[..nh]);
@@ -118,11 +125,11 @@ pub fn rfft_last(
 
 /// Complex-to-real inverse of [`rfft_last`]: input shape `(..., n/2 + 1)`
 /// complex, output `(..., n)` real, scaled by `1/n` (numpy `irfft`).
-pub fn irfft_last(
-    planner: &mut Planner,
-    cplx: &[Complex64],
+pub fn irfft_last<T: Real>(
+    planner: &mut Planner<T>,
+    cplx: &[Complex<T>],
     shape_real: &[usize],
-    out: &mut [f64],
+    out: &mut [T],
 ) {
     let d = shape_real.len();
     assert!(d >= 1);
@@ -132,7 +139,7 @@ pub fn irfft_last(
     assert_eq!(cplx.len(), rows * nh, "irfft: input length mismatch");
     assert_eq!(out.len(), rows * n, "irfft: output length mismatch");
     let plan = planner.plan(n);
-    let mut line = vec![Complex64::ZERO; n];
+    let mut line = vec![Complex::<T>::ZERO; n];
     for r in 0..rows {
         let src = &cplx[r * nh..(r + 1) * nh];
         line[..nh].copy_from_slice(src);
@@ -150,7 +157,7 @@ pub fn irfft_last(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fft::complex::max_abs_diff;
+    use crate::fft::complex::{max_abs_diff, Complex32, Complex64};
     use crate::fft::plan::naive_dft;
 
     fn signal(n: usize, seed: u64) -> Vec<Complex64> {
@@ -233,6 +240,23 @@ mod tests {
     }
 
     #[test]
+    fn full_nd_roundtrip_f32() {
+        // Same walk at single precision, f32-scaled tolerance.
+        let shape = [5usize, 8, 7];
+        let total: usize = shape.iter().product();
+        let x: Vec<Complex32> = signal(total, 11).iter().map(|c| c.cast()).collect();
+        let mut planner = Planner::<f32>::new();
+        let mut y = x.clone();
+        for axis in (0..3).rev() {
+            fft_axis(&mut planner, &mut y, &shape, axis, Direction::Forward);
+        }
+        for axis in 0..3 {
+            fft_axis(&mut planner, &mut y, &shape, axis, Direction::Backward);
+        }
+        assert!(max_abs_diff(&x, &y) < 1e-4);
+    }
+
+    #[test]
     fn strided_panel_boundary() {
         // stride (= trailing product) around PANEL boundary: 15, 16, 17.
         for last in [15usize, 16, 17] {
@@ -277,6 +301,22 @@ mod tests {
             let err = real.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
             assert!(err < 1e-11, "n={n} err={err}");
         }
+    }
+
+    #[test]
+    fn rfft_irfft_roundtrip_f32() {
+        let n = 12usize;
+        let shape = [4usize, n];
+        let real: Vec<f32> = (0..4 * n).map(|k| (k as f32 * 0.37).sin() * 3.0).collect();
+        let mut planner = Planner::<f32>::new();
+        let nh = n / 2 + 1;
+        let mut half = vec![Complex32::ZERO; 4 * nh];
+        rfft_last(&mut planner, &real, &shape, &mut half);
+        let mut back = vec![0.0f32; 4 * n];
+        irfft_last(&mut planner, &half, &shape, &mut back);
+        let err =
+            real.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(err < 1e-4, "err={err}");
     }
 
     #[test]

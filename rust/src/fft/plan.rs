@@ -1,5 +1,5 @@
 //! Serial 1-D FFT plans — the "vendor FFT" the paper assumes is available
-//! (FFTW / MKL / ESSL stand-in).
+//! (FFTW / MKL / ESSL stand-in), generic over the [`Real`] precision.
 //!
 //! A [`FftPlan`] is built once per length and reused (FFTW-style planning):
 //!
@@ -12,9 +12,12 @@
 //!   padded power-of-two convolution.
 //!
 //! Forward transforms are unnormalized, backward transforms scale by `1/N`
-//! (numpy/FFTW convention), so `bwd(fwd(x)) == x`.
+//! (numpy/FFTW convention), so `bwd(fwd(x)) == x`. Twiddle tables are
+//! derived in `f64` and rounded to `T` ([`Complex::expi`]), so an `f32`
+//! plan carries correctly-rounded tables.
 
-use super::complex::Complex64;
+use super::complex::Complex;
+use super::real::Real;
 
 /// Transform direction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,7 +41,7 @@ impl Direction {
 /// this, Bluestein is used.
 const MAX_DIRECT_PRIME: usize = 61;
 
-enum Kind {
+enum Kind<T> {
     /// N == 1.
     Identity,
     /// Power of two: iterative radix-4 + final radix-2 stage.
@@ -50,28 +53,29 @@ enum Kind {
         /// Padded convolution length (power of two >= 2N-1).
         m: usize,
         /// Plan for the length-`m` convolution FFTs.
-        inner: Box<FftPlan>,
+        inner: Box<FftPlan<T>>,
         /// Chirp `exp(-i pi k^2 / n)`, k < n (forward direction).
-        chirp: Vec<Complex64>,
+        chirp: Vec<Complex<T>>,
         /// Forward FFT of the (conjugate) chirp filter, length m.
-        filter_f: Vec<Complex64>,
+        filter_f: Vec<Complex<T>>,
     },
 }
 
-/// A reusable plan for 1-D complex transforms of a fixed length.
-pub struct FftPlan {
+/// A reusable plan for 1-D complex transforms of a fixed length, at a fixed
+/// [`Real`] precision.
+pub struct FftPlan<T = f64> {
     n: usize,
-    kind: Kind,
+    kind: Kind<T>,
     /// Twiddle table `w[k] = exp(-2 pi i k / n)`, `k < n` (forward sign);
     /// backward uses conjugates. Empty for Identity/Bluestein.
-    tw: Vec<Complex64>,
+    tw: Vec<Complex<T>>,
     /// Bit-reversal permutation for the Pow2 path.
     bitrev: Vec<u32>,
 }
 
-impl FftPlan {
+impl<T: Real> FftPlan<T> {
     /// Plan a transform of length `n`.
-    pub fn new(n: usize) -> FftPlan {
+    pub fn new(n: usize) -> FftPlan<T> {
         assert!(n > 0, "FFT length must be positive");
         if n == 1 {
             return FftPlan { n, kind: Kind::Identity, tw: Vec::new(), bitrev: Vec::new() };
@@ -81,17 +85,17 @@ impl FftPlan {
         if largest > MAX_DIRECT_PRIME {
             // Bluestein: convolution length m = next pow2 >= 2n - 1.
             let m = (2 * n - 1).next_power_of_two();
-            let inner = Box::new(FftPlan::new(m));
-            let chirp: Vec<Complex64> = (0..n)
+            let inner = Box::new(FftPlan::<T>::new(m));
+            let chirp: Vec<Complex<T>> = (0..n)
                 .map(|k| {
                     // Compute k^2 mod 2n in u128 to avoid overflow, then the
                     // angle; the chirp is periodic in k^2 with period 2n.
                     let k2 = (k as u128 * k as u128) % (2 * n as u128);
-                    Complex64::expi(-std::f64::consts::PI * k2 as f64 / n as f64)
+                    Complex::expi(-std::f64::consts::PI * k2 as f64 / n as f64)
                 })
                 .collect();
             // Filter b[k] = conj(chirp)[|k|] wrapped on length m.
-            let mut b = vec![Complex64::ZERO; m];
+            let mut b = vec![Complex::<T>::ZERO; m];
             b[0] = chirp[0].conj();
             for k in 1..n {
                 b[k] = chirp[k].conj();
@@ -101,8 +105,8 @@ impl FftPlan {
             inner.process(&mut filter_f, Direction::Forward);
             return FftPlan { n, kind: Kind::Bluestein { m, inner, chirp, filter_f }, tw: Vec::new(), bitrev: Vec::new() };
         }
-        let tw: Vec<Complex64> = (0..n)
-            .map(|k| Complex64::expi(-2.0 * std::f64::consts::PI * k as f64 / n as f64))
+        let tw: Vec<Complex<T>> = (0..n)
+            .map(|k| Complex::expi(-2.0 * std::f64::consts::PI * k as f64 / n as f64))
             .collect();
         if n.is_power_of_two() {
             let bits = n.trailing_zeros();
@@ -128,19 +132,19 @@ impl FftPlan {
     }
 
     /// In-place transform of one line of `n` elements.
-    pub fn process(&self, data: &mut [Complex64], dir: Direction) {
+    pub fn process(&self, data: &mut [Complex<T>], dir: Direction) {
         assert_eq!(data.len(), self.n, "plan length mismatch");
         match &self.kind {
             Kind::Identity => {}
             Kind::Pow2 => self.pow2(data, dir),
             Kind::Mixed { factors } => {
-                let mut scratch = vec![Complex64::ZERO; self.n];
+                let mut scratch = vec![Complex::<T>::ZERO; self.n];
                 self.mixed(data, &mut scratch, factors, dir);
             }
             Kind::Bluestein { .. } => self.bluestein(data, dir),
         }
         if dir == Direction::Backward {
-            let s = 1.0 / self.n as f64;
+            let s = T::from_f64(1.0 / self.n as f64);
             for v in data.iter_mut() {
                 *v = v.scale(s);
             }
@@ -148,16 +152,16 @@ impl FftPlan {
     }
 
     /// In-place transform of `count` contiguous lines.
-    pub fn process_batch(&self, data: &mut [Complex64], count: usize, dir: Direction) {
+    pub fn process_batch(&self, data: &mut [Complex<T>], count: usize, dir: Direction) {
         assert_eq!(data.len(), self.n * count, "batch size mismatch");
         match &self.kind {
             Kind::Mixed { factors } => {
                 // Share one scratch allocation across the batch.
-                let mut scratch = vec![Complex64::ZERO; self.n];
+                let mut scratch = vec![Complex::<T>::ZERO; self.n];
                 for row in data.chunks_exact_mut(self.n) {
                     self.mixed(row, &mut scratch, factors, dir);
                     if dir == Direction::Backward {
-                        let s = 1.0 / self.n as f64;
+                        let s = T::from_f64(1.0 / self.n as f64);
                         for v in row.iter_mut() {
                             *v = v.scale(s);
                         }
@@ -174,7 +178,7 @@ impl FftPlan {
 
     /// Twiddle lookup with direction: `w^k` forward, `conj(w^k)` backward.
     #[inline(always)]
-    fn w(&self, k: usize, dir: Direction) -> Complex64 {
+    fn w(&self, k: usize, dir: Direction) -> Complex<T> {
         let t = self.tw[k % self.n];
         match dir {
             Direction::Forward => t,
@@ -184,7 +188,7 @@ impl FftPlan {
 
     /// Iterative in-place DIT for powers of two: bit-reversal, then radix-2
     /// first stage (twiddle-free), then radix-2 stages with table twiddles.
-    fn pow2(&self, data: &mut [Complex64], dir: Direction) {
+    fn pow2(&self, data: &mut [Complex<T>], dir: Direction) {
         let n = self.n;
         // Bit-reversal permutation.
         for i in 0..n {
@@ -231,7 +235,7 @@ impl FftPlan {
     /// gathered into `scratch`, recursively transformed there (ping-pong:
     /// the child uses the matching `data` region as its scratch), and
     /// combined back into `data` — no extra copy passes.
-    fn mixed(&self, data: &mut [Complex64], scratch: &mut [Complex64], factors: &[usize], dir: Direction) {
+    fn mixed(&self, data: &mut [Complex<T>], scratch: &mut [Complex<T>], factors: &[usize], dir: Direction) {
         let n = data.len();
         debug_assert_eq!(n, factors.iter().product::<usize>());
         if factors.len() <= 1 {
@@ -279,7 +283,7 @@ impl FftPlan {
         const RESYNC: usize = 32;
         if r == 2 {
             // Radix-2 butterfly: w^{q m} is exactly -1 for q = 1.
-            let mut wt = Complex64::ONE;
+            let mut wt = Complex::<T>::ONE;
             let wstep = self.w(mult, dir);
             for t in 0..m {
                 if t % RESYNC == 0 && t != 0 {
@@ -293,19 +297,19 @@ impl FftPlan {
             }
             return;
         }
-        let wq: Vec<Complex64> = (0..r * r)
+        let wq: Vec<Complex<T>> = (0..r * r)
             .map(|qj| {
                 let (q, j) = (qj / r, qj % r);
                 self.w((j * ((q * m) % n) % n) * mult, dir)
             })
             .collect();
-        let mut wstep = [Complex64::ZERO; MAX_DIRECT_PRIME + 1];
-        let mut wt = [Complex64::ZERO; MAX_DIRECT_PRIME + 1];
+        let mut wstep = [Complex::<T>::ZERO; MAX_DIRECT_PRIME + 1];
+        let mut wt = [Complex::<T>::ZERO; MAX_DIRECT_PRIME + 1];
         for j in 0..r {
             wstep[j] = self.w(j * mult, dir);
-            wt[j] = Complex64::ONE;
+            wt[j] = Complex::<T>::ONE;
         }
-        let mut tmp = [Complex64::ZERO; MAX_DIRECT_PRIME + 1];
+        let mut tmp = [Complex::<T>::ZERO; MAX_DIRECT_PRIME + 1];
         for t in 0..m {
             if t % RESYNC == 0 && t != 0 {
                 for (j, v) in wt.iter_mut().enumerate().take(r) {
@@ -329,7 +333,7 @@ impl FftPlan {
 
     /// Bluestein chirp-z transform (forward); backward goes through the
     /// conjugation identity `ifft(x) * n == conj(fft(conj(x)))`.
-    fn bluestein(&self, data: &mut [Complex64], dir: Direction) {
+    fn bluestein(&self, data: &mut [Complex<T>], dir: Direction) {
         if dir == Direction::Backward {
             for v in data.iter_mut() {
                 *v = v.conj();
@@ -344,7 +348,7 @@ impl FftPlan {
         let Kind::Bluestein { m, inner, chirp, filter_f } = &self.kind else { unreachable!() };
         let n = self.n;
         // X[j] = chirp[j] * sum_k (x[k] chirp[k]) b[j-k],  b[t] = conj(chirp[t]).
-        let mut a = vec![Complex64::ZERO; *m];
+        let mut a = vec![Complex::<T>::ZERO; *m];
         for k in 0..n {
             a[k] = data[k] * chirp[k];
         }
@@ -376,18 +380,19 @@ pub fn factorize(mut n: usize) -> Vec<usize> {
     f
 }
 
-/// Reference naive DFT, O(N^2) — the correctness oracle for plans.
-pub fn naive_dft(input: &[Complex64], dir: Direction) -> Vec<Complex64> {
+/// Reference naive DFT, O(N^2) — the correctness oracle for plans, at
+/// either precision (angles in `f64`, accumulation in `T`).
+pub fn naive_dft<T: Real>(input: &[Complex<T>], dir: Direction) -> Vec<Complex<T>> {
     let n = input.len();
     let sign = dir.sign();
-    let mut out = vec![Complex64::ZERO; n];
+    let mut out = vec![Complex::<T>::ZERO; n];
     for (k, o) in out.iter_mut().enumerate() {
-        let mut acc = Complex64::ZERO;
+        let mut acc = Complex::<T>::ZERO;
         for (j, &x) in input.iter().enumerate() {
             let theta = sign * 2.0 * std::f64::consts::PI * ((j * k) % n) as f64 / n as f64;
-            acc += x * Complex64::expi(theta);
+            acc += x * Complex::expi(theta);
         }
-        *o = if dir == Direction::Backward { acc.scale(1.0 / n as f64) } else { acc };
+        *o = if dir == Direction::Backward { acc.scale(T::from_f64(1.0 / n as f64)) } else { acc };
     }
     out
 }
@@ -395,7 +400,7 @@ pub fn naive_dft(input: &[Complex64], dir: Direction) -> Vec<Complex64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fft::complex::max_abs_diff;
+    use crate::fft::complex::{max_abs_diff, Complex32, Complex64};
 
     /// Deterministic pseudo-random test signal.
     fn signal(n: usize, seed: u64) -> Vec<Complex64> {
@@ -426,6 +431,22 @@ mod tests {
         assert!(max_abs_diff(&y, &x) < 1e-10, "roundtrip mismatch at n={n}");
     }
 
+    /// Single-precision: same plan machinery, f32-scaled tolerances.
+    fn check_len_f32(n: usize) {
+        let x: Vec<Complex32> = signal(n, n as u64 + 1).iter().map(|c| c.cast()).collect();
+        let plan = FftPlan::<f32>::new(n);
+        let mut y = x.clone();
+        plan.process(&mut y, Direction::Forward);
+        let want = naive_dft(&x, Direction::Forward);
+        let scale = (n as f64).max(1.0);
+        assert!(
+            max_abs_diff(&y, &want) / scale < 1e-5,
+            "f32 forward mismatch at n={n}"
+        );
+        plan.process(&mut y, Direction::Backward);
+        assert!(max_abs_diff(&y, &x) < 1e-4, "f32 roundtrip mismatch at n={n}");
+    }
+
     #[test]
     fn pow2_lengths() {
         for n in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024] {
@@ -447,6 +468,14 @@ mod tests {
         // (131 > 61 so the whole plan goes Bluestein).
         for n in [11usize, 13, 31, 61, 67, 127, 251, 131, 257] {
             check_len(n);
+        }
+    }
+
+    #[test]
+    fn single_precision_lengths() {
+        // One representative of each plan kind at f32.
+        for n in [1usize, 8, 64, 12, 35, 100, 13, 67, 127] {
+            check_len_f32(n);
         }
     }
 

@@ -1,0 +1,178 @@
+//! The [`Real`] scalar abstraction: the one trait every layer of the
+//! transform stack is generic over.
+//!
+//! The paper's redistribution engine "applies to any global redistribution"
+//! and the datatype layer already measures everything in element-size bytes;
+//! [`Real`] extends that genericity to the *numeric* layers (twiddle tables,
+//! serial transforms, distributed plans). Two precisions are provided —
+//! `f64` (the paper's double precision) and `f32` (halving every wire byte
+//! of the alltoallw exchange, the resource the collective is bound by).
+//!
+//! Twiddle factors and tolerances are always *derived* in `f64` and
+//! converted down ([`Real::from_f64`]), so an `f32` plan carries
+//! correctly-rounded tables rather than accumulating single-precision
+//! trigonometric error at planning time.
+
+use crate::simmpi::Pod;
+use std::fmt::{Debug, Display};
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A real scalar the transform stack can be instantiated over.
+///
+/// Implemented by `f32` and `f64`. The bounds are exactly what the generic
+/// FFT kernels, the complex field ops and the distributed drivers need —
+/// no numeric-tower crate, no blanket arithmetic abstraction.
+pub trait Real:
+    Pod
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Debug
+    + Display
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Dtype name for labels, CLI parsing and JSON rows (`"f32"`/`"f64"`).
+    const NAME: &'static str;
+    /// Machine epsilon as `f64`, for precision-scaled tolerances.
+    const EPSILON_F64: f64;
+
+    /// Round an `f64` to this precision (twiddles, scalings, tolerances
+    /// are computed in double and converted down).
+    fn from_f64(x: f64) -> Self;
+
+    /// Widen to `f64` (error accounting, diagnostics).
+    fn to_f64(self) -> f64;
+
+    /// Raw bit pattern widened to `u64` (bitwise-equality assertions).
+    fn to_bits_u64(self) -> u64;
+
+    /// Square root.
+    fn sqrt(self) -> Self;
+
+    /// Absolute value.
+    fn abs(self) -> Self;
+
+    /// IEEE maximum of two values.
+    fn max(self, other: Self) -> Self;
+}
+
+impl Real for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const NAME: &'static str = "f64";
+    const EPSILON_F64: f64 = f64::EPSILON;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    fn to_bits_u64(self) -> u64 {
+        self.to_bits()
+    }
+
+    #[inline(always)]
+    fn sqrt(self) -> f64 {
+        f64::sqrt(self)
+    }
+
+    #[inline(always)]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+
+    #[inline(always)]
+    fn max(self, other: f64) -> f64 {
+        f64::max(self, other)
+    }
+}
+
+impl Real for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const NAME: &'static str = "f32";
+    const EPSILON_F64: f64 = f32::EPSILON as f64;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn to_bits_u64(self) -> u64 {
+        self.to_bits() as u64
+    }
+
+    #[inline(always)]
+    fn sqrt(self) -> f32 {
+        f32::sqrt(self)
+    }
+
+    #[inline(always)]
+    fn abs(self) -> f32 {
+        f32::abs(self)
+    }
+
+    #[inline(always)]
+    fn max(self, other: f32) -> f32 {
+        f32::max(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrips<T: Real>() {
+        assert_eq!(T::from_f64(0.0), T::ZERO);
+        assert_eq!(T::from_f64(1.0), T::ONE);
+        assert_eq!(T::from_f64(2.5).to_f64(), 2.5);
+        assert_eq!((T::from_f64(-3.0)).abs().to_f64(), 3.0);
+        assert_eq!(T::from_f64(9.0).sqrt().to_f64(), 3.0);
+        assert_eq!(T::from_f64(1.0).max(T::from_f64(2.0)).to_f64(), 2.0);
+    }
+
+    #[test]
+    fn both_precisions_roundtrip() {
+        roundtrips::<f32>();
+        roundtrips::<f64>();
+    }
+
+    #[test]
+    fn names_and_eps() {
+        assert_eq!(<f32 as Real>::NAME, "f32");
+        assert_eq!(<f64 as Real>::NAME, "f64");
+        assert!(<f32 as Real>::EPSILON_F64 > <f64 as Real>::EPSILON_F64);
+    }
+
+    #[test]
+    fn f32_narrows_through_from_f64() {
+        let x = std::f64::consts::PI;
+        let y = <f32 as Real>::from_f64(x);
+        assert!((y.to_f64() - x).abs() < 1e-6);
+        assert!((y.to_f64() - x).abs() > 0.0);
+    }
+}

@@ -41,16 +41,23 @@
 //!   sub-exchanges overlapping communication with the serial FFT of
 //!   already-received chunks, bitwise identical to the one-shot exchange.
 //! * [`fft`] — a native serial FFT substrate (mixed-radix + Bluestein,
-//!   c2c/r2c/c2r, strided batched application) standing in for FFTW/MKL.
+//!   c2c/r2c/c2r, strided batched application) standing in for FFTW/MKL,
+//!   **generic over the [`fft::Real`] precision**: every plan, twiddle
+//!   table and buffer is `f32` or `f64` by type parameter
+//!   (`Complex32`/`Complex64` elements), and single precision halves every
+//!   wire byte of the redistribution exchange.
 //! * [`pfft`] — the parallel FFT driver: slab, pencil and general
 //!   `(d-1)`-dimensional decompositions, forward/backward, per-stage timers,
-//!   and the `ExecMode` selector (blocking vs pipelined overlap).
+//!   and the `ExecMode` selector (blocking vs pipelined overlap); the plan
+//!   is precision-generic (`PfftPlan<f32>`/`PfftPlan<f64>`).
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX+Pallas batched FFT
 //!   artifacts (`artifacts/*.hlo.txt`), pluggable as a serial FFT engine.
 //! * [`netmodel`] — an analytic performance model of the Shaheen II Cray
 //!   XC40 used to regenerate the paper's figures at full scale.
-//! * [`coordinator`] — configuration, metrics, workload drivers and the CLI
-//!   entry points used by `repro` and the benchmark harness.
+//! * [`coordinator`] — configuration (including the [`coordinator::Dtype`]
+//!   precision dimension the driver monomorphizes over), metrics, workload
+//!   drivers, the `BENCH_*.json` trend aggregator and the CLI entry points
+//!   used by `repro` and the benchmark harness.
 
 pub mod cli;
 pub mod coordinator;
@@ -63,4 +70,4 @@ pub mod redistribute;
 pub mod runtime;
 pub mod simmpi;
 
-pub use fft::Complex64;
+pub use fft::{Complex, Complex32, Complex64, Real};

@@ -3,17 +3,20 @@
 //! Subcommands:
 //!
 //! * `repro run [--global 64,64,64] [--ranks 4] [--grid 2,2] [--kind r2c|c2c]`
-//!   `[--method alltoallw|traditional] [--engine native|xla] [--inner 3] [--outer 5]`
+//!   `[--method alltoallw|traditional] [--engine native|xla] [--dtype f32|f64]`
+//!   `[--inner 3] [--outer 5]`
 //!   — execute a distributed transform on the simulated world and print the
 //!   timing breakdown (the paper's measurement protocol).
 //! * `repro figure <6..11>` — print the netmodel reproduction of a paper
 //!   figure as a TSV table.
+//! * `repro trend [--dir .]` — aggregate every `BENCH_*.json` artifact into
+//!   a compact per-bench trend table and `BENCH_trend.json`.
 //! * `repro selftest` — quick end-to-end correctness pass on several
-//!   decompositions.
+//!   decompositions, both precisions.
 //! * `repro info` — artifact and configuration summary.
 
 use a2wfft::cli::Args;
-use a2wfft::coordinator::{run_config, EngineKind, RunConfig};
+use a2wfft::coordinator::{run_config, trend, Dtype, EngineKind, RunConfig};
 use a2wfft::netmodel::figures;
 use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
 
@@ -24,6 +27,7 @@ fn main() {
     match cmd {
         "run" => cmd_run(&args),
         "figure" => cmd_figure(&args),
+        "trend" => cmd_trend(&args),
         "selftest" => cmd_selftest(),
         "info" => cmd_info(),
         _ => print_help(),
@@ -37,11 +41,19 @@ fn print_help() {
          USAGE:\n\
          \x20 repro run [--global N,N,N] [--ranks R] [--grid G,G] [--kind r2c|c2c]\n\
          \x20           [--method alltoallw|traditional] [--engine native|xla]\n\
-         \x20           [--exec blocking|pipelined] [--overlap-depth K]\n\
+         \x20           [--dtype f32|f64] [--exec blocking|pipelined] [--overlap-depth K]\n\
          \x20           [--inner I] [--outer O] [--json]\n\
          \x20 repro figure <6|7|8|9|10|11>\n\
+         \x20 repro trend [--dir DIR]\n\
          \x20 repro selftest\n\
          \x20 repro info\n\
+         \n\
+         PRECISION (--dtype):\n\
+         \x20 f64        double precision (the paper's setting; default)\n\
+         \x20 f32        single precision: the whole stack — twiddle tables,\n\
+         \x20            serial transforms, redistribution payloads — runs on\n\
+         \x20            Complex32 elements, halving every wire byte of the\n\
+         \x20            alltoallw exchange\n\
          \n\
          EXECUTION MODES (--exec):\n\
          \x20 blocking   one blocking ALLTOALLW per redistribution (paper protocol)\n\
@@ -53,10 +65,15 @@ fn print_help() {
          \n\
          OUTPUT:\n\
          \x20 --json     print the run result as one machine-readable JSON object\n\
-         \x20            (per-stage timings, wire bytes, and the datatype engine's\n\
-         \x20            fused-copy vs staged pack/unpack byte attribution) instead\n\
-         \x20            of the TSV row — the same row shape the benches write to\n\
-         \x20            BENCH_*.json files"
+         \x20            (per-stage timings, dtype, wire bytes, and the datatype\n\
+         \x20            engine's fused-copy vs staged pack/unpack byte attribution)\n\
+         \x20            instead of the TSV row — the same row shape the benches\n\
+         \x20            write to BENCH_*.json files\n\
+         \n\
+         TREND (repro trend):\n\
+         \x20 glob BENCH_*.json in --dir (default .) and emit the per-bench\n\
+         \x20 trend table (mean time, wire/fused/staged bytes) to stdout and\n\
+         \x20 BENCH_trend.json"
     );
 }
 
@@ -83,6 +100,10 @@ fn cmd_run(args: &Args) {
         "xla" => EngineKind::Xla,
         other => panic!("--engine: unknown {other}"),
     };
+    let dtype = match args.get("dtype") {
+        None => Dtype::F64,
+        Some(s) => Dtype::parse(s).unwrap_or_else(|| panic!("--dtype: unknown {s} (f32|f64)")),
+    };
     let depth = args.get_usize("overlap-depth", 4);
     let exec = match args.get("exec").unwrap_or("blocking") {
         "blocking" | "block" => ExecMode::Blocking,
@@ -97,18 +118,27 @@ fn cmd_run(args: &Args) {
         method,
         exec,
         engine,
+        dtype,
         inner: args.get_usize("inner", 3),
         outer: args.get_usize("outer", 5),
     };
     let rep = run_config(&cfg, grid_ndims);
     if args.has_flag("json") {
-        let label = format!("run/{:?}/{:?}/{:?}/{}", kind, method, exec, engine.name());
+        let label = format!(
+            "run/{:?}/{:?}/{:?}/{}/{}",
+            kind,
+            method,
+            exec,
+            engine.name(),
+            dtype.name()
+        );
         println!("{}", a2wfft::coordinator::benchkit::report_json(&label, &global, ranks, &rep));
         return;
     }
     println!(
-        "# global={global:?} ranks={ranks} kind={kind:?} method={method:?} exec={exec:?} engine={}",
-        engine.name()
+        "# global={global:?} ranks={ranks} kind={kind:?} method={method:?} exec={exec:?} engine={} dtype={}",
+        engine.name(),
+        dtype.name()
     );
     println!(
         "total_s\tfft_s\tredist_s\toverlap_fft_s\toverlap_comm_s\tbytes\tfused_bytes\tstaged_bytes\tthroughput_pts_per_s\tmax_err"
@@ -150,30 +180,52 @@ fn cmd_figure(args: &Args) {
     }
 }
 
+fn cmd_trend(args: &Args) {
+    let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("."));
+    match trend::run_trend(&dir) {
+        Ok(groups) => println!("trend OK ({groups} row group(s))"),
+        Err(e) => {
+            eprintln!("trend failed: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_selftest() {
-    let cases: Vec<(Vec<usize>, usize, usize, Kind, ExecMode)> = vec![
-        (vec![16, 12, 10], 4, 1, Kind::C2c, ExecMode::Blocking),
-        (vec![16, 12, 10], 4, 2, Kind::R2c, ExecMode::Blocking),
-        (vec![16, 12, 10], 4, 2, Kind::R2c, ExecMode::Pipelined { depth: 3 }),
-        (vec![8, 8, 8, 8], 8, 3, Kind::C2c, ExecMode::Blocking),
-        (vec![8, 8, 8, 8], 8, 3, Kind::C2c, ExecMode::Pipelined { depth: 4 }),
+    let cases: Vec<(Vec<usize>, usize, usize, Kind, ExecMode, Dtype)> = vec![
+        (vec![16, 12, 10], 4, 1, Kind::C2c, ExecMode::Blocking, Dtype::F64),
+        (vec![16, 12, 10], 4, 2, Kind::R2c, ExecMode::Blocking, Dtype::F64),
+        (vec![16, 12, 10], 4, 2, Kind::R2c, ExecMode::Pipelined { depth: 3 }, Dtype::F64),
+        (vec![8, 8, 8, 8], 8, 3, Kind::C2c, ExecMode::Blocking, Dtype::F64),
+        (vec![8, 8, 8, 8], 8, 3, Kind::C2c, ExecMode::Pipelined { depth: 4 }, Dtype::F64),
+        // Single precision across the same decompositions.
+        (vec![16, 12, 10], 4, 1, Kind::C2c, ExecMode::Blocking, Dtype::F32),
+        (vec![16, 12, 10], 4, 2, Kind::R2c, ExecMode::Blocking, Dtype::F32),
+        (vec![16, 12, 10], 4, 2, Kind::R2c, ExecMode::Pipelined { depth: 3 }, Dtype::F32),
+        (vec![8, 8, 8, 8], 8, 3, Kind::C2c, ExecMode::Pipelined { depth: 4 }, Dtype::F32),
     ];
     let mut ok = true;
-    for (global, ranks, grid_ndims, kind, exec) in cases {
+    for (global, ranks, grid_ndims, kind, exec, dtype) in cases {
         let cfg = RunConfig {
             global: global.clone(),
             ranks,
             kind,
             exec,
+            dtype,
             inner: 1,
             outer: 1,
             ..Default::default()
         };
         let rep = run_config(&cfg, grid_ndims);
-        let pass = rep.max_err < 1e-9;
+        let tol = match dtype {
+            Dtype::F64 => 1e-9,
+            Dtype::F32 => dtype.roundtrip_tol(),
+        };
+        let pass = rep.max_err < tol;
         ok &= pass;
         println!(
-            "selftest global={global:?} ranks={ranks} grid_ndims={grid_ndims} kind={kind:?} exec={exec:?}: err={:.2e} {}",
+            "selftest global={global:?} ranks={ranks} grid_ndims={grid_ndims} kind={kind:?} exec={exec:?} dtype={}: err={:.2e} {}",
+            dtype.name(),
             rep.max_err,
             if pass { "OK" } else { "FAIL" }
         );

@@ -1,5 +1,6 @@
 //! The distributed FFT plan: alignment states, redistribution schedule and
-//! the forward/backward drivers (paper §3.3, §3.5, §3.6).
+//! the forward/backward drivers (paper §3.3, §3.5, §3.6), generic over the
+//! [`Real`] precision.
 //!
 //! A `d`-dimensional global array on an `r`-dimensional process grid
 //! (`r <= d-1`) passes through `r+1` *alignment states* `t = r, ..., 0`:
@@ -18,14 +19,19 @@
 //! redistributions — Eqs. (12–14) for slabs, (21–25) for pencils, (26–32)
 //! for the 4-D/3-D-grid case — and the backward transform retraces the
 //! sequence exactly.
+//!
+//! The precision is a *plan* property: a `PfftPlan<f32>` builds `f32`
+//! twiddle tables and `Complex32` buffers, and its redistribution plans are
+//! compiled for 8-byte elements — halving every wire byte of the exchange
+//! relative to the default `PfftPlan<f64>`.
 
 use std::time::Instant;
 
 use crate::decomp::local_len;
-use crate::fft::{Complex64, Direction, SerialFft};
+use crate::fft::{Complex, Direction, Real, SerialFft};
 use crate::redistribute::{PipelinedRedistPlan, RedistPlan, TraditionalPlan};
 use crate::simmpi::topology::{subcomms_with_dims, CartComm};
-use crate::simmpi::{dims_create, Comm};
+use crate::simmpi::{dims_create, Comm, Pod};
 
 /// Which global redistribution implementation a plan uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,8 +70,10 @@ enum RedistKind {
 
 impl RedistKind {
     // Plans own their execution state (staging arenas, in-flight windows),
-    // so execution takes `&mut self` across every kind.
-    fn execute(&mut self, a: &[Complex64], b: &mut [Complex64]) {
+    // so execution takes `&mut self` across every kind. The element type is
+    // a call-site parameter: the plans are compiled for an element *size*
+    // and move bytes.
+    fn execute<E: Pod>(&mut self, a: &[E], b: &mut [E]) {
         match self {
             RedistKind::New(p) => p.execute(a, b),
             RedistKind::Trad(p) => p.execute(a, b),
@@ -73,7 +81,7 @@ impl RedistKind {
         }
     }
 
-    fn execute_back(&mut self, b: &[Complex64], a: &mut [Complex64]) {
+    fn execute_back<E: Pod>(&mut self, b: &[E], a: &mut [E]) {
         match self {
             RedistKind::New(p) => p.execute_back(b, a),
             RedistKind::Trad(p) => p.execute_back(b, a),
@@ -122,7 +130,8 @@ pub enum Kind {
     R2c,
 }
 
-/// A distributed multidimensional FFT plan over a Cartesian process grid.
+/// A distributed multidimensional FFT plan over a Cartesian process grid,
+/// at precision `T` (default `f64`).
 ///
 /// Created collectively by every rank of `comm`; holds the per-rank local
 /// buffers, the redistribution plans for every alignment step, and stage
@@ -130,10 +139,11 @@ pub enum Kind {
 ///
 /// Each redistribution plan carries its *compiled* execution state —
 /// flattened datatypes, fused [`crate::simmpi::TransferPlan`]s, staging
-/// arenas and chunk scratch — created once here and reused by every
-/// forward/backward transform across all alignment stages, so steady-state
-/// transforms do not re-flatten datatypes or reallocate staging.
-pub struct PfftPlan {
+/// arenas and chunk scratch — created once here for `size_of::<Complex<T>>`
+/// elements and reused by every forward/backward transform across all
+/// alignment stages, so steady-state transforms do not re-flatten datatypes
+/// or reallocate staging.
+pub struct PfftPlan<T = f64> {
     /// Global *real-space* shape (for `C2c` this equals the complex shape).
     global: Vec<usize>,
     /// Global complex shape (last axis halved for `R2c`).
@@ -149,7 +159,7 @@ pub struct PfftPlan {
     /// `t` (w-aligned, w = t), within direction subgroup `t`.
     redists: Vec<RedistKind>,
     /// Work buffers, one per state.
-    bufs: Vec<Vec<Complex64>>,
+    bufs: Vec<Vec<Complex<T>>>,
     /// Local real shape at state `r` (`R2c` only).
     real_shape: Vec<usize>,
     /// How redistributions are executed (blocking vs pipelined).
@@ -157,11 +167,11 @@ pub struct PfftPlan {
     pub timers: StageTimers,
 }
 
-impl PfftPlan {
+impl<T: Real> PfftPlan<T> {
     /// Plan a transform of the global array `global` over an
     /// `grid_ndims`-dimensional process grid with extents from
     /// `dims_create`, using the paper's `alltoallw` redistribution.
-    pub fn new(comm: &Comm, global: &[usize], grid_ndims: usize, kind: Kind) -> PfftPlan {
+    pub fn new(comm: &Comm, global: &[usize], grid_ndims: usize, kind: Kind) -> PfftPlan<T> {
         let dims = dims_create(comm.size(), grid_ndims);
         Self::with_dims(comm, global, &dims, kind, RedistMethod::Alltoallw)
     }
@@ -175,7 +185,7 @@ impl PfftPlan {
         dims: &[usize],
         kind: Kind,
         method: RedistMethod,
-    ) -> PfftPlan {
+    ) -> PfftPlan<T> {
         Self::with_exec(comm, global, dims, kind, method, ExecMode::Blocking)
     }
 
@@ -189,7 +199,7 @@ impl PfftPlan {
         kind: Kind,
         method: RedistMethod,
         exec: ExecMode,
-    ) -> PfftPlan {
+    ) -> PfftPlan<T> {
         let d = global.len();
         let r = dims.len();
         assert!(d >= 2, "pfft: need at least 2 dimensions");
@@ -232,7 +242,7 @@ impl PfftPlan {
                 "pfft: ExecMode::Pipelined requires RedistMethod::Alltoallw"
             );
         }
-        let elem = std::mem::size_of::<Complex64>();
+        let elem = std::mem::size_of::<Complex<T>>();
         let redists: Vec<RedistKind> = (0..r)
             .map(|t| {
                 let (a, b) = (&shapes[t + 1], &shapes[t]);
@@ -258,8 +268,8 @@ impl PfftPlan {
                 }
             })
             .collect();
-        let bufs: Vec<Vec<Complex64>> =
-            shapes.iter().map(|s| vec![Complex64::ZERO; s.iter().product()]).collect();
+        let bufs: Vec<Vec<Complex<T>>> =
+            shapes.iter().map(|s| vec![Complex::<T>::ZERO; s.iter().product()]).collect();
         // Real-space local shape at state r (axes 0..r distributed).
         let real_shape: Vec<usize> = (0..d)
             .map(|a| if a < r { local_len(global[a], dims[a], coords[a]) } else { global[a] })
@@ -282,6 +292,11 @@ impl PfftPlan {
     /// How this plan executes its redistributions.
     pub fn exec_mode(&self) -> ExecMode {
         self.exec
+    }
+
+    /// Dtype name of this plan's precision (`"f32"`/`"f64"`).
+    pub fn dtype_name(&self) -> &'static str {
+        T::NAME
     }
 
     /// Grid extents.
@@ -359,7 +374,7 @@ impl PfftPlan {
 
     /// Forward complex transform: `input` in state-`r` layout (shape
     /// [`PfftPlan::input_shape`]), `output` in state-0 layout.
-    pub fn forward(&mut self, engine: &mut dyn SerialFft, input: &[Complex64], output: &mut [Complex64]) {
+    pub fn forward(&mut self, engine: &mut dyn SerialFft<T>, input: &[Complex<T>], output: &mut [Complex<T>]) {
         assert_eq!(self.kind, Kind::C2c, "forward: use forward_r2c on an R2c plan");
         let r = self.dims.len();
         let d = self.global.len();
@@ -381,7 +396,7 @@ impl PfftPlan {
 
     /// Backward complex transform: `input` in state-0 layout, `output` in
     /// state-`r` layout. Scales by `1/prod(N)` (numpy `ifftn` convention).
-    pub fn backward(&mut self, engine: &mut dyn SerialFft, input: &[Complex64], output: &mut [Complex64]) {
+    pub fn backward(&mut self, engine: &mut dyn SerialFft<T>, input: &[Complex<T>], output: &mut [Complex<T>]) {
         assert_eq!(self.kind, Kind::C2c, "backward: use backward_c2r on an R2c plan");
         let r = self.dims.len();
         let d = self.global.len();
@@ -403,7 +418,7 @@ impl PfftPlan {
     /// Forward real-to-complex transform (paper's benchmark workload):
     /// `input` real in state-`r` layout (shape [`PfftPlan::input_shape`]),
     /// `output` complex in state-0 layout with halved last axis.
-    pub fn forward_r2c(&mut self, engine: &mut dyn SerialFft, input: &[f64], output: &mut [Complex64]) {
+    pub fn forward_r2c(&mut self, engine: &mut dyn SerialFft<T>, input: &[T], output: &mut [Complex<T>]) {
         assert_eq!(self.kind, Kind::R2c, "forward_r2c: plan is not R2c");
         let r = self.dims.len();
         let d = self.global.len();
@@ -427,7 +442,7 @@ impl PfftPlan {
 
     /// Backward complex-to-real transform, inverse of
     /// [`PfftPlan::forward_r2c`] including the `1/prod(N)` scaling.
-    pub fn backward_c2r(&mut self, engine: &mut dyn SerialFft, input: &[Complex64], output: &mut [f64]) {
+    pub fn backward_c2r(&mut self, engine: &mut dyn SerialFft<T>, input: &[Complex<T>], output: &mut [T]) {
         assert_eq!(self.kind, Kind::R2c, "backward_c2r: plan is not R2c");
         let r = self.dims.len();
         let d = self.global.len();
@@ -455,7 +470,7 @@ impl PfftPlan {
     /// sub-exchange completes, while later chunks are still in flight.
     /// The per-line transforms are identical either way, so the spectra
     /// are bitwise equal across modes.
-    fn descend(&mut self, engine: &mut dyn SerialFft, dir: Direction) {
+    fn descend(&mut self, engine: &mut dyn SerialFft<T>, dir: Direction) {
         let r = self.dims.len();
         for t in (0..r).rev() {
             let (lo, hi) = self.bufs.split_at_mut(t + 1);
@@ -489,7 +504,7 @@ impl PfftPlan {
     /// axis `t`, then exchange back into state `t+1`. Pipelined plans fuse
     /// the two: each chunk is inverse-transformed and posted while the
     /// previous chunk's exchange drains.
-    fn ascend(&mut self, engine: &mut dyn SerialFft) {
+    fn ascend(&mut self, engine: &mut dyn SerialFft<T>) {
         let r = self.dims.len();
         for t in 0..r {
             let (lo, hi) = self.bufs.split_at_mut(t + 1);

@@ -6,13 +6,14 @@
 //! (xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id serialized protos; the
 //! text parser reassigns ids, see `/opt/xla-example/README.md`).
 //!
-//! [`XlaFftEngine`] implements [`crate::fft::SerialFft`], so a
-//! [`crate::pfft::PfftPlan`] can run its serial-FFT leaves on the XLA
-//! executable instead of the native planner — the three-layer composition
-//! the architecture demands. Data crosses the boundary as separate f32
-//! real/imag planes (the paper's double precision is kept end-to-end only
-//! by the native engine; the XLA engine is the TPU-shaped path and
-//! documents its f32 tolerance).
+//! [`XlaFftEngine`] implements [`crate::fft::SerialFft`] at either
+//! [`crate::fft::Real`] precision, so a [`crate::pfft::PfftPlan`] can run
+//! its serial-FFT leaves on the XLA executable instead of the native
+//! planner — the three-layer composition the architecture demands. Data
+//! crosses the boundary as separate f32 real/imag planes whatever the
+//! interface precision (the XLA engine is the TPU-shaped path and
+//! documents its f32 tolerance; full double precision end-to-end needs the
+//! native engine).
 //!
 //! ## Feature gating
 //!

@@ -6,7 +6,7 @@
 use std::path::Path;
 
 use super::RuntimeError;
-use crate::fft::{Complex64, Direction, SerialFft};
+use crate::fft::{Complex, Direction, Real, SerialFft};
 
 /// Stub of the PJRT-backed serial FFT engine (see
 /// `rust/src/runtime/xla_engine.rs` for the real one, behind the `xla`
@@ -31,16 +31,19 @@ impl XlaFftEngine {
     }
 }
 
-impl SerialFft for XlaFftEngine {
-    fn c2c(&mut self, _data: &mut [Complex64], _shape: &[usize], _axis: usize, _dir: Direction) {
+// The stub mirrors the real engine's precision surface: the PJRT engine
+// carries f32 planes internally and serves either precision at the
+// interface, so the stub implements `SerialFft<T>` for every `T: Real`.
+impl<T: Real> SerialFft<T> for XlaFftEngine {
+    fn c2c(&mut self, _data: &mut [Complex<T>], _shape: &[usize], _axis: usize, _dir: Direction) {
         unreachable!("stub XlaFftEngine cannot be constructed");
     }
 
-    fn r2c(&mut self, _real: &[f64], _shape: &[usize], _out: &mut [Complex64]) {
+    fn r2c(&mut self, _real: &[T], _shape: &[usize], _out: &mut [Complex<T>]) {
         unreachable!("stub XlaFftEngine cannot be constructed");
     }
 
-    fn c2r(&mut self, _cplx: &[Complex64], _shape: &[usize], _out: &mut [f64]) {
+    fn c2r(&mut self, _cplx: &[Complex<T>], _shape: &[usize], _out: &mut [T]) {
         unreachable!("stub XlaFftEngine cannot be constructed");
     }
 

@@ -6,7 +6,7 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use super::{Manifest, RuntimeError};
-use crate::fft::{Complex64, Direction, SerialFft};
+use crate::fft::{Complex, Direction, Real, SerialFft};
 
 type Result<T> = std::result::Result<T, RuntimeError>;
 
@@ -60,8 +60,9 @@ impl XlaFftEngine {
 
     /// Transform `rows` (count x n complex rows, contiguous) in place
     /// through the (direction, n) executable, padding the final partial
-    /// batch with zeros.
-    fn run_rows(&mut self, rows: &mut [Complex64], n: usize, dir: Direction) -> Result<()> {
+    /// batch with zeros. The device planes are always f32, so either
+    /// interface precision converts through `f64` losslessly.
+    fn run_rows<T: Real>(&mut self, rows: &mut [Complex<T>], n: usize, dir: Direction) -> Result<()> {
         let fwd = dir == Direction::Forward;
         let exec = self
             .execs
@@ -76,8 +77,8 @@ impl XlaFftEngine {
             let take = b.min(count - done);
             let chunk = &rows[done * n..(done + take) * n];
             for (k, c) in chunk.iter().enumerate() {
-                re[k] = c.re as f32;
-                im[k] = c.im as f32;
+                re[k] = c.re.to_f64() as f32;
+                im[k] = c.im.to_f64() as f32;
             }
             // Zero the padded tail (data from the previous chunk otherwise).
             for k in chunk.len()..b * n {
@@ -101,7 +102,7 @@ impl XlaFftEngine {
             let oim = oim.to_vec::<f32>().map_err(|e| rerr(format!("to_vec im: {e}")))?;
             let out = &mut rows[done * n..(done + take) * n];
             for (k, c) in out.iter_mut().enumerate() {
-                *c = Complex64::new(ore[k] as f64, oim[k] as f64);
+                *c = Complex::from_f64(ore[k] as f64, oim[k] as f64);
             }
             done += take;
         }
@@ -109,8 +110,8 @@ impl XlaFftEngine {
     }
 }
 
-impl SerialFft for XlaFftEngine {
-    fn c2c(&mut self, data: &mut [Complex64], shape: &[usize], axis: usize, dir: Direction) {
+impl<T: Real> SerialFft<T> for XlaFftEngine {
+    fn c2c(&mut self, data: &mut [Complex<T>], shape: &[usize], axis: usize, dir: Direction) {
         let d = shape.len();
         let n = shape[axis];
         if n <= 1 {
@@ -124,7 +125,7 @@ impl SerialFft for XlaFftEngine {
         }
         // Gather strided lines into contiguous rows, transform, scatter.
         let lines = before * stride;
-        let mut panel = vec![Complex64::ZERO; lines * n];
+        let mut panel = vec![Complex::<T>::ZERO; lines * n];
         for bidx in 0..before {
             let base = bidx * n * stride;
             for t in 0..n {
@@ -147,26 +148,26 @@ impl SerialFft for XlaFftEngine {
         let _ = d;
     }
 
-    fn r2c(&mut self, real: &[f64], shape: &[usize], out: &mut [Complex64]) {
+    fn r2c(&mut self, real: &[T], shape: &[usize], out: &mut [Complex<T>]) {
         // Full-length complex transform, truncate to the Hermitian half.
         let d = shape.len();
         let n = shape[d - 1];
         let nh = n / 2 + 1;
         let rows: usize = shape[..d - 1].iter().product();
-        let mut full: Vec<Complex64> =
-            real.iter().map(|&r| Complex64::new(r, 0.0)).collect();
+        let mut full: Vec<Complex<T>> =
+            real.iter().map(|&r| Complex::new(r, T::ZERO)).collect();
         self.run_rows(&mut full, n, Direction::Forward).expect("xla engine r2c");
         for r in 0..rows {
             out[r * nh..(r + 1) * nh].copy_from_slice(&full[r * n..r * n + nh]);
         }
     }
 
-    fn c2r(&mut self, cplx: &[Complex64], shape: &[usize], out: &mut [f64]) {
+    fn c2r(&mut self, cplx: &[Complex<T>], shape: &[usize], out: &mut [T]) {
         let d = shape.len();
         let n = shape[d - 1];
         let nh = n / 2 + 1;
         let rows: usize = shape[..d - 1].iter().product();
-        let mut full = vec![Complex64::ZERO; rows * n];
+        let mut full = vec![Complex::<T>::ZERO; rows * n];
         for r in 0..rows {
             let src = &cplx[r * nh..(r + 1) * nh];
             let line = &mut full[r * n..(r + 1) * n];
@@ -189,6 +190,7 @@ impl SerialFft for XlaFftEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fft::Complex64;
 
     fn artifacts_dir() -> std::path::PathBuf {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -223,7 +225,7 @@ mod tests {
             .map(|k| Complex64::new((k as f64 * 0.13).sin(), (k as f64 * 0.29).cos()))
             .collect();
         let mut xeng = XlaFftEngine::load(&artifacts_dir()).unwrap();
-        let mut neng = NativeFft::new();
+        let mut neng = NativeFft::<f64>::new();
         for axis in [2usize, 0] {
             // axis 0 has length 4 -> no artifact; only check supported ns.
             if !xeng.supported_sizes().contains(&shape[axis]) {

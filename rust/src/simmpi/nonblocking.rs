@@ -468,22 +468,42 @@ mod tests {
 
     #[test]
     fn test_polls_to_completion() {
+        // Uneven arrival, deterministically: rank 0 initiates its collective
+        // while every other rank is still parked waiting for a go-token, so
+        // rank 0's first test() is *guaranteed* to observe an incomplete
+        // operation (causality, not wall-clock sleeps: a peer cannot have
+        // sent before it even initiated). Rank 0 then releases the peers one
+        // by one and polls to completion.
         World::run(3, |comm| {
+            const GO: u32 = 0x60;
             let me = comm.rank();
-            // Uneven arrival: each rank sleeps proportionally to its rank
-            // before entering, so rank 0's test() loop observes gradual
-            // completion.
-            std::thread::sleep(std::time::Duration::from_millis(5 * me as u64));
+            let n = comm.size();
             let counts = vec![2usize; 3];
             let displs = vec![0usize, 2, 4];
             let send: Vec<u64> = (0..6).map(|k| (me * 10 + k) as u64).collect();
-            let mut req = comm.ialltoallv(&send, &counts, &displs, &counts, &displs);
             let mut out = vec![0u64; 6];
-            let mut spins = 0usize;
-            while !req.test_typed(&mut out) {
-                spins += 1;
-                std::thread::yield_now();
-                assert!(spins < 10_000_000, "test never completed");
+            if me == 0 {
+                let mut req = comm.ialltoallv(&send, &counts, &displs, &counts, &displs);
+                // No peer has initiated yet (they are blocked on the token),
+                // so the operation cannot be complete for a 3-rank world.
+                assert!(
+                    !req.test_typed(&mut out),
+                    "test() completed before any peer initiated"
+                );
+                // Release the peers one at a time: gradual completion.
+                for q in 1..n {
+                    comm.send_slice(q, GO, &[1u8]);
+                }
+                let mut spins = 0usize;
+                while !req.test_typed(&mut out) {
+                    spins += 1;
+                    std::thread::yield_now();
+                    assert!(spins < 10_000_000, "test never completed");
+                }
+            } else {
+                let _token: Vec<u8> = comm.recv_vec(0, GO, 1);
+                let req = comm.ialltoallv(&send, &counts, &displs, &counts, &displs);
+                req.wait_typed(&mut out);
             }
             // Block q of out came from rank q: q*10 + me*2, q*10 + me*2 + 1.
             for q in 0..3 {

@@ -1,0 +1,259 @@
+//! Dtype-correctness matrix: the precision-generic transform stack at
+//! `f32` and `f64` across random shapes, grids and redistribution methods.
+//!
+//! * **roundtrip**: `bwd(fwd(x)) ≈ x` through the full distributed plan at
+//!   both precisions, with tolerances scaled by the dtype's machine
+//!   epsilon;
+//! * **Parseval** per dtype: energy conservation of the serial 1-D plans;
+//! * **bitwise fused-vs-staged**: the compiled `alltoallw` path and the
+//!   traditional pack→`alltoallv`→unpack baseline are pure data movement,
+//!   so their results must be *bit-identical* for `Complex32` payloads
+//!   across random shapes/grids/methods — precision must not change what
+//!   the datatype engine moves;
+//! * **driver matrix**: `run_config` at `--dtype f32` over slab and pencil
+//!   decompositions, both redistribution methods and both exec modes (the
+//!   acceptance matrix of the precision-generic stack), wire bytes exactly
+//!   half of the `f64` runs.
+
+use a2wfft::coordinator::{run_config, Dtype, EngineKind, RunConfig};
+use a2wfft::decomp::decompose;
+use a2wfft::fft::{Complex, Complex32, Direction, FftPlan, NativeFft, Real};
+use a2wfft::pfft::{ExecMode, Kind, PfftPlan, RedistMethod};
+use a2wfft::redistribute::{exchange, traditional_exchange};
+use a2wfft::simmpi::World;
+
+/// Small deterministic PRNG (xorshift64*), as in `property_invariants`.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+    }
+}
+
+/// Precision-scaled roundtrip tolerance: a generous multiple of epsilon
+/// growing with sqrt(mesh size).
+fn roundtrip_tol<T: Real>(total: usize) -> f64 {
+    1e3 * T::EPSILON_F64 * (total as f64).sqrt().max(1.0)
+}
+
+/// Bitwise equality of two complex slices (no float comparison semantics).
+fn bits_eq<T: Real>(a: &[Complex<T>], b: &[Complex<T>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.re.to_bits_u64() == y.re.to_bits_u64() && x.im.to_bits_u64() == y.im.to_bits_u64()
+        })
+}
+
+/// Full distributed c2c forward+backward at precision `T` over a random
+/// configuration; asserts the roundtrip error stays within the dtype's
+/// scaled tolerance.
+fn distributed_roundtrip<T: Real>(
+    global: &[usize],
+    dims: &[usize],
+    nprocs: usize,
+    method: RedistMethod,
+    seed: u64,
+) {
+    let global = global.to_vec();
+    let dims = dims.to_vec();
+    let total: usize = global.iter().product();
+    let tol = roundtrip_tol::<T>(total);
+    World::run(nprocs, move |comm| {
+        let mut plan = PfftPlan::<T>::with_dims(&comm, &global, &dims, Kind::C2c, method);
+        assert_eq!(plan.dtype_name(), T::NAME, "plan must carry its precision");
+        let mut eng = NativeFft::<T>::new();
+        let mut lr = Rng::new(seed ^ (comm.rank() as u64 + 1));
+        let input: Vec<Complex<T>> =
+            (0..plan.input_len()).map(|_| Complex::from_f64(lr.f64(), lr.f64())).collect();
+        let mut spec = vec![Complex::<T>::ZERO; plan.output_len()];
+        plan.forward(&mut eng, &input, &mut spec);
+        let mut back = vec![Complex::<T>::ZERO; plan.input_len()];
+        plan.backward(&mut eng, &spec, &mut back);
+        let err = a2wfft::fft::max_abs_diff(&input, &back);
+        assert!(
+            err < tol,
+            "rank {}: {} roundtrip err {err} over tol {tol} (global {global:?}, dims {dims:?})",
+            comm.rank(),
+            plan.dtype_name(),
+        );
+    });
+}
+
+#[test]
+fn prop_distributed_roundtrips_both_dtypes_random_cases() {
+    let mut rng = Rng::new(41);
+    for case in 0..6 {
+        let d = rng.range(3, 4);
+        let global: Vec<usize> = (0..d).map(|_| rng.range(3, 9)).collect();
+        let grid_ndims = rng.range(1, 2.min(d - 1));
+        let nprocs = rng.range(2, 5);
+        let dims = a2wfft::simmpi::dims_create(nprocs, grid_ndims);
+        let method =
+            if case % 2 == 0 { RedistMethod::Alltoallw } else { RedistMethod::Traditional };
+        let seed = rng.next_u64();
+        distributed_roundtrip::<f64>(&global, &dims, nprocs, method, seed);
+        distributed_roundtrip::<f32>(&global, &dims, nprocs, method, seed);
+    }
+}
+
+#[test]
+fn parseval_per_dtype() {
+    fn check<T: Real>(n: usize) {
+        let mut rng = Rng::new(n as u64 + 9);
+        let x: Vec<Complex<T>> = (0..n).map(|_| Complex::from_f64(rng.f64(), rng.f64())).collect();
+        let plan = FftPlan::<T>::new(n);
+        let mut y = x.clone();
+        plan.process(&mut y, Direction::Forward);
+        let ex: f64 = x.iter().map(|v| v.norm_sqr().to_f64()).sum();
+        let ey: f64 = y.iter().map(|v| v.norm_sqr().to_f64()).sum::<f64>() / n as f64;
+        let rel = (ex - ey).abs() / ex;
+        let tol = 1e4 * T::EPSILON_F64;
+        assert!(rel < tol, "{}: Parseval violated at n={n}: rel {rel} tol {tol}", T::NAME);
+    }
+    for n in [16usize, 60, 96, 127] {
+        check::<f64>(n);
+        check::<f32>(n);
+    }
+}
+
+#[test]
+fn prop_f32_fused_vs_staged_paths_bitwise_equal() {
+    // The compiled alltoallw exchange (fused TransferPlan self-path, cached
+    // flattenings) against the traditional staged baseline, on Complex32
+    // payloads, over random shapes / axis pairs / group sizes: the results
+    // must match bit for bit.
+    let mut rng = Rng::new(77);
+    for case in 0..12 {
+        let d = rng.range(2, 4);
+        let global: Vec<usize> = (0..d).map(|_| rng.range(2, 9)).collect();
+        let nprocs = rng.range(1, 5);
+        let axis_a = rng.below(d);
+        let mut axis_b = rng.below(d);
+        while axis_b == axis_a {
+            axis_b = rng.below(d);
+        }
+        let seed = rng.next_u64();
+        let global_c = global.clone();
+        World::run(nprocs, move |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let mut sizes_a = global_c.clone();
+            let mut sizes_b = global_c.clone();
+            sizes_a[axis_b] = decompose(global_c[axis_b], m, me).0;
+            sizes_b[axis_a] = decompose(global_c[axis_a], m, me).0;
+            let mut lr = Rng::new(seed ^ (me as u64 + 1));
+            let a: Vec<Complex32> = (0..sizes_a.iter().product::<usize>())
+                .map(|_| Complex::from_f64(lr.f64(), lr.f64()))
+                .collect();
+            let mut fused = vec![Complex32::ZERO; sizes_b.iter().product()];
+            exchange(&comm, &a, &sizes_a, axis_a, &mut fused, &sizes_b, axis_b);
+            let mut staged = vec![Complex32::ZERO; sizes_b.iter().product()];
+            traditional_exchange(&comm, &a, &sizes_a, axis_a, &mut staged, &sizes_b, axis_b);
+            assert!(
+                bits_eq(&fused, &staged),
+                "case {case} rank {me}: f32 fused != staged bitwise"
+            );
+            // And the reverse fused path restores A bitwise.
+            let mut back = vec![Complex32::ZERO; a.len()];
+            exchange(&comm, &fused, &sizes_b, axis_b, &mut back, &sizes_a, axis_a);
+            assert!(
+                bits_eq(&a, &back),
+                "case {case} rank {me}: f32 exchange roundtrip not bitwise"
+            );
+        });
+    }
+}
+
+#[test]
+fn f32_exec_modes_bitwise_equal_spectra() {
+    // Pipelined vs blocking execution at single precision: chunking only
+    // reorders data movement, so the f32 spectra must be bit-identical.
+    let global = vec![8usize, 6, 10];
+    World::run(4, |comm| {
+        let mut eng = NativeFft::<f32>::new();
+        let mut spectra: Vec<Vec<Complex32>> = Vec::new();
+        for exec in [ExecMode::Blocking, ExecMode::Pipelined { depth: 3 }] {
+            let mut plan = PfftPlan::<f32>::with_exec(
+                &comm,
+                &global,
+                &[2, 2],
+                Kind::R2c,
+                RedistMethod::Alltoallw,
+                exec,
+            );
+            let input: Vec<f32> = (0..plan.input_len())
+                .map(|k| ((k * 31 + comm.rank() * 7) % 101) as f32 / 101.0)
+                .collect();
+            let mut output = vec![Complex32::ZERO; plan.output_len()];
+            plan.forward_r2c(&mut eng, &input, &mut output);
+            spectra.push(output);
+        }
+        assert!(
+            bits_eq(&spectra[0], &spectra[1]),
+            "rank {}: f32 exec modes diverged",
+            comm.rank()
+        );
+    });
+}
+
+#[test]
+fn driver_acceptance_matrix_f32() {
+    // The acceptance matrix: --dtype f32 forward+backward over slab and
+    // pencil decompositions, both redistribution methods, both exec modes
+    // (pipelined requires alltoallw), within f32 tolerance — and wire
+    // bytes exactly half of the same f64 configuration.
+    let combos: &[(RedistMethod, ExecMode)] = &[
+        (RedistMethod::Alltoallw, ExecMode::Blocking),
+        (RedistMethod::Alltoallw, ExecMode::Pipelined { depth: 3 }),
+        (RedistMethod::Traditional, ExecMode::Blocking),
+    ];
+    for grid_ndims in [1usize, 2] {
+        for &(method, exec) in combos {
+            let base = RunConfig {
+                global: vec![16, 12, 10],
+                ranks: 4,
+                kind: Kind::R2c,
+                method,
+                exec,
+                engine: EngineKind::Native,
+                inner: 1,
+                outer: 1,
+                ..Default::default()
+            };
+            let rep32 =
+                run_config(&RunConfig { dtype: Dtype::F32, ..base.clone() }, grid_ndims);
+            assert_eq!(rep32.dtype, "f32");
+            assert!(
+                rep32.max_err < Dtype::F32.roundtrip_tol(),
+                "grid_ndims={grid_ndims} {method:?}/{exec:?}: f32 err {}",
+                rep32.max_err
+            );
+            let rep64 = run_config(&base, grid_ndims);
+            assert_eq!(
+                rep32.bytes * 2,
+                rep64.bytes,
+                "grid_ndims={grid_ndims} {method:?}/{exec:?}: f32 bytes not half of f64"
+            );
+        }
+    }
+}

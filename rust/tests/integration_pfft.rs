@@ -69,8 +69,8 @@ fn check_c2c(global: &[usize], grid_ndims: usize, nprocs: usize, method: RedistM
     let global = global.to_vec();
     World::run(nprocs, move |comm| {
         let dims = a2wfft::simmpi::dims_create(comm.size(), grid_ndims);
-        let mut plan = PfftPlan::with_dims(&comm, &global, &dims, Kind::C2c, method);
-        let mut eng = NativeFft::new();
+        let mut plan = PfftPlan::<f64>::with_dims(&comm, &global, &dims, Kind::C2c, method);
+        let mut eng = NativeFft::<f64>::new();
         let input = fill_local(&global, &plan.input_window());
         let mut output = vec![Complex64::ZERO; plan.output_len()];
         plan.forward(&mut eng, &input, &mut output);
@@ -156,10 +156,10 @@ fn methods_agree_bitwise() {
     // The two redistribution methods must give *identical* spectra.
     let global = vec![8usize, 12, 10];
     let outs = World::run(6, |comm| {
-        let mut eng = NativeFft::new();
+        let mut eng = NativeFft::<f64>::new();
         let mut res = Vec::new();
         for method in [RedistMethod::Alltoallw, RedistMethod::Traditional] {
-            let mut plan = PfftPlan::with_dims(&comm, &global, &[3, 2], Kind::C2c, method);
+            let mut plan = PfftPlan::<f64>::with_dims(&comm, &global, &[3, 2], Kind::C2c, method);
             let input = fill_local(&global, &plan.input_window());
             let mut output = vec![Complex64::ZERO; plan.output_len()];
             plan.forward(&mut eng, &input, &mut output);
@@ -179,8 +179,8 @@ fn methods_agree_bitwise() {
 fn r2c_pencil_matches_serial() {
     let global = vec![8usize, 6, 10];
     World::run(4, |comm| {
-        let mut plan = PfftPlan::with_dims(&comm, &global, &[2, 2], Kind::R2c, RedistMethod::Alltoallw);
-        let mut eng = NativeFft::new();
+        let mut plan = PfftPlan::<f64>::with_dims(&comm, &global, &[2, 2], Kind::R2c, RedistMethod::Alltoallw);
+        let mut eng = NativeFft::<f64>::new();
         // Real input: the real part of the test field.
         let win = plan.input_window();
         let input: Vec<f64> = fill_local(&global, &win).iter().map(|c| c.re).collect();
@@ -220,8 +220,8 @@ fn r2c_pencil_matches_serial() {
 fn r2c_slab_odd_last_axis() {
     let global = vec![6usize, 4, 9];
     World::run(3, |comm| {
-        let mut plan = PfftPlan::with_dims(&comm, &global, &[3], Kind::R2c, RedistMethod::Alltoallw);
-        let mut eng = NativeFft::new();
+        let mut plan = PfftPlan::<f64>::with_dims(&comm, &global, &[3], Kind::R2c, RedistMethod::Alltoallw);
+        let mut eng = NativeFft::<f64>::new();
         let win = plan.input_window();
         let input: Vec<f64> = fill_local(&global, &win).iter().map(|c| c.re).collect();
         let mut output = vec![Complex64::ZERO; plan.output_len()];
@@ -237,8 +237,8 @@ fn r2c_slab_odd_last_axis() {
 fn linearity_of_distributed_transform() {
     let global = vec![8usize, 8, 6];
     World::run(4, |comm| {
-        let mut plan = PfftPlan::with_dims(&comm, &global, &[2, 2], Kind::C2c, RedistMethod::Alltoallw);
-        let mut eng = NativeFft::new();
+        let mut plan = PfftPlan::<f64>::with_dims(&comm, &global, &[2, 2], Kind::C2c, RedistMethod::Alltoallw);
+        let mut eng = NativeFft::<f64>::new();
         let x = fill_local(&global, &plan.input_window());
         let y: Vec<Complex64> = x.iter().map(|c| c.mul_i() + Complex64::new(0.5, 0.0)).collect();
         let mut fx = vec![Complex64::ZERO; plan.output_len()];

@@ -20,11 +20,11 @@ fn distributed_c2c_xla_vs_native() {
     let global = vec![16usize, 32, 16];
     World::run(2, |comm| {
         let mut plan =
-            PfftPlan::with_dims(&comm, &global, &[2], Kind::C2c, RedistMethod::Alltoallw);
+            PfftPlan::<f64>::with_dims(&comm, &global, &[2], Kind::C2c, RedistMethod::Alltoallw);
         let input: Vec<Complex64> = (0..plan.input_len())
             .map(|k| Complex64::new(((k * 5) % 11) as f64 / 11.0, ((k * 3) % 7) as f64 / 7.0))
             .collect();
-        let mut native = NativeFft::new();
+        let mut native = NativeFft::<f64>::new();
         let mut want = vec![Complex64::ZERO; plan.output_len()];
         plan.forward(&mut native, &input, &mut want);
         let mut xeng = XlaFftEngine::load(&artifacts_dir()).expect("artifacts");
@@ -49,7 +49,7 @@ fn distributed_r2c_on_xla_engine() {
     let global = vec![16usize, 16, 32];
     World::run(4, |comm| {
         let mut plan =
-            PfftPlan::with_dims(&comm, &global, &[2, 2], Kind::R2c, RedistMethod::Alltoallw);
+            PfftPlan::<f64>::with_dims(&comm, &global, &[2, 2], Kind::R2c, RedistMethod::Alltoallw);
         let mut xeng = XlaFftEngine::load(&artifacts_dir()).expect("artifacts");
         let input: Vec<f64> =
             (0..plan.input_len()).map(|k| ((k % 19) as f64 - 9.0) / 9.0).collect();

@@ -208,14 +208,14 @@ fn check_exec_modes_bitwise(global: &[usize], dims: &[usize], nprocs: usize, kin
     let global = global.to_vec();
     let dims = dims.to_vec();
     World::run(nprocs, move |comm| {
-        let mut eng = NativeFft::new();
+        let mut eng = NativeFft::<f64>::new();
         let mut spectra: Vec<Vec<Complex64>> = Vec::new();
         for exec in [
             ExecMode::Blocking,
             ExecMode::Pipelined { depth: 2 },
             ExecMode::Pipelined { depth: 4 },
         ] {
-            let mut plan = PfftPlan::with_exec(
+            let mut plan = PfftPlan::<f64>::with_exec(
                 &comm,
                 &global,
                 &dims,
@@ -275,7 +275,7 @@ fn pfft_pipelined_roundtrip_uneven() {
     // mode: must reproduce the input to fp accuracy (same as blocking).
     let global = vec![7usize, 9, 5];
     World::run(3, |comm| {
-        let mut plan = PfftPlan::with_exec(
+        let mut plan = PfftPlan::<f64>::with_exec(
             &comm,
             &global,
             &[3],
@@ -283,7 +283,7 @@ fn pfft_pipelined_roundtrip_uneven() {
             RedistMethod::Alltoallw,
             ExecMode::Pipelined { depth: 3 },
         );
-        let mut eng = NativeFft::new();
+        let mut eng = NativeFft::<f64>::new();
         let input: Vec<Complex64> = (0..plan.input_len())
             .map(|k| Complex64::new((k as f64 * 0.37).sin(), (k as f64 * 0.23).cos()))
             .collect();
