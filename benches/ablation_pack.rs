@@ -1,4 +1,4 @@
-//! Ablation: the datatype-engine copy paths. Three sections:
+//! Ablation: the datatype-engine copy paths. Four sections:
 //!
 //! 1. **pack throughput** — pack/unpack of subarray datatypes (the engine
 //!    work inside `alltoallw`) against a plain memcpy upper bound and a
@@ -9,24 +9,36 @@
 //!    redistribution) against the staged reference (pack into a contiguous
 //!    buffer, then unpack) and the memcpy ceiling, at paper-like pencil
 //!    shapes, reporting effective bandwidth on the payload bytes.
-//! 3. **wire bytes per dtype** — full distributed transforms at the same
+//! 3. **transport** — full multi-rank redistributions at the same
+//!    paper-like shapes: one-shot `alltoallw` (flatten + allocate per
+//!    message) vs the compiled persistent plan on the mailbox vs the
+//!    one-copy shared-window transport vs the per-rank memcpy floor. Rows
+//!    carry a `transport` field for `repro trend`, and at full size the
+//!    section **asserts** the one-copy path beats the mailbox plan.
+//! 4. **wire bytes per dtype** — full distributed transforms at the same
 //!    shape in `f64` and `f32`: the single-precision exchange must ship
 //!    exactly half the wire bytes (the alltoallw collective is wire-bound,
 //!    so this is the scale/speed headroom of `--dtype f32`).
 //!
 //! Pass `--tiny` (the CI smoke mode) to shrink every geometry so the whole
 //! binary finishes quickly, and `--dtype f32|f64` to pick the element size
-//! of the pack/fused sections; the wire section measures both precisions
-//! and therefore runs only in the default and `--dtype f64` invocations
-//! (an f32 run would just duplicate it). With an explicit `--dtype` the
-//! JSON artifact is suffixed (`BENCH_ablation_pack_f32.json`), so CI can
-//! upload one matrix per precision.
+//! of the pack/fused/transport sections; the wire section measures both
+//! precisions and therefore runs only in the default and `--dtype f64`
+//! invocations (an f32 run would just duplicate it). `--transport
+//! mailbox|window` selects the transport of the end-to-end wire section
+//! (the transport section always measures all of them). With an explicit
+//! `--dtype`/`--transport` the JSON artifact name is suffixed
+//! (`BENCH_ablation_pack_f32_window.json`), so CI can upload one matrix
+//! per (precision, transport) cell.
+
+use std::time::Instant;
 
 use a2wfft::coordinator::benchkit::{time_best, write_bench_json, JsonObj};
 use a2wfft::coordinator::{run_config, Dtype, RunConfig};
 use a2wfft::pfft::Kind;
-use a2wfft::redistribute::subarray_types;
+use a2wfft::redistribute::{subarray_types, RedistPlan};
 use a2wfft::simmpi::datatype::{Datatype, TransferPlan};
+use a2wfft::simmpi::{collective::ReduceOp, Comm, Transport, World};
 
 fn naive_pack(sizes: &[usize; 3], sub: &[usize; 3], start: &[usize; 3], src: &[u8], dst: &mut [u8]) {
     let mut o = 0;
@@ -175,12 +187,133 @@ fn fused_section(tiny: bool, dtype: Dtype, rows: &mut Vec<String>) -> Vec<String
     failures
 }
 
+/// Max-across-ranks seconds per iteration of `f`, best of 3 samples.
+fn timed_collective<F: FnMut()>(comm: &Comm, iters: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        comm.barrier();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        let mut t = [dt];
+        comm.allreduce_f64(&mut t, ReduceOp::Max);
+        best = best.min(t[0]);
+    }
+    best
+}
+
+/// Transport ladder at paper-like shapes: real multi-rank redistributions
+/// through (1) the one-shot `alltoallw` (datatypes rebuilt, per-message
+/// allocation), (2) the compiled persistent plan on the mailbox (cached
+/// flattenings, arena-recycled payload staging — still two copies per
+/// cross-rank byte), (3) the one-copy shared-window transport (sender's
+/// array → receiver's array, no staging at all), against (4) the per-rank
+/// memcpy floor (every payload byte touched exactly once, contiguously).
+/// Also asserts the two transports are bitwise identical, and — at full
+/// size — that one-copy beats the mailbox plan. Failures are returned so
+/// `main` reports them after the JSON artifact is safely written.
+fn transport_section(tiny: bool, rows: &mut Vec<String>) -> Vec<String> {
+    let mut failures = Vec::new();
+    println!("\n=== ablation: transport — oneshot vs mailbox plan vs window one-copy vs memcpy ===");
+    println!("shape\ttransport\tGB_per_s\tvs_mailbox_plan");
+    let iters = if tiny { 2 } else { 8 };
+    type Case = (&'static str, [usize; 3], usize, [usize; 3], usize, usize);
+    let shapes: &[Case] = if tiny {
+        &[("slab-16/p4-1to0", [4, 16, 8], 1, [16, 4, 8], 0, 4)]
+    } else {
+        &[
+            ("slab-128^3/p8-1to0", [16, 128, 128], 1, [128, 16, 128], 0, 8),
+            ("pencil-128^3/p8-2to1", [16, 16, 128], 2, [16, 128, 16], 1, 8),
+            ("pencil-256/p8-2to1", [8, 32, 256], 2, [8, 256, 32], 1, 8),
+        ]
+    };
+    for &(name, sizes_a, axis_a, sizes_b, axis_b, m) in shapes {
+        let outs = World::run(m, move |comm| {
+            let me = comm.rank();
+            let mailbox = RedistPlan::new(&comm, 8, &sizes_a, axis_a, &sizes_b, axis_b);
+            let window = RedistPlan::with_transport(
+                &comm,
+                8,
+                &sizes_a,
+                axis_a,
+                &sizes_b,
+                axis_b,
+                Transport::Window,
+            );
+            let a: Vec<f64> =
+                (0..mailbox.elems_a()).map(|k| (me * 100_000 + k) as f64).collect();
+            let mut b = vec![0.0f64; mailbox.elems_b()];
+            let mut b2 = vec![0.0f64; window.elems_b()];
+            mailbox.execute(&a, &mut b);
+            window.execute(&a, &mut b2);
+            assert_eq!(b, b2, "rank {me}: window transport diverged from mailbox");
+            let t_oneshot = timed_collective(&comm, iters, || {
+                a2wfft::redistribute::exchange(
+                    &comm, &a, &sizes_a, axis_a, &mut b, &sizes_b, axis_b,
+                );
+            });
+            let t_mail = timed_collective(&comm, iters, || mailbox.execute(&a, &mut b));
+            let t_win = timed_collective(&comm, iters, || window.execute(&a, &mut b));
+            // Floor: each rank touches its own payload once, contiguously.
+            // black_box keeps the idempotent repeated copies from being
+            // collapsed by the optimizer (which would inflate the floor).
+            let payload = mailbox.bytes_per_exchange();
+            let src = vec![3u8; payload];
+            let mut dstm = vec![0u8; payload];
+            let t_mem = timed_collective(&comm, iters, || {
+                dstm.copy_from_slice(std::hint::black_box(&src));
+                std::hint::black_box(&mut dstm);
+            });
+            let mut total = [payload as u64];
+            comm.allreduce_u64(&mut total, ReduceOp::Sum);
+            (t_oneshot, t_mail, t_win, t_mem, total[0])
+        });
+        let (t_oneshot, t_mail, t_win, t_mem, total_bytes) = outs[0];
+        let gbs = |t: f64| total_bytes as f64 / t / 1e9;
+        for (transport, t) in [
+            ("mailbox-oneshot", t_oneshot),
+            ("mailbox", t_mail),
+            ("window", t_win),
+            ("memcpy", t_mem),
+        ] {
+            println!("{name}\t{transport}\t{:.2}\t{:.2}x", gbs(t), t_mail / t);
+            rows.push(
+                JsonObj::new()
+                    .str("section", "transport")
+                    .str("shape", name)
+                    .str("transport", transport)
+                    .int("payload_bytes", total_bytes)
+                    .num("total_s", t)
+                    .num("gb_per_s", gbs(t))
+                    .num("vs_mailbox_plan", t_mail / t)
+                    .render(),
+            );
+        }
+        if !tiny && t_win >= t_mail {
+            // The acceptance gate of the one-copy transport: every
+            // cross-rank byte is touched once instead of packed, shipped
+            // and unpacked — at paper-like shapes that must win (skipped
+            // in the noisy tiny/CI mode, reported after the JSON is
+            // written).
+            failures.push(format!(
+                "{name}: window one-copy ({t_win:.3e}s) not faster than mailbox plan ({t_mail:.3e}s)"
+            ));
+        }
+    }
+    failures
+}
+
 /// Wire-byte matrix: the same distributed transform at both precisions,
 /// paper-like slab and pencil shapes. Asserts the f32 exchange ships
 /// exactly half the f64 wire bytes — the collective is wire-bound, so this
 /// is the headroom `--dtype f32` buys.
-fn wire_section(tiny: bool, rows: &mut Vec<String>) {
-    println!("\n=== ablation: wire bytes per dtype (same shape, f32 vs f64) ===");
+fn wire_section(tiny: bool, transport: Transport, rows: &mut Vec<String>) {
+    println!(
+        "\n=== ablation: wire bytes per dtype (same shape, f32 vs f64, {} transport) ===",
+        transport.name()
+    );
     println!("shape\tgrid\tdtype\twire_bytes\ttotal_s\tvs_f64_bytes");
     let cases: Vec<(&str, Vec<usize>, usize, usize)> = if tiny {
         vec![("slab-16x12x10/p4", vec![16, 12, 10], 4, 1)]
@@ -198,6 +331,7 @@ fn wire_section(tiny: bool, rows: &mut Vec<String>) {
                 ranks,
                 kind: Kind::R2c,
                 dtype,
+                transport,
                 inner: 1,
                 outer: if tiny { 1 } else { 2 },
                 ..Default::default()
@@ -230,8 +364,10 @@ fn wire_section(tiny: bool, rows: &mut Vec<String>) {
                     .str("section", "wire")
                     .str("shape", name)
                     .str("dtype", dtype.name())
+                    .str("transport", transport.name())
                     .int("ranks", ranks as u64)
                     .int("bytes", rep.bytes)
+                    .int("one_copy_bytes", rep.one_copy_bytes)
                     .num("total_s", rep.total)
                     .num("max_err", rep.max_err)
                     .render(),
@@ -241,36 +377,53 @@ fn wire_section(tiny: bool, rows: &mut Vec<String>) {
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().collect();
-    let tiny = args.iter().any(|a| a == "--tiny");
-    // Optional --dtype f32|f64 (or --dtype=f32): element size of the
-    // pack/fused sections, and a suffix for the JSON artifact so CI can
-    // upload one matrix per precision. The wire section always runs both.
+    // Shared dependency-free flag parsing (`--key value` / `--key=value`).
+    let args = a2wfft::cli::Args::parse(std::env::args().skip(1), &["tiny"]);
+    let tiny = args.has_flag("tiny");
+    // Optional --dtype f32|f64: element size of the pack/fused sections;
+    // --transport mailbox|window: transport of the end-to-end wire
+    // section. Explicit values suffix the JSON artifact name so CI can
+    // upload one matrix per (precision, transport) cell. The wire section
+    // always measures both precisions, the transport section always
+    // measures every transport.
     let dtype_arg: Option<Dtype> = args
-        .iter()
-        .position(|a| a == "--dtype")
-        .map(|i| {
-            args.get(i + 1)
-                .map(|s| s.as_str())
-                .unwrap_or_else(|| panic!("--dtype: missing value (f32|f64)"))
-        })
-        .or_else(|| args.iter().find_map(|a| a.strip_prefix("--dtype=")))
+        .get("dtype")
         .map(|s| Dtype::parse(s).unwrap_or_else(|| panic!("--dtype: unknown {s} (f32|f64)")));
     let dtype = dtype_arg.unwrap_or(Dtype::F64);
-    let bench_name = match dtype_arg {
-        None => "ablation_pack".to_string(),
-        Some(d) => format!("ablation_pack_{}", d.name()),
-    };
+    let transport_arg: Option<Transport> = args.get("transport").map(|s| {
+        Transport::parse(s).unwrap_or_else(|| panic!("--transport: unknown {s} (mailbox|window)"))
+    });
+    let transport = transport_arg.unwrap_or(Transport::Mailbox);
+    let mut bench_name = "ablation_pack".to_string();
+    if let Some(d) = dtype_arg {
+        bench_name.push('_');
+        bench_name.push_str(d.name());
+    }
+    if let Some(t) = transport_arg {
+        bench_name.push('_');
+        bench_name.push_str(t.name());
+    }
     let mut rows = Vec::new();
     pack_section(tiny, dtype, &mut rows);
-    let failures = fused_section(tiny, dtype, &mut rows);
-    // The wire section always measures *both* precisions, so running it
-    // from the f32 invocation too would just duplicate the slowest part of
-    // the bench into a second artifact; the default and f64 runs carry it.
-    if dtype != Dtype::F32 {
-        wire_section(tiny, &mut rows);
+    let mut failures = fused_section(tiny, dtype, &mut rows);
+    // Dedup across the CI matrix: the transport section always measures
+    // every transport, so only the default/mailbox invocation carries it
+    // (the window cell would emit identical rows under a second bench
+    // name); the wire section measures both precisions, so the f32
+    // invocation skips it and the transport section alike.
+    if dtype != Dtype::F32 && transport != Transport::Window {
+        failures.extend(transport_section(tiny, &mut rows));
     } else {
-        println!("\n(wire section skipped for --dtype f32: the f64 artifact carries both precisions)");
+        println!(
+            "\n(transport section skipped: the f64/mailbox artifact carries the full ladder)"
+        );
+    }
+    if dtype != Dtype::F32 {
+        wire_section(tiny, transport, &mut rows);
+    } else {
+        println!(
+            "(wire section skipped for --dtype f32: the f64 artifact carries both precisions)"
+        );
     }
     match write_bench_json(&bench_name, &rows) {
         Ok(path) => println!("\nwrote {}", path.display()),

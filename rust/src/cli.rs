@@ -18,6 +18,13 @@
 //! * `--overlap-depth K` — chunk count and in-flight window of the
 //!   pipelined mode (default 4). `K = 1`, or a mesh with no free axis to
 //!   chunk (2-D arrays), falls back to blocking behaviour.
+//! * `--transport mailbox|window` — payload transport of the
+//!   redistribution collectives ([`crate::simmpi::Transport`]): `mailbox`
+//!   packs per-message buffers through per-rank mailboxes (the library-MPI
+//!   baseline, default); `window` is the one-copy shared-window engine —
+//!   cross-rank compiled [`crate::simmpi::TransferPlan`]s copy sender's
+//!   array straight into the receiver's, with zero intermediate buffers
+//!   and no mailbox traffic on the payload path.
 //! * `--json` — print the run result as one machine-readable JSON object
 //!   (same row shape as the `BENCH_*.json` files the benches emit; see
 //!   [`crate::coordinator::benchkit::report_json`]).

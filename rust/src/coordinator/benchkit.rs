@@ -85,6 +85,7 @@ pub fn real_row_full(
         dtype,
         inner: 2,
         outer: 3,
+        ..Default::default()
     };
     let rep = run_config(&cfg, grid_ndims);
     // Overlapped stages report in their own buckets; fold them into the
@@ -200,13 +201,15 @@ pub fn json_usize_array(xs: &[usize]) -> String {
 }
 
 /// One machine-readable result row: label, configuration, dtype, per-stage
-/// timings, wire bytes and the engine's fused-vs-staged copy attribution.
+/// timings, payload bytes and the engine's fused / one-copy / staged copy
+/// attribution.
 pub fn report_json(label: &str, global: &[usize], ranks: usize, rep: &RunReport) -> String {
     JsonObj::new()
         .str("label", label)
         .raw("global", json_usize_array(global))
         .int("ranks", ranks as u64)
         .str("dtype", rep.dtype)
+        .str("transport", rep.transport)
         .num("total_s", rep.total)
         .num("fft_s", rep.fft)
         .num("redist_s", rep.redist)
@@ -214,6 +217,7 @@ pub fn report_json(label: &str, global: &[usize], ranks: usize, rep: &RunReport)
         .num("overlap_comm_s", rep.overlap_comm)
         .int("bytes", rep.bytes)
         .int("fused_copy_bytes", rep.fused_bytes)
+        .int("one_copy_bytes", rep.one_copy_bytes)
         .int("staged_pack_unpack_bytes", rep.staged_bytes)
         .num("throughput_pts_per_s", rep.throughput(global))
         .num("max_err", rep.max_err)

@@ -2,6 +2,7 @@
 
 use crate::fft::Real;
 use crate::pfft::{ExecMode, Kind, RedistMethod};
+use crate::simmpi::Transport;
 
 /// Which serial FFT engine the ranks use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -93,6 +94,9 @@ pub struct RunConfig {
     pub method: RedistMethod,
     /// Redistribution execution mode (blocking vs pipelined overlap).
     pub exec: ExecMode,
+    /// Payload transport of the redistribution collectives (mailbox
+    /// pack/send/unpack vs the one-copy shared-window engine).
+    pub transport: Transport,
     /// Serial engine.
     pub engine: EngineKind,
     /// Element precision (the driver monomorphizes over this).
@@ -112,6 +116,7 @@ impl Default for RunConfig {
             kind: Kind::R2c,
             method: RedistMethod::Alltoallw,
             exec: ExecMode::Blocking,
+            transport: Transport::Mailbox,
             engine: EngineKind::Native,
             dtype: Dtype::F64,
             inner: 3,

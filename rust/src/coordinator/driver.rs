@@ -29,12 +29,16 @@ pub struct RunReport {
     pub overlap_fft: f64,
     /// Exposed communication of pipelined stages.
     pub overlap_comm: f64,
-    /// Bytes exchanged per pair (summed over ranks).
+    /// Bytes exchanged per pair (summed over ranks; mailbox payloads plus
+    /// one-copy window transfers, so totals are transport-comparable).
     pub bytes: u64,
-    /// Datatype-engine bytes per pair moved by fused transfer-plan copies
-    /// (summed over ranks; approximate when other worlds run concurrently —
-    /// the engine counters are process-global).
+    /// Datatype-engine bytes per pair moved by fused intra-rank
+    /// transfer-plan copies (summed over ranks; approximate when other
+    /// worlds run concurrently — the engine counters are process-global).
     pub fused_bytes: u64,
+    /// Datatype-engine bytes per pair moved by cross-rank one-copy window
+    /// transfers (sender's array → receiver's array, no staging).
+    pub one_copy_bytes: u64,
     /// Datatype-engine bytes per pair moved through staged pack/unpack.
     pub staged_bytes: u64,
     /// Max roundtrip error observed (input vs forward+backward output),
@@ -42,6 +46,9 @@ pub struct RunReport {
     pub max_err: f64,
     /// Dtype name of the run (`"f32"`/`"f64"`), for labels and JSON rows.
     pub dtype: &'static str,
+    /// Transport name of the run (`"mailbox"`/`"window"`), for labels and
+    /// JSON rows (part of the trend group identity, like dtype).
+    pub transport: &'static str,
 }
 
 impl RunReport {
@@ -79,8 +86,15 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
     let grid = cfg.resolved_grid(grid_ndims);
     let engine_stats0 = crate::simmpi::datatype::stats::snapshot();
     let reports = World::run(cfg.ranks, |comm| {
-        let mut plan =
-            PfftPlan::<T>::with_exec(&comm, &cfg.global, &grid, cfg.kind, cfg.method, cfg.exec);
+        let mut plan = PfftPlan::<T>::with_transport(
+            &comm,
+            &cfg.global,
+            &grid,
+            cfg.kind,
+            cfg.method,
+            cfg.exec,
+            cfg.transport,
+        );
         let mut engine = make_engine::<T>(cfg.engine);
         // Deterministic input.
         let ilen = plan.input_len();
@@ -89,7 +103,9 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         let mut best = f64::INFINITY;
         let mut best_timers = Default::default();
         let max_err;
-        let bytes0 = comm.world_bytes_sent();
+        // Payload accounting across both transports: mailbox sends plus
+        // one-copy window transfers (never both for the same byte).
+        let bytes0 = comm.world_bytes_sent() + comm.world_window_bytes();
         match cfg.kind {
             Kind::C2c => {
                 let input: Vec<Complex<T>> = (0..ilen)
@@ -145,7 +161,7 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
                     .fold(0.0, f64::max);
             }
         }
-        let bytes = comm.world_bytes_sent() - bytes0;
+        let bytes = comm.world_bytes_sent() + comm.world_window_bytes() - bytes0;
         let scale = 1.0 / (cfg.inner * cfg.outer) as f64;
         let m = RankMetrics {
             total: best,
@@ -174,9 +190,11 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         overlap_comm: m.overlap_comm,
         bytes: m.bytes,
         fused_bytes: (es.fused_bytes as f64 * pair_scale) as u64,
+        one_copy_bytes: (es.one_copy_bytes as f64 * pair_scale) as u64,
         staged_bytes: ((es.packed_bytes + es.unpacked_bytes) as f64 * pair_scale) as u64,
         max_err: err,
         dtype: T::NAME,
+        transport: cfg.transport.name(),
     }
 }
 
@@ -200,6 +218,7 @@ mod tests {
         assert!(rep.bytes > 0);
         assert!(rep.throughput(&cfg.global) > 0.0);
         assert_eq!(rep.dtype, "f64");
+        assert_eq!(rep.transport, "mailbox");
     }
 
     #[test]
@@ -233,6 +252,36 @@ mod tests {
         assert!(rep.max_err < 1e-10, "pipelined roundtrip err {}", rep.max_err);
         // Overlapped stages report their time in the overlap buckets.
         assert!(rep.overlap_fft + rep.overlap_comm > 0.0);
+    }
+
+    #[test]
+    fn driver_window_transport_matches_mailbox_bytes() {
+        use crate::simmpi::Transport;
+        // Same configuration over both transports: identical roundtrip
+        // quality and *byte-identical* payload totals (one-copy transfers
+        // are counted like wire payloads), with the window run moving its
+        // cross-rank bytes through the one-copy counter.
+        for exec in [crate::pfft::ExecMode::Blocking, crate::pfft::ExecMode::Pipelined { depth: 3 }]
+        {
+            let base = RunConfig {
+                global: vec![16, 12, 10],
+                ranks: 4,
+                kind: Kind::R2c,
+                exec,
+                inner: 1,
+                outer: 1,
+                ..Default::default()
+            };
+            let mail = run_config(&base, 2);
+            let win = run_config(&RunConfig { transport: Transport::Window, ..base.clone() }, 2);
+            assert!(win.max_err < 1e-10, "{exec:?}: window roundtrip err {}", win.max_err);
+            assert_eq!(win.transport, "window");
+            assert_eq!(
+                mail.bytes, win.bytes,
+                "{exec:?}: transports must account identical payload bytes"
+            );
+            assert!(win.one_copy_bytes > 0, "{exec:?}: window run moved no one-copy bytes");
+        }
     }
 
     #[test]

@@ -21,3 +21,5 @@ pub mod trend;
 pub use config::{Dtype, EngineKind, RunConfig};
 pub use driver::{run_config, run_config_typed, RunReport};
 pub use metrics::RankMetrics;
+
+pub use crate::simmpi::Transport;

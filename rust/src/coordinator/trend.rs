@@ -238,10 +238,16 @@ pub struct TrendRow {
     pub mean_bytes: Option<f64>,
     /// Mean fused-copy bytes (rows carrying `fused_copy_bytes`).
     pub mean_fused_bytes: Option<f64>,
+    /// Mean one-copy (window-transport) bytes (rows carrying
+    /// `one_copy_bytes`).
+    pub mean_one_copy_bytes: Option<f64>,
     /// Mean staged pack/unpack bytes.
     pub mean_staged_bytes: Option<f64>,
     /// Dtype of the rows, when uniform across the group.
     pub dtype: Option<String>,
+    /// Transport of the rows (`"mailbox"`/`"window"`), when the rows carry
+    /// a `transport` field — part of the group identity, like dtype.
+    pub transport: Option<String>,
 }
 
 fn mean(values: &[f64]) -> Option<f64> {
@@ -264,21 +270,24 @@ fn row_key(row: &JsonValue) -> String {
 
 /// Aggregate the rows of parsed bench documents into trend groups.
 ///
-/// The group identity is `(bench, key, dtype)`: rows of the same label at
-/// different precisions must *not* pool (a mixed-precision mean of wire
-/// bytes tracks neither dtype), so a bench emitting f32 and f64 rows for
-/// the same shape yields two trend groups.
+/// The group identity is `(bench, key, dtype, transport)`: rows of the
+/// same label at different precisions or payload transports must *not*
+/// pool (a mixed mean of wire bytes or times tracks neither variant), so
+/// a bench emitting f32/f64 or mailbox/window rows for the same shape
+/// yields one trend group per variant.
 pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
-    // (bench, key, dtype) -> collected numeric samples.
+    // (bench, key, dtype, transport) -> collected numeric samples.
     #[derive(Default)]
     struct Acc {
         count: u64,
         total_s: Vec<f64>,
         bytes: Vec<f64>,
         fused: Vec<f64>,
+        one_copy: Vec<f64>,
         staged: Vec<f64>,
     }
-    let mut groups: BTreeMap<(String, String, Option<String>), Acc> = BTreeMap::new();
+    type GroupKey = (String, String, Option<String>, Option<String>);
+    let mut groups: BTreeMap<GroupKey, Acc> = BTreeMap::new();
     for (fallback_name, doc) in docs {
         let bench = doc
             .get("bench")
@@ -292,7 +301,8 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
         };
         for row in rows {
             let dtype = row.get("dtype").and_then(|v| v.as_str()).map(str::to_string);
-            let acc = groups.entry((bench.clone(), row_key(row), dtype)).or_default();
+            let transport = row.get("transport").and_then(|v| v.as_str()).map(str::to_string);
+            let acc = groups.entry((bench.clone(), row_key(row), dtype, transport)).or_default();
             acc.count += 1;
             let mut push = |field: &str, into: &mut Vec<f64>| {
                 if let Some(x) = row.get(field).and_then(|v| v.as_num()) {
@@ -302,20 +312,23 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
             push("total_s", &mut acc.total_s);
             push("bytes", &mut acc.bytes);
             push("fused_copy_bytes", &mut acc.fused);
+            push("one_copy_bytes", &mut acc.one_copy);
             push("staged_pack_unpack_bytes", &mut acc.staged);
         }
     }
     groups
         .into_iter()
-        .map(|((bench, key, dtype), acc)| TrendRow {
+        .map(|((bench, key, dtype, transport), acc)| TrendRow {
             bench,
             key,
             count: acc.count,
             mean_total_s: mean(&acc.total_s),
             mean_bytes: mean(&acc.bytes),
             mean_fused_bytes: mean(&acc.fused),
+            mean_one_copy_bytes: mean(&acc.one_copy),
             mean_staged_bytes: mean(&acc.staged),
             dtype,
+            transport,
         })
         .collect()
 }
@@ -369,17 +382,21 @@ pub fn run_trend(dir: &Path) -> Result<usize, String> {
     }
     let rows = aggregate(&docs);
     println!("# trend over {} artifact file(s) in {}", files.len(), dir.display());
-    println!("bench\tgroup\tdtype\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_staged_bytes");
+    println!(
+        "bench\tgroup\tdtype\ttransport\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_one_copy_bytes\tmean_staged_bytes"
+    );
     for r in &rows {
         println!(
-            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
             r.bench,
             r.key,
             r.dtype.as_deref().unwrap_or("-"),
+            r.transport.as_deref().unwrap_or("-"),
             r.count,
             fmt_opt(r.mean_total_s),
             fmt_opt(r.mean_bytes),
             fmt_opt(r.mean_fused_bytes),
+            fmt_opt(r.mean_one_copy_bytes),
             fmt_opt(r.mean_staged_bytes),
         );
     }
@@ -394,9 +411,13 @@ pub fn run_trend(dir: &Path) -> Result<usize, String> {
             if let Some(d) = &r.dtype {
                 obj = obj.str("dtype", d);
             }
+            if let Some(t) = &r.transport {
+                obj = obj.str("transport", t);
+            }
             obj.num("mean_total_s", r.mean_total_s.unwrap_or(f64::NAN))
                 .num("mean_bytes", r.mean_bytes.unwrap_or(f64::NAN))
                 .num("mean_fused_bytes", r.mean_fused_bytes.unwrap_or(f64::NAN))
+                .num("mean_one_copy_bytes", r.mean_one_copy_bytes.unwrap_or(f64::NAN))
                 .num("mean_staged_bytes", r.mean_staged_bytes.unwrap_or(f64::NAN))
                 .render()
         })
@@ -512,6 +533,29 @@ mod tests {
         assert_eq!(b.count, 1);
         assert_eq!(b.mean_bytes, None);
         assert_eq!(b.dtype, None);
+    }
+
+    #[test]
+    fn transport_is_part_of_group_identity() {
+        // Mailbox and window rows of the same label must not pool: the
+        // whole point of the transport ablation is comparing their means.
+        let d = doc(
+            "transport",
+            &[
+                r#"{"shape": "s", "total_s": 4.0, "transport": "mailbox"}"#,
+                r#"{"shape": "s", "total_s": 2.0, "transport": "window", "one_copy_bytes": 64}"#,
+                r#"{"shape": "s", "total_s": 6.0, "transport": "mailbox"}"#,
+            ],
+        );
+        let rows = aggregate(&[d]);
+        assert_eq!(rows.len(), 2);
+        let mail = rows.iter().find(|r| r.transport.as_deref() == Some("mailbox")).unwrap();
+        assert_eq!(mail.count, 2);
+        assert_eq!(mail.mean_total_s, Some(5.0));
+        assert_eq!(mail.mean_one_copy_bytes, None);
+        let win = rows.iter().find(|r| r.transport.as_deref() == Some("window")).unwrap();
+        assert_eq!(win.count, 1);
+        assert_eq!(win.mean_one_copy_bytes, Some(64.0));
     }
 
     #[test]

@@ -26,7 +26,13 @@
 //!   ([`simmpi::TransferPlan`]): intra-rank bytes copy `src -> dst` with no
 //!   intermediate buffer, wire staging recycles through arenas, and
 //!   steady-state plan executions perform zero heap allocations (see
-//!   `EXPERIMENTS.md`). This stands in for MPICH on the
+//!   `EXPERIMENTS.md`). [`simmpi::window`] adds the MPI-3 RMA layer
+//!   (shared [`simmpi::Window`]s with fence / post-start-complete-wait
+//!   epochs) and the **one-copy** [`simmpi::Transport::Window`] payload
+//!   transport: cross-rank compiled transfer plans copy sender's array →
+//!   receiver's array directly — zero staging, zero per-message
+//!   allocation, no mailbox traffic on the payload path, bitwise
+//!   identical to the mailbox default. This stands in for MPICH on the
 //!   paper's Cray XC40 (see `DESIGN.md` §3 for the substitution argument).
 //! * [`decomp`] — Alg. 1: balanced block-contiguous decompositions, and
 //!   local-shape computation for arbitrary alignments/grids.

@@ -4,7 +4,7 @@
 //!
 //! * `repro run [--global 64,64,64] [--ranks 4] [--grid 2,2] [--kind r2c|c2c]`
 //!   `[--method alltoallw|traditional] [--engine native|xla] [--dtype f32|f64]`
-//!   `[--inner 3] [--outer 5]`
+//!   `[--transport mailbox|window] [--inner 3] [--outer 5]`
 //!   — execute a distributed transform on the simulated world and print the
 //!   timing breakdown (the paper's measurement protocol).
 //! * `repro figure <6..11>` — print the netmodel reproduction of a paper
@@ -16,7 +16,7 @@
 //! * `repro info` — artifact and configuration summary.
 
 use a2wfft::cli::Args;
-use a2wfft::coordinator::{run_config, trend, Dtype, EngineKind, RunConfig};
+use a2wfft::coordinator::{run_config, trend, Dtype, EngineKind, RunConfig, Transport};
 use a2wfft::netmodel::figures;
 use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
 
@@ -28,7 +28,7 @@ fn main() {
         "run" => cmd_run(&args),
         "figure" => cmd_figure(&args),
         "trend" => cmd_trend(&args),
-        "selftest" => cmd_selftest(),
+        "selftest" => cmd_selftest(&args),
         "info" => cmd_info(),
         _ => print_help(),
     }
@@ -42,10 +42,10 @@ fn print_help() {
          \x20 repro run [--global N,N,N] [--ranks R] [--grid G,G] [--kind r2c|c2c]\n\
          \x20           [--method alltoallw|traditional] [--engine native|xla]\n\
          \x20           [--dtype f32|f64] [--exec blocking|pipelined] [--overlap-depth K]\n\
-         \x20           [--inner I] [--outer O] [--json]\n\
+         \x20           [--transport mailbox|window] [--inner I] [--outer O] [--json]\n\
          \x20 repro figure <6|7|8|9|10|11>\n\
          \x20 repro trend [--dir DIR]\n\
-         \x20 repro selftest\n\
+         \x20 repro selftest [--transport mailbox|window]\n\
          \x20 repro info\n\
          \n\
          PRECISION (--dtype):\n\
@@ -62,6 +62,15 @@ fn print_help() {
          \x20            serial FFT of received chunks with in-flight communication\n\
          \x20            (requires --method alltoallw; default depth 4; depth 1 or a\n\
          \x20            2-D mesh falls back to blocking)\n\
+         \n\
+         TRANSPORT (--transport):\n\
+         \x20 mailbox    payload bytes pack into per-message buffers and travel\n\
+         \x20            through per-rank mailboxes (library-MPI baseline; default)\n\
+         \x20 window     one-copy shared-window transport: cross-rank compiled\n\
+         \x20            TransferPlans copy sender's array -> receiver's array\n\
+         \x20            directly (MPI-3 shared windows), zero intermediate\n\
+         \x20            buffers, zero per-message allocation, no mailbox traffic\n\
+         \x20            on the payload path (requires --method alltoallw)\n\
          \n\
          OUTPUT:\n\
          \x20 --json     print the run result as one machine-readable JSON object\n\
@@ -110,6 +119,14 @@ fn cmd_run(args: &Args) {
         "pipelined" | "pipeline" | "overlap" => ExecMode::Pipelined { depth },
         other => panic!("--exec: unknown {other} (blocking|pipelined)"),
     };
+    let transport = match args.get("transport") {
+        None => Transport::Mailbox,
+        Some(s) => Transport::parse(s)
+            .unwrap_or_else(|| panic!("--transport: unknown {s} (mailbox|window)")),
+    };
+    if transport == Transport::Window && method != RedistMethod::Alltoallw {
+        panic!("--transport window requires --method alltoallw (the traditional baseline's contiguous alltoallv stays on the mailbox)");
+    }
     let cfg = RunConfig {
         global: global.clone(),
         grid,
@@ -117,6 +134,7 @@ fn cmd_run(args: &Args) {
         kind,
         method,
         exec,
+        transport,
         engine,
         dtype,
         inner: args.get_usize("inner", 3),
@@ -125,26 +143,28 @@ fn cmd_run(args: &Args) {
     let rep = run_config(&cfg, grid_ndims);
     if args.has_flag("json") {
         let label = format!(
-            "run/{:?}/{:?}/{:?}/{}/{}",
+            "run/{:?}/{:?}/{:?}/{}/{}/{}",
             kind,
             method,
             exec,
             engine.name(),
-            dtype.name()
+            dtype.name(),
+            transport.name()
         );
         println!("{}", a2wfft::coordinator::benchkit::report_json(&label, &global, ranks, &rep));
         return;
     }
     println!(
-        "# global={global:?} ranks={ranks} kind={kind:?} method={method:?} exec={exec:?} engine={} dtype={}",
+        "# global={global:?} ranks={ranks} kind={kind:?} method={method:?} exec={exec:?} engine={} dtype={} transport={}",
         engine.name(),
-        dtype.name()
+        dtype.name(),
+        transport.name()
     );
     println!(
-        "total_s\tfft_s\tredist_s\toverlap_fft_s\toverlap_comm_s\tbytes\tfused_bytes\tstaged_bytes\tthroughput_pts_per_s\tmax_err"
+        "total_s\tfft_s\tredist_s\toverlap_fft_s\toverlap_comm_s\tbytes\tfused_bytes\tone_copy_bytes\tstaged_bytes\tthroughput_pts_per_s\tmax_err"
     );
     println!(
-        "{:.6}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{}\t{}\t{:.3e}\t{:.3e}",
+        "{:.6}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{}\t{}\t{}\t{:.3e}\t{:.3e}",
         rep.total,
         rep.fft,
         rep.redist,
@@ -152,6 +172,7 @@ fn cmd_run(args: &Args) {
         rep.overlap_comm,
         rep.bytes,
         rep.fused_bytes,
+        rep.one_copy_bytes,
         rep.staged_bytes,
         rep.throughput(&global),
         rep.max_err
@@ -191,7 +212,15 @@ fn cmd_trend(args: &Args) {
     }
 }
 
-fn cmd_selftest() {
+fn cmd_selftest(args: &Args) {
+    // `--transport mailbox|window` restricts the matrix to one transport
+    // (the CI matrix job runs one invocation per transport); the default
+    // sweeps both for every case.
+    let transports: Vec<Transport> = match args.get("transport") {
+        None => vec![Transport::Mailbox, Transport::Window],
+        Some(s) => vec![Transport::parse(s)
+            .unwrap_or_else(|| panic!("--transport: unknown {s} (mailbox|window)"))],
+    };
     let cases: Vec<(Vec<usize>, usize, usize, Kind, ExecMode, Dtype)> = vec![
         (vec![16, 12, 10], 4, 1, Kind::C2c, ExecMode::Blocking, Dtype::F64),
         (vec![16, 12, 10], 4, 2, Kind::R2c, ExecMode::Blocking, Dtype::F64),
@@ -206,29 +235,33 @@ fn cmd_selftest() {
     ];
     let mut ok = true;
     for (global, ranks, grid_ndims, kind, exec, dtype) in cases {
-        let cfg = RunConfig {
-            global: global.clone(),
-            ranks,
-            kind,
-            exec,
-            dtype,
-            inner: 1,
-            outer: 1,
-            ..Default::default()
-        };
-        let rep = run_config(&cfg, grid_ndims);
-        let tol = match dtype {
-            Dtype::F64 => 1e-9,
-            Dtype::F32 => dtype.roundtrip_tol(),
-        };
-        let pass = rep.max_err < tol;
-        ok &= pass;
-        println!(
-            "selftest global={global:?} ranks={ranks} grid_ndims={grid_ndims} kind={kind:?} exec={exec:?} dtype={}: err={:.2e} {}",
-            dtype.name(),
-            rep.max_err,
-            if pass { "OK" } else { "FAIL" }
-        );
+        for &transport in &transports {
+            let cfg = RunConfig {
+                global: global.clone(),
+                ranks,
+                kind,
+                exec,
+                transport,
+                dtype,
+                inner: 1,
+                outer: 1,
+                ..Default::default()
+            };
+            let rep = run_config(&cfg, grid_ndims);
+            let tol = match dtype {
+                Dtype::F64 => 1e-9,
+                Dtype::F32 => dtype.roundtrip_tol(),
+            };
+            let pass = rep.max_err < tol;
+            ok &= pass;
+            println!(
+                "selftest global={global:?} ranks={ranks} grid_ndims={grid_ndims} kind={kind:?} exec={exec:?} dtype={} transport={}: err={:.2e} {}",
+                dtype.name(),
+                transport.name(),
+                rep.max_err,
+                if pass { "OK" } else { "FAIL" }
+            );
+        }
     }
     if !ok {
         std::process::exit(1);

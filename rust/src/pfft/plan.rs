@@ -31,7 +31,7 @@ use crate::decomp::local_len;
 use crate::fft::{Complex, Direction, Real, SerialFft};
 use crate::redistribute::{PipelinedRedistPlan, RedistPlan, TraditionalPlan};
 use crate::simmpi::topology::{subcomms_with_dims, CartComm};
-use crate::simmpi::{dims_create, Comm, Pod};
+use crate::simmpi::{dims_create, Comm, Pod, Transport};
 
 /// Which global redistribution implementation a plan uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -164,6 +164,8 @@ pub struct PfftPlan<T = f64> {
     real_shape: Vec<usize>,
     /// How redistributions are executed (blocking vs pipelined).
     exec: ExecMode,
+    /// Which transport redistribution payloads move through.
+    transport: Transport,
     pub timers: StageTimers,
 }
 
@@ -199,6 +201,23 @@ impl<T: Real> PfftPlan<T> {
         kind: Kind,
         method: RedistMethod,
         exec: ExecMode,
+    ) -> PfftPlan<T> {
+        Self::with_transport(comm, global, dims, kind, method, exec, Transport::Mailbox)
+    }
+
+    /// [`PfftPlan::with_exec`] plus an explicit payload [`Transport`] for
+    /// every redistribution plan. [`Transport::Window`] (the one-copy
+    /// shared-window engine) requires [`RedistMethod::Alltoallw`] — the
+    /// traditional baseline's contiguous `alltoallv` stays on the mailbox,
+    /// as in the libraries it models.
+    pub fn with_transport(
+        comm: &Comm,
+        global: &[usize],
+        dims: &[usize],
+        kind: Kind,
+        method: RedistMethod,
+        exec: ExecMode,
+        transport: Transport,
     ) -> PfftPlan<T> {
         let d = global.len();
         let r = dims.len();
@@ -242,13 +261,20 @@ impl<T: Real> PfftPlan<T> {
                 "pfft: ExecMode::Pipelined requires RedistMethod::Alltoallw"
             );
         }
+        if transport == Transport::Window {
+            assert_eq!(
+                method,
+                RedistMethod::Alltoallw,
+                "pfft: Transport::Window requires RedistMethod::Alltoallw"
+            );
+        }
         let elem = std::mem::size_of::<Complex<T>>();
         let redists: Vec<RedistKind> = (0..r)
             .map(|t| {
                 let (a, b) = (&shapes[t + 1], &shapes[t]);
                 match (method, exec) {
                     (RedistMethod::Alltoallw, ExecMode::Pipelined { depth }) if depth > 1 => {
-                        RedistKind::Piped(PipelinedRedistPlan::new(
+                        RedistKind::Piped(PipelinedRedistPlan::with_transport(
                             &subs[t],
                             elem,
                             a,
@@ -257,11 +283,18 @@ impl<T: Real> PfftPlan<T> {
                             t,
                             depth,
                             depth,
+                            transport,
                         ))
                     }
-                    (RedistMethod::Alltoallw, _) => {
-                        RedistKind::New(RedistPlan::new(&subs[t], elem, a, t + 1, b, t))
-                    }
+                    (RedistMethod::Alltoallw, _) => RedistKind::New(RedistPlan::with_transport(
+                        &subs[t],
+                        elem,
+                        a,
+                        t + 1,
+                        b,
+                        t,
+                        transport,
+                    )),
                     (RedistMethod::Traditional, _) => {
                         RedistKind::Trad(TraditionalPlan::new(&subs[t], elem, a, t + 1, b, t))
                     }
@@ -285,6 +318,7 @@ impl<T: Real> PfftPlan<T> {
             bufs,
             real_shape,
             exec,
+            transport,
             timers: StageTimers::default(),
         }
     }
@@ -292,6 +326,11 @@ impl<T: Real> PfftPlan<T> {
     /// How this plan executes its redistributions.
     pub fn exec_mode(&self) -> ExecMode {
         self.exec
+    }
+
+    /// Which transport redistribution payloads move through.
+    pub fn transport(&self) -> Transport {
+        self.transport
     }
 
     /// Dtype name of this plan's precision (`"f32"`/`"f64"`).

@@ -14,7 +14,7 @@
 
 use crate::decomp::decompose;
 use crate::simmpi::datatype::Datatype;
-use crate::simmpi::{AlltoallwPlan, Comm, Pod};
+use crate::simmpi::{AlltoallwPlan, Comm, Pod, Transport};
 
 /// Alg. 2: subarray datatypes partitioning `axis` of a local array of shape
 /// `sizes` (element size `elem` bytes) into `nparts` balanced parts.
@@ -57,7 +57,8 @@ pub struct RedistPlan {
 impl RedistPlan {
     /// Build a plan for redistributing between a v-aligned local array of
     /// shape `sizes_a` and a w-aligned local array of shape `sizes_b`, over
-    /// process group `comm`, for elements of `elem` bytes.
+    /// process group `comm`, for elements of `elem` bytes, moving payloads
+    /// through the mailbox transport.
     ///
     /// Shape compatibility (same global array, axes v/w swap their
     /// distributed/local role, all other axes identical) is checked.
@@ -69,15 +70,34 @@ impl RedistPlan {
         sizes_b: &[usize],
         axis_b: usize,
     ) -> RedistPlan {
+        Self::with_transport(comm, elem, sizes_a, axis_a, sizes_b, axis_b, Transport::Mailbox)
+    }
+
+    /// [`RedistPlan::new`] with an explicit payload [`Transport`]: under
+    /// [`Transport::Window`] both directions compile cross-rank one-copy
+    /// transfer plans at build time (one collective metadata epoch each)
+    /// and every execute moves payload bytes once, sender's array →
+    /// receiver's array, with no staging and no mailbox traffic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_transport(
+        comm: &Comm,
+        elem: usize,
+        sizes_a: &[usize],
+        axis_a: usize,
+        sizes_b: &[usize],
+        axis_b: usize,
+        transport: Transport,
+    ) -> RedistPlan {
         validate_shapes(comm, sizes_a, axis_a, sizes_b, axis_b);
         let m = comm.size();
         let types_a = subarray_types(sizes_a, axis_a, m, elem);
         let types_b = subarray_types(sizes_b, axis_b, m, elem);
         // Compile both directions once: the flattenings, the fused
-        // self-exchange and the staging arenas live in the persistent
-        // collective plans and are reused by every execute.
-        let fwd = comm.alltoallw_init(&types_a, &types_b);
-        let bwd = comm.alltoallw_init(&types_b, &types_a);
+        // self-exchange, the staging arenas and (window transport) the
+        // cross-rank pair plans live in the persistent collective plans
+        // and are reused by every execute.
+        let fwd = comm.alltoallw_init_with(&types_a, &types_b, transport);
+        let bwd = comm.alltoallw_init_with(&types_b, &types_a, transport);
         RedistPlan {
             comm: comm.clone(),
             sizes_a: sizes_a.to_vec(),
@@ -122,6 +142,11 @@ impl RedistPlan {
     /// The process group this plan redistributes over.
     pub fn comm(&self) -> &Comm {
         &self.comm
+    }
+
+    /// The payload transport this plan executes over.
+    pub fn transport(&self) -> Transport {
+        self.fwd.transport()
     }
 
     /// Total bytes this rank sends per execute (diagnostics/benchmarks).
@@ -302,6 +327,33 @@ mod tests {
             exchange(&comm, &a, &sizes_a, 1, &mut b, &sizes_b, 0);
             let want = fill_global(&global, &[(0, global[0]), (s1, n1), (0, global[2])]);
             assert_eq!(b, want, "rank {me}");
+        });
+    }
+
+    #[test]
+    fn window_transport_plan_matches_mailbox_bitwise() {
+        let global = [7usize, 9, 4];
+        World::run(3, |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let (n0, s0) = decompose(global[0], m, me);
+            let (n1, _) = decompose(global[1], m, me);
+            let sizes_a = [n0, global[1], global[2]];
+            let sizes_b = [global[0], n1, global[2]];
+            let mailbox = RedistPlan::new(&comm, 8, &sizes_a, 1, &sizes_b, 0);
+            let window = RedistPlan::with_transport(
+                &comm, 8, &sizes_a, 1, &sizes_b, 0, Transport::Window,
+            );
+            assert_eq!(window.transport(), Transport::Window);
+            let a = fill_global(&global, &[(s0, n0), (0, global[1]), (0, global[2])]);
+            let mut b_mail = vec![0.0f64; mailbox.elems_b()];
+            mailbox.execute(&a, &mut b_mail);
+            let mut b_win = vec![0.0f64; window.elems_b()];
+            window.execute(&a, &mut b_win);
+            assert_eq!(b_mail, b_win, "rank {me}: transports disagree");
+            let mut back = vec![0.0f64; window.elems_a()];
+            window.execute_back(&b_win, &mut back);
+            assert_eq!(a, back, "rank {me}: window roundtrip failed");
         });
     }
 

@@ -22,6 +22,14 @@
 //!   while completed chunks are consumed (or transformed — see
 //!   `ExecMode::Pipelined` in [`crate::pfft`]). Bitwise identical to the
 //!   one-shot exchange for every chunking.
+//!
+//! [`RedistPlan`] and [`PipelinedRedistPlan`] take a
+//! [`crate::simmpi::Transport`] (`with_transport` constructors): the
+//! mailbox default packs per-message buffers, while the one-copy window
+//! transport copies sender's array → receiver's array through cross-rank
+//! compiled transfer plans — bitwise identical, one copy per payload
+//! byte, no staging. The traditional baseline keeps the contiguous
+//! mailbox `alltoallv` of the libraries it models.
 
 pub mod exchange;
 pub mod pipeline;

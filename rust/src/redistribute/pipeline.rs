@@ -36,7 +36,7 @@ use std::collections::VecDeque;
 use crate::decomp::decompose;
 use crate::simmpi::datatype::{AlignedScratch, Datatype, TransferPlan};
 use crate::simmpi::nonblocking::{AlltoallwPlan, Request};
-use crate::simmpi::{as_bytes, as_bytes_mut, Comm, Pod};
+use crate::simmpi::{as_bytes, as_bytes_mut, Comm, Pod, Transport};
 
 use super::exchange::RedistPlan;
 
@@ -110,7 +110,8 @@ pub struct PipelinedRedistPlan {
 impl PipelinedRedistPlan {
     /// Build a pipelined plan. Arguments mirror [`RedistPlan::new`] plus
     /// the chunking knobs. The pipeline axis is chosen automatically: the
-    /// longest local axis not involved in the exchange.
+    /// longest local axis not involved in the exchange. Payloads move
+    /// through the mailbox transport.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         comm: &Comm,
@@ -121,6 +122,38 @@ impl PipelinedRedistPlan {
         axis_b: usize,
         chunks: usize,
         overlap_depth: usize,
+    ) -> PipelinedRedistPlan {
+        Self::with_transport(
+            comm,
+            elem,
+            sizes_a,
+            axis_a,
+            sizes_b,
+            axis_b,
+            chunks,
+            overlap_depth,
+            Transport::Mailbox,
+        )
+    }
+
+    /// [`PipelinedRedistPlan::new`] with an explicit payload [`Transport`]:
+    /// under [`Transport::Window`] every persistent sub-exchange compiles
+    /// cross-rank one-copy transfer plans at build time and the in-flight
+    /// window moves payload bytes sender's array → dense chunk buffer
+    /// directly — no staging, no per-message allocation, no mailbox
+    /// traffic. The FIFO drain order of the in-flight queue satisfies the
+    /// window epoch contract (same completion order on every rank).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_transport(
+        comm: &Comm,
+        elem: usize,
+        sizes_a: &[usize],
+        axis_a: usize,
+        sizes_b: &[usize],
+        axis_b: usize,
+        chunks: usize,
+        overlap_depth: usize,
+        transport: Transport,
     ) -> PipelinedRedistPlan {
         super::exchange::validate_shapes(comm, sizes_a, axis_a, sizes_b, axis_b);
         let d = sizes_a.len();
@@ -192,8 +225,8 @@ impl PipelinedRedistPlan {
                             .expect("pipeline: bwd recv datatype")
                     })
                     .collect();
-                let fwd = comm.alltoallw_init(&fwd_send, &fwd_recv);
-                let bwd = comm.alltoallw_init(&fwd_recv, &bwd_recv);
+                let fwd = comm.alltoallw_init_with(&fwd_send, &fwd_recv, transport);
+                let bwd = comm.alltoallw_init_with(&fwd_recv, &bwd_recv, transport);
                 // Compile the chunk gather/scatter copies once: a dense
                 // (contiguous) chunk buffer against the chunk's subarray
                 // window of the full local array.
@@ -231,7 +264,9 @@ impl PipelinedRedistPlan {
         let depth = overlap_depth.max(1);
         let (oneshot, fallback_stage) = if chunk_plans.is_empty() {
             (
-                Some(RedistPlan::new(comm, elem, sizes_a, axis_a, sizes_b, axis_b)),
+                Some(RedistPlan::with_transport(
+                    comm, elem, sizes_a, axis_a, sizes_b, axis_b, transport,
+                )),
                 AlignedScratch::new(sizes_b.iter().product::<usize>() * elem),
             )
         } else {
@@ -288,6 +323,14 @@ impl PipelinedRedistPlan {
         self.overlap_depth
     }
 
+    /// The payload transport the sub-exchanges execute over.
+    pub fn transport(&self) -> Transport {
+        match self.chunks.first() {
+            Some(c) => c.fwd.transport(),
+            None => self.fallback_plan().transport(),
+        }
+    }
+
     /// Arena effectiveness of the persistent sub-exchanges:
     /// `(reuses, fresh_allocs)` summed over every chunk plan, both
     /// directions (see [`AlltoallwPlan::arena_stats`]).
@@ -336,8 +379,10 @@ impl PipelinedRedistPlan {
         // while leaving `self` free to borrow field-wise in the loop).
         let mut inflight = std::mem::take(&mut self.inflight_fwd);
         debug_assert!(inflight.is_empty());
+        // start_any: `send` (the borrow of `a`) lives across this whole
+        // call and every request drains FIFO below — the exposure contract.
         for chunk in self.chunks.iter().take(depth) {
-            inflight.push_back(chunk.fwd.start(send));
+            inflight.push_back(chunk.fwd.start_any(send));
         }
         for c in 0..k {
             let req = inflight.pop_front().expect("pipeline: request queue underrun");
@@ -346,7 +391,7 @@ impl PipelinedRedistPlan {
             // Keep the window full before consuming the chunk, so the next
             // exchanges progress while we compute.
             if c + depth < k {
-                inflight.push_back(self.chunks[c + depth].fwd.start(send));
+                inflight.push_back(self.chunks[c + depth].fwd.start_any(send));
             }
             let chunk = &self.chunks[c];
             on_chunk(self.scratch_b[c].as_pod_mut::<T>(), &chunk.shape_b);
@@ -398,7 +443,10 @@ impl PipelinedRedistPlan {
             // Gather the dense chunk, let the caller transform it, post it.
             chunk.gather_b.execute(as_bytes(b), self.scratch_b[c].as_bytes_mut());
             pre_chunk(self.scratch_b[c].as_pod_mut::<T>(), &chunk.shape_b);
-            inflight.push_back((c, chunk.bwd.start(self.scratch_b[c].as_bytes())));
+            // start_any: scratch_b[c] is not touched again until the next
+            // execute call, and this call drains every request before
+            // returning — the exposure contract.
+            inflight.push_back((c, chunk.bwd.start_any(self.scratch_b[c].as_bytes())));
             if inflight.len() == depth {
                 Self::drain_one_back(&self.chunks, &mut self.scratch_a, &mut inflight, a);
             }
@@ -456,16 +504,26 @@ mod tests {
                 (0..sizes_a.iter().product::<usize>()).map(|x| (me * 10_000 + x) as f64).collect();
             let mut want = vec![0.0f64; sizes_b.iter().product()];
             exchange(&comm, &a, &sizes_a, axis_a, &mut want, &sizes_b, axis_b);
-            let mut plan = PipelinedRedistPlan::new(
-                &comm, 8, &sizes_a, axis_a, &sizes_b, axis_b, chunks, depth,
-            );
-            let mut got = vec![0.0f64; sizes_b.iter().product()];
-            plan.execute(&a, &mut got);
-            assert_eq!(want, got, "rank {me}: pipelined != blocking");
-            // Roundtrip restores A exactly.
-            let mut back = vec![0.0f64; a.len()];
-            plan.execute_back(&got, &mut back);
-            assert_eq!(a, back, "rank {me}: pipelined roundtrip failed");
+            // Both transports must be bitwise identical to the blocking
+            // one-shot exchange, for any chunking.
+            for transport in [Transport::Mailbox, Transport::Window] {
+                let mut plan = PipelinedRedistPlan::with_transport(
+                    &comm, 8, &sizes_a, axis_a, &sizes_b, axis_b, chunks, depth, transport,
+                );
+                assert_eq!(plan.transport(), transport);
+                let mut got = vec![0.0f64; sizes_b.iter().product()];
+                plan.execute(&a, &mut got);
+                assert_eq!(want, got, "rank {me} [{}]: pipelined != blocking", transport.name());
+                // Roundtrip restores A exactly.
+                let mut back = vec![0.0f64; a.len()];
+                plan.execute_back(&got, &mut back);
+                assert_eq!(
+                    a,
+                    back,
+                    "rank {me} [{}]: pipelined roundtrip failed",
+                    transport.name()
+                );
+            }
         });
     }
 

@@ -2,59 +2,92 @@
 //!
 //! A [`World`] spawns one OS thread per rank and hands each a [`Comm`] over
 //! the full process group (the analogue of `MPI_COMM_WORLD`). Point-to-point
-//! messages are byte payloads deposited into the destination rank's mailbox
-//! (a `Mutex<Vec<Msg>>` + condvar); receive matches on `(source, tag)` in
-//! FIFO order per match key, exactly like MPI's non-overtaking rule.
+//! messages are byte payloads deposited into the destination rank's mailbox:
+//! per-`(source, tag)` FIFO buckets in a hash map, each with its own
+//! condvar, so matching is O(1) in the number of outstanding messages and a
+//! push wakes only the receivers actually waiting on that match key
+//! (deep pipelines keep many keys outstanding; the old single-`Vec` store
+//! paid an O(n) scan plus a thundering-herd `notify_all` per operation).
+//! FIFO order per match key preserves MPI's non-overtaking rule.
 //!
 //! New communicators are created collectively with [`Comm::split`], the
 //! analogue of `MPI_COMM_SPLIT`, which is the primitive under Cartesian
 //! sub-grids ([`super::topology`]).
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use super::window::{ExposureHub, WinRegistry};
 use super::{as_bytes, as_bytes_mut, Pod};
 
-/// One in-flight point-to-point message.
-struct Msg {
-    src: usize,
-    tag: u32,
-    data: Vec<u8>,
+/// One `(src, tag)` match bucket of a mailbox.
+struct Bucket {
+    q: VecDeque<Vec<u8>>,
+    /// Bucket-private condvar (always used with the owning mailbox mutex):
+    /// a push wakes only this key's waiters.
+    cv: Arc<Condvar>,
+    waiters: usize,
 }
 
-/// Per-rank mailbox: unordered store with FIFO matching per `(src, tag)`.
+impl Bucket {
+    fn new() -> Bucket {
+        Bucket { q: VecDeque::new(), cv: Arc::new(Condvar::new()), waiters: 0 }
+    }
+}
+
+/// Per-rank mailbox: per-`(src, tag)` FIFO buckets with targeted wakeups.
 struct Mailbox {
-    q: Mutex<Vec<Msg>>,
-    cv: Condvar,
+    m: Mutex<HashMap<(usize, u32), Bucket>>,
 }
 
 impl Mailbox {
     fn new() -> Self {
-        Mailbox { q: Mutex::new(Vec::new()), cv: Condvar::new() }
+        Mailbox { m: Mutex::new(HashMap::new()) }
     }
 
-    fn push(&self, m: Msg) {
-        self.q.lock().unwrap().push(m);
-        self.cv.notify_all();
+    fn push(&self, src: usize, tag: u32, data: Vec<u8>) {
+        let mut g = self.m.lock().unwrap();
+        let b = g.entry((src, tag)).or_insert_with(Bucket::new);
+        b.q.push_back(data);
+        if b.waiters > 0 {
+            b.cv.notify_all();
+        }
     }
 
     fn pop(&self, src: usize, tag: u32) -> Vec<u8> {
-        let mut q = self.q.lock().unwrap();
+        let key = (src, tag);
+        let mut g = self.m.lock().unwrap();
         loop {
-            if let Some(i) = q.iter().position(|m| m.src == src && m.tag == tag) {
-                return q.remove(i).data;
+            if let Some(b) = g.get_mut(&key) {
+                if let Some(data) = b.q.pop_front() {
+                    if b.q.is_empty() && b.waiters == 0 {
+                        g.remove(&key);
+                    }
+                    return data;
+                }
             }
-            q = self.cv.wait(q).unwrap();
+            let b = g.entry(key).or_insert_with(Bucket::new);
+            b.waiters += 1;
+            let cv = Arc::clone(&b.cv);
+            g = cv.wait(g).unwrap();
+            if let Some(b) = g.get_mut(&key) {
+                b.waiters -= 1;
+            }
         }
     }
 
     /// Non-blocking variant of [`Mailbox::pop`]: returns `None` when no
     /// matching message has arrived yet (the transport under `MPI_Test`).
     fn try_pop(&self, src: usize, tag: u32) -> Option<Vec<u8>> {
-        let mut q = self.q.lock().unwrap();
-        q.iter()
-            .position(|m| m.src == src && m.tag == tag)
-            .map(|i| q.remove(i).data)
+        let key = (src, tag);
+        let mut g = self.m.lock().unwrap();
+        let b = g.get_mut(&key)?;
+        let data = b.q.pop_front();
+        if b.q.is_empty() && b.waiters == 0 {
+            g.remove(&key);
+        }
+        data
     }
 }
 
@@ -119,6 +152,9 @@ pub(crate) struct WorldState {
     /// Bytes moved through mailboxes, for coarse traffic accounting.
     pub(crate) bytes_sent: AtomicU64,
     pub(crate) messages_sent: AtomicU64,
+    /// Payload bytes moved by the one-copy window transport (these never
+    /// touch a mailbox; see [`super::window`]).
+    pub(crate) bytes_window: AtomicU64,
 }
 
 impl WorldState {
@@ -127,6 +163,7 @@ impl WorldState {
             next_ctx: AtomicU64::new(1),
             bytes_sent: AtomicU64::new(0),
             messages_sent: AtomicU64::new(0),
+            bytes_window: AtomicU64::new(0),
         }
     }
 
@@ -150,6 +187,12 @@ pub(crate) struct CommState {
     /// operation, giving all ranks a matching wire tag without any extra
     /// synchronization.
     nb_seq: Vec<AtomicU32>,
+    /// Per-rank RMA window creation counters (same agreement argument).
+    win_seq: Vec<AtomicU32>,
+    /// Exposure registry of the one-copy window transport.
+    hub: ExposureHub,
+    /// Window-creation rendezvous state.
+    win_reg: WinRegistry,
 }
 
 impl CommState {
@@ -163,6 +206,9 @@ impl CommState {
             barrier: BarrierState::new(),
             split: SplitState::new(size),
             nb_seq: (0..size).map(|_| AtomicU32::new(0)).collect(),
+            win_seq: (0..size).map(|_| AtomicU32::new(0)).collect(),
+            hub: ExposureHub::new(),
+            win_reg: WinRegistry::new(),
         })
     }
 }
@@ -207,13 +253,40 @@ impl Comm {
         self.state.world.messages_sent.load(Ordering::Relaxed)
     }
 
+    /// Total payload bytes moved world-wide by the one-copy window
+    /// transport (these bypass mailboxes entirely; see [`super::window`]).
+    pub fn world_window_bytes(&self) -> u64 {
+        self.state.world.bytes_window.load(Ordering::Relaxed)
+    }
+
+    /// Account a one-copy window transfer's payload bytes.
+    pub(crate) fn add_window_bytes(&self, n: usize) {
+        self.state.world.bytes_window.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Exposure hub of this communicator (the one-copy transport registry).
+    pub(crate) fn hub(&self) -> &ExposureHub {
+        &self.state.hub
+    }
+
+    /// Window-creation rendezvous registry of this communicator.
+    pub(crate) fn win_registry(&self) -> &WinRegistry {
+        &self.state.win_reg
+    }
+
+    /// Allocate the id of the next RMA window created on this communicator
+    /// (per-rank counters agree by the collective ordering rule).
+    pub(crate) fn next_win_id(&self) -> u32 {
+        self.state.win_seq[self.rank].fetch_add(1, Ordering::Relaxed)
+    }
+
     /// Non-blocking-buffered send of a raw byte payload (like `MPI_Send` with
     /// a buffered protocol: it never blocks, the mailbox is unbounded).
     pub fn send_bytes(&self, to: usize, tag: u32, data: Vec<u8>) {
         assert!(to < self.size(), "send to rank {to} out of range");
         self.state.world.bytes_sent.fetch_add(data.len() as u64, Ordering::Relaxed);
         self.state.world.messages_sent.fetch_add(1, Ordering::Relaxed);
-        self.state.mailboxes[to].push(Msg { src: self.rank, tag, data });
+        self.state.mailboxes[to].push(self.rank, tag, data);
     }
 
     /// Blocking receive of the next byte payload matching `(from, tag)`.
@@ -415,6 +488,33 @@ mod tests {
                     let got: Vec<u64> = comm.recv_vec(0, 9, 1);
                     assert_eq!(got[0], i, "non-overtaking order violated");
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn mailbox_buckets_many_keys_interleaved() {
+        // Many distinct (src, tag) keys outstanding at once — the bucketed
+        // store must match each key in FIFO order regardless of arrival
+        // interleaving, and try_recv must not disturb other keys.
+        World::run(3, |comm| {
+            let me = comm.rank();
+            if me == 0 {
+                for round in 0..8u64 {
+                    for tag in 0..16u32 {
+                        comm.send_slice(1, tag, &[round * 100 + tag as u64]);
+                        comm.send_slice(2, tag, &[round * 100 + tag as u64 + 1]);
+                    }
+                }
+            } else {
+                assert!(comm.try_recv_bytes(0, 999).is_none());
+                for tag in (0..16u32).rev() {
+                    for round in 0..8u64 {
+                        let got: Vec<u64> = comm.recv_vec(0, tag, 1);
+                        assert_eq!(got[0], round * 100 + tag as u64 + (me as u64 - 1));
+                    }
+                }
+                assert!(comm.try_recv_bytes(0, 0).is_none(), "bucket not drained");
             }
         });
     }

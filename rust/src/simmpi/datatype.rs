@@ -27,8 +27,14 @@
 //! genuinely needed (peer messages), callers pack/unpack through cached
 //! [`Runs`] into buffers recycled by a [`StagingArena`] (or a plan-owned
 //! [`AlignedScratch`]), so steady-state plan executions perform no heap
-//! allocation on the intra-rank path. [`stats`] counts bytes moved through
-//! the fused vs the staged paths for the benchmark harness.
+//! allocation on the intra-rank path. Under the shared-window transport
+//! ([`crate::simmpi::Transport::Window`]) the same compiled plans run
+//! **across** ranks: the receiver compiles the sender's flattening
+//! (shipped once at plan build via [`Runs::to_wire`]) against its own and
+//! copies peer array → own array directly
+//! ([`TransferPlan::execute_one_copy`]) — no contiguous wire
+//! representation at all. [`stats`] counts bytes moved through the fused,
+//! one-copy and staged paths for the benchmark harness.
 
 use super::MpiError;
 
@@ -248,6 +254,37 @@ impl Runs {
         stats::add_unpacked(inp);
     }
 
+    /// Serialize to a flat `usize` word list (`[base, run_len, n_axes,
+    /// n0, stride0, ...]`) for the plan-build metadata exchange of the
+    /// one-copy window transport ([`crate::simmpi::Transport::Window`]):
+    /// each rank ships its send-side flattening to every peer once, and
+    /// the peer compiles the cross-rank [`TransferPlan`] from it.
+    pub fn to_wire(&self) -> Vec<usize> {
+        let mut w = Vec::with_capacity(3 + 2 * self.outer.len());
+        w.push(self.base);
+        w.push(self.run_len);
+        w.push(self.outer.len());
+        for a in &self.outer {
+            w.push(a.n);
+            w.push(a.stride);
+        }
+        w
+    }
+
+    /// Inverse of [`Runs::to_wire`].
+    pub fn from_wire(w: &[usize]) -> Runs {
+        assert!(w.len() >= 3, "Runs::from_wire: truncated header");
+        let n_axes = w[2];
+        assert_eq!(w.len(), 3 + 2 * n_axes, "Runs::from_wire: length mismatch");
+        Runs {
+            base: w[0],
+            run_len: w[1],
+            outer: (0..n_axes)
+                .map(|i| AxisIter { n: w[3 + 2 * i], stride: w[4 + 2 * i] })
+                .collect(),
+        }
+    }
+
     /// Number of contiguous runs.
     pub fn count(&self) -> usize {
         if self.run_len == 0 {
@@ -409,15 +446,29 @@ impl TransferPlan {
         TransferPlan { ops, bytes: total, src_extent, dst_extent }
     }
 
-    /// Fused execution: copy every selected byte of `src` straight into its
-    /// destination in `dst`. Zero staging, zero allocation.
-    pub fn execute(&self, src: &[u8], dst: &mut [u8]) {
+    #[inline]
+    fn run(&self, src: &[u8], dst: &mut [u8]) {
         debug_assert!(src.len() >= self.src_extent, "transfer: src too small");
         debug_assert!(dst.len() >= self.dst_extent, "transfer: dst too small");
         for op in &self.ops {
             dst[op.dst..op.dst + op.len].copy_from_slice(&src[op.src..op.src + op.len]);
         }
+    }
+
+    /// Fused execution: copy every selected byte of `src` straight into its
+    /// destination in `dst`. Zero staging, zero allocation.
+    pub fn execute(&self, src: &[u8], dst: &mut [u8]) {
+        self.run(src, dst);
         stats::add_fused(self.bytes);
+    }
+
+    /// [`TransferPlan::execute`] for a *cross-rank* one-copy transfer
+    /// (window transport): identical copy schedule, but the bytes are
+    /// attributed to the [`stats::EngineStats::one_copy_bytes`] counter so
+    /// driver reports can prove the pack/unpack double-copy disappeared.
+    pub fn execute_one_copy(&self, src: &[u8], dst: &mut [u8]) {
+        self.run(src, dst);
+        stats::add_one_copy(self.bytes);
     }
 
     /// Payload bytes one execution moves.
@@ -567,6 +618,7 @@ pub mod stats {
     use std::sync::atomic::{AtomicU64, Ordering};
 
     static FUSED_BYTES: AtomicU64 = AtomicU64::new(0);
+    static ONE_COPY_BYTES: AtomicU64 = AtomicU64::new(0);
     static PACKED_BYTES: AtomicU64 = AtomicU64::new(0);
     static UNPACKED_BYTES: AtomicU64 = AtomicU64::new(0);
     static PLANS_COMPILED: AtomicU64 = AtomicU64::new(0);
@@ -575,8 +627,12 @@ pub mod stats {
     /// measure an interval).
     #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
     pub struct EngineStats {
-        /// Bytes moved by fused [`super::TransferPlan`] executions.
+        /// Bytes moved by fused *intra-rank* [`super::TransferPlan`]
+        /// executions (self-exchanges, chunk gather/scatter).
         pub fused_bytes: u64,
+        /// Bytes moved by *cross-rank* one-copy transfers (window
+        /// transport: sender's array → receiver's array, no staging).
+        pub one_copy_bytes: u64,
         /// Bytes gathered into contiguous staging ([`super::Runs::pack`]).
         pub packed_bytes: u64,
         /// Bytes scattered out of contiguous staging ([`super::Runs::unpack`]).
@@ -590,6 +646,7 @@ pub mod stats {
         pub fn since(&self, earlier: &EngineStats) -> EngineStats {
             EngineStats {
                 fused_bytes: self.fused_bytes.wrapping_sub(earlier.fused_bytes),
+                one_copy_bytes: self.one_copy_bytes.wrapping_sub(earlier.one_copy_bytes),
                 packed_bytes: self.packed_bytes.wrapping_sub(earlier.packed_bytes),
                 unpacked_bytes: self.unpacked_bytes.wrapping_sub(earlier.unpacked_bytes),
                 plans_compiled: self.plans_compiled.wrapping_sub(earlier.plans_compiled),
@@ -600,6 +657,7 @@ pub mod stats {
     pub fn snapshot() -> EngineStats {
         EngineStats {
             fused_bytes: FUSED_BYTES.load(Ordering::Relaxed),
+            one_copy_bytes: ONE_COPY_BYTES.load(Ordering::Relaxed),
             packed_bytes: PACKED_BYTES.load(Ordering::Relaxed),
             unpacked_bytes: UNPACKED_BYTES.load(Ordering::Relaxed),
             plans_compiled: PLANS_COMPILED.load(Ordering::Relaxed),
@@ -608,6 +666,10 @@ pub mod stats {
 
     pub(super) fn add_fused(n: usize) {
         FUSED_BYTES.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub(super) fn add_one_copy(n: usize) {
+        ONE_COPY_BYTES.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     pub(super) fn add_packed(n: usize) {
@@ -918,10 +980,27 @@ mod tests {
         let plan = TransferPlan::compile(&dt, &dt).unwrap();
         let mut out = vec![0u8; 16];
         plan.execute(&src, &mut out);
+        let mut out2 = vec![0u8; 16];
+        plan.execute_one_copy(&src, &mut out2);
+        assert_eq!(out, out2, "one-copy execution must match fused");
         let d = stats::snapshot().since(&s0);
         assert!(d.packed_bytes >= 4);
         assert!(d.unpacked_bytes >= 4);
         assert!(d.fused_bytes >= 4);
+        assert!(d.one_copy_bytes >= 4);
         assert!(d.plans_compiled >= 1);
+    }
+
+    #[test]
+    fn runs_wire_roundtrip() {
+        for dt in [
+            sub(&[6, 5, 4], &[3, 2, 4], &[2, 1, 0], 8),
+            sub(&[4, 4], &[0, 4], &[2, 0], 1),
+            Datatype::Contiguous { offset: 16, count: 12, elem: 8 },
+            Datatype::Vector { count: 3, blocklen: 2, stride: 4, elem: 2 },
+        ] {
+            let r = dt.runs();
+            assert_eq!(Runs::from_wire(&r.to_wire()), r);
+        }
     }
 }

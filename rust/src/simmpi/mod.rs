@@ -18,7 +18,13 @@
 //! [`AlltoallwPlan::start`]), which cache the flattened datatype
 //! representation across repeated executions — the "future speedups from
 //! optimizations in the internal datatype handling engines" the paper
-//! anticipates.
+//! anticipates. [`window`] adds the MPI-3 RMA layer: shared [`Window`]s
+//! with fence / post-start-complete-wait epochs, and the **one-copy
+//! [`Transport::Window`]** for plan-based collectives — since simulated
+//! ranks share one address space (the `MPI_Win_allocate_shared` setting),
+//! cross-rank compiled [`TransferPlan`]s copy sender's array → receiver's
+//! array directly, with zero intermediate buffers and no mailbox traffic
+//! on the payload path.
 //!
 //! ## Why this is a faithful substrate
 //!
@@ -50,11 +56,13 @@ pub mod collective;
 pub mod datatype;
 pub mod nonblocking;
 pub mod topology;
+pub mod window;
 
 pub use comm::{Comm, World};
 pub use datatype::{AlignedScratch, Datatype, StagingArena, TransferPlan};
 pub use nonblocking::{waitall, AlltoallwPlan, Request};
 pub use topology::{dims_create, CartComm};
+pub use window::{Transport, Window};
 
 /// Errors surfaced by the simmpi layer.
 ///

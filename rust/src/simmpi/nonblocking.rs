@@ -33,11 +33,44 @@
 //! blocking [`AlltoallwPlan::execute`] goes further: the self-exchange is
 //! compiled once into a fused [`TransferPlan`] and copies `send -> recv`
 //! directly with no staging buffer at all.
+//!
+//! ## One-copy window transport
+//!
+//! [`Comm::alltoallw_init_with`] selects the payload
+//! [`Transport`]: under [`Transport::Window`] the plan runs **one
+//! collective metadata epoch at build time** — every rank ships its
+//! send-side flattenings ([`Runs::to_wire`]) to each peer — and compiles a
+//! cross-rank [`TransferPlan`] per (sender, receiver) pair: the sender's
+//! runs intersected with the receiver's, merged into maximal `CopyOp`
+//! spans. Thereafter every blocking, nonblocking, persistent and pipelined
+//! execution moves payload bytes **once**, sender's array → receiver's
+//! array, through the [`crate::simmpi::window::ExposureHub`]: `start`
+//! exposes the raw send span; completion pulls each peer's span, executes
+//! the pair plan straight into the receive buffer, and releases; the epoch
+//! closes when every reader released, so the send buffer is reusable
+//! exactly at completion. Zero intermediate buffers, zero per-message
+//! allocation, no mailbox traffic on the payload path.
+//!
+//! Two contractual differences from the mailbox transport, both the
+//! standard MPI rules: (1) the send buffer of a window-transport start
+//! must stay alive and unmodified until the request completes (the
+//! mailbox path captures a copy instead) — which is why the *nonblocking*
+//! window start is the `unsafe` [`AlltoallwPlan::start_exposed`] (safe
+//! borrows cannot span initiation to completion; the blocking
+//! [`AlltoallwPlan::execute`] holds its borrows across the whole call and
+//! stays safe on every transport, and a window [`Request`] dropped before
+//! completion panics rather than dangling its exposure); (2) all ranks
+//! must complete window-transport requests of the same plan set in the
+//! same order (every execution engine in this crate does — blocking
+//! executes are fully ordered, the pipeline drains FIFO). The unordered
+//! comm-level immediates ([`Comm::ialltoallv`]/[`Comm::ialltoallw`])
+//! therefore always use the mailbox.
 
 use std::sync::{Arc, Mutex};
 
 use super::comm::Comm;
 use super::datatype::{Datatype, Runs, StagingArena, TransferPlan};
+use super::window::{RawSpan, Transport};
 use super::{as_bytes, as_bytes_mut, Pod};
 
 /// One outstanding peer receive of a nonblocking collective.
@@ -62,59 +95,151 @@ struct PendingRecv {
 /// distinct wire tags, so they may be completed in **any order** — waiting
 /// in any permutation yields the same buffers.
 ///
-/// Dropping an un-waited request leaks its in-flight messages (the moral
-/// equivalent of `MPI_Request_free` on an active request — avoid it).
+/// Dropping an un-waited *mailbox* request leaks its in-flight messages
+/// (the moral equivalent of `MPI_Request_free` on an active request —
+/// avoid it). Dropping an un-waited **window** request is a hard protocol
+/// violation — its exposure would dangle (the raw send span outlives the
+/// caller's borrow, per the MPI no-modify rule) and block every peer's
+/// completion — so it **panics** instead of silently leaking.
 pub struct Request {
     comm: Comm,
-    pending: Vec<PendingRecv>,
-    /// Self-contribution: packed at initiation, scattered at completion.
-    local: Option<(Vec<u8>, Arc<Runs>)>,
-    /// Arena of the owning persistent plan, when there is one: every
-    /// payload buffer this request consumes (the local capture and the
-    /// received peer payloads) is returned there after scattering, so the
-    /// plan's next `start` reuses it instead of allocating.
-    arena: Option<Arc<Mutex<StagingArena>>>,
+    inner: Inner,
     done: bool,
 }
 
-impl Request {
-    fn recycle(&self, payload: Vec<u8>) {
-        if let Some(arena) = &self.arena {
-            arena.lock().unwrap().put(payload);
+impl Drop for Request {
+    fn drop(&mut self) {
+        // A window-transport request carries a raw span of the caller's
+        // send buffer and (usually) a live exposure peers will read.
+        // Dropping it incomplete would leave that exposure pointing into
+        // memory the unwinding (or buggy) rank is about to free, and peer
+        // threads would read it — a cross-thread use-after-free no local
+        // cleanup can prevent (revoking cannot stop an in-flight copy,
+        // and blocking for the drain can deadlock against a peer that
+        // also died). So: loud panic in normal operation, and the
+        // `MPI_Abort` analogue — process abort — when already unwinding,
+        // exactly the semantics of a rank failing mid-epoch in MPI.
+        if !self.done && matches!(self.inner, Inner::Window { .. }) {
+            if std::thread::panicking() {
+                eprintln!(
+                    "fatal: rank panicked with a window-transport exposure in flight; \
+                     aborting the world (MPI_Abort semantics — peers hold raw spans \
+                     into this rank's memory)"
+                );
+                std::process::abort();
+            }
+            panic!(
+                "window-transport Request dropped before completion: \
+                 wait()/test() must complete it while the send buffer is alive"
+            );
         }
     }
+}
 
+/// Transport-specific completion state of a [`Request`].
+enum Inner {
+    /// Mailbox transport: peer payloads arrive as byte messages and
+    /// scatter through cached flattenings at completion.
+    Mailbox {
+        pending: Vec<PendingRecv>,
+        /// Self-contribution: packed at initiation, scattered at completion.
+        local: Option<(Vec<u8>, Arc<Runs>)>,
+        /// Arena of the owning persistent plan, when there is one: every
+        /// payload buffer this request consumes (the local capture and the
+        /// received peer payloads) is returned there after scattering, so
+        /// the plan's next `start` reuses it instead of allocating.
+        arena: Option<Arc<Mutex<StagingArena>>>,
+    },
+    /// One-copy window transport: completion pulls each peer's exposed
+    /// send span and executes the pre-compiled cross-rank pair plan
+    /// straight into `recv`. No payload buffers exist at all.
+    Window {
+        /// Pair plans of the owning persistent plan (`pairs[p]`: rank
+        /// `p`'s send runs → this rank's receive runs).
+        pairs: Arc<Vec<TransferPlan>>,
+        tag: u32,
+        /// Raw span of this rank's send buffer (the MPI no-modify rule
+        /// keeps it valid until completion); consumed by the first
+        /// completion call, which runs the fused self pair plan.
+        self_span: Option<RawSpan>,
+        /// Bitmask of peers not yet pulled (window transport caps the
+        /// communicator at 128 ranks).
+        remaining: u128,
+        /// Whether this rank published an exposure that must drain before
+        /// the request may complete (false only for 1-rank groups).
+        exposed: bool,
+    },
+}
+
+fn recycle(arena: &Option<Arc<Mutex<StagingArena>>>, payload: Vec<u8>) {
+    if let Some(arena) = arena {
+        arena.lock().unwrap().put(payload);
+    }
+}
+
+impl Request {
     /// Poll for completion (`MPI_Test`): drains every already-arrived peer
     /// payload into `recv` and returns `true` once the operation is
     /// complete. Until then `recv` is partially written (MPI leaves the
-    /// buffer undefined before completion; so do we).
+    /// buffer undefined before completion; so do we). A window-transport
+    /// request additionally completes only once every peer has pulled this
+    /// rank's exposure (the send buffer is reusable at completion).
     pub fn test(&mut self, recv: &mut [u8]) -> bool {
         if self.done {
             return true;
         }
-        if let Some((payload, runs)) = self.local.take() {
-            runs.unpack(&payload, recv);
-            self.recycle(payload);
-        }
-        let mut i = 0;
-        while i < self.pending.len() {
-            let p = &self.pending[i];
-            match self.comm.try_recv_bytes(p.src, p.tag) {
-                Some(payload) => {
-                    assert_eq!(
-                        payload.len(),
-                        p.bytes,
-                        "nonblocking collective: type signature mismatch with rank {}",
-                        p.src
-                    );
-                    p.runs.unpack(&payload, recv);
-                    self.pending.swap_remove(i);
-                    self.recycle(payload);
+        match &mut self.inner {
+            Inner::Mailbox { pending, local, arena } => {
+                if let Some((payload, runs)) = local.take() {
+                    runs.unpack(&payload, recv);
+                    recycle(arena, payload);
                 }
-                None => i += 1,
+                let mut i = 0;
+                while i < pending.len() {
+                    let p = &pending[i];
+                    match self.comm.try_recv_bytes(p.src, p.tag) {
+                        Some(payload) => {
+                            assert_eq!(
+                                payload.len(),
+                                p.bytes,
+                                "nonblocking collective: type signature mismatch with rank {}",
+                                p.src
+                            );
+                            p.runs.unpack(&payload, recv);
+                            pending.swap_remove(i);
+                            recycle(arena, payload);
+                        }
+                        None => i += 1,
+                    }
+                }
+                self.done = pending.is_empty();
+            }
+            Inner::Window { pairs, tag, self_span, remaining, exposed } => {
+                let me = self.comm.rank();
+                if let Some(span) = self_span.take() {
+                    // SAFETY: the epoch contract (MPI no-modify rule) keeps
+                    // the send buffer alive and unwritten until completion.
+                    pairs[me].execute(unsafe { span.as_slice() }, recv);
+                }
+                let hub = self.comm.hub();
+                let mut left = *remaining;
+                while left != 0 {
+                    let p = left.trailing_zeros() as usize;
+                    left &= left - 1;
+                    if let Some(span) = hub.try_pull(p, *tag) {
+                        // SAFETY: the peer's exposure guarantees its span
+                        // stays valid and unwritten until we release.
+                        pairs[p].execute_one_copy(unsafe { span.as_slice() }, recv);
+                        self.comm.add_window_bytes(pairs[p].bytes());
+                        hub.release(p, *tag);
+                        *remaining &= !(1u128 << p);
+                    }
+                }
+                if *remaining == 0 && (!*exposed || hub.drained(me, *tag)) {
+                    self.done = true;
+                }
             }
         }
-        self.done = self.pending.is_empty();
         self.done
     }
 
@@ -124,26 +249,54 @@ impl Request {
     }
 
     /// Block until the operation completes (`MPI_Wait`), scattering every
-    /// peer payload into `recv`.
+    /// peer payload into `recv`. Window-transport requests of the same
+    /// plan set must be waited in the same order on every rank (see the
+    /// module docs); they return only after every peer has pulled this
+    /// rank's exposure.
     pub fn wait(mut self, recv: &mut [u8]) {
         if self.done {
             return;
         }
-        if let Some((payload, runs)) = self.local.take() {
-            runs.unpack(&payload, recv);
-            self.recycle(payload);
-        }
-        let pending = std::mem::take(&mut self.pending);
-        for p in pending {
-            let payload = self.comm.recv_bytes(p.src, p.tag);
-            assert_eq!(
-                payload.len(),
-                p.bytes,
-                "nonblocking collective: type signature mismatch with rank {}",
-                p.src
-            );
-            p.runs.unpack(&payload, recv);
-            self.recycle(payload);
+        match &mut self.inner {
+            Inner::Mailbox { pending, local, arena } => {
+                if let Some((payload, runs)) = local.take() {
+                    runs.unpack(&payload, recv);
+                    recycle(arena, payload);
+                }
+                for p in std::mem::take(pending) {
+                    let payload = self.comm.recv_bytes(p.src, p.tag);
+                    assert_eq!(
+                        payload.len(),
+                        p.bytes,
+                        "nonblocking collective: type signature mismatch with rank {}",
+                        p.src
+                    );
+                    p.runs.unpack(&payload, recv);
+                    recycle(arena, payload);
+                }
+            }
+            Inner::Window { pairs, tag, self_span, remaining, exposed } => {
+                let me = self.comm.rank();
+                if let Some(span) = self_span.take() {
+                    // SAFETY: see `test` — the epoch contract.
+                    pairs[me].execute(unsafe { span.as_slice() }, recv);
+                }
+                let hub = self.comm.hub();
+                let mut left = *remaining;
+                while left != 0 {
+                    let p = left.trailing_zeros() as usize;
+                    left &= left - 1;
+                    let span = hub.pull(p, *tag);
+                    // SAFETY: see `test` — exposure keeps the span valid.
+                    pairs[p].execute_one_copy(unsafe { span.as_slice() }, recv);
+                    self.comm.add_window_bytes(pairs[p].bytes());
+                    hub.release(p, *tag);
+                }
+                *remaining = 0;
+                if *exposed {
+                    hub.wait_drained(me, *tag);
+                }
+            }
         }
         self.done = true;
     }
@@ -208,7 +361,11 @@ impl Comm {
             .filter(|&p| p != me)
             .map(|p| PendingRecv { src: p, tag, runs: contig(p), bytes: recvcounts[p] * elem })
             .collect();
-        Request { comm: self.clone(), pending, local, arena: None, done: false }
+        Request {
+            comm: self.clone(),
+            inner: Inner::Mailbox { pending, local, arena: None },
+            done: false,
+        }
     }
 
     /// Immediate generalized all-to-all over derived datatypes
@@ -239,7 +396,11 @@ impl Comm {
                 bytes: recvtypes[p].packed_size(),
             })
             .collect();
-        Request { comm: self.clone(), pending, local, arena: None, done: false }
+        Request {
+            comm: self.clone(),
+            inner: Inner::Mailbox { pending, local, arena: None },
+            done: false,
+        }
     }
 
     /// Typed convenience wrapper over [`Comm::ialltoallw`].
@@ -256,11 +417,30 @@ impl Comm {
     /// (`MPI_Alltoallw_init`): flattens every send/receive datatype once and
     /// caches the result, so repeated [`AlltoallwPlan::start`] calls pay no
     /// datatype-engine setup. Collective: every rank of the communicator
-    /// must create the matching plan.
+    /// must create the matching plan. Uses the mailbox payload transport;
+    /// see [`Comm::alltoallw_init_with`] for the one-copy window transport.
     pub fn alltoallw_init(
         &self,
         sendtypes: &[Datatype],
         recvtypes: &[Datatype],
+    ) -> AlltoallwPlan {
+        self.alltoallw_init_with(sendtypes, recvtypes, Transport::Mailbox)
+    }
+
+    /// [`Comm::alltoallw_init`] with an explicit payload [`Transport`].
+    ///
+    /// Under [`Transport::Window`], plan creation runs one collective
+    /// metadata epoch — each rank ships its send-side flattenings to every
+    /// peer — and compiles one cross-rank [`TransferPlan`] per pair, so
+    /// every execution thereafter moves payload bytes once (sender's array
+    /// → receiver's array) with no staging, no allocation, and no mailbox
+    /// traffic. Window transport supports up to 128 ranks per communicator
+    /// and requires the usual epoch rules (see the module docs).
+    pub fn alltoallw_init_with(
+        &self,
+        sendtypes: &[Datatype],
+        recvtypes: &[Datatype],
+        transport: Transport,
     ) -> AlltoallwPlan {
         let n = self.size();
         assert_eq!(sendtypes.len(), n, "alltoallw_init: sendtypes length");
@@ -273,12 +453,52 @@ impl Comm {
         // Compile the fused self-exchange once: the blocking execute path
         // copies send -> recv directly through it, no staging buffer.
         let self_fused = TransferPlan::from_runs(&send[me].runs, &recv[me].runs);
+        let pairs = match transport {
+            Transport::Mailbox => Arc::new(Vec::new()),
+            Transport::Window => {
+                assert!(n <= 128, "window transport supports at most 128 ranks (got {n})");
+                // Collective address/metadata exchange: ship my send-side
+                // flattening for peer p to p; compile p's flattening (its
+                // bytes selected out of p's send buffer, targeted at me)
+                // against my receive flattening into the one-copy pair plan.
+                let tag = self.next_nb_tag();
+                for p in 0..n {
+                    if p != me {
+                        self.send_slice(p, tag, &send[p].runs.to_wire());
+                    }
+                }
+                let mut pairs = Vec::with_capacity(n);
+                for p in 0..n {
+                    if p == me {
+                        // The self pair is exactly the fused self-exchange
+                        // compiled above — share the compilation.
+                        pairs.push(self_fused.clone());
+                    } else {
+                        let wire = self.recv_bytes(p, tag);
+                        let word = std::mem::size_of::<usize>();
+                        assert_eq!(wire.len() % word, 0, "alltoallw_init: bad runs wire");
+                        let mut words = vec![0usize; wire.len() / word];
+                        as_bytes_mut(&mut words).copy_from_slice(&wire);
+                        let peer = Runs::from_wire(&words);
+                        assert_eq!(
+                            peer.packed_size(),
+                            recv[p].bytes,
+                            "alltoallw_init: type signature mismatch with rank {p}"
+                        );
+                        pairs.push(TransferPlan::from_runs(&peer, &recv[p].runs));
+                    }
+                }
+                Arc::new(pairs)
+            }
+        };
         AlltoallwPlan {
             comm: self.clone(),
             send,
             recv,
             self_fused,
             arena: Arc::new(Mutex::new(StagingArena::new())),
+            transport,
+            pairs,
         }
     }
 }
@@ -292,27 +512,37 @@ struct FlatType {
     bytes: usize,
 }
 
-/// A persistent `alltoallw` plan: create once ([`Comm::alltoallw_init`]),
-/// then [`AlltoallwPlan::start`] → [`Request::wait`] any number of times.
+/// A persistent `alltoallw` plan: create once ([`Comm::alltoallw_init`] /
+/// [`Comm::alltoallw_init_with`]), then [`AlltoallwPlan::start`] →
+/// [`Request::wait`] any number of times.
 ///
-/// Three compiled artifacts are cached at creation and amortized across
-/// every execution:
+/// Compiled artifacts cached at creation and amortized across every
+/// execution:
 ///
 /// * the per-peer flattened datatypes ([`Runs`], shared by `Arc` with the
 ///   in-flight requests);
 /// * a fused [`TransferPlan`] for the self-exchange, used by the blocking
 ///   [`AlltoallwPlan::execute`] to copy `send -> recv` with **zero**
 ///   intermediate buffer;
-/// * a [`StagingArena`] recycling payload buffers: completion calls return
-///   consumed payloads (the local capture and received peer messages) to
-///   the arena, and subsequent starts draw from it, so steady-state
-///   executions stop heap-allocating on this rank.
+/// * a [`StagingArena`] recycling payload buffers (mailbox transport):
+///   completion calls return consumed payloads (the local capture and
+///   received peer messages) to the arena, and subsequent starts draw from
+///   it, so steady-state executions stop heap-allocating on this rank;
+/// * under [`Transport::Window`], a cross-rank [`TransferPlan`] per
+///   (sender, receiver) pair: every execution copies payload bytes once,
+///   peer's array → own array, with no staging at all (see the module
+///   docs for the epoch contract).
 pub struct AlltoallwPlan {
     comm: Comm,
     send: Vec<FlatType>,
     recv: Vec<FlatType>,
     self_fused: TransferPlan,
     arena: Arc<Mutex<StagingArena>>,
+    transport: Transport,
+    /// Window transport only: `pairs[p]` copies rank `p`'s selected send
+    /// bytes straight into this rank's receive buffer (`pairs[me]` is the
+    /// self-exchange). Empty under the mailbox transport.
+    pairs: Arc<Vec<TransferPlan>>,
 }
 
 impl AlltoallwPlan {
@@ -346,11 +576,7 @@ impl AlltoallwPlan {
             .collect()
     }
 
-    /// Begin one execution (`MPI_Start` on a persistent request): packs and
-    /// posts every peer payload through the cached flattened datatypes and
-    /// returns the completion handle. The plan is reusable — `start` may be
-    /// called again as soon as the previous request has been waited.
-    pub fn start(&self, send: &[u8]) -> Request {
+    fn start_mailbox(&self, send: &[u8]) -> Request {
         let me = self.comm.rank();
         let tag = self.comm.next_nb_tag();
         self.post_peers(send, tag);
@@ -365,11 +591,90 @@ impl AlltoallwPlan {
         };
         Request {
             comm: self.comm.clone(),
-            pending: self.pending_for(tag),
-            local,
-            arena: Some(self.arena.clone()),
+            inner: Inner::Mailbox {
+                pending: self.pending_for(tag),
+                local,
+                arena: Some(self.arena.clone()),
+            },
             done: false,
         }
+    }
+
+    fn start_window(&self, send: &[u8]) -> Request {
+        let me = self.comm.rank();
+        let tag = self.comm.next_nb_tag();
+        let n = self.comm.size();
+        if n > 1 {
+            self.comm.hub().expose(me, tag, RawSpan::of(send), n - 1);
+        }
+        let all = if n == 128 { u128::MAX } else { (1u128 << n) - 1 };
+        Request {
+            comm: self.comm.clone(),
+            inner: Inner::Window {
+                pairs: self.pairs.clone(),
+                tag,
+                self_span: Some(RawSpan::of(send)),
+                remaining: all & !(1u128 << me),
+                exposed: n > 1,
+            },
+            done: false,
+        }
+    }
+
+    /// Begin one execution (`MPI_Start` on a persistent request) and
+    /// return the completion handle: packs and posts every peer payload
+    /// through the cached flattened datatypes, and captures the self block
+    /// (so the caller may reuse `send` immediately). The plan is reusable —
+    /// `start` may be called again as soon as the previous request has been
+    /// waited.
+    ///
+    /// Mailbox transport only. A window-transport plan performs **no
+    /// copies at initiation** — it exposes the raw span of `send` until
+    /// completion, which a safe borrow cannot express — so this panics and
+    /// directs to [`AlltoallwPlan::start_exposed`] (the blocking
+    /// [`AlltoallwPlan::execute`] stays safe on every transport: its
+    /// borrows live across the whole call).
+    pub fn start(&self, send: &[u8]) -> Request {
+        assert_eq!(
+            self.transport,
+            Transport::Mailbox,
+            "AlltoallwPlan::start: window transport exposes the send buffer until completion; \
+             use the unsafe start_exposed (or the blocking execute, which is safe)"
+        );
+        self.start_mailbox(send)
+    }
+
+    /// [`AlltoallwPlan::start`] for any transport, including the one-copy
+    /// window path (which exposes the raw span of `send` to the peers and
+    /// moves every byte at the completion call, peer's array → receiver's
+    /// array).
+    ///
+    /// # Safety
+    ///
+    /// The caller must uphold the MPI persistent-send rules the type
+    /// system cannot express for the window transport: `send` must stay
+    /// alive, unmodified and unaliased by the completion call's receive
+    /// buffer until the returned [`Request`] completes (`wait`, or `test`
+    /// returning `true`), and requests of the same plan set must be
+    /// completed in the same order on every rank. Under the mailbox
+    /// transport this is equivalent to the safe [`AlltoallwPlan::start`].
+    pub unsafe fn start_exposed(&self, send: &[u8]) -> Request {
+        match self.transport {
+            Transport::Mailbox => self.start_mailbox(send),
+            Transport::Window => self.start_window(send),
+        }
+    }
+
+    /// Transport-dispatching start for the crate's execution engines.
+    ///
+    /// SAFETY justification for the internal `start_exposed` call: every
+    /// in-crate caller (the blocking `execute` below and the pipelined
+    /// redistribution engine) holds the `send` borrow across the whole
+    /// operation, scatters into a buffer disjoint from it, and drains
+    /// every request in FIFO order before returning — exactly the
+    /// `start_exposed` contract.
+    pub(crate) fn start_any(&self, send: &[u8]) -> Request {
+        unsafe { self.start_exposed(send) }
     }
 
     /// Typed convenience wrapper over [`AlltoallwPlan::start`].
@@ -377,21 +682,30 @@ impl AlltoallwPlan {
         self.start(as_bytes(send))
     }
 
-    /// One full blocking execution (`MPI_Start` + `MPI_Wait`), with the
-    /// self-exchange routed through the compiled fused [`TransferPlan`]:
-    /// intra-rank bytes go `send -> recv` directly, no staging buffer.
+    /// One full blocking execution (`MPI_Start` + `MPI_Wait`). Mailbox
+    /// transport routes the self-exchange through the compiled fused
+    /// [`TransferPlan`] (intra-rank bytes go `send -> recv` directly, no
+    /// staging buffer); window transport moves *every* byte that way —
+    /// the borrows live across the whole call, so no epoch caveats apply.
     pub fn execute(&self, send: &[u8], recv: &mut [u8]) {
-        let tag = self.comm.next_nb_tag();
-        self.post_peers(send, tag);
-        self.self_fused.execute(send, recv);
-        let req = Request {
-            comm: self.comm.clone(),
-            pending: self.pending_for(tag),
-            local: None,
-            arena: Some(self.arena.clone()),
-            done: false,
-        };
-        req.wait(recv);
+        match self.transport {
+            Transport::Mailbox => {
+                let tag = self.comm.next_nb_tag();
+                self.post_peers(send, tag);
+                self.self_fused.execute(send, recv);
+                let req = Request {
+                    comm: self.comm.clone(),
+                    inner: Inner::Mailbox {
+                        pending: self.pending_for(tag),
+                        local: None,
+                        arena: Some(self.arena.clone()),
+                    },
+                    done: false,
+                };
+                req.wait(recv);
+            }
+            Transport::Window => self.start_any(send).wait(recv),
+        }
     }
 
     /// Typed convenience wrapper over [`AlltoallwPlan::execute`].
@@ -414,6 +728,17 @@ impl AlltoallwPlan {
     /// Fused copy spans of the compiled self-exchange (diagnostics).
     pub fn self_op_count(&self) -> usize {
         self.self_fused.op_count()
+    }
+
+    /// The payload transport this plan executes over.
+    pub fn transport(&self) -> Transport {
+        self.transport
+    }
+
+    /// Total fused copy spans of the cross-rank pair plans (diagnostics;
+    /// 0 under the mailbox transport).
+    pub fn pair_op_count(&self) -> usize {
+        self.pairs.iter().map(|p| p.op_count()).sum()
     }
 
     /// The process group this plan communicates over.
@@ -579,6 +904,71 @@ mod tests {
                 plan.execute_typed(&a, &mut persistent);
                 assert_eq!(blocking, persistent, "round {round}");
             }
+        });
+    }
+
+    #[test]
+    fn window_persistent_plan_matches_mailbox() {
+        World::run(4, |comm| {
+            let me = comm.rank();
+            let (send_t, recv_t) = slab_types(me, 4, 8, 12);
+            let mailbox = comm.alltoallw_init(&send_t, &recv_t);
+            let window = comm.alltoallw_init_with(&send_t, &recv_t, Transport::Window);
+            assert_eq!(window.transport(), Transport::Window);
+            assert!(window.pair_op_count() > 0);
+            for round in 0..3 {
+                let a: Vec<f64> =
+                    (0..2 * 12).map(|k| (round * 7000 + me * 100 + k) as f64).collect();
+                let mut via_mailbox = vec![0.0f64; 8 * 3];
+                mailbox.execute_typed(&a, &mut via_mailbox);
+                let mut via_window = vec![0.0f64; 8 * 3];
+                window.execute_typed(&a, &mut via_window);
+                assert_eq!(via_mailbox, via_window, "round {round}");
+                // Nonblocking start/wait over the window (same wait order
+                // on every rank, per the epoch contract).
+                // SAFETY: `a` outlives the wait below and `via_start` is
+                // disjoint from it — the start_exposed contract.
+                let req = unsafe { window.start_exposed(crate::simmpi::as_bytes(&a)) };
+                let mut via_start = vec![0.0f64; 8 * 3];
+                req.wait_typed(&mut via_start);
+                assert_eq!(via_mailbox, via_start, "round {round} (start/wait)");
+            }
+        });
+    }
+
+    #[test]
+    fn window_transport_counts_payload_bytes() {
+        World::run(2, |comm| {
+            let me = comm.rank();
+            let (send_t, recv_t) = slab_types(me, 2, 4, 4);
+            let plan = comm.alltoallw_init_with(&send_t, &recv_t, Transport::Window);
+            let sent0 = comm.world_bytes_sent();
+            let win0 = comm.world_window_bytes();
+            let a: Vec<f64> = (0..2 * 4).map(|k| (me * 10 + k) as f64).collect();
+            let mut out = vec![0.0f64; 4 * 2];
+            plan.execute_typed(&a, &mut out);
+            comm.barrier();
+            // Payload never touched a mailbox; the window counter carries
+            // the off-rank half of every rank's bytes (2 ranks x 4 f64).
+            assert_eq!(comm.world_bytes_sent(), sent0, "payload leaked into mailboxes");
+            assert_eq!(comm.world_window_bytes() - win0, 2 * 4 * 8);
+        });
+    }
+
+    #[test]
+    fn window_single_rank_plan_is_pure_fused_copy() {
+        World::run(1, |comm| {
+            let dt = vec![Datatype::subarray(&[4, 4], &[4, 4], &[0, 0], 8).unwrap()];
+            let plan = comm.alltoallw_init_with(&dt, &dt, Transport::Window);
+            let a: Vec<f64> = (0..16).map(|k| k as f64).collect();
+            let mut out = vec![0.0f64; 16];
+            plan.execute_typed(&a, &mut out);
+            assert_eq!(a, out);
+            // SAFETY: `a` outlives the wait and `out2` is disjoint.
+            let req = unsafe { plan.start_exposed(crate::simmpi::as_bytes(&a)) };
+            let mut out2 = vec![0.0f64; 16];
+            req.wait_typed(&mut out2);
+            assert_eq!(a, out2);
         });
     }
 

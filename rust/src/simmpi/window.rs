@@ -1,0 +1,661 @@
+//! MPI-3-style RMA shared windows and the one-copy exposure hub.
+//!
+//! Simulated ranks are threads in one address space, so the MPI-3
+//! `MPI_Win_allocate_shared` model applies verbatim: a rank can read a
+//! peer's memory directly, provided accesses are separated into *epochs*
+//! by window synchronization. This module provides both halves of that
+//! model:
+//!
+//! * [`Window`] — the user-facing RMA window: a per-rank shared segment
+//!   allocated collectively ([`Window::allocate`]), with direct
+//!   [`Window::read`]/[`Window::put`] access to peer segments, the
+//!   [`Window::fence`] epoch (active-target synchronization, backed by the
+//!   communicator barrier) and the generalized post-start-complete-wait
+//!   epoch ([`Window::post`] / [`Window::start`] / [`Window::complete`] /
+//!   [`Window::wait`], `MPI_Win_{post,start,complete,wait}`).
+//! * [`ExposureHub`] — the dynamic-window engine under the **one-copy
+//!   transport** of the collectives (the `MPI_Win_create_dynamic` +
+//!   attach-per-operation pattern): a sender *exposes* the raw span of its
+//!   send buffer keyed by `(rank, tag)`; each receiver *pulls* the span,
+//!   copies the bytes it needs straight into its own receive buffer
+//!   through a pre-compiled cross-rank [`super::TransferPlan`], and
+//!   *releases* the exposure; the sender's completion waits until every
+//!   reader has released (the epoch close), after which the buffer may be
+//!   reused. Payload bytes therefore move **once** — sender's array to
+//!   receiver's array — with zero intermediate buffers, zero per-message
+//!   allocation and no mailbox traffic.
+//!
+//! [`Transport`] selects between this engine and the mailbox fallback for
+//! every plan-based collective (see [`super::nonblocking`]); the mailbox
+//! remains the default and the only transport of the *unordered* immediate
+//! collectives (`ialltoallv`/`ialltoallw`), whose completion order may
+//! differ across ranks — the one-copy epoch protocol requires all ranks to
+//! complete plan executions in the same order (every in-repo execution
+//! engine does).
+//!
+//! ## Safety model
+//!
+//! Exactly MPI's: memory exposed to an epoch must stay valid and unwritten
+//! until the epoch closes. The blocking paths hold the relevant borrows
+//! across the whole call, so they are safe by construction; the
+//! persistent nonblocking path ([`super::AlltoallwPlan::start`] under
+//! [`Transport::Window`]) records a raw span and dereferences it at the
+//! completion call, so the caller must keep the send buffer alive and
+//! unmodified until `wait`/`test` completes — the standard MPI rule,
+//! documented at the call sites. All cross-thread reads race-freely
+//! overlap only with other reads (senders never write exposed spans inside
+//! an epoch), and the hub's mutex provides the happens-before edges
+//! between expose, pull and release.
+
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::Comm;
+
+/// Which transport plan-based collectives move payload bytes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// Byte payloads through per-rank mailboxes (pack → send → unpack):
+    /// the library-MPI baseline and the default.
+    #[default]
+    Mailbox,
+    /// One-copy shared-window transport: cross-rank compiled
+    /// [`super::TransferPlan`]s copy sender's array → receiver's array
+    /// directly through the [`ExposureHub`]. Requires all ranks to
+    /// complete plan executions in the same order.
+    Window,
+}
+
+impl Transport {
+    /// Stable name for labels and JSON rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Mailbox => "mailbox",
+            Transport::Window => "window",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s {
+            "mailbox" | "mbox" | "p2p" => Some(Transport::Mailbox),
+            "window" | "win" | "shm" | "one-copy" => Some(Transport::Window),
+            _ => None,
+        }
+    }
+}
+
+/// A raw `(ptr, len)` view of a byte buffer that may cross rank threads.
+///
+/// Carries no lifetime: validity is guaranteed by the epoch protocol (the
+/// owner keeps the buffer alive and unwritten until every reader released
+/// the exposure), exactly like an address handed to `MPI_Win_attach`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RawSpan {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the span is a plain address; cross-thread use is governed by the
+// epoch protocol documented on the module.
+unsafe impl Send for RawSpan {}
+unsafe impl Sync for RawSpan {}
+
+impl RawSpan {
+    pub(crate) fn of(bytes: &[u8]) -> RawSpan {
+        RawSpan { ptr: bytes.as_ptr(), len: bytes.len() }
+    }
+
+    pub(crate) fn len(self) -> usize {
+        self.len
+    }
+
+    /// Reconstruct the byte slice.
+    ///
+    /// # Safety
+    /// The underlying buffer must be alive, at least `len` bytes, and free
+    /// of concurrent writes for the lifetime of the returned slice — the
+    /// epoch contract.
+    pub(crate) unsafe fn as_slice<'a>(self) -> &'a [u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            std::slice::from_raw_parts(self.ptr, self.len)
+        }
+    }
+}
+
+/// One exposed span: who may still read it.
+struct Exposure {
+    span: RawSpan,
+    readers_left: usize,
+}
+
+/// The dynamic-window registry of one communicator: spans exposed by rank
+/// threads, keyed by `(owner rank, wire tag)`.
+///
+/// Protocol per operation (all edges through the internal mutex):
+/// 1. owner: [`ExposureHub::expose`] with `readers` = number of pullers;
+/// 2. each reader: [`ExposureHub::pull`] (blocks until exposed) → copy →
+///    [`ExposureHub::release`];
+/// 3. owner: [`ExposureHub::wait_drained`] — returns once every reader
+///    released, closing the epoch (the buffer may be reused).
+pub(crate) struct ExposureHub {
+    m: Mutex<HashMap<(usize, u32), Exposure>>,
+    cv: Condvar,
+}
+
+impl ExposureHub {
+    pub(crate) fn new() -> ExposureHub {
+        ExposureHub { m: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+
+    /// Publish `span` under `(rank, tag)` for exactly `readers` pulls.
+    pub(crate) fn expose(&self, rank: usize, tag: u32, span: RawSpan, readers: usize) {
+        assert!(readers > 0, "expose: zero-reader exposure");
+        let mut g = self.m.lock().unwrap();
+        let prev = g.insert((rank, tag), Exposure { span, readers_left: readers });
+        assert!(prev.is_none(), "expose: duplicate exposure (rank {rank}, tag {tag:#x})");
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Blocking read of the span exposed under `(rank, tag)`. The exposure
+    /// stays live (other readers may pull concurrently) until this reader
+    /// calls [`ExposureHub::release`].
+    pub(crate) fn pull(&self, rank: usize, tag: u32) -> RawSpan {
+        let mut g = self.m.lock().unwrap();
+        loop {
+            if let Some(e) = g.get(&(rank, tag)) {
+                return e.span;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking variant of [`ExposureHub::pull`].
+    pub(crate) fn try_pull(&self, rank: usize, tag: u32) -> Option<RawSpan> {
+        self.m.lock().unwrap().get(&(rank, tag)).map(|e| e.span)
+    }
+
+    /// Signal that this reader finished copying out of `(rank, tag)`; the
+    /// last release removes the exposure and wakes the owner.
+    pub(crate) fn release(&self, rank: usize, tag: u32) {
+        let mut g = self.m.lock().unwrap();
+        let e = g.get_mut(&(rank, tag)).expect("release: no such exposure");
+        e.readers_left -= 1;
+        if e.readers_left == 0 {
+            g.remove(&(rank, tag));
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every reader of `(rank, tag)` has released — the
+    /// owner's epoch close. A never-exposed key returns immediately.
+    pub(crate) fn wait_drained(&self, rank: usize, tag: u32) {
+        let mut g = self.m.lock().unwrap();
+        while g.contains_key(&(rank, tag)) {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking variant of [`ExposureHub::wait_drained`].
+    pub(crate) fn drained(&self, rank: usize, tag: u32) -> bool {
+        !self.m.lock().unwrap().contains_key(&(rank, tag))
+    }
+}
+
+/// One rank's shared segment (written only by its owner outside epochs).
+struct Seg {
+    buf: UnsafeCell<Box<[u8]>>,
+}
+
+// SAFETY: concurrent access is governed by the window epoch protocol; the
+// library itself only forms references during the creation rendezvous,
+// when each slot has exactly one writer and no readers.
+unsafe impl Sync for Seg {}
+
+/// PSCW epoch counters (per rank, monotone across epochs).
+struct PscwState {
+    /// How many exposure epochs rank `r` has opened (`post`).
+    posts: Vec<u64>,
+    /// How many access epochs targeting rank `r` have closed (`complete`).
+    completes: Vec<u64>,
+}
+
+/// Shared state of one window across all ranks of the communicator.
+struct WinShared {
+    segs: Vec<Seg>,
+    pscw: Mutex<PscwState>,
+    cv: Condvar,
+}
+
+impl WinShared {
+    fn new(n: usize) -> WinShared {
+        WinShared {
+            segs: (0..n)
+                .map(|_| Seg { buf: UnsafeCell::new(Vec::new().into_boxed_slice()) })
+                .collect(),
+            pscw: Mutex::new(PscwState { posts: vec![0; n], completes: vec![0; n] }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Creation rendezvous registry (per communicator): window ids are drawn
+/// from per-rank sequence counters (all ranks create windows in the same
+/// order, so ids agree without extra synchronization, like the
+/// nonblocking-collective tags).
+pub(crate) struct WinRegistry {
+    m: Mutex<HashMap<u32, WinPending>>,
+    cv: Condvar,
+}
+
+struct WinPending {
+    shared: Arc<WinShared>,
+    installed: usize,
+    departed: usize,
+}
+
+impl WinRegistry {
+    pub(crate) fn new() -> WinRegistry {
+        WinRegistry { m: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+}
+
+/// A mutable raw span of a peer segment, captured once at creation.
+#[derive(Clone, Copy)]
+struct SegSpan {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: see `RawSpan` — epoch-governed addresses.
+unsafe impl Send for SegSpan {}
+unsafe impl Sync for SegSpan {}
+
+/// An MPI-3-style RMA shared window: one segment per rank, directly
+/// readable (and writable, via [`Window::put`]) by every rank of the
+/// communicator between synchronization epochs.
+///
+/// Created collectively with [`Window::allocate`]; synchronize with either
+/// the [`Window::fence`] epoch or the post-start-complete-wait epoch. Like
+/// MPI, the *user* is responsible for separating conflicting accesses into
+/// distinct epochs — which Rust's type system cannot check across rank
+/// threads, so every data accessor is an `unsafe fn` whose `# Safety`
+/// section is exactly the MPI epoch rule: no access may race a conflicting
+/// access to the same bytes; epochs (fence / PSCW) provide the ordering.
+/// The accessors copy through raw pointers internally, so no reference
+/// aliasing is ever created by the library itself.
+pub struct Window {
+    comm: Comm,
+    shared: Arc<WinShared>,
+    spans: Vec<SegSpan>,
+    /// Last post-epoch counter observed per peer (for `start`).
+    seen_posts: Vec<u64>,
+    /// Targets of the currently open access epoch.
+    access_group: Vec<usize>,
+    /// Origins of the currently open exposure epoch.
+    exposure_origins: usize,
+    /// Completions consumed by previous `wait`s.
+    completes_seen: u64,
+}
+
+impl Window {
+    /// Collectively allocate a window with a `bytes`-sized zeroed local
+    /// segment on every rank (`MPI_Win_allocate_shared`; per-rank sizes may
+    /// differ). Every rank of the communicator must call this in the same
+    /// collective order.
+    pub fn allocate(comm: &Comm, bytes: usize) -> Window {
+        let n = comm.size();
+        let me = comm.rank();
+        let wid = comm.next_win_id();
+        let reg = comm.win_registry();
+        let shared = {
+            let mut g = reg.m.lock().unwrap();
+            let entry = g.entry(wid).or_insert_with(|| WinPending {
+                shared: Arc::new(WinShared::new(n)),
+                installed: 0,
+                departed: 0,
+            });
+            entry.shared.clone()
+        };
+        // Install the local segment: slot `me` has exactly one writer (this
+        // rank) and no readers until the rendezvous below completes.
+        // SAFETY: exclusive access to slot `me` pre-rendezvous (see above);
+        // the registry mutex below publishes the write to every peer.
+        unsafe {
+            *shared.segs[me].buf.get() = vec![0u8; bytes].into_boxed_slice();
+        }
+        let spans = {
+            let mut g = reg.m.lock().unwrap();
+            g.get_mut(&wid).expect("window rendezvous entry vanished").installed += 1;
+            if g.get(&wid).unwrap().installed == n {
+                reg.cv.notify_all();
+            }
+            while g.get(&wid).unwrap().installed < n {
+                g = reg.cv.wait(g).unwrap();
+            }
+            // All segments installed and published: capture their spans.
+            // Only *shared* references are formed (several ranks run this
+            // concurrently); the mutable pointer is derived by cast, and
+            // actual writes are epoch-separated by the user protocol.
+            let spans: Vec<SegSpan> = shared
+                .segs
+                .iter()
+                .map(|s| {
+                    // SAFETY: rendezvous reached; every slot fully written,
+                    // no writers until the epochs begin.
+                    let b = unsafe { &*s.buf.get() };
+                    SegSpan { ptr: b.as_ptr() as *mut u8, len: b.len() }
+                })
+                .collect();
+            let e = g.get_mut(&wid).unwrap();
+            e.departed += 1;
+            if e.departed == n {
+                g.remove(&wid);
+            }
+            spans
+        };
+        Window {
+            comm: comm.clone(),
+            shared,
+            spans,
+            seen_posts: vec![0; n],
+            access_group: Vec::new(),
+            exposure_origins: 0,
+            completes_seen: 0,
+        }
+    }
+
+    /// Size in bytes of `rank`'s segment.
+    pub fn len(&self, rank: usize) -> usize {
+        self.spans[rank].len
+    }
+
+    /// Whether `rank`'s segment is empty.
+    pub fn is_empty(&self, rank: usize) -> bool {
+        self.spans[rank].len == 0
+    }
+
+    /// The process group this window spans.
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    fn copy_out(&self, rank: usize, offset: usize, out: &mut [u8]) {
+        let s = self.spans[rank];
+        assert!(offset + out.len() <= s.len, "window read out of bounds (rank {rank})");
+        if out.is_empty() {
+            return;
+        }
+        // SAFETY: bounds checked; epoch protocol excludes concurrent
+        // writers; source/destination never overlap (distinct allocations).
+        unsafe { std::ptr::copy_nonoverlapping(s.ptr.add(offset), out.as_mut_ptr(), out.len()) }
+    }
+
+    fn copy_in(&self, rank: usize, offset: usize, data: &[u8]) {
+        let s = self.spans[rank];
+        assert!(offset + data.len() <= s.len, "window write out of bounds (rank {rank})");
+        if data.is_empty() {
+            return;
+        }
+        // SAFETY: see `copy_out`; the epoch protocol gives this writer
+        // exclusive access to the target range.
+        unsafe { std::ptr::copy_nonoverlapping(data.as_ptr(), s.ptr.add(offset), data.len()) }
+    }
+
+    /// RMA get: copy `out.len()` bytes from `rank`'s segment at `offset`.
+    ///
+    /// # Safety
+    /// The read must be inside an epoch that orders it against every
+    /// conflicting write to those bytes (a [`Window::fence`] pair, or a
+    /// [`Window::start`]..[`Window::complete`] access epoch matching the
+    /// target's post/wait) — the MPI RMA rule; a violating call is a data
+    /// race across rank threads.
+    pub unsafe fn read(&self, rank: usize, offset: usize, out: &mut [u8]) {
+        self.copy_out(rank, offset, out);
+    }
+
+    /// RMA put: copy `data` into `rank`'s segment at `offset`.
+    ///
+    /// # Safety
+    /// The write must be inside an epoch that orders it against every
+    /// conflicting access to those bytes (see [`Window::read`]).
+    pub unsafe fn put(&self, rank: usize, offset: usize, data: &[u8]) {
+        self.copy_in(rank, offset, data);
+    }
+
+    /// Write into the local segment (shorthand for `put` on own rank).
+    ///
+    /// # Safety
+    /// Same epoch rule as [`Window::put`]: no peer may be accessing these
+    /// bytes in the current epoch.
+    pub unsafe fn write_local(&self, offset: usize, data: &[u8]) {
+        self.copy_in(self.comm.rank(), offset, data);
+    }
+
+    /// Read from the local segment.
+    ///
+    /// # Safety
+    /// Same epoch rule as [`Window::read`]: no peer may be writing these
+    /// bytes in the current epoch.
+    pub unsafe fn read_local(&self, offset: usize, out: &mut [u8]) {
+        self.copy_out(self.comm.rank(), offset, out);
+    }
+
+    /// Fence epoch (`MPI_Win_fence`): a collective barrier separating the
+    /// accesses before it from the accesses after it.
+    pub fn fence(&self) {
+        self.comm.barrier();
+    }
+
+    /// Open an exposure epoch for the given origin group
+    /// (`MPI_Win_post`): the listed ranks may access this rank's segment
+    /// until they call [`Window::complete`] and this rank calls
+    /// [`Window::wait`]. Non-blocking.
+    pub fn post(&mut self, origins: &[usize]) {
+        assert_eq!(self.exposure_origins, 0, "post: exposure epoch already open");
+        self.exposure_origins = origins.len();
+        let me = self.comm.rank();
+        let mut g = self.shared.pscw.lock().unwrap();
+        g.posts[me] += 1;
+        drop(g);
+        self.shared.cv.notify_all();
+    }
+
+    /// Open an access epoch to the given target group (`MPI_Win_start`):
+    /// blocks until every target has posted a matching exposure epoch.
+    pub fn start(&mut self, targets: &[usize]) {
+        assert!(self.access_group.is_empty(), "start: access epoch already open");
+        let mut g = self.shared.pscw.lock().unwrap();
+        for &t in targets {
+            while g.posts[t] <= self.seen_posts[t] {
+                g = self.shared.cv.wait(g).unwrap();
+            }
+            self.seen_posts[t] += 1;
+        }
+        drop(g);
+        self.access_group = targets.to_vec();
+    }
+
+    /// Close the access epoch (`MPI_Win_complete`): all this rank's
+    /// accesses to the target group are done.
+    pub fn complete(&mut self) {
+        let targets = std::mem::take(&mut self.access_group);
+        let mut g = self.shared.pscw.lock().unwrap();
+        for &t in &targets {
+            g.completes[t] += 1;
+        }
+        drop(g);
+        self.shared.cv.notify_all();
+    }
+
+    /// Close the exposure epoch (`MPI_Win_wait`): blocks until every
+    /// origin of the matching [`Window::post`] has called
+    /// [`Window::complete`].
+    pub fn wait(&mut self) {
+        let me = self.comm.rank();
+        let need = self.completes_seen + self.exposure_origins as u64;
+        let mut g = self.shared.pscw.lock().unwrap();
+        while g.completes[me] < need {
+            g = self.shared.cv.wait(g).unwrap();
+        }
+        drop(g);
+        self.completes_seen = need;
+        self.exposure_origins = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simmpi::World;
+
+    #[test]
+    fn transport_names_and_parsing() {
+        assert_eq!(Transport::default(), Transport::Mailbox);
+        assert_eq!(Transport::Mailbox.name(), "mailbox");
+        assert_eq!(Transport::Window.name(), "window");
+        assert_eq!(Transport::parse("window"), Some(Transport::Window));
+        assert_eq!(Transport::parse("shm"), Some(Transport::Window));
+        assert_eq!(Transport::parse("mailbox"), Some(Transport::Mailbox));
+        assert_eq!(Transport::parse("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn fence_epoch_neighbor_read() {
+        World::run(4, |comm| {
+            let me = comm.rank();
+            let win = Window::allocate(&comm, 8);
+            // SAFETY: every access below is fence-separated from the
+            // conflicting accesses of the peers (the MPI epoch rule).
+            unsafe {
+                win.write_local(0, &(me as u64).to_le_bytes());
+                win.fence();
+                let right = (me + 1) % comm.size();
+                let mut buf = [0u8; 8];
+                win.read(right, 0, &mut buf);
+                assert_eq!(u64::from_le_bytes(buf), right as u64);
+                win.fence();
+            }
+        });
+    }
+
+    #[test]
+    fn put_then_fence_delivers() {
+        World::run(3, |comm| {
+            let me = comm.rank();
+            let win = Window::allocate(&comm, 4);
+            win.fence();
+            // SAFETY: rank 0 is the only writer inside this epoch; the
+            // fences order the puts against every peer's local read.
+            unsafe {
+                if me == 0 {
+                    for p in 0..comm.size() {
+                        win.put(p, 0, &(p as u32 * 7).to_le_bytes());
+                    }
+                }
+                win.fence();
+                let mut buf = [0u8; 4];
+                win.read_local(0, &mut buf);
+                assert_eq!(u32::from_le_bytes(buf), me as u32 * 7);
+            }
+        });
+    }
+
+    #[test]
+    fn pscw_epoch_pairs() {
+        // Rank 0 exposes to rank 1; rank 1 accesses (reads 0's segment,
+        // puts an ack back); repeated epochs exercise the counters.
+        World::run(2, |comm| {
+            let me = comm.rank();
+            let mut win = Window::allocate(&comm, 8);
+            for round in 0..3u64 {
+                // SAFETY: the PSCW handshakes order every access — rank 0
+                // touches its segment only outside post..wait, rank 1 only
+                // inside start..complete.
+                if me == 0 {
+                    unsafe { win.write_local(0, &(100 + round).to_le_bytes()) };
+                    win.post(&[1]);
+                    win.wait();
+                    let mut ack = [0u8; 8];
+                    unsafe { win.read_local(0, &mut ack) };
+                    assert_eq!(u64::from_le_bytes(ack), 200 + round);
+                } else {
+                    win.start(&[0]);
+                    let mut got = [0u8; 8];
+                    unsafe { win.read(0, 0, &mut got) };
+                    assert_eq!(u64::from_le_bytes(got), 100 + round);
+                    unsafe { win.put(0, 0, &(200 + round).to_le_bytes()) };
+                    win.complete();
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn per_rank_segment_sizes_differ() {
+        World::run(3, |comm| {
+            let me = comm.rank();
+            let win = Window::allocate(&comm, (me + 1) * 16);
+            win.fence();
+            for p in 0..comm.size() {
+                assert_eq!(win.len(p), (p + 1) * 16);
+                assert!(!win.is_empty(p));
+            }
+            win.fence();
+        });
+    }
+
+    #[test]
+    fn exposure_hub_protocol() {
+        World::run(3, |comm| {
+            let me = comm.rank();
+            let n = comm.size();
+            let data: Vec<u8> = (0..16).map(|k| (me * 16 + k) as u8).collect();
+            let tag = 0xC100_0000 | me as u32;
+            comm.hub().expose(me, tag, RawSpan::of(&data), n - 1);
+            for p in 0..n {
+                if p == me {
+                    continue;
+                }
+                let ptag = 0xC100_0000 | p as u32;
+                let span = comm.hub().pull(p, ptag);
+                assert_eq!(span.len(), 16);
+                // SAFETY: peer keeps `data` alive until wait_drained.
+                let bytes = unsafe { span.as_slice() };
+                assert_eq!(bytes[0], (p * 16) as u8);
+                comm.hub().release(p, ptag);
+            }
+            comm.hub().wait_drained(me, tag);
+            assert!(comm.hub().drained(me, tag));
+        });
+    }
+
+    #[test]
+    fn multiple_windows_in_flight() {
+        World::run(2, |comm| {
+            let me = comm.rank();
+            let a = Window::allocate(&comm, 4);
+            let b = Window::allocate(&comm, 4);
+            // SAFETY: all writes precede the fence (a barrier on the shared
+            // communicator, so it orders accesses of both windows); all
+            // reads follow it, with no writers until the closing fence.
+            unsafe {
+                a.write_local(0, &[me as u8; 4]);
+                b.write_local(0, &[me as u8 + 10; 4]);
+                a.fence();
+                let peer = 1 - me;
+                let mut got = [0u8; 4];
+                a.read(peer, 0, &mut got);
+                assert_eq!(got, [peer as u8; 4]);
+                b.read(peer, 0, &mut got);
+                assert_eq!(got, [peer as u8 + 10; 4]);
+                a.fence();
+            }
+        });
+    }
+}

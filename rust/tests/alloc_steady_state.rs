@@ -10,9 +10,9 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
-use a2wfft::redistribute::PipelinedRedistPlan;
+use a2wfft::redistribute::{PipelinedRedistPlan, RedistPlan};
 use a2wfft::simmpi::datatype::{Datatype, TransferPlan};
-use a2wfft::simmpi::World;
+use a2wfft::simmpi::{Transport, World};
 
 thread_local! {
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
@@ -103,7 +103,7 @@ fn steady_state_blocking_redist_plan_single_rank_never_allocates() {
     // from the very first execute.
     World::run(1, |comm| {
         let sizes = [6usize, 5, 4];
-        let plan = a2wfft::redistribute::RedistPlan::new(&comm, 8, &sizes, 2, &sizes, 0);
+        let plan = RedistPlan::new(&comm, 8, &sizes, 2, &sizes, 0);
         let a: Vec<f64> = (0..plan.elems_a()).map(|x| x as f64 - 7.0).collect();
         let mut b = vec![0.0f64; plan.elems_b()];
         plan.execute(&a, &mut b);
@@ -113,5 +113,93 @@ fn steady_state_blocking_redist_plan_single_rank_never_allocates() {
         }
         let delta = allocs_on_this_thread() - n0;
         assert_eq!(delta, 0, "blocking fused executions allocated {delta} times");
+    });
+}
+
+#[test]
+fn steady_state_window_transport_multi_rank_never_allocates() {
+    // The one-copy window transport has *no payload buffers at all*: after
+    // the exposure-hub map warms its capacity, multi-rank executions are
+    // allocation-free on every rank thread — stronger than the mailbox
+    // path, whose per-message payload Vecs the arenas merely recycle. The
+    // counting allocator is thread-local, so each rank asserts its own
+    // steady state independently.
+    World::run(2, |comm| {
+        let me = comm.rank();
+        let global = [6usize, 8, 4];
+        let m = comm.size();
+        let sizes_a = [global[0], a2wfft::decomp::decompose(global[1], m, me).0, global[2]];
+        let sizes_b = [a2wfft::decomp::decompose(global[0], m, me).0, global[1], global[2]];
+        let plan =
+            RedistPlan::with_transport(&comm, 8, &sizes_a, 0, &sizes_b, 1, Transport::Window);
+        let a: Vec<f64> = (0..plan.elems_a()).map(|x| (me * 77 + x) as f64).collect();
+        let mut b = vec![0.0f64; plan.elems_b()];
+        let mut back = vec![0.0f64; plan.elems_a()];
+        for _ in 0..3 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        assert_eq!(a, back, "rank {me}: roundtrip broken");
+        comm.barrier();
+        let n0 = allocs_on_this_thread();
+        for _ in 0..10 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        let delta = allocs_on_this_thread() - n0;
+        assert_eq!(
+            delta, 0,
+            "rank {me}: steady-state window executions allocated {delta} times in 10 trips"
+        );
+        assert_eq!(a, back, "rank {me}: roundtrip broken after steady-state runs");
+    });
+}
+
+#[test]
+fn steady_state_window_pipelined_never_allocates() {
+    // The pipelined engine on the window transport: persistent
+    // sub-exchanges expose/pull raw spans (no payload staging), chunk
+    // scratch is preallocated, and the in-flight queues keep their
+    // capacity — so steady-state round-trips are allocation-free on every
+    // rank thread.
+    World::run(2, |comm| {
+        let me = comm.rank();
+        let global = [6usize, 8, 10];
+        let m = comm.size();
+        let sizes_a = [global[0], a2wfft::decomp::decompose(global[1], m, me).0, global[2]];
+        let sizes_b = [a2wfft::decomp::decompose(global[0], m, me).0, global[1], global[2]];
+        let mut plan = PipelinedRedistPlan::with_transport(
+            &comm,
+            8,
+            &sizes_a,
+            0,
+            &sizes_b,
+            1,
+            4,
+            2,
+            Transport::Window,
+        );
+        assert!(plan.is_pipelined());
+        assert_eq!(plan.transport(), Transport::Window);
+        let a: Vec<f64> = (0..plan.elems_a()).map(|x| (me * 31 + x) as f64).collect();
+        let mut b = vec![0.0f64; plan.elems_b()];
+        let mut back = vec![0.0f64; plan.elems_a()];
+        for _ in 0..3 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        assert_eq!(a, back, "rank {me}: roundtrip broken");
+        comm.barrier();
+        let n0 = allocs_on_this_thread();
+        for _ in 0..5 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        let delta = allocs_on_this_thread() - n0;
+        assert_eq!(
+            delta, 0,
+            "rank {me}: steady-state window pipelined executions allocated {delta} times"
+        );
+        assert_eq!(a, back, "rank {me}: roundtrip broken after steady-state runs");
     });
 }

@@ -1,0 +1,233 @@
+//! Transport equivalence: the one-copy shared-window transport must be
+//! **bitwise identical** to the mailbox transport at every layer —
+//! redistribution plans, pipelined sub-exchanges, and full distributed
+//! transforms — over random shapes, grids, methods, exec modes and dtypes
+//! (deterministic xorshift sweeps; the offline crate set has no proptest).
+//! Transport changes how bytes move, never what they are.
+
+use a2wfft::fft::{Complex, NativeFft, Real};
+use a2wfft::pfft::{ExecMode, Kind, PfftPlan, RedistMethod};
+use a2wfft::redistribute::RedistPlan;
+use a2wfft::simmpi::{as_bytes, dims_create, Transport, World};
+
+/// Small deterministic PRNG (xorshift64*).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+    }
+}
+
+#[test]
+fn prop_redist_plan_window_bitwise_equals_mailbox() {
+    let mut rng = Rng::new(41);
+    for case in 0..15 {
+        let d = rng.range(2, 4);
+        let global: Vec<usize> = (0..d).map(|_| rng.range(2, 9)).collect();
+        let nprocs = rng.range(2, 5);
+        let axis_a = rng.below(d);
+        let mut axis_b = rng.below(d);
+        while axis_b == axis_a {
+            axis_b = rng.below(d);
+        }
+        let seed = rng.next_u64();
+        let global_c = global.clone();
+        World::run(nprocs, move |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let mut sizes_a = global_c.clone();
+            let mut sizes_b = global_c.clone();
+            sizes_a[axis_b] = a2wfft::decomp::decompose(global_c[axis_b], m, me).0;
+            sizes_b[axis_a] = a2wfft::decomp::decompose(global_c[axis_a], m, me).0;
+            let mut lr = Rng::new(seed ^ (me as u64 + 1));
+            let a: Vec<f64> =
+                (0..sizes_a.iter().product::<usize>()).map(|_| lr.f64()).collect();
+            let mailbox =
+                RedistPlan::new(&comm, 8, &sizes_a, axis_a, &sizes_b, axis_b);
+            let window = RedistPlan::with_transport(
+                &comm, 8, &sizes_a, axis_a, &sizes_b, axis_b, Transport::Window,
+            );
+            let mut b_mail = vec![0.0f64; mailbox.elems_b()];
+            mailbox.execute(&a, &mut b_mail);
+            let mut b_win = vec![0.0f64; window.elems_b()];
+            window.execute(&a, &mut b_win);
+            assert_eq!(
+                as_bytes(&b_mail),
+                as_bytes(&b_win),
+                "case {case} rank {me}: transports disagree"
+            );
+            let mut back = vec![0.0f64; window.elems_a()];
+            window.execute_back(&b_win, &mut back);
+            assert_eq!(as_bytes(&a), as_bytes(&back), "case {case} rank {me}: roundtrip");
+        });
+    }
+}
+
+/// One transform case at precision `T`: both transports (and, for blocking
+/// alltoallw, the traditional mailbox baseline) must produce bitwise
+/// identical spectra and roundtrip outputs.
+fn transform_case<T: Real>(
+    global: Vec<usize>,
+    ranks: usize,
+    grid_ndims: usize,
+    kind: Kind,
+    exec: ExecMode,
+    seed: u64,
+    case: usize,
+) {
+    World::run(ranks, move |comm| {
+        let me = comm.rank();
+        let dims = dims_create(comm.size(), grid_ndims);
+        let mk = |transport: Transport| {
+            PfftPlan::<T>::with_transport(
+                &comm,
+                &global,
+                &dims,
+                kind,
+                RedistMethod::Alltoallw,
+                exec,
+                transport,
+            )
+        };
+        let mut plan_mail = mk(Transport::Mailbox);
+        let mut plan_win = mk(Transport::Window);
+        assert_eq!(plan_win.transport(), Transport::Window, "case {case}");
+        let mut engine = NativeFft::<T>::new();
+        let ilen = plan_mail.input_len();
+        let olen = plan_mail.output_len();
+        let mut lr = Rng::new(seed ^ (me as u64).wrapping_mul(0x5851F42D4C957F2D));
+        match kind {
+            Kind::C2c => {
+                let input: Vec<Complex<T>> = (0..ilen)
+                    .map(|_| Complex::from_f64(lr.f64(), lr.f64()))
+                    .collect();
+                let mut spec_mail = vec![Complex::<T>::ZERO; olen];
+                let mut spec_win = vec![Complex::<T>::ZERO; olen];
+                plan_mail.forward(&mut engine, &input, &mut spec_mail);
+                plan_win.forward(&mut engine, &input, &mut spec_win);
+                assert_eq!(
+                    as_bytes(&spec_mail),
+                    as_bytes(&spec_win),
+                    "case {case} rank {me} [{}]: spectra differ across transports",
+                    T::NAME
+                );
+                let mut back_mail = vec![Complex::<T>::ZERO; ilen];
+                let mut back_win = vec![Complex::<T>::ZERO; ilen];
+                plan_mail.backward(&mut engine, &spec_mail, &mut back_mail);
+                plan_win.backward(&mut engine, &spec_win, &mut back_win);
+                assert_eq!(
+                    as_bytes(&back_mail),
+                    as_bytes(&back_win),
+                    "case {case} rank {me}: roundtrips differ across transports"
+                );
+            }
+            Kind::R2c => {
+                let input: Vec<T> = (0..ilen).map(|_| T::from_f64(lr.f64())).collect();
+                let mut spec_mail = vec![Complex::<T>::ZERO; olen];
+                let mut spec_win = vec![Complex::<T>::ZERO; olen];
+                plan_mail.forward_r2c(&mut engine, &input, &mut spec_mail);
+                plan_win.forward_r2c(&mut engine, &input, &mut spec_win);
+                assert_eq!(
+                    as_bytes(&spec_mail),
+                    as_bytes(&spec_win),
+                    "case {case} rank {me} [{}]: r2c spectra differ across transports",
+                    T::NAME
+                );
+                let mut back_mail = vec![T::ZERO; ilen];
+                let mut back_win = vec![T::ZERO; ilen];
+                plan_mail.backward_c2r(&mut engine, &spec_mail, &mut back_mail);
+                plan_win.backward_c2r(&mut engine, &spec_win, &mut back_win);
+                assert_eq!(
+                    as_bytes(&back_mail),
+                    as_bytes(&back_win),
+                    "case {case} rank {me}: c2r roundtrips differ across transports"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_transform_spectra_bitwise_equal_across_transports() {
+    // Random shapes / ranks / grids / kinds / exec modes, both dtypes.
+    let mut rng = Rng::new(42);
+    for case in 0..10 {
+        let d = rng.range(3, 4);
+        let global: Vec<usize> = (0..d).map(|_| rng.range(4, 11)).collect();
+        let ranks = rng.range(2, 5);
+        let grid_ndims = rng.range(1, (d - 1).min(2));
+        let kind = if rng.below(2) == 0 { Kind::C2c } else { Kind::R2c };
+        let exec = if rng.below(2) == 0 {
+            ExecMode::Blocking
+        } else {
+            ExecMode::Pipelined { depth: rng.range(2, 4) }
+        };
+        let seed = rng.next_u64();
+        if rng.below(2) == 0 {
+            transform_case::<f64>(global, ranks, grid_ndims, kind, exec, seed, case);
+        } else {
+            transform_case::<f32>(global, ranks, grid_ndims, kind, exec, seed, case);
+        }
+    }
+}
+
+#[test]
+fn window_alltoallw_matches_traditional_mailbox_baseline() {
+    // Cross-method, cross-transport triangle at a fixed pencil case: the
+    // paper's alltoallw on the window transport must agree bitwise with
+    // the traditional remap+alltoallv baseline on the mailbox.
+    World::run(4, |comm| {
+        let me = comm.rank();
+        let global = vec![8usize, 12, 6];
+        let dims = dims_create(comm.size(), 2);
+        let mut window = PfftPlan::<f64>::with_transport(
+            &comm,
+            &global,
+            &dims,
+            Kind::C2c,
+            RedistMethod::Alltoallw,
+            ExecMode::Blocking,
+            Transport::Window,
+        );
+        let mut trad = PfftPlan::<f64>::with_dims(
+            &comm,
+            &global,
+            &dims,
+            Kind::C2c,
+            RedistMethod::Traditional,
+        );
+        let mut engine = NativeFft::<f64>::new();
+        let input: Vec<Complex<f64>> = (0..window.input_len())
+            .map(|k| Complex::new((me * 1000 + k) as f64 * 0.25, (k as f64 * 0.5).sin()))
+            .collect();
+        let mut spec_win = vec![Complex::<f64>::ZERO; window.output_len()];
+        let mut spec_trad = vec![Complex::<f64>::ZERO; trad.output_len()];
+        window.forward(&mut engine, &input, &mut spec_win);
+        trad.forward(&mut engine, &input, &mut spec_trad);
+        assert_eq!(
+            as_bytes(&spec_win),
+            as_bytes(&spec_trad),
+            "rank {me}: window alltoallw != traditional baseline"
+        );
+    });
+}
