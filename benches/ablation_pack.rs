@@ -331,7 +331,7 @@ fn wire_section(tiny: bool, transport: Transport, rows: &mut Vec<String>) {
                 ranks,
                 kind: Kind::R2c,
                 dtype,
-                transport,
+                transport: transport.into(),
                 inner: 1,
                 outer: if tiny { 1 } else { 2 },
                 ..Default::default()

@@ -1,0 +1,136 @@
+//! Ablation: the autotuning planner vs fixed configurations.
+//!
+//! Three steps, on identical substrate:
+//!
+//! 1. **ranked search** — run the tuner in-situ at a paper-like shape and
+//!    print the full ranked (method × exec × depth × transport × grid)
+//!    table, exactly what `repro tune` shows;
+//! 2. **re-measure** — run the tuned winner and the worst fixed
+//!    configuration again through the driver's measurement protocol
+//!    (fresh worlds, best-of-outer timing), so the gate below is judged
+//!    on measurements *independent* of the ones that ranked them;
+//! 3. **gate** — the tuned configuration must not be slower than the
+//!    worst fixed configuration (with a 1.25x slack factor for timing
+//!    noise at bench scales: the spread between best and worst fixed
+//!    configs is typically far larger).
+//!
+//! Emits `BENCH_ablation_tune.json` (written *before* the gate, so a
+//! gate failure still leaves the evidence). `--tiny` shrinks the shape
+//! and budget for CI.
+
+use a2wfft::cli::Args;
+use a2wfft::coordinator::benchkit::{banner, json_usize_array, write_bench_json, JsonObj};
+use a2wfft::coordinator::{run_config, Knob, RunConfig};
+use a2wfft::pfft::Kind;
+use a2wfft::simmpi::World;
+use a2wfft::tune::{tune_plan, Budget, Candidate, TuneReport, WallClock};
+
+/// Re-measure one candidate through the driver protocol.
+fn remeasure(cand: &Candidate, global: &[usize], ranks: usize, tiny: bool) -> f64 {
+    let cfg = RunConfig {
+        global: global.to_vec(),
+        grid: cand.grid.clone(),
+        ranks,
+        kind: Kind::R2c,
+        method: Knob::Fixed(cand.method),
+        exec: Knob::Fixed(cand.exec),
+        transport: Knob::Fixed(cand.transport),
+        inner: if tiny { 1 } else { 2 },
+        outer: if tiny { 2 } else { 3 },
+        ..Default::default()
+    };
+    run_config(&cfg, cand.grid.len()).total
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["tiny"]);
+    let tiny = args.has_flag("tiny");
+    let (global, ranks, budget) = if tiny {
+        (vec![16, 12, 10], 4usize, Budget::Tiny)
+    } else {
+        (vec![64, 64, 64], 8usize, Budget::Normal)
+    };
+    banner(&format!(
+        "autotune search: {global:?} over {ranks} ranks, r2c, budget {}",
+        budget.name()
+    ));
+    let global_run = global.clone();
+    let report: TuneReport = World::run(ranks, move |comm| {
+        tune_plan::<f64>(&comm, &global_run, Kind::R2c, budget, None, false, &WallClock)
+    })
+    .remove(0);
+    println!("rank\tlabel\tseconds_per_pair\tvs_best");
+    let best_s = report.winner().seconds;
+    let mut rows: Vec<String> = Vec::new();
+    for (i, e) in report.entries.iter().enumerate() {
+        println!(
+            "{}\t{}\t{:.6e}\t{:.2}x",
+            i + 1,
+            e.candidate.label(),
+            e.seconds,
+            e.seconds / best_s
+        );
+        rows.push(
+            JsonObj::new()
+                .str("section", "ranked")
+                .str("label", &e.candidate.label())
+                .str("method", e.candidate.method.name())
+                .str("exec", e.candidate.exec.name())
+                .int("overlap_depth", e.candidate.exec.depth() as u64)
+                .str("transport", e.candidate.transport.name())
+                .raw("grid", json_usize_array(&e.candidate.grid))
+                .int("ranks", ranks as u64)
+                .num("total_s", e.seconds)
+                .str("dtype", "f64")
+                .render(),
+        );
+    }
+    if report.skipped > 0 {
+        println!("# {} candidate(s) beyond the budget cap were not measured", report.skipped);
+    }
+
+    banner("re-measure: tuned winner vs worst fixed configuration (driver protocol)");
+    let winner = report.winner().candidate.clone();
+    let worst = report.entries.last().unwrap().candidate.clone();
+    let tuned_s = remeasure(&winner, &global, ranks, tiny);
+    let worst_s = remeasure(&worst, &global, ranks, tiny);
+    println!("config\tlabel\ttotal_s");
+    println!("tuned\t{}\t{tuned_s:.6}", winner.label());
+    println!("worst-fixed\t{}\t{worst_s:.6}", worst.label());
+    for (tag, cand, secs) in
+        [("tuned", &winner, tuned_s), ("worst-fixed", &worst, worst_s)]
+    {
+        rows.push(
+            JsonObj::new()
+                .str("section", "remeasure")
+                .str("label", tag)
+                .str("config", &cand.label())
+                .int("ranks", ranks as u64)
+                .num("total_s", secs)
+                .str("dtype", "f64")
+                .bool("tuned", tag == "tuned")
+                .render(),
+        );
+    }
+    // Evidence first, gate second.
+    match write_bench_json("ablation_tune", &rows) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_ablation_tune.json: {e}"),
+    }
+    // The acceptance gate: tuning must never pick something slower than
+    // the worst fixed configuration. 1.25x slack absorbs timing noise at
+    // bench scales; the spread the tuner exploits is far larger.
+    if winner != worst {
+        assert!(
+            tuned_s <= worst_s * 1.25,
+            "tuned configuration ({}: {tuned_s:.6}s) slower than the worst fixed \
+             configuration ({}: {worst_s:.6}s)",
+            winner.label(),
+            worst.label()
+        );
+    }
+    println!(
+        "\ntuned-vs-worst: {:.2}x (tuned {tuned_s:.6}s, worst {worst_s:.6}s) — gate OK",
+        worst_s / tuned_s
+    );
+}

@@ -91,6 +91,55 @@ impl Args {
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// Strict option checking for a subcommand: every parsed option and
+    /// flag must appear in the valid lists. This is what turns the
+    /// parser's lenient fallbacks into loud errors — a typo like
+    /// `--transprt window` (unknown option) or `--transport --json`
+    /// (a value-taking option parsed as a bare flag, because the next
+    /// token starts with `--`) is rejected with a message listing the
+    /// valid spellings instead of being silently swallowed.
+    pub fn validate(
+        &self,
+        ctx: &str,
+        valid_options: &[&str],
+        valid_flags: &[&str],
+    ) -> Result<(), String> {
+        let listing = || {
+            format!(
+                "valid options for `{ctx}`: {}\nvalid flags for `{ctx}`: {}",
+                if valid_options.is_empty() { "(none)".to_string() } else { valid_options.join(", ") },
+                if valid_flags.is_empty() { "(none)".to_string() } else { valid_flags.join(", ") },
+            )
+        };
+        let mut keys: Vec<&str> = self.options.keys().map(|k| k.as_str()).collect();
+        keys.sort_unstable();
+        for k in keys {
+            if valid_flags.contains(&k) {
+                return Err(format!(
+                    "--{k} is a flag and takes no value (got `--{k} {}`)\n{}",
+                    self.options[k],
+                    listing()
+                ));
+            }
+            if !valid_options.contains(&k) {
+                return Err(format!("unknown option --{k} for `{ctx}`\n{}", listing()));
+            }
+        }
+        for f in &self.flags {
+            if valid_options.contains(&f.as_str()) {
+                return Err(format!(
+                    "--{f} requires a value: `--{f} <value>` (a following `--...` token is \
+                     never consumed as the value)\n{}",
+                    listing()
+                ));
+            }
+            if !valid_flags.contains(&f.as_str()) {
+                return Err(format!("unknown flag --{f} for `{ctx}`\n{}", listing()));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -128,5 +177,43 @@ mod tests {
     fn defaults() {
         let a = parse(&[]);
         assert_eq!(a.get_usize("ranks", 7), 7);
+    }
+
+    #[test]
+    fn validate_accepts_known_spellings() {
+        let a = parse(&["run", "--transport", "window", "--verbose"]);
+        assert!(a.validate("run", &["transport"], &["verbose"]).is_ok());
+        // No options at all is fine too.
+        assert!(parse(&["run"]).validate("run", &[], &[]).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_typos_with_listing() {
+        // The classic swallowed typo: --transprt takes "window" as its
+        // value and would previously just be ignored.
+        let a = parse(&["--transprt", "window"]);
+        let err = a.validate("run", &["transport"], &["json"]).unwrap_err();
+        assert!(err.contains("unknown option --transprt"), "{err}");
+        assert!(err.contains("transport"), "listing missing: {err}");
+    }
+
+    #[test]
+    fn validate_rejects_option_parsed_as_flag() {
+        // `--transport --json`: the parser refuses to consume `--json`
+        // as a value, so transport lands in the flag list — validation
+        // must call that out as a missing value, not an unknown flag.
+        let a = parse(&["--transport", "--json"]);
+        let err = a.validate("run", &["transport"], &["json"]).unwrap_err();
+        assert!(err.contains("--transport requires a value"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_unknown_flag_and_valued_flag() {
+        let a = parse(&["--jsn"]);
+        let err = a.validate("run", &["transport"], &["json"]).unwrap_err();
+        assert!(err.contains("unknown flag --jsn"), "{err}");
+        let a = parse(&["--verbose=yes"]);
+        let err = a.validate("run", &[], &["verbose"]).unwrap_err();
+        assert!(err.contains("--verbose is a flag"), "{err}");
     }
 }

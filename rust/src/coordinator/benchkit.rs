@@ -79,8 +79,8 @@ pub fn real_row_full(
         grid: Vec::new(),
         ranks,
         kind,
-        method,
-        exec,
+        method: method.into(),
+        exec: exec.into(),
         engine,
         dtype,
         inner: 2,
@@ -165,6 +165,11 @@ impl JsonObj {
         self.push(key, format!("{value}"))
     }
 
+    /// Boolean field.
+    pub fn bool(self, key: &str, value: bool) -> JsonObj {
+        self.push(key, format!("{value}"))
+    }
+
     /// Pre-rendered JSON value (arrays, nested objects); the caller
     /// guarantees validity.
     pub fn raw(self, key: &str, value: String) -> JsonObj {
@@ -200,16 +205,28 @@ pub fn json_usize_array(xs: &[usize]) -> String {
     format!("[{}]", body.join(", "))
 }
 
-/// One machine-readable result row: label, configuration, dtype, per-stage
-/// timings, payload bytes and the engine's fused / one-copy / staged copy
-/// attribution.
-pub fn report_json(label: &str, global: &[usize], ranks: usize, rep: &RunReport) -> String {
+/// One machine-readable result row: label, configuration (including the
+/// chosen method/exec/grid and whether the autotuner chose them), dtype,
+/// per-stage timings, payload bytes and the engine's fused / one-copy /
+/// staged copy attribution.
+pub fn report_json(
+    label: &str,
+    global: &[usize],
+    grid: &[usize],
+    ranks: usize,
+    rep: &RunReport,
+) -> String {
     JsonObj::new()
         .str("label", label)
         .raw("global", json_usize_array(global))
+        .raw("grid", json_usize_array(grid))
         .int("ranks", ranks as u64)
         .str("dtype", rep.dtype)
         .str("transport", rep.transport)
+        .str("method", rep.method)
+        .str("exec", rep.exec)
+        .int("overlap_depth", rep.overlap_depth)
+        .bool("tuned", rep.tuned)
         .num("total_s", rep.total)
         .num("fft_s", rep.fft)
         .num("redist_s", rep.redist)
@@ -252,11 +269,12 @@ mod tests {
             .int("n", 7)
             .num("t", 1.5)
             .num("bad", f64::NAN)
+            .bool("ok", true)
             .raw("shape", json_usize_array(&[4, 5]))
             .render();
         assert_eq!(
             s,
-            "{\"label\": \"a\\\"b\", \"n\": 7, \"t\": 1.5, \"bad\": null, \"shape\": [4, 5]}"
+            "{\"label\": \"a\\\"b\", \"n\": 7, \"t\": 1.5, \"bad\": null, \"ok\": true, \"shape\": [4, 5]}"
         );
     }
 

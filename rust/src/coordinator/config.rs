@@ -1,8 +1,43 @@
 //! Run configuration for the driver and CLI.
 
+use std::path::PathBuf;
+
 use crate::fft::Real;
 use crate::pfft::{ExecMode, Kind, RedistMethod};
 use crate::simmpi::Transport;
+use crate::tune::Budget;
+
+/// A run knob that is either fixed by the caller or left to the
+/// autotuning planner ([`crate::tune`]) to resolve empirically at plan
+/// time. `Knob::from(value)` / `.into()` wraps a concrete value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Knob<T> {
+    /// Resolved by the tuner (measured search, wisdom-accelerated).
+    Auto,
+    /// Fixed by the caller.
+    Fixed(T),
+}
+
+impl<T: Copy> Knob<T> {
+    /// The fixed value, if there is one.
+    pub fn fixed(self) -> Option<T> {
+        match self {
+            Knob::Fixed(v) => Some(v),
+            Knob::Auto => None,
+        }
+    }
+
+    /// Whether the tuner must resolve this knob.
+    pub fn is_auto(self) -> bool {
+        matches!(self, Knob::Auto)
+    }
+}
+
+impl<T> From<T> for Knob<T> {
+    fn from(v: T) -> Knob<T> {
+        Knob::Fixed(v)
+    }
+}
 
 /// Which serial FFT engine the ranks use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,13 +125,15 @@ pub struct RunConfig {
     pub ranks: usize,
     /// Transform kind.
     pub kind: Kind,
-    /// Redistribution method.
-    pub method: RedistMethod,
-    /// Redistribution execution mode (blocking vs pipelined overlap).
-    pub exec: ExecMode,
-    /// Payload transport of the redistribution collectives (mailbox
-    /// pack/send/unpack vs the one-copy shared-window engine).
-    pub transport: Transport,
+    /// Redistribution method (`Auto` is resolved by the tuner).
+    pub method: Knob<RedistMethod>,
+    /// Redistribution execution mode — blocking vs pipelined overlap
+    /// (`Auto` is resolved by the tuner, depth ladder included).
+    pub exec: Knob<ExecMode>,
+    /// Payload transport of the redistribution collectives — mailbox
+    /// pack/send/unpack vs the one-copy shared-window engine (`Auto` is
+    /// resolved by the tuner).
+    pub transport: Knob<Transport>,
     /// Serial engine.
     pub engine: EngineKind,
     /// Element precision (the driver monomorphizes over this).
@@ -105,6 +142,13 @@ pub struct RunConfig {
     pub inner: usize,
     /// Outer loop length (timing samples; fastest is reported).
     pub outer: usize,
+    /// Search budget used when any knob is `Auto`.
+    pub budget: Budget,
+    /// Wisdom file consulted (and updated) by a **full**-auto resolution
+    /// — method, exec and transport all `Auto` with an empty grid; a
+    /// partially pinned search is never persisted (wisdom is keyed by
+    /// problem signature alone). `None` disables persistence.
+    pub wisdom: Option<PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -114,13 +158,15 @@ impl Default for RunConfig {
             grid: Vec::new(),
             ranks: 4,
             kind: Kind::R2c,
-            method: RedistMethod::Alltoallw,
-            exec: ExecMode::Blocking,
-            transport: Transport::Mailbox,
+            method: Knob::Fixed(RedistMethod::Alltoallw),
+            exec: Knob::Fixed(ExecMode::Blocking),
+            transport: Knob::Fixed(Transport::Mailbox),
             engine: EngineKind::Native,
             dtype: Dtype::F64,
             inner: 3,
             outer: 5,
+            budget: Budget::Normal,
+            wisdom: None,
         }
     }
 }
@@ -134,6 +180,21 @@ impl RunConfig {
             assert_eq!(self.grid.iter().product::<usize>(), self.ranks, "grid/ranks mismatch");
             self.grid.clone()
         }
+    }
+
+    /// Whether any knob needs the tuner (an empty grid alone does not —
+    /// that is the historical `dims_create` default, not a search).
+    pub fn needs_tuning(&self) -> bool {
+        self.method.is_auto() || self.exec.is_auto() || self.transport.is_auto()
+    }
+
+    /// Whether a resolution may consult/persist wisdom: every searched
+    /// axis auto, so the winner is a function of the signature alone.
+    pub fn full_auto(&self) -> bool {
+        self.method.is_auto()
+            && self.exec.is_auto()
+            && self.transport.is_auto()
+            && self.grid.is_empty()
     }
 }
 
@@ -152,6 +213,38 @@ mod tests {
     fn explicit_grid_kept() {
         let c = RunConfig { grid: vec![4, 1], ..Default::default() };
         assert_eq!(c.resolved_grid(2), vec![4, 1]);
+    }
+
+    #[test]
+    fn knob_semantics() {
+        let k: Knob<RedistMethod> = RedistMethod::Traditional.into();
+        assert_eq!(k.fixed(), Some(RedistMethod::Traditional));
+        assert!(!k.is_auto());
+        let a: Knob<Transport> = Knob::Auto;
+        assert_eq!(a.fixed(), None);
+        assert!(a.is_auto());
+    }
+
+    #[test]
+    fn tuning_predicates() {
+        let fixed = RunConfig::default();
+        assert!(!fixed.needs_tuning());
+        assert!(!fixed.full_auto());
+        let partial = RunConfig { transport: Knob::Auto, ..Default::default() };
+        assert!(partial.needs_tuning());
+        assert!(!partial.full_auto());
+        let full = RunConfig {
+            method: Knob::Auto,
+            exec: Knob::Auto,
+            transport: Knob::Auto,
+            ..Default::default()
+        };
+        assert!(full.needs_tuning());
+        assert!(full.full_auto());
+        // An explicit grid pins the grid axis: no wisdom.
+        let pinned_grid = RunConfig { grid: vec![2, 2], ..full.clone() };
+        assert!(pinned_grid.needs_tuning());
+        assert!(!pinned_grid.full_auto());
     }
 
     #[test]

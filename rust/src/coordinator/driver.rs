@@ -8,12 +8,13 @@
 
 use std::time::Instant;
 
-use crate::coordinator::config::{Dtype, EngineKind, RunConfig};
+use crate::coordinator::config::{Dtype, EngineKind, Knob, RunConfig};
 use crate::coordinator::metrics::RankMetrics;
 use crate::fft::{Complex, NativeFft, Real, SerialFft};
 use crate::pfft::{Kind, PfftPlan};
 use crate::runtime::XlaFftEngine;
 use crate::simmpi::World;
+use crate::tune::{search, tune_plan, Signature, TuneReport, TuneSpace, WallClock};
 
 /// Aggregated result of one configuration (the paper's "fastest of the
 /// outer loop, divided by the inner length", max-reduced across ranks).
@@ -49,6 +50,16 @@ pub struct RunReport {
     /// Transport name of the run (`"mailbox"`/`"window"`), for labels and
     /// JSON rows (part of the trend group identity, like dtype).
     pub transport: &'static str,
+    /// Redistribution method name of the run (`"alltoallw"`/
+    /// `"traditional"`) — the chosen config, whether fixed or tuned.
+    pub method: &'static str,
+    /// Exec-mode name of the run (`"blocking"`/`"pipelined"`).
+    pub exec: &'static str,
+    /// Overlap depth of the pipelined mode (0 for blocking).
+    pub overlap_depth: u64,
+    /// Whether the configuration was resolved by the autotuner
+    /// ([`resolve_auto`]) rather than fixed by the caller.
+    pub tuned: bool,
 }
 
 impl RunReport {
@@ -69,20 +80,100 @@ fn make_engine<T: Real>(kind: EngineKind) -> Box<dyn SerialFft<T>> {
     }
 }
 
-/// Execute `cfg` and return the aggregated report (grid dimensionality is
-/// taken from `cfg.grid` or defaults to pencil for 3-D+, slab for 2-D).
-/// Dispatches on [`RunConfig::dtype`] and monomorphizes the whole stack.
-pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
+/// Resolve every `Auto` knob of `cfg` through the autotuning planner
+/// ([`crate::tune`]): a no-op `(cfg, false)` when all knobs are fixed;
+/// otherwise the tuner searches (or recalls from wisdom, full-auto only)
+/// in its own simulated world and the returned config carries the
+/// winning method/exec/transport/grid as `Fixed` knobs, with `true`.
+pub fn resolve_auto(cfg: &RunConfig) -> (RunConfig, bool) {
+    if !cfg.needs_tuning() {
+        return (cfg.clone(), false);
+    }
     match cfg.dtype {
-        Dtype::F32 => run_config_typed::<f32>(cfg, grid_ndims),
-        Dtype::F64 => run_config_typed::<f64>(cfg, grid_ndims),
+        Dtype::F32 => resolve_typed::<f32>(cfg),
+        Dtype::F64 => resolve_typed::<f64>(cfg),
     }
 }
 
+fn resolve_typed<T: Real>(cfg: &RunConfig) -> (RunConfig, bool) {
+    let full_auto = cfg.full_auto();
+    let reports: Vec<TuneReport> = World::run(cfg.ranks, |comm| {
+        if full_auto {
+            tune_plan::<T>(
+                &comm,
+                &cfg.global,
+                cfg.kind,
+                cfg.budget,
+                cfg.wisdom.as_deref(),
+                false,
+                &WallClock,
+            )
+        } else {
+            // Partially pinned: search the remaining axes, skip wisdom
+            // (it is keyed by problem signature alone, which does not
+            // encode pins).
+            let mut space = TuneSpace::new(&cfg.global, comm.size(), cfg.budget);
+            if let Knob::Fixed(m) = cfg.method {
+                space.pin_method(m);
+            }
+            if let Knob::Fixed(e) = cfg.exec {
+                space.pin_exec(e);
+            }
+            if let Knob::Fixed(t) = cfg.transport {
+                space.pin_transport(t);
+            }
+            if !cfg.grid.is_empty() {
+                space.pin_grid(cfg.grid.clone());
+            }
+            let (entries, skipped) =
+                search::<T>(&comm, &cfg.global, cfg.kind, &space, cfg.budget.pairs(), &WallClock);
+            TuneReport {
+                signature: Signature::new::<T>(&cfg.global, comm.size(), cfg.kind),
+                budget: cfg.budget,
+                entries,
+                from_wisdom: false,
+                persisted: false,
+                skipped,
+            }
+        }
+    });
+    let report = reports.into_iter().next().expect("tune world returned no report");
+    let winner = report.winner().candidate.clone();
+    let resolved = RunConfig {
+        method: Knob::Fixed(winner.method),
+        exec: Knob::Fixed(winner.exec),
+        transport: Knob::Fixed(winner.transport),
+        grid: winner.grid,
+        ..cfg.clone()
+    };
+    (resolved, true)
+}
+
+/// Execute `cfg` and return the aggregated report (grid dimensionality is
+/// taken from `cfg.grid` or defaults to pencil for 3-D+, slab for 2-D).
+/// `Auto` knobs are resolved through [`resolve_auto`] first; then the
+/// run dispatches on [`RunConfig::dtype`] and monomorphizes the whole
+/// stack.
+pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
+    let (resolved, tuned) = resolve_auto(cfg);
+    let mut rep = match resolved.dtype {
+        Dtype::F32 => run_config_typed::<f32>(&resolved, grid_ndims),
+        Dtype::F64 => run_config_typed::<f64>(&resolved, grid_ndims),
+    };
+    rep.tuned = tuned;
+    rep
+}
+
 /// The monomorphic driver body: every buffer, twiddle table and
-/// redistribution payload below this call is `T`-typed.
+/// redistribution payload below this call is `T`-typed. Every knob must
+/// be `Fixed` (callers with `Auto` knobs go through [`run_config`] /
+/// [`resolve_auto`]).
 pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
     let cfg = cfg.clone();
+    let unresolved = "run_config_typed: Auto knob unresolved (use run_config or resolve_auto)";
+    let method = cfg.method.fixed().expect(unresolved);
+    let exec = cfg.exec.fixed().expect(unresolved);
+    let transport = cfg.transport.fixed().expect(unresolved);
     let grid = cfg.resolved_grid(grid_ndims);
     let engine_stats0 = crate::simmpi::datatype::stats::snapshot();
     let reports = World::run(cfg.ranks, |comm| {
@@ -91,9 +182,9 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
             &cfg.global,
             &grid,
             cfg.kind,
-            cfg.method,
-            cfg.exec,
-            cfg.transport,
+            method,
+            exec,
+            transport,
         );
         let mut engine = make_engine::<T>(cfg.engine);
         // Deterministic input.
@@ -194,14 +285,18 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         staged_bytes: ((es.packed_bytes + es.unpacked_bytes) as f64 * pair_scale) as u64,
         max_err: err,
         dtype: T::NAME,
-        transport: cfg.transport.name(),
+        transport: transport.name(),
+        method: method.name(),
+        exec: exec.name(),
+        overlap_depth: exec.depth() as u64,
+        tuned: false,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pfft::RedistMethod;
+    use crate::pfft::{ExecMode, RedistMethod};
 
     #[test]
     fn driver_runs_r2c_and_roundtrips() {
@@ -219,6 +314,10 @@ mod tests {
         assert!(rep.throughput(&cfg.global) > 0.0);
         assert_eq!(rep.dtype, "f64");
         assert_eq!(rep.transport, "mailbox");
+        assert_eq!(rep.method, "alltoallw");
+        assert_eq!(rep.exec, "blocking");
+        assert_eq!(rep.overlap_depth, 0);
+        assert!(!rep.tuned);
     }
 
     #[test]
@@ -227,7 +326,7 @@ mod tests {
             global: vec![8, 8, 8],
             ranks: 4,
             kind: Kind::C2c,
-            method: RedistMethod::Traditional,
+            method: RedistMethod::Traditional.into(),
             inner: 1,
             outer: 1,
             ..Default::default()
@@ -243,7 +342,7 @@ mod tests {
             global: vec![16, 12, 10],
             ranks: 4,
             kind: Kind::R2c,
-            exec: ExecMode::Pipelined { depth: 3 },
+            exec: ExecMode::Pipelined { depth: 3 }.into(),
             inner: 1,
             outer: 2,
             ..Default::default()
@@ -252,6 +351,8 @@ mod tests {
         assert!(rep.max_err < 1e-10, "pipelined roundtrip err {}", rep.max_err);
         // Overlapped stages report their time in the overlap buckets.
         assert!(rep.overlap_fft + rep.overlap_comm > 0.0);
+        assert_eq!(rep.exec, "pipelined");
+        assert_eq!(rep.overlap_depth, 3);
     }
 
     #[test]
@@ -267,13 +368,14 @@ mod tests {
                 global: vec![16, 12, 10],
                 ranks: 4,
                 kind: Kind::R2c,
-                exec,
+                exec: exec.into(),
                 inner: 1,
                 outer: 1,
                 ..Default::default()
             };
             let mail = run_config(&base, 2);
-            let win = run_config(&RunConfig { transport: Transport::Window, ..base.clone() }, 2);
+            let win =
+                run_config(&RunConfig { transport: Transport::Window.into(), ..base.clone() }, 2);
             assert!(win.max_err < 1e-10, "{exec:?}: window roundtrip err {}", win.max_err);
             assert_eq!(win.transport, "window");
             assert_eq!(
@@ -282,6 +384,62 @@ mod tests {
             );
             assert!(win.one_copy_bytes > 0, "{exec:?}: window run moved no one-copy bytes");
         }
+    }
+
+    #[test]
+    fn auto_knobs_resolve_and_run() {
+        use crate::tune::Budget;
+        let cfg = RunConfig {
+            global: vec![8, 8, 8],
+            ranks: 2,
+            kind: Kind::C2c,
+            method: Knob::Auto,
+            exec: Knob::Auto,
+            transport: Knob::Auto,
+            budget: Budget::Tiny,
+            inner: 1,
+            outer: 1,
+            ..Default::default()
+        };
+        let (resolved, tuned) = resolve_auto(&cfg);
+        assert!(tuned);
+        assert!(!resolved.needs_tuning(), "resolution left Auto knobs behind");
+        assert_eq!(resolved.grid.iter().product::<usize>(), 2);
+        // The resolved config runs end-to-end and the report carries the
+        // chosen configuration plus the tuned flag.
+        let rep = run_config(&cfg, 2);
+        assert!(rep.tuned);
+        assert!(rep.max_err < 1e-10, "tuned roundtrip err {}", rep.max_err);
+        assert!(rep.method == "alltoallw" || rep.method == "traditional");
+        assert!(rep.exec == "blocking" || rep.exec == "pipelined");
+        // Fixed configs resolve to themselves without tuning.
+        let (same, fixed_tuned) = resolve_auto(&RunConfig::default());
+        assert!(!fixed_tuned);
+        assert_eq!(same.grid, RunConfig::default().grid);
+    }
+
+    #[test]
+    fn partially_pinned_resolution_respects_pins() {
+        use crate::tune::Budget;
+        let cfg = RunConfig {
+            global: vec![8, 8, 8],
+            ranks: 2,
+            kind: Kind::R2c,
+            method: RedistMethod::Alltoallw.into(),
+            exec: ExecMode::Blocking.into(),
+            transport: Knob::Auto,
+            grid: vec![2],
+            budget: Budget::Tiny,
+            inner: 1,
+            outer: 1,
+            ..Default::default()
+        };
+        let (resolved, tuned) = resolve_auto(&cfg);
+        assert!(tuned);
+        assert_eq!(resolved.method.fixed(), Some(RedistMethod::Alltoallw));
+        assert_eq!(resolved.exec.fixed(), Some(ExecMode::Blocking));
+        assert_eq!(resolved.grid, vec![2]);
+        assert!(resolved.transport.fixed().is_some(), "transport knob still Auto");
     }
 
     #[test]

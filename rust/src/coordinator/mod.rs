@@ -18,8 +18,9 @@ pub mod driver;
 pub mod metrics;
 pub mod trend;
 
-pub use config::{Dtype, EngineKind, RunConfig};
-pub use driver::{run_config, run_config_typed, RunReport};
+pub use config::{Dtype, EngineKind, Knob, RunConfig};
+pub use driver::{resolve_auto, run_config, run_config_typed, RunReport};
 pub use metrics::RankMetrics;
 
 pub use crate::simmpi::Transport;
+pub use crate::tune::Budget;

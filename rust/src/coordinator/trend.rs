@@ -333,6 +333,29 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
         .collect()
 }
 
+/// The fastest `(dtype, transport)` variant of every `(bench, label)`
+/// group by `mean_total_s` — the offline cousin of the tuner's ranked
+/// table (`repro tune`). Variants of the *same* label are the same
+/// workload measured under different precisions/transports, so their
+/// means are comparable; different labels within a bench are different
+/// shapes or measurement protocols and are never compared against each
+/// other. Groups without timing samples are ignored; ties keep the first
+/// group in `rows` order (deterministic: `aggregate` emits `BTreeMap`
+/// order).
+pub fn best_groups(rows: &[TrendRow]) -> Vec<&TrendRow> {
+    let mut best: BTreeMap<(&str, &str), &TrendRow> = BTreeMap::new();
+    for r in rows {
+        let Some(t) = r.mean_total_s else { continue };
+        match best.get(&(r.bench.as_str(), r.key.as_str())) {
+            Some(b) if b.mean_total_s.unwrap_or(f64::INFINITY) <= t => {}
+            _ => {
+                best.insert((&r.bench, &r.key), r);
+            }
+        }
+    }
+    best.into_values().collect()
+}
+
 /// Find every `BENCH_*.json` under `dir` (non-recursive), excluding the
 /// trend artifact itself, sorted by file name.
 pub fn find_bench_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
@@ -355,10 +378,12 @@ fn fmt_opt(x: Option<f64>) -> String {
     }
 }
 
-/// Run the trend report over `dir`: print the per-group table to stdout and
-/// write `BENCH_trend.json` next to the inputs. Returns the number of rows
+/// Run the trend report over `dir`: print the per-group table to stdout
+/// (or, with `best`, only the per-bench fastest groups) and write
+/// `BENCH_trend.json` — which always carries both the full rows and the
+/// `"best"` summary — next to the inputs. Returns the number of rows
 /// aggregated, or an error string for the CLI to surface.
-pub fn run_trend(dir: &Path) -> Result<usize, String> {
+pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
     let files = find_bench_files(dir).map_err(|e| format!("scanning {}: {e}", dir.display()))?;
     if files.is_empty() {
         return Err(format!(
@@ -381,24 +406,39 @@ pub fn run_trend(dir: &Path) -> Result<usize, String> {
         docs.push((stem, doc));
     }
     let rows = aggregate(&docs);
+    let best_rows = best_groups(&rows);
     println!("# trend over {} artifact file(s) in {}", files.len(), dir.display());
-    println!(
-        "bench\tgroup\tdtype\ttransport\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_one_copy_bytes\tmean_staged_bytes"
-    );
-    for r in &rows {
+    if best {
+        println!("bench\tbest_group\tdtype\ttransport\tmean_total_s");
+        for r in &best_rows {
+            println!(
+                "{}\t{}\t{}\t{}\t{}",
+                r.bench,
+                r.key,
+                r.dtype.as_deref().unwrap_or("-"),
+                r.transport.as_deref().unwrap_or("-"),
+                fmt_opt(r.mean_total_s),
+            );
+        }
+    } else {
         println!(
-            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
-            r.bench,
-            r.key,
-            r.dtype.as_deref().unwrap_or("-"),
-            r.transport.as_deref().unwrap_or("-"),
-            r.count,
-            fmt_opt(r.mean_total_s),
-            fmt_opt(r.mean_bytes),
-            fmt_opt(r.mean_fused_bytes),
-            fmt_opt(r.mean_one_copy_bytes),
-            fmt_opt(r.mean_staged_bytes),
+            "bench\tgroup\tdtype\ttransport\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_one_copy_bytes\tmean_staged_bytes"
         );
+        for r in &rows {
+            println!(
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                r.bench,
+                r.key,
+                r.dtype.as_deref().unwrap_or("-"),
+                r.transport.as_deref().unwrap_or("-"),
+                r.count,
+                fmt_opt(r.mean_total_s),
+                fmt_opt(r.mean_bytes),
+                fmt_opt(r.mean_fused_bytes),
+                fmt_opt(r.mean_one_copy_bytes),
+                fmt_opt(r.mean_staged_bytes),
+            );
+        }
     }
     // Machine-readable artifact, same JsonObj emitter as the benches.
     let json_rows: Vec<String> = rows
@@ -422,6 +462,21 @@ pub fn run_trend(dir: &Path) -> Result<usize, String> {
                 .render()
         })
         .collect();
+    // Per-bench winners, always part of the artifact (the stdout table
+    // only switches on --best).
+    let best_json: Vec<String> = best_rows
+        .iter()
+        .map(|r| {
+            let mut obj = JsonObj::new().str("bench", &r.bench).str("group", &r.key);
+            if let Some(d) = &r.dtype {
+                obj = obj.str("dtype", d);
+            }
+            if let Some(t) = &r.transport {
+                obj = obj.str("transport", t);
+            }
+            obj.num("mean_total_s", r.mean_total_s.unwrap_or(f64::NAN)).render()
+        })
+        .collect();
     let out_path = dir.join("BENCH_trend.json");
     let mut f = std::fs::File::create(&out_path)
         .map_err(|e| format!("creating {}: {e}", out_path.display()))?;
@@ -432,6 +487,12 @@ pub fn run_trend(dir: &Path) -> Result<usize, String> {
         writeln!(f, "  \"rows\": [")?;
         for (i, row) in json_rows.iter().enumerate() {
             let sep = if i + 1 == json_rows.len() { "" } else { "," };
+            writeln!(f, "    {row}{sep}")?;
+        }
+        writeln!(f, "  ],")?;
+        writeln!(f, "  \"best\": [")?;
+        for (i, row) in best_json.iter().enumerate() {
+            let sep = if i + 1 == best_json.len() { "" } else { "," };
             writeln!(f, "    {row}{sep}")?;
         }
         writeln!(f, "  ]")?;
@@ -589,16 +650,50 @@ mod tests {
             "{\"bench\": \"two\", \"rows\": [\n  {\"label\": \"y\", \"total_s\": 4.0}\n]}\n",
         )
         .unwrap();
-        let n = run_trend(&dir).unwrap();
+        let n = run_trend(&dir, false).unwrap();
         assert_eq!(n, 2);
         let trend = std::fs::read_to_string(dir.join("BENCH_trend.json")).unwrap();
         let v = JsonValue::parse(&trend).unwrap();
         let rows = v.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 2);
-        // Re-running includes the same sources but not BENCH_trend.json.
-        let n2 = run_trend(&dir).unwrap();
+        // The artifact always carries the per-bench winners.
+        let best = v.get("best").unwrap().as_arr().unwrap();
+        assert_eq!(best.len(), 2);
+        assert!(best.iter().any(|b| {
+            b.get("bench").and_then(|v| v.as_str()) == Some("one")
+                && b.get("mean_total_s").and_then(|v| v.as_num()) == Some(2.0)
+        }));
+        // Re-running (in --best mode) includes the same sources but not
+        // BENCH_trend.json.
+        let n2 = run_trend(&dir, true).unwrap();
         assert_eq!(n2, 2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn best_groups_pick_the_fastest_variant_per_label() {
+        let d = doc(
+            "pack",
+            &[
+                r#"{"label": "a", "total_s": 4.0, "transport": "mailbox"}"#,
+                r#"{"label": "a", "total_s": 2.0, "transport": "window"}"#,
+                r#"{"label": "b", "total_s": 3.0, "transport": "mailbox"}"#,
+            ],
+        );
+        let d2 = doc("other", &[r#"{"label": "x", "bytes": 10}"#]);
+        let rows = aggregate(&[d, d2]);
+        let best = best_groups(&rows);
+        // Label "a": the window variant wins. Label "b" is a *different*
+        // workload — it keeps its own (sole) winner rather than being
+        // compared against "a". "other" has no timing samples at all.
+        assert_eq!(best.len(), 2);
+        let a = best.iter().find(|r| r.key == "a").unwrap();
+        assert_eq!(a.bench, "pack");
+        assert_eq!(a.transport.as_deref(), Some("window"));
+        assert_eq!(a.mean_total_s, Some(2.0));
+        let b = best.iter().find(|r| r.key == "b").unwrap();
+        assert_eq!(b.transport.as_deref(), Some("mailbox"));
+        assert!(!best.iter().any(|r| r.bench == "other"));
     }
 
     #[test]
@@ -608,7 +703,7 @@ mod tests {
             std::process::id()
         ));
         std::fs::create_dir_all(&dir).unwrap();
-        assert!(run_trend(&dir).is_err());
+        assert!(run_trend(&dir, false).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -60,10 +60,18 @@
 //!   artifacts (`artifacts/*.hlo.txt`), pluggable as a serial FFT engine.
 //! * [`netmodel`] — an analytic performance model of the Shaheen II Cray
 //!   XC40 used to regenerate the paper's figures at full scale.
+//! * [`tune`] — the autotuning planner: budgeted search of the
+//!   `(method × exec × overlap-depth × transport × grid)` trade space at
+//!   plan time (real plans, warm in-situ measurement through an
+//!   injectable [`tune::Measurer`]), with winners persisted as versioned,
+//!   staleness-guarded **wisdom** (`WISDOM.json`) keyed by problem
+//!   signature — [`pfft::PfftPlan::tuned`] and `repro tune` are the
+//!   entry points.
 //! * [`coordinator`] — configuration (including the [`coordinator::Dtype`]
-//!   precision dimension the driver monomorphizes over), metrics, workload
-//!   drivers, the `BENCH_*.json` trend aggregator and the CLI entry points
-//!   used by `repro` and the benchmark harness.
+//!   precision dimension the driver monomorphizes over and the
+//!   [`coordinator::Knob`] `Auto` selectors the tuner resolves), metrics,
+//!   workload drivers, the `BENCH_*.json` trend aggregator and the CLI
+//!   entry points used by `repro` and the benchmark harness.
 
 pub mod cli;
 pub mod coordinator;
@@ -75,5 +83,6 @@ pub mod pfft;
 pub mod redistribute;
 pub mod runtime;
 pub mod simmpi;
+pub mod tune;
 
 pub use fft::{Complex, Complex32, Complex64, Real};

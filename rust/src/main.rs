@@ -3,34 +3,58 @@
 //! Subcommands:
 //!
 //! * `repro run [--global 64,64,64] [--ranks 4] [--grid 2,2] [--kind r2c|c2c]`
-//!   `[--method alltoallw|traditional] [--engine native|xla] [--dtype f32|f64]`
-//!   `[--transport mailbox|window] [--inner 3] [--outer 5]`
+//!   `[--method alltoallw|traditional|auto] [--engine native|xla]`
+//!   `[--dtype f32|f64] [--transport mailbox|window|auto] [--inner 3]`
+//!   `[--outer 5] [--tune]`
 //!   — execute a distributed transform on the simulated world and print the
-//!   timing breakdown (the paper's measurement protocol).
+//!   timing breakdown (the paper's measurement protocol). `--tune` (or any
+//!   knob spelled `auto`) resolves the configuration through the
+//!   autotuning planner first.
+//! * `repro tune [--budget tiny|normal|full] [--wisdom PATH] [--force]`
+//!   — search the (method × exec × depth × transport × grid) space for a
+//!   problem, print the ranked table, persist the winner as wisdom.
 //! * `repro figure <6..11>` — print the netmodel reproduction of a paper
 //!   figure as a TSV table.
-//! * `repro trend [--dir .]` — aggregate every `BENCH_*.json` artifact into
-//!   a compact per-bench trend table and `BENCH_trend.json`.
+//! * `repro trend [--dir .] [--best]` — aggregate every `BENCH_*.json`
+//!   artifact into a compact per-bench trend table and `BENCH_trend.json`;
+//!   `--best` prints only the fastest group per bench.
 //! * `repro selftest` — quick end-to-end correctness pass on several
 //!   decompositions, both precisions.
 //! * `repro info` — artifact and configuration summary.
 
+use std::path::PathBuf;
+
 use a2wfft::cli::Args;
-use a2wfft::coordinator::{run_config, trend, Dtype, EngineKind, RunConfig, Transport};
+use a2wfft::coordinator::{
+    resolve_auto, run_config, trend, Budget, Dtype, EngineKind, Knob, RunConfig, Transport,
+};
 use a2wfft::netmodel::figures;
 use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
+use a2wfft::simmpi::World;
+use a2wfft::tune::{tune_plan, TuneReport, WallClock};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["help", "json"]);
+    let args = Args::parse(argv, &["help", "json", "tune", "force", "best"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "tune" => cmd_tune(&args),
         "figure" => cmd_figure(&args),
         "trend" => cmd_trend(&args),
         "selftest" => cmd_selftest(&args),
         "info" => cmd_info(),
         _ => print_help(),
+    }
+}
+
+/// Strict option checking: a typo (`--transprt window`) or a swallowed
+/// value (`--transport --json`) aborts with the valid spellings instead
+/// of being silently ignored.
+fn validated(args: &Args, ctx: &str, options: &[&str], flags: &[&str]) {
+    if let Err(e) = args.validate(ctx, options, flags) {
+        eprintln!("{e}");
+        std::process::exit(2);
     }
 }
 
@@ -40,11 +64,15 @@ fn print_help() {
          \n\
          USAGE:\n\
          \x20 repro run [--global N,N,N] [--ranks R] [--grid G,G] [--kind r2c|c2c]\n\
-         \x20           [--method alltoallw|traditional] [--engine native|xla]\n\
-         \x20           [--dtype f32|f64] [--exec blocking|pipelined] [--overlap-depth K]\n\
-         \x20           [--transport mailbox|window] [--inner I] [--outer O] [--json]\n\
+         \x20           [--method alltoallw|traditional|auto] [--engine native|xla]\n\
+         \x20           [--dtype f32|f64] [--exec blocking|pipelined|auto]\n\
+         \x20           [--overlap-depth K] [--transport mailbox|window|auto]\n\
+         \x20           [--inner I] [--outer O] [--json]\n\
+         \x20           [--tune] [--budget tiny|normal|full] [--wisdom PATH]\n\
+         \x20 repro tune [--global N,N,N] [--ranks R] [--kind r2c|c2c] [--dtype f32|f64]\n\
+         \x20           [--budget tiny|normal|full] [--wisdom PATH] [--force] [--json]\n\
          \x20 repro figure <6|7|8|9|10|11>\n\
-         \x20 repro trend [--dir DIR]\n\
+         \x20 repro trend [--dir DIR] [--best]\n\
          \x20 repro selftest [--transport mailbox|window]\n\
          \x20 repro info\n\
          \n\
@@ -72,21 +100,60 @@ fn print_help() {
          \x20            buffers, zero per-message allocation, no mailbox traffic\n\
          \x20            on the payload path (requires --method alltoallw)\n\
          \n\
+         AUTOTUNING (repro tune, repro run --tune):\n\
+         \x20 the planner enumerates (method x exec x overlap-depth x transport\n\
+         \x20 x grid-shape) candidates, builds each real plan, measures warm\n\
+         \x20 forward+backward pairs in-situ and picks the fastest; winners\n\
+         \x20 persist as wisdom (default WISDOM.json, override --wisdom) keyed\n\
+         \x20 by (kind, dtype, mesh, ranks), so a repeat problem plans\n\
+         \x20 instantly. --budget scales the search (tiny|normal|full);\n\
+         \x20 `repro tune --force` re-measures past a wisdom hit. In `repro\n\
+         \x20 run`, --tune sets every unspecified knob to auto; a knob can\n\
+         \x20 also be set to auto individually (e.g. --transport auto), which\n\
+         \x20 searches just that axis (no wisdom: wisdom only covers the\n\
+         \x20 full-auto search)\n\
+         \n\
          OUTPUT:\n\
          \x20 --json     print the run result as one machine-readable JSON object\n\
-         \x20            (per-stage timings, dtype, wire bytes, and the datatype\n\
-         \x20            engine's fused-copy vs staged pack/unpack byte attribution)\n\
+         \x20            (per-stage timings, dtype, chosen method/exec/transport,\n\
+         \x20            tuned flag, wire bytes, and the datatype engine's\n\
+         \x20            fused-copy vs staged pack/unpack byte attribution)\n\
          \x20            instead of the TSV row — the same row shape the benches\n\
          \x20            write to BENCH_*.json files\n\
          \n\
          TREND (repro trend):\n\
          \x20 glob BENCH_*.json in --dir (default .) and emit the per-bench\n\
          \x20 trend table (mean time, wire/fused/staged bytes) to stdout and\n\
-         \x20 BENCH_trend.json"
+         \x20 BENCH_trend.json; --best prints only the fastest (dtype,\n\
+         \x20 transport) variant of each (bench, label) group — the offline\n\
+         \x20 cousin of the tuner's ranked table; the JSON artifact always\n\
+         \x20 carries both"
     );
 }
 
 fn cmd_run(args: &Args) {
+    validated(
+        args,
+        "repro run",
+        &[
+            "global",
+            "ranks",
+            "grid",
+            "grid-ndims",
+            "kind",
+            "method",
+            "engine",
+            "dtype",
+            "exec",
+            "overlap-depth",
+            "transport",
+            "inner",
+            "outer",
+            "budget",
+            "wisdom",
+        ],
+        &["json", "tune", "help"],
+    );
     let global = args.get_usizes("global").unwrap_or_else(|| vec![64, 64, 64]);
     let ranks = args.get_usize("ranks", 4);
     let grid = args.get_usizes("grid").unwrap_or_default();
@@ -94,15 +161,17 @@ fn cmd_run(args: &Args) {
         "grid-ndims",
         if grid.is_empty() { 2.min(global.len() - 1) } else { grid.len() },
     );
-    let kind = match args.get("kind").unwrap_or("r2c") {
-        "c2c" => Kind::C2c,
-        "r2c" => Kind::R2c,
-        other => panic!("--kind: unknown {other}"),
-    };
-    let method = match args.get("method").unwrap_or("alltoallw") {
-        "alltoallw" | "a2aw" | "new" => RedistMethod::Alltoallw,
-        "traditional" | "trad" => RedistMethod::Traditional,
-        other => panic!("--method: unknown {other}"),
+    let kind = Kind::parse(args.get("kind").unwrap_or("r2c"))
+        .unwrap_or_else(|| panic!("--kind: unknown {} (c2c|r2c)", args.get("kind").unwrap()));
+    // `--tune` turns every knob the user did not spell out to Auto; any
+    // knob can also be set to `auto` individually.
+    let tune = args.has_flag("tune");
+    let method: Knob<RedistMethod> = match args.get("method") {
+        Some("auto") => Knob::Auto,
+        None if tune => Knob::Auto,
+        s => RedistMethod::parse(s.unwrap_or("alltoallw"))
+            .unwrap_or_else(|| panic!("--method: unknown {} (alltoallw|traditional|auto)", s.unwrap()))
+            .into(),
     };
     let engine = match args.get("engine").unwrap_or("native") {
         "native" => EngineKind::Native,
@@ -114,19 +183,43 @@ fn cmd_run(args: &Args) {
         Some(s) => Dtype::parse(s).unwrap_or_else(|| panic!("--dtype: unknown {s} (f32|f64)")),
     };
     let depth = args.get_usize("overlap-depth", 4);
-    let exec = match args.get("exec").unwrap_or("blocking") {
-        "blocking" | "block" => ExecMode::Blocking,
-        "pipelined" | "pipeline" | "overlap" => ExecMode::Pipelined { depth },
-        other => panic!("--exec: unknown {other} (blocking|pipelined)"),
+    let exec: Knob<ExecMode> = match args.get("exec") {
+        Some("auto") => Knob::Auto,
+        None if tune => Knob::Auto,
+        s => match s.unwrap_or("blocking") {
+            "blocking" | "block" => ExecMode::Blocking.into(),
+            "pipelined" | "pipeline" | "overlap" => ExecMode::Pipelined { depth }.into(),
+            other => panic!("--exec: unknown {other} (blocking|pipelined|auto)"),
+        },
     };
-    let transport = match args.get("transport") {
-        None => Transport::Mailbox,
-        Some(s) => Transport::parse(s)
-            .unwrap_or_else(|| panic!("--transport: unknown {s} (mailbox|window)")),
+    if exec.is_auto() && args.get("overlap-depth").is_some() {
+        eprintln!(
+            "--overlap-depth only applies to a fixed pipelined exec; with --exec auto (or \
+             --tune) the tuner searches its own depth ladder, so the value would be silently \
+             ignored. Pin `--exec pipelined --overlap-depth {depth}` or drop --overlap-depth."
+        );
+        std::process::exit(2);
+    }
+    let transport: Knob<Transport> = match args.get("transport") {
+        Some("auto") => Knob::Auto,
+        None if tune => Knob::Auto,
+        s => Transport::parse(s.unwrap_or("mailbox"))
+            .unwrap_or_else(|| panic!("--transport: unknown {} (mailbox|window|auto)", s.unwrap()))
+            .into(),
     };
-    if transport == Transport::Window && method != RedistMethod::Alltoallw {
+    if transport.fixed() == Some(Transport::Window)
+        && method.fixed() == Some(RedistMethod::Traditional)
+    {
         panic!("--transport window requires --method alltoallw (the traditional baseline's contiguous alltoallv stays on the mailbox)");
     }
+    let tuning = tune || method.is_auto() || exec.is_auto() || transport.is_auto();
+    let wisdom: Option<PathBuf> = match args.get("wisdom") {
+        Some(p) => Some(PathBuf::from(p)),
+        None if tuning => Some(PathBuf::from("WISDOM.json")),
+        None => None,
+    };
+    let budget = Budget::parse(args.get("budget").unwrap_or("normal"))
+        .unwrap_or_else(|| panic!("--budget: unknown {} (tiny|normal|full)", args.get("budget").unwrap()));
     let cfg = RunConfig {
         global: global.clone(),
         grid,
@@ -139,26 +232,43 @@ fn cmd_run(args: &Args) {
         dtype,
         inner: args.get_usize("inner", 3),
         outer: args.get_usize("outer", 5),
+        budget,
+        wisdom,
     };
-    let rep = run_config(&cfg, grid_ndims);
+    // Resolve Auto knobs up front so the chosen grid is printable; the
+    // resolved config runs without further tuning.
+    let (cfg, tuned) = resolve_auto(&cfg);
+    let run_grid = cfg.resolved_grid(grid_ndims);
+    let mut rep = run_config(&cfg, grid_ndims);
+    rep.tuned = tuned;
+    let exec_label = if rep.overlap_depth > 0 {
+        format!("{}-d{}", rep.exec, rep.overlap_depth)
+    } else {
+        rep.exec.to_string()
+    };
     if args.has_flag("json") {
         let label = format!(
-            "run/{:?}/{:?}/{:?}/{}/{}/{}",
-            kind,
-            method,
-            exec,
+            "run/{}/{}/{}/{}/{}/{}",
+            kind.name(),
+            rep.method,
+            exec_label,
             engine.name(),
-            dtype.name(),
-            transport.name()
+            rep.dtype,
+            rep.transport
         );
-        println!("{}", a2wfft::coordinator::benchkit::report_json(&label, &global, ranks, &rep));
+        println!(
+            "{}",
+            a2wfft::coordinator::benchkit::report_json(&label, &global, &run_grid, ranks, &rep)
+        );
         return;
     }
     println!(
-        "# global={global:?} ranks={ranks} kind={kind:?} method={method:?} exec={exec:?} engine={} dtype={} transport={}",
+        "# global={global:?} ranks={ranks} grid={run_grid:?} kind={kind:?} method={} exec={exec_label} engine={} dtype={} transport={} tuned={}",
+        rep.method,
         engine.name(),
-        dtype.name(),
-        transport.name()
+        rep.dtype,
+        rep.transport,
+        rep.tuned
     );
     println!(
         "total_s\tfft_s\tredist_s\toverlap_fft_s\toverlap_comm_s\tbytes\tfused_bytes\tone_copy_bytes\tstaged_bytes\tthroughput_pts_per_s\tmax_err"
@@ -179,7 +289,117 @@ fn cmd_run(args: &Args) {
     );
 }
 
+fn cmd_tune(args: &Args) {
+    validated(
+        args,
+        "repro tune",
+        &["global", "ranks", "kind", "dtype", "budget", "wisdom"],
+        &["json", "force", "help"],
+    );
+    let global = args.get_usizes("global").unwrap_or_else(|| vec![64, 64, 64]);
+    let ranks = args.get_usize("ranks", 4);
+    let kind = Kind::parse(args.get("kind").unwrap_or("r2c"))
+        .unwrap_or_else(|| panic!("--kind: unknown {} (c2c|r2c)", args.get("kind").unwrap()));
+    let dtype = match args.get("dtype") {
+        None => Dtype::F64,
+        Some(s) => Dtype::parse(s).unwrap_or_else(|| panic!("--dtype: unknown {s} (f32|f64)")),
+    };
+    let budget = Budget::parse(args.get("budget").unwrap_or("normal"))
+        .unwrap_or_else(|| panic!("--budget: unknown {} (tiny|normal|full)", args.get("budget").unwrap()));
+    let wisdom = PathBuf::from(args.get("wisdom").unwrap_or("WISDOM.json"));
+    let force = args.has_flag("force");
+    let reports: Vec<TuneReport> = World::run(ranks, |comm| match dtype {
+        Dtype::F32 => {
+            tune_plan::<f32>(&comm, &global, kind, budget, Some(wisdom.as_path()), force, &WallClock)
+        }
+        Dtype::F64 => {
+            tune_plan::<f64>(&comm, &global, kind, budget, Some(wisdom.as_path()), force, &WallClock)
+        }
+    });
+    let report = reports.into_iter().next().expect("tune world returned no report");
+    if args.has_flag("json") {
+        use a2wfft::coordinator::benchkit::{json_usize_array, JsonObj};
+        let rows: Vec<String> = report
+            .entries
+            .iter()
+            .map(|e| {
+                JsonObj::new()
+                    .str("label", &e.candidate.label())
+                    .str("method", e.candidate.method.name())
+                    .str("exec", e.candidate.exec.name())
+                    .int("overlap_depth", e.candidate.exec.depth() as u64)
+                    .str("transport", e.candidate.transport.name())
+                    .raw("grid", json_usize_array(&e.candidate.grid))
+                    .num("total_s", e.seconds)
+                    .str("dtype", report.signature.dtype)
+                    .render()
+            })
+            .collect();
+        let doc = JsonObj::new()
+            .str("bench", "tune")
+            .str("signature", &report.signature.key())
+            .str("budget", report.budget.name())
+            .bool("from_wisdom", report.from_wisdom)
+            .int("skipped", report.skipped as u64)
+            .raw("rows", format!("[{}]", rows.join(", ")))
+            .render();
+        println!("{doc}");
+        return;
+    }
+    println!(
+        "# tune global={global:?} ranks={ranks} kind={} dtype={} budget={} wisdom={}",
+        kind.name(),
+        dtype.name(),
+        report.budget.name(),
+        wisdom.display()
+    );
+    if report.from_wisdom {
+        let w = report.winner();
+        println!(
+            "wisdom hit for {} -> {} ({:.3e} s/pair when recorded); measurement skipped (--force re-tunes)",
+            report.signature.key(),
+            w.candidate.label(),
+            w.seconds
+        );
+        return;
+    }
+    println!("rank\tmethod\texec\ttransport\tgrid\tseconds_per_pair\tvs_best");
+    let best = report.winner().seconds;
+    for (i, e) in report.entries.iter().enumerate() {
+        let grid: Vec<String> = e.candidate.grid.iter().map(|n| n.to_string()).collect();
+        let exec = if e.candidate.exec.depth() > 0 {
+            format!("{}-d{}", e.candidate.exec.name(), e.candidate.exec.depth())
+        } else {
+            e.candidate.exec.name().to_string()
+        };
+        println!(
+            "{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.2}x",
+            i + 1,
+            e.candidate.method.name(),
+            exec,
+            e.candidate.transport.name(),
+            grid.join("x"),
+            e.seconds,
+            e.seconds / best
+        );
+    }
+    if report.skipped > 0 {
+        println!("# {} candidate(s) beyond the --budget cap were not measured", report.skipped);
+    }
+    if report.persisted {
+        println!("wrote wisdom for {} -> {}", report.signature.key(), wisdom.display());
+    } else {
+        eprintln!(
+            "warning: wisdom for {} was NOT persisted to {} (see error above); the next \
+             invocation will re-measure",
+            report.signature.key(),
+            wisdom.display()
+        );
+    }
+}
+
 fn cmd_figure(args: &Args) {
+    validated(args, "repro figure", &[], &["help"]);
     let n: usize = args
         .positional
         .get(1)
@@ -202,8 +422,9 @@ fn cmd_figure(args: &Args) {
 }
 
 fn cmd_trend(args: &Args) {
+    validated(args, "repro trend", &["dir"], &["best", "help"]);
     let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("."));
-    match trend::run_trend(&dir) {
+    match trend::run_trend(&dir, args.has_flag("best")) {
         Ok(groups) => println!("trend OK ({groups} row group(s))"),
         Err(e) => {
             eprintln!("trend failed: {e}");
@@ -213,6 +434,7 @@ fn cmd_trend(args: &Args) {
 }
 
 fn cmd_selftest(args: &Args) {
+    validated(args, "repro selftest", &["transport"], &["help"]);
     // `--transport mailbox|window` restricts the matrix to one transport
     // (the CI matrix job runs one invocation per transport); the default
     // sweeps both for every case.
@@ -240,8 +462,8 @@ fn cmd_selftest(args: &Args) {
                 global: global.clone(),
                 ranks,
                 kind,
-                exec,
-                transport,
+                exec: exec.into(),
+                transport: transport.into(),
                 dtype,
                 inner: 1,
                 outer: 1,

@@ -42,6 +42,25 @@ pub enum RedistMethod {
     Traditional,
 }
 
+impl RedistMethod {
+    /// Stable name for labels, JSON rows and wisdom entries.
+    pub fn name(self) -> &'static str {
+        match self {
+            RedistMethod::Alltoallw => "alltoallw",
+            RedistMethod::Traditional => "traditional",
+        }
+    }
+
+    /// Parse a CLI/wisdom spelling.
+    pub fn parse(s: &str) -> Option<RedistMethod> {
+        match s {
+            "alltoallw" | "a2aw" | "new" => Some(RedistMethod::Alltoallw),
+            "traditional" | "trad" => Some(RedistMethod::Traditional),
+            _ => None,
+        }
+    }
+}
+
 /// How the redistribution steps of a transform are executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecMode {
@@ -60,6 +79,25 @@ pub enum ExecMode {
         /// (`overlap_depth` in the CLI).
         depth: usize,
     },
+}
+
+impl ExecMode {
+    /// Stable name for labels, JSON rows and wisdom entries (the depth is
+    /// carried separately via [`ExecMode::depth`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Blocking => "blocking",
+            ExecMode::Pipelined { .. } => "pipelined",
+        }
+    }
+
+    /// Overlap depth of the pipelined mode (`0` for blocking).
+    pub fn depth(self) -> usize {
+        match self {
+            ExecMode::Blocking => 0,
+            ExecMode::Pipelined { depth } => depth,
+        }
+    }
 }
 
 enum RedistKind {
@@ -130,6 +168,25 @@ pub enum Kind {
     R2c,
 }
 
+impl Kind {
+    /// Stable name for labels, JSON rows and wisdom signatures.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::C2c => "c2c",
+            Kind::R2c => "r2c",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "c2c" => Some(Kind::C2c),
+            "r2c" => Some(Kind::R2c),
+            _ => None,
+        }
+    }
+}
+
 /// A distributed multidimensional FFT plan over a Cartesian process grid,
 /// at precision `T` (default `f64`).
 ///
@@ -162,6 +219,8 @@ pub struct PfftPlan<T = f64> {
     bufs: Vec<Vec<Complex<T>>>,
     /// Local real shape at state `r` (`R2c` only).
     real_shape: Vec<usize>,
+    /// Which redistribution implementation the plan compiled.
+    method: RedistMethod,
     /// How redistributions are executed (blocking vs pipelined).
     exec: ExecMode,
     /// Which transport redistribution payloads move through.
@@ -317,10 +376,16 @@ impl<T: Real> PfftPlan<T> {
             redists,
             bufs,
             real_shape,
+            method,
             exec,
             transport,
             timers: StageTimers::default(),
         }
+    }
+
+    /// Which redistribution implementation this plan compiled.
+    pub fn method(&self) -> RedistMethod {
+        self.method
     }
 
     /// How this plan executes its redistributions.

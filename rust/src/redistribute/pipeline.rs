@@ -27,6 +27,14 @@
 //! intra-rank path and recycle wire payloads through the persistent plans'
 //! staging arenas.
 //!
+//! Under the one-copy window transport, sub-exchange completions defer
+//! the close of this rank's exposure epoch: the receive side of a chunk
+//! completes (and its serial FFT starts) without waiting for peers to
+//! finish pulling this rank's earlier chunks, and the plan closes **all**
+//! epochs with a single [`PipelinedRedistPlan::drain`] at the end of the
+//! execute — one sync point per execute instead of one per in-flight
+//! chunk request.
+//!
 //! When no pipeline axis exists (2-D arrays: both axes are exchanged) or
 //! `chunks == 1`, the plan degrades gracefully to the one-shot blocking
 //! exchange.
@@ -99,6 +107,13 @@ pub struct PipelinedRedistPlan {
     /// Reusable in-flight window state (capacity kept across executions).
     inflight_fwd: VecDeque<Request>,
     inflight_bwd: VecDeque<(usize, Request)>,
+    /// Window transport: wire tags of this rank's exposure epochs whose
+    /// close was deferred by a sub-exchange completion
+    /// (`Request::wait_deferring_drain`). Drained **once per execute**
+    /// ([`PipelinedRedistPlan::drain`]) instead of once per in-flight
+    /// request, so a chunk's compute never stalls on peers still pulling
+    /// this rank's earlier chunks. Always empty between executes.
+    deferred_drains: Vec<u32>,
     /// Staging for the one-shot `execute_back_chunked` fallback.
     fallback_stage: AlignedScratch,
     /// Fallback one-shot plan, compiled only when no pipeline axis exists
@@ -280,6 +295,7 @@ impl PipelinedRedistPlan {
             pipe_axis: if k > 1 { pipe_axis } else { None },
             inflight_fwd: VecDeque::with_capacity(depth.min(k)),
             inflight_bwd: VecDeque::with_capacity(depth.min(k)),
+            deferred_drains: Vec::with_capacity(k),
             chunks: chunk_plans,
             scratch_a,
             scratch_b,
@@ -387,7 +403,13 @@ impl PipelinedRedistPlan {
         for c in 0..k {
             let req = inflight.pop_front().expect("pipeline: request queue underrun");
             let buf = self.scratch_b[c].as_pod_mut::<T>();
-            req.wait(as_bytes_mut(buf));
+            // Deferred epoch close: the receive side completes here, but
+            // this rank's exposure of `send` stays open until the single
+            // drain() below — peers pull at their own pace and the next
+            // chunk's compute starts immediately.
+            if let Some(tag) = req.wait_deferring_drain(as_bytes_mut(buf)) {
+                self.deferred_drains.push(tag);
+            }
             // Keep the window full before consuming the chunk, so the next
             // exchanges progress while we compute.
             if c + depth < k {
@@ -398,6 +420,9 @@ impl PipelinedRedistPlan {
             chunk.scatter_b.execute(self.scratch_b[c].as_bytes(), as_bytes_mut(b));
         }
         self.inflight_fwd = inflight;
+        // One epoch close per execute (`send` is borrowed for this whole
+        // call, so every exposure must drain before we return).
+        self.drain();
     }
 
     /// Reverse redistribution `B -> A`, bitwise identical to
@@ -448,25 +473,69 @@ impl PipelinedRedistPlan {
             // returning — the exposure contract.
             inflight.push_back((c, chunk.bwd.start_any(self.scratch_b[c].as_bytes())));
             if inflight.len() == depth {
-                Self::drain_one_back(&self.chunks, &mut self.scratch_a, &mut inflight, a);
+                Self::drain_one_back(
+                    &self.chunks,
+                    &mut self.scratch_a,
+                    &mut inflight,
+                    &mut self.deferred_drains,
+                    a,
+                );
             }
         }
         while !inflight.is_empty() {
-            Self::drain_one_back(&self.chunks, &mut self.scratch_a, &mut inflight, a);
+            Self::drain_one_back(
+                &self.chunks,
+                &mut self.scratch_a,
+                &mut inflight,
+                &mut self.deferred_drains,
+                a,
+            );
         }
         self.inflight_bwd = inflight;
+        // One epoch close per execute: each chunk's scratch_b exposure
+        // must drain before the next execute may overwrite it.
+        self.drain();
     }
 
     fn drain_one_back<T: Pod>(
         chunks: &[ChunkPlan],
         scratch_a: &mut [AlignedScratch],
         inflight: &mut VecDeque<(usize, Request)>,
+        deferred: &mut Vec<u32>,
         a: &mut [T],
     ) {
         let (c, req) = inflight.pop_front().expect("pipeline: empty backward queue");
         let chunk = &chunks[c];
-        req.wait(scratch_a[c].as_bytes_mut());
+        if let Some(tag) = req.wait_deferring_drain(scratch_a[c].as_bytes_mut()) {
+            deferred.push(tag);
+        }
         chunk.scatter_a.execute(scratch_a[c].as_bytes(), as_bytes_mut(a));
+    }
+
+    /// Close every exposure epoch left open by the deferred sub-exchange
+    /// completions of the current execute: blocks until each peer has
+    /// pulled (and released) the corresponding send span. Runs **once
+    /// per execute** — the relaxation of the per-request `wait_drained`
+    /// the window engine originally performed — and every execute path
+    /// calls it before returning, because the exposed buffers (the
+    /// caller's `a` on the forward path, the plan's chunk scratch on the
+    /// backward path) must not be touched with an epoch open. Public so
+    /// future engines composing raw sub-exchanges can close a batch
+    /// explicitly; calling it with nothing deferred is a no-op.
+    pub fn drain(&mut self) {
+        if self.deferred_drains.is_empty() {
+            return;
+        }
+        let comm = self
+            .chunks
+            .first()
+            .map(|c| c.fwd.comm())
+            .expect("pipeline: deferred drains without chunk plans");
+        let me = comm.rank();
+        let hub = comm.hub();
+        for tag in self.deferred_drains.drain(..) {
+            hub.wait_drained(me, tag);
+        }
     }
 
     /// Total bytes this rank sends per forward execute.
@@ -590,6 +659,43 @@ mod tests {
             });
             assert_eq!(seen, plan.elems_b());
             assert_eq!(calls, chunk_total);
+        });
+    }
+
+    #[test]
+    fn window_executes_close_their_epochs() {
+        // Every execute path must leave no exposure epoch open (the
+        // deferred drains are flushed once per execute), and an explicit
+        // drain() afterwards is a harmless no-op.
+        World::run(3, |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let global = [6usize, 9, 8];
+            let sizes_a = [global[0], decompose(global[1], m, me).0, global[2]];
+            let sizes_b = [decompose(global[0], m, me).0, global[1], global[2]];
+            let mut plan = PipelinedRedistPlan::with_transport(
+                &comm,
+                8,
+                &sizes_a,
+                0,
+                &sizes_b,
+                1,
+                3,
+                2,
+                Transport::Window,
+            );
+            assert!(plan.is_pipelined());
+            let a: Vec<f64> = (0..plan.elems_a()).map(|x| (me * 31 + x) as f64).collect();
+            let mut b = vec![0.0f64; plan.elems_b()];
+            let mut back = vec![0.0f64; plan.elems_a()];
+            for _ in 0..2 {
+                plan.execute(&a, &mut b);
+                assert!(plan.deferred_drains.is_empty(), "rank {me}: fwd epoch left open");
+                plan.execute_back(&b, &mut back);
+                assert!(plan.deferred_drains.is_empty(), "rank {me}: bwd epoch left open");
+                plan.drain();
+            }
+            assert_eq!(a, back, "rank {me}: roundtrip broken");
         });
     }
 

@@ -248,15 +248,15 @@ impl Request {
         self.test(as_bytes_mut(recv))
     }
 
-    /// Block until the operation completes (`MPI_Wait`), scattering every
-    /// peer payload into `recv`. Window-transport requests of the same
-    /// plan set must be waited in the same order on every rank (see the
-    /// module docs); they return only after every peer has pulled this
-    /// rank's exposure.
-    pub fn wait(mut self, recv: &mut [u8]) {
-        if self.done {
-            return;
-        }
+    /// Shared completion body of [`Request::wait`] and
+    /// [`Request::wait_deferring_drain`]: receive/pull and scatter every
+    /// peer contribution into `recv`. With `defer_drain`, a
+    /// window-transport request skips the close of this rank's own
+    /// exposure epoch and instead returns the wire tag the caller must
+    /// later drain (`ExposureHub::wait_drained`) before the send buffer
+    /// may be modified, freed, or re-posted.
+    fn finish(&mut self, recv: &mut [u8], defer_drain: bool) -> Option<u32> {
+        let mut deferred = None;
         match &mut self.inner {
             Inner::Mailbox { pending, local, arena } => {
                 if let Some((payload, runs)) = local.take() {
@@ -294,11 +294,45 @@ impl Request {
                 }
                 *remaining = 0;
                 if *exposed {
-                    hub.wait_drained(me, *tag);
+                    if defer_drain {
+                        deferred = Some(*tag);
+                    } else {
+                        hub.wait_drained(me, *tag);
+                    }
                 }
             }
         }
         self.done = true;
+        deferred
+    }
+
+    /// Block until the operation completes (`MPI_Wait`), scattering every
+    /// peer payload into `recv`. Window-transport requests of the same
+    /// plan set must be waited in the same order on every rank (see the
+    /// module docs); they return only after every peer has pulled this
+    /// rank's exposure.
+    pub fn wait(mut self, recv: &mut [u8]) {
+        if self.done {
+            return;
+        }
+        self.finish(recv, false);
+    }
+
+    /// [`Request::wait`] minus the epoch close: the receive side is fully
+    /// complete on return (every peer contribution scattered into
+    /// `recv`), but this rank's own exposure may still be open — the
+    /// returned wire tag (window transport, multi-rank only) must be
+    /// drained via `ExposureHub::wait_drained` before the send buffer is
+    /// touched again. The pipelined redistribution engine uses this to
+    /// sync **once per execute** instead of once per in-flight chunk
+    /// request; the MPI analogue is completing the receive side of a
+    /// neighborhood epoch and closing the exposure with a single
+    /// `MPI_Win_wait` at the end.
+    pub(crate) fn wait_deferring_drain(mut self, recv: &mut [u8]) -> Option<u32> {
+        if self.done {
+            return None;
+        }
+        self.finish(recv, true)
     }
 
     /// Typed convenience wrapper over [`Request::wait`].

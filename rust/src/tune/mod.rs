@@ -1,0 +1,36 @@
+//! The autotuning planner: search the `(method × exec × overlap-depth ×
+//! transport × grid)` trade space at plan time, remember the winner.
+//!
+//! The paper's central empirical finding is that the winner between the
+//! generalized all-to-all of discontiguous subarrays and the traditional
+//! pack→alltoall→unpack protocol depends on the datatype engine and the
+//! machine — exactly the situation FFTW resolves with a *measuring
+//! planner*, and what FLUPS and P3DFFT ship as plan-time autotuning.
+//! This crate exposes that whole trade space as knobs
+//! ([`crate::pfft::RedistMethod`], [`crate::pfft::ExecMode`],
+//! [`crate::simmpi::Transport`], the processor-grid shape); this module
+//! is the decision layer that picks them **empirically**:
+//!
+//! * [`TuneSpace`] enumerates the budgeted candidate configurations
+//!   (every axis individually pinnable when the caller has fixed some
+//!   knobs by hand);
+//! * [`search()`](search) builds each candidate's *real* [`crate::pfft::PfftPlan`]
+//!   and measures warm forward+backward pairs in-situ, through the
+//!   injectable [`Measurer`] trait ([`WallClock`] in production, a
+//!   scripted [`FakeMeasurer`] in tests), max-reducing across ranks so
+//!   every rank agrees on the ranking;
+//! * [`Wisdom`] persists winners to a versioned, staleness-guarded JSON
+//!   file keyed by problem [`Signature`], so repeat problems plan
+//!   instantly ([`tune_plan`] consults it before measuring);
+//! * [`crate::pfft::PfftPlan::tuned`] is the one-call user surface, and
+//!   the `coordinator` resolves `Auto` run-config knobs through
+//!   [`tune_plan`] for `repro run --tune` / `repro tune`.
+
+pub mod search;
+pub mod wisdom;
+
+pub use search::{
+    search, tune_plan, Budget, Candidate, FakeMeasurer, Measurer, TuneEntry, TuneReport,
+    TuneSpace, WallClock,
+};
+pub use wisdom::{Signature, Wisdom, WisdomEntry, DEFAULT_MAX_AGE_SECS, WISDOM_VERSION};

@@ -1,0 +1,662 @@
+//! The measuring planner: enumerate the candidate space, build each real
+//! plan, time warm executions, rank.
+//!
+//! The search is **collective**: every rank of the communicator walks the
+//! same deterministic candidate list, builds the same plans, measures in
+//! lock-step (the measured pairs are collective operations), and
+//! max-reduces the per-rank seconds — so every rank arrives at the
+//! identical ranking and the winning plan can be constructed without any
+//! further agreement protocol.
+//!
+//! Time is read through the injectable [`Measurer`] trait: production
+//! uses [`WallClock`] (`std::time::Instant`), tests inject a
+//! [`FakeMeasurer`] with scripted per-candidate timings so the winner —
+//! and therefore everything downstream of the tuner — is deterministic.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::fft::{Complex, NativeFft, Real};
+use crate::pfft::{ExecMode, Kind, PfftPlan, RedistMethod};
+use crate::simmpi::collective::ReduceOp;
+use crate::simmpi::{dims_create, Comm, Transport};
+
+use super::wisdom::{Signature, Wisdom};
+
+/// How much measuring a search may spend. Scales the overlap-depth
+/// ladder, the grid enumeration, the measured pairs per candidate and
+/// the hard candidate cap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Budget {
+    /// CI smoke: one pair per candidate, shallow ladder, 2 grids per
+    /// grid rank.
+    Tiny,
+    /// The default: 2 pairs, depth ladder {2, 4}, 6 grids per rank.
+    #[default]
+    Normal,
+    /// Exhaustive: 3 pairs, depth ladder {2, 4, 8}, 16 grids per rank.
+    Full,
+}
+
+impl Budget {
+    /// Stable name for labels, JSON rows and wisdom entries.
+    pub fn name(self) -> &'static str {
+        match self {
+            Budget::Tiny => "tiny",
+            Budget::Normal => "normal",
+            Budget::Full => "full",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Budget> {
+        match s {
+            "tiny" | "smoke" => Some(Budget::Tiny),
+            "normal" | "default" => Some(Budget::Normal),
+            "full" | "exhaustive" => Some(Budget::Full),
+            _ => None,
+        }
+    }
+
+    /// Overlap depths of the pipelined exec-mode candidates.
+    pub fn depth_ladder(self) -> &'static [usize] {
+        match self {
+            Budget::Tiny => &[2],
+            Budget::Normal => &[2, 4],
+            Budget::Full => &[2, 4, 8],
+        }
+    }
+
+    /// Measured forward+backward pairs per candidate (after one warmup
+    /// pair that primes twiddles and staging arenas).
+    pub fn pairs(self) -> usize {
+        match self {
+            Budget::Tiny => 1,
+            Budget::Normal => 2,
+            Budget::Full => 3,
+        }
+    }
+
+    /// Hard cap on the candidate count; enumeration beyond it is
+    /// truncated deterministically and reported, never silently.
+    pub fn max_candidates(self) -> usize {
+        match self {
+            Budget::Tiny => 12,
+            Budget::Normal => 32,
+            Budget::Full => 96,
+        }
+    }
+
+    /// Processor-grid factorizations kept per grid rank `r`.
+    fn max_grids(self) -> usize {
+        match self {
+            Budget::Tiny => 2,
+            Budget::Normal => 6,
+            Budget::Full => 16,
+        }
+    }
+}
+
+/// One fully-resolved point of the trade space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Candidate {
+    pub method: RedistMethod,
+    pub exec: ExecMode,
+    pub transport: Transport,
+    /// Processor-grid extents (a factorization of the world size).
+    pub grid: Vec<usize>,
+}
+
+impl Candidate {
+    /// Stable display/report label, e.g. `alltoallw/pipelined-d4/window/g2x2`.
+    pub fn label(&self) -> String {
+        let exec = match self.exec {
+            ExecMode::Blocking => "blocking".to_string(),
+            ExecMode::Pipelined { depth } => format!("pipelined-d{depth}"),
+        };
+        let grid: Vec<String> = self.grid.iter().map(|n| n.to_string()).collect();
+        format!("{}/{}/{}/g{}", self.method.name(), exec, self.transport.name(), grid.join("x"))
+    }
+}
+
+/// All ordered factorizations of `n` into `len` factors, every factor
+/// `>= 2` (grid extents of 1 only enter via `dims_create`, which uses
+/// them when `n` has fewer prime factors than grid directions).
+fn ordered_factorizations(n: usize, len: usize) -> Vec<Vec<usize>> {
+    if len == 1 {
+        return if n >= 2 { vec![vec![n]] } else { Vec::new() };
+    }
+    let mut out = Vec::new();
+    for f in 2..=n {
+        if n % f != 0 {
+            continue;
+        }
+        for mut rest in ordered_factorizations(n / f, len - 1) {
+            let mut g = Vec::with_capacity(len);
+            g.push(f);
+            g.append(&mut rest);
+            out.push(g);
+        }
+    }
+    out
+}
+
+/// Enumerate candidate processor grids for a `d`-dimensional problem
+/// over `ranks` processes: for every grid rank `r in 1..=d-1`, the
+/// `dims_create` default first, then the ordered factorizations in
+/// lexicographic order, capped per `r` by the budget.
+pub(crate) fn enumerate_grids(global: &[usize], ranks: usize, budget: Budget) -> Vec<Vec<usize>> {
+    let d = global.len();
+    assert!(d >= 2, "tune: need at least 2 dimensions");
+    let per_r = budget.max_grids();
+    let mut grids: Vec<Vec<usize>> = Vec::new();
+    for r in 1..=d - 1 {
+        let mut bucket = vec![dims_create(ranks, r)];
+        let mut rest = ordered_factorizations(ranks, r);
+        rest.sort();
+        for g in rest {
+            if bucket.len() >= per_r {
+                break;
+            }
+            if !bucket.contains(&g) {
+                bucket.push(g);
+            }
+        }
+        for g in bucket {
+            if !grids.contains(&g) {
+                grids.push(g);
+            }
+        }
+    }
+    grids
+}
+
+/// The candidate space of one search: per-axis option lists whose pruned
+/// cross product is the candidate list. Built full by [`TuneSpace::new`];
+/// axes the caller has fixed are pinned down to a single option.
+#[derive(Debug, Clone)]
+pub struct TuneSpace {
+    pub methods: Vec<RedistMethod>,
+    pub execs: Vec<ExecMode>,
+    pub transports: Vec<Transport>,
+    pub grids: Vec<Vec<usize>>,
+    /// Deterministic truncation cap (from the budget).
+    pub max_candidates: usize,
+}
+
+impl TuneSpace {
+    /// The full budgeted space for a problem: both methods, the blocking
+    /// plus pipelined-ladder exec modes (2-D arrays have no pipeline
+    /// axis, so the ladder is dropped there), both transports (window
+    /// only within its 128-rank cap), and the enumerated grids.
+    pub fn new(global: &[usize], ranks: usize, budget: Budget) -> TuneSpace {
+        let mut execs = vec![ExecMode::Blocking];
+        if global.len() >= 3 {
+            execs.extend(budget.depth_ladder().iter().map(|&depth| ExecMode::Pipelined { depth }));
+        }
+        let transports = if ranks <= 128 {
+            vec![Transport::Mailbox, Transport::Window]
+        } else {
+            vec![Transport::Mailbox]
+        };
+        TuneSpace {
+            methods: vec![RedistMethod::Alltoallw, RedistMethod::Traditional],
+            execs,
+            transports,
+            grids: enumerate_grids(global, ranks, budget),
+            max_candidates: budget.max_candidates(),
+        }
+    }
+
+    /// Pin the method axis to one value.
+    pub fn pin_method(&mut self, m: RedistMethod) {
+        self.methods = vec![m];
+    }
+
+    /// Pin the exec axis (the pinned depth need not be on the ladder).
+    pub fn pin_exec(&mut self, e: ExecMode) {
+        self.execs = vec![e];
+    }
+
+    /// Pin the transport axis.
+    pub fn pin_transport(&mut self, t: Transport) {
+        self.transports = vec![t];
+    }
+
+    /// Pin the grid axis to one explicit factorization.
+    pub fn pin_grid(&mut self, g: Vec<usize>) {
+        self.grids = vec![g];
+    }
+
+    /// The pruned cross product, grid-major so a cap truncation keeps
+    /// full method/exec/transport coverage of the leading grids. Returns
+    /// `(candidates, skipped)` where `skipped` counts valid combinations
+    /// beyond the cap.
+    pub fn candidates(&self) -> (Vec<Candidate>, usize) {
+        let mut out = Vec::new();
+        let mut skipped = 0usize;
+        for grid in &self.grids {
+            for &method in &self.methods {
+                for &exec in &self.execs {
+                    for &transport in &self.transports {
+                        // The traditional baseline has no nonblocking
+                        // schedule and stays on the mailbox (its
+                        // contiguous alltoallv), as in the libraries it
+                        // models — same constraints PfftPlan asserts.
+                        if method == RedistMethod::Traditional
+                            && (exec != ExecMode::Blocking || transport != Transport::Mailbox)
+                        {
+                            continue;
+                        }
+                        if out.len() < self.max_candidates {
+                            out.push(Candidate { method, exec, transport, grid: grid.clone() });
+                        } else {
+                            skipped += 1;
+                        }
+                    }
+                }
+            }
+        }
+        (out, skipped)
+    }
+}
+
+/// The injectable time source of the search.
+///
+/// `measure` is called **collectively** (every rank of the communicator,
+/// same candidate order) and must drive `run` the same number of times
+/// on every rank — each `run()` executes one forward+backward pair,
+/// which is a collective operation. Returns seconds per pair.
+pub trait Measurer: Sync {
+    fn measure(&self, label: &str, pairs: usize, run: &mut dyn FnMut()) -> f64;
+}
+
+/// Production measurer: wall-clock `Instant` over `pairs` warm pairs.
+pub struct WallClock;
+
+impl Measurer for WallClock {
+    fn measure(&self, _label: &str, pairs: usize, run: &mut dyn FnMut()) -> f64 {
+        let t0 = Instant::now();
+        for _ in 0..pairs {
+            run();
+        }
+        t0.elapsed().as_secs_f64() / pairs.max(1) as f64
+    }
+}
+
+/// Deterministic test measurer: still drives one collective pair (so
+/// every candidate plan is actually exercised), then reports the
+/// scripted seconds for the candidate's label (or the default).
+pub struct FakeMeasurer {
+    default_s: f64,
+    timings: HashMap<String, f64>,
+}
+
+impl FakeMeasurer {
+    pub fn new(default_s: f64) -> FakeMeasurer {
+        FakeMeasurer { default_s, timings: HashMap::new() }
+    }
+
+    /// Script the seconds reported for one candidate label.
+    pub fn with(mut self, label: &str, seconds: f64) -> FakeMeasurer {
+        self.timings.insert(label.to_string(), seconds);
+        self
+    }
+}
+
+impl Measurer for FakeMeasurer {
+    fn measure(&self, label: &str, _pairs: usize, run: &mut dyn FnMut()) -> f64 {
+        run();
+        *self.timings.get(label).unwrap_or(&self.default_s)
+    }
+}
+
+/// One ranked search result.
+#[derive(Debug, Clone)]
+pub struct TuneEntry {
+    pub candidate: Candidate,
+    /// Max-across-ranks seconds per forward+backward pair.
+    pub seconds: f64,
+}
+
+/// The outcome of one tune: the ranked candidate table (fastest first)
+/// plus provenance.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub signature: Signature,
+    pub budget: Budget,
+    /// Ranked entries, fastest first; a wisdom recall carries exactly
+    /// the remembered winner.
+    pub entries: Vec<TuneEntry>,
+    /// Whether the winner was recalled from wisdom (no measurement ran).
+    pub from_wisdom: bool,
+    /// Whether this search's winner was persisted to the wisdom file
+    /// (false on recalls, on searches without a wisdom path, and when
+    /// the write failed — agreed across ranks, so every rank reports
+    /// the same provenance).
+    pub persisted: bool,
+    /// Valid candidates beyond the budget cap that were not measured.
+    pub skipped: usize,
+}
+
+impl TuneReport {
+    /// The fastest candidate.
+    pub fn winner(&self) -> &TuneEntry {
+        &self.entries[0]
+    }
+}
+
+/// Build one candidate's real plan and measure warm pairs in-situ.
+/// Collective; returns max-across-ranks seconds per pair.
+fn measure_candidate<T: Real>(
+    comm: &Comm,
+    global: &[usize],
+    kind: Kind,
+    cand: &Candidate,
+    pairs: usize,
+    measurer: &dyn Measurer,
+) -> f64 {
+    let mut plan = PfftPlan::<T>::with_transport(
+        comm,
+        global,
+        &cand.grid,
+        kind,
+        cand.method,
+        cand.exec,
+        cand.transport,
+    );
+    let mut engine = NativeFft::<T>::new();
+    let ilen = plan.input_len();
+    let olen = plan.output_len();
+    let seed = comm.rank() as f64 + 1.0;
+    let label = cand.label();
+    let local = match kind {
+        Kind::C2c => {
+            let input: Vec<Complex<T>> = (0..ilen)
+                .map(|k| Complex::from_f64((k as f64 * 0.61 + seed).sin(), (k as f64 * 0.23).cos()))
+                .collect();
+            let mut spec = vec![Complex::<T>::ZERO; olen];
+            let mut back = vec![Complex::<T>::ZERO; ilen];
+            let mut pair = || {
+                plan.forward(&mut engine, &input, &mut spec);
+                plan.backward(&mut engine, &spec, &mut back);
+            };
+            // One warmup pair primes twiddle tables and staging arenas,
+            // then a barrier aligns the measured window across ranks.
+            pair();
+            comm.barrier();
+            measurer.measure(&label, pairs, &mut pair)
+        }
+        Kind::R2c => {
+            let input: Vec<T> =
+                (0..ilen).map(|k| T::from_f64((k as f64 * 0.61 + seed).sin())).collect();
+            let mut spec = vec![Complex::<T>::ZERO; olen];
+            let mut back = vec![T::ZERO; ilen];
+            let mut pair = || {
+                plan.forward_r2c(&mut engine, &input, &mut spec);
+                plan.backward_c2r(&mut engine, &spec, &mut back);
+            };
+            pair();
+            comm.barrier();
+            measurer.measure(&label, pairs, &mut pair)
+        }
+    };
+    let mut t = [local];
+    comm.allreduce_f64(&mut t, ReduceOp::Max);
+    t[0]
+}
+
+/// Measure every candidate of `space` and rank. Collective; every rank
+/// returns the identical ranking (seconds are max-reduced, ties broken
+/// by label). Returns `(ranked entries, skipped-over-cap count)`.
+pub fn search<T: Real>(
+    comm: &Comm,
+    global: &[usize],
+    kind: Kind,
+    space: &TuneSpace,
+    pairs: usize,
+    measurer: &dyn Measurer,
+) -> (Vec<TuneEntry>, usize) {
+    let (cands, skipped) = space.candidates();
+    assert!(
+        !cands.is_empty(),
+        "tune: empty candidate space (contradictory pins — e.g. traditional + window?)"
+    );
+    let mut entries: Vec<TuneEntry> = cands
+        .into_iter()
+        .map(|cand| {
+            let seconds = measure_candidate::<T>(comm, global, kind, &cand, pairs, measurer);
+            TuneEntry { candidate: cand, seconds }
+        })
+        .collect();
+    entries.sort_by(|a, b| {
+        a.seconds
+            .partial_cmp(&b.seconds)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.candidate.label().cmp(&b.candidate.label()))
+    });
+    (entries, skipped)
+}
+
+/// The full tune protocol: consult wisdom (unless `force`), otherwise
+/// search the full budgeted space and persist the winner.
+///
+/// Collective. Wisdom is read by every rank before searching (the file
+/// is only ever written after a search, behind the closing barrier, so
+/// the reads are race-free) and written by rank 0 alone.
+pub fn tune_plan<T: Real>(
+    comm: &Comm,
+    global: &[usize],
+    kind: Kind,
+    budget: Budget,
+    wisdom: Option<&Path>,
+    force: bool,
+    measurer: &dyn Measurer,
+) -> TuneReport {
+    let signature = Signature::new::<T>(global, comm.size(), kind);
+    if !force {
+        if let Some(path) = wisdom {
+            let hit = Wisdom::load(path).ok().and_then(|w| {
+                w.lookup(&signature.key())
+                    .and_then(|e| e.candidate().map(|c| (c, e.seconds)))
+            });
+            // The recall must be unanimous: if any rank misses (e.g. the
+            // file is unreadable on it), every rank searches — otherwise
+            // the searchers would block in collectives the recallers
+            // never enter. (The file itself must not be mutated while a
+            // tune is in flight; this crate only writes it behind the
+            // closing barrier below.)
+            let mut flag = [if hit.is_some() { 1.0 } else { 0.0 }];
+            comm.allreduce_f64(&mut flag, ReduceOp::Min);
+            if flag[0] == 1.0 {
+                let (candidate, seconds) = hit.expect("unanimous wisdom hit");
+                return TuneReport {
+                    signature,
+                    budget,
+                    entries: vec![TuneEntry { candidate, seconds }],
+                    from_wisdom: true,
+                    persisted: false,
+                    skipped: 0,
+                };
+            }
+        }
+    }
+    let space = TuneSpace::new(global, comm.size(), budget);
+    let (entries, skipped) = search::<T>(comm, global, kind, &space, budget.pairs(), measurer);
+    let mut report =
+        TuneReport { signature, budget, entries, from_wisdom: false, persisted: false, skipped };
+    if let Some(path) = wisdom {
+        let mut wrote = 1.0f64;
+        if comm.rank() == 0 {
+            let mut w = Wisdom::load(path).unwrap_or_default();
+            let win = report.winner();
+            w.record(&report.signature, &win.candidate, win.seconds, budget.name());
+            if let Err(e) = w.store(path) {
+                eprintln!("tune: could not persist wisdom: {e}");
+                wrote = 0.0;
+            }
+        }
+        // The allreduce doubles as the closing barrier (no rank leaves
+        // while the write is in flight) and ships rank 0's write outcome
+        // to everyone, so all ranks report the same provenance.
+        let mut flag = [wrote];
+        comm.allreduce_f64(&mut flag, ReduceOp::Min);
+        report.persisted = flag[0] == 1.0;
+    }
+    report
+}
+
+impl<T: Real> PfftPlan<T> {
+    /// Build the plan the autotuner ranks fastest for this problem:
+    /// consult `wisdom` (instant on a fresh signature hit), otherwise
+    /// search the budgeted candidate space with wall-clock measurement
+    /// and persist the winner. Collective over `comm`.
+    ///
+    /// The returned plan is exactly what
+    /// [`PfftPlan::with_transport`] builds for the winning
+    /// configuration — bitwise-identical transforms, no tuner residue.
+    pub fn tuned(
+        comm: &Comm,
+        global: &[usize],
+        kind: Kind,
+        budget: Budget,
+        wisdom: Option<&Path>,
+    ) -> PfftPlan<T> {
+        Self::tuned_with(comm, global, kind, budget, wisdom, &WallClock)
+    }
+
+    /// [`PfftPlan::tuned`] with an injected [`Measurer`] (tests use a
+    /// [`FakeMeasurer`] for a deterministic winner).
+    pub fn tuned_with(
+        comm: &Comm,
+        global: &[usize],
+        kind: Kind,
+        budget: Budget,
+        wisdom: Option<&Path>,
+        measurer: &dyn Measurer,
+    ) -> PfftPlan<T> {
+        let report = tune_plan::<T>(comm, global, kind, budget, wisdom, false, measurer);
+        let w = &report.winner().candidate;
+        PfftPlan::with_transport(comm, global, &w.grid, kind, w.method, w.exec, w.transport)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_names_parse_and_scale() {
+        assert_eq!(Budget::parse("tiny"), Some(Budget::Tiny));
+        assert_eq!(Budget::parse("normal"), Some(Budget::Normal));
+        assert_eq!(Budget::parse("full"), Some(Budget::Full));
+        assert_eq!(Budget::parse("lavish"), None);
+        assert_eq!(Budget::default(), Budget::Normal);
+        assert!(Budget::Tiny.max_candidates() < Budget::Normal.max_candidates());
+        assert!(Budget::Normal.max_candidates() < Budget::Full.max_candidates());
+        assert!(Budget::Tiny.depth_ladder().len() <= Budget::Full.depth_ladder().len());
+        assert_eq!(Budget::Full.name(), "full");
+    }
+
+    #[test]
+    fn factorizations_multiply_back() {
+        for (n, len) in [(8usize, 2usize), (12, 2), (12, 3), (16, 3)] {
+            let fs = ordered_factorizations(n, len);
+            assert!(!fs.is_empty(), "{n} choose {len}");
+            for f in &fs {
+                assert_eq!(f.len(), len);
+                assert_eq!(f.iter().product::<usize>(), n, "{f:?}");
+                assert!(f.iter().all(|&x| x >= 2));
+            }
+        }
+        // Ordered: [2,4] and [4,2] are distinct grid shapes.
+        let fs = ordered_factorizations(8, 2);
+        assert!(fs.contains(&vec![2, 4]) && fs.contains(&vec![4, 2]));
+        // A prime cannot be split into two factors >= 2.
+        assert!(ordered_factorizations(5, 2).is_empty());
+    }
+
+    #[test]
+    fn grids_cover_every_grid_rank() {
+        let grids = enumerate_grids(&[16, 12, 10], 4, Budget::Tiny);
+        assert!(grids.contains(&vec![4]));
+        assert!(grids.contains(&vec![2, 2]));
+        for g in &grids {
+            assert!(g.len() <= 2);
+            assert_eq!(g.iter().product::<usize>(), 4);
+        }
+        // Prime world size: dims_create supplies the padded 2-D grid.
+        let grids = enumerate_grids(&[8, 8, 8], 3, Budget::Normal);
+        assert!(grids.contains(&vec![3]));
+        assert!(grids.iter().any(|g| g.len() == 2 && g.iter().product::<usize>() == 3));
+    }
+
+    #[test]
+    fn candidate_space_respects_constraints() {
+        let space = TuneSpace::new(&[16, 12, 10], 4, Budget::Normal);
+        let (cands, _skipped) = space.candidates();
+        assert!(!cands.is_empty());
+        for c in &cands {
+            if c.method == RedistMethod::Traditional {
+                assert_eq!(c.exec, ExecMode::Blocking, "{}", c.label());
+                assert_eq!(c.transport, Transport::Mailbox, "{}", c.label());
+            }
+            assert_eq!(c.grid.iter().product::<usize>(), 4);
+        }
+        // Both methods, both transports and the pipelined ladder appear.
+        assert!(cands.iter().any(|c| c.method == RedistMethod::Traditional));
+        assert!(cands.iter().any(|c| c.transport == Transport::Window));
+        assert!(cands.iter().any(|c| matches!(c.exec, ExecMode::Pipelined { .. })));
+        // Deterministic: two enumerations agree exactly.
+        let (again, _) = space.candidates();
+        assert_eq!(cands, again);
+    }
+
+    #[test]
+    fn two_d_arrays_have_no_pipelined_candidates() {
+        let space = TuneSpace::new(&[32, 32], 4, Budget::Full);
+        let (cands, _) = space.candidates();
+        assert!(cands.iter().all(|c| c.exec == ExecMode::Blocking));
+    }
+
+    #[test]
+    fn cap_truncates_and_reports() {
+        let mut space = TuneSpace::new(&[16, 12, 10], 8, Budget::Full);
+        space.max_candidates = 3;
+        let (cands, skipped) = space.candidates();
+        assert_eq!(cands.len(), 3);
+        assert!(skipped > 0);
+    }
+
+    #[test]
+    fn pins_collapse_axes() {
+        let mut space = TuneSpace::new(&[16, 12, 10], 4, Budget::Normal);
+        space.pin_method(RedistMethod::Alltoallw);
+        space.pin_exec(ExecMode::Pipelined { depth: 7 });
+        space.pin_transport(Transport::Window);
+        space.pin_grid(vec![2, 2]);
+        let (cands, skipped) = space.candidates();
+        assert_eq!(skipped, 0);
+        assert_eq!(cands.len(), 1);
+        assert_eq!(cands[0].label(), "alltoallw/pipelined-d7/window/g2x2");
+    }
+
+    #[test]
+    fn contradictory_pins_yield_empty_space() {
+        let mut space = TuneSpace::new(&[16, 12, 10], 4, Budget::Normal);
+        space.pin_method(RedistMethod::Traditional);
+        space.pin_transport(Transport::Window);
+        let (cands, _) = space.candidates();
+        assert!(cands.is_empty());
+    }
+
+    #[test]
+    fn fake_measurer_scripts_and_defaults() {
+        let m = FakeMeasurer::new(2.0).with("fast", 0.5);
+        let mut ran = 0usize;
+        assert_eq!(m.measure("fast", 3, &mut || ran += 1), 0.5);
+        assert_eq!(m.measure("other", 3, &mut || ran += 1), 2.0);
+        assert_eq!(ran, 2, "fake measurer must drive exactly one pair per call");
+    }
+}

@@ -1,0 +1,362 @@
+//! Persistent planner wisdom — the FFTW-style memory of past searches.
+//!
+//! A [`Wisdom`] file (`WISDOM.json` by convention) maps **problem
+//! signatures** to the winning configuration of a previous autotune
+//! search, so repeat problems plan instantly instead of re-measuring the
+//! whole candidate space. The signature ([`Signature`]) is everything
+//! that shapes the trade space: transform kind, element precision,
+//! global mesh and world size — the knobs the tuner *searches* (method,
+//! exec mode, transport, grid shape) are the *payload*, not the key.
+//!
+//! The file format is serde-free JSON: the reader is built on the same
+//! recursive-descent [`JsonValue`] machinery `repro trend` uses for the
+//! `BENCH_*.json` artifacts, and the writer on [`JsonObj`]. Two guard
+//! fields make stored wisdom safe to trust:
+//!
+//! * **versioning** — the top-level `"wisdom"` schema version; a file
+//!   written by an incompatible schema is rejected wholesale (treated as
+//!   no wisdom, never misread);
+//! * **staleness** — every entry carries `created_unix`; entries older
+//!   than the freshness window ([`DEFAULT_MAX_AGE_SECS`], overridable via
+//!   [`Wisdom::lookup_at`]) are ignored, because machine load, code
+//!   changes and library updates all rot a measured winner.
+
+use std::path::Path;
+
+use crate::coordinator::benchkit::{json_escape, json_usize_array, JsonObj};
+use crate::coordinator::trend::JsonValue;
+use crate::fft::Real;
+use crate::pfft::{ExecMode, Kind, RedistMethod};
+use crate::simmpi::Transport;
+
+use super::search::Candidate;
+
+/// Schema version of the wisdom file; bump on incompatible change.
+pub const WISDOM_VERSION: u64 = 1;
+
+/// Default freshness window of a wisdom entry (90 days): old winners are
+/// re-measured rather than trusted.
+pub const DEFAULT_MAX_AGE_SECS: u64 = 90 * 24 * 3600;
+
+/// Seconds since the Unix epoch (0 when the clock is unavailable —
+/// entries stamped 0 are immediately stale, the safe direction).
+pub fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// The problem identity a wisdom entry is keyed by: everything that
+/// shapes the candidate trade space *except* the searched knobs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signature {
+    /// Transform kind.
+    pub kind: Kind,
+    /// Element precision name (`"f32"`/`"f64"`).
+    pub dtype: &'static str,
+    /// Global real-space mesh.
+    pub global: Vec<usize>,
+    /// World size the plan is created over.
+    pub ranks: usize,
+}
+
+impl Signature {
+    /// Signature of a `T`-precision problem.
+    pub fn new<T: Real>(global: &[usize], ranks: usize, kind: Kind) -> Signature {
+        Signature { kind, dtype: T::NAME, global: global.to_vec(), ranks }
+    }
+
+    /// Signature with an explicit dtype name (for un-monomorphized
+    /// callers like the CLI).
+    pub fn with_dtype(
+        global: &[usize],
+        ranks: usize,
+        kind: Kind,
+        dtype: &'static str,
+    ) -> Signature {
+        Signature { kind, dtype, global: global.to_vec(), ranks }
+    }
+
+    /// The stable string key wisdom entries are stored under, e.g.
+    /// `r2c/f64/g64x64x64/r4`.
+    pub fn key(&self) -> String {
+        let mesh: Vec<String> = self.global.iter().map(|n| n.to_string()).collect();
+        format!("{}/{}/g{}/r{}", self.kind.name(), self.dtype, mesh.join("x"), self.ranks)
+    }
+}
+
+/// One remembered search winner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WisdomEntry {
+    /// [`Signature::key`] of the problem.
+    pub signature: String,
+    /// Winning [`RedistMethod`] name.
+    pub method: String,
+    /// Winning [`ExecMode`] name (`"blocking"`/`"pipelined"`).
+    pub exec: String,
+    /// Overlap depth of the pipelined mode (0 for blocking).
+    pub overlap_depth: usize,
+    /// Winning [`Transport`] name.
+    pub transport: String,
+    /// Winning processor-grid extents.
+    pub grid: Vec<usize>,
+    /// Measured seconds per forward+backward pair of the winner.
+    pub seconds: f64,
+    /// Budget preset the search ran under.
+    pub budget: String,
+    /// Staleness stamp: seconds since the Unix epoch at record time.
+    pub created_unix: u64,
+}
+
+impl WisdomEntry {
+    /// Reconstruct the concrete candidate, or `None` when the stored
+    /// names are not understood by this build (schema-compatible file,
+    /// unknown spelling — treated as a miss).
+    pub fn candidate(&self) -> Option<Candidate> {
+        let method = RedistMethod::parse(&self.method)?;
+        let exec = match self.exec.as_str() {
+            "blocking" => ExecMode::Blocking,
+            "pipelined" if self.overlap_depth > 1 => {
+                ExecMode::Pipelined { depth: self.overlap_depth }
+            }
+            _ => return None,
+        };
+        let transport = Transport::parse(&self.transport)?;
+        if self.grid.is_empty() || self.grid.contains(&0) {
+            return None;
+        }
+        Some(Candidate { method, exec, transport, grid: self.grid.clone() })
+    }
+}
+
+/// The in-memory wisdom store: load, consult, record, persist.
+#[derive(Debug, Clone, Default)]
+pub struct Wisdom {
+    pub entries: Vec<WisdomEntry>,
+}
+
+impl Wisdom {
+    /// Parse a wisdom document. Strict about structure and the schema
+    /// version, lenient about unknown fields (like the trend reader).
+    pub fn from_json(text: &str) -> Result<Wisdom, String> {
+        let doc = JsonValue::parse(text)?;
+        let version = doc
+            .get("wisdom")
+            .and_then(|v| v.as_num())
+            .ok_or("wisdom: missing schema version field")?;
+        if version != WISDOM_VERSION as f64 {
+            return Err(format!(
+                "wisdom: schema version {version} (this build reads {WISDOM_VERSION})"
+            ));
+        }
+        let rows = doc
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or("wisdom: missing entries array")?;
+        let mut entries = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let s = |field: &str| -> Result<String, String> {
+                row.get(field)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or(format!("wisdom: entry {i}: missing string field '{field}'"))
+            };
+            let n = |field: &str| -> Result<f64, String> {
+                row.get(field)
+                    .and_then(|v| v.as_num())
+                    .ok_or(format!("wisdom: entry {i}: missing numeric field '{field}'"))
+            };
+            let grid = row
+                .get("grid")
+                .and_then(|v| v.as_arr())
+                .ok_or(format!("wisdom: entry {i}: missing grid array"))?
+                .iter()
+                .map(|v| v.as_num().map(|x| x as usize))
+                .collect::<Option<Vec<usize>>>()
+                .ok_or(format!("wisdom: entry {i}: non-numeric grid extent"))?;
+            entries.push(WisdomEntry {
+                signature: s("signature")?,
+                method: s("method")?,
+                exec: s("exec")?,
+                overlap_depth: n("overlap_depth")? as usize,
+                transport: s("transport")?,
+                grid,
+                seconds: n("seconds")?,
+                budget: s("budget")?,
+                created_unix: n("created_unix")? as u64,
+            });
+        }
+        Ok(Wisdom { entries })
+    }
+
+    /// Load a wisdom file. Any failure (absent, unreadable, wrong
+    /// version, malformed) is an `Err` the caller treats as "no wisdom".
+    pub fn load(path: &Path) -> Result<Wisdom, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::from_json(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Render the store as a wisdom JSON document.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .entries
+            .iter()
+            .map(|e| {
+                JsonObj::new()
+                    .str("signature", &e.signature)
+                    .str("method", &e.method)
+                    .str("exec", &e.exec)
+                    .int("overlap_depth", e.overlap_depth as u64)
+                    .str("transport", &e.transport)
+                    .raw("grid", json_usize_array(&e.grid))
+                    .num("seconds", e.seconds)
+                    .str("budget", &e.budget)
+                    .int("created_unix", e.created_unix)
+                    .render()
+            })
+            .collect();
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"wisdom\": {WISDOM_VERSION},\n"));
+        out.push_str(&format!("  \"written_by\": \"{}\",\n", json_escape("a2wfft repro tune")));
+        out.push_str("  \"entries\": [\n");
+        for (i, row) in rows.iter().enumerate() {
+            let sep = if i + 1 == rows.len() { "" } else { "," };
+            out.push_str(&format!("    {row}{sep}\n"));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the store to `path` (overwrites).
+    pub fn store(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| format!("writing {}: {e}", path.display()))
+    }
+
+    /// Look up a *fresh* entry by signature key, at an explicit clock and
+    /// freshness window (the testable core of [`Wisdom::lookup`]).
+    pub fn lookup_at(&self, key: &str, now_unix: u64, max_age_secs: u64) -> Option<&WisdomEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.signature == key && now_unix.saturating_sub(e.created_unix) <= max_age_secs)
+    }
+
+    /// Look up a fresh entry by signature key against the wall clock and
+    /// the default freshness window.
+    pub fn lookup(&self, key: &str) -> Option<&WisdomEntry> {
+        self.lookup_at(key, now_unix(), DEFAULT_MAX_AGE_SECS)
+    }
+
+    /// Record (or replace) the entry for `signature`.
+    pub fn record(&mut self, signature: &Signature, winner: &Candidate, seconds: f64, budget: &str) {
+        let key = signature.key();
+        self.entries.retain(|e| e.signature != key);
+        self.entries.push(WisdomEntry {
+            signature: key,
+            method: winner.method.name().to_string(),
+            exec: winner.exec.name().to_string(),
+            overlap_depth: winner.exec.depth(),
+            transport: winner.transport.name().to_string(),
+            grid: winner.grid.clone(),
+            seconds,
+            budget: budget.to_string(),
+            created_unix: now_unix(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_entry(sig: &str, secs: f64, created: u64) -> WisdomEntry {
+        WisdomEntry {
+            signature: sig.to_string(),
+            method: "alltoallw".to_string(),
+            exec: "pipelined".to_string(),
+            overlap_depth: 4,
+            transport: "window".to_string(),
+            grid: vec![2, 2],
+            seconds: secs,
+            budget: "normal".to_string(),
+            created_unix: created,
+        }
+    }
+
+    #[test]
+    fn signature_key_is_stable() {
+        let sig = Signature::new::<f64>(&[64, 64, 64], 4, Kind::R2c);
+        assert_eq!(sig.key(), "r2c/f64/g64x64x64/r4");
+        let sig32 = Signature::with_dtype(&[16, 12], 2, Kind::C2c, "f32");
+        assert_eq!(sig32.key(), "c2c/f32/g16x12/r2");
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let w = Wisdom {
+            entries: vec![
+                sample_entry("r2c/f64/g64x64x64/r4", 1.25e-3, 1_700_000_000),
+                sample_entry("c2c/f32/g16x12x10/r2", 7.5e-4, 1_700_000_001),
+            ],
+        };
+        let back = Wisdom::from_json(&w.to_json()).unwrap();
+        assert_eq!(w.entries, back.entries);
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let text = "{\"wisdom\": 999, \"entries\": []}";
+        assert!(Wisdom::from_json(text).is_err());
+        assert!(Wisdom::from_json("{\"entries\": []}").is_err());
+        assert!(Wisdom::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn staleness_window_filters_lookups() {
+        let w = Wisdom { entries: vec![sample_entry("k", 1.0, 1000)] };
+        // Fresh inside the window, stale outside, future stamps are fresh
+        // (clock skew must not hide brand-new wisdom).
+        assert!(w.lookup_at("k", 1000 + 10, 60).is_some());
+        assert!(w.lookup_at("k", 1000 + 61, 60).is_none());
+        assert!(w.lookup_at("k", 500, 60).is_some());
+        assert!(w.lookup_at("absent", 1000, 60).is_none());
+    }
+
+    #[test]
+    fn record_replaces_same_signature() {
+        let sig = Signature::new::<f64>(&[8, 8, 8], 2, Kind::C2c);
+        let mut w = Wisdom::default();
+        let cand = Candidate {
+            method: RedistMethod::Alltoallw,
+            exec: ExecMode::Blocking,
+            transport: Transport::Mailbox,
+            grid: vec![2],
+        };
+        w.record(&sig, &cand, 2.0, "tiny");
+        let better = Candidate { transport: Transport::Window, ..cand.clone() };
+        w.record(&sig, &better, 1.0, "tiny");
+        assert_eq!(w.entries.len(), 1);
+        assert_eq!(w.entries[0].transport, "window");
+        assert_eq!(w.entries[0].seconds, 1.0);
+        assert_eq!(w.entries[0].overlap_depth, 0);
+    }
+
+    #[test]
+    fn entry_reconstructs_candidate() {
+        let e = sample_entry("k", 1.0, 0);
+        let c = e.candidate().unwrap();
+        assert_eq!(c.method, RedistMethod::Alltoallw);
+        assert_eq!(c.exec, ExecMode::Pipelined { depth: 4 });
+        assert_eq!(c.transport, Transport::Window);
+        assert_eq!(c.grid, vec![2, 2]);
+        // Unknown spellings are a miss, not a panic.
+        let bad = WisdomEntry { method: "quantum".to_string(), ..sample_entry("k", 1.0, 0) };
+        assert!(bad.candidate().is_none());
+        let bad_depth =
+            WisdomEntry { exec: "pipelined".to_string(), overlap_depth: 0, ..sample_entry("k", 1.0, 0) };
+        assert!(bad_depth.candidate().is_none());
+    }
+}

@@ -233,8 +233,8 @@ fn driver_acceptance_matrix_f32() {
                 global: vec![16, 12, 10],
                 ranks: 4,
                 kind: Kind::R2c,
-                method,
-                exec,
+                method: method.into(),
+                exec: exec.into(),
                 engine: EngineKind::Native,
                 inner: 1,
                 outer: 1,

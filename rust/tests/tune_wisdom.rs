@@ -1,0 +1,224 @@
+//! Integration tests of the autotuning planner and its persistent wisdom:
+//!
+//! * wisdom JSON roundtrip — write → load → identical signature match;
+//! * tuner determinism under the injected [`FakeMeasurer`] — scripted
+//!   timings produce a predictable winner, across world sizes and both
+//!   dtypes;
+//! * property: [`PfftPlan::tuned`] output is **bitwise equal** to the same
+//!   plan built explicitly with the winning configuration;
+//! * the wisdom lifecycle end-to-end — search persists, a repeat problem
+//!   recalls without measuring, `force` re-measures.
+
+use std::path::PathBuf;
+
+use a2wfft::fft::{Complex, NativeFft, Real};
+use a2wfft::pfft::{Kind, PfftPlan};
+use a2wfft::simmpi::World;
+use a2wfft::tune::{tune_plan, Budget, FakeMeasurer, Signature, TuneSpace, Wisdom};
+
+/// Unique temp path per test (tests run concurrently in one process).
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("a2wfft_{tag}_{}.json", std::process::id()))
+}
+
+#[test]
+fn wisdom_file_roundtrip_identical_signature_match() {
+    let path = temp_path("wisdom_roundtrip");
+    let sig = Signature::new::<f64>(&[32, 24, 16], 4, Kind::R2c);
+    let space = TuneSpace::new(&[32, 24, 16], 4, Budget::Normal);
+    let (cands, _) = space.candidates();
+    let mut w = Wisdom::default();
+    w.record(&sig, &cands[3], 1.5e-3, "normal");
+    // A second, different signature coexists.
+    let sig32 = Signature::new::<f32>(&[32, 24, 16], 4, Kind::R2c);
+    w.record(&sig32, &cands[0], 2.5e-3, "normal");
+    w.store(&path).unwrap();
+
+    let back = Wisdom::load(&path).unwrap();
+    assert_eq!(back.entries.len(), 2);
+    let hit = back.lookup(&sig.key()).expect("stored signature must match after reload");
+    assert_eq!(hit.candidate().unwrap(), cands[3]);
+    assert_eq!(hit.seconds, 1.5e-3);
+    assert_eq!(hit.budget, "normal");
+    let hit32 = back.lookup(&sig32.key()).unwrap();
+    assert_eq!(hit32.candidate().unwrap(), cands[0]);
+    // Unknown signatures still miss.
+    assert!(back.lookup("r2c/f64/g1x1x1/r99").is_none());
+    std::fs::remove_file(&path).ok();
+}
+
+fn winner_label_under_fake<T: Real>(global: &[usize], ranks: usize, kind: Kind) -> (String, String) {
+    // Script the *last* enumerated candidate to be the fastest: if the
+    // tuner is deterministic, it must surface exactly that one, on every
+    // world size and precision.
+    let space = TuneSpace::new(global, ranks, Budget::Tiny);
+    let (cands, _) = space.candidates();
+    let target = cands.last().unwrap().label();
+    let fake = FakeMeasurer::new(1.0).with(&target, 1e-6);
+    let global_v = global.to_vec();
+    let target_c = target.clone();
+    let reports = World::run(ranks, move |comm| {
+        let report =
+            tune_plan::<T>(&comm, &global_v, kind, Budget::Tiny, None, false, &fake);
+        // Every rank agrees on the full ranking, not just the winner.
+        let order: Vec<String> =
+            report.entries.iter().map(|e| e.candidate.label()).collect();
+        assert_eq!(order.first().unwrap(), &target_c, "winner mismatch on a rank");
+        order.join(";")
+    });
+    // All ranks produced the identical ranking string.
+    let first = reports[0].clone();
+    for r in &reports {
+        assert_eq!(*r, first, "ranks disagree on the ranking");
+    }
+    (target, first)
+}
+
+#[test]
+fn tuner_is_deterministic_under_fake_measurer() {
+    for ranks in [1usize, 2, 4] {
+        let (t64, rank64) = winner_label_under_fake::<f64>(&[16, 12, 10], ranks, Kind::R2c);
+        // Re-running the identical search reproduces the identical ranking.
+        let (t64b, rank64b) = winner_label_under_fake::<f64>(&[16, 12, 10], ranks, Kind::R2c);
+        assert_eq!(t64, t64b);
+        assert_eq!(rank64, rank64b);
+        // Both precisions: same space, same scripted winner.
+        let (t32, _) = winner_label_under_fake::<f32>(&[16, 12, 10], ranks, Kind::C2c);
+        assert_eq!(t64, t32, "candidate space must not depend on dtype");
+    }
+}
+
+#[test]
+fn tuned_plan_is_bitwise_equal_to_explicit_winner() {
+    // Script winners of several characters (pipelined/window included)
+    // and check the tuned plan's spectra against a plan built explicitly
+    // from the winning configuration — bitwise, per rank.
+    let global = vec![12, 10, 8];
+    let ranks = 4;
+    let space = TuneSpace::new(&global, ranks, Budget::Tiny);
+    let (cands, _) = space.candidates();
+    // One candidate of each flavor that exists in the tiny space.
+    let picks: Vec<String> = {
+        let mut picks = Vec::new();
+        if let Some(c) = cands.iter().find(|c| c.transport.name() == "window") {
+            picks.push(c.label());
+        }
+        if let Some(c) = cands.iter().find(|c| c.exec.depth() > 0) {
+            picks.push(c.label());
+        }
+        if let Some(c) = cands.iter().find(|c| c.method.name() == "traditional") {
+            picks.push(c.label());
+        }
+        picks
+    };
+    assert!(picks.len() >= 3, "tiny space unexpectedly narrow: {picks:?}");
+    for target in picks {
+        let fake = FakeMeasurer::new(1.0).with(&target, 1e-9);
+        let global_c = global.clone();
+        World::run(ranks, move |comm| {
+            let mut tuned = PfftPlan::<f64>::tuned_with(
+                &comm,
+                &global_c,
+                Kind::C2c,
+                Budget::Tiny,
+                None,
+                &fake,
+            );
+            // The tuned plan IS the scripted winner...
+            let dims = tuned.dims().to_vec();
+            let mut explicit = PfftPlan::<f64>::with_transport(
+                &comm,
+                &global_c,
+                &dims,
+                Kind::C2c,
+                tuned.method(),
+                tuned.exec_mode(),
+                tuned.transport(),
+            );
+            // ...and transforms bitwise-identically to the explicit build.
+            let me = comm.rank();
+            let ilen = tuned.input_len();
+            let input: Vec<Complex<f64>> = (0..ilen)
+                .map(|k| {
+                    Complex::from_f64(
+                        (k as f64 * 0.37 + me as f64).sin(),
+                        (k as f64 * 0.11 - me as f64).cos(),
+                    )
+                })
+                .collect();
+            let mut engine = NativeFft::<f64>::new();
+            let mut spec_tuned = vec![Complex::<f64>::ZERO; tuned.output_len()];
+            let mut spec_explicit = vec![Complex::<f64>::ZERO; explicit.output_len()];
+            tuned.forward(&mut engine, &input, &mut spec_tuned);
+            explicit.forward(&mut engine, &input, &mut spec_explicit);
+            assert_eq!(
+                spec_tuned, spec_explicit,
+                "rank {me}: tuned plan diverges from its explicit twin"
+            );
+            let mut back_tuned = vec![Complex::<f64>::ZERO; ilen];
+            let mut back_explicit = vec![Complex::<f64>::ZERO; ilen];
+            tuned.backward(&mut engine, &spec_tuned, &mut back_tuned);
+            explicit.backward(&mut engine, &spec_explicit, &mut back_explicit);
+            assert_eq!(back_tuned, back_explicit, "rank {me}: backward diverges");
+        });
+    }
+}
+
+#[test]
+fn wisdom_lifecycle_search_recall_force() {
+    let path = temp_path("wisdom_lifecycle");
+    std::fs::remove_file(&path).ok();
+    let global = vec![16, 12, 10];
+    let ranks = 2;
+    let space = TuneSpace::new(&global, ranks, Budget::Tiny);
+    let (cands, _) = space.candidates();
+    let target = cands.last().unwrap().label();
+
+    // 1. First tune: measures, persists the winner.
+    let global_1 = global.clone();
+    let path_1 = path.clone();
+    let fake_1 = FakeMeasurer::new(1.0).with(&target, 1e-6);
+    let first = World::run(ranks, move |comm| {
+        tune_plan::<f64>(&comm, &global_1, Kind::R2c, Budget::Tiny, Some(path_1.as_path()), false, &fake_1)
+    })
+    .remove(0);
+    assert!(!first.from_wisdom);
+    assert!(first.persisted, "search must report a successful wisdom write");
+    assert_eq!(first.winner().candidate.label(), target);
+    assert!(path.exists(), "search must persist wisdom");
+
+    // 2. Same signature again: resolved from wisdom, no measurement —
+    //    the fake scripts a *different* winner now, which must be
+    //    ignored because nothing is measured.
+    let other = cands.first().unwrap().label();
+    let global_2 = global.clone();
+    let path_2 = path.clone();
+    let fake_2 = FakeMeasurer::new(1.0).with(&other, 1e-9);
+    let second = World::run(ranks, move |comm| {
+        tune_plan::<f64>(&comm, &global_2, Kind::R2c, Budget::Tiny, Some(path_2.as_path()), false, &fake_2)
+    })
+    .remove(0);
+    assert!(second.from_wisdom, "repeat problem must resolve from wisdom");
+    assert!(!second.persisted, "a recall writes nothing");
+    assert_eq!(second.winner().candidate.label(), target);
+    assert_eq!(second.entries.len(), 1);
+
+    // 3. force: re-measures (the new scripted winner surfaces) and
+    //    replaces the wisdom entry.
+    let global_3 = global.clone();
+    let path_3 = path.clone();
+    let fake_3 = FakeMeasurer::new(1.0).with(&other, 1e-9);
+    let third = World::run(ranks, move |comm| {
+        tune_plan::<f64>(&comm, &global_3, Kind::R2c, Budget::Tiny, Some(path_3.as_path()), true, &fake_3)
+    })
+    .remove(0);
+    assert!(!third.from_wisdom);
+    assert_eq!(third.winner().candidate.label(), other);
+    let w = Wisdom::load(&path).unwrap();
+    let sig = Signature::new::<f64>(&global, ranks, Kind::R2c);
+    assert_eq!(w.lookup(&sig.key()).unwrap().candidate().unwrap().label(), other);
+    // A different signature (other world size) still misses.
+    let sig4 = Signature::new::<f64>(&global, 4, Kind::R2c);
+    assert!(w.lookup(&sig4.key()).is_none());
+    std::fs::remove_file(&path).ok();
+}
