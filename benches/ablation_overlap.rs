@@ -15,7 +15,7 @@
 
 use std::time::Instant;
 
-use a2wfft::coordinator::benchkit::{banner, real_header, real_row_exec};
+use a2wfft::coordinator::benchkit::{banner, real_header, real_row_exec, trace_finish, trace_init};
 use a2wfft::coordinator::EngineKind;
 use a2wfft::decomp::decompose;
 use a2wfft::netmodel::{Library, MachineParams, Scenario};
@@ -145,8 +145,14 @@ fn netmodel_section() {
 }
 
 fn main() {
+    // `--trace PATH` records every section's worlds into one Chrome-trace
+    // file (pipelined sections show Chunk/Window spans next to the
+    // blocking baselines).
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let trace = trace_init(&argv);
     redist_only_section([48, 48, 48], 4);
     redist_only_section([96, 96, 96], 8);
     end_to_end_section();
+    trace_finish(trace);
     netmodel_section();
 }

@@ -43,6 +43,9 @@ fn dtype_matrix_section() {
 }
 
 fn main() {
+    // `--trace PATH` records all measured worlds into one Chrome-trace file.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let trace = trace_init(&argv);
     banner("ablation: redistribution method (same substrate, redist-only column)");
     real_header();
     for (global, ranks, grid) in [
@@ -70,4 +73,5 @@ fn main() {
         );
     }
     dtype_matrix_section();
+    trace_finish(trace);
 }

@@ -1,0 +1,69 @@
+//! Bench guard: the disabled tracer must cost ≤1% on the hottest
+//! instrumented path.
+//!
+//! The fused `TransferPlan::execute` is the tightest span site in the
+//! stack (one memcpy schedule per call), so it bounds the per-site cost
+//! of the disabled branch — a single relaxed atomic load. The control arm
+//! is `execute_untraced`, the identical body minus the tracer hook.
+//! Batches of the two arms interleave and each takes its best sample, so
+//! machine drift cancels instead of accumulating into one arm.
+//!
+//! For information only (no assertion), the enabled-tracing cost is
+//! measured the same way.
+
+use std::time::Instant;
+
+use a2wfft::simmpi::datatype::{Datatype, TransferPlan};
+
+const BATCHES: usize = 9;
+const ITERS: usize = 4000;
+
+/// Seconds per iteration of one batch of `f`.
+fn batch<F: FnMut()>(mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..ITERS {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / ITERS as f64
+}
+
+fn main() {
+    assert!(!a2wfft::trace::enabled(), "guard must start with tracing off");
+    let send = Datatype::subarray(&[32, 34, 36], &[16, 17, 18], &[8, 8, 9], 8).unwrap();
+    let recv = Datatype::subarray(&[20, 40, 30], &[16, 17, 18], &[2, 11, 6], 8).unwrap();
+    let plan = TransferPlan::compile(&send, &recv).unwrap();
+    let src = vec![0x5Au8; send.extent()];
+    let mut dst = vec![0u8; recv.extent()];
+    for _ in 0..ITERS {
+        plan.execute(&src, &mut dst);
+        plan.execute_untraced(&src, &mut dst);
+    }
+    let mut best_traced = f64::INFINITY;
+    let mut best_untraced = f64::INFINITY;
+    for _ in 0..BATCHES {
+        best_traced = best_traced.min(batch(|| plan.execute(&src, &mut dst)));
+        best_untraced = best_untraced.min(batch(|| plan.execute_untraced(&src, &mut dst)));
+    }
+    // Informational: the same site with tracing on (ring pushes included).
+    a2wfft::trace::set_enabled(true);
+    let mut best_enabled = f64::INFINITY;
+    for _ in 0..BATCHES {
+        best_enabled = best_enabled.min(batch(|| plan.execute(&src, &mut dst)));
+    }
+    a2wfft::trace::set_enabled(false);
+    a2wfft::trace::clear_local();
+    println!("arm\tbest_s_per_execute\tvs_untraced");
+    println!("untraced\t{best_untraced:.3e}\t1.000x");
+    println!("disabled-tracing\t{best_traced:.3e}\t{:.3}x", best_traced / best_untraced);
+    println!("enabled-tracing\t{best_enabled:.3e}\t{:.3}x", best_enabled / best_untraced);
+    // The acceptance gate: ≤1% relative, plus 20ns absolute slop so the
+    // assertion tracks the overhead rather than timer granularity on a
+    // sub-10µs body.
+    let cap = best_untraced * 1.01 + 2e-8;
+    assert!(
+        best_traced <= cap,
+        "disabled tracing costs too much: {best_traced:.3e}s vs untraced {best_untraced:.3e}s \
+         (cap {cap:.3e}s)"
+    );
+    println!("trace overhead guard OK");
+}

@@ -238,7 +238,40 @@ pub fn report_json(
         .int("staged_pack_unpack_bytes", rep.staged_bytes)
         .num("throughput_pts_per_s", rep.throughput(global))
         .num("max_err", rep.max_err)
+        .num("imb_total", rep.stats.total.imbalance())
+        .num("imb_fft", rep.stats.fft.imbalance())
+        .num("imb_redist", rep.stats.redist.imbalance())
+        .num("imb_overlap_fft", rep.stats.overlap_fft.imbalance())
+        .num("imb_overlap_comm", rep.stats.overlap_comm.imbalance())
         .render()
+}
+
+/// Bench-side `--trace PATH` support: call [`trace_init`] before the
+/// measured section (it enables tracing when the argv carries
+/// `--trace PATH`) and [`trace_finish`] after it (writes the Chrome-trace
+/// JSON and prints the imbalance report to stderr). Both are no-ops when
+/// the flag is absent.
+pub fn trace_init(argv: &[String]) -> Option<PathBuf> {
+    let pos = argv.iter().position(|a| a == "--trace")?;
+    let path = argv.get(pos + 1).unwrap_or_else(|| {
+        eprintln!("--trace requires a PATH value");
+        std::process::exit(2);
+    });
+    crate::trace::set_enabled(true);
+    Some(PathBuf::from(path))
+}
+
+/// Finish a bench trace started by [`trace_init`] (no-op on `None`).
+pub fn trace_finish(path: Option<PathBuf>) {
+    let Some(path) = path else { return };
+    crate::trace::set_enabled(false);
+    let bundles = crate::trace::take_bundles();
+    crate::trace::write_chrome_trace(&path, &bundles)
+        .unwrap_or_else(|e| panic!("writing trace {}: {e}", path.display()));
+    if let Some(b) = bundles.last() {
+        eprintln!("trace: wrote {} ({} world(s) gathered)", path.display(), bundles.len());
+        eprint!("{}", crate::trace::imbalance(b).render_text());
+    }
 }
 
 /// Write `BENCH_<name>.json` in the current directory: a single object

@@ -149,6 +149,10 @@ pub struct RunConfig {
     /// partially pinned search is never persisted (wisdom is keyed by
     /// problem signature alone). `None` disables persistence.
     pub wisdom: Option<PathBuf>,
+    /// When set, record per-rank event traces during the measured run and
+    /// write a Chrome-trace/Perfetto JSON file to this path at the end
+    /// (the driver also prints the imbalance report derived from it).
+    pub trace: Option<PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -167,6 +171,7 @@ impl Default for RunConfig {
             outer: 5,
             budget: Budget::Normal,
             wisdom: None,
+            trace: None,
         }
     }
 }

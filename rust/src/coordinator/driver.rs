@@ -9,7 +9,7 @@
 use std::time::Instant;
 
 use crate::coordinator::config::{Dtype, EngineKind, Knob, RunConfig};
-use crate::coordinator::metrics::RankMetrics;
+use crate::coordinator::metrics::{MetricsStats, RankMetrics};
 use crate::fft::{Complex, NativeFft, Real, SerialFft};
 use crate::pfft::{Kind, PfftPlan};
 use crate::runtime::XlaFftEngine;
@@ -34,8 +34,8 @@ pub struct RunReport {
     /// one-copy window transfers, so totals are transport-comparable).
     pub bytes: u64,
     /// Datatype-engine bytes per pair moved by fused intra-rank
-    /// transfer-plan copies (summed over ranks; approximate when other
-    /// worlds run concurrently — the engine counters are process-global).
+    /// transfer-plan copies (summed over this run's ranks via their
+    /// thread-local counters, so concurrent worlds cannot pollute it).
     pub fused_bytes: u64,
     /// Datatype-engine bytes per pair moved by cross-rank one-copy window
     /// transfers (sender's array → receiver's array, no staging).
@@ -60,6 +60,10 @@ pub struct RunReport {
     /// Whether the configuration was resolved by the autotuner
     /// ([`resolve_auto`]) rather than fixed by the caller.
     pub tuned: bool,
+    /// Min/mean/max of every time field across ranks (taken from the same
+    /// best outer iteration as the max-reduced times above), so reports
+    /// can show load imbalance instead of only the straggler's view.
+    pub stats: MetricsStats,
 }
 
 impl RunReport {
@@ -67,6 +71,11 @@ impl RunReport {
     /// mesh counts the mesh once).
     pub fn throughput(&self, global: &[usize]) -> f64 {
         global.iter().product::<usize>() as f64 / self.total
+    }
+
+    /// Max/mean skew of the per-pair total across ranks (1.0 = balanced).
+    pub fn imbalance_total(&self) -> f64 {
+        self.stats.total.imbalance()
     }
 }
 
@@ -175,8 +184,14 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
     let exec = cfg.exec.fixed().expect(unresolved);
     let transport = cfg.transport.fixed().expect(unresolved);
     let grid = cfg.resolved_grid(grid_ndims);
-    let engine_stats0 = crate::simmpi::datatype::stats::snapshot();
+    if cfg.trace.is_some() {
+        crate::trace::set_enabled(true);
+    }
     let reports = World::run(cfg.ranks, |comm| {
+        // Engine-side copy accounting is per rank through the thread-local
+        // counter mirror, so concurrent worlds (parallel tests) cannot
+        // pollute this run's totals.
+        let engine0 = crate::simmpi::datatype::stats::local_snapshot();
         let mut plan = PfftPlan::<T>::with_transport(
             &comm,
             &cfg.global,
@@ -254,7 +269,7 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         }
         let bytes = comm.world_bytes_sent() + comm.world_window_bytes() - bytes0;
         let scale = 1.0 / (cfg.inner * cfg.outer) as f64;
-        let m = RankMetrics {
+        let (m, stats) = RankMetrics {
             total: best,
             fft: best_timers.fft / cfg.inner as f64,
             redist: best_timers.redist / cfg.inner as f64,
@@ -262,16 +277,29 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
             overlap_comm: best_timers.overlap_comm / cfg.inner as f64,
             bytes: (bytes as f64 * scale) as u64,
         }
-        .reduce_max(&comm);
+        .reduce_stats(&comm);
         let mut err = [max_err];
         comm.allreduce_f64(&mut err, crate::simmpi::collective::ReduceOp::Max);
-        (m, err[0])
+        // Engine-side copy accounting: this rank's counter delta over the
+        // whole run (warmups included), summed across the group.
+        let es = crate::simmpi::datatype::stats::local_snapshot().since(&engine0);
+        let mut eb =
+            [es.fused_bytes, es.one_copy_bytes, es.packed_bytes.wrapping_add(es.unpacked_bytes)];
+        comm.allreduce_u64(&mut eb, crate::simmpi::collective::ReduceOp::Sum);
+        (m, stats, err[0], eb)
     });
-    let (m, err) = reports[0];
-    // Engine-side copy accounting: process-global counter delta over the
-    // whole run (all ranks, warmups included), scaled to one fwd+bwd pair
-    // like the wire bytes.
-    let es = crate::simmpi::datatype::stats::snapshot().since(&engine_stats0);
+    if let Some(path) = &cfg.trace {
+        crate::trace::set_enabled(false);
+        let bundles = crate::trace::take_bundles();
+        crate::trace::write_chrome_trace(path, &bundles)
+            .unwrap_or_else(|e| panic!("writing trace {}: {e}", path.display()));
+        // Diagnostics go to stderr so `--json` stdout stays parseable.
+        if let Some(b) = bundles.last() {
+            eprintln!("trace: wrote {} ({} world(s) gathered)", path.display(), bundles.len());
+            eprint!("{}", crate::trace::imbalance(b).render_text());
+        }
+    }
+    let (m, stats, err, eb) = reports[0];
     let pair_scale = 1.0 / (cfg.inner * cfg.outer) as f64;
     RunReport {
         total: m.total,
@@ -280,9 +308,9 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         overlap_fft: m.overlap_fft,
         overlap_comm: m.overlap_comm,
         bytes: m.bytes,
-        fused_bytes: (es.fused_bytes as f64 * pair_scale) as u64,
-        one_copy_bytes: (es.one_copy_bytes as f64 * pair_scale) as u64,
-        staged_bytes: ((es.packed_bytes + es.unpacked_bytes) as f64 * pair_scale) as u64,
+        fused_bytes: (eb[0] as f64 * pair_scale) as u64,
+        one_copy_bytes: (eb[1] as f64 * pair_scale) as u64,
+        staged_bytes: (eb[2] as f64 * pair_scale) as u64,
         max_err: err,
         dtype: T::NAME,
         transport: transport.name(),
@@ -290,6 +318,7 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         exec: exec.name(),
         overlap_depth: exec.depth() as u64,
         tuned: false,
+        stats,
     }
 }
 

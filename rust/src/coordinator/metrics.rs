@@ -3,7 +3,10 @@
 //! The paper reduces per-rank times with a max across the group before
 //! picking the fastest outer iteration; [`RankMetrics`] carries a rank's
 //! raw numbers and [`RankMetrics::reduce_max`] performs that reduction as
-//! a collective.
+//! a collective. A max alone hides load imbalance (every rank could be
+//! slow, or one straggler could drag the group), so
+//! [`RankMetrics::reduce_stats`] additionally computes min and mean per
+//! field and [`FieldStats::imbalance`] reports the max/mean skew ratio.
 
 use crate::simmpi::collective::ReduceOp;
 use crate::simmpi::Comm;
@@ -22,6 +25,33 @@ pub struct RankMetrics {
     pub bytes: u64,
 }
 
+/// Min/mean/max of one metric field across the ranks of a group.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FieldStats {
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl FieldStats {
+    /// Skew ratio max/mean; 1.0 means perfectly balanced. Returns 1.0 when
+    /// the mean is not positive (nothing was measured).
+    pub fn imbalance(&self) -> f64 {
+        if self.mean > 0.0 { self.max / self.mean } else { 1.0 }
+    }
+}
+
+/// Per-field distribution of [`RankMetrics`] across a group, produced by
+/// [`RankMetrics::reduce_stats`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MetricsStats {
+    pub total: FieldStats,
+    pub fft: FieldStats,
+    pub redist: FieldStats,
+    pub overlap_fft: FieldStats,
+    pub overlap_comm: FieldStats,
+}
+
 impl RankMetrics {
     /// Max-reduce the times over `comm` (bytes are summed); every rank
     /// returns the reduced value.
@@ -38,6 +68,39 @@ impl RankMetrics {
             overlap_comm: t[4],
             bytes: b[0],
         }
+    }
+
+    /// Like [`reduce_max`](Self::reduce_max) but also returns the min and
+    /// mean of every time field across the group, so callers can report
+    /// load imbalance instead of only the straggler's view.
+    pub fn reduce_stats(&self, comm: &Comm) -> (RankMetrics, MetricsStats) {
+        let fields = [self.total, self.fft, self.redist, self.overlap_fft, self.overlap_comm];
+        let mut max = fields;
+        comm.allreduce_f64(&mut max, ReduceOp::Max);
+        let mut min = fields;
+        comm.allreduce_f64(&mut min, ReduceOp::Min);
+        let mut sum = fields;
+        comm.allreduce_f64(&mut sum, ReduceOp::Sum);
+        let n = comm.size() as f64;
+        let mut b = [self.bytes];
+        comm.allreduce_u64(&mut b, ReduceOp::Sum);
+        let at = |i: usize| FieldStats { min: min[i], mean: sum[i] / n, max: max[i] };
+        let reduced = RankMetrics {
+            total: max[0],
+            fft: max[1],
+            redist: max[2],
+            overlap_fft: max[3],
+            overlap_comm: max[4],
+            bytes: b[0],
+        };
+        let stats = MetricsStats {
+            total: at(0),
+            fft: at(1),
+            redist: at(2),
+            overlap_fft: at(3),
+            overlap_comm: at(4),
+        };
+        (reduced, stats)
     }
 }
 
@@ -64,5 +127,38 @@ mod tests {
             assert_eq!(m.redist, 1.0);
             assert_eq!(m.bytes, 400);
         }
+    }
+
+    #[test]
+    fn reduce_stats_exposes_min_mean_and_skew() {
+        let outs = World::run(4, |comm| {
+            let m = RankMetrics {
+                total: 1.0 + comm.rank() as f64, // 1,2,3,4
+                fft: 2.0,
+                redist: if comm.rank() == 0 { 4.0 } else { 0.0 },
+                bytes: 10,
+                ..Default::default()
+            };
+            m.reduce_stats(&comm)
+        });
+        for (m, s) in outs {
+            assert_eq!(m.total, 4.0);
+            assert_eq!(m.bytes, 40);
+            assert_eq!(s.total.min, 1.0);
+            assert_eq!(s.total.mean, 2.5);
+            assert_eq!(s.total.max, 4.0);
+            assert!((s.total.imbalance() - 1.6).abs() < 1e-12);
+            // Uniform field: no skew.
+            assert_eq!(s.fft.imbalance(), 1.0);
+            // One straggler holds all the time: skew = max / mean = 4.
+            assert_eq!(s.redist.min, 0.0);
+            assert_eq!(s.redist.max, 4.0);
+            assert!((s.redist.imbalance() - 4.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn imbalance_of_empty_field_is_one() {
+        assert_eq!(FieldStats::default().imbalance(), 1.0);
     }
 }

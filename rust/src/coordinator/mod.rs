@@ -20,7 +20,7 @@ pub mod trend;
 
 pub use config::{Dtype, EngineKind, Knob, RunConfig};
 pub use driver::{resolve_auto, run_config, run_config_typed, RunReport};
-pub use metrics::RankMetrics;
+pub use metrics::{FieldStats, MetricsStats, RankMetrics};
 
 pub use crate::simmpi::Transport;
 pub use crate::tune::Budget;

@@ -243,6 +243,9 @@ pub struct TrendRow {
     pub mean_one_copy_bytes: Option<f64>,
     /// Mean staged pack/unpack bytes.
     pub mean_staged_bytes: Option<f64>,
+    /// Mean max/mean load-imbalance ratio of the total time (rows
+    /// carrying `imb_total`; 1.0 = perfectly balanced ranks).
+    pub mean_imbalance: Option<f64>,
     /// Dtype of the rows, when uniform across the group.
     pub dtype: Option<String>,
     /// Transport of the rows (`"mailbox"`/`"window"`), when the rows carry
@@ -285,6 +288,7 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
         fused: Vec<f64>,
         one_copy: Vec<f64>,
         staged: Vec<f64>,
+        imb: Vec<f64>,
     }
     type GroupKey = (String, String, Option<String>, Option<String>);
     let mut groups: BTreeMap<GroupKey, Acc> = BTreeMap::new();
@@ -314,6 +318,7 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
             push("fused_copy_bytes", &mut acc.fused);
             push("one_copy_bytes", &mut acc.one_copy);
             push("staged_pack_unpack_bytes", &mut acc.staged);
+            push("imb_total", &mut acc.imb);
         }
     }
     groups
@@ -327,6 +332,7 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
             mean_fused_bytes: mean(&acc.fused),
             mean_one_copy_bytes: mean(&acc.one_copy),
             mean_staged_bytes: mean(&acc.staged),
+            mean_imbalance: mean(&acc.imb),
             dtype,
             transport,
         })
@@ -422,11 +428,11 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
         }
     } else {
         println!(
-            "bench\tgroup\tdtype\ttransport\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_one_copy_bytes\tmean_staged_bytes"
+            "bench\tgroup\tdtype\ttransport\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_one_copy_bytes\tmean_staged_bytes\tmean_imb_total"
         );
         for r in &rows {
             println!(
-                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
                 r.bench,
                 r.key,
                 r.dtype.as_deref().unwrap_or("-"),
@@ -437,6 +443,7 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
                 fmt_opt(r.mean_fused_bytes),
                 fmt_opt(r.mean_one_copy_bytes),
                 fmt_opt(r.mean_staged_bytes),
+                fmt_opt(r.mean_imbalance),
             );
         }
     }
@@ -459,6 +466,7 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
                 .num("mean_fused_bytes", r.mean_fused_bytes.unwrap_or(f64::NAN))
                 .num("mean_one_copy_bytes", r.mean_one_copy_bytes.unwrap_or(f64::NAN))
                 .num("mean_staged_bytes", r.mean_staged_bytes.unwrap_or(f64::NAN))
+                .num("mean_imb_total", r.mean_imbalance.unwrap_or(f64::NAN))
                 .render()
         })
         .collect();
@@ -617,6 +625,24 @@ mod tests {
         let win = rows.iter().find(|r| r.transport.as_deref() == Some("window")).unwrap();
         assert_eq!(win.count, 1);
         assert_eq!(win.mean_one_copy_bytes, Some(64.0));
+    }
+
+    #[test]
+    fn imbalance_column_aggregates_when_present() {
+        let d = doc(
+            "run",
+            &[
+                r#"{"label": "a", "total_s": 1.0, "imb_total": 1.2}"#,
+                r#"{"label": "a", "total_s": 1.0, "imb_total": 1.4}"#,
+                r#"{"label": "b", "total_s": 1.0}"#,
+            ],
+        );
+        let rows = aggregate(&[d]);
+        let a = rows.iter().find(|r| r.key == "a").unwrap();
+        assert!((a.mean_imbalance.unwrap() - 1.3).abs() < 1e-12);
+        // Rows from commits that predate the column aggregate without it.
+        let b = rows.iter().find(|r| r.key == "b").unwrap();
+        assert_eq!(b.mean_imbalance, None);
     }
 
     #[test]

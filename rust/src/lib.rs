@@ -72,6 +72,13 @@
 //!   [`coordinator::Knob`] `Auto` selectors the tuner resolves), metrics,
 //!   workload drivers, the `BENCH_*.json` trend aggregator and the CLI
 //!   entry points used by `repro` and the benchmark harness.
+//! * [`trace`] — the per-rank structured event tracer: preallocated
+//!   thread-local span rings over every hot layer (serial-FFT axis passes,
+//!   pack/unpack/fused copies, exchange post/wait, window epochs, pipeline
+//!   chunks), gathered collectively at world teardown and exported as a
+//!   Chrome-trace/Perfetto timeline plus a cross-rank imbalance report
+//!   (`repro run --trace PATH`). Disabled tracing costs one relaxed
+//!   atomic load per site.
 
 pub mod cli;
 pub mod coordinator;
@@ -83,6 +90,7 @@ pub mod pfft;
 pub mod redistribute;
 pub mod runtime;
 pub mod simmpi;
+pub mod trace;
 pub mod tune;
 
 pub use fft::{Complex, Complex32, Complex64, Real};

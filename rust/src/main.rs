@@ -5,11 +5,12 @@
 //! * `repro run [--global 64,64,64] [--ranks 4] [--grid 2,2] [--kind r2c|c2c]`
 //!   `[--method alltoallw|traditional|auto] [--engine native|xla]`
 //!   `[--dtype f32|f64] [--transport mailbox|window|auto] [--inner 3]`
-//!   `[--outer 5] [--tune]`
+//!   `[--outer 5] [--tune] [--trace PATH]`
 //!   — execute a distributed transform on the simulated world and print the
 //!   timing breakdown (the paper's measurement protocol). `--tune` (or any
 //!   knob spelled `auto`) resolves the configuration through the
-//!   autotuning planner first.
+//!   autotuning planner first. `--trace PATH` records per-rank event
+//!   traces and writes Chrome-trace JSON plus an imbalance report.
 //! * `repro tune [--budget tiny|normal|full] [--wisdom PATH] [--force]`
 //!   — search the (method × exec × depth × transport × grid) space for a
 //!   problem, print the ranked table, persist the winner as wisdom.
@@ -69,8 +70,10 @@ fn print_help() {
          \x20           [--overlap-depth K] [--transport mailbox|window|auto]\n\
          \x20           [--inner I] [--outer O] [--json]\n\
          \x20           [--tune] [--budget tiny|normal|full] [--wisdom PATH]\n\
+         \x20           [--trace PATH]\n\
          \x20 repro tune [--global N,N,N] [--ranks R] [--kind r2c|c2c] [--dtype f32|f64]\n\
          \x20           [--budget tiny|normal|full] [--wisdom PATH] [--force] [--json]\n\
+         \x20           [--trace PATH]\n\
          \x20 repro figure <6|7|8|9|10|11>\n\
          \x20 repro trend [--dir DIR] [--best]\n\
          \x20 repro selftest [--transport mailbox|window]\n\
@@ -113,6 +116,17 @@ fn print_help() {
          \x20 searches just that axis (no wisdom: wisdom only covers the\n\
          \x20 full-auto search)\n\
          \n\
+         OBSERVABILITY (--trace PATH):\n\
+         \x20 record per-rank event spans (fft axis passes, pack/unpack/fused\n\
+         \x20 copies, exchange posting, wait-blocked time, window epochs,\n\
+         \x20 pipeline chunk stages) during the run; at the end the rank\n\
+         \x20 buffers gather to rank 0 and PATH receives Chrome-trace JSON\n\
+         \x20 (open in Perfetto or chrome://tracing: one process row per\n\
+         \x20 rank, one thread row per category), and an imbalance report\n\
+         \x20 (per-stage min/mean/max across ranks, skew, critical path)\n\
+         \x20 prints to stderr. Tracing off costs one atomic load per span\n\
+         \x20 site; the TSV/JSON rows also carry imb_* skew ratios\n\
+         \n\
          OUTPUT:\n\
          \x20 --json     print the run result as one machine-readable JSON object\n\
          \x20            (per-stage timings, dtype, chosen method/exec/transport,\n\
@@ -151,6 +165,7 @@ fn cmd_run(args: &Args) {
             "outer",
             "budget",
             "wisdom",
+            "trace",
         ],
         &["json", "tune", "help"],
     );
@@ -234,6 +249,7 @@ fn cmd_run(args: &Args) {
         outer: args.get_usize("outer", 5),
         budget,
         wisdom,
+        trace: args.get("trace").map(PathBuf::from),
     };
     // Resolve Auto knobs up front so the chosen grid is printable; the
     // resolved config runs without further tuning.
@@ -271,10 +287,10 @@ fn cmd_run(args: &Args) {
         rep.tuned
     );
     println!(
-        "total_s\tfft_s\tredist_s\toverlap_fft_s\toverlap_comm_s\tbytes\tfused_bytes\tone_copy_bytes\tstaged_bytes\tthroughput_pts_per_s\tmax_err"
+        "total_s\tfft_s\tredist_s\toverlap_fft_s\toverlap_comm_s\tbytes\tfused_bytes\tone_copy_bytes\tstaged_bytes\tthroughput_pts_per_s\tmax_err\timb_total\timb_fft\timb_redist"
     );
     println!(
-        "{:.6}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{}\t{}\t{}\t{:.3e}\t{:.3e}",
+        "{:.6}\t{:.6}\t{:.6}\t{:.6}\t{:.6}\t{}\t{}\t{}\t{}\t{:.3e}\t{:.3e}\t{:.3}\t{:.3}\t{:.3}",
         rep.total,
         rep.fft,
         rep.redist,
@@ -285,7 +301,10 @@ fn cmd_run(args: &Args) {
         rep.one_copy_bytes,
         rep.staged_bytes,
         rep.throughput(&global),
-        rep.max_err
+        rep.max_err,
+        rep.stats.total.imbalance(),
+        rep.stats.fft.imbalance(),
+        rep.stats.redist.imbalance()
     );
 }
 
@@ -293,7 +312,7 @@ fn cmd_tune(args: &Args) {
     validated(
         args,
         "repro tune",
-        &["global", "ranks", "kind", "dtype", "budget", "wisdom"],
+        &["global", "ranks", "kind", "dtype", "budget", "wisdom", "trace"],
         &["json", "force", "help"],
     );
     let global = args.get_usizes("global").unwrap_or_else(|| vec![64, 64, 64]);
@@ -308,6 +327,10 @@ fn cmd_tune(args: &Args) {
         .unwrap_or_else(|| panic!("--budget: unknown {} (tiny|normal|full)", args.get("budget").unwrap()));
     let wisdom = PathBuf::from(args.get("wisdom").unwrap_or("WISDOM.json"));
     let force = args.has_flag("force");
+    let trace = args.get("trace").map(PathBuf::from);
+    if trace.is_some() {
+        a2wfft::trace::set_enabled(true);
+    }
     let reports: Vec<TuneReport> = World::run(ranks, |comm| match dtype {
         Dtype::F32 => {
             tune_plan::<f32>(&comm, &global, kind, budget, Some(wisdom.as_path()), force, &WallClock)
@@ -316,6 +339,19 @@ fn cmd_tune(args: &Args) {
             tune_plan::<f64>(&comm, &global, kind, budget, Some(wisdom.as_path()), force, &WallClock)
         }
     });
+    if let Some(path) = &trace {
+        a2wfft::trace::set_enabled(false);
+        let bundles = a2wfft::trace::take_bundles();
+        a2wfft::trace::write_chrome_trace(path, &bundles)
+            .unwrap_or_else(|e| panic!("writing trace {}: {e}", path.display()));
+        // A slow candidate shows up as a skewed stage here; open the JSON
+        // in Perfetto to see which one (diagnostics on stderr, like the
+        // driver, so --json stdout stays parseable).
+        if let Some(b) = bundles.last() {
+            eprintln!("trace: wrote {} ({} world(s) gathered)", path.display(), bundles.len());
+            eprint!("{}", a2wfft::trace::imbalance(b).render_text());
+        }
+    }
     let report = reports.into_iter().next().expect("tune world returned no report");
     if args.has_flag("json") {
         use a2wfft::coordinator::benchkit::{json_usize_array, JsonObj};

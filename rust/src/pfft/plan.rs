@@ -490,6 +490,7 @@ impl<T: Real> PfftPlan<T> {
         {
             let shape = self.shapes[r].clone();
             for axis in (r..d).rev() {
+                crate::trace_span!(Fft, crate::trace::axis_label(axis));
                 engine.c2c(&mut self.bufs[r], &shape, axis, Direction::Forward);
             }
         }
@@ -512,6 +513,7 @@ impl<T: Real> PfftPlan<T> {
         {
             let shape = self.shapes[r].clone();
             for axis in r..d {
+                crate::trace_span!(Fft, crate::trace::axis_label(axis));
                 engine.c2c(&mut self.bufs[r], &shape, axis, Direction::Backward);
             }
         }
@@ -532,10 +534,14 @@ impl<T: Real> PfftPlan<T> {
         {
             // r2c along the last axis into the state-r complex buffer...
             let rs = self.real_shape.clone();
-            engine.r2c(input, &rs, &mut self.bufs[r]);
+            {
+                crate::trace_span!(Fft, "r2c");
+                engine.r2c(input, &rs, &mut self.bufs[r]);
+            }
             // ...then c2c on the remaining complete axes.
             let shape = self.shapes[r].clone();
             for axis in (r..d - 1).rev() {
+                crate::trace_span!(Fft, crate::trace::axis_label(axis));
                 engine.c2c(&mut self.bufs[r], &shape, axis, Direction::Forward);
             }
         }
@@ -558,10 +564,14 @@ impl<T: Real> PfftPlan<T> {
         {
             let shape = self.shapes[r].clone();
             for axis in r..d - 1 {
+                crate::trace_span!(Fft, crate::trace::axis_label(axis));
                 engine.c2c(&mut self.bufs[r], &shape, axis, Direction::Backward);
             }
             let rs = self.real_shape.clone();
-            engine.c2r(&self.bufs[r], &rs, output);
+            {
+                crate::trace_span!(Fft, "c2r");
+                engine.c2r(&self.bufs[r], &rs, output);
+            }
         }
         self.timers.fft += t0.elapsed().as_secs_f64();
     }
@@ -580,11 +590,15 @@ impl<T: Real> PfftPlan<T> {
             let (lo, hi) = self.bufs.split_at_mut(t + 1);
             match &mut self.redists[t] {
                 RedistKind::Piped(p) => {
+                    crate::trace_span!(Exchange, "exchange_pipelined");
                     let mut fft_s = 0.0f64;
                     let t0 = Instant::now();
                     p.execute_chunked(&hi[0], &mut lo[t], |chunk, shape| {
                         let tc = Instant::now();
-                        engine.c2c(chunk, shape, t, dir);
+                        {
+                            crate::trace_span!(Fft, "chunk_c2c");
+                            engine.c2c(chunk, shape, t, dir);
+                        }
                         fft_s += tc.elapsed().as_secs_f64();
                     });
                     let wall = t0.elapsed().as_secs_f64();
@@ -593,11 +607,17 @@ impl<T: Real> PfftPlan<T> {
                 }
                 blocking => {
                     let t0 = Instant::now();
-                    blocking.execute(&hi[0], &mut lo[t]);
+                    {
+                        crate::trace_span!(Exchange, "exchange");
+                        blocking.execute(&hi[0], &mut lo[t]);
+                    }
                     self.timers.redist += t0.elapsed().as_secs_f64();
                     let t1 = Instant::now();
                     let shape = self.shapes[t].clone();
-                    engine.c2c(&mut lo[t], &shape, t, dir);
+                    {
+                        crate::trace_span!(Fft, crate::trace::axis_label(t));
+                        engine.c2c(&mut lo[t], &shape, t, dir);
+                    }
                     self.timers.fft += t1.elapsed().as_secs_f64();
                 }
             }
@@ -614,11 +634,15 @@ impl<T: Real> PfftPlan<T> {
             let (lo, hi) = self.bufs.split_at_mut(t + 1);
             match &mut self.redists[t] {
                 RedistKind::Piped(p) => {
+                    crate::trace_span!(Exchange, "exchange_back_pipelined");
                     let mut fft_s = 0.0f64;
                     let t0 = Instant::now();
                     p.execute_back_chunked(&lo[t], &mut hi[0], |chunk, shape| {
                         let tc = Instant::now();
-                        engine.c2c(chunk, shape, t, Direction::Backward);
+                        {
+                            crate::trace_span!(Fft, "chunk_c2c_inv");
+                            engine.c2c(chunk, shape, t, Direction::Backward);
+                        }
                         fft_s += tc.elapsed().as_secs_f64();
                     });
                     let wall = t0.elapsed().as_secs_f64();
@@ -628,10 +652,16 @@ impl<T: Real> PfftPlan<T> {
                 blocking => {
                     let t0 = Instant::now();
                     let shape = self.shapes[t].clone();
-                    engine.c2c(&mut lo[t], &shape, t, Direction::Backward);
+                    {
+                        crate::trace_span!(Fft, crate::trace::axis_label(t));
+                        engine.c2c(&mut lo[t], &shape, t, Direction::Backward);
+                    }
                     self.timers.fft += t0.elapsed().as_secs_f64();
                     let t1 = Instant::now();
-                    blocking.execute_back(&lo[t], &mut hi[0]);
+                    {
+                        crate::trace_span!(Exchange, "exchange_back");
+                        blocking.execute_back(&lo[t], &mut hi[0]);
+                    }
                     self.timers.redist += t1.elapsed().as_secs_f64();
                 }
             }

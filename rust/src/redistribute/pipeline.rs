@@ -398,6 +398,7 @@ impl PipelinedRedistPlan {
         // start_any: `send` (the borrow of `a`) lives across this whole
         // call and every request drains FIFO below — the exposure contract.
         for chunk in self.chunks.iter().take(depth) {
+            crate::trace_span!(Chunk, "chunk_post");
             inflight.push_back(chunk.fwd.start_any(send));
         }
         for c in 0..k {
@@ -407,15 +408,20 @@ impl PipelinedRedistPlan {
             // this rank's exposure of `send` stays open until the single
             // drain() below — peers pull at their own pace and the next
             // chunk's compute starts immediately.
-            if let Some(tag) = req.wait_deferring_drain(as_bytes_mut(buf)) {
-                self.deferred_drains.push(tag);
+            {
+                crate::trace_span!(Chunk, "chunk_wait");
+                if let Some(tag) = req.wait_deferring_drain(as_bytes_mut(buf)) {
+                    self.deferred_drains.push(tag);
+                }
             }
             // Keep the window full before consuming the chunk, so the next
             // exchanges progress while we compute.
             if c + depth < k {
+                crate::trace_span!(Chunk, "chunk_post");
                 inflight.push_back(self.chunks[c + depth].fwd.start_any(send));
             }
             let chunk = &self.chunks[c];
+            crate::trace_span!(Chunk, "chunk_consume");
             on_chunk(self.scratch_b[c].as_pod_mut::<T>(), &chunk.shape_b);
             chunk.scatter_b.execute(self.scratch_b[c].as_bytes(), as_bytes_mut(b));
         }
@@ -466,12 +472,18 @@ impl PipelinedRedistPlan {
         for c in 0..k {
             let chunk = &self.chunks[c];
             // Gather the dense chunk, let the caller transform it, post it.
-            chunk.gather_b.execute(as_bytes(b), self.scratch_b[c].as_bytes_mut());
-            pre_chunk(self.scratch_b[c].as_pod_mut::<T>(), &chunk.shape_b);
+            {
+                crate::trace_span!(Chunk, "chunk_consume");
+                chunk.gather_b.execute(as_bytes(b), self.scratch_b[c].as_bytes_mut());
+                pre_chunk(self.scratch_b[c].as_pod_mut::<T>(), &chunk.shape_b);
+            }
             // start_any: scratch_b[c] is not touched again until the next
             // execute call, and this call drains every request before
             // returning — the exposure contract.
-            inflight.push_back((c, chunk.bwd.start_any(self.scratch_b[c].as_bytes())));
+            {
+                crate::trace_span!(Chunk, "chunk_post");
+                inflight.push_back((c, chunk.bwd.start_any(self.scratch_b[c].as_bytes())));
+            }
             if inflight.len() == depth {
                 Self::drain_one_back(
                     &self.chunks,
@@ -506,9 +518,13 @@ impl PipelinedRedistPlan {
     ) {
         let (c, req) = inflight.pop_front().expect("pipeline: empty backward queue");
         let chunk = &chunks[c];
-        if let Some(tag) = req.wait_deferring_drain(scratch_a[c].as_bytes_mut()) {
-            deferred.push(tag);
+        {
+            crate::trace_span!(Chunk, "chunk_wait");
+            if let Some(tag) = req.wait_deferring_drain(scratch_a[c].as_bytes_mut()) {
+                deferred.push(tag);
+            }
         }
+        crate::trace_span!(Chunk, "chunk_consume");
         chunk.scatter_a.execute(scratch_a[c].as_bytes(), as_bytes_mut(a));
     }
 

@@ -436,7 +436,11 @@ impl World {
                 let comm = Comm { rank, state: state.clone() };
                 let f = &f;
                 handles.push(scope.spawn(move || {
+                    let flush = comm.clone();
                     *slot = Some(f(comm));
+                    // Ship (or discard) this rank's trace ring after the user
+                    // closure returns, while the world is still alive.
+                    crate::trace::rank_flush(&flush);
                 }));
             }
             for h in handles {

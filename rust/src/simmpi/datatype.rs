@@ -232,6 +232,7 @@ impl Runs {
     /// [`Datatype::pack`] over a pre-flattened representation: no
     /// re-flattening, no allocation — the persistent-plan fast path.
     pub fn pack(&self, src: &[u8], dst: &mut [u8]) {
+        crate::trace_span!(Pack, "pack");
         let run = self.run_len;
         let mut out = 0usize;
         self.for_each_offset(|off| {
@@ -244,6 +245,7 @@ impl Runs {
 
     /// [`Datatype::unpack`] over a pre-flattened representation.
     pub fn unpack(&self, src: &[u8], dst: &mut [u8]) {
+        crate::trace_span!(Pack, "unpack");
         let run = self.run_len;
         let mut inp = 0usize;
         self.for_each_offset(|off| {
@@ -458,6 +460,17 @@ impl TransferPlan {
     /// Fused execution: copy every selected byte of `src` straight into its
     /// destination in `dst`. Zero staging, zero allocation.
     pub fn execute(&self, src: &[u8], dst: &mut [u8]) {
+        crate::trace_span!(Pack, "fused");
+        self.run(src, dst);
+        stats::add_fused(self.bytes);
+    }
+
+    /// [`TransferPlan::execute`] minus the tracer hook: the control arm of
+    /// the `trace_overhead` bench guard, which pins the disabled-tracing
+    /// cost of an instrumentation site at ≤1%. Not part of the public API
+    /// surface.
+    #[doc(hidden)]
+    pub fn execute_untraced(&self, src: &[u8], dst: &mut [u8]) {
         self.run(src, dst);
         stats::add_fused(self.bytes);
     }
@@ -467,6 +480,7 @@ impl TransferPlan {
     /// attributed to the [`stats::EngineStats::one_copy_bytes`] counter so
     /// driver reports can prove the pack/unpack double-copy disappeared.
     pub fn execute_one_copy(&self, src: &[u8], dst: &mut [u8]) {
+        crate::trace_span!(Pack, "one_copy");
         self.run(src, dst);
         stats::add_one_copy(self.bytes);
     }
@@ -614,7 +628,15 @@ impl AlignedScratch {
 /// Process-global datatype-engine traffic counters (relaxed atomics; cheap
 /// enough for hot paths). The benchmark harness snapshots these around a
 /// run to attribute bytes to the fused vs the staged copy engine.
+///
+/// Every counter is mirrored in a **thread-local** copy updated on the same
+/// hot paths: since simulated ranks are threads, [`local_snapshot`] is an
+/// exact per-rank view that cannot be polluted by concurrently running
+/// worlds (the cargo test harness runs tests in parallel inside one
+/// process, so diffs of the *global* counters race across tests — use
+/// [`scoped`] or [`local_snapshot`] for assertions).
 pub mod stats {
+    use std::cell::Cell;
     use std::sync::atomic::{AtomicU64, Ordering};
 
     static FUSED_BYTES: AtomicU64 = AtomicU64::new(0);
@@ -622,6 +644,18 @@ pub mod stats {
     static PACKED_BYTES: AtomicU64 = AtomicU64::new(0);
     static UNPACKED_BYTES: AtomicU64 = AtomicU64::new(0);
     static PLANS_COMPILED: AtomicU64 = AtomicU64::new(0);
+
+    thread_local! {
+        static LOCAL: Cell<EngineStats> = const {
+            Cell::new(EngineStats {
+                fused_bytes: 0,
+                one_copy_bytes: 0,
+                packed_bytes: 0,
+                unpacked_bytes: 0,
+                plans_compiled: 0,
+            })
+        };
+    }
 
     /// A snapshot of the engine counters (monotone; diff two snapshots to
     /// measure an interval).
@@ -664,24 +698,53 @@ pub mod stats {
         }
     }
 
+    /// This thread's (= this rank's) private counter view. Exact even while
+    /// other worlds run concurrently in the process; the foundation of
+    /// [`scoped`] and of the tracer's per-span byte attribution.
+    pub fn local_snapshot() -> EngineStats {
+        LOCAL.with(|c| c.get())
+    }
+
+    /// Run `f` and return `(f(), exact engine-counter delta of this thread
+    /// across the call)` — the race-free way to assert engine traffic in
+    /// tests that share the process with concurrent worlds.
+    pub fn scoped<R>(f: impl FnOnce() -> R) -> (R, EngineStats) {
+        let before = local_snapshot();
+        let out = f();
+        (out, local_snapshot().since(&before))
+    }
+
+    fn add_local(apply: impl Fn(&mut EngineStats)) {
+        LOCAL.with(|c| {
+            let mut s = c.get();
+            apply(&mut s);
+            c.set(s);
+        });
+    }
+
     pub(super) fn add_fused(n: usize) {
         FUSED_BYTES.fetch_add(n as u64, Ordering::Relaxed);
+        add_local(|s| s.fused_bytes = s.fused_bytes.wrapping_add(n as u64));
     }
 
     pub(super) fn add_one_copy(n: usize) {
         ONE_COPY_BYTES.fetch_add(n as u64, Ordering::Relaxed);
+        add_local(|s| s.one_copy_bytes = s.one_copy_bytes.wrapping_add(n as u64));
     }
 
     pub(super) fn add_packed(n: usize) {
         PACKED_BYTES.fetch_add(n as u64, Ordering::Relaxed);
+        add_local(|s| s.packed_bytes = s.packed_bytes.wrapping_add(n as u64));
     }
 
     pub(super) fn add_unpacked(n: usize) {
         UNPACKED_BYTES.fetch_add(n as u64, Ordering::Relaxed);
+        add_local(|s| s.unpacked_bytes = s.unpacked_bytes.wrapping_add(n as u64));
     }
 
     pub(super) fn add_compiled() {
         PLANS_COMPILED.fetch_add(1, Ordering::Relaxed);
+        add_local(|s| s.plans_compiled = s.plans_compiled.wrapping_add(1));
     }
 }
 
@@ -971,24 +1034,49 @@ mod tests {
 
     #[test]
     fn engine_stats_accumulate() {
-        let s0 = stats::snapshot();
+        // `stats::scoped` diffs the *thread-local* mirror, so the deltas
+        // are exact even while other tests run worlds concurrently in this
+        // process (the global counters would race; see the module docs).
         let dt = sub(&[4, 4], &[2, 2], &[1, 1], 1);
         let src: Vec<u8> = (0..16).collect();
-        let packed = dt.pack_to_vec(&src);
-        let mut back = vec![0u8; 16];
-        dt.unpack(&packed, &mut back);
-        let plan = TransferPlan::compile(&dt, &dt).unwrap();
-        let mut out = vec![0u8; 16];
-        plan.execute(&src, &mut out);
-        let mut out2 = vec![0u8; 16];
-        plan.execute_one_copy(&src, &mut out2);
-        assert_eq!(out, out2, "one-copy execution must match fused");
-        let d = stats::snapshot().since(&s0);
-        assert!(d.packed_bytes >= 4);
-        assert!(d.unpacked_bytes >= 4);
-        assert!(d.fused_bytes >= 4);
-        assert!(d.one_copy_bytes >= 4);
-        assert!(d.plans_compiled >= 1);
+        let (out_pair, d) = stats::scoped(|| {
+            let packed = dt.pack_to_vec(&src);
+            let mut back = vec![0u8; 16];
+            dt.unpack(&packed, &mut back);
+            let plan = TransferPlan::compile(&dt, &dt).unwrap();
+            let mut out = vec![0u8; 16];
+            plan.execute(&src, &mut out);
+            let mut out2 = vec![0u8; 16];
+            plan.execute_one_copy(&src, &mut out2);
+            (out, out2)
+        });
+        assert_eq!(out_pair.0, out_pair.1, "one-copy execution must match fused");
+        // 2x2 subarray of 1-byte elements = exactly 4 payload bytes per op.
+        assert_eq!(d.packed_bytes, 4);
+        assert_eq!(d.unpacked_bytes, 4);
+        assert_eq!(d.fused_bytes, 4);
+        assert_eq!(d.one_copy_bytes, 4);
+        assert_eq!(d.plans_compiled, 1);
+        // The global counters advanced by at least as much (other threads
+        // may add more concurrently, never less).
+        let g = stats::snapshot();
+        assert!(g.packed_bytes >= d.packed_bytes);
+        assert!(g.plans_compiled >= d.plans_compiled);
+    }
+
+    #[test]
+    fn local_snapshot_tracks_only_this_thread() {
+        let dt = sub(&[4, 4], &[2, 2], &[0, 0], 1);
+        let src: Vec<u8> = (0..16).collect();
+        let l0 = stats::local_snapshot();
+        // Work on another thread must not move this thread's mirror.
+        std::thread::spawn(move || {
+            let mut out = vec![0u8; dt.packed_size()];
+            dt.pack(&src, &mut out);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(stats::local_snapshot(), l0);
     }
 
     #[test]

@@ -188,11 +188,17 @@ impl Request {
         if self.done {
             return true;
         }
+        // Productive polls (ones that drained at least one contribution)
+        // are recorded as leaf `Wait` spans after the fact; fruitless polls
+        // stay invisible so spinning callers cannot flood the trace ring.
+        let t0 = if crate::trace::enabled() { crate::trace::now_ns() } else { 0 };
+        let mut progress = false;
         match &mut self.inner {
             Inner::Mailbox { pending, local, arena } => {
                 if let Some((payload, runs)) = local.take() {
                     runs.unpack(&payload, recv);
                     recycle(arena, payload);
+                    progress = true;
                 }
                 let mut i = 0;
                 while i < pending.len() {
@@ -208,6 +214,7 @@ impl Request {
                             p.runs.unpack(&payload, recv);
                             pending.swap_remove(i);
                             recycle(arena, payload);
+                            progress = true;
                         }
                         None => i += 1,
                     }
@@ -220,6 +227,7 @@ impl Request {
                     // SAFETY: the epoch contract (MPI no-modify rule) keeps
                     // the send buffer alive and unwritten until completion.
                     pairs[me].execute(unsafe { span.as_slice() }, recv);
+                    progress = true;
                 }
                 let hub = self.comm.hub();
                 let mut left = *remaining;
@@ -233,12 +241,17 @@ impl Request {
                         self.comm.add_window_bytes(pairs[p].bytes());
                         hub.release(p, *tag);
                         *remaining &= !(1u128 << p);
+                        progress = true;
                     }
                 }
                 if *remaining == 0 && (!*exposed || hub.drained(me, *tag)) {
                     self.done = true;
                 }
             }
+        }
+        if progress && crate::trace::enabled() {
+            let end = crate::trace::now_ns();
+            crate::trace::record(crate::trace::Category::Wait, "test", t0, end, 0);
         }
         self.done
     }
@@ -264,7 +277,13 @@ impl Request {
                     recycle(arena, payload);
                 }
                 for p in std::mem::take(pending) {
-                    let payload = self.comm.recv_bytes(p.src, p.tag);
+                    // The blocking receive is the wait-attribution seam:
+                    // time inside this span is *blocked on a peer*, while
+                    // the scatter below shows up under `Pack`.
+                    let payload = {
+                        crate::trace_span!(Wait, "recv");
+                        self.comm.recv_bytes(p.src, p.tag)
+                    };
                     assert_eq!(
                         payload.len(),
                         p.bytes,
@@ -364,6 +383,7 @@ impl Comm {
         recvcounts: &[usize],
         rdispls: &[usize],
     ) -> Request {
+        crate::trace_span!(Exchange, "post");
         let n = self.size();
         assert!(sendcounts.len() == n && sdispls.len() == n, "ialltoallv: bad send metadata");
         assert!(recvcounts.len() == n && rdispls.len() == n, "ialltoallv: bad recv metadata");
@@ -410,6 +430,7 @@ impl Comm {
         sendtypes: &[Datatype],
         recvtypes: &[Datatype],
     ) -> Request {
+        crate::trace_span!(Exchange, "post");
         let n = self.size();
         assert_eq!(sendtypes.len(), n, "ialltoallw: sendtypes length");
         assert_eq!(recvtypes.len(), n, "ialltoallw: recvtypes length");
@@ -584,6 +605,7 @@ impl AlltoallwPlan {
     /// by the caller (captured for nonblocking starts, fused for blocking
     /// executes).
     fn post_peers(&self, send: &[u8], tag: u32) {
+        crate::trace_span!(Exchange, "post");
         let n = self.comm.size();
         let me = self.comm.rank();
         for p in 0..n {
@@ -635,6 +657,7 @@ impl AlltoallwPlan {
     }
 
     fn start_window(&self, send: &[u8]) -> Request {
+        crate::trace_span!(Exchange, "post");
         let me = self.comm.rank();
         let tag = self.comm.next_nb_tag();
         let n = self.comm.size();

@@ -153,6 +153,7 @@ impl ExposureHub {
 
     /// Publish `span` under `(rank, tag)` for exactly `readers` pulls.
     pub(crate) fn expose(&self, rank: usize, tag: u32, span: RawSpan, readers: usize) {
+        crate::trace_span!(Window, "expose");
         assert!(readers > 0, "expose: zero-reader exposure");
         let mut g = self.m.lock().unwrap();
         let prev = g.insert((rank, tag), Exposure { span, readers_left: readers });
@@ -164,7 +165,13 @@ impl ExposureHub {
     /// Blocking read of the span exposed under `(rank, tag)`. The exposure
     /// stays live (other readers may pull concurrently) until this reader
     /// calls [`ExposureHub::release`].
+    ///
+    /// Time inside the `Wait` span is blocked-on-peer time (the exposure
+    /// was not up yet); the copy out of the span happens at the caller
+    /// under `Pack`. The polling [`ExposureHub::try_pull`] is deliberately
+    /// untraced — spinning completion loops would flood the ring.
     pub(crate) fn pull(&self, rank: usize, tag: u32) -> RawSpan {
+        crate::trace_span!(Wait, "pull");
         let mut g = self.m.lock().unwrap();
         loop {
             if let Some(e) = g.get(&(rank, tag)) {
@@ -182,6 +189,7 @@ impl ExposureHub {
     /// Signal that this reader finished copying out of `(rank, tag)`; the
     /// last release removes the exposure and wakes the owner.
     pub(crate) fn release(&self, rank: usize, tag: u32) {
+        crate::trace_span!(Window, "release");
         let mut g = self.m.lock().unwrap();
         let e = g.get_mut(&(rank, tag)).expect("release: no such exposure");
         e.readers_left -= 1;
@@ -195,6 +203,7 @@ impl ExposureHub {
     /// Block until every reader of `(rank, tag)` has released — the
     /// owner's epoch close. A never-exposed key returns immediately.
     pub(crate) fn wait_drained(&self, rank: usize, tag: u32) {
+        crate::trace_span!(Wait, "drain");
         let mut g = self.m.lock().unwrap();
         while g.contains_key(&(rank, tag)) {
             g = self.cv.wait(g).unwrap();

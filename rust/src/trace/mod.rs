@@ -1,0 +1,815 @@
+//! # trace — per-rank structured event tracer
+//!
+//! Always-available, low-overhead observability for the simulated machine:
+//! every rank (thread) records [`Span`]s — begin/end timestamps from a
+//! single process-wide monotonic clock base, a [`Category`] + static label,
+//! and the [`stats`](crate::simmpi::datatype::stats) byte delta the span
+//! covered — into a **preallocated thread-local ring**. Disabled tracing
+//! costs one relaxed atomic load per instrumentation site; enabled tracing
+//! costs two clock reads and a ring write, and never allocates after the
+//! ring itself is built (so the zero-steady-state-allocation invariant of
+//! the compiled transfer-plan engine holds with tracing on — asserted by
+//! `rust/tests/trace_observability.rs`).
+//!
+//! Instrumented layers (category → sites):
+//!
+//! * `Fft` — each serial-FFT axis pass in [`crate::pfft`] (labels
+//!   `axis0..`, `r2c`, `c2r`, `chunk_c2c`/`chunk_c2c_inv` for pipelined
+//!   per-chunk compute);
+//! * `Pack` — pack/unpack through flattened runs and fused/one-copy
+//!   transfer-plan executions in [`crate::simmpi::datatype`];
+//! * `Exchange` — exchange initiation (`post`) and whole blocking or
+//!   pipelined redistribution calls in [`crate::pfft`] /
+//!   [`crate::simmpi::nonblocking`];
+//! * `Wait` — time **blocked** (mailbox `recv`, window `pull`, exposure
+//!   `drain`, productive `test` polls), split from transfer time: a
+//!   `Wait` span brackets only the blocking call, while the bytes-moving
+//!   scatter shows up under `Pack`;
+//! * `Window` — exposure epochs (`expose`/`release`) in
+//!   [`crate::simmpi::window`];
+//! * `Chunk` — per-chunk pipeline stages (`chunk_post`/`chunk_wait`/
+//!   `chunk_consume`) in [`crate::redistribute::pipeline`].
+//!
+//! At the end of [`World::run`](crate::simmpi::World) every rank flushes
+//! its ring through a collective gather to rank 0 ([`rank_flush`]), which
+//! pushes one [`TraceBundle`] into a process-wide sink. The driver (or any
+//! caller) then drains the sink ([`take_bundles`]) and writes a
+//! Chrome-trace/Perfetto JSON timeline ([`write_chrome_trace`]: one pid
+//! per rank, one tid per category) plus an [`ImbalanceReport`] — per-stage
+//! min/mean/max seconds across ranks, skew ratio, and a critical-path
+//! summary.
+
+use std::cell::RefCell;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::simmpi::datatype::stats;
+use crate::simmpi::Comm;
+
+/// Number of span categories (ring depth counters and Chrome tids are
+/// indexed by category).
+pub const NUM_CATEGORIES: usize = 6;
+
+/// Ring capacity per rank thread, in spans. Preallocated on the first
+/// enabled span of a thread; once full, the oldest spans are overwritten
+/// (counted in [`RankTrace::dropped`]) rather than allocating.
+pub const RING_CAP: usize = 65536;
+
+/// Wire tag of the end-of-world trace gather (collective tag space,
+/// disjoint from the blocking-collective tags and the nonblocking
+/// sequence).
+const TAG_TRACE: u32 = 0x8000_007E;
+
+/// What layer a [`Span`] measures. `as usize` is the Chrome-trace tid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Serial FFT compute: per-axis passes, r2c/c2r ends, chunk callbacks.
+    Fft,
+    /// Datatype-engine byte moving: pack/unpack, fused/one-copy executes.
+    Pack,
+    /// Redistribution exchanges: initiation and whole blocking/pipelined
+    /// collective calls.
+    Exchange,
+    /// Time blocked waiting on a peer: mailbox recv, window pull, drain,
+    /// productive test polls.
+    Wait,
+    /// RMA exposure-epoch bookkeeping: expose/release.
+    Window,
+    /// Pipelined per-chunk stages: post/wait/consume.
+    Chunk,
+}
+
+impl Category {
+    /// Every category, in tid order.
+    pub const ALL: [Category; NUM_CATEGORIES] = [
+        Category::Fft,
+        Category::Pack,
+        Category::Exchange,
+        Category::Wait,
+        Category::Window,
+        Category::Chunk,
+    ];
+
+    /// Stable lowercase name (Chrome `cat` field, report keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Fft => "fft",
+            Category::Pack => "pack",
+            Category::Exchange => "exchange",
+            Category::Wait => "wait",
+            Category::Window => "window",
+            Category::Chunk => "chunk",
+        }
+    }
+
+    /// Chrome-trace tid / depth-counter index.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    fn from_index(i: usize) -> Category {
+        Category::ALL[i.min(NUM_CATEGORIES - 1)]
+    }
+}
+
+/// One closed event on a rank thread. Timestamps are nanoseconds from the
+/// process-wide [`now_ns`] base, so spans of different ranks align on one
+/// timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Open timestamp, ns from the process clock base.
+    pub begin_ns: u64,
+    /// Close timestamp, ns from the process clock base.
+    pub end_ns: u64,
+    /// Layer this span measures.
+    pub cat: Category,
+    /// Nesting depth across all categories at open (0 = outermost).
+    pub depth: u16,
+    /// Nesting depth within `cat` at open (0 = outermost of its
+    /// category; per-category totals sum only these to avoid double
+    /// counting).
+    pub cat_depth: u16,
+    /// Static site label (`"axis0"`, `"pack"`, `"recv"`, ...).
+    pub label: &'static str,
+    /// Datatype-engine bytes this rank moved while the span was open
+    /// (fused + one-copy + packed + unpacked delta of the thread-local
+    /// [`stats`] mirror).
+    pub bytes: u64,
+}
+
+/// A gathered rank's spans, labels decoded to owned strings.
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub begin_ns: u64,
+    pub end_ns: u64,
+    pub cat: Category,
+    pub depth: u16,
+    pub cat_depth: u16,
+    pub label: String,
+    pub bytes: u64,
+}
+
+/// One rank's flushed ring.
+#[derive(Clone, Debug, Default)]
+pub struct RankTrace {
+    /// Spans in close order (ring overwrite drops the oldest first).
+    pub spans: Vec<SpanRec>,
+    /// Spans overwritten because the ring wrapped.
+    pub dropped: u64,
+}
+
+/// Every rank of one [`World::run`](crate::simmpi::World), gathered to
+/// rank 0 at world teardown. `ranks[r]` is rank `r`'s trace.
+#[derive(Clone, Debug, Default)]
+pub struct TraceBundle {
+    pub ranks: Vec<RankTrace>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static SINK: Mutex<Vec<TraceBundle>> = Mutex::new(Vec::new());
+
+/// Is tracing on? One relaxed load — the whole cost of a disabled
+/// instrumentation site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on or off, process-wide. Flip it **outside**
+/// [`World::run`](crate::simmpi::World) so every rank of a world agrees
+/// (the end-of-world gather is collective).
+pub fn set_enabled(on: bool) {
+    if on {
+        // Pin the clock base before the first span so timestamps are
+        // well-ordered even across enable/disable cycles.
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process-wide trace clock base.
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Datatype-engine bytes this thread has moved so far (the counter whose
+/// delta a span captures).
+#[inline]
+fn local_bytes() -> u64 {
+    let s = stats::local_snapshot();
+    s.fused_bytes + s.one_copy_bytes + s.packed_bytes + s.unpacked_bytes
+}
+
+struct Ring {
+    spans: Vec<Span>,
+    /// Overwrite cursor once `spans` is at capacity.
+    next: usize,
+    dropped: u64,
+    depth: u16,
+    cat_depth: [u16; NUM_CATEGORIES],
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring {
+            spans: Vec::with_capacity(RING_CAP),
+            next: 0,
+            dropped: 0,
+            depth: 0,
+            cat_depth: [0; NUM_CATEGORIES],
+        }
+    }
+
+    fn push(&mut self, s: Span) {
+        if self.spans.len() < RING_CAP {
+            self.spans.push(s);
+        } else {
+            self.spans[self.next] = s;
+            self.next = (self.next + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+    }
+}
+
+thread_local! {
+    static RING: RefCell<Ring> = RefCell::new(Ring::new());
+}
+
+/// RAII guard of an open span: created by [`span`] (or the
+/// [`trace_span!`](crate::trace_span) macro), records the closed [`Span`]
+/// into the thread-local ring on drop. Inert (a single branch on drop)
+/// when tracing is disabled.
+pub struct SpanGuard {
+    active: bool,
+    cat: Category,
+    label: &'static str,
+    begin_ns: u64,
+    depth: u16,
+    cat_depth: u16,
+    bytes0: u64,
+}
+
+/// Open a span of `cat` at this call site; the span closes (and is
+/// recorded) when the returned guard drops.
+#[inline]
+pub fn span(cat: Category, label: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard {
+            active: false,
+            cat,
+            label,
+            begin_ns: 0,
+            depth: 0,
+            cat_depth: 0,
+            bytes0: 0,
+        };
+    }
+    let (depth, cat_depth) = RING.with(|r| {
+        let mut r = r.borrow_mut();
+        let d = r.depth;
+        let cd = r.cat_depth[cat.index()];
+        r.depth += 1;
+        r.cat_depth[cat.index()] += 1;
+        (d, cd)
+    });
+    let bytes0 = local_bytes();
+    SpanGuard { active: true, cat, label, begin_ns: now_ns(), depth, cat_depth, bytes0 }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end_ns = now_ns();
+        let bytes = local_bytes().wrapping_sub(self.bytes0);
+        RING.with(|r| {
+            let mut r = r.borrow_mut();
+            let ci = self.cat.index();
+            r.depth = r.depth.saturating_sub(1);
+            r.cat_depth[ci] = r.cat_depth[ci].saturating_sub(1);
+            r.push(Span {
+                begin_ns: self.begin_ns,
+                end_ns,
+                cat: self.cat,
+                depth: self.depth,
+                cat_depth: self.cat_depth,
+                label: self.label,
+                bytes,
+            });
+        });
+    }
+}
+
+/// Record an already-measured leaf span (no nesting bookkeeping): used by
+/// sites that only know after the fact whether anything happened, like a
+/// productive `Request::test` poll. No-op when tracing is disabled.
+pub fn record(cat: Category, label: &'static str, begin_ns: u64, end_ns: u64, bytes: u64) {
+    if !enabled() {
+        return;
+    }
+    RING.with(|r| {
+        let mut r = r.borrow_mut();
+        let depth = r.depth;
+        let cat_depth = r.cat_depth[cat.index()];
+        r.push(Span { begin_ns, end_ns, cat, depth, cat_depth, label, bytes });
+    });
+}
+
+/// Open a [`SpanGuard`] bound to a hidden local for the rest of the
+/// enclosing scope: `trace_span!(Fft, "axis0");`.
+#[macro_export]
+macro_rules! trace_span {
+    ($cat:ident, $label:expr) => {
+        let _trace_span_guard =
+            $crate::trace::span($crate::trace::Category::$cat, $label);
+    };
+}
+
+/// Static labels of the per-axis serial-FFT passes (avoids formatting on
+/// the hot path; axes beyond 7 share the last label).
+pub fn axis_label(axis: usize) -> &'static str {
+    const LABELS: [&str; 8] =
+        ["axis0", "axis1", "axis2", "axis3", "axis4", "axis5", "axis6", "axis7"];
+    LABELS[axis.min(LABELS.len() - 1)]
+}
+
+/// Discard this thread's recorded spans (keeps the ring's capacity).
+/// Call after warmup so a measured region starts clean.
+pub fn clear_local() {
+    RING.with(|r| {
+        let mut r = r.borrow_mut();
+        r.spans.clear();
+        r.next = 0;
+        r.dropped = 0;
+        r.depth = 0;
+        r.cat_depth = [0; NUM_CATEGORIES];
+    });
+}
+
+/// Drain this thread's ring: spans in close order plus the overwrite
+/// count. (Ring-wrapped spans come out rotated back into close order.)
+pub fn take_local() -> (Vec<Span>, u64) {
+    RING.with(|r| {
+        let mut r = r.borrow_mut();
+        let mut spans = std::mem::take(&mut r.spans);
+        if r.dropped > 0 {
+            spans.rotate_left(r.next);
+        }
+        let dropped = r.dropped;
+        r.next = 0;
+        r.dropped = 0;
+        r.depth = 0;
+        r.cat_depth = [0; NUM_CATEGORIES];
+        (spans, dropped)
+    })
+}
+
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn encode(spans: &[Span], dropped: u64) -> Vec<u8> {
+    let mut wire = Vec::with_capacity(16 + spans.len() * 48);
+    put_u64(&mut wire, dropped);
+    put_u64(&mut wire, spans.len() as u64);
+    for s in spans {
+        put_u64(&mut wire, s.begin_ns);
+        put_u64(&mut wire, s.end_ns);
+        put_u64(&mut wire, s.bytes);
+        let packed =
+            s.cat.index() as u64 | (s.depth as u64) << 8 | (s.cat_depth as u64) << 24;
+        put_u64(&mut wire, packed);
+        put_u64(&mut wire, s.label.len() as u64);
+        wire.extend_from_slice(s.label.as_bytes());
+    }
+    wire
+}
+
+fn get_u64(wire: &[u8], at: &mut usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&wire[*at..*at + 8]);
+    *at += 8;
+    u64::from_le_bytes(b)
+}
+
+fn decode(wire: &[u8]) -> RankTrace {
+    let mut at = 0usize;
+    let dropped = get_u64(wire, &mut at);
+    let n = get_u64(wire, &mut at) as usize;
+    let mut spans = Vec::with_capacity(n);
+    for _ in 0..n {
+        let begin_ns = get_u64(wire, &mut at);
+        let end_ns = get_u64(wire, &mut at);
+        let bytes = get_u64(wire, &mut at);
+        let packed = get_u64(wire, &mut at);
+        let len = get_u64(wire, &mut at) as usize;
+        let label = String::from_utf8_lossy(&wire[at..at + len]).into_owned();
+        at += len;
+        spans.push(SpanRec {
+            begin_ns,
+            end_ns,
+            cat: Category::from_index((packed & 0xFF) as usize),
+            depth: ((packed >> 8) & 0xFFFF) as u16,
+            cat_depth: ((packed >> 24) & 0xFFFF) as u16,
+            label,
+            bytes,
+        });
+    }
+    RankTrace { spans, dropped }
+}
+
+/// End-of-world collective gather: every rank drains its ring; ranks
+/// `1..n` ship theirs to rank 0, which pushes one [`TraceBundle`] into the
+/// process sink. Called by `World::run` after the rank closure returns;
+/// a no-op (beyond clearing the ring) when tracing is disabled.
+pub(crate) fn rank_flush(comm: &Comm) {
+    if !enabled() {
+        clear_local();
+        return;
+    }
+    let (spans, dropped) = take_local();
+    let me = comm.rank();
+    let n = comm.size();
+    if me == 0 {
+        let mine = RankTrace {
+            spans: spans
+                .iter()
+                .map(|s| SpanRec {
+                    begin_ns: s.begin_ns,
+                    end_ns: s.end_ns,
+                    cat: s.cat,
+                    depth: s.depth,
+                    cat_depth: s.cat_depth,
+                    label: s.label.to_owned(),
+                    bytes: s.bytes,
+                })
+                .collect(),
+            dropped,
+        };
+        let mut ranks = Vec::with_capacity(n);
+        ranks.push(mine);
+        for p in 1..n {
+            ranks.push(decode(&comm.recv_bytes(p, TAG_TRACE)));
+        }
+        SINK.lock().unwrap().push(TraceBundle { ranks });
+    } else {
+        comm.send_bytes(0, TAG_TRACE, encode(&spans, dropped));
+    }
+}
+
+/// Drain every gathered bundle (one per traced `World::run`, in
+/// completion order).
+pub fn take_bundles() -> Vec<TraceBundle> {
+    std::mem::take(&mut *SINK.lock().unwrap())
+}
+
+/// Per-category imbalance across the ranks of one bundle. Seconds are
+/// sums of **outermost** spans of the category (`cat_depth == 0`), so
+/// nested same-category spans never double count.
+#[derive(Clone, Debug)]
+pub struct StageImbalance {
+    pub cat: Category,
+    /// Per-rank total seconds, indexed by rank.
+    pub per_rank_s: Vec<f64>,
+    pub min_s: f64,
+    pub mean_s: f64,
+    pub max_s: f64,
+    /// Skew ratio `max / mean` (1.0 when the stage never ran).
+    pub skew: f64,
+}
+
+/// The rank that bounds the run, and what it spent its time on.
+#[derive(Clone, Debug)]
+pub struct CriticalPath {
+    /// Rank with the largest wall coverage (first span open to last span
+    /// close).
+    pub rank: usize,
+    /// That rank's wall coverage in seconds.
+    pub wall_s: f64,
+    /// Its most expensive category.
+    pub dominant: Category,
+    /// Seconds in the dominant category (outermost spans).
+    pub dominant_s: f64,
+}
+
+/// Cross-rank skew report of one [`TraceBundle`]: per-stage min/mean/max
+/// and the critical-path rank.
+#[derive(Clone, Debug)]
+pub struct ImbalanceReport {
+    /// One entry per category that recorded at least one outermost span.
+    pub stages: Vec<StageImbalance>,
+    /// Absent when the bundle recorded no spans at all.
+    pub critical: Option<CriticalPath>,
+}
+
+/// Compute the per-stage skew and critical path of one bundle.
+pub fn imbalance(bundle: &TraceBundle) -> ImbalanceReport {
+    let n = bundle.ranks.len().max(1);
+    let mut totals = vec![[0.0f64; NUM_CATEGORIES]; n];
+    for (r, rank) in bundle.ranks.iter().enumerate() {
+        for s in &rank.spans {
+            if s.cat_depth == 0 {
+                totals[r][s.cat.index()] +=
+                    (s.end_ns.saturating_sub(s.begin_ns)) as f64 * 1e-9;
+            }
+        }
+    }
+    let mut stages = Vec::new();
+    for cat in Category::ALL {
+        let per_rank_s: Vec<f64> = totals.iter().map(|t| t[cat.index()]).collect();
+        let max_s = per_rank_s.iter().cloned().fold(0.0f64, f64::max);
+        if max_s <= 0.0 {
+            continue;
+        }
+        let min_s = per_rank_s.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mean_s = per_rank_s.iter().sum::<f64>() / n as f64;
+        let skew = if mean_s > 0.0 { max_s / mean_s } else { 1.0 };
+        stages.push(StageImbalance { cat, per_rank_s, min_s, mean_s, max_s, skew });
+    }
+    let mut critical = None;
+    for (r, rank) in bundle.ranks.iter().enumerate() {
+        if rank.spans.is_empty() {
+            continue;
+        }
+        let begin = rank.spans.iter().map(|s| s.begin_ns).min().unwrap_or(0);
+        let end = rank.spans.iter().map(|s| s.end_ns).max().unwrap_or(0);
+        let wall_s = end.saturating_sub(begin) as f64 * 1e-9;
+        let better = match &critical {
+            None => true,
+            Some(c) => wall_s > c.wall_s,
+        };
+        if better {
+            let (di, ds) = totals[r]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, s)| (i, *s))
+                .unwrap_or((0, 0.0));
+            critical = Some(CriticalPath {
+                rank: r,
+                wall_s,
+                dominant: Category::from_index(di),
+                dominant_s: ds,
+            });
+        }
+    }
+    ImbalanceReport { stages, critical }
+}
+
+impl ImbalanceReport {
+    /// Human-readable table (driver stderr/stdout surface).
+    pub fn render_text(&self) -> String {
+        let mut out = String::from("stage      min_s      mean_s     max_s      skew\n");
+        for s in &self.stages {
+            out.push_str(&format!(
+                "{:<9}  {:<9.6}  {:<9.6}  {:<9.6}  {:.3}\n",
+                s.cat.name(),
+                s.min_s,
+                s.mean_s,
+                s.max_s,
+                s.skew
+            ));
+        }
+        if let Some(c) = &self.critical {
+            out.push_str(&format!(
+                "critical path: rank {} ({:.6} s wall), dominated by {} ({:.6} s)\n",
+                c.rank,
+                c.wall_s,
+                c.dominant.name(),
+                c.dominant_s
+            ));
+        }
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write every gathered bundle as Chrome-trace/Perfetto JSON: complete
+/// (`"X"`) events with microsecond timestamps, one pid per rank (later
+/// bundles of the same process offset by `1000 * bundle_index`), one tid
+/// per [`Category`], plus process/thread-name metadata and a top-level
+/// `"imbalance"` object (ignored by viewers) computed from the **last**
+/// bundle — the measured run, when a tuning world precedes it.
+pub fn write_chrome_trace(path: &Path, bundles: &[TraceBundle]) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    write!(w, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+    let mut first = true;
+    let mut sep = |w: &mut std::io::BufWriter<std::fs::File>| -> std::io::Result<()> {
+        if first {
+            first = false;
+            Ok(())
+        } else {
+            write!(w, ",")
+        }
+    };
+    for (bi, bundle) in bundles.iter().enumerate() {
+        for (rank, trace) in bundle.ranks.iter().enumerate() {
+            let pid = bi * 1000 + rank;
+            let pname = if bundles.len() > 1 {
+                format!("run{bi}/rank{rank}")
+            } else {
+                format!("rank {rank}")
+            };
+            sep(&mut w)?;
+            write!(
+                w,
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                json_escape(&pname)
+            )?;
+            for cat in Category::ALL {
+                sep(&mut w)?;
+                write!(
+                    w,
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    cat.index(),
+                    cat.name()
+                )?;
+            }
+            for s in &trace.spans {
+                sep(&mut w)?;
+                let ts = s.begin_ns as f64 / 1000.0;
+                let dur = s.end_ns.saturating_sub(s.begin_ns) as f64 / 1000.0;
+                write!(
+                    w,
+                    "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{ts:.3},\
+                     \"dur\":{dur:.3},\"pid\":{pid},\"tid\":{},\
+                     \"args\":{{\"bytes\":{},\"depth\":{}}}}}",
+                    json_escape(&s.label),
+                    s.cat.name(),
+                    s.cat.index(),
+                    s.bytes,
+                    s.depth
+                )?;
+            }
+        }
+    }
+    write!(w, "]")?;
+    if let Some(last) = bundles.last() {
+        let rep = imbalance(last);
+        write!(w, ",\"imbalance\":{{\"runs\":{},\"stages\":[", bundles.len())?;
+        for (i, s) in rep.stages.iter().enumerate() {
+            if i > 0 {
+                write!(w, ",")?;
+            }
+            write!(
+                w,
+                "{{\"cat\":\"{}\",\"min_s\":{:.9},\"mean_s\":{:.9},\"max_s\":{:.9},\
+                 \"skew\":{:.6},\"per_rank_s\":[",
+                s.cat.name(),
+                s.min_s,
+                s.mean_s,
+                s.max_s,
+                s.skew
+            )?;
+            for (j, v) in s.per_rank_s.iter().enumerate() {
+                if j > 0 {
+                    write!(w, ",")?;
+                }
+                write!(w, "{v:.9}")?;
+            }
+            write!(w, "]}}")?;
+        }
+        write!(w, "]")?;
+        if let Some(c) = &rep.critical {
+            write!(
+                w,
+                ",\"critical\":{{\"rank\":{},\"wall_s\":{:.9},\"dominant\":\"{}\",\
+                 \"dominant_s\":{:.9}}}",
+                c.rank,
+                c.wall_s,
+                c.dominant.name(),
+                c.dominant_s
+            )?;
+        }
+        write!(w, "}}")?;
+    }
+    writeln!(w, "}}")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_names_and_indices_are_stable() {
+        for (i, cat) in Category::ALL.iter().enumerate() {
+            assert_eq!(cat.index(), i);
+            assert_eq!(Category::from_index(i), *cat);
+        }
+        assert_eq!(Category::Fft.name(), "fft");
+        assert_eq!(Category::Chunk.name(), "chunk");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let spans = vec![
+            Span {
+                begin_ns: 10,
+                end_ns: 42,
+                cat: Category::Exchange,
+                depth: 1,
+                cat_depth: 0,
+                label: "post",
+                bytes: 512,
+            },
+            Span {
+                begin_ns: 50,
+                end_ns: 60,
+                cat: Category::Wait,
+                depth: 2,
+                cat_depth: 1,
+                label: "recv",
+                bytes: 0,
+            },
+        ];
+        let got = decode(&encode(&spans, 7));
+        assert_eq!(got.dropped, 7);
+        assert_eq!(got.spans.len(), 2);
+        assert_eq!(got.spans[0].label, "post");
+        assert_eq!(got.spans[0].cat, Category::Exchange);
+        assert_eq!(got.spans[0].bytes, 512);
+        assert_eq!(got.spans[1].depth, 2);
+        assert_eq!(got.spans[1].cat_depth, 1);
+        assert_eq!(got.spans[1].end_ns, 60);
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        assert!(!enabled());
+        {
+            let _g = span(Category::Fft, "axis0");
+        }
+        let (spans, dropped) = take_local();
+        assert!(spans.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn imbalance_sums_outermost_spans_only() {
+        let mk = |begin: u64, end: u64, cat: Category, cat_depth: u16| SpanRec {
+            begin_ns: begin,
+            end_ns: end,
+            cat,
+            depth: cat_depth,
+            cat_depth,
+            label: "x".to_owned(),
+            bytes: 0,
+        };
+        let bundle = TraceBundle {
+            ranks: vec![
+                RankTrace {
+                    spans: vec![
+                        mk(0, 3_000_000_000, Category::Exchange, 0),
+                        // Nested same-category span: must not double count.
+                        mk(0, 1_000_000_000, Category::Exchange, 1),
+                    ],
+                    dropped: 0,
+                },
+                RankTrace {
+                    spans: vec![mk(0, 1_000_000_000, Category::Exchange, 0)],
+                    dropped: 0,
+                },
+            ],
+        };
+        let rep = imbalance(&bundle);
+        assert_eq!(rep.stages.len(), 1);
+        let s = &rep.stages[0];
+        assert_eq!(s.cat, Category::Exchange);
+        assert!((s.max_s - 3.0).abs() < 1e-9);
+        assert!((s.min_s - 1.0).abs() < 1e-9);
+        assert!((s.mean_s - 2.0).abs() < 1e-9);
+        assert!((s.skew - 1.5).abs() < 1e-9);
+        let c = rep.critical.expect("critical path");
+        assert_eq!(c.rank, 0);
+        assert_eq!(c.dominant, Category::Exchange);
+    }
+}

@@ -1,0 +1,355 @@
+//! Observability acceptance: the per-rank event tracer end to end.
+//!
+//! Covers the tentpole invariants: span nesting/ordering, counter-delta
+//! byte attribution, deterministic gather across world sizes, zero
+//! steady-state allocations with tracing **on**, reconciliation of span
+//! sums against [`StageTimers`], and the Chrome-trace JSON the driver
+//! writes for `--trace`.
+//!
+//! Tracing is a process-global switch and the gather sink is shared, so
+//! every test here serializes on one mutex (the cargo harness runs tests
+//! concurrently; an unguarded world would leak its bundle into another
+//! test's drain). Uses the same thread-local counting allocator as
+//! `alloc_steady_state.rs` for the allocation guarantee.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Mutex;
+
+use a2wfft::coordinator::benchkit::report_json;
+use a2wfft::coordinator::trend::JsonValue;
+use a2wfft::coordinator::{run_config, RunConfig};
+use a2wfft::fft::{Complex, NativeFft};
+use a2wfft::pfft::{ExecMode, Kind, PfftPlan, RedistMethod};
+use a2wfft::redistribute::PipelinedRedistPlan;
+use a2wfft::simmpi::datatype::{stats, Datatype, TransferPlan};
+use a2wfft::simmpi::{Transport, World};
+use a2wfft::trace::{self, Category};
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: defers to the system allocator; the counter is a plain Cell of a
+// primitive with no destructor, safe to touch from the allocator hook.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Serializes every test that flips the process-global tracing switch.
+static GUARD: Mutex<()> = Mutex::new(());
+
+/// Enter the guarded tracing region with clean global state.
+fn guarded() -> std::sync::MutexGuard<'static, ()> {
+    let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    trace::set_enabled(false);
+    let _ = trace::take_bundles();
+    trace::clear_local();
+    g
+}
+
+#[test]
+fn span_nesting_and_ordering_invariants() {
+    let _g = guarded();
+    trace::set_enabled(true);
+    {
+        let _a = trace::span(Category::Fft, "outer");
+        {
+            let _b = trace::span(Category::Fft, "inner");
+            let _c = trace::span(Category::Pack, "other");
+        }
+    }
+    trace::set_enabled(false);
+    let (spans, dropped) = trace::take_local();
+    assert_eq!(dropped, 0);
+    // Spans record in close order: innermost guards drop first.
+    let labels: Vec<&str> = spans.iter().map(|s| s.label).collect();
+    assert_eq!(labels, vec!["other", "inner", "outer"]);
+    let by_label = |l: &str| spans.iter().find(|s| s.label == l).unwrap();
+    let (outer, inner, other) = (by_label("outer"), by_label("inner"), by_label("other"));
+    // Global depth counts every open span; category depth only same-cat.
+    assert_eq!((outer.depth, outer.cat_depth), (0, 0));
+    assert_eq!((inner.depth, inner.cat_depth), (1, 1));
+    assert_eq!((other.depth, other.cat_depth), (2, 0));
+    assert_eq!(other.cat, Category::Pack);
+    // Timestamps nest: children open after and close before the parent.
+    assert!(inner.begin_ns >= outer.begin_ns);
+    assert!(inner.end_ns <= outer.end_ns);
+    assert!(other.begin_ns >= inner.begin_ns);
+    assert!(other.end_ns <= inner.end_ns);
+    assert!(outer.end_ns >= outer.begin_ns);
+}
+
+#[test]
+fn span_bytes_match_the_scoped_counter_delta() {
+    let _g = guarded();
+    let send = Datatype::subarray(&[8, 10, 6], &[4, 5, 6], &[2, 3, 0], 8).unwrap();
+    let recv = Datatype::subarray(&[5, 9, 8], &[4, 5, 6], &[1, 2, 1], 8).unwrap();
+    let plan = TransferPlan::compile(&send, &recv).unwrap();
+    let src = vec![0xABu8; send.extent()];
+    let mut dst = vec![0u8; recv.extent()];
+    trace::set_enabled(true);
+    let ((), d) = stats::scoped(|| {
+        let _s = trace::span(Category::Exchange, "scripted");
+        plan.execute(&src, &mut dst);
+    });
+    trace::set_enabled(false);
+    let moved = d.fused_bytes + d.one_copy_bytes + d.packed_bytes + d.unpacked_bytes;
+    assert!(moved > 0, "scripted workload moved no engine bytes");
+    let (spans, dropped) = trace::take_local();
+    assert_eq!(dropped, 0);
+    // The outer span's byte delta is exactly what the scoped counter saw,
+    // and the engine's own nested "fused" span attributes the same bytes.
+    let outer = spans.iter().find(|s| s.label == "scripted").unwrap();
+    assert_eq!(outer.bytes, moved);
+    let fused = spans.iter().find(|s| s.label == "fused").unwrap();
+    assert_eq!(fused.cat, Category::Pack);
+    assert_eq!(fused.bytes, moved);
+    assert!(fused.depth > outer.depth);
+}
+
+#[test]
+fn gather_is_deterministic_across_world_sizes() {
+    let _g = guarded();
+    for n in [1usize, 2, 4] {
+        trace::set_enabled(true);
+        World::run(n, |comm| {
+            // Rank r records r+1 spans: the gathered bundle must keep them
+            // in rank order with exact counts, every size, every repeat.
+            for _ in 0..=comm.rank() {
+                let _s = trace::span(Category::Fft, "probe");
+            }
+        });
+        trace::set_enabled(false);
+        let bundles = trace::take_bundles();
+        assert_eq!(bundles.len(), 1, "world of {n} must gather exactly one bundle");
+        assert_eq!(bundles[0].ranks.len(), n);
+        for (r, rank) in bundles[0].ranks.iter().enumerate() {
+            assert_eq!(rank.dropped, 0);
+            assert_eq!(rank.spans.len(), r + 1, "rank {r} of {n} span count");
+            for s in &rank.spans {
+                assert_eq!(s.cat, Category::Fft);
+                assert_eq!(s.label, "probe");
+                assert!(s.end_ns >= s.begin_ns);
+            }
+        }
+    }
+}
+
+#[test]
+fn tracing_on_steady_state_is_allocation_free() {
+    let _g = guarded();
+    trace::set_enabled(true);
+    // Same workload as the alloc_steady_state pipelined test, but with the
+    // tracer recording every pack/chunk span: after warmup primes the
+    // arenas *and* the preallocated span ring, executions must still never
+    // touch the heap.
+    World::run(1, |comm| {
+        let sizes = [4usize, 6, 8];
+        let mut plan = PipelinedRedistPlan::new(&comm, 8, &sizes, 0, &sizes, 1, 4, 2);
+        assert!(plan.is_pipelined());
+        let a: Vec<f64> = (0..plan.elems_a()).map(|x| x as f64 * 1.5).collect();
+        let mut b = vec![0.0f64; plan.elems_b()];
+        let mut back = vec![0.0f64; plan.elems_a()];
+        for _ in 0..2 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        assert_eq!(a, back, "roundtrip broken");
+        let n0 = allocs_on_this_thread();
+        for _ in 0..5 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        let delta = allocs_on_this_thread() - n0;
+        assert_eq!(delta, 0, "tracing-on executions allocated {delta} times in 5 trips");
+    });
+    trace::set_enabled(false);
+    let bundles = trace::take_bundles();
+    assert_eq!(bundles.len(), 1);
+    assert!(!bundles[0].ranks[0].spans.is_empty(), "no spans recorded while tracing");
+}
+
+#[test]
+fn span_sums_reconcile_with_stage_timers() {
+    let _g = guarded();
+    let global = [16usize, 12, 10];
+    let deltas = World::run(4, |comm| {
+        let mut plan = PfftPlan::<f64>::with_transport(
+            &comm,
+            &global,
+            &[2, 2],
+            Kind::C2c,
+            RedistMethod::Alltoallw,
+            ExecMode::Blocking,
+            Transport::Mailbox,
+        );
+        let mut engine = NativeFft::<f64>::new();
+        let input: Vec<Complex<f64>> = (0..plan.input_len())
+            .map(|k| Complex::from_f64((k as f64 * 0.61).sin(), (k as f64 * 0.23).cos()))
+            .collect();
+        let mut spec = vec![Complex::<f64>::ZERO; plan.output_len()];
+        let mut back = vec![Complex::<f64>::ZERO; plan.input_len()];
+        // Warm up untraced, then measure with a clean ring and timers so
+        // the two clocks cover exactly the same pairs.
+        plan.forward(&mut engine, &input, &mut spec);
+        plan.backward(&mut engine, &spec, &mut back);
+        trace::set_enabled(true);
+        trace::clear_local();
+        plan.timers.reset();
+        comm.barrier();
+        for _ in 0..2 {
+            plan.forward(&mut engine, &input, &mut spec);
+            plan.backward(&mut engine, &spec, &mut back);
+        }
+        let timers = plan.timers;
+        let (spans, dropped) = trace::take_local();
+        assert_eq!(dropped, 0);
+        let sum = |cat: Category| -> f64 {
+            spans
+                .iter()
+                .filter(|s| s.cat == cat && s.cat_depth == 0)
+                .map(|s| s.end_ns.saturating_sub(s.begin_ns) as f64 * 1e-9)
+                .sum()
+        };
+        (timers, sum(Category::Fft), sum(Category::Exchange))
+    });
+    trace::set_enabled(false);
+    let _ = trace::take_bundles();
+    // Blocking mode: summed outermost Fft spans cover the fft timer and
+    // summed Exchange spans cover the redist timer, within 5% plus a small
+    // absolute slop for clock-read placement at this tiny shape.
+    for (rank, (timers, fft_s, exch_s)) in deltas.into_iter().enumerate() {
+        assert!(timers.fft > 0.0 && timers.redist > 0.0, "rank {rank}: timers empty");
+        assert_eq!(timers.overlap_fft, 0.0);
+        assert_eq!(timers.overlap_comm, 0.0);
+        let close = |spans: f64, timer: f64| (spans - timer).abs() <= 0.05 * timer + 2e-3;
+        assert!(
+            close(fft_s, timers.fft),
+            "rank {rank}: fft spans {fft_s:.6}s vs timer {:.6}s",
+            timers.fft
+        );
+        assert!(
+            close(exch_s, timers.redist),
+            "rank {rank}: exchange spans {exch_s:.6}s vs timer {:.6}s",
+            timers.redist
+        );
+    }
+}
+
+/// All `"X"` events of a parsed Chrome trace as (pid, cat, dur_us) rows.
+fn x_events(doc: &JsonValue) -> Vec<(u64, String, f64)> {
+    doc.get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"))
+        .map(|e| {
+            (
+                e.get("pid").and_then(|v| v.as_num()).unwrap() as u64,
+                e.get("cat").and_then(|v| v.as_str()).unwrap().to_string(),
+                e.get("dur").and_then(|v| v.as_num()).unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn driver_trace_writes_valid_chrome_json_with_all_core_categories() {
+    let _g = guarded();
+    let path = std::env::temp_dir().join(format!("a2wfft_trace_run_{}.json", std::process::id()));
+    let cfg = RunConfig {
+        global: vec![16, 12, 10],
+        ranks: 4,
+        inner: 1,
+        outer: 1,
+        trace: Some(path.clone()),
+        ..Default::default()
+    };
+    let rep = run_config(&cfg, 2);
+    assert!(rep.max_err < 1e-9);
+    // The driver disabled tracing and drained the sink itself.
+    assert!(!trace::enabled());
+    assert!(trace::take_bundles().is_empty());
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc = JsonValue::parse(&text).expect("trace file is not valid JSON");
+    let events = x_events(&doc);
+    // Every rank shows every core category of the blocking mailbox run.
+    for pid in 0..4u64 {
+        for cat in ["fft", "pack", "exchange", "wait"] {
+            assert!(
+                events.iter().any(|(p, c, _)| *p == pid && c == cat),
+                "rank {pid} has no {cat} span among {} events",
+                events.len()
+            );
+        }
+    }
+    // The embedded imbalance report covers the same stages, per rank.
+    let imb = doc.get("imbalance").expect("imbalance object missing");
+    let stages = imb.get("stages").and_then(|v| v.as_arr()).unwrap();
+    assert!(stages.len() >= 4, "only {} imbalance stages", stages.len());
+    for s in stages {
+        assert_eq!(s.get("per_rank_s").and_then(|v| v.as_arr()).unwrap().len(), 4);
+        assert!(s.get("skew").and_then(|v| v.as_num()).unwrap() >= 1.0 - 1e-9);
+    }
+    imb.get("critical").expect("critical path missing");
+    // The run report surfaces the metric-level skew in JSON rows too.
+    let row = JsonValue::parse(&report_json("t", &cfg.global, &[2, 2], 4, &rep)).unwrap();
+    assert!(row.get("imb_total").and_then(|v| v.as_num()).unwrap() >= 1.0);
+    assert!(row.get("imb_fft").and_then(|v| v.as_num()).is_some());
+}
+
+#[test]
+fn pipelined_window_trace_records_window_and_chunk_spans() {
+    let _g = guarded();
+    let path = std::env::temp_dir().join(format!("a2wfft_trace_pipe_{}.json", std::process::id()));
+    let cfg = RunConfig {
+        global: vec![16, 12, 10],
+        ranks: 4,
+        exec: ExecMode::Pipelined { depth: 3 }.into(),
+        transport: Transport::Window.into(),
+        inner: 1,
+        outer: 1,
+        trace: Some(path.clone()),
+        ..Default::default()
+    };
+    let rep = run_config(&cfg, 1);
+    assert!(rep.max_err < 1e-9);
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc = JsonValue::parse(&text).expect("trace file is not valid JSON");
+    let events = x_events(&doc);
+    for cat in ["window", "chunk", "fft"] {
+        assert!(
+            events.iter().any(|(_, c, _)| c == cat),
+            "pipelined window run recorded no {cat} spans"
+        );
+    }
+}
