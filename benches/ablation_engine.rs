@@ -1,20 +1,62 @@
-//! Ablation: serial-FFT engine choice on the distributed hot path —
-//! native rust planner (f64) vs the AOT JAX+Pallas artifacts through PJRT
-//! (f32 planes, per-call literal marshalling). Documents the cost of the
-//! TPU-shaped path on CPU PJRT.
+//! Ablation: serial-FFT engine choice on the distributed hot path.
+//!
+//! Two axes:
+//!
+//! * engine *kind* — native rust planner (f64) vs the AOT JAX+Pallas
+//!   artifacts through PJRT (f32 planes, per-call literal marshalling),
+//!   documenting the cost of the TPU-shaped path on CPU PJRT;
+//! * native engine *shape* — scalar (l1t1) vs lane-batched SoA (l8t1) vs
+//!   worker pool (l1t4) vs combined (l8t4), end to end through the 3-D
+//!   pencil pipeline, so the wall-clock effect of the serial-engine axis
+//!   is measured where it matters (FFT stages interleaved with
+//!   redistribution), not just in the microbenchmark.
+//!
+//! Engine-shape rows go to `BENCH_ablation_engine.json` with lanes and
+//! threads labels, so the trend tooling tracks each shape as its own
+//! group. Pass `--tiny` to shrink the geometry for CI smoke runs.
 
 use a2wfft::coordinator::benchkit::*;
-use a2wfft::coordinator::EngineKind;
-use a2wfft::pfft::{Kind, RedistMethod};
+use a2wfft::coordinator::{Dtype, EngineKind};
+use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
 
 fn main() {
-    banner("ablation: serial engine (native vs xla-aot), 32x16x64 c2c, 4 ranks");
+    let args = a2wfft::cli::Args::parse(std::env::args().skip(1), &["tiny"]);
+    let tiny = args.has_flag("tiny");
+    let global: Vec<usize> = if tiny { vec![16, 12, 10] } else { vec![32, 16, 64] };
+    let ranks = 4usize;
+    banner(&format!("ablation: serial engine kind (native vs xla-aot), {global:?} c2c, 4 ranks"));
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     real_header();
-    real_row("native", &[32, 16, 64], 4, 2, Kind::C2c, RedistMethod::Alltoallw, EngineKind::Native);
+    real_row("native", &global, ranks, 2, Kind::C2c, RedistMethod::Alltoallw, EngineKind::Native);
     if artifacts.join("manifest.tsv").exists() {
-        real_row("xla-aot", &[32, 16, 64], 4, 2, Kind::C2c, RedistMethod::Alltoallw, EngineKind::Xla);
+        real_row("xla-aot", &global, ranks, 2, Kind::C2c, RedistMethod::Alltoallw, EngineKind::Xla);
     } else {
         println!("xla-aot\t-\t-\t(skipped: run `make artifacts`)");
+    }
+    banner(&format!(
+        "ablation: native engine shape (lanes x threads), {global:?} c2c, 4 ranks"
+    ));
+    real_header();
+    let mut rows = Vec::new();
+    for (lanes, threads) in [(1usize, 1usize), (8, 1), (1, 4), (8, 4)] {
+        let label = format!("native-l{lanes}t{threads}");
+        let rep = real_row_engine(
+            &label,
+            &global,
+            ranks,
+            2,
+            Kind::C2c,
+            ExecMode::Blocking,
+            Dtype::F64,
+            lanes,
+            threads,
+        );
+        // The full run-report row (report_json carries lanes/threads as
+        // integer fields, which is what the trend grouping keys on).
+        rows.push(report_json(&label, &global, &[2, 2], ranks, &rep));
+    }
+    match write_bench_json("ablation_engine", &rows) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_ablation_engine.json: {e}"),
     }
 }

@@ -1,27 +1,152 @@
 //! Microbenchmark: the native serial FFT substrate across plan classes
-//! (radix-2 iterative, mixed radix, Bluestein) — MFLOP/s per line length,
-//! with the O(N^2) naive DFT as the baseline it must dominate.
+//! (radix-2 iterative, mixed radix, Bluestein).
+//!
+//! Two sections:
+//!
+//! * `line` — single-line throughput per plan class (MFLOP/s under the
+//!   5 n log2 n convention), the historical baseline;
+//! * `engine` — batched axis transforms through [`NativeFft`] across
+//!   engine shapes: scalar (l1t1) vs lane-batched SoA (l8t1) vs pooled
+//!   (l1t4) vs combined (l8t4), at paper-like line lengths. The
+//!   lane-batched shape is **gated**: it must not run slower than scalar
+//!   (small tolerance for timer noise), and every row records its
+//!   speedup so `BENCH_micro_fft.json` carries the evidence.
+//!
+//! Pass `--tiny` (the CI smoke mode) to shrink lengths/batches and skip
+//! the speedup gate (shared CI runners are too noisy to fail on). Rows
+//! are written to `BENCH_micro_fft.json` *before* any gate failure exits,
+//! so the artifact always survives for the trend job.
 
-use a2wfft::coordinator::benchkit::time_best;
-use a2wfft::fft::{Complex64, Direction, FftPlan};
+use a2wfft::coordinator::benchkit::{time_best, write_bench_json, JsonObj};
+use a2wfft::fft::{Complex64, Direction, EngineCfg, FftPlan, NativeFft, SerialFft};
 
-fn main() {
+fn class_of(n: usize) -> &'static str {
+    if n.is_power_of_two() {
+        "pow2"
+    } else if a2wfft::fft::factorize(n).iter().all(|&f| f <= 61) {
+        "mixed"
+    } else {
+        "bluestein"
+    }
+}
+
+/// 5 n log2 n: the conventional FFT flop count used for MFLOP/s rates.
+fn flops(n: usize) -> f64 {
+    5.0 * n as f64 * (n as f64).log2()
+}
+
+fn line_section(tiny: bool, rows: &mut Vec<String>) {
     println!("=== micro: serial FFT throughput (5 n log2 n flop convention) ===");
     println!("n\tclass\tus_per_line\tMFLOPs");
-    for &n in &[64usize, 256, 1024, 4096, 700, 360, 1000, 67, 251, 521] {
+    let lengths: &[usize] =
+        if tiny { &[64, 360, 67] } else { &[64, 256, 1024, 4096, 700, 360, 1000, 67, 251, 521] };
+    for &n in lengths {
         let plan = FftPlan::<f64>::new(n);
-        let class = if n.is_power_of_two() {
-            "pow2"
-        } else if a2wfft::fft::factorize(n).iter().all(|&f| f <= 61) {
-            "mixed"
-        } else {
-            "bluestein"
-        };
+        let class = class_of(n);
         let mut data: Vec<Complex64> =
             (0..n).map(|k| Complex64::new((k as f64 * 0.7).sin(), (k as f64 * 0.3).cos())).collect();
-        let iters = (200_000 / n).max(8);
+        let iters = if tiny { 8 } else { (200_000 / n).max(8) };
         let t = time_best(iters, || plan.process(&mut data, Direction::Forward));
-        let flops = 5.0 * n as f64 * (n as f64).log2();
-        println!("{n}\t{class}\t{:.2}\t{:.1}", t * 1e6, flops / t / 1e6);
+        let mflops = flops(n) / t / 1e6;
+        println!("{n}\t{class}\t{:.2}\t{mflops:.1}", t * 1e6);
+        rows.push(
+            JsonObj::new()
+                .str("label", &format!("line/n{n}"))
+                .str("section", "line")
+                .str("class", class)
+                .int("n", n as u64)
+                .num("total_s", t)
+                .num("mflops", mflops)
+                .render(),
+        );
+    }
+}
+
+/// Batched axis transforms through the full engine: one row per
+/// (length, engine shape), gating lane-batched against scalar. Returns
+/// the gate failures so `main` reports them after the JSON is written.
+fn engine_section(tiny: bool, rows: &mut Vec<String>) -> Vec<String> {
+    let mut failures = Vec::new();
+    println!("\n=== micro: batched engine shapes (scalar vs SoA lanes vs worker pool) ===");
+    println!("n\tclass\tengine\tus_per_line\tMFLOPs\tspeedup_vs_scalar");
+    let lengths: &[usize] = if tiny { &[64, 360] } else { &[256, 1024, 360, 1000, 67, 521] };
+    let lines = if tiny { 16 } else { 64 };
+    let cfgs = [
+        EngineCfg::new(1, 1),
+        EngineCfg::new(8, 1),
+        EngineCfg::new(1, 4),
+        EngineCfg::new(8, 4),
+    ];
+    for &n in lengths {
+        let class = class_of(n);
+        let shape = [lines, n];
+        let x: Vec<Complex64> = (0..lines * n)
+            .map(|k| Complex64::new((k as f64 * 0.7).sin(), (k as f64 * 0.3).cos()))
+            .collect();
+        let iters = if tiny { 2 } else { (400_000 / (lines * n)).max(4) };
+        let mut t_scalar = f64::NAN;
+        for cfg in cfgs {
+            let mut eng = NativeFft::<f64>::with_cfg(cfg);
+            let mut data = x.clone();
+            // Warm the planner cache, per-worker panels and pool outside
+            // the timed region.
+            eng.c2c(&mut data, &shape, 1, Direction::Forward);
+            let t = time_best(iters, || eng.c2c(&mut data, &shape, 1, Direction::Forward));
+            let per_line = t / lines as f64;
+            if cfg == EngineCfg::new(1, 1) {
+                t_scalar = per_line;
+            }
+            let speedup = t_scalar / per_line;
+            let mflops = flops(n) / per_line / 1e6;
+            println!(
+                "{n}\t{class}\t{}\t{:.2}\t{mflops:.1}\t{speedup:.2}x",
+                cfg.label(),
+                per_line * 1e6
+            );
+            rows.push(
+                JsonObj::new()
+                    .str("label", &format!("engine/n{n}"))
+                    .str("section", "engine")
+                    .str("class", class)
+                    .int("n", n as u64)
+                    .int("lines", lines as u64)
+                    .int("lanes", cfg.lanes as u64)
+                    .int("threads", cfg.threads as u64)
+                    .num("total_s", per_line)
+                    .num("mflops", mflops)
+                    .num("speedup_vs_scalar", speedup)
+                    .render(),
+            );
+            // The acceptance gate: lane batching must never lose to the
+            // scalar path (10% slack for timer noise). Skipped in the
+            // noisy tiny/CI mode; reported only after the JSON artifact
+            // is safely on disk.
+            if !tiny && cfg == EngineCfg::new(8, 1) && per_line > t_scalar * 1.10 {
+                failures.push(format!(
+                    "n={n} ({class}): lane-batched {:.2}us/line is slower than scalar {:.2}us/line",
+                    per_line * 1e6,
+                    t_scalar * 1e6
+                ));
+            }
+        }
+    }
+    failures
+}
+
+fn main() {
+    let args = a2wfft::cli::Args::parse(std::env::args().skip(1), &["tiny"]);
+    let tiny = args.has_flag("tiny");
+    let mut rows = Vec::new();
+    line_section(tiny, &mut rows);
+    let failures = engine_section(tiny, &mut rows);
+    match write_bench_json("micro_fft", &rows) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_micro_fft.json: {e}"),
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("ACCEPTANCE FAILURE: {f}");
+        }
+        std::process::exit(1);
     }
 }

@@ -25,6 +25,10 @@
 //!   cross-rank compiled [`crate::simmpi::TransferPlan`]s copy sender's
 //!   array straight into the receiver's, with zero intermediate buffers
 //!   and no mailbox traffic on the payload path.
+//! * `--lanes W` / `--threads N` — the native serial engine's shape
+//!   ([`crate::fft::EngineCfg`]): SoA lane width of the batched butterfly
+//!   kernels and per-rank worker-pool width. Both bitwise-neutral, both
+//!   accept `auto` (resolved by the tuner).
 //! * `--json` — print the run result as one machine-readable JSON object
 //!   (same row shape as the `BENCH_*.json` files the benches emit; see
 //!   [`crate::coordinator::benchkit::report_json`]).

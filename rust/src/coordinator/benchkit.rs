@@ -108,6 +108,48 @@ pub fn real_row_full(
     rep
 }
 
+/// [`real_row_full`] with an explicit serial-engine shape (native engine,
+/// lane-batched kernels + worker pool) — the engine-ablation rows.
+#[allow(clippy::too_many_arguments)]
+pub fn real_row_engine(
+    label: &str,
+    global: &[usize],
+    ranks: usize,
+    grid_ndims: usize,
+    kind: Kind,
+    exec: ExecMode,
+    dtype: Dtype,
+    lanes: usize,
+    threads: usize,
+) -> RunReport {
+    let cfg = RunConfig {
+        global: global.to_vec(),
+        grid: Vec::new(),
+        ranks,
+        kind,
+        method: RedistMethod::Alltoallw.into(),
+        exec: exec.into(),
+        engine: EngineKind::Native,
+        lanes: lanes.into(),
+        threads: threads.into(),
+        dtype,
+        inner: 2,
+        outer: 3,
+        ..Default::default()
+    };
+    let rep = run_config(&cfg, grid_ndims);
+    println!(
+        "{label}\t{ranks}\t{global:?}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1e}",
+        rep.total,
+        rep.fft + rep.overlap_fft,
+        rep.redist + rep.overlap_comm,
+        rep.bytes,
+        rep.max_err
+    );
+    assert!(rep.max_err < dtype.roundtrip_tol(), "bench roundtrip failed: {}", rep.max_err);
+    rep
+}
+
 /// Print a netmodel figure table.
 pub fn model_table(fig: usize, rows: &[FigRow]) {
     banner(&format!("paper figure {fig} — netmodel @ Shaheen scale"));
@@ -226,6 +268,8 @@ pub fn report_json(
         .str("method", rep.method)
         .str("exec", rep.exec)
         .int("overlap_depth", rep.overlap_depth)
+        .int("lanes", rep.lanes)
+        .int("threads", rep.threads)
         .bool("tuned", rep.tuned)
         .num("total_s", rep.total)
         .num("fft_s", rep.fft)

@@ -136,6 +136,12 @@ pub struct RunConfig {
     pub transport: Knob<Transport>,
     /// Serial engine.
     pub engine: EngineKind,
+    /// Serial-engine SoA lane width (native engine; `Auto` lets the
+    /// tuner pick from the budget's lane ladder).
+    pub lanes: Knob<usize>,
+    /// Serial-engine per-rank pool thread count (native engine; `Auto`
+    /// lets the tuner pick from the budget's thread ladder).
+    pub threads: Knob<usize>,
     /// Element precision (the driver monomorphizes over this).
     pub dtype: Dtype,
     /// Inner loop length (consecutive fwd+bwd pairs per timing sample).
@@ -166,6 +172,8 @@ impl Default for RunConfig {
             exec: Knob::Fixed(ExecMode::Blocking),
             transport: Knob::Fixed(Transport::Mailbox),
             engine: EngineKind::Native,
+            lanes: Knob::Fixed(1),
+            threads: Knob::Fixed(1),
             dtype: Dtype::F64,
             inner: 3,
             outer: 5,
@@ -190,7 +198,11 @@ impl RunConfig {
     /// Whether any knob needs the tuner (an empty grid alone does not —
     /// that is the historical `dims_create` default, not a search).
     pub fn needs_tuning(&self) -> bool {
-        self.method.is_auto() || self.exec.is_auto() || self.transport.is_auto()
+        self.method.is_auto()
+            || self.exec.is_auto()
+            || self.transport.is_auto()
+            || self.lanes.is_auto()
+            || self.threads.is_auto()
     }
 
     /// Whether a resolution may consult/persist wisdom: every searched
@@ -199,7 +211,18 @@ impl RunConfig {
         self.method.is_auto()
             && self.exec.is_auto()
             && self.transport.is_auto()
+            && self.lanes.is_auto()
+            && self.threads.is_auto()
             && self.grid.is_empty()
+    }
+
+    /// The concrete serial-engine shape of a fully-resolved config
+    /// (panics on `Auto` knobs — resolve first).
+    pub fn engine_cfg(&self) -> crate::fft::EngineCfg {
+        crate::fft::EngineCfg::new(
+            self.lanes.fixed().expect("lanes knob unresolved"),
+            self.threads.fixed().expect("threads knob unresolved"),
+        )
     }
 }
 
@@ -242,10 +265,17 @@ mod tests {
             method: Knob::Auto,
             exec: Knob::Auto,
             transport: Knob::Auto,
+            lanes: Knob::Auto,
+            threads: Knob::Auto,
             ..Default::default()
         };
         assert!(full.needs_tuning());
         assert!(full.full_auto());
+        // A fixed engine axis still needs tuning but is no longer full-auto.
+        let pinned_engine = RunConfig { threads: Knob::Fixed(4), ..full.clone() };
+        assert!(pinned_engine.needs_tuning());
+        assert!(!pinned_engine.full_auto());
+        assert_eq!(RunConfig::default().engine_cfg(), crate::fft::EngineCfg::default());
         // An explicit grid pins the grid axis: no wisdom.
         let pinned_grid = RunConfig { grid: vec![2, 2], ..full.clone() };
         assert!(pinned_grid.needs_tuning());

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use crate::coordinator::config::{Dtype, EngineKind, Knob, RunConfig};
 use crate::coordinator::metrics::{MetricsStats, RankMetrics};
-use crate::fft::{Complex, NativeFft, Real, SerialFft};
+use crate::fft::{Complex, EngineCfg, NativeFft, Real, SerialFft};
 use crate::pfft::{Kind, PfftPlan};
 use crate::runtime::XlaFftEngine;
 use crate::simmpi::World;
@@ -57,6 +57,10 @@ pub struct RunReport {
     pub exec: &'static str,
     /// Overlap depth of the pipelined mode (0 for blocking).
     pub overlap_depth: u64,
+    /// Serial-engine SoA lane width of the run (1 = scalar).
+    pub lanes: u64,
+    /// Serial-engine per-rank pool thread count (1 = single-threaded).
+    pub threads: u64,
     /// Whether the configuration was resolved by the autotuner
     /// ([`resolve_auto`]) rather than fixed by the caller.
     pub tuned: bool,
@@ -79,10 +83,12 @@ impl RunReport {
     }
 }
 
-fn make_engine<T: Real>(kind: EngineKind) -> Box<dyn SerialFft<T>> {
+fn make_engine<T: Real>(kind: EngineKind, engine_cfg: EngineCfg) -> Box<dyn SerialFft<T>> {
     match kind {
-        EngineKind::Native => Box::new(NativeFft::<T>::new()),
+        EngineKind::Native => Box::new(NativeFft::<T>::with_cfg(engine_cfg)),
         EngineKind::Xla => {
+            // The XLA artifacts are AOT-batched; the lanes/threads axis is
+            // a native-engine dimension and is ignored here.
             let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
             Box::new(XlaFftEngine::load(&dir).expect("loading XLA artifacts (run `make artifacts`)"))
         }
@@ -93,7 +99,8 @@ fn make_engine<T: Real>(kind: EngineKind) -> Box<dyn SerialFft<T>> {
 /// ([`crate::tune`]): a no-op `(cfg, false)` when all knobs are fixed;
 /// otherwise the tuner searches (or recalls from wisdom, full-auto only)
 /// in its own simulated world and the returned config carries the
-/// winning method/exec/transport/grid as `Fixed` knobs, with `true`.
+/// winning method/exec/transport/grid/lanes/threads as `Fixed` knobs,
+/// with `true`.
 pub fn resolve_auto(cfg: &RunConfig) -> (RunConfig, bool) {
     if !cfg.needs_tuning() {
         return (cfg.clone(), false);
@@ -134,6 +141,12 @@ fn resolve_typed<T: Real>(cfg: &RunConfig) -> (RunConfig, bool) {
             if !cfg.grid.is_empty() {
                 space.pin_grid(cfg.grid.clone());
             }
+            if let Knob::Fixed(l) = cfg.lanes {
+                space.pin_lanes(l);
+            }
+            if let Knob::Fixed(t) = cfg.threads {
+                space.pin_threads(t);
+            }
             let (entries, skipped) =
                 search::<T>(&comm, &cfg.global, cfg.kind, &space, cfg.budget.pairs(), &WallClock);
             TuneReport {
@@ -152,6 +165,8 @@ fn resolve_typed<T: Real>(cfg: &RunConfig) -> (RunConfig, bool) {
         method: Knob::Fixed(winner.method),
         exec: Knob::Fixed(winner.exec),
         transport: Knob::Fixed(winner.transport),
+        lanes: Knob::Fixed(winner.engine.lanes),
+        threads: Knob::Fixed(winner.engine.threads),
         grid: winner.grid,
         ..cfg.clone()
     };
@@ -183,6 +198,9 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
     let method = cfg.method.fixed().expect(unresolved);
     let exec = cfg.exec.fixed().expect(unresolved);
     let transport = cfg.transport.fixed().expect(unresolved);
+    cfg.lanes.fixed().expect(unresolved);
+    cfg.threads.fixed().expect(unresolved);
+    let engine_cfg = cfg.engine_cfg();
     let grid = cfg.resolved_grid(grid_ndims);
     if cfg.trace.is_some() {
         crate::trace::set_enabled(true);
@@ -201,7 +219,7 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
             exec,
             transport,
         );
-        let mut engine = make_engine::<T>(cfg.engine);
+        let mut engine = make_engine::<T>(cfg.engine, engine_cfg);
         // Deterministic input.
         let ilen = plan.input_len();
         let olen = plan.output_len();
@@ -317,6 +335,8 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         method: method.name(),
         exec: exec.name(),
         overlap_depth: exec.depth() as u64,
+        lanes: engine_cfg.lanes as u64,
+        threads: engine_cfg.threads as u64,
         tuned: false,
         stats,
     }
@@ -469,6 +489,55 @@ mod tests {
         assert_eq!(resolved.exec.fixed(), Some(ExecMode::Blocking));
         assert_eq!(resolved.grid, vec![2]);
         assert!(resolved.transport.fixed().is_some(), "transport knob still Auto");
+    }
+
+    #[test]
+    fn driver_runs_batched_threaded_engine() {
+        // Lane-batched + pooled engine through the full distributed stack:
+        // same roundtrip quality as scalar, and the report carries the
+        // engine shape for JSON/TSV rows.
+        let base = RunConfig {
+            global: vec![16, 12, 10],
+            ranks: 4,
+            kind: Kind::R2c,
+            inner: 1,
+            outer: 1,
+            ..Default::default()
+        };
+        let scalar = run_config(&base, 2);
+        let engined = run_config(
+            &RunConfig { lanes: Knob::Fixed(8), threads: Knob::Fixed(4), ..base.clone() },
+            2,
+        );
+        assert!(engined.max_err < 1e-10, "engined roundtrip err {}", engined.max_err);
+        assert_eq!((engined.lanes, engined.threads), (8, 4));
+        assert_eq!((scalar.lanes, scalar.threads), (1, 1));
+        assert_eq!(scalar.bytes, engined.bytes, "engine axis must not change wire bytes");
+    }
+
+    #[test]
+    fn auto_engine_knobs_resolve() {
+        use crate::tune::Budget;
+        let cfg = RunConfig {
+            global: vec![8, 8, 8],
+            ranks: 2,
+            kind: Kind::C2c,
+            lanes: Knob::Auto,
+            threads: Knob::Auto,
+            budget: Budget::Tiny,
+            inner: 1,
+            outer: 1,
+            ..Default::default()
+        };
+        let (resolved, tuned) = resolve_auto(&cfg);
+        assert!(tuned);
+        assert!(!resolved.needs_tuning(), "engine knobs left Auto");
+        let ec = resolved.engine_cfg();
+        assert!(ec.lanes >= 1 && ec.threads >= 1);
+        // Pinned non-engine axes survive the resolution untouched.
+        assert_eq!(resolved.method, cfg.method);
+        assert_eq!(resolved.exec, cfg.exec);
+        assert_eq!(resolved.transport, cfg.transport);
     }
 
     #[test]

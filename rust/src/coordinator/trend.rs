@@ -251,6 +251,12 @@ pub struct TrendRow {
     /// Transport of the rows (`"mailbox"`/`"window"`), when the rows carry
     /// a `transport` field — part of the group identity, like dtype.
     pub transport: Option<String>,
+    /// Serial-engine SoA lane width, when the rows carry a `lanes` field —
+    /// part of the group identity (rows from commits that predate the
+    /// engine axis carry neither field and form their own group).
+    pub lanes: Option<u64>,
+    /// Serial-engine worker-pool size, when the rows carry `threads`.
+    pub threads: Option<u64>,
 }
 
 fn mean(values: &[f64]) -> Option<f64> {
@@ -273,13 +279,14 @@ fn row_key(row: &JsonValue) -> String {
 
 /// Aggregate the rows of parsed bench documents into trend groups.
 ///
-/// The group identity is `(bench, key, dtype, transport)`: rows of the
-/// same label at different precisions or payload transports must *not*
-/// pool (a mixed mean of wire bytes or times tracks neither variant), so
-/// a bench emitting f32/f64 or mailbox/window rows for the same shape
+/// The group identity is `(bench, key, dtype, transport, lanes, threads)`:
+/// rows of the same label at different precisions, payload transports or
+/// serial-engine shapes must *not* pool (a mixed mean of wire bytes or
+/// times tracks neither variant), so a bench emitting f32/f64,
+/// mailbox/window or scalar/batched/threaded rows for the same shape
 /// yields one trend group per variant.
 pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
-    // (bench, key, dtype, transport) -> collected numeric samples.
+    // (bench, key, dtype, transport, lanes, threads) -> collected samples.
     #[derive(Default)]
     struct Acc {
         count: u64,
@@ -290,7 +297,7 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
         staged: Vec<f64>,
         imb: Vec<f64>,
     }
-    type GroupKey = (String, String, Option<String>, Option<String>);
+    type GroupKey = (String, String, Option<String>, Option<String>, Option<u64>, Option<u64>);
     let mut groups: BTreeMap<GroupKey, Acc> = BTreeMap::new();
     for (fallback_name, doc) in docs {
         let bench = doc
@@ -306,7 +313,11 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
         for row in rows {
             let dtype = row.get("dtype").and_then(|v| v.as_str()).map(str::to_string);
             let transport = row.get("transport").and_then(|v| v.as_str()).map(str::to_string);
-            let acc = groups.entry((bench.clone(), row_key(row), dtype, transport)).or_default();
+            let lanes = row.get("lanes").and_then(|v| v.as_num()).map(|x| x as u64);
+            let threads = row.get("threads").and_then(|v| v.as_num()).map(|x| x as u64);
+            let acc = groups
+                .entry((bench.clone(), row_key(row), dtype, transport, lanes, threads))
+                .or_default();
             acc.count += 1;
             let mut push = |field: &str, into: &mut Vec<f64>| {
                 if let Some(x) = row.get(field).and_then(|v| v.as_num()) {
@@ -323,7 +334,7 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
     }
     groups
         .into_iter()
-        .map(|((bench, key, dtype, transport), acc)| TrendRow {
+        .map(|((bench, key, dtype, transport, lanes, threads), acc)| TrendRow {
             bench,
             key,
             count: acc.count,
@@ -335,11 +346,24 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
             mean_imbalance: mean(&acc.imb),
             dtype,
             transport,
+            lanes,
+            threads,
         })
         .collect()
 }
 
-/// The fastest `(dtype, transport)` variant of every `(bench, label)`
+impl TrendRow {
+    /// Compact engine-shape label (`l8t4`) for the table columns, `-` when
+    /// the rows predate the engine axis.
+    pub fn engine_label(&self) -> String {
+        match (self.lanes, self.threads) {
+            (None, None) => "-".to_string(),
+            (l, t) => format!("l{}t{}", l.unwrap_or(1), t.unwrap_or(1)),
+        }
+    }
+}
+
+/// The fastest `(dtype, transport, engine)` variant of every `(bench, label)`
 /// group by `mean_total_s` — the offline cousin of the tuner's ranked
 /// table (`repro tune`). Variants of the *same* label are the same
 /// workload measured under different precisions/transports, so their
@@ -415,28 +439,30 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
     let best_rows = best_groups(&rows);
     println!("# trend over {} artifact file(s) in {}", files.len(), dir.display());
     if best {
-        println!("bench\tbest_group\tdtype\ttransport\tmean_total_s");
+        println!("bench\tbest_group\tdtype\ttransport\tengine\tmean_total_s");
         for r in &best_rows {
             println!(
-                "{}\t{}\t{}\t{}\t{}",
+                "{}\t{}\t{}\t{}\t{}\t{}",
                 r.bench,
                 r.key,
                 r.dtype.as_deref().unwrap_or("-"),
                 r.transport.as_deref().unwrap_or("-"),
+                r.engine_label(),
                 fmt_opt(r.mean_total_s),
             );
         }
     } else {
         println!(
-            "bench\tgroup\tdtype\ttransport\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_one_copy_bytes\tmean_staged_bytes\tmean_imb_total"
+            "bench\tgroup\tdtype\ttransport\tengine\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_one_copy_bytes\tmean_staged_bytes\tmean_imb_total"
         );
         for r in &rows {
             println!(
-                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
                 r.bench,
                 r.key,
                 r.dtype.as_deref().unwrap_or("-"),
                 r.transport.as_deref().unwrap_or("-"),
+                r.engine_label(),
                 r.count,
                 fmt_opt(r.mean_total_s),
                 fmt_opt(r.mean_bytes),
@@ -461,6 +487,12 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
             if let Some(t) = &r.transport {
                 obj = obj.str("transport", t);
             }
+            if let Some(l) = r.lanes {
+                obj = obj.int("lanes", l);
+            }
+            if let Some(t) = r.threads {
+                obj = obj.int("threads", t);
+            }
             obj.num("mean_total_s", r.mean_total_s.unwrap_or(f64::NAN))
                 .num("mean_bytes", r.mean_bytes.unwrap_or(f64::NAN))
                 .num("mean_fused_bytes", r.mean_fused_bytes.unwrap_or(f64::NAN))
@@ -481,6 +513,12 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
             }
             if let Some(t) = &r.transport {
                 obj = obj.str("transport", t);
+            }
+            if let Some(l) = r.lanes {
+                obj = obj.int("lanes", l);
+            }
+            if let Some(t) = r.threads {
+                obj = obj.int("threads", t);
             }
             obj.num("mean_total_s", r.mean_total_s.unwrap_or(f64::NAN)).render()
         })
@@ -625,6 +663,39 @@ mod tests {
         let win = rows.iter().find(|r| r.transport.as_deref() == Some("window")).unwrap();
         assert_eq!(win.count, 1);
         assert_eq!(win.mean_one_copy_bytes, Some(64.0));
+    }
+
+    #[test]
+    fn engine_shape_is_part_of_group_identity() {
+        // Scalar and batched/threaded rows of the same label must not pool
+        // — the engine ablation compares their means. Rows from commits
+        // that predate the axis (no lanes/threads fields) stay their own
+        // group instead of polluting the scalar one.
+        let d = doc(
+            "engine",
+            &[
+                r#"{"label": "a", "total_s": 4.0, "lanes": 1, "threads": 1}"#,
+                r#"{"label": "a", "total_s": 2.0, "lanes": 8, "threads": 4}"#,
+                r#"{"label": "a", "total_s": 6.0, "lanes": 1, "threads": 1}"#,
+                r#"{"label": "a", "total_s": 9.0}"#,
+            ],
+        );
+        let rows = aggregate(&[d]);
+        assert_eq!(rows.len(), 3);
+        let scalar = rows.iter().find(|r| r.lanes == Some(1)).unwrap();
+        assert_eq!(scalar.count, 2);
+        assert_eq!(scalar.mean_total_s, Some(5.0));
+        assert_eq!(scalar.engine_label(), "l1t1");
+        let batched = rows.iter().find(|r| r.lanes == Some(8)).unwrap();
+        assert_eq!((batched.threads, batched.mean_total_s), (Some(4), Some(2.0)));
+        assert_eq!(batched.engine_label(), "l8t4");
+        let legacy = rows.iter().find(|r| r.lanes.is_none()).unwrap();
+        assert_eq!(legacy.count, 1);
+        assert_eq!(legacy.engine_label(), "-");
+        // best_groups compares engine variants of the same label.
+        let best = best_groups(&rows);
+        assert_eq!(best.len(), 1);
+        assert_eq!(best[0].lanes, Some(8));
     }
 
     #[test]

@@ -8,11 +8,65 @@
 //! FFTW/MKL stand-in, either precision) and the AOT JAX+Pallas artifact
 //! executor ([`crate::runtime::XlaFftEngine`], f32 planes internally,
 //! exposed at any precision).
+//!
+//! [`NativeFft`] is configured by an [`EngineCfg`]: `lanes > 1` routes
+//! panels through the lane-batched SoA kernels of [`FftPlan`], and
+//! `threads > 1` splits independent lines/panels across a preallocated
+//! [`WorkerPool`]. Both knobs change only speed — every configuration is
+//! bitwise-equal to the scalar single-threaded engine, because the SoA
+//! kernels replay the scalar per-line operation order and pool chunks
+//! touch disjoint lines. All per-worker buffers (panel, scratch, r2c/c2r
+//! line) are preallocated and grown only on first use per line length, so
+//! steady-state execution performs zero heap allocations with the pool
+//! active (`rust/tests/alloc_steady_state.rs`).
+
+use std::sync::Mutex;
 
 use super::complex::Complex;
-use super::nd::{fft_axis, irfft_last, rfft_last, Planner};
-use super::plan::Direction;
+use super::nd::{Planner, PANEL};
+use super::plan::{Direction, FftPlan, MAX_LANES};
+use super::pool::{SendPtr, WorkerPool};
 use super::real::Real;
+
+/// Target number of claimable chunks per pool thread: > 1 so the dynamic
+/// claim counter can smooth uneven chunk costs, small enough that claim
+/// traffic stays negligible.
+const CHUNKS_PER_THREAD: usize = 4;
+
+/// Serial-engine execution shape: SoA lane width (1 = scalar AoS kernels)
+/// and pool thread count (1 = no worker threads, inline execution). A
+/// tuner axis — see `tune::TuneSpace` — and a CLI knob (`--lanes`,
+/// `--threads`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EngineCfg {
+    /// SoA lanes advanced per butterfly (clamped to [`MAX_LANES`]).
+    pub lanes: usize,
+    /// Total executing threads per rank (the rank thread participates).
+    pub threads: usize,
+}
+
+impl Default for EngineCfg {
+    fn default() -> EngineCfg {
+        EngineCfg { lanes: 1, threads: 1 }
+    }
+}
+
+impl EngineCfg {
+    /// Clamped constructor: `lanes` into `1..=MAX_LANES`, `threads >= 1`.
+    pub fn new(lanes: usize, threads: usize) -> EngineCfg {
+        EngineCfg { lanes, threads }.normalized()
+    }
+
+    /// The same configuration with both knobs clamped to valid ranges.
+    pub fn normalized(self) -> EngineCfg {
+        EngineCfg { lanes: self.lanes.clamp(1, MAX_LANES), threads: self.threads.max(1) }
+    }
+
+    /// Axis label for logs, benches and wisdom keys: `l{lanes}t{threads}`.
+    pub fn label(&self) -> String {
+        format!("l{}t{}", self.lanes, self.threads)
+    }
+}
 
 /// A serial (single-rank) FFT engine for multidimensional arrays of
 /// `Complex<T>` elements.
@@ -32,9 +86,43 @@ pub trait SerialFft<T: Real = f64> {
     fn name(&self) -> &'static str;
 }
 
-/// The native planner-backed engine at precision `T`.
+/// Per-worker preallocated buffers (indexed by pool worker id). Grown only
+/// when a new line length is first seen; steady state never resizes.
+struct Workspace<T> {
+    /// Gather/scatter panel (AoS `panel[l*n+t]` or SoA `panel[t*w+l]`).
+    panel: Vec<Complex<T>>,
+    /// Plan scratch (max of scalar and SoA requirements).
+    scratch: Vec<Complex<T>>,
+    /// Full complex line for the r2c/c2r Hermitian paths.
+    line: Vec<Complex<T>>,
+}
+
+impl<T: Real> Workspace<T> {
+    fn empty() -> Workspace<T> {
+        Workspace { panel: Vec::new(), scratch: Vec::new(), line: Vec::new() }
+    }
+
+    fn ensure(&mut self, panel: usize, scratch: usize, line: usize) {
+        if self.panel.len() < panel {
+            self.panel.resize(panel, Complex::ZERO);
+        }
+        if self.scratch.len() < scratch {
+            self.scratch.resize(scratch, Complex::ZERO);
+        }
+        if self.line.len() < line {
+            self.line.resize(line, Complex::ZERO);
+        }
+    }
+}
+
+/// The native planner-backed engine at precision `T`, with lane-batched
+/// kernels and a per-rank worker pool per its [`EngineCfg`].
 pub struct NativeFft<T = f64> {
     planner: Planner<T>,
+    cfg: EngineCfg,
+    pool: WorkerPool,
+    /// One workspace per pool thread (index = worker id, 0 = rank thread).
+    work: Vec<Mutex<Workspace<T>>>,
 }
 
 impl<T: Real> Default for NativeFft<T> {
@@ -44,22 +132,245 @@ impl<T: Real> Default for NativeFft<T> {
 }
 
 impl<T: Real> NativeFft<T> {
+    /// Scalar single-threaded engine (the reference configuration).
     pub fn new() -> NativeFft<T> {
-        NativeFft { planner: Planner::new() }
+        NativeFft::with_cfg(EngineCfg::default())
+    }
+
+    /// Engine with an explicit lane/thread shape. The pool and all
+    /// per-worker workspaces are built here, before any transform runs.
+    pub fn with_cfg(cfg: EngineCfg) -> NativeFft<T> {
+        let cfg = cfg.normalized();
+        let pool = WorkerPool::new(cfg.threads);
+        let work = (0..pool.threads()).map(|_| Mutex::new(Workspace::empty())).collect();
+        NativeFft { planner: Planner::new(), cfg, pool, work }
+    }
+
+    /// The engine's execution shape.
+    pub fn cfg(&self) -> EngineCfg {
+        self.cfg
+    }
+
+    /// The engine's worker pool (diagnostics: per-worker probes such as
+    /// the counting-allocator steady-state assertions).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Grow every worker's buffers for the given requirements (warmup
+    /// path; no-op once sizes have been seen).
+    fn ensure_work(&self, panel: usize, scratch: usize, line: usize) {
+        for w in &self.work {
+            w.lock().unwrap().ensure(panel, scratch, line);
+        }
+    }
+
+    /// Rows-per-chunk for `rows` independent lines over the pool.
+    fn block_of(&self, rows: usize) -> usize {
+        rows.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).max(1)
     }
 }
 
 impl<T: Real> SerialFft<T> for NativeFft<T> {
     fn c2c(&mut self, data: &mut [Complex<T>], shape: &[usize], axis: usize, dir: Direction) {
-        fft_axis(&mut self.planner, data, shape, axis, dir);
+        let d = shape.len();
+        assert!(axis < d, "axis {axis} out of range for rank {d}");
+        let total: usize = shape.iter().product();
+        assert_eq!(data.len(), total, "data length does not match shape");
+        let n = shape[axis];
+        if n == 0 || total == 0 {
+            return;
+        }
+        let plan_rc = self.planner.plan(n);
+        let plan: &FftPlan<T> = &plan_rc;
+        let lanes = self.cfg.lanes;
+        let soa = lanes > 1;
+        let stride: usize = shape[axis + 1..].iter().product();
+        let before: usize = shape[..axis].iter().product();
+        let rows = total / n;
+        // Panel width: SoA uses the configured lane count, the scalar
+        // strided path keeps the historical cache-friendly PANEL.
+        let pw = if stride == 1 {
+            if soa {
+                lanes.min(rows)
+            } else {
+                0 // contiguous scalar path transforms in place, no panel
+            }
+        } else if soa {
+            lanes.min(stride)
+        } else {
+            PANEL.min(stride)
+        };
+        let scratch_need =
+            plan.scratch_len().max(if soa { plan.soa_scratch_len(lanes) } else { 0 });
+        self.ensure_work(pw * n, scratch_need, 0);
+        let ptr = SendPtr(data.as_mut_ptr());
+        let work = &self.work;
+        if stride == 1 {
+            // Contiguous lines (axis is last): `rows` back-to-back rows.
+            if !soa {
+                let bs = self.block_of(rows);
+                self.pool.run(rows.div_ceil(bs), &|wid, c| {
+                    let r0 = c * bs;
+                    let rc = bs.min(rows - r0);
+                    let mut g = work[wid].lock().unwrap();
+                    // SAFETY: row blocks [r0, r0+rc) are disjoint per chunk.
+                    let sub =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r0 * n), rc * n) };
+                    plan.process_batch_with(sub, rc, dir, &mut g.scratch);
+                });
+            } else {
+                self.pool.run(rows.div_ceil(pw), &|wid, c| {
+                    let r0 = c * pw;
+                    let w = pw.min(rows - r0);
+                    let mut g = work[wid].lock().unwrap();
+                    let ws = &mut *g;
+                    // SAFETY: row blocks [r0, r0+w) are disjoint per chunk.
+                    let sub =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r0 * n), w * n) };
+                    let panel = &mut ws.panel[..n * w];
+                    for t in 0..n {
+                        for l in 0..w {
+                            panel[t * w + l] = sub[l * n + t];
+                        }
+                    }
+                    plan.process_soa(panel, w, dir, &mut ws.scratch);
+                    for t in 0..n {
+                        for l in 0..w {
+                            sub[l * n + t] = panel[t * w + l];
+                        }
+                    }
+                });
+            }
+            return;
+        }
+        // Strided lines: for each before-index `b`, the lines start at
+        // b*n*stride + s for s in 0..stride; gather pw at a time. Chunks
+        // interleave in memory, so access goes through per-element raw
+        // loads/stores instead of overlapping sub-slices.
+        let per_b = stride.div_ceil(pw);
+        self.pool.run(before * per_b, &|wid, c| {
+            let b = c / per_b;
+            let s0 = (c % per_b) * pw;
+            let w = pw.min(stride - s0);
+            let base = b * n * stride;
+            let mut g = work[wid].lock().unwrap();
+            let ws = &mut *g;
+            if soa {
+                // SoA gather: panel[t*w + l] = data[base + t*stride + s0 + l].
+                let panel = &mut ws.panel[..n * w];
+                for t in 0..n {
+                    let src = base + t * stride + s0;
+                    for l in 0..w {
+                        // SAFETY: chunks touch disjoint (b, s0+l) columns.
+                        panel[t * w + l] = unsafe { *ptr.0.add(src + l) };
+                    }
+                }
+                plan.process_soa(panel, w, dir, &mut ws.scratch);
+                for t in 0..n {
+                    let dst = base + t * stride + s0;
+                    for l in 0..w {
+                        // SAFETY: as above.
+                        unsafe { *ptr.0.add(dst + l) = panel[t * w + l] };
+                    }
+                }
+            } else {
+                // AoS gather: panel[l*n + t], the historical layout.
+                let panel = &mut ws.panel[..w * n];
+                for t in 0..n {
+                    let src = base + t * stride + s0;
+                    for l in 0..w {
+                        // SAFETY: chunks touch disjoint (b, s0+l) columns.
+                        panel[l * n + t] = unsafe { *ptr.0.add(src + l) };
+                    }
+                }
+                plan.process_batch_with(panel, w, dir, &mut ws.scratch);
+                for t in 0..n {
+                    let dst = base + t * stride + s0;
+                    for l in 0..w {
+                        // SAFETY: as above.
+                        unsafe { *ptr.0.add(dst + l) = panel[l * n + t] };
+                    }
+                }
+            }
+        });
     }
 
     fn r2c(&mut self, real: &[T], shape: &[usize], out: &mut [Complex<T>]) {
-        rfft_last(&mut self.planner, real, shape, out);
+        let d = shape.len();
+        assert!(d >= 1);
+        let n = shape[d - 1];
+        let nh = n / 2 + 1;
+        let rows: usize = shape[..d - 1].iter().product();
+        assert_eq!(real.len(), rows * n, "rfft: input length mismatch");
+        assert_eq!(out.len(), rows * nh, "rfft: output length mismatch");
+        if rows == 0 {
+            return;
+        }
+        let plan_rc = self.planner.plan(n);
+        let plan: &FftPlan<T> = &plan_rc;
+        self.ensure_work(0, plan.scratch_len(), n);
+        let bs = self.block_of(rows);
+        let optr = SendPtr(out.as_mut_ptr());
+        let work = &self.work;
+        self.pool.run(rows.div_ceil(bs), &|wid, c| {
+            let r0 = c * bs;
+            let rc = bs.min(rows - r0);
+            let mut g = work[wid].lock().unwrap();
+            let ws = &mut *g;
+            // SAFETY: output row blocks are disjoint per chunk.
+            let sub = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * nh), rc * nh) };
+            for i in 0..rc {
+                let r = r0 + i;
+                let line = &mut ws.line[..n];
+                for (t, l) in line.iter_mut().enumerate() {
+                    *l = Complex::new(real[r * n + t], T::ZERO);
+                }
+                plan.process_with(line, Direction::Forward, &mut ws.scratch);
+                sub[i * nh..(i + 1) * nh].copy_from_slice(&line[..nh]);
+            }
+        });
     }
 
     fn c2r(&mut self, cplx: &[Complex<T>], shape: &[usize], out: &mut [T]) {
-        irfft_last(&mut self.planner, cplx, shape, out);
+        let d = shape.len();
+        assert!(d >= 1);
+        let n = shape[d - 1];
+        let nh = n / 2 + 1;
+        let rows: usize = shape[..d - 1].iter().product();
+        assert_eq!(cplx.len(), rows * nh, "irfft: input length mismatch");
+        assert_eq!(out.len(), rows * n, "irfft: output length mismatch");
+        if rows == 0 {
+            return;
+        }
+        let plan_rc = self.planner.plan(n);
+        let plan: &FftPlan<T> = &plan_rc;
+        self.ensure_work(0, plan.scratch_len(), n);
+        let bs = self.block_of(rows);
+        let optr = SendPtr(out.as_mut_ptr());
+        let work = &self.work;
+        self.pool.run(rows.div_ceil(bs), &|wid, c| {
+            let r0 = c * bs;
+            let rc = bs.min(rows - r0);
+            let mut g = work[wid].lock().unwrap();
+            let ws = &mut *g;
+            // SAFETY: output row blocks are disjoint per chunk.
+            let sub = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * n), rc * n) };
+            for i in 0..rc {
+                let r = r0 + i;
+                let src = &cplx[r * nh..(r + 1) * nh];
+                let line = &mut ws.line[..n];
+                line[..nh].copy_from_slice(src);
+                // Hermitian extension: X[n-k] = conj(X[k]).
+                for k in 1..n - nh + 1 {
+                    line[n - k] = src[k].conj();
+                }
+                plan.process_with(line, Direction::Backward, &mut ws.scratch);
+                for t in 0..n {
+                    sub[i * n + t] = line[t].re;
+                }
+            }
+        });
     }
 
     fn name(&self) -> &'static str {
@@ -117,5 +428,40 @@ mod tests {
         eng.c2r(&half, &shape, &mut back);
         let err = real.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         assert!(err < 1e-12);
+    }
+
+    /// Every (lanes, threads) shape must be bitwise-equal to the scalar
+    /// single-threaded engine, on every axis (contiguous and strided).
+    #[test]
+    fn engine_cfgs_bitwise_match_scalar() {
+        let shape = [6usize, 7, 8];
+        let total: usize = shape.iter().product();
+        let x: Vec<Complex64> = (0..total)
+            .map(|k| Complex64::new(((k * 19) % 23) as f64 - 11.0, ((k * 7) % 13) as f64))
+            .collect();
+        for axis in 0..3 {
+            let mut want = x.clone();
+            NativeFft::<f64>::new().c2c(&mut want, &shape, axis, Direction::Forward);
+            for cfg in
+                [EngineCfg::new(4, 1), EngineCfg::new(1, 3), EngineCfg::new(8, 4)]
+            {
+                let mut got = x.clone();
+                NativeFft::<f64>::with_cfg(cfg).c2c(&mut got, &shape, axis, Direction::Forward);
+                let same = got
+                    .iter()
+                    .zip(&want)
+                    .all(|(a, b)| a.re.to_bits() == b.re.to_bits() && a.im.to_bits() == b.im.to_bits());
+                assert!(same, "cfg {} differs on axis {axis}", cfg.label());
+            }
+        }
+    }
+
+    #[test]
+    fn engine_cfg_normalization_and_label() {
+        let cfg = EngineCfg::new(999, 0);
+        assert_eq!(cfg.lanes, MAX_LANES);
+        assert_eq!(cfg.threads, 1);
+        assert_eq!(EngineCfg::new(8, 4).label(), "l8t4");
+        assert_eq!(EngineCfg::default().label(), "l1t1");
     }
 }

@@ -8,10 +8,14 @@ pub mod complex;
 pub mod engine;
 pub mod nd;
 pub mod plan;
+pub mod pool;
 pub mod real;
+#[cfg(feature = "simd")]
+pub mod simd;
 
 pub use complex::{max_abs_diff, Complex, Complex32, Complex64};
-pub use engine::{NativeFft, SerialFft};
+pub use engine::{EngineCfg, NativeFft, SerialFft};
 pub use nd::{fft_axis, irfft_last, rfft_last, Planner};
-pub use plan::{factorize, naive_dft, Direction, FftPlan};
+pub use plan::{factorize, naive_dft, Direction, FftPlan, MAX_LANES};
+pub use pool::WorkerPool;
 pub use real::Real;

@@ -39,7 +39,9 @@ impl<T: Real> Planner<T> {
 
 /// Number of lines gathered per strided panel. Chosen so a panel of
 /// `PANEL * n` complex doubles stays L2-resident for typical line lengths.
-const PANEL: usize = 16;
+/// Shared with the engine's scalar strided path so `NativeFft` at the
+/// default `EngineCfg` decomposes exactly like [`fft_axis`].
+pub(crate) const PANEL: usize = 16;
 
 /// Transform `data` (row-major, shape `shape`) along `axis`.
 pub fn fft_axis<T: Real>(

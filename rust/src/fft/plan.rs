@@ -41,6 +41,10 @@ impl Direction {
 /// this, Bluestein is used.
 const MAX_DIRECT_PRIME: usize = 61;
 
+/// Widest SoA lane group [`FftPlan::process_soa`] accepts. Bounds the
+/// fixed-size per-level lane temporaries of the mixed-radix recursion.
+pub const MAX_LANES: usize = 16;
+
 enum Kind<T> {
     /// N == 1.
     Identity,
@@ -131,17 +135,42 @@ impl<T: Real> FftPlan<T> {
         self.n == 1
     }
 
+    /// Scratch (in elements) that [`FftPlan::process_with`] /
+    /// [`FftPlan::process_batch_with`] need: zero for Identity/Pow2, the
+    /// line plus the exact `r x r` combine table for mixed radix, the
+    /// padded convolution buffer for Bluestein.
+    pub fn scratch_len(&self) -> usize {
+        match &self.kind {
+            Kind::Identity | Kind::Pow2 => 0,
+            Kind::Mixed { factors } => {
+                let rmax = *factors.last().unwrap();
+                self.n + if rmax > 2 { rmax * rmax } else { 0 }
+            }
+            Kind::Bluestein { m, .. } => *m,
+        }
+    }
+
     /// In-place transform of one line of `n` elements.
     pub fn process(&self, data: &mut [Complex<T>], dir: Direction) {
+        let mut scratch = vec![Complex::<T>::ZERO; self.scratch_len()];
+        self.process_with(data, dir, &mut scratch);
+    }
+
+    /// [`FftPlan::process`] with caller-provided scratch (at least
+    /// [`FftPlan::scratch_len`] elements, contents ignored) — the
+    /// allocation-free path the engine uses in steady state. Bitwise
+    /// identical to [`FftPlan::process`].
+    pub fn process_with(&self, data: &mut [Complex<T>], dir: Direction, scratch: &mut [Complex<T>]) {
         assert_eq!(data.len(), self.n, "plan length mismatch");
+        assert!(scratch.len() >= self.scratch_len(), "scratch too small");
         match &self.kind {
             Kind::Identity => {}
             Kind::Pow2 => self.pow2(data, dir),
             Kind::Mixed { factors } => {
-                let mut scratch = vec![Complex::<T>::ZERO; self.n];
-                self.mixed(data, &mut scratch, factors, dir);
+                let (line, wq) = scratch.split_at_mut(self.n);
+                self.mixed(data, line, wq, factors, dir);
             }
-            Kind::Bluestein { .. } => self.bluestein(data, dir),
+            Kind::Bluestein { .. } => self.bluestein(data, dir, scratch),
         }
         if dir == Direction::Backward {
             let s = T::from_f64(1.0 / self.n as f64);
@@ -153,26 +182,23 @@ impl<T: Real> FftPlan<T> {
 
     /// In-place transform of `count` contiguous lines.
     pub fn process_batch(&self, data: &mut [Complex<T>], count: usize, dir: Direction) {
+        // Share one scratch allocation across the batch.
+        let mut scratch = vec![Complex::<T>::ZERO; self.scratch_len()];
+        self.process_batch_with(data, count, dir, &mut scratch);
+    }
+
+    /// [`FftPlan::process_batch`] with caller-provided scratch (at least
+    /// [`FftPlan::scratch_len`] elements, shared across the rows).
+    pub fn process_batch_with(
+        &self,
+        data: &mut [Complex<T>],
+        count: usize,
+        dir: Direction,
+        scratch: &mut [Complex<T>],
+    ) {
         assert_eq!(data.len(), self.n * count, "batch size mismatch");
-        match &self.kind {
-            Kind::Mixed { factors } => {
-                // Share one scratch allocation across the batch.
-                let mut scratch = vec![Complex::<T>::ZERO; self.n];
-                for row in data.chunks_exact_mut(self.n) {
-                    self.mixed(row, &mut scratch, factors, dir);
-                    if dir == Direction::Backward {
-                        let s = T::from_f64(1.0 / self.n as f64);
-                        for v in row.iter_mut() {
-                            *v = v.scale(s);
-                        }
-                    }
-                }
-            }
-            _ => {
-                for row in data.chunks_exact_mut(self.n) {
-                    self.process(row, dir);
-                }
-            }
+        for row in data.chunks_exact_mut(self.n) {
+            self.process_with(row, dir, scratch);
         }
     }
 
@@ -235,7 +261,19 @@ impl<T: Real> FftPlan<T> {
     /// gathered into `scratch`, recursively transformed there (ping-pong:
     /// the child uses the matching `data` region as its scratch), and
     /// combined back into `data` — no extra copy passes.
-    fn mixed(&self, data: &mut [Complex<T>], scratch: &mut [Complex<T>], factors: &[usize], dir: Direction) {
+    ///
+    /// `wq_buf` holds the exact `r x r` combine table for factors `r > 2`
+    /// (caller-provided so the hot path never allocates; levels reuse it
+    /// sequentially — a level's combine runs only after its children are
+    /// done with theirs).
+    fn mixed(
+        &self,
+        data: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+        wq_buf: &mut [Complex<T>],
+        factors: &[usize],
+        dir: Direction,
+    ) {
         let n = data.len();
         debug_assert_eq!(n, factors.iter().product::<usize>());
         if factors.len() <= 1 {
@@ -269,7 +307,13 @@ impl<T: Real> FftPlan<T> {
         // Recurse on each decimated subsequence *in scratch*, lending the
         // corresponding `data` region as the child's scratch space.
         for j in 0..r {
-            self.mixed(&mut scratch[j * m..(j + 1) * m], &mut data[j * m..(j + 1) * m], rest, dir);
+            self.mixed(
+                &mut scratch[j * m..(j + 1) * m],
+                &mut data[j * m..(j + 1) * m],
+                wq_buf,
+                rest,
+                dir,
+            );
         }
         // Combine: X[q*m + t] = sum_j w_n^{j*(q*m+t)} * Y_j[t]
         //                     = sum_j (Y_j[t] * w_n^{j t}) * w_n^{j q m},
@@ -297,12 +341,11 @@ impl<T: Real> FftPlan<T> {
             }
             return;
         }
-        let wq: Vec<Complex<T>> = (0..r * r)
-            .map(|qj| {
-                let (q, j) = (qj / r, qj % r);
-                self.w((j * ((q * m) % n) % n) * mult, dir)
-            })
-            .collect();
+        let wq = &mut wq_buf[..r * r];
+        for (qj, v) in wq.iter_mut().enumerate() {
+            let (q, j) = (qj / r, qj % r);
+            *v = self.w((j * ((q * m) % n) % n) * mult, dir);
+        }
         let mut wstep = [Complex::<T>::ZERO; MAX_DIRECT_PRIME + 1];
         let mut wt = [Complex::<T>::ZERO; MAX_DIRECT_PRIME + 1];
         for j in 0..r {
@@ -333,12 +376,14 @@ impl<T: Real> FftPlan<T> {
 
     /// Bluestein chirp-z transform (forward); backward goes through the
     /// conjugation identity `ifft(x) * n == conj(fft(conj(x)))`.
-    fn bluestein(&self, data: &mut [Complex<T>], dir: Direction) {
+    /// `scratch` holds the padded length-`m` convolution buffer (the inner
+    /// plan is a power of two and needs no scratch of its own).
+    fn bluestein(&self, data: &mut [Complex<T>], dir: Direction, scratch: &mut [Complex<T>]) {
         if dir == Direction::Backward {
             for v in data.iter_mut() {
                 *v = v.conj();
             }
-            self.bluestein(data, Direction::Forward);
+            self.bluestein(data, Direction::Forward, scratch);
             for v in data.iter_mut() {
                 *v = v.conj();
             }
@@ -348,17 +393,352 @@ impl<T: Real> FftPlan<T> {
         let Kind::Bluestein { m, inner, chirp, filter_f } = &self.kind else { unreachable!() };
         let n = self.n;
         // X[j] = chirp[j] * sum_k (x[k] chirp[k]) b[j-k],  b[t] = conj(chirp[t]).
-        let mut a = vec![Complex::<T>::ZERO; *m];
+        let a = &mut scratch[..*m];
+        // Fresh-buffer semantics: the padding tail must be zero.
+        for v in a[n..].iter_mut() {
+            *v = Complex::ZERO;
+        }
         for k in 0..n {
             a[k] = data[k] * chirp[k];
         }
-        inner.process(&mut a, Direction::Forward);
+        inner.process(a, Direction::Forward);
         for (av, fv) in a.iter_mut().zip(filter_f) {
             *av = *av * *fv;
         }
-        inner.process(&mut a, Direction::Backward);
+        inner.process(a, Direction::Backward);
         for k in 0..n {
             data[k] = a[k] * chirp[k];
+        }
+    }
+
+    // ---- lane-batched (SoA) kernels -------------------------------------
+    //
+    // `process_soa` transforms `w` lines in lockstep over a
+    // lane-interleaved panel: `data[t*w + l]` is element `t` of line `l`,
+    // so every butterfly touches `w` contiguous complex values — plain
+    // stable-Rust loops the compiler autovectorizes. Every kernel below
+    // mirrors its scalar twin's per-line operation order exactly (the same
+    // reads, multiplies, adds in the same dataflow), so each line of the
+    // result is bitwise-equal to running [`FftPlan::process`] on that line
+    // alone — asserted by `rust/tests/engine_equivalence.rs`.
+
+    /// Scratch (in elements) for [`FftPlan::process_soa`] at lane width
+    /// `w`: the ping-pong panel plus the `r x r` table and per-lane
+    /// combine temporaries for mixed radix, the padded convolution panel
+    /// for Bluestein, nothing for Identity/Pow2. Monotone in `w`.
+    pub fn soa_scratch_len(&self, w: usize) -> usize {
+        match &self.kind {
+            Kind::Identity | Kind::Pow2 => 0,
+            Kind::Mixed { factors } => {
+                let rmax = *factors.last().unwrap();
+                self.n * w + if rmax > 2 { rmax * rmax + rmax * w } else { 0 }
+            }
+            Kind::Bluestein { m, .. } => *m * w,
+        }
+    }
+
+    /// In-place lane-batched transform of `w` lines held SoA
+    /// (lane-interleaved): `data[t*w + l]` is element `t` of line `l`.
+    /// `scratch` must hold at least [`FftPlan::soa_scratch_len`]`(w)`
+    /// elements (contents ignored). Bitwise-equal per line to the scalar
+    /// path.
+    pub fn process_soa(
+        &self,
+        data: &mut [Complex<T>],
+        w: usize,
+        dir: Direction,
+        scratch: &mut [Complex<T>],
+    ) {
+        assert!((1..=MAX_LANES).contains(&w), "lane width {w} out of range");
+        assert_eq!(data.len(), self.n * w, "SoA panel size mismatch");
+        assert!(scratch.len() >= self.soa_scratch_len(w), "SoA scratch too small");
+        match &self.kind {
+            Kind::Identity => {}
+            Kind::Pow2 => self.pow2_soa(data, w, dir),
+            Kind::Mixed { factors } => {
+                let rmax = *factors.last().unwrap();
+                let (panel, aux) = scratch.split_at_mut(self.n * w);
+                let (wq_buf, tmp_buf) =
+                    aux.split_at_mut(if rmax > 2 { rmax * rmax } else { 0 });
+                self.mixed_soa(data, panel, wq_buf, tmp_buf, w, factors, dir);
+            }
+            Kind::Bluestein { .. } => self.bluestein_soa(data, w, dir, scratch),
+        }
+        if dir == Direction::Backward {
+            let s = T::from_f64(1.0 / self.n as f64);
+            for v in data.iter_mut() {
+                *v = v.scale(s);
+            }
+        }
+    }
+
+    /// One radix-2 butterfly stage of size `len` over the SoA rows of the
+    /// block starting at row `base` — the scalar stage body with the lane
+    /// loop innermost.
+    #[inline]
+    fn stage_soa(&self, data: &mut [Complex<T>], w: usize, base: usize, len: usize, dir: Direction) {
+        let half = len / 2;
+        let step = self.n / len;
+        // k = 0: unit twiddle.
+        {
+            let (a, b) = data[base * w..].split_at_mut(half * w);
+            rows_bf(&mut a[..w], &mut b[..w], None);
+        }
+        for k in 1..half {
+            let tw = self.w(k * step, dir);
+            let (a, b) = data[(base + k) * w..].split_at_mut(half * w);
+            rows_bf(&mut a[..w], &mut b[..w], Some(tw));
+        }
+    }
+
+    /// SoA twin of [`FftPlan::pow2`]: identical butterflies in identical
+    /// per-line order, with pairs of radix-2 stages scheduled as radix-4
+    /// blocks (both stages of each `2*len` block run back-to-back while it
+    /// is cache-resident; reordering independent butterflies does not
+    /// change any computed value).
+    fn pow2_soa(&self, data: &mut [Complex<T>], w: usize, dir: Direction) {
+        let n = self.n;
+        // Bit-reversal permutation on whole rows.
+        for i in 0..n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                let (lo, hi) = data.split_at_mut(j * w);
+                lo[i * w..i * w + w].swap_with_slice(&mut hi[..w]);
+            }
+        }
+        // First stage (len = 2) has unit twiddles.
+        for pair in data.chunks_exact_mut(2 * w) {
+            let (a, b) = pair.split_at_mut(w);
+            rows_bf(a, b, None);
+        }
+        // Remaining radix-2 stages, two at a time per radix-4 block.
+        let mut len = 4usize;
+        while len * 2 <= n {
+            let mut base = 0;
+            while base < n {
+                self.stage_soa(data, w, base, len, dir);
+                self.stage_soa(data, w, base + len, len, dir);
+                self.stage_soa(data, w, base, 2 * len, dir);
+                base += 2 * len;
+            }
+            len *= 4;
+        }
+        if len <= n {
+            // Odd stage count: one remaining radix-2 stage (len == n).
+            let mut base = 0;
+            while base < n {
+                self.stage_soa(data, w, base, len, dir);
+                base += len;
+            }
+        }
+    }
+
+    /// SoA twin of [`FftPlan::mixed`]: the same decimate / recurse /
+    /// combine structure with the lane loop innermost everywhere.
+    /// `wq_buf`/`tmp_buf` hold the `r x r` table and the per-lane combine
+    /// temporaries (sized by the largest factor; levels reuse them
+    /// sequentially).
+    #[allow(clippy::too_many_arguments)]
+    fn mixed_soa(
+        &self,
+        data: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+        wq_buf: &mut [Complex<T>],
+        tmp_buf: &mut [Complex<T>],
+        w: usize,
+        factors: &[usize],
+        dir: Direction,
+    ) {
+        let n = data.len() / w;
+        debug_assert_eq!(n, factors.iter().product::<usize>());
+        if factors.len() <= 1 {
+            // Single prime (or 1): naive DFT via the global table, one
+            // accumulator row per output element.
+            if n > 1 {
+                let mult = self.n / n;
+                let s = &mut scratch[..n * w];
+                s.copy_from_slice(data);
+                for k in 0..n {
+                    let out = &mut data[k * w..(k + 1) * w];
+                    out.copy_from_slice(&s[..w]); // j = 0 term
+                    for j in 1..n {
+                        let tw = self.w((j * k % n) * mult, dir);
+                        let src = &s[j * w..(j + 1) * w];
+                        for l in 0..w {
+                            out[l] += src[l] * tw;
+                        }
+                    }
+                }
+            }
+            return;
+        }
+        let r = factors[0];
+        let m = n / r;
+        let rest = &factors[1..];
+        // Decimate rows: scratch row (j*m + t) = data row (t*r + j).
+        for j in 0..r {
+            for t in 0..m {
+                let src = (t * r + j) * w;
+                let dst = (j * m + t) * w;
+                scratch[dst..dst + w].copy_from_slice(&data[src..src + w]);
+            }
+        }
+        // Recurse on each decimated block in scratch, ping-ponging the
+        // matching data block as the child's scratch.
+        for j in 0..r {
+            self.mixed_soa(
+                &mut scratch[j * m * w..(j + 1) * m * w],
+                &mut data[j * m * w..(j + 1) * m * w],
+                wq_buf,
+                tmp_buf,
+                w,
+                rest,
+                dir,
+            );
+        }
+        // Combine (see the scalar twin for the twiddle-stepping scheme).
+        let mult = self.n / n;
+        const RESYNC: usize = 32;
+        if r == 2 {
+            let mut wt = Complex::<T>::ONE;
+            let wstep = self.w(mult, dir);
+            for t in 0..m {
+                if t % RESYNC == 0 && t != 0 {
+                    wt = self.w((t % n) * mult, dir);
+                }
+                let (sa, sb) = (&scratch[t * w..t * w + w], &scratch[(m + t) * w..(m + t) * w + w]);
+                for l in 0..w {
+                    let a = sa[l];
+                    let b = sb[l] * wt;
+                    data[t * w + l] = a + b;
+                    data[(m + t) * w + l] = a - b;
+                }
+                wt *= wstep;
+            }
+            return;
+        }
+        let wq = &mut wq_buf[..r * r];
+        for (qj, v) in wq.iter_mut().enumerate() {
+            let (q, j) = (qj / r, qj % r);
+            *v = self.w((j * ((q * m) % n) % n) * mult, dir);
+        }
+        let mut wstep = [Complex::<T>::ZERO; MAX_DIRECT_PRIME + 1];
+        let mut wt = [Complex::<T>::ZERO; MAX_DIRECT_PRIME + 1];
+        for j in 0..r {
+            wstep[j] = self.w(j * mult, dir);
+            wt[j] = Complex::<T>::ONE;
+        }
+        let tmp = &mut tmp_buf[..r * w];
+        for t in 0..m {
+            if t % RESYNC == 0 && t != 0 {
+                for (j, v) in wt.iter_mut().enumerate().take(r) {
+                    *v = self.w((j * t % n) * mult, dir);
+                }
+            }
+            for j in 0..r {
+                let wtj = wt[j];
+                let src = &scratch[(j * m + t) * w..(j * m + t) * w + w];
+                for l in 0..w {
+                    tmp[j * w + l] = src[l] * wtj;
+                }
+                wt[j] *= wstep[j];
+            }
+            for q in 0..r {
+                let row = &wq[q * r..(q + 1) * r];
+                let out = &mut data[(q * m + t) * w..(q * m + t) * w + w];
+                out.copy_from_slice(&tmp[..w]); // acc = tmp[0]
+                for j in 1..r {
+                    let rj = row[j];
+                    for l in 0..w {
+                        out[l] += tmp[j * w + l] * rj;
+                    }
+                }
+            }
+        }
+    }
+
+    /// SoA twin of [`FftPlan::bluestein`]: the chirp/convolve/chirp
+    /// pipeline over `w` lanes at once (the padded inner transform is a
+    /// power of two, so the inner SoA calls need no scratch).
+    fn bluestein_soa(
+        &self,
+        data: &mut [Complex<T>],
+        w: usize,
+        dir: Direction,
+        scratch: &mut [Complex<T>],
+    ) {
+        if dir == Direction::Backward {
+            for v in data.iter_mut() {
+                *v = v.conj();
+            }
+            self.bluestein_soa(data, w, Direction::Forward, scratch);
+            for v in data.iter_mut() {
+                *v = v.conj();
+            }
+            // The final 1/n scaling happens in `process_soa`.
+            return;
+        }
+        let Kind::Bluestein { m, inner, chirp, filter_f } = &self.kind else { unreachable!() };
+        let n = self.n;
+        let a = &mut scratch[..*m * w];
+        for v in a[n * w..].iter_mut() {
+            *v = Complex::ZERO;
+        }
+        for k in 0..n {
+            let c = chirp[k];
+            let (src, dst) = (&data[k * w..(k + 1) * w], k * w);
+            for l in 0..w {
+                a[dst + l] = src[l] * c;
+            }
+        }
+        inner.process_soa(a, w, Direction::Forward, &mut []);
+        for (t, &fv) in filter_f.iter().enumerate() {
+            let row = &mut a[t * w..(t + 1) * w];
+            for v in row.iter_mut() {
+                *v = *v * fv;
+            }
+        }
+        inner.process_soa(a, w, Direction::Backward, &mut []);
+        for k in 0..n {
+            let c = chirp[k];
+            let dst = &mut data[k * w..(k + 1) * w];
+            for l in 0..w {
+                dst[l] = a[k * w + l] * c;
+            }
+        }
+    }
+}
+
+/// The lane-batched radix-2 butterfly: for each lane `l`, exactly the
+/// scalar kernel's `a' = a + b*tw`, `b' = a - b*tw` (or the unit-twiddle
+/// form), advanced over `w` contiguous SoA lanes. With `--features simd`
+/// an explicit `std::simd` path handles supported widths; the fallback is
+/// the plain loop the autovectorizer handles, and both compute the same
+/// IEEE operations in the same per-lane order.
+#[inline(always)]
+fn rows_bf<T: Real>(a: &mut [Complex<T>], b: &mut [Complex<T>], tw: Option<Complex<T>>) {
+    #[cfg(feature = "simd")]
+    {
+        if crate::fft::simd::rows_bf_simd(a, b, tw) {
+            return;
+        }
+    }
+    debug_assert_eq!(a.len(), b.len());
+    match tw {
+        None => {
+            for l in 0..a.len() {
+                let (x, y) = (a[l], b[l]);
+                a[l] = x + y;
+                b[l] = x - y;
+            }
+        }
+        Some(tw) => {
+            for l in 0..a.len() {
+                let x = a[l];
+                let y = b[l] * tw;
+                a[l] = x + y;
+                b[l] = x - y;
+            }
         }
     }
 }
@@ -556,6 +936,83 @@ mod tests {
         for k in 0..n {
             let w = Complex64::expi(2.0 * std::f64::consts::PI * k as f64 / n as f64);
             assert!((fs[k] - fx[k] * w).abs() < 1e-11);
+        }
+    }
+
+    /// Bits of a complex slice, for exact-equality assertions.
+    fn bits<T: Real>(v: &[Complex<T>]) -> Vec<(u64, u64)> {
+        v.iter().map(|c| (c.re.to_bits_u64(), c.im.to_bits_u64())).collect()
+    }
+
+    /// SoA panels must be bitwise-equal per line to the scalar path, for
+    /// every plan kind, both directions, and several lane widths.
+    fn check_soa<T: Real>(n: usize) {
+        let src64 = signal(n * MAX_LANES, n as u64 * 31 + 5);
+        let src: Vec<Complex<T>> = src64.iter().map(|c| c.cast()).collect();
+        let plan = FftPlan::<T>::new(n);
+        let mut scratch = vec![Complex::<T>::ZERO; plan.scratch_len()];
+        for dir in [Direction::Forward, Direction::Backward] {
+            for w in [1usize, 2, 5, MAX_LANES] {
+                // Scalar reference, one line at a time.
+                let mut lines: Vec<Vec<Complex<T>>> =
+                    (0..w).map(|l| src[l * n..(l + 1) * n].to_vec()).collect();
+                for line in lines.iter_mut() {
+                    plan.process_with(line, dir, &mut scratch);
+                }
+                // SoA panel: panel[t*w + l] = line l, element t.
+                let mut panel = vec![Complex::<T>::ZERO; n * w];
+                for l in 0..w {
+                    for t in 0..n {
+                        panel[t * w + l] = src[l * n + t];
+                    }
+                }
+                let mut soa_scratch = vec![Complex::<T>::ZERO; plan.soa_scratch_len(w)];
+                plan.process_soa(&mut panel, w, dir, &mut soa_scratch);
+                for l in 0..w {
+                    let got: Vec<Complex<T>> = (0..n).map(|t| panel[t * w + l]).collect();
+                    assert_eq!(
+                        bits(&got),
+                        bits(&lines[l]),
+                        "SoA lane {l}/{w} differs from scalar at n={n}, {dir:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn soa_bitwise_matches_scalar_f64() {
+        // Pow2 (even/odd stage counts), smooth, direct prime, Bluestein.
+        for n in [1usize, 2, 4, 8, 16, 64, 128, 12, 30, 100, 360, 700, 13, 61, 67, 251] {
+            check_soa::<f64>(n);
+        }
+    }
+
+    #[test]
+    fn soa_bitwise_matches_scalar_f32() {
+        for n in [1usize, 8, 32, 12, 100, 360, 13, 67] {
+            check_soa::<f32>(n);
+        }
+    }
+
+    #[test]
+    fn process_with_bitwise_matches_process() {
+        // The scratch-passing path is the allocating path, bit for bit.
+        for n in [8usize, 360, 700, 67, 251] {
+            let plan = FftPlan::<f64>::new(n);
+            let x = signal(n, n as u64 + 17);
+            for dir in [Direction::Forward, Direction::Backward] {
+                let mut a = x.clone();
+                let mut b = x.clone();
+                plan.process(&mut a, dir);
+                let mut scratch = vec![Complex64::ZERO; plan.scratch_len()];
+                // Poison the scratch: results must not depend on its contents.
+                for v in scratch.iter_mut() {
+                    *v = Complex64::new(f64::NAN, -1.0e300);
+                }
+                plan.process_with(&mut b, dir, &mut scratch);
+                assert_eq!(bits(&a), bits(&b), "process_with differs at n={n}, {dir:?}");
+            }
         }
     }
 

@@ -1,0 +1,203 @@
+//! Explicit-width `std::simd` butterfly rows — the optional fast path of
+//! the lane-batched kernels, compiled only with `--features simd` (which
+//! needs a nightly toolchain for `portable_simd`).
+//!
+//! [`rows_bf_simd`] computes, per complex lane, exactly the scalar
+//! butterfly's operations: `y = b * tw` as `(b.re*tw.re - b.im*tw.im,
+//! b.re*tw.im + b.im*tw.re)` with plain per-element multiplies and
+//! adds (no FMA contraction), then `a + y` / `a - y`. IEEE-754 makes each
+//! of those lane operations bit-deterministic, so the SIMD path is
+//! bitwise-equal to the autovectorized fallback in `fft/plan.rs` — the
+//! feature only changes speed, never results.
+//!
+//! The complex slices are reinterpreted as flat scalar slices (sound:
+//! [`Complex`] is `repr(C)` `[re, im]`), and the twiddle is pre-broadcast
+//! interleaved so no deinterleave shuffles are needed: with
+//! `twv = [tr, ti, tr, ti, ...]`, `tws = [ti, tr, ti, tr, ...]` and the
+//! alternating sign vector `sgn = [-1, +1, ...]`,
+//! `y = b_dup_re * twv + (b_dup_im * tws) * sgn` lands `y.re`/`y.im`
+//! already interleaved (`x * -1.0` is an exact IEEE negation, and
+//! `p - q == p + (-q)` exactly).
+
+use std::any::TypeId;
+use std::simd::{simd_swizzle, Simd};
+
+use super::complex::Complex;
+use super::real::Real;
+
+/// Vectorized butterfly over `w` SoA lanes. Returns `false` (touching
+/// nothing) for element types without an explicit path; the caller then
+/// runs the scalar loop.
+#[inline]
+pub(crate) fn rows_bf_simd<T: Real>(
+    a: &mut [Complex<T>],
+    b: &mut [Complex<T>],
+    tw: Option<Complex<T>>,
+) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let id = TypeId::of::<T>();
+    if id == TypeId::of::<f64>() {
+        // SAFETY: T == f64 (checked above) and Complex<T> is repr(C)
+        // [re, im], so w complexes are exactly 2w contiguous f64s.
+        let (af, bf) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(a.as_mut_ptr() as *mut f64, a.len() * 2),
+                std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut f64, b.len() * 2),
+            )
+        };
+        bf_rows_f64(af, bf, tw.map(|c| (c.re.to_f64(), c.im.to_f64())));
+        true
+    } else if id == TypeId::of::<f32>() {
+        // SAFETY: as above with T == f32. `to_f64` is exact on f32 values
+        // and the `as f32` round-trip restores the original bits.
+        let (af, bf) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(a.as_mut_ptr() as *mut f32, a.len() * 2),
+                std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut f32, b.len() * 2),
+            )
+        };
+        bf_rows_f32(af, bf, tw.map(|c| (c.re.to_f64() as f32, c.im.to_f64() as f32)));
+        true
+    } else {
+        false
+    }
+}
+
+macro_rules! bf_rows_impl {
+    ($name:ident, $ty:ty, $lanes:expr) => {
+        /// Butterfly over flat interleaved rows (`len == 2 * w`), vector
+        /// main loop plus a scalar tail identical to the fallback kernel.
+        fn $name(a: &mut [$ty], b: &mut [$ty], tw: Option<($ty, $ty)>) {
+            const L: usize = $lanes;
+            let n = a.len();
+            let main = n - n % L;
+            match tw {
+                None => {
+                    let mut i = 0;
+                    while i < main {
+                        let av = Simd::<$ty, L>::from_slice(&a[i..i + L]);
+                        let bv = Simd::<$ty, L>::from_slice(&b[i..i + L]);
+                        (av + bv).copy_to_slice(&mut a[i..i + L]);
+                        (av - bv).copy_to_slice(&mut b[i..i + L]);
+                        i += L;
+                    }
+                    while i < n {
+                        let (x, y) = (a[i], b[i]);
+                        a[i] = x + y;
+                        b[i] = x - y;
+                        i += 1;
+                    }
+                }
+                Some((tr, ti)) => {
+                    let mut twv = [tr; L];
+                    let mut tws = [ti; L];
+                    let mut sgn: [$ty; L] = [-1.0; L];
+                    let mut k = 1;
+                    while k < L {
+                        twv[k] = ti;
+                        tws[k] = tr;
+                        sgn[k] = 1.0;
+                        k += 2;
+                    }
+                    let (twv, tws, sgn) = (
+                        Simd::<$ty, L>::from_array(twv),
+                        Simd::<$ty, L>::from_array(tws),
+                        Simd::<$ty, L>::from_array(sgn),
+                    );
+                    let mut i = 0;
+                    while i < main {
+                        let av = Simd::<$ty, L>::from_slice(&a[i..i + L]);
+                        let bv = Simd::<$ty, L>::from_slice(&b[i..i + L]);
+                        // [re0,re0,re1,re1,...] and [im0,im0,im1,im1,...].
+                        let bre = simd_swizzle!(bv, [0, 0, 2, 2, 4, 4, 6, 6]);
+                        let bim = simd_swizzle!(bv, [1, 1, 3, 3, 5, 5, 7, 7]);
+                        // Interleaved [y.re, y.im, ...]: even lanes get
+                        // re*tr - im*ti, odd lanes re*ti + im*tr.
+                        let y = bre * twv + (bim * tws) * sgn;
+                        (av + y).copy_to_slice(&mut a[i..i + L]);
+                        (av - y).copy_to_slice(&mut b[i..i + L]);
+                        i += L;
+                    }
+                    while i < n {
+                        // Scalar complex tail, same op order as the vector
+                        // body and the fallback kernel.
+                        let (br, bi) = (b[i], b[i + 1]);
+                        let yr = br * tr - bi * ti;
+                        let yi = br * ti + bi * tr;
+                        let (ar, ai) = (a[i], a[i + 1]);
+                        a[i] = ar + yr;
+                        a[i + 1] = ai + yi;
+                        b[i] = ar - yr;
+                        b[i + 1] = ai - yi;
+                        i += 2;
+                    }
+                }
+            }
+        }
+    };
+}
+
+bf_rows_impl!(bf_rows_f64, f64, 8);
+bf_rows_impl!(bf_rows_f32, f32, 8);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::{Complex32, Complex64};
+
+    fn rows64(seed: u64, w: usize) -> (Vec<Complex64>, Vec<Complex64>) {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        };
+        let a = (0..w).map(|_| Complex64::new(next(), next())).collect();
+        let b = (0..w).map(|_| Complex64::new(next(), next())).collect();
+        (a, b)
+    }
+
+    /// The SIMD path must be bitwise-equal to the scalar butterfly at
+    /// every lane width, including the scalar-tail widths.
+    #[test]
+    fn simd_bitwise_matches_scalar() {
+        for w in 1..=16usize {
+            for tw in [None, Some(Complex64::new(0.8, -0.6)), Some(Complex64::new(-0.36, 0.48))] {
+                let (a0, b0) = rows64(w as u64 * 7 + 1, w);
+                let (mut av, mut bv) = (a0.clone(), b0.clone());
+                assert!(rows_bf_simd(&mut av, &mut bv, tw));
+                let (mut asc, mut bsc) = (a0, b0);
+                for l in 0..w {
+                    match tw {
+                        None => {
+                            let (x, y) = (asc[l], bsc[l]);
+                            asc[l] = x + y;
+                            bsc[l] = x - y;
+                        }
+                        Some(t) => {
+                            let x = asc[l];
+                            let y = bsc[l] * t;
+                            asc[l] = x + y;
+                            bsc[l] = x - y;
+                        }
+                    }
+                }
+                for l in 0..w {
+                    assert_eq!(av[l].re.to_bits(), asc[l].re.to_bits(), "w={w} l={l}");
+                    assert_eq!(av[l].im.to_bits(), asc[l].im.to_bits(), "w={w} l={l}");
+                    assert_eq!(bv[l].re.to_bits(), bsc[l].re.to_bits(), "w={w} l={l}");
+                    assert_eq!(bv[l].im.to_bits(), bsc[l].im.to_bits(), "w={w} l={l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_path_runs() {
+        let mut a = vec![Complex32::new(1.0, 2.0); 5];
+        let mut b = vec![Complex32::new(0.5, -0.25); 5];
+        assert!(rows_bf_simd(&mut a, &mut b, Some(Complex32::new(0.6, 0.8))));
+        assert_eq!(a[0].re, 1.0 + (0.5 * 0.6 - -0.25 * 0.8));
+    }
+}

@@ -51,7 +51,10 @@
 //!   **generic over the [`fft::Real`] precision**: every plan, twiddle
 //!   table and buffer is `f32` or `f64` by type parameter
 //!   (`Complex32`/`Complex64` elements), and single precision halves every
-//!   wire byte of the redistribution exchange.
+//!   wire byte of the redistribution exchange. The engine shape
+//!   ([`fft::EngineCfg`]: SoA lane width × per-rank pool threads) batches
+//!   independent lines through lockstep kernels and a preallocated
+//!   [`fft::WorkerPool`], bitwise identical to the scalar path.
 //! * [`pfft`] — the parallel FFT driver: slab, pencil and general
 //!   `(d-1)`-dimensional decompositions, forward/backward, per-stage timers,
 //!   and the `ExecMode` selector (blocking vs pipelined overlap); the plan
@@ -61,7 +64,8 @@
 //! * [`netmodel`] — an analytic performance model of the Shaheen II Cray
 //!   XC40 used to regenerate the paper's figures at full scale.
 //! * [`tune`] — the autotuning planner: budgeted search of the
-//!   `(method × exec × overlap-depth × transport × grid)` trade space at
+//!   `(method × exec × overlap-depth × transport × grid × lanes ×
+//!   threads)` trade space at
 //!   plan time (real plans, warm in-situ measurement through an
 //!   injectable [`tune::Measurer`]), with winners persisted as versioned,
 //!   staleness-guarded **wisdom** (`WISDOM.json`) keyed by problem
@@ -79,6 +83,10 @@
 //!   Chrome-trace/Perfetto timeline plus a cross-rank imbalance report
 //!   (`repro run --trace PATH`). Disabled tracing costs one relaxed
 //!   atomic load per site.
+
+// Optional explicit-width SIMD butterflies (`--features simd`) use
+// `std::simd`, which is nightly-only; the default build stays stable.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod cli;
 pub mod coordinator;

@@ -4,16 +4,18 @@
 //!
 //! * `repro run [--global 64,64,64] [--ranks 4] [--grid 2,2] [--kind r2c|c2c]`
 //!   `[--method alltoallw|traditional|auto] [--engine native|xla]`
-//!   `[--dtype f32|f64] [--transport mailbox|window|auto] [--inner 3]`
-//!   `[--outer 5] [--tune] [--trace PATH]`
+//!   `[--lanes W|auto] [--threads N|auto] [--dtype f32|f64]`
+//!   `[--transport mailbox|window|auto] [--inner 3] [--outer 5] [--tune]`
+//!   `[--trace PATH]`
 //!   — execute a distributed transform on the simulated world and print the
 //!   timing breakdown (the paper's measurement protocol). `--tune` (or any
 //!   knob spelled `auto`) resolves the configuration through the
 //!   autotuning planner first. `--trace PATH` records per-rank event
 //!   traces and writes Chrome-trace JSON plus an imbalance report.
 //! * `repro tune [--budget tiny|normal|full] [--wisdom PATH] [--force]`
-//!   — search the (method × exec × depth × transport × grid) space for a
-//!   problem, print the ranked table, persist the winner as wisdom.
+//!   — search the (method × exec × depth × transport × grid × engine)
+//!   space for a problem, print the ranked table, persist the winner as
+//!   wisdom.
 //! * `repro figure <6..11>` — print the netmodel reproduction of a paper
 //!   figure as a TSV table.
 //! * `repro trend [--dir .] [--best]` — aggregate every `BENCH_*.json`
@@ -66,8 +68,9 @@ fn print_help() {
          USAGE:\n\
          \x20 repro run [--global N,N,N] [--ranks R] [--grid G,G] [--kind r2c|c2c]\n\
          \x20           [--method alltoallw|traditional|auto] [--engine native|xla]\n\
-         \x20           [--dtype f32|f64] [--exec blocking|pipelined|auto]\n\
-         \x20           [--overlap-depth K] [--transport mailbox|window|auto]\n\
+         \x20           [--lanes W|auto] [--threads N|auto] [--dtype f32|f64]\n\
+         \x20           [--exec blocking|pipelined|auto] [--overlap-depth K]\n\
+         \x20           [--transport mailbox|window|auto]\n\
          \x20           [--inner I] [--outer O] [--json]\n\
          \x20           [--tune] [--budget tiny|normal|full] [--wisdom PATH]\n\
          \x20           [--trace PATH]\n\
@@ -103,9 +106,21 @@ fn print_help() {
          \x20            buffers, zero per-message allocation, no mailbox traffic\n\
          \x20            on the payload path (requires --method alltoallw)\n\
          \n\
+         SERIAL ENGINE (--lanes, --threads; native engine only):\n\
+         \x20 lanes      SoA lane width of the batched butterfly kernels: W\n\
+         \x20            independent lines advance through each stage in\n\
+         \x20            lockstep (1 = scalar path, up to 16; bitwise-identical\n\
+         \x20            results at every width)\n\
+         \x20 threads    per-rank worker-pool size: independent lines/row\n\
+         \x20            blocks of each axis pass split across N preallocated\n\
+         \x20            workers (1 = no pool; bitwise-identical results at\n\
+         \x20            every count). Both accept `auto` to let the tuner\n\
+         \x20            pick from the budget's ladder\n\
+         \n\
          AUTOTUNING (repro tune, repro run --tune):\n\
          \x20 the planner enumerates (method x exec x overlap-depth x transport\n\
-         \x20 x grid-shape) candidates, builds each real plan, measures warm\n\
+         \x20 x grid-shape x lanes x threads) candidates, builds each real\n\
+         \x20 plan, measures warm\n\
          \x20 forward+backward pairs in-situ and picks the fastest; winners\n\
          \x20 persist as wisdom (default WISDOM.json, override --wisdom) keyed\n\
          \x20 by (kind, dtype, mesh, ranks), so a repeat problem plans\n\
@@ -157,6 +172,8 @@ fn cmd_run(args: &Args) {
             "kind",
             "method",
             "engine",
+            "lanes",
+            "threads",
             "dtype",
             "exec",
             "overlap-depth",
@@ -193,6 +210,24 @@ fn cmd_run(args: &Args) {
         "xla" => EngineKind::Xla,
         other => panic!("--engine: unknown {other}"),
     };
+    // The engine-shape knobs follow the same Auto convention as the
+    // redistribution knobs: `--tune` flips unspecified ones to auto.
+    let lanes: Knob<usize> = match args.get("lanes") {
+        Some("auto") => Knob::Auto,
+        None if tune => Knob::Auto,
+        s => s
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--lanes: not a number: {v}")))
+            .unwrap_or(1)
+            .into(),
+    };
+    let threads: Knob<usize> = match args.get("threads") {
+        Some("auto") => Knob::Auto,
+        None if tune => Knob::Auto,
+        s => s
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--threads: not a number: {v}")))
+            .unwrap_or(1)
+            .into(),
+    };
     let dtype = match args.get("dtype") {
         None => Dtype::F64,
         Some(s) => Dtype::parse(s).unwrap_or_else(|| panic!("--dtype: unknown {s} (f32|f64)")),
@@ -227,7 +262,12 @@ fn cmd_run(args: &Args) {
     {
         panic!("--transport window requires --method alltoallw (the traditional baseline's contiguous alltoallv stays on the mailbox)");
     }
-    let tuning = tune || method.is_auto() || exec.is_auto() || transport.is_auto();
+    let tuning = tune
+        || method.is_auto()
+        || exec.is_auto()
+        || transport.is_auto()
+        || lanes.is_auto()
+        || threads.is_auto();
     let wisdom: Option<PathBuf> = match args.get("wisdom") {
         Some(p) => Some(PathBuf::from(p)),
         None if tuning => Some(PathBuf::from("WISDOM.json")),
@@ -244,6 +284,8 @@ fn cmd_run(args: &Args) {
         exec,
         transport,
         engine,
+        lanes,
+        threads,
         dtype,
         inner: args.get_usize("inner", 3),
         outer: args.get_usize("outer", 5),
@@ -279,9 +321,11 @@ fn cmd_run(args: &Args) {
         return;
     }
     println!(
-        "# global={global:?} ranks={ranks} grid={run_grid:?} kind={kind:?} method={} exec={exec_label} engine={} dtype={} transport={} tuned={}",
+        "# global={global:?} ranks={ranks} grid={run_grid:?} kind={kind:?} method={} exec={exec_label} engine={} lanes={} threads={} dtype={} transport={} tuned={}",
         rep.method,
         engine.name(),
+        rep.lanes,
+        rep.threads,
         rep.dtype,
         rep.transport,
         rep.tuned
@@ -366,6 +410,8 @@ fn cmd_tune(args: &Args) {
                     .int("overlap_depth", e.candidate.exec.depth() as u64)
                     .str("transport", e.candidate.transport.name())
                     .raw("grid", json_usize_array(&e.candidate.grid))
+                    .int("lanes", e.candidate.engine.lanes as u64)
+                    .int("threads", e.candidate.engine.threads as u64)
                     .num("total_s", e.seconds)
                     .str("dtype", report.signature.dtype)
                     .render()
@@ -399,7 +445,7 @@ fn cmd_tune(args: &Args) {
         );
         return;
     }
-    println!("rank\tmethod\texec\ttransport\tgrid\tseconds_per_pair\tvs_best");
+    println!("rank\tmethod\texec\ttransport\tgrid\tengine\tseconds_per_pair\tvs_best");
     let best = report.winner().seconds;
     for (i, e) in report.entries.iter().enumerate() {
         let grid: Vec<String> = e.candidate.grid.iter().map(|n| n.to_string()).collect();
@@ -409,12 +455,13 @@ fn cmd_tune(args: &Args) {
             e.candidate.exec.name().to_string()
         };
         println!(
-            "{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.2}x",
+            "{}\t{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.2}x",
             i + 1,
             e.candidate.method.name(),
             exec,
             e.candidate.transport.name(),
             grid.join("x"),
+            e.candidate.engine.label(),
             e.seconds,
             e.seconds / best
         );

@@ -584,6 +584,12 @@ impl<T: Real> PfftPlan<T> {
     /// sub-exchange completes, while later chunks are still in flight.
     /// The per-line transforms are identical either way, so the spectra
     /// are bitwise equal across modes.
+    ///
+    /// Lane batching and the per-rank worker pool live *inside*
+    /// [`SerialFft::c2c`] (see [`crate::fft::EngineCfg`]), so every chunk
+    /// callback here is transparently batched/parallelized too — the
+    /// pipelined per-chunk compute overlaps a pooled FFT with the
+    /// in-flight sub-exchanges without any code on this side.
     fn descend(&mut self, engine: &mut dyn SerialFft<T>, dir: Direction) {
         let r = self.dims.len();
         for t in (0..r).rev() {

@@ -38,6 +38,12 @@
 //! When no pipeline axis exists (2-D arrays: both axes are exchanged) or
 //! `chunks == 1`, the plan degrades gracefully to the one-shot blocking
 //! exchange.
+//!
+//! The per-chunk compute callback composes with the serial engine's lane
+//! batching and worker pool ([`crate::fft::EngineCfg`]): a pooled
+//! [`crate::fft::NativeFft`] splits each chunk's independent lines across
+//! its workers while later sub-exchanges stay on the wire, multiplying
+//! the overlap — the exchange hides behind a *faster* compute stage.
 
 use std::collections::VecDeque;
 

@@ -15,7 +15,10 @@
 //!
 //! * `Fft` — each serial-FFT axis pass in [`crate::pfft`] (labels
 //!   `axis0..`, `r2c`, `c2r`, `chunk_c2c`/`chunk_c2c_inv` for pipelined
-//!   per-chunk compute);
+//!   per-chunk compute), plus one `fft_pool_worker` span per engine pool
+//!   worker per threaded job, recorded on the worker's own thread-local
+//!   ring (per-thread depth) and absorbed into the rank ring at pool join
+//!   ([`SpanSink`], [`drain_local_into`], [`absorb_sink`]);
 //! * `Pack` — pack/unpack through flattened runs and fused/one-copy
 //!   transfer-plan executions in [`crate::simmpi::datatype`];
 //! * `Exchange` — exchange initiation (`post`) and whole blocking or
@@ -372,6 +375,85 @@ pub fn take_local() -> (Vec<Span>, u64) {
         r.cat_depth = [0; NUM_CATEGORIES];
         (spans, dropped)
     })
+}
+
+/// A fixed-capacity span buffer bridging pool worker threads and their
+/// rank thread. Workers drain their thread-local rings into a sink
+/// ([`drain_local_into`]) at the end of each pool job; the rank thread
+/// absorbs the sink into its own ring ([`absorb_sink`]) at job join.
+/// Preallocated once (at pool construction), so the handoff never
+/// allocates in steady state — overflow is counted, not grown.
+pub struct SpanSink {
+    spans: Vec<Span>,
+    dropped: u64,
+}
+
+impl SpanSink {
+    /// Build a sink holding at most `cap` spans between absorptions.
+    pub fn with_capacity(cap: usize) -> SpanSink {
+        SpanSink { spans: Vec::with_capacity(cap), dropped: 0 }
+    }
+
+    /// Spans currently buffered.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+}
+
+/// Move the calling thread's recorded spans into `sink` (worker side of
+/// the pool handoff). The caller must have closed all its spans — the
+/// ring's depth counters are expected to be back at zero. Never allocates:
+/// spans beyond the sink's capacity are dropped and counted.
+pub fn drain_local_into(sink: &mut SpanSink) {
+    RING.with(|r| {
+        let mut r = r.borrow_mut();
+        if r.dropped > 0 {
+            let next = r.next;
+            r.spans.rotate_left(next);
+            sink.dropped += r.dropped;
+        }
+        let cap = sink.spans.capacity();
+        for &s in r.spans.iter() {
+            if sink.spans.len() < cap {
+                sink.spans.push(s);
+            } else {
+                sink.dropped += 1;
+            }
+        }
+        r.spans.clear();
+        r.next = 0;
+        r.dropped = 0;
+    });
+}
+
+/// Push spans drained from a pool worker into the calling (rank) thread's
+/// ring, re-based under the caller's **current** nesting depth: a span
+/// that was outermost on the worker becomes a child of whatever span the
+/// rank thread has open right now, so per-category outermost sums (the
+/// imbalance report) never double-count worker time that an enclosing
+/// rank-side span already covers. The rank thread's own depth counters
+/// are not touched — worker spans can never corrupt rank-side nesting.
+pub fn absorb_sink(sink: &mut SpanSink) {
+    if sink.spans.is_empty() && sink.dropped == 0 {
+        return;
+    }
+    RING.with(|r| {
+        let mut r = r.borrow_mut();
+        let depth = r.depth;
+        let cat_depth = r.cat_depth;
+        for mut s in sink.spans.drain(..) {
+            s.depth = s.depth.saturating_add(depth);
+            s.cat_depth = s.cat_depth.saturating_add(cat_depth[s.cat.index()]);
+            r.push(s);
+        }
+        r.dropped += sink.dropped;
+        sink.dropped = 0;
+    });
 }
 
 fn put_u64(v: &mut Vec<u8>, x: u64) {

@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
 
-use crate::fft::{Complex, NativeFft, Real};
+use crate::fft::{Complex, EngineCfg, NativeFft, Real};
 use crate::pfft::{ExecMode, Kind, PfftPlan, RedistMethod};
 use crate::simmpi::collective::ReduceOp;
 use crate::simmpi::{dims_create, Comm, Transport};
@@ -80,11 +80,33 @@ impl Budget {
 
     /// Hard cap on the candidate count; enumeration beyond it is
     /// truncated deterministically and reported, never silently.
+    /// (Raised when the engine axis landed so lane/thread variants do
+    /// not crowd out grid coverage; engines iterate innermost, so a
+    /// truncation always keeps whole engine sweeps of leading combos.)
     pub fn max_candidates(self) -> usize {
         match self {
-            Budget::Tiny => 12,
-            Budget::Normal => 32,
-            Budget::Full => 96,
+            Budget::Tiny => 16,
+            Budget::Normal => 64,
+            Budget::Full => 192,
+        }
+    }
+
+    /// SoA lane widths of the serial-engine axis.
+    pub fn lane_ladder(self) -> &'static [usize] {
+        match self {
+            Budget::Tiny => &[1, 8],
+            Budget::Normal => &[1, 8],
+            Budget::Full => &[1, 4, 8],
+        }
+    }
+
+    /// Per-rank pool thread counts of the serial-engine axis. Tiny skips
+    /// threading (CI smoke runs many simulated ranks on few cores).
+    pub fn thread_ladder(self) -> &'static [usize] {
+        match self {
+            Budget::Tiny => &[1],
+            Budget::Normal => &[1, 2],
+            Budget::Full => &[1, 2, 4],
         }
     }
 
@@ -106,17 +128,27 @@ pub struct Candidate {
     pub transport: Transport,
     /// Processor-grid extents (a factorization of the world size).
     pub grid: Vec<usize>,
+    /// Serial-engine shape (SoA lanes × pool threads).
+    pub engine: EngineCfg,
 }
 
 impl Candidate {
-    /// Stable display/report label, e.g. `alltoallw/pipelined-d4/window/g2x2`.
+    /// Stable display/report label, e.g.
+    /// `alltoallw/pipelined-d4/window/g2x2/l8t2`.
     pub fn label(&self) -> String {
         let exec = match self.exec {
             ExecMode::Blocking => "blocking".to_string(),
             ExecMode::Pipelined { depth } => format!("pipelined-d{depth}"),
         };
         let grid: Vec<String> = self.grid.iter().map(|n| n.to_string()).collect();
-        format!("{}/{}/{}/g{}", self.method.name(), exec, self.transport.name(), grid.join("x"))
+        format!(
+            "{}/{}/{}/g{}/{}",
+            self.method.name(),
+            exec,
+            self.transport.name(),
+            grid.join("x"),
+            self.engine.label()
+        )
     }
 }
 
@@ -181,6 +213,11 @@ pub struct TuneSpace {
     pub execs: Vec<ExecMode>,
     pub transports: Vec<Transport>,
     pub grids: Vec<Vec<usize>>,
+    /// Serial-engine SoA lane widths (cross product with `thread_opts`
+    /// forms the engine axis).
+    pub lane_opts: Vec<usize>,
+    /// Serial-engine per-rank pool thread counts.
+    pub thread_opts: Vec<usize>,
     /// Deterministic truncation cap (from the budget).
     pub max_candidates: usize,
 }
@@ -205,6 +242,8 @@ impl TuneSpace {
             execs,
             transports,
             grids: enumerate_grids(global, ranks, budget),
+            lane_opts: budget.lane_ladder().to_vec(),
+            thread_opts: budget.thread_ladder().to_vec(),
             max_candidates: budget.max_candidates(),
         }
     }
@@ -229,6 +268,16 @@ impl TuneSpace {
         self.grids = vec![g];
     }
 
+    /// Pin the engine lane axis to one SoA width.
+    pub fn pin_lanes(&mut self, lanes: usize) {
+        self.lane_opts = vec![lanes];
+    }
+
+    /// Pin the engine thread axis to one pool size.
+    pub fn pin_threads(&mut self, threads: usize) {
+        self.thread_opts = vec![threads];
+    }
+
     /// The pruned cross product, grid-major so a cap truncation keeps
     /// full method/exec/transport coverage of the leading grids. Returns
     /// `(candidates, skipped)` where `skipped` counts valid combinations
@@ -249,10 +298,20 @@ impl TuneSpace {
                         {
                             continue;
                         }
-                        if out.len() < self.max_candidates {
-                            out.push(Candidate { method, exec, transport, grid: grid.clone() });
-                        } else {
-                            skipped += 1;
+                        for &lanes in &self.lane_opts {
+                            for &threads in &self.thread_opts {
+                                if out.len() < self.max_candidates {
+                                    out.push(Candidate {
+                                        method,
+                                        exec,
+                                        transport,
+                                        grid: grid.clone(),
+                                        engine: EngineCfg::new(lanes, threads),
+                                    });
+                                } else {
+                                    skipped += 1;
+                                }
+                            }
                         }
                     }
                 }
@@ -366,7 +425,9 @@ fn measure_candidate<T: Real>(
         cand.exec,
         cand.transport,
     );
-    let mut engine = NativeFft::<T>::new();
+    // Build the engine from the candidate's shape: winners must be
+    // measured with exactly the engine they will run with.
+    let mut engine = NativeFft::<T>::with_cfg(cand.engine);
     let ilen = plan.input_len();
     let olen = plan.output_len();
     let seed = comm.rank() as f64 + 1.0;
@@ -516,6 +577,12 @@ impl<T: Real> PfftPlan<T> {
     /// The returned plan is exactly what
     /// [`PfftPlan::with_transport`] builds for the winning
     /// configuration — bitwise-identical transforms, no tuner residue.
+    ///
+    /// The plan does not own a serial engine, so the winner's
+    /// lanes/threads shape is not carried here; callers who want it
+    /// should run [`tune_plan`] themselves and build
+    /// `NativeFft::with_cfg(report.winner().candidate.engine)` (the
+    /// driver's `resolve_auto` does exactly that).
     pub fn tuned(
         comm: &Comm,
         global: &[usize],
@@ -604,10 +671,14 @@ mod tests {
             }
             assert_eq!(c.grid.iter().product::<usize>(), 4);
         }
-        // Both methods, both transports and the pipelined ladder appear.
+        // Both methods, both transports, the pipelined ladder and the
+        // engine axis (batched lanes, pool threads) all appear.
         assert!(cands.iter().any(|c| c.method == RedistMethod::Traditional));
         assert!(cands.iter().any(|c| c.transport == Transport::Window));
         assert!(cands.iter().any(|c| matches!(c.exec, ExecMode::Pipelined { .. })));
+        assert!(cands.iter().any(|c| c.engine.lanes > 1));
+        assert!(cands.iter().any(|c| c.engine.threads > 1));
+        assert!(cands.iter().any(|c| c.engine == EngineCfg::default()));
         // Deterministic: two enumerations agree exactly.
         let (again, _) = space.candidates();
         assert_eq!(cands, again);
@@ -636,10 +707,32 @@ mod tests {
         space.pin_exec(ExecMode::Pipelined { depth: 7 });
         space.pin_transport(Transport::Window);
         space.pin_grid(vec![2, 2]);
+        space.pin_lanes(8);
+        space.pin_threads(2);
         let (cands, skipped) = space.candidates();
         assert_eq!(skipped, 0);
         assert_eq!(cands.len(), 1);
-        assert_eq!(cands[0].label(), "alltoallw/pipelined-d7/window/g2x2");
+        assert_eq!(cands[0].label(), "alltoallw/pipelined-d7/window/g2x2/l8t2");
+    }
+
+    #[test]
+    fn engine_axis_enumerates_and_pins_independently() {
+        let mut space = TuneSpace::new(&[16, 12, 10], 4, Budget::Normal);
+        space.pin_method(RedistMethod::Alltoallw);
+        space.pin_exec(ExecMode::Blocking);
+        space.pin_transport(Transport::Mailbox);
+        space.pin_grid(vec![2, 2]);
+        // Unpinned engine axis: the full lanes × threads cross product.
+        let (cands, _) = space.candidates();
+        assert_eq!(
+            cands.len(),
+            Budget::Normal.lane_ladder().len() * Budget::Normal.thread_ladder().len()
+        );
+        // Pinning one engine knob leaves the other enumerable.
+        space.pin_threads(1);
+        let (cands, _) = space.candidates();
+        assert_eq!(cands.len(), Budget::Normal.lane_ladder().len());
+        assert!(cands.iter().all(|c| c.engine.threads == 1));
     }
 
     #[test]

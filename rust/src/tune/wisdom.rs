@@ -101,6 +101,11 @@ pub struct WisdomEntry {
     pub transport: String,
     /// Winning processor-grid extents.
     pub grid: Vec<usize>,
+    /// Winning serial-engine SoA lane width (1 = scalar kernels; files
+    /// written before the engine axis existed read back as 1).
+    pub lanes: usize,
+    /// Winning serial-engine pool thread count (1 = single-threaded).
+    pub threads: usize,
     /// Measured seconds per forward+backward pair of the winner.
     pub seconds: f64,
     /// Budget preset the search ran under.
@@ -126,7 +131,10 @@ impl WisdomEntry {
         if self.grid.is_empty() || self.grid.contains(&0) {
             return None;
         }
-        Some(Candidate { method, exec, transport, grid: self.grid.clone() })
+        // EngineCfg::new clamps out-of-range values, so a hand-edited
+        // lanes/threads never poisons the recall.
+        let engine = crate::fft::EngineCfg::new(self.lanes.max(1), self.threads.max(1));
+        Some(Candidate { method, exec, transport, grid: self.grid.clone(), engine })
     }
 }
 
@@ -175,6 +183,12 @@ impl Wisdom {
                 .map(|v| v.as_num().map(|x| x as usize))
                 .collect::<Option<Vec<usize>>>()
                 .ok_or(format!("wisdom: entry {i}: non-numeric grid extent"))?;
+            // Engine axis fields are read leniently (default 1 = the
+            // scalar single-threaded engine) so wisdom files written
+            // before the axis existed keep working.
+            let opt = |field: &str| -> Option<usize> {
+                row.get(field).and_then(|v| v.as_num()).map(|x| x as usize)
+            };
             entries.push(WisdomEntry {
                 signature: s("signature")?,
                 method: s("method")?,
@@ -182,6 +196,8 @@ impl Wisdom {
                 overlap_depth: n("overlap_depth")? as usize,
                 transport: s("transport")?,
                 grid,
+                lanes: opt("lanes").unwrap_or(1),
+                threads: opt("threads").unwrap_or(1),
                 seconds: n("seconds")?,
                 budget: s("budget")?,
                 created_unix: n("created_unix")? as u64,
@@ -211,6 +227,8 @@ impl Wisdom {
                     .int("overlap_depth", e.overlap_depth as u64)
                     .str("transport", &e.transport)
                     .raw("grid", json_usize_array(&e.grid))
+                    .int("lanes", e.lanes as u64)
+                    .int("threads", e.threads as u64)
                     .num("seconds", e.seconds)
                     .str("budget", &e.budget)
                     .int("created_unix", e.created_unix)
@@ -261,6 +279,8 @@ impl Wisdom {
             overlap_depth: winner.exec.depth(),
             transport: winner.transport.name().to_string(),
             grid: winner.grid.clone(),
+            lanes: winner.engine.lanes,
+            threads: winner.engine.threads,
             seconds,
             budget: budget.to_string(),
             created_unix: now_unix(),
@@ -280,6 +300,8 @@ mod tests {
             overlap_depth: 4,
             transport: "window".to_string(),
             grid: vec![2, 2],
+            lanes: 8,
+            threads: 2,
             seconds: secs,
             budget: "normal".to_string(),
             created_unix: created,
@@ -334,6 +356,7 @@ mod tests {
             exec: ExecMode::Blocking,
             transport: Transport::Mailbox,
             grid: vec![2],
+            engine: crate::fft::EngineCfg::new(4, 2),
         };
         w.record(&sig, &cand, 2.0, "tiny");
         let better = Candidate { transport: Transport::Window, ..cand.clone() };
@@ -342,6 +365,24 @@ mod tests {
         assert_eq!(w.entries[0].transport, "window");
         assert_eq!(w.entries[0].seconds, 1.0);
         assert_eq!(w.entries[0].overlap_depth, 0);
+        assert_eq!((w.entries[0].lanes, w.entries[0].threads), (4, 2));
+    }
+
+    #[test]
+    fn legacy_entries_without_engine_fields_read_as_scalar() {
+        // A file written before the engine axis existed: no lanes/threads.
+        let text = r#"{
+  "wisdom": 1,
+  "entries": [
+    {"signature": "k", "method": "alltoallw", "exec": "blocking",
+     "overlap_depth": 0, "transport": "mailbox", "grid": [2],
+     "seconds": 1.0, "budget": "tiny", "created_unix": 1700000000}
+  ]
+}"#;
+        let w = Wisdom::from_json(text).unwrap();
+        assert_eq!((w.entries[0].lanes, w.entries[0].threads), (1, 1));
+        let c = w.entries[0].candidate().unwrap();
+        assert_eq!(c.engine, crate::fft::EngineCfg::default());
     }
 
     #[test]
@@ -352,6 +393,7 @@ mod tests {
         assert_eq!(c.exec, ExecMode::Pipelined { depth: 4 });
         assert_eq!(c.transport, Transport::Window);
         assert_eq!(c.grid, vec![2, 2]);
+        assert_eq!((c.engine.lanes, c.engine.threads), (8, 2));
         // Unknown spellings are a miss, not a panic.
         let bad = WisdomEntry { method: "quantum".to_string(), ..sample_entry("k", 1.0, 0) };
         assert!(bad.candidate().is_none());

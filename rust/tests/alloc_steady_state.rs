@@ -117,6 +117,57 @@ fn steady_state_blocking_redist_plan_single_rank_never_allocates() {
 }
 
 #[test]
+fn steady_state_pooled_batched_fft_never_allocates() {
+    // The lane-batched + multithreaded serial engine: after one warmup
+    // pass per (axis, direction) — planner cache primed, per-worker
+    // panels/scratch grown, pool sinks preallocated — steady-state
+    // transforms allocate nothing, on the rank thread *and* on every pool
+    // worker (each asserts its own thread-local counter via a broadcast
+    // probe). Lengths cover pow2 (64), mixed-radix (6) and Bluestein (67).
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use a2wfft::fft::{Complex, Direction, EngineCfg, NativeFft, SerialFft};
+
+    let shape = [6usize, 67, 64];
+    let total: usize = shape.iter().product();
+    let mut data: Vec<Complex<f64>> =
+        (0..total).map(|k| Complex::new((k as f64 * 0.61).sin(), (k as f64 * 0.23).cos())).collect();
+    let mut eng = NativeFft::<f64>::with_cfg(EngineCfg::new(8, 4));
+    let nthreads = eng.pool().threads();
+    assert_eq!(nthreads, 4, "pool must carry the configured thread count");
+    // Warmup: every axis, both directions.
+    for dir in [Direction::Forward, Direction::Backward] {
+        for axis in 0..3 {
+            eng.c2c(&mut data, &shape, axis, dir);
+        }
+    }
+    // Snapshot every thread's allocation counter (a broadcast runs the
+    // probe once per pool thread, worker id = slot index).
+    fn probe(eng: &NativeFft<f64>, into: &[AtomicU64]) {
+        eng.pool().broadcast(&|wid, _| {
+            into[wid].store(allocs_on_this_thread(), Ordering::SeqCst);
+        });
+    }
+    let before: Vec<AtomicU64> = (0..nthreads).map(|_| AtomicU64::new(0)).collect();
+    let after: Vec<AtomicU64> = (0..nthreads).map(|_| AtomicU64::new(0)).collect();
+    probe(&eng, &before);
+    for _ in 0..3 {
+        for axis in 0..3 {
+            eng.c2c(&mut data, &shape, axis, Direction::Forward);
+            eng.c2c(&mut data, &shape, axis, Direction::Backward);
+        }
+    }
+    probe(&eng, &after);
+    for wid in 0..nthreads {
+        let delta = after[wid].load(Ordering::SeqCst) - before[wid].load(Ordering::SeqCst);
+        assert_eq!(
+            delta, 0,
+            "thread {wid}: steady-state pooled transforms allocated {delta} times"
+        );
+    }
+}
+
+#[test]
 fn steady_state_window_transport_multi_rank_never_allocates() {
     // The one-copy window transport has *no payload buffers at all*: after
     // the exposure-hub map warms its capacity, multi-rank executions are

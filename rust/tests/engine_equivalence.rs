@@ -1,0 +1,157 @@
+//! Serial-engine equivalence: every `EngineCfg` (lane-batched SoA
+//! kernels, worker pool, and their combination) must produce **bitwise**
+//! the same transforms as the scalar single-threaded reference engine.
+//!
+//! This is the acceptance gate of the vectorized+multithreaded engine:
+//! the SoA kernels replay the scalar per-line operation order (identical
+//! floating-point dataflow, only the schedule across independent lines
+//! changes) and pool chunks partition disjoint lines, so there is no
+//! tolerance here — `to_bits` equality, across:
+//!
+//! * plan kinds: pow2, mixed-radix smooth, direct prime, Bluestein prime;
+//! * both precisions (`f32`/`f64`);
+//! * thread counts {1, 2, 4} x lane widths {2, 4, 8, MAX_LANES};
+//! * contiguous and strided axes, multi-axis sweeps, r2c/c2r.
+
+use a2wfft::fft::{Complex, Direction, EngineCfg, NativeFft, Real, SerialFft, MAX_LANES};
+
+/// Deterministic pseudo-random complex array (no external RNG crates).
+fn test_data<T: Real>(len: usize, seed: u64) -> Vec<Complex<T>> {
+    let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    (0..len)
+        .map(|_| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let re = ((state >> 33) as f64 / (1u64 << 31) as f64) - 1.0;
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let im = ((state >> 33) as f64 / (1u64 << 31) as f64) - 1.0;
+            Complex::from_f64(re, im)
+        })
+        .collect()
+}
+
+fn bits<T: Real>(xs: &[Complex<T>]) -> Vec<(u64, u64)> {
+    xs.iter().map(|c| (c.re.to_bits_u64(), c.im.to_bits_u64())).collect()
+}
+
+/// One pow2, one smooth (mixed-radix), one small direct prime, one
+/// Bluestein prime — every serial plan kind.
+const LENGTHS: &[usize] = &[16, 64, 360, 100, 13, 61, 67, 251];
+
+const CFGS: &[(usize, usize)] = &[
+    (2, 1),         // narrow SoA, no pool
+    (4, 1),         // SoA only
+    (MAX_LANES, 1), // widest SoA
+    (1, 2),         // pool only
+    (1, 4),         // wider pool
+    (8, 2),         // combined
+    (8, 4),         // combined, paper-like shape
+];
+
+fn check_c2c<T: Real>(n: usize, rows: usize) {
+    // Contiguous (axis last) and strided (axis first) layouts.
+    for (shape, axis) in [([rows, n], 1usize), ([n, rows], 0)] {
+        let x: Vec<Complex<T>> = test_data(rows * n, (n * 31 + axis) as u64);
+        for dir in [Direction::Forward, Direction::Backward] {
+            let mut want = x.clone();
+            NativeFft::<T>::new().c2c(&mut want, &shape, axis, dir);
+            let want_bits = bits(&want);
+            for &(lanes, threads) in CFGS {
+                let cfg = EngineCfg::new(lanes, threads);
+                let mut eng = NativeFft::<T>::with_cfg(cfg);
+                let mut got = x.clone();
+                eng.c2c(&mut got, &shape, axis, dir);
+                assert_eq!(
+                    bits(&got),
+                    want_bits,
+                    "{} n={n} rows={rows} axis={axis} {dir:?} diverges from scalar",
+                    cfg.label()
+                );
+                // Re-running on the same (warm) engine is just as equal:
+                // workspaces are reused, never re-derived.
+                let mut again = x.clone();
+                eng.c2c(&mut again, &shape, axis, dir);
+                assert_eq!(bits(&again), want_bits, "{} warm rerun differs", cfg.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn c2c_bitwise_equal_across_engine_cfgs_f64() {
+    for &n in LENGTHS {
+        check_c2c::<f64>(n, 9);
+    }
+}
+
+#[test]
+fn c2c_bitwise_equal_across_engine_cfgs_f32() {
+    for &n in &[16usize, 360, 67, 251] {
+        check_c2c::<f32>(n, 9);
+    }
+}
+
+#[test]
+fn c2c_bitwise_equal_when_rows_underfill_the_pool() {
+    // Fewer rows than threads*lanes: chunk claiming must degrade cleanly.
+    for rows in [1usize, 2, 3] {
+        check_c2c::<f64>(64, rows);
+        check_c2c::<f64>(67, rows);
+    }
+}
+
+#[test]
+fn multi_axis_sweep_bitwise_equal() {
+    // A full 3-D forward sweep then backward sweep, every axis, comparing
+    // the whole pipeline output — what pfft actually runs per rank.
+    let shape = [12usize, 10, 8];
+    let total: usize = shape.iter().product();
+    let x: Vec<Complex<f64>> = test_data(total, 7);
+    let sweep = |eng: &mut NativeFft<f64>| {
+        let mut y = x.clone();
+        for a in (0..3).rev() {
+            eng.c2c(&mut y, &shape, a, Direction::Forward);
+        }
+        for a in 0..3 {
+            eng.c2c(&mut y, &shape, a, Direction::Backward);
+        }
+        y
+    };
+    let want = bits(&sweep(&mut NativeFft::new()));
+    for &(lanes, threads) in CFGS {
+        let cfg = EngineCfg::new(lanes, threads);
+        let got = bits(&sweep(&mut NativeFft::with_cfg(cfg)));
+        assert_eq!(got, want, "{} multi-axis sweep diverges", cfg.label());
+    }
+}
+
+fn check_r2c_c2r<T: Real>(n: usize, rows: usize) {
+    let shape = [rows, n];
+    let real: Vec<T> = test_data::<T>(rows * n, n as u64).iter().map(|c| c.re).collect();
+    let nh = n / 2 + 1;
+    let mut want_spec = vec![Complex::<T>::ZERO; rows * nh];
+    let mut want_back = vec![T::ZERO; rows * n];
+    let mut reference = NativeFft::<T>::new();
+    reference.r2c(&real, &shape, &mut want_spec);
+    reference.c2r(&want_spec, &shape, &mut want_back);
+    let want_spec_bits = bits(&want_spec);
+    let want_back_bits: Vec<u64> = want_back.iter().map(|v| v.to_bits_u64()).collect();
+    for &(lanes, threads) in CFGS {
+        let cfg = EngineCfg::new(lanes, threads);
+        let mut eng = NativeFft::<T>::with_cfg(cfg);
+        let mut spec = vec![Complex::<T>::ZERO; rows * nh];
+        let mut back = vec![T::ZERO; rows * n];
+        eng.r2c(&real, &shape, &mut spec);
+        eng.c2r(&spec, &shape, &mut back);
+        assert_eq!(bits(&spec), want_spec_bits, "{} r2c n={n} diverges", cfg.label());
+        let back_bits: Vec<u64> = back.iter().map(|v| v.to_bits_u64()).collect();
+        assert_eq!(back_bits, want_back_bits, "{} c2r n={n} diverges", cfg.label());
+    }
+}
+
+#[test]
+fn r2c_c2r_bitwise_equal_across_engine_cfgs() {
+    for &n in &[16usize, 360, 100, 67] {
+        check_r2c_c2r::<f64>(n, 11);
+        check_r2c_c2r::<f32>(n, 11);
+    }
+}

@@ -234,6 +234,41 @@ fn r2c_slab_odd_last_axis() {
 }
 
 #[test]
+fn r2c_pencil_with_pooled_batched_engine() {
+    // The ISSUE's distributed acceptance shape: 16x12x10 r2c/c2r over a
+    // pencil grid with a lanes=8/threads=4 engine per rank — bitwise
+    // equal spectra to the scalar engine, exact roundtrip tolerance.
+    use a2wfft::fft::{EngineCfg, SerialFft};
+    let global = vec![16usize, 12, 10];
+    World::run(4, |comm| {
+        let mut plan =
+            PfftPlan::<f64>::with_dims(&comm, &global, &[2, 2], Kind::R2c, RedistMethod::Alltoallw);
+        let input: Vec<f64> =
+            fill_local(&global, &plan.input_window()).iter().map(|c| c.re).collect();
+        let mut spectra: Vec<Vec<Complex64>> = Vec::new();
+        let engines: Vec<Box<dyn SerialFft<f64>>> = vec![
+            Box::new(NativeFft::<f64>::new()),
+            Box::new(NativeFft::<f64>::with_cfg(EngineCfg::new(8, 4))),
+        ];
+        for (i, mut eng) in engines.into_iter().enumerate() {
+            let mut output = vec![Complex64::ZERO; plan.output_len()];
+            plan.forward_r2c(eng.as_mut(), &input, &mut output);
+            let mut back = vec![0.0f64; plan.input_len()];
+            plan.backward_c2r(eng.as_mut(), &output, &mut back);
+            let err =
+                input.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+            assert!(err < 1e-10, "rank {}: engine {i} roundtrip err {err}", comm.rank());
+            spectra.push(output);
+        }
+        let eq = spectra[0]
+            .iter()
+            .zip(&spectra[1])
+            .all(|(a, b)| a.re.to_bits() == b.re.to_bits() && a.im.to_bits() == b.im.to_bits());
+        assert!(eq, "rank {}: pooled engine spectra differ bitwise from scalar", comm.rank());
+    });
+}
+
+#[test]
 fn linearity_of_distributed_transform() {
     let global = vec![8usize, 8, 6];
     World::run(4, |comm| {

@@ -263,6 +263,96 @@ fn span_sums_reconcile_with_stage_timers() {
     }
 }
 
+#[test]
+fn pool_worker_spans_rebase_under_rank_nesting() {
+    // The serial engine's worker pool records spans on worker threads
+    // (their own thread-local rings and depth counters), drains them into
+    // preallocated sinks at job end, and the rank thread absorbs them at
+    // join — re-based under whatever span the rank thread has open. The
+    // rank thread's own nesting bookkeeping must come through untouched.
+    use a2wfft::fft::WorkerPool;
+
+    let _g = guarded();
+    let pool = WorkerPool::new(4);
+    let nworkers = pool.threads() - 1;
+    trace::set_enabled(true);
+    {
+        let _outer = trace::span(Category::Fft, "rank_outer");
+        pool.run(16, &|_wid, _chunk| {
+            let _c = trace::span(Category::Pack, "pool_chunk");
+        });
+    }
+    {
+        // A fresh rank-side span after the join: if worker absorption had
+        // corrupted the rank thread's depth counters, this would nest.
+        let _post = trace::span(Category::Fft, "post_join");
+    }
+    trace::set_enabled(false);
+    let (spans, dropped) = trace::take_local();
+    assert_eq!(dropped, 0);
+    // Every worker woke for the job and recorded exactly one job span.
+    let workers: Vec<_> = spans.iter().filter(|s| s.label == "fft_pool_worker").collect();
+    assert_eq!(workers.len(), nworkers, "one span per pool worker per job");
+    for w in &workers {
+        assert_eq!(w.cat, Category::Fft);
+        // Outermost on the worker, re-based under the open "rank_outer"
+        // span (global depth 1, same-category depth 1).
+        assert_eq!((w.depth, w.cat_depth), (1, 1), "worker span not re-based");
+    }
+    // All 16 chunks recorded a span, whichever thread claimed them: inline
+    // on the rank thread they sit directly under "rank_outer" (depth 1);
+    // on a worker they sit under "fft_pool_worker" too (depth 2 after
+    // re-basing). Pack nests under Fft only, so cat_depth stays 0.
+    let chunks: Vec<_> = spans.iter().filter(|s| s.label == "pool_chunk").collect();
+    assert_eq!(chunks.len(), 16, "every chunk records exactly one span");
+    for c in &chunks {
+        assert_eq!(c.cat, Category::Pack);
+        assert!(c.depth == 1 || c.depth == 2, "chunk span depth {} out of range", c.depth);
+        assert_eq!(c.cat_depth, 0);
+    }
+    // The rank thread's own spans kept clean depth accounting throughout.
+    let outer = spans.iter().find(|s| s.label == "rank_outer").unwrap();
+    assert_eq!((outer.depth, outer.cat_depth), (0, 0));
+    let post = spans.iter().find(|s| s.label == "post_join").unwrap();
+    assert_eq!((post.depth, post.cat_depth), (0, 0), "rank depth corrupted by absorption");
+}
+
+#[test]
+fn pooled_engine_worker_spans_reach_the_world_gather() {
+    // End to end: a lane-batched + pooled engine running inside a
+    // simulated world must surface its workers' spans in the gathered
+    // bundle of *its own rank*, with nothing dropped.
+    use a2wfft::fft::{Direction, EngineCfg, SerialFft};
+
+    let _g = guarded();
+    trace::set_enabled(true);
+    let n = 2;
+    World::run(n, |comm| {
+        let mut eng = NativeFft::<f64>::with_cfg(EngineCfg::new(8, 4));
+        let shape = [48usize, 64];
+        let mut data: Vec<Complex<f64>> = (0..shape[0] * shape[1])
+            .map(|k| Complex::from_f64((k as f64 * 0.3).sin(), (k as f64 * 0.7).cos()))
+            .collect();
+        let _s = trace::span(Category::Fft, "rank_fft");
+        eng.c2c(&mut data, &shape, 1, Direction::Forward);
+        eng.c2c(&mut data, &shape, 1, Direction::Backward);
+    });
+    trace::set_enabled(false);
+    let bundles = trace::take_bundles();
+    assert_eq!(bundles.len(), 1);
+    assert_eq!(bundles[0].ranks.len(), n);
+    for (r, rank) in bundles[0].ranks.iter().enumerate() {
+        assert_eq!(rank.dropped, 0, "rank {r} dropped worker spans");
+        let workers = rank.spans.iter().filter(|s| s.label == "fft_pool_worker").count();
+        assert!(workers >= 3, "rank {r}: only {workers} pool-worker spans gathered");
+        for s in rank.spans.iter().filter(|s| s.label == "fft_pool_worker") {
+            assert_eq!(s.cat, Category::Fft);
+            assert!(s.end_ns >= s.begin_ns);
+            assert!(s.depth >= 1, "worker span not nested under the rank span");
+        }
+    }
+}
+
 /// All `"X"` events of a parsed Chrome trace as (pid, cat, dur_us) rows.
 fn x_events(doc: &JsonValue) -> Vec<(u64, String, f64)> {
     doc.get("traceEvents")
