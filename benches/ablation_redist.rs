@@ -7,7 +7,10 @@
 
 use a2wfft::coordinator::benchkit::*;
 use a2wfft::coordinator::{Dtype, EngineKind};
+use a2wfft::decomp::decompose;
 use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
+use a2wfft::redistribute::HierarchicalPlan;
+use a2wfft::simmpi::{Transport, World};
 
 fn dtype_matrix_section() {
     banner("ablation: dtype matrix (f64 vs f32, both methods, wire bytes halve)");
@@ -42,6 +45,120 @@ fn dtype_matrix_section() {
     }
 }
 
+/// The hierarchy's headline invariants, checked against arithmetic
+/// independent of the plan's own bookkeeping: per node,
+/// `node_count − 1` inter-node messages (vs `P − 1` per *rank* flat), and
+/// an aggregate inter-node payload of exactly the block bytes that must
+/// cross nodes (never more — aggregation adds copies, not wire traffic).
+fn assert_topology_invariants(global: [usize; 3], ranks: usize, rpn: usize) {
+    let reports = World::run(ranks, move |comm| {
+        let p = comm.size();
+        let me = comm.rank();
+        // One redistribution of the transform: axis 0 aligned → axis 1
+        // aligned, A distributed along axis 1, B along axis 0.
+        let mut sizes_a = global.to_vec();
+        let mut sizes_b = global.to_vec();
+        sizes_a[1] = decompose(global[1], p, me).0;
+        sizes_b[0] = decompose(global[0], p, me).0;
+        let hier = HierarchicalPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, rpn);
+        let nodes = hier.node_map().node_count();
+        assert_eq!(
+            hier.inter_messages_per_exchange(),
+            nodes - 1,
+            "rank {me}: one combined message per remote node"
+        );
+        // Leaders report their node's aggregate send payload once.
+        let node_payload =
+            if hier.node_map().is_leader() { hier.inter_bytes_per_exchange() } else { 0 };
+        (nodes, node_payload)
+    });
+    let nodes = reports[0].0;
+    let hier_payload: usize = reports.iter().map(|r| r.1).sum();
+    // Independent arithmetic: bytes of every (source rank, dest rank)
+    // block whose endpoints live on different nodes, under the flat
+    // exchange. Block (s, d) carries A-rows owned by d times B-columns
+    // owned by s times the untouched axis.
+    let node_of = |r: usize| r / rpn;
+    let mut flat_cross = 0usize;
+    for s in 0..ranks {
+        for d in 0..ranks {
+            if node_of(s) != node_of(d) {
+                let a_rows = decompose(global[0], ranks, d).0;
+                let b_cols = decompose(global[1], ranks, s).0;
+                flat_cross += a_rows * b_cols * global[2] * 8;
+            }
+        }
+    }
+    assert!(
+        hier_payload <= flat_cross,
+        "rpn {rpn}: aggregated payload {hier_payload} exceeds flat cross-node bytes {flat_cross}"
+    );
+    assert_eq!(
+        hier_payload, flat_cross,
+        "rpn {rpn}: aggregates must carry exactly the node-crossing blocks"
+    );
+    println!(
+        "# topology rpn={rpn}: nodes={nodes} inter_msgs/node={} (flat: {}/rank) \
+         inter_payload={hier_payload}B (= flat cross-node bytes)",
+        nodes - 1,
+        ranks - 1
+    );
+}
+
+fn hierarchical_topology_section() -> Vec<String> {
+    banner("ablation: topology-aware hierarchical redistribution (rpn sweep)");
+    real_header();
+    let (global, ranks, grid) = ([48usize, 48, 48], 4usize, 2usize);
+    let flat = real_row(
+        "alltoallw/flat",
+        &global,
+        ranks,
+        grid,
+        Kind::C2c,
+        RedistMethod::Alltoallw,
+        EngineKind::Native,
+    );
+    let mut rows: Vec<String> = Vec::new();
+    let mut push_row = |section: &str, label: &str, rep: &a2wfft::coordinator::RunReport| {
+        rows.push(
+            JsonObj::new()
+                .str("section", section)
+                .str("label", label)
+                .str("method", if section == "flat" { "alltoallw" } else { "hierarchical" })
+                .raw("global", json_usize_array(&global))
+                .int("ranks", ranks as u64)
+                .int("nodes", rep.nodes)
+                .str("transport", rep.transport)
+                .num("total_s", rep.total)
+                .num("redist_s", rep.redist + rep.overlap_comm)
+                .int("bytes", rep.bytes)
+                .str("dtype", rep.dtype)
+                .render(),
+        );
+    };
+    push_row("flat", "alltoallw/flat", &flat);
+    for rpn in [1usize, 2, 4] {
+        let label = format!("hier/rpn{rpn}");
+        let rep = real_row_topo(
+            &label,
+            &global,
+            ranks,
+            grid,
+            Kind::C2c,
+            RedistMethod::Hierarchical,
+            Transport::Window,
+            rpn,
+        );
+        println!(
+            "# {label}: nodes={} redist={:.6}s (flat {:.6}s)",
+            rep.nodes, rep.redist, flat.redist
+        );
+        push_row("hier", &label, &rep);
+        assert_topology_invariants(global, ranks, rpn);
+    }
+    rows
+}
+
 fn main() {
     // `--trace PATH` records all measured worlds into one Chrome-trace file.
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -73,5 +190,10 @@ fn main() {
         );
     }
     dtype_matrix_section();
+    let rows = hierarchical_topology_section();
+    match write_bench_json("ablation_redist", &rows) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_ablation_redist.json: {e}"),
+    }
     trace_finish(trace);
 }

@@ -56,7 +56,7 @@ fn main() {
     ));
     let global_run = global.clone();
     let report: TuneReport = World::run(ranks, move |comm| {
-        tune_plan::<f64>(&comm, &global_run, Kind::R2c, budget, None, false, &WallClock)
+        tune_plan::<f64>(&comm, &global_run, Kind::R2c, budget, 1, None, false, &WallClock)
     })
     .remove(0);
     println!("rank\tlabel\tseconds_per_pair\tvs_best");

@@ -150,6 +150,45 @@ pub fn real_row_engine(
     rep
 }
 
+/// [`real_row_full`] under an explicit node grouping and transport — the
+/// topology-ablation rows ([`RedistMethod::Hierarchical`] aggregates over
+/// the grouping; the flat methods ignore it but still report `nodes`).
+#[allow(clippy::too_many_arguments)]
+pub fn real_row_topo(
+    label: &str,
+    global: &[usize],
+    ranks: usize,
+    grid_ndims: usize,
+    kind: Kind,
+    method: RedistMethod,
+    transport: crate::simmpi::Transport,
+    ranks_per_node: usize,
+) -> RunReport {
+    let cfg = RunConfig {
+        global: global.to_vec(),
+        grid: Vec::new(),
+        ranks,
+        ranks_per_node,
+        kind,
+        method: method.into(),
+        transport: transport.into(),
+        inner: 2,
+        outer: 3,
+        ..Default::default()
+    };
+    let rep = run_config(&cfg, grid_ndims);
+    println!(
+        "{label}\t{ranks}\t{global:?}\t{:.6}\t{:.6}\t{:.6}\t{}\t{:.1e}",
+        rep.total,
+        rep.fft + rep.overlap_fft,
+        rep.redist + rep.overlap_comm,
+        rep.bytes,
+        rep.max_err
+    );
+    assert!(rep.max_err < Dtype::F64.roundtrip_tol(), "bench roundtrip failed: {}", rep.max_err);
+    rep
+}
+
 /// Print a netmodel figure table.
 pub fn model_table(fig: usize, rows: &[FigRow]) {
     banner(&format!("paper figure {fig} — netmodel @ Shaheen scale"));
@@ -270,6 +309,7 @@ pub fn report_json(
         .int("overlap_depth", rep.overlap_depth)
         .int("lanes", rep.lanes)
         .int("threads", rep.threads)
+        .int("nodes", rep.nodes)
         .bool("tuned", rep.tuned)
         .num("total_s", rep.total)
         .num("fft_s", rep.fft)

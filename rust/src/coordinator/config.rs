@@ -123,6 +123,10 @@ pub struct RunConfig {
     pub grid: Vec<usize>,
     /// Number of simulated ranks.
     pub ranks: usize,
+    /// Simulated ranks per node: consecutive rank blocks of this size
+    /// form the [`crate::simmpi::NodeMap`] the hierarchical method
+    /// aggregates over (1 = flat machine, every rank its own node).
+    pub ranks_per_node: usize,
     /// Transform kind.
     pub kind: Kind,
     /// Redistribution method (`Auto` is resolved by the tuner).
@@ -167,6 +171,7 @@ impl Default for RunConfig {
             global: vec![32, 32, 32],
             grid: Vec::new(),
             ranks: 4,
+            ranks_per_node: 1,
             kind: Kind::R2c,
             method: Knob::Fixed(RedistMethod::Alltoallw),
             exec: Knob::Fixed(ExecMode::Blocking),

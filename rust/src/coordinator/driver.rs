@@ -61,6 +61,10 @@ pub struct RunReport {
     pub lanes: u64,
     /// Serial-engine per-rank pool thread count (1 = single-threaded).
     pub threads: u64,
+    /// Simulated node count of the run (`ceil(ranks / ranks_per_node)`)
+    /// — the machine grouping the hierarchical method aggregates over
+    /// (= ranks on a flat machine).
+    pub nodes: u64,
     /// Whether the configuration was resolved by the autotuner
     /// ([`resolve_auto`]) rather than fixed by the caller.
     pub tuned: bool,
@@ -120,6 +124,7 @@ fn resolve_typed<T: Real>(cfg: &RunConfig) -> (RunConfig, bool) {
                 &cfg.global,
                 cfg.kind,
                 cfg.budget,
+                cfg.ranks_per_node,
                 cfg.wisdom.as_deref(),
                 false,
                 &WallClock,
@@ -129,6 +134,7 @@ fn resolve_typed<T: Real>(cfg: &RunConfig) -> (RunConfig, bool) {
             // (it is keyed by problem signature alone, which does not
             // encode pins).
             let mut space = TuneSpace::new(&cfg.global, comm.size(), cfg.budget);
+            space.set_ranks_per_node(cfg.ranks_per_node);
             if let Knob::Fixed(m) = cfg.method {
                 space.pin_method(m);
             }
@@ -150,7 +156,8 @@ fn resolve_typed<T: Real>(cfg: &RunConfig) -> (RunConfig, bool) {
             let (entries, skipped) =
                 search::<T>(&comm, &cfg.global, cfg.kind, &space, cfg.budget.pairs(), &WallClock);
             TuneReport {
-                signature: Signature::new::<T>(&cfg.global, comm.size(), cfg.kind),
+                signature: Signature::new::<T>(&cfg.global, comm.size(), cfg.kind)
+                    .with_ranks_per_node(cfg.ranks_per_node),
                 budget: cfg.budget,
                 entries,
                 from_wisdom: false,
@@ -210,7 +217,7 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         // counter mirror, so concurrent worlds (parallel tests) cannot
         // pollute this run's totals.
         let engine0 = crate::simmpi::datatype::stats::local_snapshot();
-        let mut plan = PfftPlan::<T>::with_transport(
+        let mut plan = PfftPlan::<T>::with_topology(
             &comm,
             &cfg.global,
             &grid,
@@ -218,6 +225,7 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
             method,
             exec,
             transport,
+            cfg.ranks_per_node,
         );
         let mut engine = make_engine::<T>(cfg.engine, engine_cfg);
         // Deterministic input.
@@ -337,6 +345,7 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         overlap_depth: exec.depth() as u64,
         lanes: engine_cfg.lanes as u64,
         threads: engine_cfg.threads as u64,
+        nodes: cfg.ranks.div_ceil(cfg.ranks_per_node.max(1)) as u64,
         tuned: false,
         stats,
     }
@@ -436,6 +445,33 @@ mod tests {
     }
 
     #[test]
+    fn driver_runs_hierarchical_with_node_grouping() {
+        use crate::simmpi::Transport;
+        for transport in [Transport::Mailbox, Transport::Window] {
+            let cfg = RunConfig {
+                global: vec![16, 12, 10],
+                ranks: 4,
+                ranks_per_node: 2,
+                kind: Kind::R2c,
+                method: RedistMethod::Hierarchical.into(),
+                transport: transport.into(),
+                inner: 1,
+                outer: 1,
+                ..Default::default()
+            };
+            let rep = run_config(&cfg, 2);
+            assert!(rep.max_err < 1e-10, "{transport:?}: hierarchical err {}", rep.max_err);
+            assert_eq!(rep.method, "hierarchical");
+            assert_eq!(rep.nodes, 2);
+            assert!(rep.bytes > 0);
+        }
+        // The flat default reports one node per rank.
+        let flat_cfg =
+            RunConfig { global: vec![8, 8, 8], ranks: 4, inner: 1, outer: 1, ..Default::default() };
+        assert_eq!(run_config(&flat_cfg, 2).nodes, 4);
+    }
+
+    #[test]
     fn auto_knobs_resolve_and_run() {
         use crate::tune::Budget;
         let cfg = RunConfig {
@@ -459,7 +495,9 @@ mod tests {
         let rep = run_config(&cfg, 2);
         assert!(rep.tuned);
         assert!(rep.max_err < 1e-10, "tuned roundtrip err {}", rep.max_err);
-        assert!(rep.method == "alltoallw" || rep.method == "traditional");
+        assert!(
+            rep.method == "alltoallw" || rep.method == "traditional" || rep.method == "hierarchical"
+        );
         assert!(rep.exec == "blocking" || rep.exec == "pipelined");
         // Fixed configs resolve to themselves without tuning.
         let (same, fixed_tuned) = resolve_auto(&RunConfig::default());

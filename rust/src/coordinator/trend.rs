@@ -257,6 +257,11 @@ pub struct TrendRow {
     pub lanes: Option<u64>,
     /// Serial-engine worker-pool size, when the rows carry `threads`.
     pub threads: Option<u64>,
+    /// Simulated node count (`ceil(ranks / ranks-per-node)`), when the rows
+    /// carry a `nodes` field — part of the group identity: the same label
+    /// under a different node grouping is a different machine, and the
+    /// topology ablation compares their means.
+    pub nodes: Option<u64>,
 }
 
 fn mean(values: &[f64]) -> Option<f64> {
@@ -279,14 +284,15 @@ fn row_key(row: &JsonValue) -> String {
 
 /// Aggregate the rows of parsed bench documents into trend groups.
 ///
-/// The group identity is `(bench, key, dtype, transport, lanes, threads)`:
-/// rows of the same label at different precisions, payload transports or
-/// serial-engine shapes must *not* pool (a mixed mean of wire bytes or
-/// times tracks neither variant), so a bench emitting f32/f64,
-/// mailbox/window or scalar/batched/threaded rows for the same shape
-/// yields one trend group per variant.
+/// The group identity is `(bench, key, dtype, transport, lanes, threads,
+/// nodes)`: rows of the same label at different precisions, payload
+/// transports, serial-engine shapes or node groupings must *not* pool (a
+/// mixed mean of wire bytes or times tracks neither variant), so a bench
+/// emitting f32/f64, mailbox/window, scalar/batched/threaded or
+/// flat/hierarchical-topology rows for the same shape yields one trend
+/// group per variant.
 pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
-    // (bench, key, dtype, transport, lanes, threads) -> collected samples.
+    // (bench, key, dtype, transport, lanes, threads, nodes) -> samples.
     #[derive(Default)]
     struct Acc {
         count: u64,
@@ -297,7 +303,15 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
         staged: Vec<f64>,
         imb: Vec<f64>,
     }
-    type GroupKey = (String, String, Option<String>, Option<String>, Option<u64>, Option<u64>);
+    type GroupKey = (
+        String,
+        String,
+        Option<String>,
+        Option<String>,
+        Option<u64>,
+        Option<u64>,
+        Option<u64>,
+    );
     let mut groups: BTreeMap<GroupKey, Acc> = BTreeMap::new();
     for (fallback_name, doc) in docs {
         let bench = doc
@@ -315,8 +329,9 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
             let transport = row.get("transport").and_then(|v| v.as_str()).map(str::to_string);
             let lanes = row.get("lanes").and_then(|v| v.as_num()).map(|x| x as u64);
             let threads = row.get("threads").and_then(|v| v.as_num()).map(|x| x as u64);
+            let nodes = row.get("nodes").and_then(|v| v.as_num()).map(|x| x as u64);
             let acc = groups
-                .entry((bench.clone(), row_key(row), dtype, transport, lanes, threads))
+                .entry((bench.clone(), row_key(row), dtype, transport, lanes, threads, nodes))
                 .or_default();
             acc.count += 1;
             let mut push = |field: &str, into: &mut Vec<f64>| {
@@ -334,7 +349,7 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
     }
     groups
         .into_iter()
-        .map(|((bench, key, dtype, transport, lanes, threads), acc)| TrendRow {
+        .map(|((bench, key, dtype, transport, lanes, threads, nodes), acc)| TrendRow {
             bench,
             key,
             count: acc.count,
@@ -348,6 +363,7 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
             transport,
             lanes,
             threads,
+            nodes,
         })
         .collect()
 }
@@ -438,31 +454,34 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
     let rows = aggregate(&docs);
     let best_rows = best_groups(&rows);
     println!("# trend over {} artifact file(s) in {}", files.len(), dir.display());
+    let fmt_nodes = |n: Option<u64>| n.map_or_else(|| "-".to_string(), |x| x.to_string());
     if best {
-        println!("bench\tbest_group\tdtype\ttransport\tengine\tmean_total_s");
+        println!("bench\tbest_group\tdtype\ttransport\tengine\tnodes\tmean_total_s");
         for r in &best_rows {
             println!(
-                "{}\t{}\t{}\t{}\t{}\t{}",
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}",
                 r.bench,
                 r.key,
                 r.dtype.as_deref().unwrap_or("-"),
                 r.transport.as_deref().unwrap_or("-"),
                 r.engine_label(),
+                fmt_nodes(r.nodes),
                 fmt_opt(r.mean_total_s),
             );
         }
     } else {
         println!(
-            "bench\tgroup\tdtype\ttransport\tengine\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_one_copy_bytes\tmean_staged_bytes\tmean_imb_total"
+            "bench\tgroup\tdtype\ttransport\tengine\tnodes\trows\tmean_total_s\tmean_bytes\tmean_fused_bytes\tmean_one_copy_bytes\tmean_staged_bytes\tmean_imb_total"
         );
         for r in &rows {
             println!(
-                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
                 r.bench,
                 r.key,
                 r.dtype.as_deref().unwrap_or("-"),
                 r.transport.as_deref().unwrap_or("-"),
                 r.engine_label(),
+                fmt_nodes(r.nodes),
                 r.count,
                 fmt_opt(r.mean_total_s),
                 fmt_opt(r.mean_bytes),
@@ -493,6 +512,9 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
             if let Some(t) = r.threads {
                 obj = obj.int("threads", t);
             }
+            if let Some(n) = r.nodes {
+                obj = obj.int("nodes", n);
+            }
             obj.num("mean_total_s", r.mean_total_s.unwrap_or(f64::NAN))
                 .num("mean_bytes", r.mean_bytes.unwrap_or(f64::NAN))
                 .num("mean_fused_bytes", r.mean_fused_bytes.unwrap_or(f64::NAN))
@@ -519,6 +541,9 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
             }
             if let Some(t) = r.threads {
                 obj = obj.int("threads", t);
+            }
+            if let Some(n) = r.nodes {
+                obj = obj.int("nodes", n);
             }
             obj.num("mean_total_s", r.mean_total_s.unwrap_or(f64::NAN)).render()
         })
@@ -696,6 +721,35 @@ mod tests {
         let best = best_groups(&rows);
         assert_eq!(best.len(), 1);
         assert_eq!(best[0].lanes, Some(8));
+    }
+
+    #[test]
+    fn node_grouping_is_part_of_group_identity() {
+        // Flat and node-grouped rows of the same label must not pool —
+        // the topology ablation compares their means. Rows from commits
+        // that predate the column (no nodes field) stay their own group.
+        let d = doc(
+            "topo",
+            &[
+                r#"{"label": "a", "total_s": 4.0, "nodes": 4}"#,
+                r#"{"label": "a", "total_s": 2.0, "nodes": 2}"#,
+                r#"{"label": "a", "total_s": 6.0, "nodes": 4}"#,
+                r#"{"label": "a", "total_s": 9.0}"#,
+            ],
+        );
+        let rows = aggregate(&[d]);
+        assert_eq!(rows.len(), 3);
+        let flat4 = rows.iter().find(|r| r.nodes == Some(4)).unwrap();
+        assert_eq!(flat4.count, 2);
+        assert_eq!(flat4.mean_total_s, Some(5.0));
+        let grouped = rows.iter().find(|r| r.nodes == Some(2)).unwrap();
+        assert_eq!(grouped.mean_total_s, Some(2.0));
+        let legacy = rows.iter().find(|r| r.nodes.is_none()).unwrap();
+        assert_eq!(legacy.count, 1);
+        // best_groups compares topology variants of the same label.
+        let best = best_groups(&rows);
+        assert_eq!(best.len(), 1);
+        assert_eq!(best[0].nodes, Some(2));
     }
 
     #[test]

@@ -67,14 +67,16 @@ fn print_help() {
          \n\
          USAGE:\n\
          \x20 repro run [--global N,N,N] [--ranks R] [--grid G,G] [--kind r2c|c2c]\n\
-         \x20           [--method alltoallw|traditional|auto] [--engine native|xla]\n\
+         \x20           [--method alltoallw|traditional|hierarchical|auto]\n\
+         \x20           [--ranks-per-node C] [--engine native|xla]\n\
          \x20           [--lanes W|auto] [--threads N|auto] [--dtype f32|f64]\n\
          \x20           [--exec blocking|pipelined|auto] [--overlap-depth K]\n\
          \x20           [--transport mailbox|window|auto]\n\
          \x20           [--inner I] [--outer O] [--json]\n\
          \x20           [--tune] [--budget tiny|normal|full] [--wisdom PATH]\n\
          \x20           [--trace PATH]\n\
-         \x20 repro tune [--global N,N,N] [--ranks R] [--kind r2c|c2c] [--dtype f32|f64]\n\
+         \x20 repro tune [--global N,N,N] [--ranks R] [--ranks-per-node C]\n\
+         \x20           [--kind r2c|c2c] [--dtype f32|f64]\n\
          \x20           [--budget tiny|normal|full] [--wisdom PATH] [--force] [--json]\n\
          \x20           [--trace PATH]\n\
          \x20 repro figure <6|7|8|9|10|11>\n\
@@ -104,7 +106,19 @@ fn print_help() {
          \x20            TransferPlans copy sender's array -> receiver's array\n\
          \x20            directly (MPI-3 shared windows), zero intermediate\n\
          \x20            buffers, zero per-message allocation, no mailbox traffic\n\
-         \x20            on the payload path (requires --method alltoallw)\n\
+         \x20            on the payload path (requires --method alltoallw or\n\
+         \x20            hierarchical)\n\
+         \n\
+         TOPOLOGY (--ranks-per-node, --method hierarchical):\n\
+         \x20 consecutive blocks of C ranks form simulated nodes (default 1 =\n\
+         \x20 flat machine; env A2WFFT_RANKS_PER_NODE seeds the default). The\n\
+         \x20 hierarchical method aggregates remote-bound blocks intra-node\n\
+         \x20 and ships exactly one combined message per node pair —\n\
+         \x20 nodes*(nodes-1) inter-node messages instead of P*(P-1) — then\n\
+         \x20 scatters straight from the node aggregate into pencil layout;\n\
+         \x20 bitwise-identical spectra to the flat methods. The grouping is\n\
+         \x20 part of the tuner signature, and JSON rows carry a `nodes`\n\
+         \x20 column (`repro trend` groups by it)\n\
          \n\
          SERIAL ENGINE (--lanes, --threads; native engine only):\n\
          \x20 lanes      SoA lane width of the batched butterfly kernels: W\n\
@@ -167,6 +181,7 @@ fn cmd_run(args: &Args) {
         &[
             "global",
             "ranks",
+            "ranks-per-node",
             "grid",
             "grid-ndims",
             "kind",
@@ -188,6 +203,9 @@ fn cmd_run(args: &Args) {
     );
     let global = args.get_usizes("global").unwrap_or_else(|| vec![64, 64, 64]);
     let ranks = args.get_usize("ranks", 4);
+    let ranks_per_node =
+        args.get_usize("ranks-per-node", a2wfft::simmpi::ranks_per_node_from_env());
+    assert!(ranks_per_node >= 1, "--ranks-per-node: must be >= 1");
     let grid = args.get_usizes("grid").unwrap_or_default();
     let grid_ndims = args.get_usize(
         "grid-ndims",
@@ -202,7 +220,12 @@ fn cmd_run(args: &Args) {
         Some("auto") => Knob::Auto,
         None if tune => Knob::Auto,
         s => RedistMethod::parse(s.unwrap_or("alltoallw"))
-            .unwrap_or_else(|| panic!("--method: unknown {} (alltoallw|traditional|auto)", s.unwrap()))
+            .unwrap_or_else(|| {
+                panic!(
+                    "--method: unknown {} (alltoallw|traditional|hierarchical|auto)",
+                    s.unwrap()
+                )
+            })
             .into(),
     };
     let engine = match args.get("engine").unwrap_or("native") {
@@ -279,6 +302,7 @@ fn cmd_run(args: &Args) {
         global: global.clone(),
         grid,
         ranks,
+        ranks_per_node,
         kind,
         method,
         exec,
@@ -321,13 +345,14 @@ fn cmd_run(args: &Args) {
         return;
     }
     println!(
-        "# global={global:?} ranks={ranks} grid={run_grid:?} kind={kind:?} method={} exec={exec_label} engine={} lanes={} threads={} dtype={} transport={} tuned={}",
+        "# global={global:?} ranks={ranks} grid={run_grid:?} kind={kind:?} method={} exec={exec_label} engine={} lanes={} threads={} dtype={} transport={} nodes={} tuned={}",
         rep.method,
         engine.name(),
         rep.lanes,
         rep.threads,
         rep.dtype,
         rep.transport,
+        rep.nodes,
         rep.tuned
     );
     println!(
@@ -356,11 +381,14 @@ fn cmd_tune(args: &Args) {
     validated(
         args,
         "repro tune",
-        &["global", "ranks", "kind", "dtype", "budget", "wisdom", "trace"],
+        &["global", "ranks", "ranks-per-node", "kind", "dtype", "budget", "wisdom", "trace"],
         &["json", "force", "help"],
     );
     let global = args.get_usizes("global").unwrap_or_else(|| vec![64, 64, 64]);
     let ranks = args.get_usize("ranks", 4);
+    let ranks_per_node =
+        args.get_usize("ranks-per-node", a2wfft::simmpi::ranks_per_node_from_env());
+    assert!(ranks_per_node >= 1, "--ranks-per-node: must be >= 1");
     let kind = Kind::parse(args.get("kind").unwrap_or("r2c"))
         .unwrap_or_else(|| panic!("--kind: unknown {} (c2c|r2c)", args.get("kind").unwrap()));
     let dtype = match args.get("dtype") {
@@ -376,12 +404,26 @@ fn cmd_tune(args: &Args) {
         a2wfft::trace::set_enabled(true);
     }
     let reports: Vec<TuneReport> = World::run(ranks, |comm| match dtype {
-        Dtype::F32 => {
-            tune_plan::<f32>(&comm, &global, kind, budget, Some(wisdom.as_path()), force, &WallClock)
-        }
-        Dtype::F64 => {
-            tune_plan::<f64>(&comm, &global, kind, budget, Some(wisdom.as_path()), force, &WallClock)
-        }
+        Dtype::F32 => tune_plan::<f32>(
+            &comm,
+            &global,
+            kind,
+            budget,
+            ranks_per_node,
+            Some(wisdom.as_path()),
+            force,
+            &WallClock,
+        ),
+        Dtype::F64 => tune_plan::<f64>(
+            &comm,
+            &global,
+            kind,
+            budget,
+            ranks_per_node,
+            Some(wisdom.as_path()),
+            force,
+            &WallClock,
+        ),
     });
     if let Some(path) = &trace {
         a2wfft::trace::set_enabled(false);

@@ -206,6 +206,115 @@ mod tests {
     }
 
     #[test]
+    fn hierarchical_degenerates_to_flat_at_one_rank_per_node() {
+        // With one subgroup member per node the two-level schedule has
+        // nothing to aggregate: the model must reproduce the flat
+        // alltoallw cost exactly (the same degeneracy the real
+        // HierarchicalPlan has at ranks_per_node = 1).
+        let m = MachineParams::shaheen();
+        for cores in [2usize, 8, 32, 128] {
+            let sc = slab(cores, Placement::Distributed);
+            let flat = m.simulate(Library::OursA2aw, &sc);
+            let hier = m.simulate_hierarchical(&sc);
+            assert!((flat.fft - hier.fft).abs() < 1e-12, "cores={cores}");
+            assert!(
+                (flat.redist - hier.redist).abs() < 1e-12,
+                "cores={cores}: flat {:.6e} vs hier {:.6e}",
+                flat.redist,
+                hier.redist
+            );
+        }
+        // Pencil grids degenerate too: every direction subgroup is
+        // stride-spread across nodes at 1 core/node.
+        let sc = Scenario {
+            global: vec![256, 256, 256],
+            grid: crate::simmpi::dims_create(64, 2),
+            cores: 64,
+            cores_per_node: 1,
+            r2c: true,
+        };
+        let flat = m.simulate(Library::OursA2aw, &sc);
+        let hier = m.simulate_hierarchical(&sc);
+        assert!((flat.total() - hier.total()).abs() < 1e-12);
+    }
+
+    fn big_slab(cores: usize) -> Scenario {
+        Scenario {
+            global: vec![2048, 2048, 2048],
+            grid: vec![cores],
+            cores,
+            cores_per_node: 16,
+            r2c: true,
+        }
+    }
+
+    #[test]
+    fn hierarchical_wins_when_nic_sharing_bites() {
+        // Fig. 10's machine loading (16 ranks/node, huge mesh): per-peer
+        // messages are megabytes, so ALLTOALLW's NIC-sharing bandwidth
+        // degradation is fully engaged, and one combined message per node
+        // pair at the full injection bandwidth repays the extra bus
+        // transit through the shared window.
+        let m = MachineParams::shaheen();
+        for cores in [32usize, 64, 128] {
+            let flat = m.simulate(Library::OursA2aw, &big_slab(cores));
+            let hier = m.simulate_hierarchical(&big_slab(cores));
+            assert!(
+                hier.redist < flat.redist,
+                "cores={cores}: hier {:.4e} !< flat {:.4e}",
+                hier.redist,
+                flat.redist
+            );
+            // Serial FFT time is untouched by the exchange method.
+            assert!((flat.fft - hier.fft).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hierarchical_wins_when_latency_dominates() {
+        // Tiny per-rank payload over many shared-node ranks: the flat
+        // exchange pays per-message latency to all m-1 peers, the
+        // hierarchical one to nodes-1 leaders — message-count reduction
+        // is the whole story and the win is large.
+        let m = MachineParams::shaheen();
+        let sc = Scenario {
+            global: vec![64, 64, 64],
+            grid: vec![256],
+            cores: 256,
+            cores_per_node: 16,
+            r2c: true,
+        };
+        let flat = m.simulate(Library::OursA2aw, &sc);
+        let hier = m.simulate_hierarchical(&sc);
+        assert!(
+            hier.redist < flat.redist / 4.0,
+            "latency regime: hier {:.4e} must be far below flat {:.4e}",
+            hier.redist,
+            flat.redist
+        );
+    }
+
+    #[test]
+    fn hierarchical_crossover_mid_band() {
+        // Between the two winning regimes sits a band where messages are
+        // neither latency-bound nor large enough for the NIC-sharing
+        // degradation to bite — there the aggregation's extra transit
+        // through the shared-memory bus is not repaid and the flat
+        // exchange keeps the edge. The model must preserve this
+        // crossover: it is why the method is a *tuner* axis and not an
+        // unconditional default.
+        let m = MachineParams::shaheen();
+        let flat = m.simulate(Library::OursA2aw, &big_slab(256));
+        let hier = m.simulate_hierarchical(&big_slab(256));
+        assert!(
+            flat.redist < hier.redist,
+            "mid band: flat {:.4e} !< hier {:.4e}",
+            flat.redist,
+            hier.redist
+        );
+    }
+
+    #[test]
     fn pipelined_latency_tax_grows_with_chunks() {
         // In the comm-dominated Fig. 10 regime (16 ranks/node, huge mesh)
         // the exchange never hides behind compute, so chunking k-fold

@@ -118,6 +118,14 @@ pub struct MachineParams {
     /// Per-message latencies: optimized collectives vs isend/irecv.
     pub alpha_opt: f64,
     pub alpha_w: f64,
+    /// Two-level alpha-beta model of the hierarchical exchange
+    /// ([`MachineParams::simulate_hierarchical`]): per-epoch latency of an
+    /// intra-node shared-window transfer (cheap — no NIC, no protocol).
+    pub alpha_intra: f64,
+    /// Per-message latency of a leader-to-leader inter-node message (a
+    /// full NIC round, comparable to `alpha_w`; the hierarchical win is
+    /// paying it `nodes-1` times instead of `P-1` times).
+    pub alpha_inter: f64,
     /// Bandwidth efficiency of the unoptimized ALLTOALLW wire protocol
     /// relative to the optimized ALLTOALL(V), with one rank per node
     /// (isend/irecv vs tuned pairwise exchange: mild).
@@ -150,6 +158,8 @@ impl MachineParams {
             intra_bw_node: 25.0e9,
             alpha_opt: 1.5e-6,
             alpha_w: 2.2e-6,
+            alpha_intra: 0.4e-6,
+            alpha_inter: 2.0e-6,
             a2aw_bw_factor_1: 0.92,
             a2aw_bw_factor_16: 0.45,
             a2aw_intra_factor: 0.75,
@@ -400,6 +410,90 @@ impl MachineParams {
             let fwd = self.redist_time(lib, m, bytes_per_rank, cpn, t == 0, stride);
             // Backward: the remap side flips, in-place advantage moves.
             let bwd = self.redist_time(lib, m, bytes_per_rank, cpn, t != 0, stride);
+            redist += fwd + bwd;
+        }
+        Breakdown { fft, redist }
+    }
+
+    /// One direction of the **hierarchical two-phase** redistribution
+    /// (`RedistMethod::Hierarchical`) over a direction subgroup of `m`
+    /// ranks: gather remote-bound blocks intra-node through the shared
+    /// window, one combined leader-to-leader message per node pair at the
+    /// *full* NIC bandwidth (no per-rank NIC sharing, no isend/irecv
+    /// degradation — the aggregation is exactly what the optimized
+    /// collectives do internally), then scatter from the node aggregate.
+    ///
+    /// With at most one subgroup member per node the two-level schedule
+    /// collapses and this *exactly* reproduces the flat
+    /// [`Library::OursA2aw`] cost — the same degeneracy the real
+    /// [`crate::redistribute::HierarchicalPlan`] has at 1 rank/node.
+    fn hier_redist_time(
+        &self,
+        m: usize,
+        local_bytes: f64,
+        cores_per_node: usize,
+        recv_in_place: bool,
+        rank_stride: usize,
+    ) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let cpn = cores_per_node.max(1);
+        let stride = rank_stride.max(1);
+        // Co-resident subgroup members per node (same placement arithmetic
+        // as `wire_time`).
+        let r_eff = (cpn / stride).clamp(1, m);
+        if r_eff <= 1 {
+            return self.redist_time(
+                Library::OursA2aw,
+                m,
+                local_bytes,
+                cpn,
+                recv_in_place,
+                stride,
+            );
+        }
+        let nodes = m.div_ceil(r_eff);
+        // The datatype engine still walks every byte once per side
+        // (gather/scatter plans are compiled subarray walks, like the flat
+        // method's pack/unpack).
+        let engine = 2.0 * self.walk_time(local_bytes, self.pack_bw_core, cpn);
+        // Bytes bound for (or arriving from) other nodes; intra-node
+        // destinations are served by the direct one-copy plans.
+        let remote = local_bytes * (m - r_eff) as f64 / m as f64;
+        // Phase 1 gather + phase 3 scatter: remote-bound bytes cross the
+        // shared-memory bus once each way, all node ranks concurrently.
+        let intra_bw = self.intra_bw_node / cpn as f64;
+        let intra = 2.0 * (remote / intra_bw)
+            + self.alpha_intra * ((r_eff - 1) + (nodes - 1)) as f64;
+        // Phase 2: `nodes - 1` combined messages per leader; the leader is
+        // the node's only injector, so the full NIC bandwidth applies to
+        // the node's whole aggregated payload.
+        let inter = self.alpha_inter * (nodes - 1) as f64
+            + r_eff as f64 * remote / self.inter_bw_node;
+        engine + intra + inter
+    }
+
+    /// Model one **forward + backward** pair executed with the
+    /// hierarchical redistribution (serial FFTs identical to
+    /// [`Library::OursA2aw`]; only the exchanges change).
+    pub fn simulate_hierarchical(&self, sc: &Scenario) -> Breakdown {
+        let ModelDims { d, r, cpn, gc, elems_per_rank, bytes_per_rank } = Self::model_dims(sc);
+        let lib_factor = Self::fft_lib_factor(Library::OursA2aw);
+        let mut fft = 0.0;
+        for ax in 0..d {
+            let n = sc.global[ax];
+            let lines = elems_per_rank / gc[ax];
+            let kind_factor = if ax == d - 1 && sc.r2c { 0.55 } else { 1.0 };
+            fft += self.fft_axis_time(lines, n, cpn, lib_factor * kind_factor);
+        }
+        fft *= 2.0;
+        let mut redist = 0.0;
+        for t in 0..r {
+            let m = sc.grid[t];
+            let stride: usize = sc.grid[t + 1..].iter().product();
+            let fwd = self.hier_redist_time(m, bytes_per_rank, cpn, t == 0, stride);
+            let bwd = self.hier_redist_time(m, bytes_per_rank, cpn, t != 0, stride);
             redist += fwd + bwd;
         }
         Breakdown { fft, redist }

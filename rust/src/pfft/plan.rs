@@ -29,9 +29,9 @@ use std::time::Instant;
 
 use crate::decomp::local_len;
 use crate::fft::{Complex, Direction, Real, SerialFft};
-use crate::redistribute::{PipelinedRedistPlan, RedistPlan, TraditionalPlan};
+use crate::redistribute::{HierarchicalPlan, PipelinedRedistPlan, RedistPlan, TraditionalPlan};
 use crate::simmpi::topology::{subcomms_with_dims, CartComm};
-use crate::simmpi::{dims_create, Comm, Pod, Transport};
+use crate::simmpi::{dims_create, ranks_per_node_from_env, Comm, Pod, Transport};
 
 /// Which global redistribution implementation a plan uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,6 +40,12 @@ pub enum RedistMethod {
     Alltoallw,
     /// The baseline: local transpose + `alltoallv` of contiguous buffers.
     Traditional,
+    /// The topology-aware two-phase exchange
+    /// ([`crate::redistribute::HierarchicalPlan`]): intra-node aggregation
+    /// over the shared window, one combined message per node pair, direct
+    /// scatter into pencils. Node grouping comes from the plan's
+    /// `ranks_per_node` (see [`PfftPlan::with_topology`]).
+    Hierarchical,
 }
 
 impl RedistMethod {
@@ -48,6 +54,7 @@ impl RedistMethod {
         match self {
             RedistMethod::Alltoallw => "alltoallw",
             RedistMethod::Traditional => "traditional",
+            RedistMethod::Hierarchical => "hierarchical",
         }
     }
 
@@ -56,6 +63,7 @@ impl RedistMethod {
         match s {
             "alltoallw" | "a2aw" | "new" => Some(RedistMethod::Alltoallw),
             "traditional" | "trad" => Some(RedistMethod::Traditional),
+            "hierarchical" | "hier" | "two-level" => Some(RedistMethod::Hierarchical),
             _ => None,
         }
     }
@@ -104,6 +112,7 @@ enum RedistKind {
     New(RedistPlan),
     Trad(TraditionalPlan),
     Piped(PipelinedRedistPlan),
+    Hier(HierarchicalPlan),
 }
 
 impl RedistKind {
@@ -116,6 +125,7 @@ impl RedistKind {
             RedistKind::New(p) => p.execute(a, b),
             RedistKind::Trad(p) => p.execute(a, b),
             RedistKind::Piped(p) => p.execute(a, b),
+            RedistKind::Hier(p) => p.execute(a, b),
         }
     }
 
@@ -124,6 +134,7 @@ impl RedistKind {
             RedistKind::New(p) => p.execute_back(b, a),
             RedistKind::Trad(p) => p.execute_back(b, a),
             RedistKind::Piped(p) => p.execute_back(b, a),
+            RedistKind::Hier(p) => p.execute_back(b, a),
         }
     }
 }
@@ -225,6 +236,10 @@ pub struct PfftPlan<T = f64> {
     exec: ExecMode,
     /// Which transport redistribution payloads move through.
     transport: Transport,
+    /// Simulated node width (consecutive ranks per node) the plan was
+    /// compiled for, and the resulting node count over the full group.
+    ranks_per_node: usize,
+    nodes: usize,
     pub timers: StageTimers,
 }
 
@@ -266,9 +281,11 @@ impl<T: Real> PfftPlan<T> {
 
     /// [`PfftPlan::with_exec`] plus an explicit payload [`Transport`] for
     /// every redistribution plan. [`Transport::Window`] (the one-copy
-    /// shared-window engine) requires [`RedistMethod::Alltoallw`] — the
-    /// traditional baseline's contiguous `alltoallv` stays on the mailbox,
-    /// as in the libraries it models.
+    /// shared-window engine) requires [`RedistMethod::Alltoallw`] or
+    /// [`RedistMethod::Hierarchical`] — the traditional baseline's
+    /// contiguous `alltoallv` stays on the mailbox, as in the libraries it
+    /// models. The node grouping for hierarchical plans defaults to the
+    /// `A2WFFT_RANKS_PER_NODE` environment variable (1 when unset).
     pub fn with_transport(
         comm: &Comm,
         global: &[usize],
@@ -278,6 +295,28 @@ impl<T: Real> PfftPlan<T> {
         exec: ExecMode,
         transport: Transport,
     ) -> PfftPlan<T> {
+        let rpn = ranks_per_node_from_env();
+        Self::with_topology(comm, global, dims, kind, method, exec, transport, rpn)
+    }
+
+    /// Fullest constructor: [`PfftPlan::with_transport`] plus an explicit
+    /// `ranks_per_node` node grouping (consecutive ranks per simulated
+    /// node) consumed by [`RedistMethod::Hierarchical`] redistribution
+    /// plans. The grouping is recorded for any method (it is a property of
+    /// the simulated machine, reported as the `nodes` column), but only
+    /// hierarchical plans change behaviour with it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_topology(
+        comm: &Comm,
+        global: &[usize],
+        dims: &[usize],
+        kind: Kind,
+        method: RedistMethod,
+        exec: ExecMode,
+        transport: Transport,
+        ranks_per_node: usize,
+    ) -> PfftPlan<T> {
+        let ranks_per_node = ranks_per_node.max(1);
         let d = global.len();
         let r = dims.len();
         assert!(d >= 2, "pfft: need at least 2 dimensions");
@@ -321,10 +360,9 @@ impl<T: Real> PfftPlan<T> {
             );
         }
         if transport == Transport::Window {
-            assert_eq!(
-                method,
-                RedistMethod::Alltoallw,
-                "pfft: Transport::Window requires RedistMethod::Alltoallw"
+            assert!(
+                method == RedistMethod::Alltoallw || method == RedistMethod::Hierarchical,
+                "pfft: Transport::Window requires RedistMethod::Alltoallw or Hierarchical"
             );
         }
         let elem = std::mem::size_of::<Complex<T>>();
@@ -357,6 +395,18 @@ impl<T: Real> PfftPlan<T> {
                     (RedistMethod::Traditional, _) => {
                         RedistKind::Trad(TraditionalPlan::new(&subs[t], elem, a, t + 1, b, t))
                     }
+                    (RedistMethod::Hierarchical, _) => {
+                        RedistKind::Hier(HierarchicalPlan::with_transport(
+                            &subs[t],
+                            elem,
+                            a,
+                            t + 1,
+                            b,
+                            t,
+                            transport,
+                            ranks_per_node,
+                        ))
+                    }
                 }
             })
             .collect();
@@ -379,6 +429,8 @@ impl<T: Real> PfftPlan<T> {
             method,
             exec,
             transport,
+            ranks_per_node,
+            nodes: comm.size().div_ceil(ranks_per_node),
             timers: StageTimers::default(),
         }
     }
@@ -396,6 +448,17 @@ impl<T: Real> PfftPlan<T> {
     /// Which transport redistribution payloads move through.
     pub fn transport(&self) -> Transport {
         self.transport
+    }
+
+    /// Simulated node width (consecutive ranks per node) this plan was
+    /// compiled for (1 = flat machine).
+    pub fn ranks_per_node(&self) -> usize {
+        self.ranks_per_node
+    }
+
+    /// Number of simulated nodes over the full process group.
+    pub fn node_count(&self) -> usize {
+        self.nodes
     }
 
     /// Dtype name of this plan's precision (`"f32"`/`"f64"`).

@@ -1,0 +1,748 @@
+//! Topology-aware hierarchical redistribution: the node-aware two-phase
+//! alltoallw (`RedistMethod::Hierarchical`).
+//!
+//! The flat methods treat the network as uniform: every rank pair
+//! exchanges one message, `P·(P−1)` messages per redistribution. On a real
+//! machine ranks are packed onto shared-memory nodes and the expensive
+//! resource is the *inter-node* wire, so this plan splits every exchange
+//! into three phases over a [`NodeMap`]:
+//!
+//! 1. **Intra-node gather** (`hier_gather` spans): every rank exposes its
+//!    source array once in a shared-window epoch. Co-resident blocks are
+//!    delivered *directly* into the destination pencils (one compiled
+//!    [`TransferPlan`] copy, exactly like the window transport), while the
+//!    node leader copies each member's remote-bound blocks into one
+//!    contiguous *aggregate* buffer per destination node — the only extra
+//!    copy the hierarchy introduces.
+//! 2. **Inter-node exchange** (`hier_exchange`): exactly one combined
+//!    message per node pair, leaders only — `nodes·(nodes−1)` messages
+//!    instead of `P·(P−1)`, carrying exactly the bytes that must cross
+//!    nodes. The `--transport` knob picks the wire (mailbox payloads or a
+//!    shared-window epoch between leaders).
+//! 3. **Intra-node scatter** (`hier_scatter`): the leader exposes each
+//!    received node-aggregate once; every member copies its own section
+//!    straight into its pencil layout with precompiled plans (no
+//!    intermediate unpack buffer).
+//!
+//! Everything is precompiled at plan build time. Because all ranks of a
+//! direction subgroup share their undistributed extents, every rank can
+//! reconstruct every peer's subarray layout locally — the build needs no
+//! metadata exchange beyond the two `NodeMap` splits. Executes are
+//! allocation-free in steady state (aggregates recycle through a
+//! [`StagingArena`] under the mailbox wire, or live in plan-owned
+//! [`AlignedScratch`] under the window wire).
+//!
+//! With one rank per node the plan degenerates to a flat aggregate
+//! exchange (every rank is a leader, no intra phases); with one node it is
+//! pure shared-window delivery (no inter phase).
+
+use crate::decomp::decompose;
+use crate::simmpi::datatype::Runs;
+use crate::simmpi::window::RawSpan;
+use crate::simmpi::{AlignedScratch, Comm, NodeMap, Pod, StagingArena, Transport, TransferPlan};
+
+use super::exchange::{subarray_types, validate_shapes};
+
+/// A contiguous flattened run: `len` bytes at byte offset `base`.
+fn contig(base: usize, len: usize) -> Runs {
+    Runs { base, run_len: len, outer: Vec::new() }
+}
+
+/// One leader-side aggregation copy: a member's block bound for compact
+/// remote node `node`, compiled into the aggregate at its final offset.
+struct GatherOp {
+    /// Compact remote-node index (see `HierDirection::remote_node`).
+    node: usize,
+    plan: TransferPlan,
+}
+
+/// One direction (`A → B`) of the hierarchical exchange, fully compiled.
+struct HierDirection {
+    /// Local element counts of the source/destination arrays.
+    elems_a: usize,
+    elems_b: usize,
+    /// Per co-resident member `m` (intra rank): plan copying `m`'s block
+    /// destined to this rank from `m`'s source array into this rank's
+    /// destination array (`m == local_rank` is the fused self copy).
+    direct: Vec<TransferPlan>,
+    /// Leader only: per member `m` (intra rank), the aggregation copies of
+    /// `m`'s remote-bound blocks (empty on non-leaders).
+    gather: Vec<Vec<GatherOp>>,
+    /// Per compact remote node, per source rank on that node: plan copying
+    /// this rank's section of the received aggregate into the destination
+    /// array.
+    scatter: Vec<Vec<TransferPlan>>,
+    /// Aggregate sizes in bytes, per compact remote node, and their prefix
+    /// offsets inside the concatenated scratch (window wire).
+    agg_send_bytes: Vec<usize>,
+    agg_recv_bytes: Vec<usize>,
+    send_off: Vec<usize>,
+    recv_off: Vec<usize>,
+    /// Window wire only, leader only: concatenated aggregate storage and
+    /// the per-source-node plans pulling this node's slice out of the
+    /// peer leader's exposed send scratch.
+    send_scratch: AlignedScratch,
+    recv_scratch: AlignedScratch,
+    inter_pull: Vec<TransferPlan>,
+    /// Mailbox wire only, leader only: recycled aggregate buffers.
+    arena: StagingArena,
+    send_slots: Vec<Option<Vec<u8>>>,
+    recv_slots: Vec<Option<Vec<u8>>>,
+    /// Per-execute scratch for the phase-3 epoch tags (capacity persists so
+    /// steady-state executions stay allocation-free).
+    tags_agg: Vec<u32>,
+}
+
+/// Prefix offsets of `sizes` (exclusive scan).
+fn offsets_of(sizes: &[usize]) -> Vec<usize> {
+    let mut off = Vec::with_capacity(sizes.len());
+    let mut acc = 0usize;
+    for &s in sizes {
+        off.push(acc);
+        acc += s;
+    }
+    off
+}
+
+impl HierDirection {
+    /// Compact remote-node indexing: the `node_count − 1` nodes other than
+    /// `own`, ascending. Compact index `jc` ↔ node id `jc + (jc >= own)`.
+    fn remote_node(own: usize, jc: usize) -> usize {
+        if jc >= own {
+            jc + 1
+        } else {
+            jc
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        comm: &Comm,
+        map: &NodeMap,
+        transport: Transport,
+        elem: usize,
+        sizes_a: &[usize],
+        axis_a: usize,
+        sizes_b: &[usize],
+        axis_b: usize,
+    ) -> HierDirection {
+        validate_shapes(comm, sizes_a, axis_a, sizes_b, axis_b);
+        let p = comm.size();
+        let me = comm.rank();
+        let my_node = map.node_id();
+        let n_nodes = map.node_count();
+        let is_leader = map.is_leader();
+        // Group-invariant extents: A's aligned axis and B's aligned axis
+        // are full on every member; all axes other than the exchanged pair
+        // are identical across the direction subgroup (the same invariant
+        // the flat subarray exchange rests on). They let every rank derive
+        // every peer's local shape — and hence every block's layout —
+        // without communication.
+        let a_full = sizes_a[axis_a];
+        let b_full = sizes_b[axis_b];
+        let other_prod: usize = (0..sizes_a.len())
+            .filter(|&ax| ax != axis_a && ax != axis_b)
+            .map(|ax| sizes_a[ax])
+            .product();
+        let block_bytes = |s: usize, d: usize| {
+            decompose(a_full, p, d).0 * decompose(b_full, p, s).0 * other_prod * elem
+        };
+        // Bytes of the combined aggregate `from` node → `to` node: blocks
+        // ordered (destination rank asc, source rank asc) — so a
+        // receiver's whole section is contiguous.
+        let agg_bytes = |from: usize, to: usize| -> usize {
+            map.members(to)
+                .map(|d| map.members(from).map(|s| block_bytes(s, d)).sum::<usize>())
+                .sum()
+        };
+        // Offset of block (s, d) inside aggregate `from` → `to`.
+        let block_off = |from: usize, to: usize, s: usize, d: usize| -> usize {
+            let before_d: usize = map
+                .members(to)
+                .take_while(|&d2| d2 < d)
+                .map(|d2| map.members(from).map(|s2| block_bytes(s2, d2)).sum::<usize>())
+                .sum();
+            let before_s: usize =
+                map.members(from).take_while(|&s2| s2 < s).map(|s2| block_bytes(s2, d)).sum();
+            before_d + before_s
+        };
+        // Flattened send partitions of any group rank `s` (its local A
+        // shape differs from ours only along axis_b), and this rank's
+        // receive partitions of B.
+        let send_runs_of = |s: usize| -> Vec<Runs> {
+            let mut sa = sizes_a.to_vec();
+            sa[axis_b] = decompose(b_full, p, s).0;
+            subarray_types(&sa, axis_a, p, elem).iter().map(|t| t.runs()).collect()
+        };
+        let recv_runs: Vec<Runs> =
+            subarray_types(sizes_b, axis_b, p, elem).iter().map(|t| t.runs()).collect();
+
+        let members: Vec<usize> = map.members(my_node).collect();
+        let member_sends: Vec<Vec<Runs>> = members.iter().map(|&m| send_runs_of(m)).collect();
+        // Phase-1 direct delivery: co-resident member m's block → my B.
+        let direct: Vec<TransferPlan> = members
+            .iter()
+            .enumerate()
+            .map(|(ml, &m)| TransferPlan::from_runs(&member_sends[ml][me], &recv_runs[m]))
+            .collect();
+        // Phase-1 aggregation (leader only): member m's remote blocks into
+        // the per-destination-node aggregates.
+        let gather: Vec<Vec<GatherOp>> = if is_leader {
+            members
+                .iter()
+                .enumerate()
+                .map(|(ml, &m)| {
+                    let mut ops = Vec::new();
+                    for jc in 0..n_nodes - 1 {
+                        let j = Self::remote_node(my_node, jc);
+                        for d in map.members(j) {
+                            let src = &member_sends[ml][d];
+                            let dst = contig(block_off(my_node, j, m, d), src.packed_size());
+                            let plan = TransferPlan::from_runs(src, &dst);
+                            ops.push(GatherOp { node: jc, plan });
+                        }
+                    }
+                    ops
+                })
+                .collect()
+        } else {
+            members.iter().map(|_| Vec::new()).collect()
+        };
+        // Phase-3 scatter: my section of each received aggregate → my B.
+        let scatter: Vec<Vec<TransferPlan>> = (0..n_nodes - 1)
+            .map(|jc| {
+                let j = Self::remote_node(my_node, jc);
+                map.members(j)
+                    .map(|s| {
+                        let dst = &recv_runs[s];
+                        let src = contig(block_off(j, my_node, s, me), dst.packed_size());
+                        TransferPlan::from_runs(&src, dst)
+                    })
+                    .collect()
+            })
+            .collect();
+        let agg_send_bytes: Vec<usize> = (0..n_nodes - 1)
+            .map(|jc| agg_bytes(my_node, Self::remote_node(my_node, jc)))
+            .collect();
+        let agg_recv_bytes: Vec<usize> = (0..n_nodes - 1)
+            .map(|jc| agg_bytes(Self::remote_node(my_node, jc), my_node))
+            .collect();
+        // Window wire: leaders hold the aggregates in plan-owned scratch
+        // and pull their slice out of the peer leader's concatenated send
+        // scratch (offset derivable because every rank knows every
+        // aggregate's size).
+        let window_leader = is_leader && transport == Transport::Window;
+        let send_scratch =
+            AlignedScratch::new(if window_leader { agg_send_bytes.iter().sum() } else { 0 });
+        let recv_scratch =
+            AlignedScratch::new(if window_leader { agg_recv_bytes.iter().sum() } else { 0 });
+        let inter_pull: Vec<TransferPlan> = if window_leader {
+            (0..n_nodes - 1)
+                .map(|jc| {
+                    let j = Self::remote_node(my_node, jc);
+                    // Offset of agg(j → my_node) inside j's send scratch:
+                    // j's targets are laid out in compact (ascending,
+                    // skipping j) order.
+                    let off: usize = (0..n_nodes - 1)
+                        .map(|kc| Self::remote_node(j, kc))
+                        .take_while(|&k| k < my_node)
+                        .map(|k| agg_bytes(j, k))
+                        .sum();
+                    let len = agg_recv_bytes[jc];
+                    TransferPlan::from_runs(&contig(off, len), &contig(0, len))
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let send_off = offsets_of(&agg_send_bytes);
+        let recv_off = offsets_of(&agg_recv_bytes);
+        let send_slots = (0..n_nodes - 1).map(|_| None).collect();
+        let recv_slots = (0..n_nodes - 1).map(|_| None).collect();
+        HierDirection {
+            elems_a: sizes_a.iter().product(),
+            elems_b: sizes_b.iter().product(),
+            direct,
+            gather,
+            scatter,
+            agg_send_bytes,
+            agg_recv_bytes,
+            send_off,
+            recv_off,
+            send_scratch,
+            recv_scratch,
+            inter_pull,
+            arena: StagingArena::new(),
+            send_slots,
+            recv_slots,
+            tags_agg: Vec::new(),
+        }
+    }
+
+    /// Run the three-phase exchange: `a` (source bytes) → `b` (destination
+    /// bytes). Collective over the plan's communicator.
+    fn execute(&mut self, map: &NodeMap, transport: Transport, a: &[u8], b: &mut [u8]) {
+        let intra = map.intra();
+        let nsz = intra.size();
+        let me_l = intra.rank();
+        let my_node = map.node_id();
+        let n_nodes = map.node_count();
+        // Wire tags: one for the phase-1 source epoch, one per received
+        // aggregate for the phase-3 epochs. Drawn identically by every
+        // intra member (the collective ordering rule), so the counters
+        // agree without synchronization.
+        let tag_in = if nsz > 1 { Some(intra.next_nb_tag()) } else { None };
+        self.tags_agg.clear();
+        if nsz > 1 {
+            for _ in 0..n_nodes - 1 {
+                self.tags_agg.push(intra.next_nb_tag());
+            }
+        }
+
+        // Phase 1: one shared-window epoch over the source arrays —
+        // co-resident blocks land directly in the destination pencils,
+        // remote-bound blocks aggregate at the leader.
+        {
+            crate::trace_span!(Exchange, "hier_gather");
+            if let Some(tag) = tag_in {
+                intra.hub().expose(me_l, tag, RawSpan::of(a), nsz - 1);
+            }
+            if transport == Transport::Mailbox && map.is_leader() {
+                for jc in 0..n_nodes - 1 {
+                    let buf = self.arena.take(self.agg_send_bytes[jc]);
+                    self.send_slots[jc] = Some(buf);
+                }
+            }
+            for ml in 0..nsz {
+                let (src, pulled): (&[u8], bool) = if ml == me_l {
+                    (a, false)
+                } else {
+                    let span = intra.hub().pull(ml, tag_in.expect("intra pull without epoch"));
+                    // SAFETY: the owner keeps its source array alive and
+                    // unwritten until wait_drained below — the epoch
+                    // contract.
+                    (unsafe { span.as_slice() }, true)
+                };
+                let plan = &self.direct[ml];
+                if pulled {
+                    plan.execute_one_copy(src, b);
+                    intra.add_window_bytes(plan.bytes());
+                } else {
+                    plan.execute(src, b);
+                }
+                for op in &self.gather[ml] {
+                    let dst: &mut [u8] = match transport {
+                        Transport::Mailbox => {
+                            self.send_slots[op.node].as_deref_mut().expect("missing send slot")
+                        }
+                        Transport::Window => {
+                            let lo = self.send_off[op.node];
+                            let hi = lo + self.agg_send_bytes[op.node];
+                            &mut self.send_scratch.as_bytes_mut()[lo..hi]
+                        }
+                    };
+                    if pulled {
+                        op.plan.execute_one_copy(src, dst);
+                        intra.add_window_bytes(op.plan.bytes());
+                    } else {
+                        op.plan.execute(src, dst);
+                    }
+                }
+                if pulled {
+                    intra.hub().release(ml, tag_in.unwrap());
+                }
+            }
+            if let Some(tag) = tag_in {
+                intra.hub().wait_drained(me_l, tag);
+            }
+        }
+
+        // Phase 2: leaders exchange exactly one combined message per node
+        // pair.
+        if let Some(leaders) = map.leaders() {
+            crate::trace_span!(Exchange, "hier_exchange");
+            if n_nodes > 1 {
+                let tag = leaders.next_nb_tag();
+                match transport {
+                    Transport::Mailbox => {
+                        for jc in 0..n_nodes - 1 {
+                            let agg = self.send_slots[jc].take().expect("missing send slot");
+                            leaders.send_bytes(Self::remote_node(my_node, jc), tag, agg);
+                        }
+                        for jc in 0..n_nodes - 1 {
+                            self.recv_slots[jc] =
+                                Some(leaders.recv_bytes(Self::remote_node(my_node, jc), tag));
+                        }
+                    }
+                    Transport::Window => {
+                        leaders.hub().expose(
+                            my_node,
+                            tag,
+                            RawSpan::of(self.send_scratch.as_bytes()),
+                            n_nodes - 1,
+                        );
+                        for jc in 0..n_nodes - 1 {
+                            let j = Self::remote_node(my_node, jc);
+                            let span = leaders.hub().pull(j, tag);
+                            // SAFETY: peer leader's scratch stays alive and
+                            // unwritten until its wait_drained.
+                            let src = unsafe { span.as_slice() };
+                            let lo = self.recv_off[jc];
+                            let hi = lo + self.agg_recv_bytes[jc];
+                            let plan = &self.inter_pull[jc];
+                            let dst = &mut self.recv_scratch.as_bytes_mut()[lo..hi];
+                            plan.execute_one_copy(src, dst);
+                            leaders.add_window_bytes(plan.bytes());
+                            leaders.hub().release(j, tag);
+                        }
+                        leaders.hub().wait_drained(my_node, tag);
+                    }
+                }
+            }
+        }
+
+        // Phase 3: one shared-window epoch per received aggregate — every
+        // member scatters its own contiguous section straight into its
+        // pencil layout; the leader's own section is a fused local copy.
+        {
+            crate::trace_span!(Exchange, "hier_scatter");
+            if n_nodes > 1 {
+                if map.is_leader() {
+                    for jc in 0..n_nodes - 1 {
+                        let buf: &[u8] = match transport {
+                            Transport::Mailbox => {
+                                self.recv_slots[jc].as_deref().expect("missing aggregate")
+                            }
+                            Transport::Window => {
+                                let lo = self.recv_off[jc];
+                                &self.recv_scratch.as_bytes()[lo..lo + self.agg_recv_bytes[jc]]
+                            }
+                        };
+                        if nsz > 1 {
+                            intra.hub().expose(me_l, self.tags_agg[jc], RawSpan::of(buf), nsz - 1);
+                        }
+                        for plan in &self.scatter[jc] {
+                            plan.execute(buf, b);
+                        }
+                    }
+                    if nsz > 1 {
+                        for &tag in &self.tags_agg {
+                            intra.hub().wait_drained(me_l, tag);
+                        }
+                    }
+                    if transport == Transport::Mailbox {
+                        for slot in &mut self.recv_slots {
+                            if let Some(v) = slot.take() {
+                                self.arena.put(v);
+                            }
+                        }
+                    }
+                } else {
+                    for jc in 0..n_nodes - 1 {
+                        let span = intra.hub().pull(0, self.tags_agg[jc]);
+                        // SAFETY: the leader keeps the aggregate alive until
+                        // its wait_drained.
+                        let src = unsafe { span.as_slice() };
+                        for plan in &self.scatter[jc] {
+                            plan.execute_one_copy(src, b);
+                            intra.add_window_bytes(plan.bytes());
+                        }
+                        intra.hub().release(0, self.tags_agg[jc]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A compiled topology-aware two-phase redistribution between two
+/// alignments of a distributed array (the hierarchical counterpart of
+/// [`super::RedistPlan`]): intra-node aggregation through shared-window
+/// `TransferPlan`s, one combined message per node pair, direct scatter
+/// into the pencil layout. Bitwise-identical results to the flat methods.
+pub struct HierarchicalPlan {
+    comm: Comm,
+    map: NodeMap,
+    transport: Transport,
+    elem: usize,
+    fwd: HierDirection,
+    bwd: HierDirection,
+}
+
+impl HierarchicalPlan {
+    /// Build a plan over `comm` for node groups of `ranks_per_node`
+    /// consecutive ranks, moving inter-node payloads through the mailbox
+    /// wire. Collective over `comm` (see [`NodeMap::new`]).
+    pub fn new(
+        comm: &Comm,
+        elem: usize,
+        sizes_a: &[usize],
+        axis_a: usize,
+        sizes_b: &[usize],
+        axis_b: usize,
+        ranks_per_node: usize,
+    ) -> HierarchicalPlan {
+        Self::with_transport(
+            comm,
+            elem,
+            sizes_a,
+            axis_a,
+            sizes_b,
+            axis_b,
+            Transport::Mailbox,
+            ranks_per_node,
+        )
+    }
+
+    /// [`HierarchicalPlan::new`] with an explicit inter-node wire. The
+    /// intra-node phases always run over the shared window; `transport`
+    /// only selects how the per-node-pair aggregates travel.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_transport(
+        comm: &Comm,
+        elem: usize,
+        sizes_a: &[usize],
+        axis_a: usize,
+        sizes_b: &[usize],
+        axis_b: usize,
+        transport: Transport,
+        ranks_per_node: usize,
+    ) -> HierarchicalPlan {
+        let map = NodeMap::new(comm, ranks_per_node);
+        let fwd =
+            HierDirection::build(comm, &map, transport, elem, sizes_a, axis_a, sizes_b, axis_b);
+        let bwd =
+            HierDirection::build(comm, &map, transport, elem, sizes_b, axis_b, sizes_a, axis_a);
+        HierarchicalPlan { comm: comm.clone(), map, transport, elem, fwd, bwd }
+    }
+
+    /// Number of local elements of `A` (send side of [`Self::execute`]).
+    pub fn elems_a(&self) -> usize {
+        self.fwd.elems_a
+    }
+
+    /// Number of local elements of `B`.
+    pub fn elems_b(&self) -> usize {
+        self.fwd.elems_b
+    }
+
+    /// The process group this plan redistributes over.
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    /// The node placement this plan was compiled for.
+    pub fn node_map(&self) -> &NodeMap {
+        &self.map
+    }
+
+    /// The inter-node wire of phase 2.
+    pub fn transport(&self) -> Transport {
+        self.transport
+    }
+
+    /// Inter-node payload bytes this rank's *node* ships per forward
+    /// execute (the phase-2 wire traffic; zero on non-leaders' behalf —
+    /// the value is node-level and identical on every member).
+    pub fn inter_bytes_per_exchange(&self) -> usize {
+        self.fwd.agg_send_bytes.iter().sum()
+    }
+
+    /// Inter-node messages this rank's node ships per execute:
+    /// `node_count − 1` (one per remote node), the hierarchy's headline
+    /// invariant.
+    pub fn inter_messages_per_exchange(&self) -> usize {
+        self.map.node_count() - 1
+    }
+
+    /// Perform the redistribution `A (v-aligned) → B (w-aligned)`.
+    pub fn execute<T: Pod>(&mut self, a: &[T], b: &mut [T]) {
+        assert_eq!(std::mem::size_of::<T>(), self.elem, "hier redist: element size mismatch");
+        assert_eq!(a.len(), self.fwd.elems_a, "hier redist: A length mismatch");
+        assert_eq!(b.len(), self.fwd.elems_b, "hier redist: B length mismatch");
+        self.fwd.execute(
+            &self.map,
+            self.transport,
+            crate::simmpi::as_bytes(a),
+            crate::simmpi::as_bytes_mut(b),
+        );
+    }
+
+    /// Perform the reverse redistribution `B (w-aligned) → A (v-aligned)`.
+    pub fn execute_back<T: Pod>(&mut self, b: &[T], a: &mut [T]) {
+        assert_eq!(std::mem::size_of::<T>(), self.elem, "hier redist: element size mismatch");
+        assert_eq!(b.len(), self.bwd.elems_a, "hier redist: B length mismatch");
+        assert_eq!(a.len(), self.bwd.elems_b, "hier redist: A length mismatch");
+        self.bwd.execute(
+            &self.map,
+            self.transport,
+            crate::simmpi::as_bytes(b),
+            crate::simmpi::as_bytes_mut(a),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::redistribute::RedistPlan;
+    use crate::simmpi::World;
+
+    /// Fill a local v-aligned block of a global d-dim array with the global
+    /// linear index of each element (same helper as the exchange tests).
+    fn fill_global(global: &[usize], windows: &[(usize, usize)]) -> Vec<f64> {
+        let d = global.len();
+        let total: usize = windows.iter().map(|&(_, l)| l).product();
+        let mut out = vec![0.0f64; total];
+        for (lin, v) in out.iter_mut().enumerate() {
+            let mut rem = lin;
+            let mut gidx = 0usize;
+            for ax in 0..d {
+                let inner: usize = windows[ax + 1..].iter().map(|&(_, l)| l).product();
+                let li = rem / inner.max(1);
+                rem %= inner.max(1);
+                gidx = gidx * global[ax] + windows[ax].0 + li;
+            }
+            *v = gidx as f64;
+        }
+        out
+    }
+
+    fn slab_case(global: &[usize; 3], ranks: usize, rpn: usize, transport: Transport) {
+        let global = *global;
+        World::run(ranks, |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let (n0, s0) = decompose(global[0], m, me);
+            let (n1, s1) = decompose(global[1], m, me);
+            let sizes_a = [n0, global[1], global[2]];
+            let sizes_b = [global[0], n1, global[2]];
+            let mut plan =
+                HierarchicalPlan::with_transport(&comm, 8, &sizes_a, 1, &sizes_b, 0, transport, rpn);
+            let flat = RedistPlan::new(&comm, 8, &sizes_a, 1, &sizes_b, 0);
+            let a = fill_global(&global, &[(s0, n0), (0, global[1]), (0, global[2])]);
+            let mut b = vec![0.0f64; plan.elems_b()];
+            let mut b_flat = vec![0.0f64; flat.elems_b()];
+            for _ in 0..2 {
+                b.fill(0.0);
+                plan.execute(&a, &mut b);
+                flat.execute(&a, &mut b_flat);
+                let want =
+                    fill_global(&global, &[(0, global[0]), (s1, n1), (0, global[2])]);
+                assert_eq!(b, want, "rank {me} rpn {rpn} {transport:?}");
+                assert_eq!(b, b_flat, "rank {me}: hierarchical != flat");
+                let mut back = vec![0.0f64; plan.elems_a()];
+                plan.execute_back(&b, &mut back);
+                assert_eq!(a, back, "rank {me}: roundtrip failed");
+            }
+        });
+    }
+
+    #[test]
+    fn slab_matches_flat_all_groupings_mailbox() {
+        for rpn in [1, 2, 3, 4, 8] {
+            slab_case(&[8, 12, 5], 4, rpn, Transport::Mailbox);
+        }
+    }
+
+    #[test]
+    fn slab_matches_flat_all_groupings_window() {
+        for rpn in [1, 2, 4] {
+            slab_case(&[8, 12, 5], 4, rpn, Transport::Window);
+        }
+    }
+
+    #[test]
+    fn uneven_extents_and_uneven_last_node() {
+        // Global extents indivisible by the group, group indivisible by the
+        // node width: 5 ranks over 2-wide nodes (last node short).
+        slab_case(&[7, 9, 3], 5, 2, Transport::Mailbox);
+        slab_case(&[7, 9, 3], 5, 2, Transport::Window);
+    }
+
+    #[test]
+    fn more_ranks_than_rows_zero_blocks() {
+        // |P| > N along the exchanged axes: some ranks own zero rows, some
+        // node aggregates are empty.
+        slab_case(&[3, 8, 2], 5, 2, Transport::Mailbox);
+    }
+
+    #[test]
+    fn single_rank_is_local_copy() {
+        World::run(1, |comm| {
+            let global = [4usize, 5];
+            let mut plan = HierarchicalPlan::new(&comm, 8, &global, 0, &global, 1, 4);
+            let a = fill_global(&global, &[(0, 4), (0, 5)]);
+            let mut b = vec![0.0f64; 20];
+            plan.execute(&a, &mut b);
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn inter_node_message_count_and_bytes() {
+        // The headline invariant: per execute, each node ships exactly
+        // node_count − 1 messages (vs P − 1 per *rank* flat), and the
+        // inter-node payload equals the flat method's cross-node bytes.
+        let global = [8usize, 12, 6];
+        World::run(4, |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let (n0, s0) = decompose(global[0], m, me);
+            let (n1, _) = decompose(global[1], m, me);
+            let sizes_a = [n0, global[1], global[2]];
+            let sizes_b = [global[0], n1, global[2]];
+            let mut plan = HierarchicalPlan::new(&comm, 8, &sizes_a, 1, &sizes_b, 0, 2);
+            assert_eq!(plan.node_map().node_count(), 2);
+            assert_eq!(plan.inter_messages_per_exchange(), 1);
+            let a = fill_global(&global, &[(s0, n0), (0, global[1]), (0, global[2])]);
+            let mut b = vec![0.0f64; plan.elems_b()];
+            comm.barrier();
+            let (m0, b0) = (comm.world_messages_sent(), comm.world_bytes_sent());
+            plan.execute(&a, &mut b);
+            comm.barrier();
+            let msgs = comm.world_messages_sent() - m0;
+            let bytes = comm.world_bytes_sent() - b0;
+            // 2 nodes × (2 − 1) messages; flat mailbox would be 4 × 3.
+            assert_eq!(msgs, 2, "rank {me}: inter message count");
+            // Cross-node bytes of the flat method: every (s, d) block with
+            // node(s) != node(d).
+            let cross: usize = (0..m)
+                .flat_map(|s| (0..m).map(move |d| (s, d)))
+                .filter(|&(s, d)| s / 2 != d / 2)
+                .map(|(s, d)| {
+                    decompose(global[0], m, d).0 * decompose(global[1], m, s).0 * global[2] * 8
+                })
+                .sum();
+            assert_eq!(bytes as usize, cross, "rank {me}: inter payload bytes");
+            assert_eq!(plan.inter_bytes_per_exchange() * 2, cross, "accessor disagrees");
+        });
+    }
+
+    #[test]
+    fn four_dim_nonadjacent_axes() {
+        let global = [6usize, 10, 4, 3];
+        World::run(6, |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let (n1, s1) = decompose(global[1], m, me);
+            let (n3, _) = decompose(global[3], m, me);
+            let sizes_a = [global[0], n1, global[2], global[3]];
+            let sizes_b = [global[0], global[1], global[2], n3];
+            let mut plan = HierarchicalPlan::new(&comm, 8, &sizes_a, 3, &sizes_b, 1, 3);
+            let a = fill_global(
+                &global,
+                &[(0, global[0]), (s1, n1), (0, global[2]), (0, global[3])],
+            );
+            let mut b = vec![0.0f64; plan.elems_b()];
+            plan.execute(&a, &mut b);
+            let flat = RedistPlan::new(&comm, 8, &sizes_a, 3, &sizes_b, 1);
+            let mut b_flat = vec![0.0f64; flat.elems_b()];
+            flat.execute(&a, &mut b_flat);
+            assert_eq!(b, b_flat, "rank {me}");
+            let mut back = vec![0.0f64; plan.elems_a()];
+            plan.execute_back(&b, &mut back);
+            assert_eq!(a, back, "rank {me}: roundtrip");
+        });
+    }
+}

@@ -23,6 +23,15 @@
 //!   `ExecMode::Pipelined` in [`crate::pfft`]). Bitwise identical to the
 //!   one-shot exchange for every chunking.
 //!
+//! * [`hierarchical`] / [`HierarchicalPlan`] — the **topology-aware
+//!   two-phase exchange**: ranks are grouped onto simulated nodes
+//!   ([`crate::simmpi::NodeMap`]); remote-bound blocks aggregate
+//!   intra-node through one shared-window epoch of compiled
+//!   `TransferPlan`s, exactly one combined message flows per node pair,
+//!   and receivers scatter straight from the node aggregate into their
+//!   pencil layout — `nodes·(nodes−1)` inter-node messages instead of
+//!   `P·(P−1)`, bitwise identical to the flat methods.
+//!
 //! [`RedistPlan`] and [`PipelinedRedistPlan`] take a
 //! [`crate::simmpi::Transport`] (`with_transport` constructors): the
 //! mailbox default packs per-message buffers, while the one-copy window
@@ -32,9 +41,11 @@
 //! mailbox `alltoallv` of the libraries it models.
 
 pub mod exchange;
+pub mod hierarchical;
 pub mod pipeline;
 pub mod traditional;
 
 pub use exchange::{exchange, subarray_types, RedistPlan};
+pub use hierarchical::HierarchicalPlan;
 pub use pipeline::PipelinedRedistPlan;
 pub use traditional::{traditional_exchange, TraditionalPlan};

@@ -174,7 +174,9 @@ impl WorldState {
 
 /// Shared state of one communicator (one per process group).
 pub(crate) struct CommState {
-    #[allow(dead_code)]
+    /// World-unique context id (`MPI_Comm` context): every `split`/`dup`
+    /// allocates a fresh one, so communicators are distinguishable in
+    /// diagnostics even when they share group shape.
     ctx: u64,
     size: usize,
     world: Arc<WorldState>,
@@ -241,6 +243,14 @@ impl Comm {
     /// Number of ranks in this communicator.
     pub fn size(&self) -> usize {
         self.state.size
+    }
+
+    /// World-unique context id of this communicator: distinct for every
+    /// communicator a world ever creates (`dup`/`split` always allocate a
+    /// fresh context, as in MPI), so two comms over the same group are
+    /// still tellable apart in diagnostics and map keys.
+    pub fn context_id(&self) -> u64 {
+        self.state.ctx
     }
 
     /// Total bytes pushed through mailboxes world-wide so far (all comms).
@@ -412,6 +422,16 @@ impl Comm {
     }
 }
 
+impl std::fmt::Debug for Comm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Comm")
+            .field("ctx", &self.state.ctx)
+            .field("rank", &self.rank)
+            .field("size", &self.state.size)
+            .finish()
+    }
+}
+
 /// Factory for simulated process worlds.
 pub struct World;
 
@@ -454,9 +474,9 @@ impl World {
 }
 
 /// Deterministic map rank -> node id when simulating `cores_per_node`
-/// placement (block placement, like `aprun -N`). Used by the netmodel's
-/// placement reasoning and exposed for downstream schedulers.
-#[allow(dead_code)]
+/// placement (block placement, like `aprun -N`). This is the grouping rule
+/// behind [`super::topology::NodeMap`] and the netmodel's placement
+/// reasoning.
 pub fn node_of(rank: usize, cores_per_node: usize) -> usize {
     rank / cores_per_node.max(1)
 }
@@ -586,6 +606,44 @@ mod tests {
                 assert_eq!(sub.size(), 2);
             }
         });
+    }
+
+    #[test]
+    fn contexts_are_distinct_per_communicator() {
+        World::run(4, |comm| {
+            let d1 = comm.dup();
+            let d2 = comm.dup();
+            let sub = comm.split((comm.rank() % 2) as i64, 0).unwrap();
+            // Every derived communicator gets a fresh world-unique context
+            // (messages on one can never match another); clones share it.
+            assert_ne!(d1.context_id(), comm.context_id());
+            assert_ne!(d2.context_id(), d1.context_id());
+            assert_ne!(sub.context_id(), d2.context_id());
+            assert_eq!(comm.clone().context_id(), comm.context_id());
+            // All ranks of one group agree on its context.
+            let tag = 77;
+            if comm.rank() == 0 {
+                for r in 1..comm.size() {
+                    let got: Vec<u64> = comm.recv_vec(r, tag, 1);
+                    assert_eq!(got[0], comm.context_id());
+                }
+            } else {
+                comm.send_slice(0, tag, &[comm.context_id()]);
+            }
+            // Debug output carries the identity triple.
+            let dbg = format!("{comm:?}");
+            assert!(dbg.contains("ctx") && dbg.contains("size: 4"), "{dbg}");
+        });
+    }
+
+    #[test]
+    fn node_of_blocks_ranks() {
+        assert_eq!(node_of(0, 4), 0);
+        assert_eq!(node_of(3, 4), 0);
+        assert_eq!(node_of(4, 4), 1);
+        assert_eq!(node_of(11, 4), 2);
+        // Degenerate cores-per-node clamps to 1 rank per node.
+        assert_eq!(node_of(5, 0), 5);
     }
 
     #[test]

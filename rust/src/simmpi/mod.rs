@@ -58,10 +58,10 @@ pub mod nonblocking;
 pub mod topology;
 pub mod window;
 
-pub use comm::{Comm, World};
+pub use comm::{node_of, Comm, World};
 pub use datatype::{AlignedScratch, Datatype, StagingArena, TransferPlan};
 pub use nonblocking::{waitall, AlltoallwPlan, Request};
-pub use topology::{dims_create, CartComm};
+pub use topology::{dims_create, ranks_per_node_from_env, CartComm, NodeMap};
 pub use window::{Transport, Window};
 
 /// Errors surfaced by the simmpi layer.

@@ -1,9 +1,12 @@
 //! Cartesian process topologies (`MPI_DIMS_CREATE`, `MPI_CART_CREATE`,
 //! `MPI_CART_SUB`) — §3.4 of the paper, including the Listing-4 idiom
 //! ([`subcomms`]) that carves a grid into its one-dimensional direction
-//! subgroups for use by the pencil / higher-dimensional decompositions.
+//! subgroups for use by the pencil / higher-dimensional decompositions —
+//! plus the node-placement layer ([`NodeMap`]) that groups a
+//! communicator's ranks onto simulated shared-memory nodes for the
+//! hierarchical (node-aware two-phase) redistribution.
 
-use super::comm::Comm;
+use super::comm::{node_of, Comm};
 
 /// Balanced factorization of `nprocs` over `ndims` dimensions
 /// (`MPI_DIMS_CREATE` semantics: dims non-increasing, product == nprocs,
@@ -129,6 +132,114 @@ pub fn subcomms_with_dims(comm: &Comm, dims: &[usize]) -> Vec<Comm> {
         .collect()
 }
 
+/// Environment override for the simulated node width: `A2WFFT_RANKS_PER_NODE`
+/// (a positive integer; absent/unparsable means 1 rank per node, i.e. the
+/// flat-network default where the hierarchical path degenerates).
+pub fn ranks_per_node_from_env() -> usize {
+    std::env::var("A2WFFT_RANKS_PER_NODE")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(1)
+}
+
+/// Node placement of a communicator's ranks: consecutive blocks of
+/// `ranks_per_node` ranks share a simulated shared-memory node (the
+/// `aprun -N` block placement of [`node_of`]), the last node possibly
+/// short. Carries the two subcommunicators the hierarchical exchange
+/// runs on: the **intra-node** group (all co-resident ranks, shared-window
+/// traffic) and the **leader** group (local rank 0 of every node — the
+/// only ranks that touch the inter-node wire).
+///
+/// Building a `NodeMap` is collective over `comm` (two `split`s).
+#[derive(Clone)]
+pub struct NodeMap {
+    intra: Comm,
+    /// `Some` only on node leaders (local rank 0); leader-comm rank equals
+    /// the node id.
+    leaders: Option<Comm>,
+    node_id: usize,
+    node_count: usize,
+    ranks_per_node: usize,
+    group_size: usize,
+}
+
+impl NodeMap {
+    /// Collective constructor: group `comm`'s ranks onto nodes of
+    /// `ranks_per_node` (clamped to ≥ 1) consecutive ranks each.
+    pub fn new(comm: &Comm, ranks_per_node: usize) -> NodeMap {
+        let rpn = ranks_per_node.max(1);
+        let size = comm.size();
+        let node_id = node_of(comm.rank(), rpn);
+        let node_count = size.div_ceil(rpn);
+        let intra = comm
+            .split(node_id as i64, comm.rank() as i64)
+            .expect("NodeMap: intra split returned None");
+        // Local rank 0 (the node's smallest group rank) leads; leader-comm
+        // keys are node ids, so leaders.rank() == node_id.
+        let leaders = comm.split(if intra.rank() == 0 { 0 } else { -1 }, node_id as i64);
+        NodeMap { intra, leaders, node_id, node_count, ranks_per_node: rpn, group_size: size }
+    }
+
+    /// Intra-node communicator (all ranks sharing this rank's node).
+    pub fn intra(&self) -> &Comm {
+        &self.intra
+    }
+
+    /// Leader communicator — `Some` only when [`Self::is_leader`].
+    pub fn leaders(&self) -> Option<&Comm> {
+        self.leaders.as_ref()
+    }
+
+    /// Whether this rank is its node's leader (local rank 0).
+    pub fn is_leader(&self) -> bool {
+        self.leaders.is_some()
+    }
+
+    /// This rank's node id.
+    pub fn node_id(&self) -> usize {
+        self.node_id
+    }
+
+    /// This rank's position within its node (`intra` rank).
+    pub fn local_rank(&self) -> usize {
+        self.intra.rank()
+    }
+
+    /// Number of nodes covering the group.
+    pub fn node_count(&self) -> usize {
+        self.node_count
+    }
+
+    /// Configured node width (the last node may hold fewer ranks).
+    pub fn ranks_per_node(&self) -> usize {
+        self.ranks_per_node
+    }
+
+    /// Size of the communicator this map was built over.
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    /// Node id of an arbitrary group rank.
+    pub fn node_of_rank(&self, rank: usize) -> usize {
+        node_of(rank, self.ranks_per_node)
+    }
+
+    /// Group ranks resident on node `node` (consecutive; the last node's
+    /// range is clipped to the group size).
+    pub fn members(&self, node: usize) -> std::ops::Range<usize> {
+        let lo = node * self.ranks_per_node;
+        let hi = ((node + 1) * self.ranks_per_node).min(self.group_size);
+        lo..hi
+    }
+
+    /// Number of ranks on node `node`.
+    pub fn node_size(&self, node: usize) -> usize {
+        self.members(node).len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +301,72 @@ mod tests {
             for s in &subs {
                 assert_eq!(s.size(), 2);
             }
+        });
+    }
+
+    #[test]
+    fn node_map_groups_consecutive_ranks() {
+        World::run(8, |comm| {
+            let map = NodeMap::new(&comm, 4);
+            assert_eq!(map.node_count(), 2);
+            assert_eq!(map.node_id(), comm.rank() / 4);
+            assert_eq!(map.intra().size(), 4);
+            assert_eq!(map.local_rank(), comm.rank() % 4);
+            assert_eq!(map.is_leader(), comm.rank() % 4 == 0);
+            assert_eq!(map.members(1), 4..8);
+            if let Some(leaders) = map.leaders() {
+                assert_eq!(leaders.size(), 2);
+                assert_eq!(leaders.rank(), map.node_id());
+                // Leader traffic stays on the leader communicator.
+                let peer = 1 - leaders.rank();
+                leaders.send_slice(peer, 3, &[map.node_id() as u64]);
+                let got: Vec<u64> = leaders.recv_vec(peer, 3, 1);
+                assert_eq!(got[0] as usize, peer);
+            }
+        });
+    }
+
+    #[test]
+    fn node_map_uneven_last_node() {
+        World::run(5, |comm| {
+            let map = NodeMap::new(&comm, 2);
+            assert_eq!(map.node_count(), 3);
+            assert_eq!(map.node_size(0), 2);
+            assert_eq!(map.node_size(2), 1);
+            assert_eq!(map.members(2), 4..5);
+            assert_eq!(map.intra().size(), map.node_size(map.node_id()));
+            for r in 0..5 {
+                assert_eq!(map.node_of_rank(r), r / 2);
+            }
+            if comm.rank() == 4 {
+                // Sole rank of the short node: it leads itself.
+                assert!(map.is_leader());
+                assert_eq!(map.local_rank(), 0);
+            }
+        });
+    }
+
+    #[test]
+    fn node_map_one_rank_per_node_degenerates() {
+        World::run(3, |comm| {
+            let map = NodeMap::new(&comm, 1);
+            assert_eq!(map.node_count(), 3);
+            assert_eq!(map.intra().size(), 1);
+            assert!(map.is_leader());
+            let leaders = map.leaders().unwrap();
+            assert_eq!(leaders.size(), 3);
+            assert_eq!(leaders.rank(), comm.rank());
+        });
+    }
+
+    #[test]
+    fn node_map_wider_than_group() {
+        World::run(3, |comm| {
+            let map = NodeMap::new(&comm, 8);
+            assert_eq!(map.node_count(), 1);
+            assert_eq!(map.intra().size(), 3);
+            assert_eq!(map.members(0), 0..3);
+            assert_eq!(map.is_leader(), comm.rank() == 0);
         });
     }
 

@@ -81,13 +81,15 @@ impl Budget {
     /// Hard cap on the candidate count; enumeration beyond it is
     /// truncated deterministically and reported, never silently.
     /// (Raised when the engine axis landed so lane/thread variants do
-    /// not crowd out grid coverage; engines iterate innermost, so a
-    /// truncation always keeps whole engine sweeps of leading combos.)
+    /// not crowd out grid coverage, and again when the hierarchical
+    /// method joined so the method axis stays fully covered on leading
+    /// grids; engines iterate innermost, so a truncation always keeps
+    /// whole engine sweeps of leading combos.)
     pub fn max_candidates(self) -> usize {
         match self {
-            Budget::Tiny => 16,
-            Budget::Normal => 64,
-            Budget::Full => 192,
+            Budget::Tiny => 24,
+            Budget::Normal => 96,
+            Budget::Full => 288,
         }
     }
 
@@ -220,13 +222,18 @@ pub struct TuneSpace {
     pub thread_opts: Vec<usize>,
     /// Deterministic truncation cap (from the budget).
     pub max_candidates: usize,
+    /// Simulated node grouping every candidate plan is built under
+    /// (1 = flat machine). Not a searched axis — it is a property of the
+    /// machine, not of the plan — but the hierarchical method's plans
+    /// depend on it, so it is part of the space.
+    pub ranks_per_node: usize,
 }
 
 impl TuneSpace {
-    /// The full budgeted space for a problem: both methods, the blocking
-    /// plus pipelined-ladder exec modes (2-D arrays have no pipeline
-    /// axis, so the ladder is dropped there), both transports (window
-    /// only within its 128-rank cap), and the enumerated grids.
+    /// The full budgeted space for a problem: all three methods, the
+    /// blocking plus pipelined-ladder exec modes (2-D arrays have no
+    /// pipeline axis, so the ladder is dropped there), both transports
+    /// (window only within its 128-rank cap), and the enumerated grids.
     pub fn new(global: &[usize], ranks: usize, budget: Budget) -> TuneSpace {
         let mut execs = vec![ExecMode::Blocking];
         if global.len() >= 3 {
@@ -238,14 +245,24 @@ impl TuneSpace {
             vec![Transport::Mailbox]
         };
         TuneSpace {
-            methods: vec![RedistMethod::Alltoallw, RedistMethod::Traditional],
+            methods: vec![
+                RedistMethod::Alltoallw,
+                RedistMethod::Traditional,
+                RedistMethod::Hierarchical,
+            ],
             execs,
             transports,
             grids: enumerate_grids(global, ranks, budget),
             lane_opts: budget.lane_ladder().to_vec(),
             thread_opts: budget.thread_ladder().to_vec(),
             max_candidates: budget.max_candidates(),
+            ranks_per_node: 1,
         }
+    }
+
+    /// Set the simulated node grouping the candidates are built under.
+    pub fn set_ranks_per_node(&mut self, ranks_per_node: usize) {
+        self.ranks_per_node = ranks_per_node.max(1);
     }
 
     /// Pin the method axis to one value.
@@ -296,6 +313,12 @@ impl TuneSpace {
                         if method == RedistMethod::Traditional
                             && (exec != ExecMode::Blocking || transport != Transport::Mailbox)
                         {
+                            continue;
+                        }
+                        // The hierarchical exchange has no pipelined
+                        // schedule (its phases are already a static
+                        // overlap structure) but runs on both transports.
+                        if method == RedistMethod::Hierarchical && exec != ExecMode::Blocking {
                             continue;
                         }
                         for &lanes in &self.lane_opts {
@@ -413,10 +436,11 @@ fn measure_candidate<T: Real>(
     global: &[usize],
     kind: Kind,
     cand: &Candidate,
+    ranks_per_node: usize,
     pairs: usize,
     measurer: &dyn Measurer,
 ) -> f64 {
-    let mut plan = PfftPlan::<T>::with_transport(
+    let mut plan = PfftPlan::<T>::with_topology(
         comm,
         global,
         &cand.grid,
@@ -424,6 +448,7 @@ fn measure_candidate<T: Real>(
         cand.method,
         cand.exec,
         cand.transport,
+        ranks_per_node,
     );
     // Build the engine from the candidate's shape: winners must be
     // measured with exactly the engine they will run with.
@@ -487,7 +512,15 @@ pub fn search<T: Real>(
     let mut entries: Vec<TuneEntry> = cands
         .into_iter()
         .map(|cand| {
-            let seconds = measure_candidate::<T>(comm, global, kind, &cand, pairs, measurer);
+            let seconds = measure_candidate::<T>(
+                comm,
+                global,
+                kind,
+                &cand,
+                space.ranks_per_node,
+                pairs,
+                measurer,
+            );
             TuneEntry { candidate: cand, seconds }
         })
         .collect();
@@ -506,16 +539,23 @@ pub fn search<T: Real>(
 /// Collective. Wisdom is read by every rank before searching (the file
 /// is only ever written after a search, behind the closing barrier, so
 /// the reads are race-free) and written by rank 0 alone.
+///
+/// `ranks_per_node` is the simulated node grouping the candidate plans
+/// are built under; it keys distinct wisdom entries (a winner measured
+/// on a flat machine is not a winner on a clustered one).
+#[allow(clippy::too_many_arguments)]
 pub fn tune_plan<T: Real>(
     comm: &Comm,
     global: &[usize],
     kind: Kind,
     budget: Budget,
+    ranks_per_node: usize,
     wisdom: Option<&Path>,
     force: bool,
     measurer: &dyn Measurer,
 ) -> TuneReport {
-    let signature = Signature::new::<T>(global, comm.size(), kind);
+    let signature =
+        Signature::new::<T>(global, comm.size(), kind).with_ranks_per_node(ranks_per_node);
     if !force {
         if let Some(path) = wisdom {
             let hit = Wisdom::load(path).ok().and_then(|w| {
@@ -543,7 +583,8 @@ pub fn tune_plan<T: Real>(
             }
         }
     }
-    let space = TuneSpace::new(global, comm.size(), budget);
+    let mut space = TuneSpace::new(global, comm.size(), budget);
+    space.set_ranks_per_node(ranks_per_node);
     let (entries, skipped) = search::<T>(comm, global, kind, &space, budget.pairs(), measurer);
     let mut report =
         TuneReport { signature, budget, entries, from_wisdom: false, persisted: false, skipped };
@@ -603,9 +644,10 @@ impl<T: Real> PfftPlan<T> {
         wisdom: Option<&Path>,
         measurer: &dyn Measurer,
     ) -> PfftPlan<T> {
-        let report = tune_plan::<T>(comm, global, kind, budget, wisdom, false, measurer);
+        let rpn = crate::simmpi::ranks_per_node_from_env();
+        let report = tune_plan::<T>(comm, global, kind, budget, rpn, wisdom, false, measurer);
         let w = &report.winner().candidate;
-        PfftPlan::with_transport(comm, global, &w.grid, kind, w.method, w.exec, w.transport)
+        PfftPlan::with_topology(comm, global, &w.grid, kind, w.method, w.exec, w.transport, rpn)
     }
 }
 
@@ -669,11 +711,21 @@ mod tests {
                 assert_eq!(c.exec, ExecMode::Blocking, "{}", c.label());
                 assert_eq!(c.transport, Transport::Mailbox, "{}", c.label());
             }
+            if c.method == RedistMethod::Hierarchical {
+                assert_eq!(c.exec, ExecMode::Blocking, "{}", c.label());
+            }
             assert_eq!(c.grid.iter().product::<usize>(), 4);
         }
-        // Both methods, both transports, the pipelined ladder and the
-        // engine axis (batched lanes, pool threads) all appear.
+        // All three methods, both transports, the pipelined ladder and
+        // the engine axis (batched lanes, pool threads) all appear; the
+        // hierarchical method reaches both transports.
         assert!(cands.iter().any(|c| c.method == RedistMethod::Traditional));
+        assert!(cands.iter().any(|c| {
+            c.method == RedistMethod::Hierarchical && c.transport == Transport::Mailbox
+        }));
+        assert!(cands.iter().any(|c| {
+            c.method == RedistMethod::Hierarchical && c.transport == Transport::Window
+        }));
         assert!(cands.iter().any(|c| c.transport == Transport::Window));
         assert!(cands.iter().any(|c| matches!(c.exec, ExecMode::Pipelined { .. })));
         assert!(cands.iter().any(|c| c.engine.lanes > 1));
@@ -733,6 +785,30 @@ mod tests {
         let (cands, _) = space.candidates();
         assert_eq!(cands.len(), Budget::Normal.lane_ladder().len());
         assert!(cands.iter().all(|c| c.engine.threads == 1));
+    }
+
+    #[test]
+    fn hierarchical_pins_respect_blocking_only() {
+        // Hierarchical has no pipelined schedule: that pin combination
+        // is contradictory and yields nothing.
+        let mut space = TuneSpace::new(&[16, 12, 10], 4, Budget::Normal);
+        space.pin_method(RedistMethod::Hierarchical);
+        space.pin_exec(ExecMode::Pipelined { depth: 2 });
+        let (cands, _) = space.candidates();
+        assert!(cands.is_empty());
+        // But unlike the traditional baseline it runs on the window
+        // transport too.
+        let mut space = TuneSpace::new(&[16, 12, 10], 4, Budget::Normal);
+        space.pin_method(RedistMethod::Hierarchical);
+        space.pin_exec(ExecMode::Blocking);
+        space.pin_transport(Transport::Window);
+        space.pin_grid(vec![2, 2]);
+        space.pin_lanes(1);
+        space.pin_threads(1);
+        let (cands, skipped) = space.candidates();
+        assert_eq!(skipped, 0);
+        assert_eq!(cands.len(), 1);
+        assert_eq!(cands[0].label(), "hierarchical/blocking/window/g2x2/l1t1");
     }
 
     #[test]

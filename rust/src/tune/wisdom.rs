@@ -59,12 +59,16 @@ pub struct Signature {
     pub global: Vec<usize>,
     /// World size the plan is created over.
     pub ranks: usize,
+    /// Simulated ranks per node ([`crate::simmpi::NodeMap`] grouping).
+    /// Part of the key only when > 1, so wisdom recorded before the
+    /// topology axis existed keeps matching flat (1 rank/node) problems.
+    pub ranks_per_node: usize,
 }
 
 impl Signature {
     /// Signature of a `T`-precision problem.
     pub fn new<T: Real>(global: &[usize], ranks: usize, kind: Kind) -> Signature {
-        Signature { kind, dtype: T::NAME, global: global.to_vec(), ranks }
+        Signature { kind, dtype: T::NAME, global: global.to_vec(), ranks, ranks_per_node: 1 }
     }
 
     /// Signature with an explicit dtype name (for un-monomorphized
@@ -75,14 +79,28 @@ impl Signature {
         kind: Kind,
         dtype: &'static str,
     ) -> Signature {
-        Signature { kind, dtype, global: global.to_vec(), ranks }
+        Signature { kind, dtype, global: global.to_vec(), ranks, ranks_per_node: 1 }
+    }
+
+    /// The same signature under an explicit node grouping. Groupings
+    /// shape the hierarchical candidate's trade space, so they key
+    /// distinct wisdom entries.
+    pub fn with_ranks_per_node(mut self, ranks_per_node: usize) -> Signature {
+        self.ranks_per_node = ranks_per_node.max(1);
+        self
     }
 
     /// The stable string key wisdom entries are stored under, e.g.
-    /// `r2c/f64/g64x64x64/r4`.
+    /// `r2c/f64/g64x64x64/r4` (plus `/rpn2` under a 2-ranks-per-node
+    /// grouping).
     pub fn key(&self) -> String {
         let mesh: Vec<String> = self.global.iter().map(|n| n.to_string()).collect();
-        format!("{}/{}/g{}/r{}", self.kind.name(), self.dtype, mesh.join("x"), self.ranks)
+        let mut key =
+            format!("{}/{}/g{}/r{}", self.kind.name(), self.dtype, mesh.join("x"), self.ranks);
+        if self.ranks_per_node > 1 {
+            key.push_str(&format!("/rpn{}", self.ranks_per_node));
+        }
+        key
     }
 }
 
@@ -314,6 +332,12 @@ mod tests {
         assert_eq!(sig.key(), "r2c/f64/g64x64x64/r4");
         let sig32 = Signature::with_dtype(&[16, 12], 2, Kind::C2c, "f32");
         assert_eq!(sig32.key(), "c2c/f32/g16x12/r2");
+        // Node grouping keys distinct entries, but the flat grouping
+        // (1 rank/node) keeps the pre-topology spelling.
+        let grouped = Signature::new::<f64>(&[64, 64, 64], 4, Kind::R2c).with_ranks_per_node(2);
+        assert_eq!(grouped.key(), "r2c/f64/g64x64x64/r4/rpn2");
+        let flat = Signature::new::<f64>(&[64, 64, 64], 4, Kind::R2c).with_ranks_per_node(1);
+        assert_eq!(flat.key(), sig.key());
     }
 
     #[test]

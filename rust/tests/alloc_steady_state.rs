@@ -10,7 +10,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
-use a2wfft::redistribute::{PipelinedRedistPlan, RedistPlan};
+use a2wfft::redistribute::{HierarchicalPlan, PipelinedRedistPlan, RedistPlan};
 use a2wfft::simmpi::datatype::{Datatype, TransferPlan};
 use a2wfft::simmpi::{Transport, World};
 
@@ -204,6 +204,85 @@ fn steady_state_window_transport_multi_rank_never_allocates() {
         );
         assert_eq!(a, back, "rank {me}: roundtrip broken after steady-state runs");
     });
+}
+
+/// Shared body of the hierarchical steady-state tests: 4 ranks in 2-rank
+/// nodes, so every execute exercises all three phases (intra gather, one
+/// inter-node aggregate message, intra scatter). Returns this rank's
+/// allocation delta over 10 steady-state round-trips.
+fn hier_steady_state(transport: Transport) -> Vec<u64> {
+    World::run(4, move |comm| {
+        let me = comm.rank();
+        let global = [8usize, 8, 6];
+        let m = comm.size();
+        let sizes_a = [global[0], a2wfft::decomp::decompose(global[1], m, me).0, global[2]];
+        let sizes_b = [a2wfft::decomp::decompose(global[0], m, me).0, global[1], global[2]];
+        let mut plan = HierarchicalPlan::with_transport(
+            &comm, 8, &sizes_a, 0, &sizes_b, 1, transport, 2,
+        );
+        assert_eq!(plan.node_map().node_count(), 2);
+        let a: Vec<f64> = (0..plan.elems_a()).map(|x| (me * 53 + x) as f64).collect();
+        let mut b = vec![0.0f64; plan.elems_b()];
+        let mut back = vec![0.0f64; plan.elems_a()];
+        for _ in 0..3 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        assert_eq!(a, back, "rank {me}: roundtrip broken");
+        comm.barrier();
+        let n0 = allocs_on_this_thread();
+        for _ in 0..10 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        let delta = allocs_on_this_thread() - n0;
+        assert_eq!(a, back, "rank {me}: roundtrip broken after steady-state runs");
+        delta
+    })
+}
+
+#[test]
+fn steady_state_hierarchical_window_never_allocates() {
+    // Node aggregation adds two compiled intra phases and plan-owned
+    // aggregate scratch on top of the one-copy wire; after warmup primes
+    // the offset tables and hub capacity, the whole gather → exchange →
+    // scatter cycle must stay off the heap on every rank — leaders and
+    // members alike.
+    for (rank, delta) in hier_steady_state(Transport::Window).into_iter().enumerate() {
+        assert_eq!(
+            delta, 0,
+            "rank {rank}: steady-state hierarchical window executions allocated {delta} times"
+        );
+    }
+}
+
+#[test]
+fn steady_state_hierarchical_mailbox_plan_machinery_never_allocates() {
+    // On the mailbox wire the *simulated transport itself* allocates per
+    // message (each payload Vec travels through a fresh tag bucket), as it
+    // does for every mailbox method — so the invariant splits: non-leader
+    // ranks touch no wire and must be exactly allocation-free, while
+    // leaders may only pay the wire's constant per-message bookkeeping
+    // (the aggregates themselves recycle through the arena — a growing
+    // aggregate would blow well past this bound).
+    let deltas = hier_steady_state(Transport::Mailbox);
+    // 10 round-trips × 2 directions × 1 remote node = 20 messages/leader.
+    let messages = 20u64;
+    for (rank, delta) in deltas.into_iter().enumerate() {
+        let leader = rank % 2 == 0; // ranks_per_node = 2: ranks 0 and 2 lead
+        if leader {
+            assert!(
+                delta <= 4 * messages,
+                "rank {rank}: {delta} allocations for {messages} messages — \
+                 aggregate buffers are not recycling"
+            );
+        } else {
+            assert_eq!(
+                delta, 0,
+                "rank {rank}: non-leader steady-state executions allocated {delta} times"
+            );
+        }
+    }
 }
 
 #[test]

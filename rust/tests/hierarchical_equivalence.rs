@@ -1,0 +1,281 @@
+//! Hierarchical-redistribution equivalence: the node-aware two-phase
+//! exchange must be **bitwise identical** to the flat subarray alltoallw
+//! at every layer — raw redistribution plans and full distributed
+//! transforms — over random shapes, grids, node groupings, transports and
+//! dtypes (deterministic xorshift sweeps; the offline crate set has no
+//! proptest). Topology changes how bytes travel, never what they are.
+
+use a2wfft::fft::{Complex, NativeFft, Real};
+use a2wfft::pfft::{ExecMode, Kind, PfftPlan, RedistMethod};
+use a2wfft::redistribute::{HierarchicalPlan, RedistPlan};
+use a2wfft::simmpi::{as_bytes, dims_create, Transport, World};
+
+/// Small deterministic PRNG (xorshift64*).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+    }
+}
+
+#[test]
+fn prop_hier_redist_plan_bitwise_equals_flat() {
+    // Raw redistribution layer: HierarchicalPlan vs the flat RedistPlan,
+    // random shapes/axes/world sizes, every node grouping from fully
+    // distributed to fully shared (including ragged last nodes).
+    let mut rng = Rng::new(43);
+    for case in 0..12 {
+        let d = rng.range(2, 4);
+        let global: Vec<usize> = (0..d).map(|_| rng.range(2, 9)).collect();
+        let nprocs = rng.range(2, 5);
+        let axis_a = rng.below(d);
+        let mut axis_b = rng.below(d);
+        while axis_b == axis_a {
+            axis_b = rng.below(d);
+        }
+        let rpn = rng.range(1, 4);
+        let seed = rng.next_u64();
+        let global_c = global.clone();
+        World::run(nprocs, move |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let mut sizes_a = global_c.clone();
+            let mut sizes_b = global_c.clone();
+            sizes_a[axis_b] = a2wfft::decomp::decompose(global_c[axis_b], m, me).0;
+            sizes_b[axis_a] = a2wfft::decomp::decompose(global_c[axis_a], m, me).0;
+            let mut lr = Rng::new(seed ^ (me as u64 + 1));
+            let a: Vec<f64> =
+                (0..sizes_a.iter().product::<usize>()).map(|_| lr.f64()).collect();
+            let flat = RedistPlan::new(&comm, 8, &sizes_a, axis_a, &sizes_b, axis_b);
+            let mut hier =
+                HierarchicalPlan::new(&comm, 8, &sizes_a, axis_a, &sizes_b, axis_b, rpn);
+            let mut b_flat = vec![0.0f64; flat.elems_b()];
+            flat.execute(&a, &mut b_flat);
+            let mut b_hier = vec![0.0f64; hier.elems_b()];
+            hier.execute(&a, &mut b_hier);
+            assert_eq!(
+                as_bytes(&b_flat),
+                as_bytes(&b_hier),
+                "case {case} rank {me} rpn {rpn}: hierarchical disagrees with flat"
+            );
+            let mut back = vec![0.0f64; hier.elems_a()];
+            hier.execute_back(&b_hier, &mut back);
+            assert_eq!(
+                as_bytes(&a),
+                as_bytes(&back),
+                "case {case} rank {me} rpn {rpn}: roundtrip"
+            );
+        });
+    }
+}
+
+/// One transform case at precision `T`: the hierarchical method on both
+/// transports must produce spectra and roundtrips bitwise identical to the
+/// flat alltoallw reference (and therefore to each other).
+fn transform_case<T: Real>(
+    global: Vec<usize>,
+    ranks: usize,
+    grid_ndims: usize,
+    kind: Kind,
+    ranks_per_node: usize,
+    seed: u64,
+    case: usize,
+) {
+    World::run(ranks, move |comm| {
+        let me = comm.rank();
+        let dims = dims_create(comm.size(), grid_ndims);
+        let mk = |method: RedistMethod, transport: Transport| {
+            PfftPlan::<T>::with_topology(
+                &comm,
+                &global,
+                &dims,
+                kind,
+                method,
+                ExecMode::Blocking,
+                transport,
+                ranks_per_node,
+            )
+        };
+        let mut flat = mk(RedistMethod::Alltoallw, Transport::Mailbox);
+        let mut hier_mail = mk(RedistMethod::Hierarchical, Transport::Mailbox);
+        let mut hier_win = mk(RedistMethod::Hierarchical, Transport::Window);
+        let mut engine = NativeFft::<T>::new();
+        let ilen = flat.input_len();
+        let olen = flat.output_len();
+        let mut lr = Rng::new(seed ^ (me as u64).wrapping_mul(0x5851F42D4C957F2D));
+        match kind {
+            Kind::C2c => {
+                let input: Vec<Complex<T>> =
+                    (0..ilen).map(|_| Complex::from_f64(lr.f64(), lr.f64())).collect();
+                let mut spec_flat = vec![Complex::<T>::ZERO; olen];
+                let mut spec_mail = vec![Complex::<T>::ZERO; olen];
+                let mut spec_win = vec![Complex::<T>::ZERO; olen];
+                flat.forward(&mut engine, &input, &mut spec_flat);
+                hier_mail.forward(&mut engine, &input, &mut spec_mail);
+                hier_win.forward(&mut engine, &input, &mut spec_win);
+                assert_eq!(
+                    as_bytes(&spec_flat),
+                    as_bytes(&spec_mail),
+                    "case {case} rank {me} rpn {ranks_per_node} [{}]: hier/mailbox spectra",
+                    T::NAME
+                );
+                assert_eq!(
+                    as_bytes(&spec_flat),
+                    as_bytes(&spec_win),
+                    "case {case} rank {me} rpn {ranks_per_node} [{}]: hier/window spectra",
+                    T::NAME
+                );
+                let mut back_flat = vec![Complex::<T>::ZERO; ilen];
+                let mut back_hier = vec![Complex::<T>::ZERO; ilen];
+                flat.backward(&mut engine, &spec_flat, &mut back_flat);
+                hier_mail.backward(&mut engine, &spec_mail, &mut back_hier);
+                assert_eq!(
+                    as_bytes(&back_flat),
+                    as_bytes(&back_hier),
+                    "case {case} rank {me}: roundtrips differ"
+                );
+            }
+            Kind::R2c => {
+                let input: Vec<T> = (0..ilen).map(|_| T::from_f64(lr.f64())).collect();
+                let mut spec_flat = vec![Complex::<T>::ZERO; olen];
+                let mut spec_mail = vec![Complex::<T>::ZERO; olen];
+                let mut spec_win = vec![Complex::<T>::ZERO; olen];
+                flat.forward_r2c(&mut engine, &input, &mut spec_flat);
+                hier_mail.forward_r2c(&mut engine, &input, &mut spec_mail);
+                hier_win.forward_r2c(&mut engine, &input, &mut spec_win);
+                assert_eq!(
+                    as_bytes(&spec_flat),
+                    as_bytes(&spec_mail),
+                    "case {case} rank {me} rpn {ranks_per_node} [{}]: r2c hier/mailbox",
+                    T::NAME
+                );
+                assert_eq!(
+                    as_bytes(&spec_flat),
+                    as_bytes(&spec_win),
+                    "case {case} rank {me} rpn {ranks_per_node} [{}]: r2c hier/window",
+                    T::NAME
+                );
+                let mut back_flat = vec![T::ZERO; ilen];
+                let mut back_hier = vec![T::ZERO; ilen];
+                flat.backward_c2r(&mut engine, &spec_flat, &mut back_flat);
+                hier_win.backward_c2r(&mut engine, &spec_win, &mut back_hier);
+                assert_eq!(
+                    as_bytes(&back_flat),
+                    as_bytes(&back_hier),
+                    "case {case} rank {me}: c2r roundtrips differ"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_transform_spectra_bitwise_equal_across_topologies() {
+    // Random shapes / ranks / grids / kinds, node groupings sweeping
+    // 1 (degenerate: one node per rank) through ranks (one node total),
+    // including non-dividing groupings (ragged last node), both dtypes.
+    let mut rng = Rng::new(44);
+    for case in 0..10 {
+        let d = rng.range(3, 4);
+        let global: Vec<usize> = (0..d).map(|_| rng.range(4, 11)).collect();
+        let ranks = rng.range(2, 5);
+        let grid_ndims = rng.range(1, (d - 1).min(2));
+        let kind = if rng.below(2) == 0 { Kind::C2c } else { Kind::R2c };
+        let rpn = rng.range(1, 4);
+        let seed = rng.next_u64();
+        if rng.below(2) == 0 {
+            transform_case::<f64>(global, ranks, grid_ndims, kind, rpn, seed, case);
+        } else {
+            transform_case::<f32>(global, ranks, grid_ndims, kind, rpn, seed, case);
+        }
+    }
+}
+
+#[test]
+fn hierarchical_matches_traditional_baseline() {
+    // Cross-method triangle at a fixed pencil case: the node-aware
+    // two-phase exchange must agree bitwise with the traditional
+    // remap+alltoallv baseline — two maximally different data paths.
+    World::run(4, |comm| {
+        let me = comm.rank();
+        let global = vec![8usize, 12, 6];
+        let dims = dims_create(comm.size(), 2);
+        let mut hier = PfftPlan::<f64>::with_topology(
+            &comm,
+            &global,
+            &dims,
+            Kind::C2c,
+            RedistMethod::Hierarchical,
+            ExecMode::Blocking,
+            Transport::Window,
+            2,
+        );
+        let mut trad = PfftPlan::<f64>::with_dims(
+            &comm,
+            &global,
+            &dims,
+            Kind::C2c,
+            RedistMethod::Traditional,
+        );
+        let mut engine = NativeFft::<f64>::new();
+        let input: Vec<Complex<f64>> = (0..hier.input_len())
+            .map(|k| Complex::new((me * 1000 + k) as f64 * 0.25, (k as f64 * 0.5).sin()))
+            .collect();
+        let mut spec_hier = vec![Complex::<f64>::ZERO; hier.output_len()];
+        let mut spec_trad = vec![Complex::<f64>::ZERO; trad.output_len()];
+        hier.forward(&mut engine, &input, &mut spec_hier);
+        trad.forward(&mut engine, &input, &mut spec_trad);
+        assert_eq!(
+            as_bytes(&spec_hier),
+            as_bytes(&spec_trad),
+            "rank {me}: hierarchical != traditional baseline"
+        );
+    });
+}
+
+#[test]
+fn hierarchical_message_count_is_node_pairs() {
+    // The headline invariant at the plan layer: one combined inter-node
+    // message per remote node, independent of how many ranks share each
+    // node — against P-1 peer messages for the flat exchange.
+    for (ranks, rpn, nodes) in [(4usize, 2usize, 2usize), (4, 4, 1), (6, 2, 3), (5, 2, 3)] {
+        World::run(ranks, move |comm| {
+            let m = comm.size();
+            let me = comm.rank();
+            let mut sizes_a = vec![12usize, 8, 6];
+            let mut sizes_b = vec![12usize, 8, 6];
+            sizes_a[1] = a2wfft::decomp::decompose(8, m, me).0;
+            sizes_b[0] = a2wfft::decomp::decompose(12, m, me).0;
+            let hier = HierarchicalPlan::new(&comm, 8, &sizes_a, 0, &sizes_b, 1, rpn);
+            assert_eq!(hier.node_map().node_count(), nodes, "ranks {ranks} rpn {rpn}");
+            assert_eq!(
+                hier.inter_messages_per_exchange(),
+                nodes - 1,
+                "ranks {ranks} rpn {rpn}: must ship one message per remote node"
+            );
+            if nodes == 1 {
+                assert_eq!(hier.inter_bytes_per_exchange(), 0, "one node: nothing crosses");
+            }
+        });
+    }
+}

@@ -59,7 +59,7 @@ fn winner_label_under_fake<T: Real>(global: &[usize], ranks: usize, kind: Kind) 
     let target_c = target.clone();
     let reports = World::run(ranks, move |comm| {
         let report =
-            tune_plan::<T>(&comm, &global_v, kind, Budget::Tiny, None, false, &fake);
+            tune_plan::<T>(&comm, &global_v, kind, Budget::Tiny, 1, None, false, &fake);
         // Every rank agrees on the full ranking, not just the winner.
         let order: Vec<String> =
             report.entries.iter().map(|e| e.candidate.label()).collect();
@@ -165,6 +165,40 @@ fn tuned_plan_is_bitwise_equal_to_explicit_winner() {
 }
 
 #[test]
+fn wisdom_is_keyed_by_node_grouping() {
+    // A winner measured under a 2-ranks-per-node grouping persists under
+    // the /rpn2 signature and must not satisfy the flat problem (the
+    // hierarchical candidate's plans differ between the two machines).
+    let path = temp_path("wisdom_topology");
+    std::fs::remove_file(&path).ok();
+    let global = vec![16, 12, 10];
+    let ranks = 2;
+    let fake = FakeMeasurer::new(1.0);
+    let global_1 = global.clone();
+    let path_1 = path.clone();
+    let grouped = World::run(ranks, move |comm| {
+        tune_plan::<f64>(
+            &comm,
+            &global_1,
+            Kind::R2c,
+            Budget::Tiny,
+            2,
+            Some(path_1.as_path()),
+            false,
+            &fake,
+        )
+    })
+    .remove(0);
+    assert!(!grouped.from_wisdom);
+    assert!(grouped.signature.key().ends_with("/rpn2"), "{}", grouped.signature.key());
+    let w = Wisdom::load(&path).unwrap();
+    assert!(w.lookup(&grouped.signature.key()).is_some());
+    let flat = Signature::new::<f64>(&global, ranks, Kind::R2c);
+    assert!(w.lookup(&flat.key()).is_none(), "grouped wisdom leaked into the flat signature");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn wisdom_lifecycle_search_recall_force() {
     let path = temp_path("wisdom_lifecycle");
     std::fs::remove_file(&path).ok();
@@ -179,7 +213,16 @@ fn wisdom_lifecycle_search_recall_force() {
     let path_1 = path.clone();
     let fake_1 = FakeMeasurer::new(1.0).with(&target, 1e-6);
     let first = World::run(ranks, move |comm| {
-        tune_plan::<f64>(&comm, &global_1, Kind::R2c, Budget::Tiny, Some(path_1.as_path()), false, &fake_1)
+        tune_plan::<f64>(
+            &comm,
+            &global_1,
+            Kind::R2c,
+            Budget::Tiny,
+            1,
+            Some(path_1.as_path()),
+            false,
+            &fake_1,
+        )
     })
     .remove(0);
     assert!(!first.from_wisdom);
@@ -195,7 +238,16 @@ fn wisdom_lifecycle_search_recall_force() {
     let path_2 = path.clone();
     let fake_2 = FakeMeasurer::new(1.0).with(&other, 1e-9);
     let second = World::run(ranks, move |comm| {
-        tune_plan::<f64>(&comm, &global_2, Kind::R2c, Budget::Tiny, Some(path_2.as_path()), false, &fake_2)
+        tune_plan::<f64>(
+            &comm,
+            &global_2,
+            Kind::R2c,
+            Budget::Tiny,
+            1,
+            Some(path_2.as_path()),
+            false,
+            &fake_2,
+        )
     })
     .remove(0);
     assert!(second.from_wisdom, "repeat problem must resolve from wisdom");
@@ -209,7 +261,16 @@ fn wisdom_lifecycle_search_recall_force() {
     let path_3 = path.clone();
     let fake_3 = FakeMeasurer::new(1.0).with(&other, 1e-9);
     let third = World::run(ranks, move |comm| {
-        tune_plan::<f64>(&comm, &global_3, Kind::R2c, Budget::Tiny, Some(path_3.as_path()), true, &fake_3)
+        tune_plan::<f64>(
+            &comm,
+            &global_3,
+            Kind::R2c,
+            Budget::Tiny,
+            1,
+            Some(path_3.as_path()),
+            true,
+            &fake_3,
+        )
     })
     .remove(0);
     assert!(!third.from_wisdom);
