@@ -35,6 +35,12 @@
 
 use std::collections::HashMap;
 
+/// Bad user input: print the message and exit with the usage code (2).
+fn usage_die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
 /// Parsed command line: positionals + options.
 #[derive(Debug, Default)]
 pub struct Args {
@@ -77,16 +83,23 @@ impl Args {
         self.options.get(key).map(|s| s.as_str())
     }
 
-    /// Typed option with default.
+    /// Typed option with default. A malformed value is a usage error
+    /// (exit 2 with a message), never a panic with a backtrace.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: not a number: {v}"))).unwrap_or(default)
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| usage_die(&format!("--{key}: not a number: {v}"))))
+            .unwrap_or(default)
     }
 
     /// Comma-separated usize list.
     pub fn get_usizes(&self, key: &str) -> Option<Vec<usize>> {
         self.get(key).map(|v| {
             v.split(',')
-                .map(|p| p.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad list: {v}")))
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .unwrap_or_else(|_| usage_die(&format!("--{key}: bad list: {v}")))
+                })
                 .collect()
         })
     }

@@ -17,7 +17,7 @@ use std::io::Write as _;
 use std::path::PathBuf;
 
 use crate::coordinator::config::{Dtype, EngineKind, RunConfig};
-use crate::coordinator::driver::{run_config, RunReport};
+use crate::coordinator::driver::{run_config, RunError, RunReport};
 use crate::netmodel::figures::{FigRow, HEADER};
 use crate::pfft::{ExecMode, Kind, RedistMethod};
 
@@ -327,6 +327,30 @@ pub fn report_json(
         .num("imb_redist", rep.stats.redist.imbalance())
         .num("imb_overlap_fft", rep.stats.overlap_fft.imbalance())
         .num("imb_overlap_comm", rep.stats.overlap_comm.imbalance())
+        .int("trace_dropped", rep.trace_dropped)
+        .render()
+}
+
+/// Machine-readable failure row (`repro run --json` on a failed run): the
+/// run identity plus a structured `failure` object — variant kind, the
+/// failing rank for world failures (`null` otherwise), and the diagnostic
+/// context string.
+pub fn failure_json(label: &str, global: &[usize], ranks: usize, err: &RunError) -> String {
+    let (kind, rank, context) = match err {
+        RunError::Config(m) => ("config", None, m.as_str()),
+        RunError::Io(m) => ("io", None, m.as_str()),
+        RunError::Rank(e) => ("rank_failed", Some(e.rank() as u64), e.context()),
+    };
+    let mut fobj = JsonObj::new().str("kind", kind);
+    fobj = match rank {
+        Some(r) => fobj.int("rank", r),
+        None => fobj.raw("rank", "null".into()),
+    };
+    JsonObj::new()
+        .str("label", label)
+        .raw("global", json_usize_array(global))
+        .int("ranks", ranks as u64)
+        .raw("failure", fobj.str("context", context).render())
         .render()
 }
 
@@ -350,8 +374,10 @@ pub fn trace_finish(path: Option<PathBuf>) {
     let Some(path) = path else { return };
     crate::trace::set_enabled(false);
     let bundles = crate::trace::take_bundles();
-    crate::trace::write_chrome_trace(&path, &bundles)
-        .unwrap_or_else(|e| panic!("writing trace {}: {e}", path.display()));
+    if let Err(e) = crate::trace::write_chrome_trace(&path, &bundles) {
+        eprintln!("error: writing trace {}: {e}", path.display());
+        std::process::exit(3);
+    }
     if let Some(b) = bundles.last() {
         eprintln!("trace: wrote {} ({} world(s) gathered)", path.display(), bundles.len());
         eprint!("{}", crate::trace::imbalance(b).render_text());
@@ -398,5 +424,19 @@ mod tests {
     #[test]
     fn json_escape_control_chars() {
         assert_eq!(json_escape("x\ny\t\u{1}"), "x\\ny\\t\\u0001");
+    }
+
+    #[test]
+    fn failure_json_names_rank_and_context() {
+        let err = RunError::Rank(crate::simmpi::WorldError::RankFailed {
+            rank: 2,
+            context: "watchdog: barrier".into(),
+        });
+        let s = failure_json("chaos", &[8, 8], 4, &err);
+        assert!(s.contains("\"kind\": \"rank_failed\""), "{s}");
+        assert!(s.contains("\"rank\": 2"), "{s}");
+        assert!(s.contains("watchdog: barrier"), "{s}");
+        let s = failure_json("x", &[4], 1, &RunError::Io("writing x: denied".into()));
+        assert!(s.contains("\"kind\": \"io\"") && s.contains("\"rank\": null"), "{s}");
     }
 }

@@ -163,6 +163,16 @@ pub struct RunConfig {
     /// write a Chrome-trace/Perfetto JSON file to this path at the end
     /// (the driver also prints the imbalance report derived from it).
     pub trace: Option<PathBuf>,
+    /// Deterministic fault schedule injected into the measured world (the
+    /// CLI's `--fault-schedule` grammar; see [`crate::simmpi::FaultSpec`]).
+    /// Tuner worlds always run fault-free — faults target the measured run.
+    pub fault_schedule: Option<String>,
+    /// Seed of the per-rank fault randomness streams (`--fault-seed`).
+    pub fault_seed: u64,
+    /// Collective watchdog deadline in milliseconds applied to every
+    /// blocking wait of the measured world (`--watchdog-ms`; None = waits
+    /// block forever, the plain-MPI behaviour).
+    pub watchdog_ms: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -185,6 +195,9 @@ impl Default for RunConfig {
             budget: Budget::Normal,
             wisdom: None,
             trace: None,
+            fault_schedule: None,
+            fault_seed: 0,
+            watchdog_ms: None,
         }
     }
 }

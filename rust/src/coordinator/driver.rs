@@ -6,15 +6,41 @@
 //! stack below it — plans, buffers, redistribution payloads — is
 //! monomorphized over the chosen [`Real`] type.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::config::{Dtype, EngineKind, Knob, RunConfig};
 use crate::coordinator::metrics::{MetricsStats, RankMetrics};
 use crate::fft::{Complex, EngineCfg, NativeFft, Real, SerialFft};
 use crate::pfft::{Kind, PfftPlan};
 use crate::runtime::XlaFftEngine;
-use crate::simmpi::World;
+use crate::simmpi::{FaultSpec, World, WorldError, WorldOptions};
 use crate::tune::{search, tune_plan, Signature, TuneReport, TuneSpace, WallClock};
+
+/// Structured failure of a checked run ([`run_config_checked`]). The CLI
+/// maps each variant to a distinct exit code (usage / I-O / rank failure).
+#[derive(Debug)]
+pub enum RunError {
+    /// The configuration is unusable (e.g. an invalid fault schedule).
+    Config(String),
+    /// A file the run was asked to produce could not be written.
+    Io(String),
+    /// The simulated world failed — a rank panicked, an injected fault
+    /// killed it, or the collective watchdog expired — and tore down with
+    /// a structured diagnostic instead of hanging.
+    Rank(WorldError),
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Config(msg) => write!(f, "{msg}"),
+            RunError::Io(msg) => write!(f, "{msg}"),
+            RunError::Rank(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RunError {}
 
 /// Aggregated result of one configuration (the paper's "fastest of the
 /// outer loop, divided by the inner length", max-reduced across ranks).
@@ -68,6 +94,10 @@ pub struct RunReport {
     /// Whether the configuration was resolved by the autotuner
     /// ([`resolve_auto`]) rather than fixed by the caller.
     pub tuned: bool,
+    /// Trace-ring spans overwritten (summed across ranks) during the
+    /// measured world — nonzero means the trace file is incomplete (0
+    /// whenever tracing was off).
+    pub trace_dropped: u64,
     /// Min/mean/max of every time field across ranks (taken from the same
     /// best outer iteration as the max-reduced times above), so reports
     /// can show load imbalance instead of only the straggler's view.
@@ -186,13 +216,37 @@ fn resolve_typed<T: Real>(cfg: &RunConfig) -> (RunConfig, bool) {
 /// run dispatches on [`RunConfig::dtype`] and monomorphizes the whole
 /// stack.
 pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
+    run_config_checked(cfg, grid_ndims).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`run_config`] returning structured failures instead of panicking: a
+/// chaos run (fault schedule / watchdog configured) that kills a rank
+/// comes back as [`RunError::Rank`] with the failing rank and context,
+/// and the CLI maps each [`RunError`] variant to its exit code.
+pub fn run_config_checked(cfg: &RunConfig, grid_ndims: usize) -> Result<RunReport, RunError> {
     let (resolved, tuned) = resolve_auto(cfg);
     let mut rep = match resolved.dtype {
-        Dtype::F32 => run_config_typed::<f32>(&resolved, grid_ndims),
-        Dtype::F64 => run_config_typed::<f64>(&resolved, grid_ndims),
+        Dtype::F32 => run_config_typed_checked::<f32>(&resolved, grid_ndims)?,
+        Dtype::F64 => run_config_typed_checked::<f64>(&resolved, grid_ndims)?,
     };
     rep.tuned = tuned;
-    rep
+    Ok(rep)
+}
+
+/// The [`WorldOptions`] of the measured world: fault schedule (parsed,
+/// with a usage error on bad grammar), seed, and watchdog deadline. Tuner
+/// worlds ([`resolve_auto`]) never consult this — faults target the
+/// measured run only.
+fn world_options(cfg: &RunConfig) -> Result<WorldOptions, RunError> {
+    let faults = match &cfg.fault_schedule {
+        None => None,
+        Some(s) => Some(FaultSpec::parse(s).map_err(RunError::Config)?),
+    };
+    Ok(WorldOptions {
+        watchdog: cfg.watchdog_ms.map(Duration::from_millis),
+        faults,
+        fault_seed: cfg.fault_seed,
+    })
 }
 
 /// The monomorphic driver body: every buffer, twiddle table and
@@ -200,6 +254,15 @@ pub fn run_config(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
 /// be `Fixed` (callers with `Auto` knobs go through [`run_config`] /
 /// [`resolve_auto`]).
 pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunReport {
+    run_config_typed_checked::<T>(cfg, grid_ndims).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`run_config_typed`] returning structured failures (see
+/// [`run_config_checked`]).
+pub fn run_config_typed_checked<T: Real>(
+    cfg: &RunConfig,
+    grid_ndims: usize,
+) -> Result<RunReport, RunError> {
     let cfg = cfg.clone();
     let unresolved = "run_config_typed: Auto knob unresolved (use run_config or resolve_auto)";
     let method = cfg.method.fixed().expect(unresolved);
@@ -209,10 +272,11 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
     cfg.threads.fixed().expect(unresolved);
     let engine_cfg = cfg.engine_cfg();
     let grid = cfg.resolved_grid(grid_ndims);
+    let opts = world_options(&cfg)?;
     if cfg.trace.is_some() {
         crate::trace::set_enabled(true);
     }
-    let reports = World::run(cfg.ranks, |comm| {
+    let run = World::run_opts(cfg.ranks, opts, |comm| {
         // Engine-side copy accounting is per rank through the thread-local
         // counter mirror, so concurrent worlds (parallel tests) cannot
         // pollute this run's totals.
@@ -314,11 +378,35 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         comm.allreduce_u64(&mut eb, crate::simmpi::collective::ReduceOp::Sum);
         (m, stats, err[0], eb)
     });
+    let reports = match run {
+        Ok(r) => r,
+        Err(e) => {
+            // A failed world never ran the trace gather; discard any
+            // partial state so the next run starts clean.
+            if cfg.trace.is_some() {
+                crate::trace::set_enabled(false);
+                let _ = crate::trace::take_bundles();
+            }
+            return Err(RunError::Rank(e));
+        }
+    };
+    let mut trace_dropped = 0u64;
     if let Some(path) = &cfg.trace {
         crate::trace::set_enabled(false);
         let bundles = crate::trace::take_bundles();
+        if let Some(b) = bundles.last() {
+            trace_dropped = b.ranks.iter().map(|r| r.dropped).sum();
+            if trace_dropped > 0 {
+                eprintln!(
+                    "trace: warning: {trace_dropped} span(s) dropped across ranks (ring \
+                     wrapped at {} spans/rank; the timeline is incomplete — trace a \
+                     shorter region or raise trace::RING_CAP)",
+                    crate::trace::RING_CAP
+                );
+            }
+        }
         crate::trace::write_chrome_trace(path, &bundles)
-            .unwrap_or_else(|e| panic!("writing trace {}: {e}", path.display()));
+            .map_err(|e| RunError::Io(format!("writing trace {}: {e}", path.display())))?;
         // Diagnostics go to stderr so `--json` stdout stays parseable.
         if let Some(b) = bundles.last() {
             eprintln!("trace: wrote {} ({} world(s) gathered)", path.display(), bundles.len());
@@ -327,7 +415,7 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
     }
     let (m, stats, err, eb) = reports[0];
     let pair_scale = 1.0 / (cfg.inner * cfg.outer) as f64;
-    RunReport {
+    Ok(RunReport {
         total: m.total,
         fft: m.fft,
         redist: m.redist,
@@ -347,8 +435,9 @@ pub fn run_config_typed<T: Real>(cfg: &RunConfig, grid_ndims: usize) -> RunRepor
         threads: engine_cfg.threads as u64,
         nodes: cfg.ranks.div_ceil(cfg.ranks_per_node.max(1)) as u64,
         tuned: false,
+        trace_dropped,
         stats,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -576,6 +665,67 @@ mod tests {
         assert_eq!(resolved.method, cfg.method);
         assert_eq!(resolved.exec, cfg.exec);
         assert_eq!(resolved.transport, cfg.transport);
+    }
+
+    #[test]
+    fn checked_run_scripted_panic_yields_structured_failure() {
+        let cfg = RunConfig {
+            global: vec![8, 8, 8],
+            ranks: 2,
+            kind: Kind::C2c,
+            inner: 1,
+            outer: 1,
+            fault_schedule: Some("panic@1:span=exchange:at=1".into()),
+            watchdog_ms: Some(10_000),
+            ..Default::default()
+        };
+        match run_config_checked(&cfg, 2) {
+            Err(RunError::Rank(e)) => {
+                assert_eq!(e.rank(), 1);
+                assert!(e.context().contains("span 'exchange'"), "context: {}", e.context());
+            }
+            other => panic!("expected a Rank failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn checked_run_bad_schedule_is_config_error() {
+        let cfg =
+            RunConfig { fault_schedule: Some("explode@1".into()), ..Default::default() };
+        match run_config_checked(&cfg, 2) {
+            Err(RunError::Config(msg)) => assert!(msg.contains("unknown kind"), "{msg}"),
+            other => panic!("expected a Config error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn checked_run_with_benign_faults_is_bitwise_clean() {
+        // Delays, a transiently failing delivery (retried), and a
+        // reordered send must all be absorbed: same roundtrip error and
+        // identical payload accounting as the fault-free twin.
+        let base = RunConfig {
+            global: vec![8, 8, 8],
+            ranks: 2,
+            kind: Kind::C2c,
+            inner: 1,
+            outer: 1,
+            ..Default::default()
+        };
+        let clean = run_config(&base, 2);
+        let chaotic = run_config_checked(
+            &RunConfig {
+                fault_schedule: Some(
+                    "delay@0:us=30; drop@1:nth=2:count=2; reorder@0:nth=1".into(),
+                ),
+                fault_seed: 7,
+                watchdog_ms: Some(10_000),
+                ..base.clone()
+            },
+            2,
+        )
+        .expect("benign schedule must complete");
+        assert!(chaotic.max_err < 1e-10, "chaotic roundtrip err {}", chaotic.max_err);
+        assert_eq!(clean.bytes, chaotic.bytes, "faults must not change payload accounting");
     }
 
     #[test]

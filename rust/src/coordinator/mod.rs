@@ -19,7 +19,10 @@ pub mod metrics;
 pub mod trend;
 
 pub use config::{Dtype, EngineKind, Knob, RunConfig};
-pub use driver::{resolve_auto, run_config, run_config_typed, RunReport};
+pub use driver::{
+    resolve_auto, run_config, run_config_checked, run_config_typed, run_config_typed_checked,
+    RunError, RunReport,
+};
 pub use metrics::{FieldStats, MetricsStats, RankMetrics};
 
 pub use crate::simmpi::Transport;

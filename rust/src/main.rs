@@ -29,7 +29,8 @@ use std::path::PathBuf;
 
 use a2wfft::cli::Args;
 use a2wfft::coordinator::{
-    resolve_auto, run_config, trend, Budget, Dtype, EngineKind, Knob, RunConfig, Transport,
+    resolve_auto, run_config, run_config_checked, trend, Budget, Dtype, EngineKind, Knob,
+    RunConfig, RunError, Transport,
 };
 use a2wfft::netmodel::figures;
 use a2wfft::pfft::{ExecMode, Kind, RedistMethod};
@@ -61,6 +62,16 @@ fn validated(args: &Args, ctx: &str, options: &[&str], flags: &[&str]) {
     }
 }
 
+/// Reject bad user input with an actionable message and the usage exit
+/// code (2) — never a panic with a backtrace.
+///
+/// Exit codes: 0 success, 1 selftest/acceptance failure, 2 usage error,
+/// 3 file I/O error, 4 simulated rank failure (chaos/watchdog).
+fn usage_error(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
 fn print_help() {
     println!(
         "repro — parallel multidimensional FFT via advanced MPI (reproduction)\n\
@@ -74,7 +85,8 @@ fn print_help() {
          \x20           [--transport mailbox|window|auto]\n\
          \x20           [--inner I] [--outer O] [--json]\n\
          \x20           [--tune] [--budget tiny|normal|full] [--wisdom PATH]\n\
-         \x20           [--trace PATH]\n\
+         \x20           [--trace PATH] [--fault-schedule SPEC] [--fault-seed S]\n\
+         \x20           [--watchdog-ms MS]\n\
          \x20 repro tune [--global N,N,N] [--ranks R] [--ranks-per-node C]\n\
          \x20           [--kind r2c|c2c] [--dtype f32|f64]\n\
          \x20           [--budget tiny|normal|full] [--wisdom PATH] [--force] [--json]\n\
@@ -156,6 +168,33 @@ fn print_help() {
          \x20 prints to stderr. Tracing off costs one atomic load per span\n\
          \x20 site; the TSV/JSON rows also carry imb_* skew ratios\n\
          \n\
+         CHAOS (--fault-schedule, --fault-seed, --watchdog-ms):\n\
+         \x20 deterministic fault injection into the measured world. A\n\
+         \x20 schedule is `kind@rank[:key=val]*` clauses joined by `;`:\n\
+         \x20   delay@R[:op=send|recv|expose|pull|complete][:nth=N|:prob=P][:us=U]\n\
+         \x20   drop@R[:nth=N][:count=C]     transient delivery failure; the\n\
+         \x20                                transport retries with backoff and\n\
+         \x20                                fails the rank after 6 attempts\n\
+         \x20   reorder@R[:nth=N]            stash the Nth send, flush later\n\
+         \x20                                (per-(dest,tag) FIFO preserved)\n\
+         \x20   stall@R[:op=..][:nth=N][:us=U]\n\
+         \x20   panic@R:span=LABEL[:at=N]    scripted rank death at the Nth\n\
+         \x20                                entry of a trace span (e.g.\n\
+         \x20                                span=exchange)\n\
+         \x20 --fault-seed seeds the per-rank randomness streams (schedules\n\
+         \x20 with prob= draws); same seed + schedule => same injected ops.\n\
+         \x20 --watchdog-ms arms a deadline on every blocking wait: instead\n\
+         \x20 of hanging, the world aborts with per-rank diagnostics (who\n\
+         \x20 waits on whom, which tag, current span). A dead rank poisons\n\
+         \x20 the world: peers stop fast and the run reports the primary\n\
+         \x20 failure. Tuner worlds always run fault-free.\n\
+         \n\
+         EXIT CODES:\n\
+         \x20 0 success; 1 selftest/acceptance failure; 2 usage error;\n\
+         \x20 3 file I/O error; 4 simulated rank failure (chaos/watchdog) —\n\
+         \x20 with --json a failing run prints one JSON object with a\n\
+         \x20 `failure` field ({{kind, rank, context}}) to stdout\n\
+         \n\
          OUTPUT:\n\
          \x20 --json     print the run result as one machine-readable JSON object\n\
          \x20            (per-stage timings, dtype, chosen method/exec/transport,\n\
@@ -198,6 +237,9 @@ fn cmd_run(args: &Args) {
             "budget",
             "wisdom",
             "trace",
+            "fault-schedule",
+            "fault-seed",
+            "watchdog-ms",
         ],
         &["json", "tune", "help"],
     );
@@ -205,14 +247,17 @@ fn cmd_run(args: &Args) {
     let ranks = args.get_usize("ranks", 4);
     let ranks_per_node =
         args.get_usize("ranks-per-node", a2wfft::simmpi::ranks_per_node_from_env());
-    assert!(ranks_per_node >= 1, "--ranks-per-node: must be >= 1");
+    if ranks_per_node < 1 {
+        usage_error("--ranks-per-node: must be >= 1");
+    }
     let grid = args.get_usizes("grid").unwrap_or_default();
     let grid_ndims = args.get_usize(
         "grid-ndims",
         if grid.is_empty() { 2.min(global.len() - 1) } else { grid.len() },
     );
-    let kind = Kind::parse(args.get("kind").unwrap_or("r2c"))
-        .unwrap_or_else(|| panic!("--kind: unknown {} (c2c|r2c)", args.get("kind").unwrap()));
+    let kind = Kind::parse(args.get("kind").unwrap_or("r2c")).unwrap_or_else(|| {
+        usage_error(&format!("--kind: unknown {} (c2c|r2c)", args.get("kind").unwrap()))
+    });
     // `--tune` turns every knob the user did not spell out to Auto; any
     // knob can also be set to `auto` individually.
     let tune = args.has_flag("tune");
@@ -221,17 +266,17 @@ fn cmd_run(args: &Args) {
         None if tune => Knob::Auto,
         s => RedistMethod::parse(s.unwrap_or("alltoallw"))
             .unwrap_or_else(|| {
-                panic!(
+                usage_error(&format!(
                     "--method: unknown {} (alltoallw|traditional|hierarchical|auto)",
                     s.unwrap()
-                )
+                ))
             })
             .into(),
     };
     let engine = match args.get("engine").unwrap_or("native") {
         "native" => EngineKind::Native,
         "xla" => EngineKind::Xla,
-        other => panic!("--engine: unknown {other}"),
+        other => usage_error(&format!("--engine: unknown {other} (native|xla)")),
     };
     // The engine-shape knobs follow the same Auto convention as the
     // redistribution knobs: `--tune` flips unspecified ones to auto.
@@ -239,7 +284,7 @@ fn cmd_run(args: &Args) {
         Some("auto") => Knob::Auto,
         None if tune => Knob::Auto,
         s => s
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--lanes: not a number: {v}")))
+            .map(|v| v.parse().unwrap_or_else(|_| usage_error(&format!("--lanes: not a number: {v}"))))
             .unwrap_or(1)
             .into(),
     };
@@ -247,13 +292,15 @@ fn cmd_run(args: &Args) {
         Some("auto") => Knob::Auto,
         None if tune => Knob::Auto,
         s => s
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--threads: not a number: {v}")))
+            .map(|v| v.parse().unwrap_or_else(|_| usage_error(&format!("--threads: not a number: {v}"))))
             .unwrap_or(1)
             .into(),
     };
     let dtype = match args.get("dtype") {
         None => Dtype::F64,
-        Some(s) => Dtype::parse(s).unwrap_or_else(|| panic!("--dtype: unknown {s} (f32|f64)")),
+        Some(s) => {
+            Dtype::parse(s).unwrap_or_else(|| usage_error(&format!("--dtype: unknown {s} (f32|f64)")))
+        }
     };
     let depth = args.get_usize("overlap-depth", 4);
     let exec: Knob<ExecMode> = match args.get("exec") {
@@ -262,7 +309,7 @@ fn cmd_run(args: &Args) {
         s => match s.unwrap_or("blocking") {
             "blocking" | "block" => ExecMode::Blocking.into(),
             "pipelined" | "pipeline" | "overlap" => ExecMode::Pipelined { depth }.into(),
-            other => panic!("--exec: unknown {other} (blocking|pipelined|auto)"),
+            other => usage_error(&format!("--exec: unknown {other} (blocking|pipelined|auto)")),
         },
     };
     if exec.is_auto() && args.get("overlap-depth").is_some() {
@@ -277,14 +324,14 @@ fn cmd_run(args: &Args) {
         Some("auto") => Knob::Auto,
         None if tune => Knob::Auto,
         s => Transport::parse(s.unwrap_or("mailbox"))
-            .unwrap_or_else(|| panic!("--transport: unknown {} (mailbox|window|auto)", s.unwrap()))
+            .unwrap_or_else(|| {
+                usage_error(&format!("--transport: unknown {} (mailbox|window|auto)", s.unwrap()))
+            })
             .into(),
     };
-    if transport.fixed() == Some(Transport::Window)
-        && method.fixed() == Some(RedistMethod::Traditional)
-    {
-        panic!("--transport window requires --method alltoallw (the traditional baseline's contiguous alltoallv stays on the mailbox)");
-    }
+    // --transport window with --method traditional is a soft conflict: the
+    // plan downgrades to the mailbox with a rank-0 warning (graceful
+    // degradation) rather than refusing the run.
     let tuning = tune
         || method.is_auto()
         || exec.is_auto()
@@ -296,8 +343,24 @@ fn cmd_run(args: &Args) {
         None if tuning => Some(PathBuf::from("WISDOM.json")),
         None => None,
     };
-    let budget = Budget::parse(args.get("budget").unwrap_or("normal"))
-        .unwrap_or_else(|| panic!("--budget: unknown {} (tiny|normal|full)", args.get("budget").unwrap()));
+    let budget = Budget::parse(args.get("budget").unwrap_or("normal")).unwrap_or_else(|| {
+        usage_error(&format!("--budget: unknown {} (tiny|normal|full)", args.get("budget").unwrap()))
+    });
+    // Chaos knobs: validate the schedule grammar up front so a typo is a
+    // usage error (exit 2), not a mid-run failure.
+    let fault_schedule = args.get("fault-schedule").map(String::from);
+    if let Some(s) = &fault_schedule {
+        if let Err(e) = a2wfft::simmpi::FaultSpec::parse(s) {
+            usage_error(&format!("--fault-schedule: {e}"));
+        }
+    }
+    let fault_seed = args.get_usize("fault-seed", 0) as u64;
+    let watchdog_ms = args.get("watchdog-ms").map(|v| {
+        v.parse::<u64>()
+            .ok()
+            .filter(|&ms| ms > 0)
+            .unwrap_or_else(|| usage_error(&format!("--watchdog-ms: not a positive integer: {v}")))
+    });
     let cfg = RunConfig {
         global: global.clone(),
         grid,
@@ -316,12 +379,33 @@ fn cmd_run(args: &Args) {
         budget,
         wisdom,
         trace: args.get("trace").map(PathBuf::from),
+        fault_schedule,
+        fault_seed,
+        watchdog_ms,
     };
     // Resolve Auto knobs up front so the chosen grid is printable; the
     // resolved config runs without further tuning.
     let (cfg, tuned) = resolve_auto(&cfg);
     let run_grid = cfg.resolved_grid(grid_ndims);
-    let mut rep = run_config(&cfg, grid_ndims);
+    let mut rep = match run_config_checked(&cfg, grid_ndims) {
+        Ok(rep) => rep,
+        Err(err) => {
+            let code = match &err {
+                RunError::Config(_) => 2,
+                RunError::Io(_) => 3,
+                RunError::Rank(_) => 4,
+            };
+            if args.has_flag("json") {
+                let label = format!("run/{}", kind.name());
+                println!(
+                    "{}",
+                    a2wfft::coordinator::benchkit::failure_json(&label, &global, ranks, &err)
+                );
+            }
+            eprintln!("error: {err}");
+            std::process::exit(code);
+        }
+    };
     rep.tuned = tuned;
     let exec_label = if rep.overlap_depth > 0 {
         format!("{}-d{}", rep.exec, rep.overlap_depth)
@@ -388,15 +472,21 @@ fn cmd_tune(args: &Args) {
     let ranks = args.get_usize("ranks", 4);
     let ranks_per_node =
         args.get_usize("ranks-per-node", a2wfft::simmpi::ranks_per_node_from_env());
-    assert!(ranks_per_node >= 1, "--ranks-per-node: must be >= 1");
-    let kind = Kind::parse(args.get("kind").unwrap_or("r2c"))
-        .unwrap_or_else(|| panic!("--kind: unknown {} (c2c|r2c)", args.get("kind").unwrap()));
+    if ranks_per_node < 1 {
+        usage_error("--ranks-per-node: must be >= 1");
+    }
+    let kind = Kind::parse(args.get("kind").unwrap_or("r2c")).unwrap_or_else(|| {
+        usage_error(&format!("--kind: unknown {} (c2c|r2c)", args.get("kind").unwrap()))
+    });
     let dtype = match args.get("dtype") {
         None => Dtype::F64,
-        Some(s) => Dtype::parse(s).unwrap_or_else(|| panic!("--dtype: unknown {s} (f32|f64)")),
+        Some(s) => {
+            Dtype::parse(s).unwrap_or_else(|| usage_error(&format!("--dtype: unknown {s} (f32|f64)")))
+        }
     };
-    let budget = Budget::parse(args.get("budget").unwrap_or("normal"))
-        .unwrap_or_else(|| panic!("--budget: unknown {} (tiny|normal|full)", args.get("budget").unwrap()));
+    let budget = Budget::parse(args.get("budget").unwrap_or("normal")).unwrap_or_else(|| {
+        usage_error(&format!("--budget: unknown {} (tiny|normal|full)", args.get("budget").unwrap()))
+    });
     let wisdom = PathBuf::from(args.get("wisdom").unwrap_or("WISDOM.json"));
     let force = args.has_flag("force");
     let trace = args.get("trace").map(PathBuf::from);
@@ -428,8 +518,10 @@ fn cmd_tune(args: &Args) {
     if let Some(path) = &trace {
         a2wfft::trace::set_enabled(false);
         let bundles = a2wfft::trace::take_bundles();
-        a2wfft::trace::write_chrome_trace(path, &bundles)
-            .unwrap_or_else(|e| panic!("writing trace {}: {e}", path.display()));
+        if let Err(e) = a2wfft::trace::write_chrome_trace(path, &bundles) {
+            eprintln!("error: writing trace {}: {e}", path.display());
+            std::process::exit(3);
+        }
         // A slow candidate shows up as a skewed stage here; open the JSON
         // in Perfetto to see which one (diagnostics on stderr, like the
         // driver, so --json stdout stays parseable).
@@ -525,12 +617,13 @@ fn cmd_tune(args: &Args) {
 
 fn cmd_figure(args: &Args) {
     validated(args, "repro figure", &[], &["help"]);
-    let n: usize = args
+    let arg = args
         .positional
         .get(1)
-        .expect("figure number required (6..11)")
+        .unwrap_or_else(|| usage_error("figure number required (6..11)"));
+    let n: usize = arg
         .parse()
-        .expect("figure number must be an integer");
+        .unwrap_or_else(|_| usage_error(&format!("figure number must be an integer, got {arg:?}")));
     match figures::run_figure(n) {
         Some(rows) => {
             println!("# Paper figure {n} (netmodel, Shaheen XC40 calibration)");
@@ -566,7 +659,7 @@ fn cmd_selftest(args: &Args) {
     let transports: Vec<Transport> = match args.get("transport") {
         None => vec![Transport::Mailbox, Transport::Window],
         Some(s) => vec![Transport::parse(s)
-            .unwrap_or_else(|| panic!("--transport: unknown {s} (mailbox|window)"))],
+            .unwrap_or_else(|| usage_error(&format!("--transport: unknown {s} (mailbox|window)")))],
     };
     let cases: Vec<(Vec<usize>, usize, usize, Kind, ExecMode, Dtype)> = vec![
         (vec![16, 12, 10], 4, 1, Kind::C2c, ExecMode::Blocking, Dtype::F64),

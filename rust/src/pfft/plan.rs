@@ -359,12 +359,36 @@ impl<T: Real> PfftPlan<T> {
                 "pfft: ExecMode::Pipelined requires RedistMethod::Alltoallw"
             );
         }
-        if transport == Transport::Window {
-            assert!(
-                method == RedistMethod::Alltoallw || method == RedistMethod::Hierarchical,
-                "pfft: Transport::Window requires RedistMethod::Alltoallw or Hierarchical"
-            );
-        }
+        // Graceful transport degradation: a window-transport request that
+        // cannot be honoured (traditional method has no plan-based
+        // exchange; the exposure hub's peer bitmask caps a subgroup at 128
+        // ranks) falls back to the mailbox with a logged downgrade instead
+        // of failing plan construction — `PfftPlan::tuned` always yields a
+        // working plan.
+        let transport = if transport == Transport::Window {
+            let too_wide = subs.iter().any(|s| s.size() > 128);
+            if method == RedistMethod::Traditional {
+                if comm.rank() == 0 {
+                    eprintln!(
+                        "pfft: warning: Transport::Window is not available for \
+                         RedistMethod::Traditional; downgrading to Transport::Mailbox"
+                    );
+                }
+                Transport::Mailbox
+            } else if too_wide {
+                if comm.rank() == 0 {
+                    eprintln!(
+                        "pfft: warning: Transport::Window caps a redistribution subgroup \
+                         at 128 ranks; downgrading to Transport::Mailbox"
+                    );
+                }
+                Transport::Mailbox
+            } else {
+                Transport::Window
+            }
+        } else {
+            transport
+        };
         let elem = std::mem::size_of::<Complex<T>>();
         let redists: Vec<RedistKind> = (0..r)
             .map(|t| {

@@ -317,7 +317,8 @@ impl HierDirection {
                 let (src, pulled): (&[u8], bool) = if ml == me_l {
                     (a, false)
                 } else {
-                    let span = intra.hub().pull(ml, tag_in.expect("intra pull without epoch"));
+                    let span =
+                        intra.hub().pull(intra.ctl(), me_l, ml, tag_in.expect("intra pull without epoch"));
                     // SAFETY: the owner keeps its source array alive and
                     // unwritten until wait_drained below — the epoch
                     // contract.
@@ -353,7 +354,7 @@ impl HierDirection {
                 }
             }
             if let Some(tag) = tag_in {
-                intra.hub().wait_drained(me_l, tag);
+                intra.hub().wait_drained(intra.ctl(), me_l, me_l, tag);
             }
         }
 
@@ -383,7 +384,7 @@ impl HierDirection {
                         );
                         for jc in 0..n_nodes - 1 {
                             let j = Self::remote_node(my_node, jc);
-                            let span = leaders.hub().pull(j, tag);
+                            let span = leaders.hub().pull(leaders.ctl(), my_node, j, tag);
                             // SAFETY: peer leader's scratch stays alive and
                             // unwritten until its wait_drained.
                             let src = unsafe { span.as_slice() };
@@ -395,7 +396,7 @@ impl HierDirection {
                             leaders.add_window_bytes(plan.bytes());
                             leaders.hub().release(j, tag);
                         }
-                        leaders.hub().wait_drained(my_node, tag);
+                        leaders.hub().wait_drained(leaders.ctl(), my_node, my_node, tag);
                     }
                 }
             }
@@ -427,7 +428,7 @@ impl HierDirection {
                     }
                     if nsz > 1 {
                         for &tag in &self.tags_agg {
-                            intra.hub().wait_drained(me_l, tag);
+                            intra.hub().wait_drained(intra.ctl(), me_l, me_l, tag);
                         }
                     }
                     if transport == Transport::Mailbox {
@@ -439,7 +440,7 @@ impl HierDirection {
                     }
                 } else {
                     for jc in 0..n_nodes - 1 {
-                        let span = intra.hub().pull(0, self.tags_agg[jc]);
+                        let span = intra.hub().pull(intra.ctl(), me_l, 0, self.tags_agg[jc]);
                         // SAFETY: the leader keeps the aggregate alive until
                         // its wait_drained.
                         let src = unsafe { span.as_slice() };

@@ -556,7 +556,7 @@ impl PipelinedRedistPlan {
         let me = comm.rank();
         let hub = comm.hub();
         for tag in self.deferred_drains.drain(..) {
-            hub.wait_drained(me, tag);
+            hub.wait_drained(comm.ctl(), me, me, tag);
         }
     }
 

@@ -15,9 +15,15 @@
 //! sub-grids ([`super::topology`]).
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use super::fault::{self, FaultAbort, FaultOp};
+use super::watchdog::{
+    abort_world, install_quiet_abort_hook, watchdog_context, AbortSignal, RankFailure,
+    WaitDeadline, WorldCtl, WorldError, WorldOptions, POLL,
+};
 use super::window::{ExposureHub, WinRegistry};
 use super::{as_bytes, as_bytes_mut, Pod};
 
@@ -55,9 +61,10 @@ impl Mailbox {
         }
     }
 
-    fn pop(&self, src: usize, tag: u32) -> Vec<u8> {
+    fn pop(&self, ctl: &WorldCtl, me: usize, src: usize, tag: u32) -> Vec<u8> {
         let key = (src, tag);
         let mut g = self.m.lock().unwrap();
+        let dl = WaitDeadline::new(ctl);
         loop {
             if let Some(b) = g.get_mut(&key) {
                 if let Some(data) = b.q.pop_front() {
@@ -70,11 +77,38 @@ impl Mailbox {
             let b = g.entry(key).or_insert_with(Bucket::new);
             b.waiters += 1;
             let cv = Arc::clone(&b.cv);
-            g = cv.wait(g).unwrap();
+            g = cv.wait_timeout(g, POLL).unwrap().0;
             if let Some(b) = g.get_mut(&key) {
                 b.waiters -= 1;
             }
+            if ctl.poisoned() {
+                drop(g);
+                abort_world();
+            }
+            if dl.expired() {
+                let ctx = format!(
+                    "{}; unmatched inbox: [{}]",
+                    watchdog_context(
+                        ctl,
+                        &format!("recv(from=rank {src}, tag={tag:#x}) on rank {me}")
+                    ),
+                    Self::summarize(&g)
+                );
+                drop(g);
+                ctl.fail(me, ctx);
+            }
         }
+    }
+
+    /// One-line summary of the queued-but-unmatched messages, for the
+    /// watchdog diagnostic: `(src=1, tag=0x7, n=3)` per live bucket.
+    fn summarize(g: &HashMap<(usize, u32), Bucket>) -> String {
+        let mut keys: Vec<_> = g.iter().filter(|(_, b)| !b.q.is_empty()).collect();
+        keys.sort_by_key(|((s, t), _)| (*s, *t));
+        keys.iter()
+            .map(|((s, t), b)| format!("(src={s}, tag={t:#x}, n={})", b.q.len()))
+            .collect::<Vec<_>>()
+            .join(", ")
     }
 
     /// Non-blocking variant of [`Mailbox::pop`]: returns `None` when no
@@ -102,7 +136,7 @@ impl BarrierState {
         BarrierState { m: Mutex::new((0, 0)), cv: Condvar::new() }
     }
 
-    fn wait(&self, size: usize) {
+    fn wait(&self, ctl: &WorldCtl, me: usize, size: usize) {
         let mut g = self.m.lock().unwrap();
         let phase = g.1;
         g.0 += 1;
@@ -111,8 +145,24 @@ impl BarrierState {
             g.1 = g.1.wrapping_add(1);
             self.cv.notify_all();
         } else {
+            let dl = WaitDeadline::new(ctl);
             while g.1 == phase {
-                g = self.cv.wait(g).unwrap();
+                g = self.cv.wait_timeout(g, POLL).unwrap().0;
+                if g.1 != phase {
+                    break;
+                }
+                if ctl.poisoned() {
+                    drop(g);
+                    abort_world();
+                }
+                if dl.expired() {
+                    let ctx = watchdog_context(
+                        ctl,
+                        &format!("barrier on rank {me} ({}/{size} ranks arrived)", g.0),
+                    );
+                    drop(g);
+                    ctl.fail(me, ctx);
+                }
             }
         }
     }
@@ -155,15 +205,19 @@ pub(crate) struct WorldState {
     /// Payload bytes moved by the one-copy window transport (these never
     /// touch a mailbox; see [`super::window`]).
     pub(crate) bytes_window: AtomicU64,
+    /// Poison / watchdog / fault-injection control, shared by every
+    /// communicator of the world (see [`super::watchdog`]).
+    pub(crate) ctl: WorldCtl,
 }
 
 impl WorldState {
-    fn new() -> Self {
+    fn new(ctl: WorldCtl) -> Self {
         WorldState {
             next_ctx: AtomicU64::new(1),
             bytes_sent: AtomicU64::new(0),
             messages_sent: AtomicU64::new(0),
             bytes_window: AtomicU64::new(0),
+            ctl,
         }
     }
 
@@ -290,19 +344,123 @@ impl Comm {
         self.state.win_seq[self.rank].fetch_add(1, Ordering::Relaxed)
     }
 
+    /// Per-world poison / watchdog / fault control block.
+    pub(crate) fn ctl(&self) -> &WorldCtl {
+        &self.state.world.ctl
+    }
+
     /// Non-blocking-buffered send of a raw byte payload (like `MPI_Send` with
     /// a buffered protocol: it never blocks, the mailbox is unbounded).
     pub fn send_bytes(&self, to: usize, tag: u32, data: Vec<u8>) {
         assert!(to < self.size(), "send to rank {to} out of range");
+        // Fault-free worlds take this branch-only fast path: injection is
+        // one pointer-sized load away from fully compiled out.
+        if self.ctl().faults.is_some() {
+            return self.send_bytes_faulty(to, tag, data);
+        }
+        self.deliver(to, tag, data);
+    }
+
+    /// [`Comm::send_bytes`] minus the fault-injection check: the control
+    /// arm of the chaos-overhead bench guard (like
+    /// [`TransferPlan::execute_untraced`](super::datatype::TransferPlan)
+    /// for the tracer). Not for general use — a fault schedule would be
+    /// silently bypassed.
+    pub fn send_bytes_unfaulted(&self, to: usize, tag: u32, data: Vec<u8>) {
+        assert!(to < self.size(), "send to rank {to} out of range");
+        self.deliver(to, tag, data);
+    }
+
+    fn deliver(&self, to: usize, tag: u32, data: Vec<u8>) {
         self.state.world.bytes_sent.fetch_add(data.len() as u64, Ordering::Relaxed);
         self.state.world.messages_sent.fetch_add(1, Ordering::Relaxed);
         self.state.mailboxes[to].push(self.rank, tag, data);
     }
 
+    /// Fault-schedule send path: injected delay, reorder stash, and
+    /// transient delivery failure with bounded exponential-backoff retry.
+    #[cold]
+    fn send_bytes_faulty(&self, to: usize, tag: u32, data: Vec<u8>) {
+        let ctl = self.ctl();
+        ctl.abort_if_poisoned();
+        let plan = ctl.faults.as_ref().unwrap();
+        let d = plan.on_send(self.rank);
+        if d.delay_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(d.delay_us));
+        }
+        if d.stash {
+            // Reordered: delivered after the next send (or at teardown).
+            plan.stash_put(self.rank, to, tag, data);
+            return;
+        }
+        // Same-key stashed messages go first so per-(src, tag) FIFO — the
+        // MPI non-overtaking rule receivers rely on — is preserved.
+        for (t, tg, dd) in plan.stash_take_matching(self.rank, to, tag) {
+            self.deliver(t, tg, dd);
+        }
+        if d.fail_count > 0 {
+            let mut attempt = 0u32;
+            while attempt < d.fail_count {
+                if attempt >= fault::MAX_DELIVERY_RETRIES {
+                    ctl.fail(
+                        self.rank,
+                        format!(
+                            "fault: delivery from rank {} to rank {to} (tag {tag:#x}) failed \
+                             {} times; {} retries exhausted",
+                            self.rank,
+                            d.fail_count,
+                            fault::MAX_DELIVERY_RETRIES
+                        ),
+                    );
+                }
+                std::thread::sleep(std::time::Duration::from_micros(
+                    fault::RETRY_BACKOFF_US << attempt,
+                ));
+                attempt += 1;
+            }
+        }
+        self.deliver(to, tag, data);
+        // The reordering becomes visible here: earlier stashed messages
+        // (on other match keys) land after this one.
+        for (t, tg, dd) in plan.stash_take_all(self.rank) {
+            self.deliver(t, tg, dd);
+        }
+    }
+
+    /// Flush any reorder-stashed messages (rank teardown: no message is
+    /// ever lost to a schedule whose rank stops sending).
+    pub(crate) fn fault_drain(&self) {
+        if let Some(plan) = &self.ctl().faults {
+            for (t, tg, dd) in plan.stash_take_all(self.rank) {
+                self.deliver(t, tg, dd);
+            }
+        }
+    }
+
+    /// Count one occurrence of `op` on this rank's fault plan (if any) and
+    /// sleep out the injected delay. No-op — one pointer-sized load — in a
+    /// fault-free world.
+    pub(crate) fn fault_op(&self, op: FaultOp) {
+        if let Some(plan) = &self.ctl().faults {
+            let us = plan.on_op(self.rank, op);
+            if us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(us));
+            }
+        }
+    }
+
     /// Blocking receive of the next byte payload matching `(from, tag)`.
     pub fn recv_bytes(&self, from: usize, tag: u32) -> Vec<u8> {
         assert!(from < self.size(), "recv from rank {from} out of range");
-        self.state.mailboxes[self.rank].pop(from, tag)
+        self.fault_op(FaultOp::Recv);
+        self.state.mailboxes[self.rank].pop(self.ctl(), self.rank, from, tag)
+    }
+
+    /// [`Comm::recv_bytes`] minus the fault-injection check: the control
+    /// arm of the chaos-overhead bench guard. Not for general use.
+    pub fn recv_bytes_unfaulted(&self, from: usize, tag: u32) -> Vec<u8> {
+        assert!(from < self.size(), "recv from rank {from} out of range");
+        self.state.mailboxes[self.rank].pop(self.ctl(), self.rank, from, tag)
     }
 
     /// Non-blocking receive: `Some(payload)` if a message matching
@@ -347,7 +505,7 @@ impl Comm {
 
     /// Synchronize all ranks of this communicator (`MPI_Barrier`).
     pub fn barrier(&self) {
-        self.state.barrier.wait(self.state.size);
+        self.state.barrier.wait(self.ctl(), self.rank, self.state.size);
     }
 
     /// Collectively split this communicator (`MPI_COMM_SPLIT`).
@@ -358,10 +516,24 @@ impl Comm {
     pub fn split(&self, color: i64, key: i64) -> Option<Comm> {
         let st = &self.state.split;
         let size = self.state.size;
+        let ctl = self.ctl();
+        let dl = WaitDeadline::new(ctl);
         let mut g = st.m.lock().unwrap();
         // Wait for the previous split generation to fully drain.
         while g.result.is_some() && g.departed < size {
-            g = st.cv.wait(g).unwrap();
+            g = st.cv.wait_timeout(g, POLL).unwrap().0;
+            if ctl.poisoned() {
+                drop(g);
+                abort_world();
+            }
+            if dl.expired() {
+                let ctx = watchdog_context(
+                    ctl,
+                    &format!("split drain on rank {} ({}/{size} departed)", self.rank, g.departed),
+                );
+                drop(g);
+                ctl.fail(self.rank, ctx);
+            }
         }
         if g.result.is_some() {
             // Last generation fully departed; reset.
@@ -403,7 +575,22 @@ impl Comm {
             st.cv.notify_all();
         } else {
             while g.result.is_none() {
-                g = st.cv.wait(g).unwrap();
+                g = st.cv.wait_timeout(g, POLL).unwrap().0;
+                if g.result.is_some() {
+                    break;
+                }
+                if ctl.poisoned() {
+                    drop(g);
+                    abort_world();
+                }
+                if dl.expired() {
+                    let ctx = watchdog_context(
+                        ctl,
+                        &format!("split on rank {} ({}/{size} ranks arrived)", self.rank, g.arrived),
+                    );
+                    drop(g);
+                    ctl.fail(self.rank, ctx);
+                }
             }
         }
         let mine = g.result.as_ref().unwrap()[self.rank].clone();
@@ -440,37 +627,128 @@ impl World {
     /// return the per-rank results in rank order.
     ///
     /// Panics in any rank propagate (the whole world aborts), mirroring an
-    /// MPI job failure.
+    /// MPI job failure — but peers blocked on the dead rank notice the
+    /// poison and tear down in order instead of deadlocking, so the panic
+    /// always surfaces.
     pub fn run<F, R>(size: usize, f: F) -> Vec<R>
     where
         F: Fn(Comm) -> R + Sync,
         R: Send,
     {
+        match Self::run_inner(size, WorldOptions::default(), f) {
+            Ok(v) => v,
+            Err((fail, payload)) => match payload {
+                // Re-raise the failing rank's own panic so callers (and
+                // #[should_panic] tests) observe the original payload.
+                Some(p) if p.downcast_ref::<AbortSignal>().is_none() => {
+                    std::panic::resume_unwind(p)
+                }
+                _ => panic!(
+                    "{}",
+                    WorldError::RankFailed { rank: fail.rank, context: fail.context }
+                ),
+            },
+        }
+    }
+
+    /// Like [`World::run`], but with chaos options (fault schedule,
+    /// watchdog) and a structured result: `Err(WorldError::RankFailed)`
+    /// instead of a propagated panic when any rank fails.
+    pub fn run_opts<F, R>(size: usize, opts: WorldOptions, f: F) -> Result<Vec<R>, WorldError>
+    where
+        F: Fn(Comm) -> R + Sync,
+        R: Send,
+    {
+        Self::run_inner(size, opts, f)
+            .map_err(|(fail, _)| WorldError::RankFailed { rank: fail.rank, context: fail.context })
+    }
+
+    /// Shared engine of `run`/`run_opts`: every rank closure runs inside
+    /// `catch_unwind`; the first failure poisons the world (waking every
+    /// blocked peer within one poll interval), later unwinds are cascades.
+    /// On failure the primary rank's panic payload rides along for `run`'s
+    /// compatibility re-raise.
+    #[allow(clippy::type_complexity)]
+    fn run_inner<F, R>(
+        size: usize,
+        opts: WorldOptions,
+        f: F,
+    ) -> Result<Vec<R>, (RankFailure, Option<Box<dyn std::any::Any + Send>>)>
+    where
+        F: Fn(Comm) -> R + Sync,
+        R: Send,
+    {
         assert!(size > 0, "world size must be positive");
-        let world = Arc::new(WorldState::new());
-        let state = CommState::new(world, size);
+        install_quiet_abort_hook();
+        let world = Arc::new(WorldState::new(WorldCtl::new(&opts, size)));
+        let state = CommState::new(world.clone(), size);
+        let _chaos_gate = world.ctl.chaos().then(fault::ChaosGuard::new);
         let mut results: Vec<Option<R>> = (0..size).map(|_| None).collect();
+        let mut payloads: Vec<Option<Box<dyn std::any::Any + Send>>> =
+            (0..size).map(|_| None).collect();
         std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(size);
-            for (rank, slot) in results.iter_mut().enumerate() {
+            for ((rank, slot), pslot) in
+                results.iter_mut().enumerate().zip(payloads.iter_mut())
+            {
                 let comm = Comm { rank, state: state.clone() };
                 let f = &f;
-                handles.push(scope.spawn(move || {
-                    let flush = comm.clone();
-                    *slot = Some(f(comm));
-                    // Ship (or discard) this rank's trace ring after the user
-                    // closure returns, while the world is still alive.
-                    crate::trace::rank_flush(&flush);
-                }));
-            }
-            for h in handles {
-                if let Err(e) = h.join() {
-                    std::panic::resume_unwind(e);
-                }
+                scope.spawn(move || {
+                    let _fault_bind =
+                        comm.ctl().faults.as_ref().map(|p| fault::bind_rank(p.clone(), rank));
+                    let tear = comm.clone();
+                    match catch_unwind(AssertUnwindSafe(|| f(comm))) {
+                        Ok(v) => *slot = Some(v),
+                        Err(p) => {
+                            record_rank_panic(tear.ctl(), rank, p.as_ref());
+                            *pslot = Some(p);
+                        }
+                    }
+                    // Teardown while the world is still alive: flush any
+                    // reorder-stashed messages, then ship (or discard) the
+                    // trace ring. Both may hit the poisoned world, so they
+                    // stay inside their own catch.
+                    let _ = catch_unwind(AssertUnwindSafe(|| {
+                        tear.fault_drain();
+                        crate::trace::rank_flush(&tear);
+                    }));
+                });
             }
         });
-        results.into_iter().map(|r| r.expect("rank produced no result")).collect()
+        match world.ctl.failure() {
+            None => Ok(results
+                .into_iter()
+                .map(|r| r.expect("rank produced no result"))
+                .collect()),
+            Some(fail) => {
+                let payload = payloads.swap_remove(fail.rank);
+                Err((fail, payload))
+            }
+        }
     }
+}
+
+/// Classify a caught rank panic: poison cascades ([`AbortSignal`]) are not
+/// failures; everything else records this rank as the (first) failure with
+/// the best context string the payload offers.
+fn record_rank_panic(ctl: &WorldCtl, rank: usize, p: &(dyn std::any::Any + Send)) {
+    if p.downcast_ref::<AbortSignal>().is_some() {
+        return;
+    }
+    let span = crate::trace::current_span_label();
+    let context = if let Some(fa) = p.downcast_ref::<FaultAbort>() {
+        fa.context.clone()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("rank panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<&'static str>() {
+        format!("rank panicked: {s}")
+    } else {
+        "rank panicked".to_string()
+    };
+    let context = match span {
+        Some(label) => format!("{context} [span {label}]"),
+        None => context,
+    };
+    ctl.record(rank, context);
 }
 
 /// Deterministic map rank -> node id when simulating `cores_per_node`

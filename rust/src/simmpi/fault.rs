@@ -1,0 +1,649 @@
+//! Deterministic fault injection for the simulated MPI stack.
+//!
+//! A [`FaultSpec`] is parsed from a compact schedule string (the CLI's
+//! `--fault-schedule`), instantiated once per world as a [`FaultPlan`] with
+//! per-rank deterministic state (operation counters plus a seeded splitmix64
+//! stream per rank), and consulted from the transport layers: mailbox
+//! send/recv, window expose/pull epochs, request completion, and trace-span
+//! boundaries. The same `(schedule, seed)` pair always produces the same
+//! fault sequence, so a chaos failure reproduces exactly.
+//!
+//! ## Schedule grammar
+//!
+//! Clauses are separated by `;`; each clause is `kind@rank[:key=val]*` where
+//! `rank` is a world rank or `*` (every rank):
+//!
+//! * `delay@R[:op=send|recv|expose|pull|complete][:nth=N|:prob=P][:us=U]` —
+//!   sleep `U` microseconds (default 50) before the selected operation
+//!   (default `send`); `nth` hits the N-th occurrence (1-based), `prob`
+//!   hits each occurrence with probability `P` drawn from the rank's seeded
+//!   stream, neither hits every occurrence.
+//! * `drop@R[:nth=N][:count=C]` — the N-th send's delivery transiently
+//!   fails `C` times (default 1); the mailbox retries with exponential
+//!   backoff up to [`MAX_DELIVERY_RETRIES`] attempts, then raises a
+//!   structured rank failure (retries exhausted).
+//! * `reorder@R[:nth=N]` — stash the N-th send and deliver it after the
+//!   following send (per-`(dest, tag)` FIFO order is preserved, as a real
+//!   MPI library must; the reordering is visible across match keys).
+//! * `stall@R[:op=...][:nth=N][:us=U]` — one-shot sleep of `U` microseconds
+//!   (default 1000) before the N-th (default 1st) selected operation.
+//! * `panic@R:span=LABEL[:at=N]` — panic the rank at the N-th (default 1st)
+//!   entry of the named trace span (span names are the `trace_span!` labels,
+//!   e.g. `exchange`, `chunk_c2c`); works with tracing disabled.
+//!
+//! Example: `delay@0:op=send:prob=0.2:us=80; drop@2:nth=3:count=2;
+//! panic@1:span=exchange:at=2`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Delivery attempts the mailbox makes for a transiently failing send
+/// before declaring the peer unreachable (structured rank failure).
+pub const MAX_DELIVERY_RETRIES: u32 = 6;
+
+/// Base backoff of the delivery retry loop (doubles per attempt).
+pub const RETRY_BACKOFF_US: u64 = 20;
+
+/// Operations a fault clause can target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultOp {
+    /// Mailbox send (message delivery into the peer's mailbox).
+    Send,
+    /// Mailbox receive (before the blocking match).
+    Recv,
+    /// Window-transport span exposure (epoch open).
+    Expose,
+    /// Window-transport pull of a peer's exposed span.
+    Pull,
+    /// Nonblocking/persistent request completion (test/wait).
+    Complete,
+}
+
+impl FaultOp {
+    const ALL: [FaultOp; 5] =
+        [FaultOp::Send, FaultOp::Recv, FaultOp::Expose, FaultOp::Pull, FaultOp::Complete];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultOp::Send => "send",
+            FaultOp::Recv => "recv",
+            FaultOp::Expose => "expose",
+            FaultOp::Pull => "pull",
+            FaultOp::Complete => "complete",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultOp> {
+        FaultOp::ALL.iter().copied().find(|op| op.name() == s)
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            FaultOp::Send => 0,
+            FaultOp::Recv => 1,
+            FaultOp::Expose => 2,
+            FaultOp::Pull => 3,
+            FaultOp::Complete => 4,
+        }
+    }
+}
+
+/// One parsed fault behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Sleep `us` microseconds before matching occurrences of `op`.
+    Delay { op: FaultOp, nth: Option<u64>, prob: Option<f64>, us: u64 },
+    /// The `nth` send's delivery transiently fails `count` times.
+    Drop { nth: u64, count: u32 },
+    /// Stash the `nth` send; deliver it after the following send.
+    Reorder { nth: u64 },
+    /// One-shot sleep of `us` microseconds before the `nth` `op`.
+    Stall { op: FaultOp, nth: u64, us: u64 },
+    /// Panic at the `at`-th entry of the trace span named `span`.
+    Panic { span: String, at: u64 },
+}
+
+/// A fault behaviour bound to a rank selector (`None` = every rank).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultClause {
+    pub rank: Option<usize>,
+    pub kind: FaultKind,
+}
+
+/// A parsed fault schedule (see the module docs for the grammar).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    pub clauses: Vec<FaultClause>,
+}
+
+fn kv_u64(kv: &HashMap<&str, &str>, key: &str, default: u64, raw: &str) -> Result<u64, String> {
+    match kv.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse::<u64>()
+            .map_err(|_| format!("fault clause `{raw}`: {key} must be an integer, got `{v}`")),
+    }
+}
+
+impl FaultSpec {
+    /// Parse a schedule string; returns a message naming the offending
+    /// clause on any syntax error (the CLI prints it and exits with the
+    /// usage code).
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut clauses = Vec::new();
+        for raw in s.split(';') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            clauses.push(Self::parse_clause(raw)?);
+        }
+        if clauses.is_empty() {
+            return Err("fault schedule is empty (expected kind@rank[:key=val]*; ...)".into());
+        }
+        Ok(FaultSpec { clauses })
+    }
+
+    fn parse_clause(raw: &str) -> Result<FaultClause, String> {
+        let mut parts = raw.split(':');
+        let head = parts.next().unwrap_or_default().trim();
+        let (kind_s, rank_s) = head.split_once('@').ok_or_else(|| {
+            format!("fault clause `{raw}`: expected kind@rank[:key=val]* (see --fault-schedule)")
+        })?;
+        let rank = if rank_s == "*" {
+            None
+        } else {
+            Some(rank_s.parse::<usize>().map_err(|_| {
+                format!("fault clause `{raw}`: rank must be an integer or `*`, got `{rank_s}`")
+            })?)
+        };
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        for p in parts {
+            let (k, v) = p.split_once('=').ok_or_else(|| {
+                format!("fault clause `{raw}`: expected key=val, got `{p}`")
+            })?;
+            kv.insert(k.trim(), v.trim());
+        }
+        let op = match kv.get("op") {
+            None => FaultOp::Send,
+            Some(v) => FaultOp::parse(v).ok_or_else(|| {
+                format!(
+                    "fault clause `{raw}`: unknown op `{v}` (send|recv|expose|pull|complete)"
+                )
+            })?,
+        };
+        let (kind, allowed): (FaultKind, &[&str]) = match kind_s {
+            "delay" => {
+                let nth = match kv.get("nth") {
+                    None => None,
+                    Some(_) => Some(kv_u64(&kv, "nth", 1, raw)?),
+                };
+                let prob = match kv.get("prob") {
+                    None => None,
+                    Some(v) => {
+                        let p = v.parse::<f64>().map_err(|_| {
+                            format!("fault clause `{raw}`: prob must be a number, got `{v}`")
+                        })?;
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(format!(
+                                "fault clause `{raw}`: prob must be in [0, 1], got {p}"
+                            ));
+                        }
+                        Some(p)
+                    }
+                };
+                if nth.is_some() && prob.is_some() {
+                    return Err(format!(
+                        "fault clause `{raw}`: nth and prob are mutually exclusive"
+                    ));
+                }
+                let us = kv_u64(&kv, "us", 50, raw)?;
+                (FaultKind::Delay { op, nth, prob, us }, &["op", "nth", "prob", "us"])
+            }
+            "drop" => {
+                let nth = kv_u64(&kv, "nth", 1, raw)?;
+                let count = kv_u64(&kv, "count", 1, raw)? as u32;
+                (FaultKind::Drop { nth, count }, &["nth", "count"])
+            }
+            "reorder" => {
+                let nth = kv_u64(&kv, "nth", 1, raw)?;
+                (FaultKind::Reorder { nth }, &["nth"])
+            }
+            "stall" => {
+                let nth = kv_u64(&kv, "nth", 1, raw)?;
+                let us = kv_u64(&kv, "us", 1000, raw)?;
+                (FaultKind::Stall { op, nth, us }, &["op", "nth", "us"])
+            }
+            "panic" => {
+                let span = kv
+                    .get("span")
+                    .ok_or_else(|| format!("fault clause `{raw}`: panic requires span=LABEL"))?
+                    .to_string();
+                let at = kv_u64(&kv, "at", 1, raw)?;
+                (FaultKind::Panic { span, at }, &["span", "at"])
+            }
+            other => {
+                return Err(format!(
+                    "fault clause `{raw}`: unknown kind `{other}` (delay|drop|reorder|stall|panic)"
+                ))
+            }
+        };
+        for k in kv.keys() {
+            if !allowed.contains(k) {
+                return Err(format!(
+                    "fault clause `{raw}`: key `{k}` does not apply to `{kind_s}` \
+                     (allowed: {})",
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(FaultClause { rank, kind })
+    }
+}
+
+/// Panic payload of a scripted or injected rank failure: carries the
+/// structured context string that becomes `WorldError::RankFailed.context`.
+pub(crate) struct FaultAbort {
+    pub context: String,
+}
+
+/// What the mailbox should do with one send.
+#[derive(Default)]
+pub(crate) struct SendDirective {
+    /// Sleep this many microseconds before delivering.
+    pub delay_us: u64,
+    /// Simulate this many consecutive delivery failures (retried with
+    /// exponential backoff; beyond [`MAX_DELIVERY_RETRIES`] the rank fails).
+    pub fail_count: u32,
+    /// Stash the message; deliver after the next send.
+    pub stash: bool,
+}
+
+/// Per-rank deterministic runtime state.
+struct RankState {
+    rng: u64,
+    ops: [u64; 5],
+    spans: HashMap<String, u64>,
+    /// Reorder stash: `(dest, tag, payload)` awaiting the next send.
+    stash: Vec<(usize, u32, Vec<u8>)>,
+}
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl RankState {
+    fn draw(&mut self) -> f64 {
+        (splitmix64(&mut self.rng) >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// A [`FaultSpec`] instantiated for one world: deterministic per-rank
+/// counters and random streams, consulted from the transport layers.
+pub struct FaultPlan {
+    spec: FaultSpec,
+    seed: u64,
+    ranks: Vec<Mutex<RankState>>,
+}
+
+impl FaultPlan {
+    pub(crate) fn new(spec: FaultSpec, seed: u64, size: usize) -> Arc<FaultPlan> {
+        let ranks = (0..size)
+            .map(|r| {
+                Mutex::new(RankState {
+                    rng: seed ^ (r as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    ops: [0; 5],
+                    spans: HashMap::new(),
+                    stash: Vec::new(),
+                })
+            })
+            .collect();
+        Arc::new(FaultPlan { spec, seed, ranks })
+    }
+
+    /// The seed this plan was instantiated with (for diagnostics).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn matching(&self, rank: usize) -> impl Iterator<Item = &FaultClause> {
+        self.spec.clauses.iter().filter(move |c| c.rank.is_none() || c.rank == Some(rank))
+    }
+
+    /// Count one occurrence of `op` on `rank`; sum the applicable delays
+    /// and (for sends) drop/reorder directives.
+    pub(crate) fn on_send(&self, rank: usize) -> SendDirective {
+        let mut st = self.ranks[rank].lock().unwrap();
+        st.ops[FaultOp::Send.idx()] += 1;
+        let n = st.ops[FaultOp::Send.idx()];
+        let mut d = SendDirective::default();
+        for c in self.spec.clauses.iter() {
+            if c.rank.is_some() && c.rank != Some(rank) {
+                continue;
+            }
+            match &c.kind {
+                FaultKind::Delay { op: FaultOp::Send, nth, prob, us } => {
+                    if Self::hits(&mut st, n, *nth, *prob) {
+                        d.delay_us += us;
+                    }
+                }
+                FaultKind::Stall { op: FaultOp::Send, nth, us } => {
+                    if n == *nth {
+                        d.delay_us += us;
+                    }
+                }
+                FaultKind::Drop { nth, count } => {
+                    if n == *nth {
+                        d.fail_count = d.fail_count.max(*count);
+                    }
+                }
+                FaultKind::Reorder { nth } => {
+                    if n == *nth {
+                        d.stash = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        d
+    }
+
+    /// Count one occurrence of a non-send `op` on `rank`; return the
+    /// microseconds of injected delay before it.
+    pub(crate) fn on_op(&self, rank: usize, op: FaultOp) -> u64 {
+        let mut st = self.ranks[rank].lock().unwrap();
+        st.ops[op.idx()] += 1;
+        let n = st.ops[op.idx()];
+        let mut delay = 0u64;
+        for c in self.spec.clauses.iter() {
+            if c.rank.is_some() && c.rank != Some(rank) {
+                continue;
+            }
+            match &c.kind {
+                FaultKind::Delay { op: cop, nth, prob, us } if *cop == op => {
+                    if Self::hits(&mut st, n, *nth, *prob) {
+                        delay += us;
+                    }
+                }
+                FaultKind::Stall { op: cop, nth, us } if *cop == op => {
+                    if n == *nth {
+                        delay += us;
+                    }
+                }
+                _ => {}
+            }
+        }
+        delay
+    }
+
+    fn hits(st: &mut RankState, n: u64, nth: Option<u64>, prob: Option<f64>) -> bool {
+        match (nth, prob) {
+            (Some(k), _) => n == k,
+            (None, Some(p)) => st.draw() < p,
+            (None, None) => true,
+        }
+    }
+
+    /// Whether any clause scripts a panic at this span label (cheap guard
+    /// so non-panicking schedules never touch the span counter map).
+    fn scripts_span(&self, label: &str) -> bool {
+        self.spec
+            .clauses
+            .iter()
+            .any(|c| matches!(&c.kind, FaultKind::Panic { span, .. } if span == label))
+    }
+
+    /// Count one entry of the trace span `label` on `rank`; `Some(context)`
+    /// means the rank must panic now (scripted failure).
+    pub(crate) fn on_span(&self, rank: usize, label: &str) -> Option<String> {
+        if !self.scripts_span(label) {
+            return None;
+        }
+        let mut st = self.ranks[rank].lock().unwrap();
+        let n = {
+            let e = st.spans.entry(label.to_string()).or_insert(0);
+            *e += 1;
+            *e
+        };
+        for c in self.matching(rank) {
+            if let FaultKind::Panic { span, at } = &c.kind {
+                if span == label && n == *at {
+                    return Some(format!(
+                        "fault: scripted panic at span '{label}' (entry {n}) on rank {rank} \
+                         [seed {}]",
+                        self.seed
+                    ));
+                }
+            }
+        }
+        None
+    }
+
+    /// Stash a reordered message.
+    pub(crate) fn stash_put(&self, rank: usize, to: usize, tag: u32, data: Vec<u8>) {
+        self.ranks[rank].lock().unwrap().stash.push((to, tag, data));
+    }
+
+    /// Take stashed messages matching `(to, tag)` (delivered *before* the
+    /// current send so per-key FIFO order — MPI's non-overtaking rule —
+    /// is preserved).
+    pub(crate) fn stash_take_matching(
+        &self,
+        rank: usize,
+        to: usize,
+        tag: u32,
+    ) -> Vec<(usize, u32, Vec<u8>)> {
+        let mut st = self.ranks[rank].lock().unwrap();
+        let (m, rest): (Vec<_>, Vec<_>) =
+            st.stash.drain(..).partition(|(t, tg, _)| *t == to && *tg == tag);
+        st.stash = rest;
+        m
+    }
+
+    /// Take the whole stash (delivered after the current send, or at rank
+    /// teardown so no message is ever lost).
+    pub(crate) fn stash_take_all(&self, rank: usize) -> Vec<(usize, u32, Vec<u8>)> {
+        std::mem::take(&mut self.ranks[rank].lock().unwrap().stash)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global chaos gate + per-thread rank binding (for trace-span hooks).
+// ---------------------------------------------------------------------------
+
+/// Count of live chaos worlds (fault plan or watchdog configured). When
+/// zero — the common case — the only cost at a trace-span site is one
+/// relaxed atomic load, mirroring the tracer's own enable gate.
+static CHAOS_WORLDS: AtomicUsize = AtomicUsize::new(0);
+
+#[inline]
+pub(crate) fn chaos_active() -> bool {
+    CHAOS_WORLDS.load(Ordering::Relaxed) > 0
+}
+
+/// RAII increment of the chaos-world count.
+pub(crate) struct ChaosGuard;
+
+impl ChaosGuard {
+    pub(crate) fn new() -> ChaosGuard {
+        CHAOS_WORLDS.fetch_add(1, Ordering::Relaxed);
+        ChaosGuard
+    }
+}
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        CHAOS_WORLDS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+thread_local! {
+    /// The fault plan + rank bound to this rank thread (set for the
+    /// lifetime of the rank closure by `World::run_opts`).
+    static RANK_FAULTS: RefCell<Option<(Arc<FaultPlan>, usize)>> = const { RefCell::new(None) };
+}
+
+/// RAII binding of a rank thread to its world's fault plan.
+pub(crate) struct RankFaultGuard;
+
+pub(crate) fn bind_rank(plan: Arc<FaultPlan>, rank: usize) -> RankFaultGuard {
+    RANK_FAULTS.with(|t| *t.borrow_mut() = Some((plan, rank)));
+    RankFaultGuard
+}
+
+impl Drop for RankFaultGuard {
+    fn drop(&mut self) {
+        RANK_FAULTS.with(|t| *t.borrow_mut() = None);
+    }
+}
+
+/// Trace-span entry hook, called by `trace::span` when a chaos world is
+/// live: counts the span on the bound rank and fires a scripted panic if
+/// the schedule says so. No-op on threads outside a fault world.
+pub(crate) fn span_entered(label: &str) {
+    let scripted = RANK_FAULTS.with(|t| {
+        let b = t.borrow();
+        b.as_ref().and_then(|(plan, rank)| plan.on_span(*rank, label))
+    });
+    if let Some(context) = scripted {
+        std::panic::panic_any(FaultAbort { context });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let spec = FaultSpec::parse(
+            "delay@0:op=send:prob=0.25:us=80; drop@2:nth=3:count=2; reorder@*:nth=5; \
+             stall@1:op=pull:nth=2:us=500; panic@1:span=exchange:at=2",
+        )
+        .unwrap();
+        assert_eq!(spec.clauses.len(), 5);
+        assert_eq!(
+            spec.clauses[0].kind,
+            FaultKind::Delay { op: FaultOp::Send, nth: None, prob: Some(0.25), us: 80 }
+        );
+        assert_eq!(spec.clauses[1].kind, FaultKind::Drop { nth: 3, count: 2 });
+        assert_eq!(spec.clauses[2].rank, None);
+        assert_eq!(spec.clauses[2].kind, FaultKind::Reorder { nth: 5 });
+        assert_eq!(
+            spec.clauses[3].kind,
+            FaultKind::Stall { op: FaultOp::Pull, nth: 2, us: 500 }
+        );
+        assert_eq!(
+            spec.clauses[4].kind,
+            FaultKind::Panic { span: "exchange".into(), at: 2 }
+        );
+    }
+
+    #[test]
+    fn parse_defaults() {
+        let spec = FaultSpec::parse("delay@3").unwrap();
+        assert_eq!(
+            spec.clauses[0].kind,
+            FaultKind::Delay { op: FaultOp::Send, nth: None, prob: None, us: 50 }
+        );
+        let spec = FaultSpec::parse("drop@0").unwrap();
+        assert_eq!(spec.clauses[0].kind, FaultKind::Drop { nth: 1, count: 1 });
+        let spec = FaultSpec::parse("panic@0:span=axis0").unwrap();
+        assert_eq!(spec.clauses[0].kind, FaultKind::Panic { span: "axis0".into(), at: 1 });
+    }
+
+    #[test]
+    fn parse_errors_name_the_clause() {
+        for (bad, needle) in [
+            ("", "empty"),
+            ("delay", "expected kind@rank"),
+            ("delay@x", "rank must be an integer"),
+            ("explode@1", "unknown kind"),
+            ("delay@1:op=jump", "unknown op"),
+            ("delay@1:nth=2:prob=0.5", "mutually exclusive"),
+            ("delay@1:prob=1.5", "prob must be in [0, 1]"),
+            ("panic@1:at=2", "requires span=LABEL"),
+            ("drop@1:span=x", "does not apply"),
+            ("delay@1:nth", "expected key=val"),
+            ("drop@1:nth=abc", "nth must be an integer"),
+        ] {
+            let err = FaultSpec::parse(bad).unwrap_err();
+            assert!(err.contains(needle), "for `{bad}` got: {err}");
+        }
+    }
+
+    #[test]
+    fn nth_send_directive_is_deterministic() {
+        let spec = FaultSpec::parse("drop@0:nth=2:count=3; reorder@0:nth=4; stall@0:us=7").unwrap();
+        let plan = FaultPlan::new(spec, 42, 2);
+        // 1st send: stall (nth=1 default) only.
+        let d = plan.on_send(0);
+        assert_eq!((d.delay_us, d.fail_count, d.stash), (7, 0, false));
+        // 2nd send: the drop.
+        let d = plan.on_send(0);
+        assert_eq!((d.delay_us, d.fail_count, d.stash), (0, 3, false));
+        // 3rd: nothing. 4th: the reorder.
+        assert!(!plan.on_send(0).stash);
+        assert!(plan.on_send(0).stash);
+        // Rank 1 is untouched by rank-0 clauses.
+        let d = plan.on_send(1);
+        assert_eq!((d.delay_us, d.fail_count, d.stash), (0, 0, false));
+    }
+
+    #[test]
+    fn prob_delay_streams_are_seed_deterministic() {
+        let spec = FaultSpec::parse("delay@*:prob=0.5:us=10").unwrap();
+        let a = FaultPlan::new(spec.clone(), 7, 1);
+        let b = FaultPlan::new(spec.clone(), 7, 1);
+        let c = FaultPlan::new(spec, 8, 1);
+        let seq = |p: &FaultPlan| -> Vec<bool> {
+            (0..64).map(|_| p.on_send(0).delay_us > 0).collect()
+        };
+        let sa = seq(&a);
+        assert_eq!(sa, seq(&b), "same seed must give the same fault sequence");
+        assert_ne!(sa, seq(&c), "different seed should give a different sequence");
+        assert!(sa.iter().any(|&h| h) && sa.iter().any(|&h| !h));
+    }
+
+    #[test]
+    fn span_panics_fire_at_the_scripted_entry() {
+        let spec = FaultSpec::parse("panic@1:span=exchange:at=3").unwrap();
+        let plan = FaultPlan::new(spec, 0, 2);
+        assert!(plan.on_span(1, "exchange").is_none());
+        assert!(plan.on_span(1, "exchange").is_none());
+        let ctx = plan.on_span(1, "exchange").expect("3rd entry must fire");
+        assert!(ctx.contains("span 'exchange'") && ctx.contains("rank 1"), "{ctx}");
+        // Other ranks and other spans never fire.
+        assert!(plan.on_span(0, "exchange").is_none());
+        assert!(plan.on_span(1, "axis0").is_none());
+    }
+
+    #[test]
+    fn reorder_stash_roundtrip() {
+        let spec = FaultSpec::parse("reorder@0:nth=1").unwrap();
+        let plan = FaultPlan::new(spec, 0, 1);
+        assert!(plan.on_send(0).stash);
+        plan.stash_put(0, 1, 9, vec![1, 2, 3]);
+        // A send on a different key leaves the stash for the post-send flush.
+        assert!(plan.stash_take_matching(0, 1, 8).is_empty());
+        // The same key drains it pre-send (FIFO preserved).
+        let m = plan.stash_take_matching(0, 1, 9);
+        assert_eq!(m, vec![(1, 9, vec![1, 2, 3])]);
+        assert!(plan.stash_take_all(0).is_empty());
+    }
+
+    #[test]
+    fn chaos_gate_counts_worlds() {
+        assert!(!chaos_active() || CHAOS_WORLDS.load(Ordering::Relaxed) > 0);
+        {
+            let _g = ChaosGuard::new();
+            assert!(chaos_active());
+        }
+    }
+}

@@ -54,14 +54,18 @@
 mod comm;
 pub mod collective;
 pub mod datatype;
+pub mod fault;
 pub mod nonblocking;
 pub mod topology;
+pub mod watchdog;
 pub mod window;
 
 pub use comm::{node_of, Comm, World};
 pub use datatype::{AlignedScratch, Datatype, StagingArena, TransferPlan};
+pub use fault::{FaultKind, FaultOp, FaultSpec};
 pub use nonblocking::{waitall, AlltoallwPlan, Request};
 pub use topology::{dims_create, ranks_per_node_from_env, CartComm, NodeMap};
+pub use watchdog::{RankFailure, WorldError, WorldOptions};
 pub use window::{Transport, Window};
 
 /// Errors surfaced by the simmpi layer.

@@ -67,9 +67,11 @@
 //! therefore always use the mailbox.
 
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use super::comm::Comm;
 use super::datatype::{Datatype, Runs, StagingArena, TransferPlan};
+use super::fault::FaultOp;
 use super::window::{RawSpan, Transport};
 use super::{as_bytes, as_bytes_mut, Pod};
 
@@ -114,19 +116,31 @@ impl Drop for Request {
         // Dropping it incomplete would leave that exposure pointing into
         // memory the unwinding (or buggy) rank is about to free, and peer
         // threads would read it — a cross-thread use-after-free no local
-        // cleanup can prevent (revoking cannot stop an in-flight copy,
-        // and blocking for the drain can deadlock against a peer that
-        // also died). So: loud panic in normal operation, and the
-        // `MPI_Abort` analogue — process abort — when already unwinding,
-        // exactly the semantics of a rank failing mid-epoch in MPI.
+        // cleanup can prevent (revoking cannot stop an in-flight copy).
+        // Normal operation: loud panic — it is a protocol bug. Already
+        // unwinding (the rank died mid-epoch): poison the world so no NEW
+        // pull of our span can start, then wait bounded time for readers
+        // mid-copy to release; once quiesced the exposures are revoked and
+        // the unwind proceeds — peers get a structured RankFailed instead
+        // of a process abort. Only if a reader wedges inside the copy do we
+        // fall back to the `MPI_Abort` analogue, `process::abort`.
         if !self.done && matches!(self.inner, Inner::Window { .. }) {
             if std::thread::panicking() {
-                eprintln!(
-                    "fatal: rank panicked with a window-transport exposure in flight; \
-                     aborting the world (MPI_Abort semantics — peers hold raw spans \
-                     into this rank's memory)"
-                );
-                std::process::abort();
+                let ctl = self.comm.ctl();
+                // Poison without recording: the real failure context is the
+                // in-flight panic payload, recorded by world teardown.
+                ctl.poison_only();
+                let quiesced =
+                    self.comm.hub().quiesce(self.comm.rank(), Duration::from_secs(5));
+                if !quiesced {
+                    eprintln!(
+                        "fatal: rank panicked with a window-transport exposure in flight \
+                         and a peer never released its pull; aborting the world \
+                         (peers hold raw spans into this rank's memory)"
+                    );
+                    std::process::abort();
+                }
+                return;
             }
             panic!(
                 "window-transport Request dropped before completion: \
@@ -188,6 +202,12 @@ impl Request {
         if self.done {
             return true;
         }
+        // Spinning pollers must notice a failed peer: without this check a
+        // `while !req.test(..)` loop would spin forever against a mailbox
+        // that will never fill. (No fault-op counting here — poll counts
+        // are timing-dependent, and the schedule must stay deterministic;
+        // `Complete` faults fire on the blocking wait path instead.)
+        self.comm.ctl().abort_if_poisoned();
         // Productive polls (ones that drained at least one contribution)
         // are recorded as leaf `Wait` spans after the fact; fruitless polls
         // stay invisible so spinning callers cannot flood the trace ring.
@@ -234,7 +254,7 @@ impl Request {
                 while left != 0 {
                     let p = left.trailing_zeros() as usize;
                     left &= left - 1;
-                    if let Some(span) = hub.try_pull(p, *tag) {
+                    if let Some(span) = hub.try_pull(self.comm.ctl(), p, *tag) {
                         // SAFETY: the peer's exposure guarantees its span
                         // stays valid and unwritten until we release.
                         pairs[p].execute_one_copy(unsafe { span.as_slice() }, recv);
@@ -269,6 +289,9 @@ impl Request {
     /// later drain (`ExposureHub::wait_drained`) before the send buffer
     /// may be modified, freed, or re-posted.
     fn finish(&mut self, recv: &mut [u8], defer_drain: bool) -> Option<u32> {
+        // One `Complete` fault op per blocking completion (deterministic:
+        // each request is waited exactly once).
+        self.comm.fault_op(FaultOp::Complete);
         let mut deferred = None;
         match &mut self.inner {
             Inner::Mailbox { pending, local, arena } => {
@@ -305,7 +328,8 @@ impl Request {
                 while left != 0 {
                     let p = left.trailing_zeros() as usize;
                     left &= left - 1;
-                    let span = hub.pull(p, *tag);
+                    self.comm.fault_op(FaultOp::Pull);
+                    let span = hub.pull(self.comm.ctl(), me, p, *tag);
                     // SAFETY: see `test` — exposure keeps the span valid.
                     pairs[p].execute_one_copy(unsafe { span.as_slice() }, recv);
                     self.comm.add_window_bytes(pairs[p].bytes());
@@ -316,7 +340,7 @@ impl Request {
                     if defer_drain {
                         deferred = Some(*tag);
                     } else {
-                        hub.wait_drained(me, *tag);
+                        hub.wait_drained(self.comm.ctl(), me, me, *tag);
                     }
                 }
             }
@@ -662,6 +686,7 @@ impl AlltoallwPlan {
         let tag = self.comm.next_nb_tag();
         let n = self.comm.size();
         if n > 1 {
+            self.comm.fault_op(FaultOp::Expose);
             self.comm.hub().expose(me, tag, RawSpan::of(send), n - 1);
         }
         let all = if n == 128 { u128::MAX } else { (1u128 << n) - 1 };

@@ -133,14 +133,25 @@ pub fn subcomms_with_dims(comm: &Comm, dims: &[usize]) -> Vec<Comm> {
 }
 
 /// Environment override for the simulated node width: `A2WFFT_RANKS_PER_NODE`
-/// (a positive integer; absent/unparsable means 1 rank per node, i.e. the
-/// flat-network default where the hierarchical path degenerates).
+/// (a positive integer; absent means 1 rank per node, i.e. the
+/// flat-network default where the hierarchical path degenerates). A value
+/// that is present but not a positive integer also defaults to 1, with a
+/// warning on stderr — a typo'd topology should not silently flatten the
+/// machine.
 pub fn ranks_per_node_from_env() -> usize {
-    std::env::var("A2WFFT_RANKS_PER_NODE")
-        .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or(1)
+    match std::env::var("A2WFFT_RANKS_PER_NODE") {
+        Err(_) => 1,
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => {
+                eprintln!(
+                    "warning: A2WFFT_RANKS_PER_NODE={v:?} is not a positive integer; \
+                     using 1 rank per node (flat machine)"
+                );
+                1
+            }
+        },
+    }
 }
 
 /// Node placement of a communicator's ranks: consecutive blocks of

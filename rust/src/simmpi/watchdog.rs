@@ -1,0 +1,300 @@
+//! Collective watchdog and world poison control.
+//!
+//! Every blocking wait in the simulated MPI stack (mailbox receive,
+//! barrier, split rendezvous, window epochs, request completion) polls a
+//! shared per-world control block ([`WorldCtl`]) instead of sleeping
+//! unboundedly. Two things can end a wait early:
+//!
+//! * **Poison** — some rank failed (panic, scripted fault, exhausted
+//!   delivery retries, watchdog expiry). Every other blocked rank notices
+//!   within one poll interval and unwinds with the [`AbortSignal`] payload;
+//!   the world tears down in rank order and reports the *first* recorded
+//!   failure as a structured [`WorldError::RankFailed`] instead of hanging
+//!   on a dead mailbox.
+//! * **Watchdog** — when [`WorldOptions::watchdog`] is set, each blocking
+//!   wait carries a deadline. On expiry the waiting rank records a
+//!   diagnostic naming the blocked operation (peer, tag, unmatched inbox /
+//!   open window epochs, current trace span), poisons the world, and
+//!   unwinds. A deadlocked test fails in `watchdog + O(poll)` time with an
+//!   actionable message instead of wedging the suite.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, Once};
+use std::time::{Duration, Instant};
+
+use super::fault::{FaultAbort, FaultPlan, FaultSpec};
+
+/// Interval at which blocked waits re-check poison and deadlines. Purely a
+/// liveness bound on failure detection — on the happy path condvars wake
+/// waiters immediately and the timeout never lapses.
+pub(crate) const POLL: Duration = Duration::from_millis(20);
+
+/// The first failure a world records: which rank, and a human-actionable
+/// context string (blocked operation, peer/tag, injected-fault script...).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankFailure {
+    pub rank: usize,
+    pub context: String,
+}
+
+/// Structured error returned by [`super::World::run_opts`] when a world
+/// fails instead of completing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorldError {
+    /// A rank failed (panic, injected fault, or watchdog expiry); the
+    /// world tore down in order instead of deadlocking.
+    RankFailed { rank: usize, context: String },
+}
+
+impl WorldError {
+    /// The failing rank.
+    pub fn rank(&self) -> usize {
+        match self {
+            WorldError::RankFailed { rank, .. } => *rank,
+        }
+    }
+
+    /// The failure context string.
+    pub fn context(&self) -> &str {
+        match self {
+            WorldError::RankFailed { context, .. } => context,
+        }
+    }
+}
+
+impl std::fmt::Display for WorldError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorldError::RankFailed { rank, context } => {
+                write!(f, "rank {rank} failed: {context}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WorldError {}
+
+/// Options for [`super::World::run_opts`]: fault schedule + seed and the
+/// collective watchdog deadline. `Default` is a plain fault-free world.
+#[derive(Debug, Clone, Default)]
+pub struct WorldOptions {
+    /// Deadline applied to every blocking wait (None = no watchdog).
+    pub watchdog: Option<Duration>,
+    /// Deterministic fault schedule (None = no injection).
+    pub faults: Option<FaultSpec>,
+    /// Seed of the per-rank fault randomness streams.
+    pub fault_seed: u64,
+}
+
+impl WorldOptions {
+    /// Convenience: watchdog from milliseconds.
+    pub fn with_watchdog_ms(mut self, ms: u64) -> Self {
+        self.watchdog = Some(Duration::from_millis(ms));
+        self
+    }
+}
+
+/// Secondary-unwind panic payload: this rank is aborting because the world
+/// is poisoned, not because it failed itself. The quiet panic hook prints
+/// nothing for it, and teardown never reports it as the primary failure.
+pub(crate) struct AbortSignal;
+
+/// Unwind with the poison-abort payload.
+pub(crate) fn abort_world() -> ! {
+    std::panic::panic_any(AbortSignal)
+}
+
+/// Per-world control block, shared by every communicator of the world
+/// (splits and dups clone the owning `WorldState`).
+pub(crate) struct WorldCtl {
+    poison: AtomicBool,
+    failure: Mutex<Option<RankFailure>>,
+    /// Watchdog deadline for blocking waits (None = wait forever).
+    pub(crate) watchdog: Option<Duration>,
+    /// Fault plan consulted by the transport layers (None = no injection;
+    /// the hot paths branch on this once and stay fault-free).
+    pub(crate) faults: Option<Arc<FaultPlan>>,
+}
+
+impl WorldCtl {
+    pub(crate) fn new(opts: &WorldOptions, size: usize) -> WorldCtl {
+        WorldCtl {
+            poison: AtomicBool::new(false),
+            failure: Mutex::new(None),
+            watchdog: opts.watchdog,
+            faults: opts.faults.clone().map(|spec| FaultPlan::new(spec, opts.fault_seed, size)),
+        }
+    }
+
+    /// Whether this world has any chaos machinery live (gates the global
+    /// trace-span hook).
+    pub(crate) fn chaos(&self) -> bool {
+        self.watchdog.is_some() || self.faults.is_some()
+    }
+
+    #[inline]
+    pub(crate) fn poisoned(&self) -> bool {
+        self.poison.load(Ordering::SeqCst)
+    }
+
+    /// Record a failure (first writer wins — later failures are cascades)
+    /// and poison the world.
+    pub(crate) fn record(&self, rank: usize, context: String) {
+        {
+            let mut g = self.failure.lock().unwrap_or_else(|e| e.into_inner());
+            if g.is_none() {
+                *g = Some(RankFailure { rank, context });
+            }
+        }
+        self.poison.store(true, Ordering::SeqCst);
+    }
+
+    /// Poison the world without recording a failure. Used while a rank is
+    /// already unwinding from its real panic: later teardown records the
+    /// panic payload as the primary failure, but peers must stop issuing
+    /// new window pulls *now* so the unwinding rank can quiesce safely.
+    pub(crate) fn poison_only(&self) {
+        self.poison.store(true, Ordering::SeqCst);
+    }
+
+    /// Record a failure and unwind the calling rank.
+    pub(crate) fn fail(&self, rank: usize, context: String) -> ! {
+        self.record(rank, context);
+        abort_world()
+    }
+
+    /// Unwind if the world is poisoned (cheap check for polling paths).
+    #[inline]
+    pub(crate) fn abort_if_poisoned(&self) {
+        if self.poisoned() {
+            abort_world()
+        }
+    }
+
+    /// The recorded primary failure, if any.
+    pub(crate) fn failure(&self) -> Option<RankFailure> {
+        self.failure.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
+
+/// Deadline tracker for one blocking wait: construct at wait entry, then
+/// test [`WaitDeadline::expired`] after each timed-out poll. Costs nothing
+/// when no watchdog is configured.
+pub(crate) struct WaitDeadline {
+    deadline: Option<Instant>,
+}
+
+impl WaitDeadline {
+    pub(crate) fn new(ctl: &WorldCtl) -> WaitDeadline {
+        WaitDeadline { deadline: ctl.watchdog.map(|d| Instant::now() + d) }
+    }
+
+    #[inline]
+    pub(crate) fn expired(&self) -> bool {
+        matches!(self.deadline, Some(d) if Instant::now() >= d)
+    }
+}
+
+/// Format the standard watchdog diagnostic: the blocked operation plus the
+/// current trace span of the waiting rank.
+pub(crate) fn watchdog_context(ctl: &WorldCtl, blocked_on: &str) -> String {
+    let span = crate::trace::current_span_label().unwrap_or("-");
+    format!(
+        "watchdog: no progress in {:?} while blocked in {blocked_on} [span {span}]",
+        ctl.watchdog.unwrap_or_default()
+    )
+}
+
+/// Install (once, process-wide) a panic hook that silences the expected
+/// chaos payloads: [`AbortSignal`] cascades print nothing, [`FaultAbort`]
+/// prints its one-line context. All other panics go to the previous hook
+/// unchanged.
+pub(crate) fn install_quiet_abort_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<AbortSignal>().is_some() {
+                return;
+            }
+            if let Some(fa) = info.payload().downcast_ref::<FaultAbort>() {
+                eprintln!("fault abort: {}", fa.context);
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(opts: &WorldOptions) -> WorldCtl {
+        WorldCtl::new(opts, 4)
+    }
+
+    #[test]
+    fn first_recorded_failure_wins() {
+        let c = ctl(&WorldOptions::default());
+        assert!(!c.poisoned());
+        assert!(c.failure().is_none());
+        c.record(2, "real cause".into());
+        c.record(0, "cascade".into());
+        assert!(c.poisoned());
+        let f = c.failure().unwrap();
+        assert_eq!((f.rank, f.context.as_str()), (2, "real cause"));
+    }
+
+    #[test]
+    fn world_error_renders_rank_and_context() {
+        let e = WorldError::RankFailed { rank: 3, context: "watchdog: barrier".into() };
+        assert_eq!(e.rank(), 3);
+        assert_eq!(e.context(), "watchdog: barrier");
+        assert_eq!(e.to_string(), "rank 3 failed: watchdog: barrier");
+    }
+
+    #[test]
+    fn deadline_expires_only_with_watchdog() {
+        let free = ctl(&WorldOptions::default());
+        let d = WaitDeadline::new(&free);
+        assert!(!d.expired(), "no watchdog => never expires");
+        let tight = ctl(&WorldOptions::default().with_watchdog_ms(0));
+        let d = WaitDeadline::new(&tight);
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(d.expired());
+    }
+
+    #[test]
+    fn fail_unwinds_with_abort_signal() {
+        let c = ctl(&WorldOptions::default());
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.fail(1, "boom".into())
+        }))
+        .unwrap_err();
+        assert!(err.downcast_ref::<AbortSignal>().is_some());
+        assert_eq!(c.failure().unwrap().rank, 1);
+        // A poisoned world aborts polling ranks too.
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.abort_if_poisoned()
+        }))
+        .unwrap_err();
+        assert!(err.downcast_ref::<AbortSignal>().is_some());
+    }
+
+    #[test]
+    fn options_carry_chaos_flags() {
+        let plain = ctl(&WorldOptions::default());
+        assert!(!plain.chaos());
+        let wd = ctl(&WorldOptions::default().with_watchdog_ms(100));
+        assert!(wd.chaos());
+        assert_eq!(wd.watchdog, Some(Duration::from_millis(100)));
+        let faulty = ctl(&WorldOptions {
+            faults: Some(FaultSpec::parse("delay@0").unwrap()),
+            fault_seed: 9,
+            ..Default::default()
+        });
+        assert!(faulty.chaos());
+        assert_eq!(faulty.faults.as_ref().unwrap().seed(), 9);
+    }
+}

@@ -50,7 +50,9 @@
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
+use super::watchdog::{abort_world, watchdog_context, WaitDeadline, WorldCtl, POLL};
 use super::Comm;
 
 /// Which transport plan-based collectives move payload bytes through.
@@ -130,6 +132,11 @@ impl RawSpan {
 struct Exposure {
     span: RawSpan,
     readers_left: usize,
+    /// Readers that pulled but have not yet released — i.e. may be copying
+    /// out of the span *right now*. An unwinding owner must wait for this
+    /// to reach zero before revoking the exposure (see
+    /// [`ExposureHub::quiesce`]), or a reader would copy from freed memory.
+    active: usize,
 }
 
 /// The dynamic-window registry of one communicator: spans exposed by rank
@@ -156,7 +163,8 @@ impl ExposureHub {
         crate::trace_span!(Window, "expose");
         assert!(readers > 0, "expose: zero-reader exposure");
         let mut g = self.m.lock().unwrap();
-        let prev = g.insert((rank, tag), Exposure { span, readers_left: readers });
+        let prev =
+            g.insert((rank, tag), Exposure { span, readers_left: readers, active: 0 });
         assert!(prev.is_none(), "expose: duplicate exposure (rank {rank}, tag {tag:#x})");
         drop(g);
         self.cv.notify_all();
@@ -170,20 +178,50 @@ impl ExposureHub {
     /// was not up yet); the copy out of the span happens at the caller
     /// under `Pack`. The polling [`ExposureHub::try_pull`] is deliberately
     /// untraced — spinning completion loops would flood the ring.
-    pub(crate) fn pull(&self, rank: usize, tag: u32) -> RawSpan {
+    pub(crate) fn pull(&self, ctl: &WorldCtl, me: usize, rank: usize, tag: u32) -> RawSpan {
         crate::trace_span!(Wait, "pull");
         let mut g = self.m.lock().unwrap();
+        let dl = WaitDeadline::new(ctl);
         loop {
-            if let Some(e) = g.get(&(rank, tag)) {
+            // Poisoned worlds refuse *new* pulls: the owner may be
+            // unwinding, and `quiesce` only waits for readers already
+            // counted `active` under this mutex.
+            if ctl.poisoned() {
+                drop(g);
+                abort_world();
+            }
+            if let Some(e) = g.get_mut(&(rank, tag)) {
+                e.active += 1;
                 return e.span;
             }
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait_timeout(g, POLL).unwrap().0;
+            if dl.expired() {
+                let ctx = format!(
+                    "{}; open exposures: [{}]",
+                    watchdog_context(
+                        ctl,
+                        &format!("window pull(owner=rank {rank}, tag={tag:#x}) on rank {me}")
+                    ),
+                    Self::summarize(&g)
+                );
+                drop(g);
+                ctl.fail(me, ctx);
+            }
         }
     }
 
-    /// Non-blocking variant of [`ExposureHub::pull`].
-    pub(crate) fn try_pull(&self, rank: usize, tag: u32) -> Option<RawSpan> {
-        self.m.lock().unwrap().get(&(rank, tag)).map(|e| e.span)
+    /// Non-blocking variant of [`ExposureHub::pull`]. `None` under poison
+    /// (no new pulls while the world tears down; the polling caller aborts
+    /// at its own poison check).
+    pub(crate) fn try_pull(&self, ctl: &WorldCtl, rank: usize, tag: u32) -> Option<RawSpan> {
+        let mut g = self.m.lock().unwrap();
+        if ctl.poisoned() {
+            return None;
+        }
+        g.get_mut(&(rank, tag)).map(|e| {
+            e.active += 1;
+            e.span
+        })
     }
 
     /// Signal that this reader finished copying out of `(rank, tag)`; the
@@ -193,8 +231,12 @@ impl ExposureHub {
         let mut g = self.m.lock().unwrap();
         let e = g.get_mut(&(rank, tag)).expect("release: no such exposure");
         e.readers_left -= 1;
+        e.active -= 1;
+        let wake = e.active == 0;
         if e.readers_left == 0 {
             g.remove(&(rank, tag));
+        }
+        if wake {
             drop(g);
             self.cv.notify_all();
         }
@@ -202,12 +244,82 @@ impl ExposureHub {
 
     /// Block until every reader of `(rank, tag)` has released — the
     /// owner's epoch close. A never-exposed key returns immediately.
-    pub(crate) fn wait_drained(&self, rank: usize, tag: u32) {
+    ///
+    /// In a poisoned world the owner still waits for readers that already
+    /// pulled (they are copying out of the owner's buffer), then revokes
+    /// the exposure and unwinds.
+    pub(crate) fn wait_drained(&self, ctl: &WorldCtl, me: usize, rank: usize, tag: u32) {
         crate::trace_span!(Wait, "drain");
         let mut g = self.m.lock().unwrap();
-        while g.contains_key(&(rank, tag)) {
-            g = self.cv.wait(g).unwrap();
+        let dl = WaitDeadline::new(ctl);
+        loop {
+            match g.get(&(rank, tag)) {
+                None => return,
+                Some(e) => {
+                    if ctl.poisoned() && e.active == 0 {
+                        g.remove(&(rank, tag));
+                        drop(g);
+                        self.cv.notify_all();
+                        abort_world();
+                    }
+                }
+            }
+            g = self.cv.wait_timeout(g, POLL).unwrap().0;
+            if dl.expired() && !ctl.poisoned() {
+                let e = g.get(&(rank, tag));
+                let ctx = format!(
+                    "{}; {} reader(s) never pulled/released",
+                    watchdog_context(
+                        ctl,
+                        &format!(
+                            "window drain(owner=rank {rank}, tag={tag:#x}) on rank {me}"
+                        )
+                    ),
+                    e.map(|e| e.readers_left).unwrap_or(0)
+                );
+                // Record (poisons the world) but keep looping: the poison
+                // branch above revokes once no reader is mid-copy.
+                ctl.record(me, ctx);
+            }
         }
+    }
+
+    /// Owner-side revocation for an *unwinding* rank with exposures still
+    /// live: wait (bounded) until none of `owner`'s exposures has a reader
+    /// mid-copy, then remove them all. Returns `false` on timeout — the
+    /// caller must hard-abort the process, since unwinding would free
+    /// memory a reader is still copying from.
+    pub(crate) fn quiesce(&self, owner: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.m.lock().unwrap();
+        loop {
+            let mine: Vec<(usize, u32)> =
+                g.keys().filter(|(r, _)| *r == owner).copied().collect();
+            if mine.iter().all(|k| g[k].active == 0) {
+                for k in mine {
+                    g.remove(&k);
+                }
+                drop(g);
+                self.cv.notify_all();
+                return true;
+            }
+            g = self.cv.wait_timeout(g, POLL).unwrap().0;
+            if Instant::now() >= deadline {
+                return false;
+            }
+        }
+    }
+
+    /// One-line summary of the live exposures, for watchdog diagnostics.
+    fn summarize(g: &HashMap<(usize, u32), Exposure>) -> String {
+        let mut keys: Vec<_> = g.iter().collect();
+        keys.sort_by_key(|((r, t), _)| (*r, *t));
+        keys.iter()
+            .map(|((r, t), e)| {
+                format!("(owner={r}, tag={t:#x}, readers_left={})", e.readers_left)
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
     }
 
     /// Non-blocking variant of [`ExposureHub::wait_drained`].
@@ -344,8 +456,28 @@ impl Window {
             if g.get(&wid).unwrap().installed == n {
                 reg.cv.notify_all();
             }
+            let ctl = comm.ctl();
+            let dl = WaitDeadline::new(ctl);
             while g.get(&wid).unwrap().installed < n {
-                g = reg.cv.wait(g).unwrap();
+                g = reg.cv.wait_timeout(g, POLL).unwrap().0;
+                if g.get(&wid).unwrap().installed >= n {
+                    break;
+                }
+                if ctl.poisoned() {
+                    drop(g);
+                    abort_world();
+                }
+                if dl.expired() {
+                    let ctx = watchdog_context(
+                        ctl,
+                        &format!(
+                            "window allocate rendezvous on rank {me} ({}/{n} installed)",
+                            g.get(&wid).unwrap().installed
+                        ),
+                    );
+                    drop(g);
+                    ctl.fail(me, ctx);
+                }
             }
             // All segments installed and published: capture their spans.
             // Only *shared* references are formed (several ranks run this
@@ -479,10 +611,28 @@ impl Window {
     /// blocks until every target has posted a matching exposure epoch.
     pub fn start(&mut self, targets: &[usize]) {
         assert!(self.access_group.is_empty(), "start: access epoch already open");
+        let me = self.comm.rank();
+        let ctl = self.comm.ctl();
+        let dl = WaitDeadline::new(ctl);
         let mut g = self.shared.pscw.lock().unwrap();
         for &t in targets {
             while g.posts[t] <= self.seen_posts[t] {
-                g = self.shared.cv.wait(g).unwrap();
+                g = self.shared.cv.wait_timeout(g, POLL).unwrap().0;
+                if g.posts[t] > self.seen_posts[t] {
+                    break;
+                }
+                if ctl.poisoned() {
+                    drop(g);
+                    abort_world();
+                }
+                if dl.expired() {
+                    let ctx = watchdog_context(
+                        ctl,
+                        &format!("window start on rank {me}: no matching post from rank {t}"),
+                    );
+                    drop(g);
+                    ctl.fail(me, ctx);
+                }
             }
             self.seen_posts[t] += 1;
         }
@@ -508,9 +658,29 @@ impl Window {
     pub fn wait(&mut self) {
         let me = self.comm.rank();
         let need = self.completes_seen + self.exposure_origins as u64;
+        let ctl = self.comm.ctl();
+        let dl = WaitDeadline::new(ctl);
         let mut g = self.shared.pscw.lock().unwrap();
         while g.completes[me] < need {
-            g = self.shared.cv.wait(g).unwrap();
+            g = self.shared.cv.wait_timeout(g, POLL).unwrap().0;
+            if g.completes[me] >= need {
+                break;
+            }
+            if ctl.poisoned() {
+                drop(g);
+                abort_world();
+            }
+            if dl.expired() {
+                let ctx = watchdog_context(
+                    ctl,
+                    &format!(
+                        "window wait on rank {me}: {}/{need} access epochs completed",
+                        g.completes[me]
+                    ),
+                );
+                drop(g);
+                ctl.fail(me, ctx);
+            }
         }
         drop(g);
         self.completes_seen = need;
@@ -632,14 +802,14 @@ mod tests {
                     continue;
                 }
                 let ptag = 0xC100_0000 | p as u32;
-                let span = comm.hub().pull(p, ptag);
+                let span = comm.hub().pull(comm.ctl(), me, p, ptag);
                 assert_eq!(span.len(), 16);
                 // SAFETY: peer keeps `data` alive until wait_drained.
                 let bytes = unsafe { span.as_slice() };
                 assert_eq!(bytes[0], (p * 16) as u8);
                 comm.hub().release(p, ptag);
             }
-            comm.hub().wait_drained(me, tag);
+            comm.hub().wait_drained(comm.ctl(), me, me, tag);
             assert!(comm.hub().drained(me, tag));
         });
     }

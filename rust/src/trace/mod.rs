@@ -245,6 +245,18 @@ impl Ring {
 
 thread_local! {
     static RING: RefCell<Ring> = RefCell::new(Ring::new());
+    /// Stack of open span labels on this thread. Maintained when tracing
+    /// is enabled **or** a chaos world is live, so watchdog diagnostics and
+    /// failure reports can name the span a rank died in, and scripted
+    /// `panic@rank:span=...` faults can fire at span entry.
+    static LABELS: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Label of the innermost open span on this thread, if any. Used by the
+/// watchdog and world-teardown failure reports; only meaningful when
+/// tracing or chaos is active (the stack is empty otherwise).
+pub(crate) fn current_span_label() -> Option<&'static str> {
+    LABELS.with(|l| l.borrow().last().copied())
 }
 
 /// RAII guard of an open span: created by [`span`] (or the
@@ -253,6 +265,9 @@ thread_local! {
 /// when tracing is disabled.
 pub struct SpanGuard {
     active: bool,
+    /// Whether this guard pushed onto the thread's label stack (tracing
+    /// or chaos active at open) and must pop it on drop.
+    pushed_label: bool,
     cat: Category,
     label: &'static str,
     begin_ns: u64,
@@ -265,9 +280,22 @@ pub struct SpanGuard {
 /// recorded) when the returned guard drops.
 #[inline]
 pub fn span(cat: Category, label: &'static str) -> SpanGuard {
+    // Chaos hook: a scripted `panic@rank:span=LABEL` fault fires at span
+    // entry (before any bookkeeping), and chaos worlds keep the label
+    // stack alive for failure diagnostics even with tracing off. One
+    // relaxed atomic load when no chaos world exists.
+    let chaos = crate::simmpi::fault::chaos_active();
+    if chaos {
+        crate::simmpi::fault::span_entered(label);
+    }
+    let pushed_label = chaos || enabled();
+    if pushed_label {
+        LABELS.with(|l| l.borrow_mut().push(label));
+    }
     if !enabled() {
         return SpanGuard {
             active: false,
+            pushed_label,
             cat,
             label,
             begin_ns: 0,
@@ -285,11 +313,25 @@ pub fn span(cat: Category, label: &'static str) -> SpanGuard {
         (d, cd)
     });
     let bytes0 = local_bytes();
-    SpanGuard { active: true, cat, label, begin_ns: now_ns(), depth, cat_depth, bytes0 }
+    SpanGuard {
+        active: true,
+        pushed_label,
+        cat,
+        label,
+        begin_ns: now_ns(),
+        depth,
+        cat_depth,
+        bytes0,
+    }
 }
 
 impl Drop for SpanGuard {
     fn drop(&mut self) {
+        if self.pushed_label {
+            LABELS.with(|l| {
+                l.borrow_mut().pop();
+            });
+        }
         if !self.active {
             return;
         }
@@ -516,6 +558,13 @@ fn decode(wire: &[u8]) -> RankTrace {
 /// a no-op (beyond clearing the ring) when tracing is disabled.
 pub(crate) fn rank_flush(comm: &Comm) {
     if !enabled() {
+        clear_local();
+        return;
+    }
+    // A poisoned world cannot run the collective gather — some rank is
+    // dead and its mailbox will never send — so just discard locally; the
+    // structured WorldError is the diagnostic for failed runs.
+    if comm.ctl().poisoned() {
         clear_local();
         return;
     }

@@ -533,6 +533,26 @@ pub fn search<T: Real>(
     (entries, skipped)
 }
 
+/// Load a wisdom file for the tune protocol, degrading gracefully: an
+/// absent file is a quiet miss (first run), but a file that *exists* and
+/// cannot be used — truncated, garbled JSON, wrong schema version — warns
+/// on stderr (rank 0 only) and degrades to measuring fresh, never an
+/// error. The subsequent persist rewrites the file with valid contents.
+fn load_wisdom_degraded(path: &Path, rank: usize) -> Option<Wisdom> {
+    match Wisdom::load(path) {
+        Ok(w) => Some(w),
+        Err(e) => {
+            if rank == 0 && path.exists() {
+                eprintln!(
+                    "tune: warning: ignoring unusable wisdom file ({e}); measuring fresh \
+                     (the file will be rewritten after the search)"
+                );
+            }
+            None
+        }
+    }
+}
+
 /// The full tune protocol: consult wisdom (unless `force`), otherwise
 /// search the full budgeted space and persist the winner.
 ///
@@ -558,7 +578,7 @@ pub fn tune_plan<T: Real>(
         Signature::new::<T>(global, comm.size(), kind).with_ranks_per_node(ranks_per_node);
     if !force {
         if let Some(path) = wisdom {
-            let hit = Wisdom::load(path).ok().and_then(|w| {
+            let hit = load_wisdom_degraded(path, comm.rank()).and_then(|w| {
                 w.lookup(&signature.key())
                     .and_then(|e| e.candidate().map(|c| (c, e.seconds)))
             });
@@ -591,7 +611,7 @@ pub fn tune_plan<T: Real>(
     if let Some(path) = wisdom {
         let mut wrote = 1.0f64;
         if comm.rank() == 0 {
-            let mut w = Wisdom::load(path).unwrap_or_default();
+            let mut w = load_wisdom_degraded(path, comm.rank()).unwrap_or_default();
             let win = report.winner();
             w.record(&report.signature, &win.candidate, win.seconds, budget.name());
             if let Err(e) = w.store(path) {

@@ -199,6 +199,52 @@ fn wisdom_is_keyed_by_node_grouping() {
 }
 
 #[test]
+fn garbled_wisdom_degrades_to_fresh_measurement() {
+    // Corruption of every flavor — truncated JSON, non-JSON bytes, wrong
+    // schema version, entries of the wrong shape — must degrade to a
+    // plain measured search (with a stderr warning), never an error, and
+    // the subsequent persist must leave the file valid again.
+    let global = vec![16, 12, 10];
+    let ranks = 2;
+    let space = TuneSpace::new(&global, ranks, Budget::Tiny);
+    let (cands, _) = space.candidates();
+    let target = cands.last().unwrap().label();
+    for (tag, garbage) in [
+        ("truncated", r#"{"wisdom": 1, "entries": [{"signature": "r2c"#),
+        ("not_json", "\x00\x01\x02 this is not json at all"),
+        ("wrong_version", r#"{"wisdom": 999, "entries": []}"#),
+        ("bad_entry_shape", r#"{"wisdom": 1, "entries": [{"signature": 42}]}"#),
+        ("empty_file", ""),
+    ] {
+        let path = temp_path(&format!("wisdom_garbled_{tag}"));
+        std::fs::write(&path, garbage).unwrap();
+        let fake = FakeMeasurer::new(1.0).with(&target, 1e-6);
+        let global_c = global.clone();
+        let path_c = path.clone();
+        let report = World::run(ranks, move |comm| {
+            tune_plan::<f64>(
+                &comm,
+                &global_c,
+                Kind::R2c,
+                Budget::Tiny,
+                1,
+                Some(path_c.as_path()),
+                false,
+                &fake,
+            )
+        })
+        .remove(0);
+        assert!(!report.from_wisdom, "{tag}: corrupt wisdom must not satisfy a lookup");
+        assert_eq!(report.winner().candidate.label(), target, "{tag}");
+        assert!(report.persisted, "{tag}: the search must rewrite the corrupt file");
+        let w = Wisdom::load(&path).unwrap_or_else(|e| panic!("{tag}: rewritten file unreadable: {e}"));
+        let sig = Signature::new::<f64>(&global, ranks, Kind::R2c);
+        assert!(w.lookup(&sig.key()).is_some(), "{tag}: rewritten wisdom misses");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
 fn wisdom_lifecycle_search_recall_force() {
     let path = temp_path("wisdom_lifecycle");
     std::fs::remove_file(&path).ok();
