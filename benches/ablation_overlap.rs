@@ -15,7 +15,9 @@
 
 use std::time::Instant;
 
-use a2wfft::coordinator::benchkit::{banner, real_header, real_row_exec, trace_finish, trace_init};
+use a2wfft::coordinator::benchkit::{
+    banner, metrics_finish, metrics_init, real_header, real_row_exec, trace_finish, trace_init,
+};
 use a2wfft::coordinator::EngineKind;
 use a2wfft::decomp::decompose;
 use a2wfft::netmodel::{Library, MachineParams, Scenario};
@@ -147,12 +149,15 @@ fn netmodel_section() {
 fn main() {
     // `--trace PATH` records every section's worlds into one Chrome-trace
     // file (pipelined sections show Chunk/Window spans next to the
-    // blocking baselines).
+    // blocking baselines). `--metrics-out PATH` accumulates the metrics
+    // registry across them and writes one Prometheus text file.
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let trace = trace_init(&argv);
+    let mout = metrics_init(&argv);
     redist_only_section([48, 48, 48], 4);
     redist_only_section([96, 96, 96], 8);
     end_to_end_section();
     trace_finish(trace);
+    metrics_finish(mout);
     netmodel_section();
 }

@@ -160,9 +160,11 @@ fn hierarchical_topology_section() -> Vec<String> {
 }
 
 fn main() {
-    // `--trace PATH` records all measured worlds into one Chrome-trace file.
+    // `--trace PATH` records all measured worlds into one Chrome-trace file;
+    // `--metrics-out PATH` writes the accumulated registry as Prometheus text.
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let trace = trace_init(&argv);
+    let mout = metrics_init(&argv);
     banner("ablation: redistribution method (same substrate, redist-only column)");
     real_header();
     for (global, ranks, grid) in [
@@ -196,4 +198,5 @@ fn main() {
         Err(e) => eprintln!("could not write BENCH_ablation_redist.json: {e}"),
     }
     trace_finish(trace);
+    metrics_finish(mout);
 }

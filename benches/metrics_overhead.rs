@@ -1,0 +1,93 @@
+//! Bench guard: the always-compiled metrics registry must cost ≤1% on the
+//! full transform path with recording **enabled** (the stack's headline
+//! "cheap enough to stay on in production" claim), measured against a
+//! metrics-disabled twin of the identical body.
+//!
+//! The measured body is a whole forward+backward `PfftPlan` pair — every
+//! instrumented boundary fires (exchange, copy engine, axis passes,
+//! mailbox depth) at its real rate relative to useful work, so the ratio
+//! is the end-to-end overhead a production run pays, not a microbenchmark
+//! of one site. Batches of the two arms interleave and each takes its
+//! best sample, so machine drift cancels instead of accumulating into one
+//! arm (the same methodology as `trace_overhead.rs`/`chaos_overhead.rs`).
+
+use std::time::Instant;
+
+use a2wfft::coordinator::benchkit::{metrics_finish, metrics_init};
+use a2wfft::fft::{Complex, NativeFft};
+use a2wfft::metrics;
+use a2wfft::pfft::{ExecMode, Kind, PfftPlan, RedistMethod};
+use a2wfft::simmpi::{Transport, World};
+
+const BATCHES: usize = 7;
+const ITERS: usize = 8;
+const GLOBAL: [usize; 3] = [32, 16, 10];
+
+/// Best seconds per forward+backward pair over `BATCHES` batches, with
+/// the registry recording or not. The flag is flipped outside the world
+/// so every rank (and the teardown gather) agrees.
+fn measure(enabled: bool) -> f64 {
+    metrics::set_enabled(enabled);
+    let res = World::run(2, |comm| {
+        let mut plan = PfftPlan::<f64>::with_transport(
+            &comm,
+            &GLOBAL,
+            &[2],
+            Kind::C2c,
+            RedistMethod::Alltoallw,
+            ExecMode::Blocking,
+            Transport::Mailbox,
+        );
+        let mut engine = NativeFft::<f64>::new();
+        let input: Vec<Complex<f64>> = (0..plan.input_len())
+            .map(|k| Complex::from_f64((k as f64 * 0.61).sin(), (k as f64 * 0.23).cos()))
+            .collect();
+        let mut spec = vec![Complex::<f64>::ZERO; plan.output_len()];
+        let mut back = vec![Complex::<f64>::ZERO; plan.input_len()];
+        // Warm plans, arenas and (when enabled) the registry slots.
+        for _ in 0..2 {
+            plan.forward(&mut engine, &input, &mut spec);
+            plan.backward(&mut engine, &spec, &mut back);
+        }
+        let mut best = f64::INFINITY;
+        for _ in 0..BATCHES {
+            comm.barrier();
+            let t0 = Instant::now();
+            for _ in 0..ITERS {
+                plan.forward(&mut engine, &input, &mut spec);
+                plan.backward(&mut engine, &spec, &mut back);
+            }
+            best = best.min(t0.elapsed().as_secs_f64() / ITERS as f64);
+        }
+        best
+    });
+    metrics::set_enabled(false);
+    res[0]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mout = metrics_init(&argv);
+    // Interleave whole-world measurements of the two arms, then take each
+    // arm's best; the inner batches already interleave within one world.
+    let mut best_on = f64::INFINITY;
+    let mut best_off = f64::INFINITY;
+    for _ in 0..3 {
+        best_off = best_off.min(measure(false));
+        best_on = best_on.min(measure(true));
+    }
+    println!("arm\tbest_s_per_pair\tvs_disabled");
+    println!("metrics-off\t{best_off:.3e}\t1.000x");
+    println!("metrics-on\t{best_on:.3e}\t{:.3}x", best_on / best_off);
+    // The acceptance gate: ≤1% relative, plus 2µs absolute slop so the
+    // assertion tracks the overhead rather than timer granularity on a
+    // sub-millisecond body.
+    let cap = best_off * 1.01 + 2e-6;
+    assert!(
+        best_on <= cap,
+        "metrics-enabled transform costs too much: {best_on:.3e}s vs disabled \
+         {best_off:.3e}s (cap {cap:.3e}s)"
+    );
+    println!("metrics overhead guard OK");
+    metrics_finish(mout);
+}

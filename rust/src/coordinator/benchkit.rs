@@ -328,6 +328,51 @@ pub fn report_json(
         .num("imb_overlap_fft", rep.stats.overlap_fft.imbalance())
         .num("imb_overlap_comm", rep.stats.overlap_comm.imbalance())
         .int("trace_dropped", rep.trace_dropped)
+        .raw("metrics", metrics_json())
+        .render()
+}
+
+/// One merged metric as a JSON object: identity (name + labels) plus
+/// count and p50/p90/p99/max (seconds for latency histograms, raw units
+/// otherwise; counters report their total as `max`).
+fn summary_json(m: &crate::metrics::MetricSummary) -> String {
+    let mut o = JsonObj::new().str("name", &m.name);
+    for (k, v) in &m.labels {
+        o = o.str(k, v);
+    }
+    o.int("count", m.count)
+        .num("p50", m.p50)
+        .num("p90", m.p90)
+        .num("p99", m.p99)
+        .num("max", m.max)
+        .render()
+}
+
+/// The `metrics` block of `--json` rows: the measured world's merged
+/// registry (reduced to rank 0 at teardown), sorted deterministically.
+/// Empty (`[]`) when the run had metrics disabled.
+pub fn metrics_json() -> String {
+    let rows: Vec<String> = crate::metrics::summaries().iter().map(summary_json).collect();
+    format!("[{}]", rows.join(", "))
+}
+
+/// The flight-recorder section of a failure row: the failing rank and
+/// context of the capture, the recent-span ring (oldest first), and the
+/// capturing thread's local metric summaries at the moment of death.
+fn flight_json(fl: &crate::metrics::FlightSnapshot) -> String {
+    let notes: Vec<String> = fl
+        .notes
+        .iter()
+        .map(|(r, l, t)| {
+            JsonObj::new().raw("rank", r.to_string()).str("span", l).int("t_ns", *t).render()
+        })
+        .collect();
+    let metrics: Vec<String> = fl.metrics.iter().map(summary_json).collect();
+    JsonObj::new()
+        .int("rank", fl.rank as u64)
+        .str("context", &fl.context)
+        .raw("recent_spans", format!("[{}]", notes.join(", ")))
+        .raw("metrics", format!("[{}]", metrics.join(", ")))
         .render()
 }
 
@@ -346,11 +391,18 @@ pub fn failure_json(label: &str, global: &[usize], ranks: usize, err: &RunError)
         Some(r) => fobj.int("rank", r),
         None => fobj.raw("rank", "null".into()),
     };
+    fobj = fobj.str("context", context);
+    // The flight recorder captured a snapshot when the first rank died
+    // (always-on under chaos/trace/metrics); drain it into the row so
+    // every failure is post-hoc diagnosable.
+    if let Some(fl) = crate::metrics::take_flight() {
+        fobj = fobj.raw("flight", flight_json(&fl));
+    }
     JsonObj::new()
         .str("label", label)
         .raw("global", json_usize_array(global))
         .int("ranks", ranks as u64)
-        .raw("failure", fobj.str("context", context).render())
+        .raw("failure", fobj.render())
         .render()
 }
 
@@ -382,6 +434,34 @@ pub fn trace_finish(path: Option<PathBuf>) {
         eprintln!("trace: wrote {} ({} world(s) gathered)", path.display(), bundles.len());
         eprint!("{}", crate::trace::imbalance(b).render_text());
     }
+}
+
+/// Bench-side `--metrics-out PATH` support: when the argv carries the
+/// flag, clear the merged table and latch accumulation so the bench's
+/// whole configuration matrix lands in one exported table (the driver
+/// normally resets it per run). Pair with [`metrics_finish`]; no-op
+/// without the flag.
+pub fn metrics_init(argv: &[String]) -> Option<PathBuf> {
+    let pos = argv.iter().position(|a| a == "--metrics-out")?;
+    let path = argv.get(pos + 1).unwrap_or_else(|| {
+        eprintln!("--metrics-out requires a PATH value");
+        std::process::exit(2);
+    });
+    crate::metrics::reset_world();
+    crate::metrics::set_hold_world(true);
+    Some(PathBuf::from(path))
+}
+
+/// Finish a bench metrics export started by [`metrics_init`]: release the
+/// accumulation latch and write the Prometheus text (no-op on `None`).
+pub fn metrics_finish(path: Option<PathBuf>) {
+    let Some(path) = path else { return };
+    crate::metrics::set_hold_world(false);
+    if let Err(e) = std::fs::write(&path, crate::metrics::render_prometheus()) {
+        eprintln!("error: writing metrics {}: {e}", path.display());
+        std::process::exit(3);
+    }
+    eprintln!("metrics: wrote {}", path.display());
 }
 
 /// Write `BENCH_<name>.json` in the current directory: a single object

@@ -173,6 +173,11 @@ pub struct RunConfig {
     /// blocking wait of the measured world (`--watchdog-ms`; None = waits
     /// block forever, the plain-MPI behaviour).
     pub watchdog_ms: Option<u64>,
+    /// Whether the always-compiled metrics registry records during the
+    /// measured world (default on; `--no-metrics` turns it off for
+    /// overhead twins). The registry reduces to rank 0 at teardown and
+    /// feeds the `metrics` block of `--json` rows and `--metrics-out`.
+    pub metrics: bool,
 }
 
 impl Default for RunConfig {
@@ -198,6 +203,7 @@ impl Default for RunConfig {
             fault_schedule: None,
             fault_seed: 0,
             watchdog_ms: None,
+            metrics: true,
         }
     }
 }

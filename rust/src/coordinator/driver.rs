@@ -276,6 +276,12 @@ pub fn run_config_typed_checked<T: Real>(
     if cfg.trace.is_some() {
         crate::trace::set_enabled(true);
     }
+    // Arm the metrics registry for exactly this world: the table and the
+    // flight recorder describe one measured run, and teardown's
+    // `rank_flush` reduces every rank's registry to the process table.
+    crate::metrics::set_enabled(cfg.metrics);
+    crate::metrics::reset_world();
+    crate::metrics::reset_flight();
     let run = World::run_opts(cfg.ranks, opts, |comm| {
         // Engine-side copy accounting is per rank through the thread-local
         // counter mirror, so concurrent worlds (parallel tests) cannot
@@ -378,6 +384,10 @@ pub fn run_config_typed_checked<T: Real>(
         comm.allreduce_u64(&mut eb, crate::simmpi::collective::ReduceOp::Sum);
         (m, stats, err[0], eb)
     });
+    // Freeze the registry either way: follow-on worlds (tuner searches,
+    // parallel tests) must not pollute the exported table. The flight
+    // snapshot of a failed world survives for the failure report.
+    crate::metrics::set_enabled(false);
     let reports = match run {
         Ok(r) => r,
         Err(e) => {

@@ -251,16 +251,19 @@ pub struct TrendRow {
     /// Transport of the rows (`"mailbox"`/`"window"`), when the rows carry
     /// a `transport` field — part of the group identity, like dtype.
     pub transport: Option<String>,
-    /// Serial-engine SoA lane width, when the rows carry a `lanes` field —
-    /// part of the group identity (rows from commits that predate the
-    /// engine axis carry neither field and form their own group).
+    /// Serial-engine SoA lane width — part of the group identity. Rows
+    /// from commits that predate the engine axis were scalar runs, so a
+    /// missing `lanes` field defaults to 1 and pools with modern `l1t1`
+    /// rows instead of forming a phantom group.
     pub lanes: Option<u64>,
-    /// Serial-engine worker-pool size, when the rows carry `threads`.
+    /// Serial-engine worker-pool size (`threads`; defaults to 1 like
+    /// `lanes`).
     pub threads: Option<u64>,
-    /// Simulated node count (`ceil(ranks / ranks-per-node)`), when the rows
-    /// carry a `nodes` field — part of the group identity: the same label
-    /// under a different node grouping is a different machine, and the
-    /// topology ablation compares their means.
+    /// Simulated node count (`ceil(ranks / ranks-per-node)`) — part of the
+    /// group identity: the same label under a different node grouping is a
+    /// different machine, and the topology ablation compares their means.
+    /// Rows predating the column were flat-machine runs, so a missing
+    /// `nodes` defaults to the row's `ranks`.
     pub nodes: Option<u64>,
 }
 
@@ -280,6 +283,28 @@ fn row_key(row: &JsonValue) -> String {
         }
     }
     "<row>".to_string()
+}
+
+/// The schema-versioned identity fields of one row, with the historical
+/// defaults filled in: rows written before the serial-engine axis existed
+/// were scalar single-threaded runs (`lanes`/`threads` default 1), and
+/// rows written before the topology column were flat-machine runs
+/// (`nodes` defaults to the row's `ranks`). Without the defaults a
+/// mixed-schema directory splits one workload into phantom groups — the
+/// old rows would compare against nothing.
+fn row_identity(
+    row: &JsonValue,
+) -> (Option<String>, Option<String>, Option<u64>, Option<u64>, Option<u64>) {
+    let dtype = row.get("dtype").and_then(|v| v.as_str()).map(str::to_string);
+    let transport = row.get("transport").and_then(|v| v.as_str()).map(str::to_string);
+    let lanes = Some(row.get("lanes").and_then(|v| v.as_num()).map_or(1, |x| x as u64));
+    let threads = Some(row.get("threads").and_then(|v| v.as_num()).map_or(1, |x| x as u64));
+    let nodes = row
+        .get("nodes")
+        .and_then(|v| v.as_num())
+        .map(|x| x as u64)
+        .or_else(|| row.get("ranks").and_then(|v| v.as_num()).map(|x| x as u64));
+    (dtype, transport, lanes, threads, nodes)
 }
 
 /// Aggregate the rows of parsed bench documents into trend groups.
@@ -325,11 +350,7 @@ pub fn aggregate(docs: &[(String, JsonValue)]) -> Vec<TrendRow> {
             None => std::slice::from_ref(doc),
         };
         for row in rows {
-            let dtype = row.get("dtype").and_then(|v| v.as_str()).map(str::to_string);
-            let transport = row.get("transport").and_then(|v| v.as_str()).map(str::to_string);
-            let lanes = row.get("lanes").and_then(|v| v.as_num()).map(|x| x as u64);
-            let threads = row.get("threads").and_then(|v| v.as_num()).map(|x| x as u64);
-            let nodes = row.get("nodes").and_then(|v| v.as_num()).map(|x| x as u64);
+            let (dtype, transport, lanes, threads, nodes) = row_identity(row);
             let acc = groups
                 .entry((bench.clone(), row_key(row), dtype, transport, lanes, threads, nodes))
                 .or_default();
@@ -417,26 +438,11 @@ pub fn find_bench_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
     Ok(out)
 }
 
-fn fmt_opt(x: Option<f64>) -> String {
-    match x {
-        Some(v) => format!("{v:.6e}"),
-        None => "-".to_string(),
-    }
-}
-
-/// Run the trend report over `dir`: print the per-group table to stdout
-/// (or, with `best`, only the per-bench fastest groups) and write
-/// `BENCH_trend.json` — which always carries both the full rows and the
-/// `"best"` summary — next to the inputs. Returns the number of rows
-/// aggregated, or an error string for the CLI to surface.
-pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
+/// Read and parse every bench artifact under `dir` (see
+/// [`find_bench_files`]); the fallback document name is the file stem
+/// minus its `BENCH_` prefix.
+fn load_bench_docs(dir: &Path) -> Result<Vec<(String, JsonValue)>, String> {
     let files = find_bench_files(dir).map_err(|e| format!("scanning {}: {e}", dir.display()))?;
-    if files.is_empty() {
-        return Err(format!(
-            "no BENCH_*.json files in {} (run the benches or `repro run --json` first)",
-            dir.display()
-        ));
-    }
     let mut docs = Vec::new();
     for path in &files {
         let text = std::fs::read_to_string(path)
@@ -451,9 +457,32 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
             .to_string();
         docs.push((stem, doc));
     }
+    Ok(docs)
+}
+
+fn fmt_opt(x: Option<f64>) -> String {
+    match x {
+        Some(v) => format!("{v:.6e}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Run the trend report over `dir`: print the per-group table to stdout
+/// (or, with `best`, only the per-bench fastest groups) and write
+/// `BENCH_trend.json` — which always carries both the full rows and the
+/// `"best"` summary — next to the inputs. Returns the number of rows
+/// aggregated, or an error string for the CLI to surface.
+pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
+    let docs = load_bench_docs(dir)?;
+    if docs.is_empty() {
+        return Err(format!(
+            "no BENCH_*.json files in {} (run the benches or `repro run --json` first)",
+            dir.display()
+        ));
+    }
     let rows = aggregate(&docs);
     let best_rows = best_groups(&rows);
-    println!("# trend over {} artifact file(s) in {}", files.len(), dir.display());
+    println!("# trend over {} artifact file(s) in {}", docs.len(), dir.display());
     let fmt_nodes = |n: Option<u64>| n.map_or_else(|| "-".to_string(), |x| x.to_string());
     if best {
         println!("bench\tbest_group\tdtype\ttransport\tengine\tnodes\tmean_total_s");
@@ -554,7 +583,7 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
     let write = |f: &mut std::fs::File| -> std::io::Result<()> {
         writeln!(f, "{{")?;
         writeln!(f, "  \"bench\": \"{}\",", json_escape("trend"))?;
-        writeln!(f, "  \"sources\": {},", files.len())?;
+        writeln!(f, "  \"sources\": {},", docs.len())?;
         writeln!(f, "  \"rows\": [")?;
         for (i, row) in json_rows.iter().enumerate() {
             let sep = if i + 1 == json_rows.len() { "" } else { "," };
@@ -573,6 +602,153 @@ pub fn run_trend(dir: &Path, best: bool) -> Result<usize, String> {
     write(&mut f).map_err(|e| format!("writing {}: {e}", out_path.display()))?;
     println!("wrote {}", out_path.display());
     Ok(rows.len())
+}
+
+/// Identity of one gate comparison group — the same tuple [`aggregate`]
+/// groups by (bench, key, dtype, transport, lanes, threads, nodes),
+/// including the defaulted legacy-schema fields, so historical rows
+/// written before a column existed still baseline the modern rows.
+pub type GateKey = (
+    String,
+    String,
+    Option<String>,
+    Option<String>,
+    Option<u64>,
+    Option<u64>,
+    Option<u64>,
+);
+
+/// Collect per-group `total_s` samples from parsed bench documents — the
+/// raw material of the regression gate. Unlike [`aggregate`], every row
+/// stays an individual sample so the baseline spread is observable.
+pub fn gate_samples(docs: &[(String, JsonValue)]) -> BTreeMap<GateKey, Vec<f64>> {
+    let mut out: BTreeMap<GateKey, Vec<f64>> = BTreeMap::new();
+    for (fallback_name, doc) in docs {
+        let bench = doc
+            .get("bench")
+            .and_then(|v| v.as_str())
+            .unwrap_or(fallback_name)
+            .to_string();
+        let rows: &[JsonValue] = match doc.get("rows").and_then(|v| v.as_arr()) {
+            Some(rows) => rows,
+            None => std::slice::from_ref(doc),
+        };
+        for row in rows {
+            let Some(t) = row.get("total_s").and_then(|v| v.as_num()) else { continue };
+            let (dtype, transport, lanes, threads, nodes) = row_identity(row);
+            out.entry((bench.clone(), row_key(row), dtype, transport, lanes, threads, nodes))
+                .or_default()
+                .push(t);
+        }
+    }
+    out
+}
+
+/// Relative stddev floor of the gate. CI timing jitter easily reaches a
+/// few percent, and a baseline understates its own spread when it has
+/// few samples, so the effective sigma never drops below this fraction
+/// of the baseline mean.
+const GATE_REL_FLOOR: f64 = 0.05;
+/// Wider relative floor while the history is thin (fewer than three
+/// baseline samples): a one-row baseline has zero observed variance.
+const GATE_REL_FLOOR_THIN: f64 = 0.25;
+/// Absolute stddev floor in seconds — sub-microsecond spreads are noise.
+const GATE_ABS_FLOOR: f64 = 1e-6;
+
+/// Result of one gate run: how many groups were compared, how many new
+/// groups had no baseline, and a human-readable line per regression
+/// (empty = gate passes).
+#[derive(Debug, Default)]
+pub struct GateOutcome {
+    /// Candidate groups compared against a baseline (incl. regressions).
+    pub checked: usize,
+    /// Candidate groups with no matching history group (new benches /
+    /// labels — reported, never failed).
+    pub skipped: usize,
+    /// One line per regressed group; non-empty means the gate fails.
+    pub regressions: Vec<String>,
+    /// Set when the gate could not run meaningfully (e.g. no history) —
+    /// treated as a pass with an explanation.
+    pub note: Option<String>,
+}
+
+fn gate_label(key: &GateKey) -> String {
+    let (bench, group, dtype, transport, lanes, threads, nodes) = key;
+    format!(
+        "{bench}/{group} [{} {} l{}t{} nodes={}]",
+        dtype.as_deref().unwrap_or("-"),
+        transport.as_deref().unwrap_or("-"),
+        lanes.unwrap_or(1),
+        threads.unwrap_or(1),
+        nodes.map_or_else(|| "-".to_string(), |n| n.to_string()),
+    )
+}
+
+/// Compare candidate groups against history: a group regresses when its
+/// mean `total_s` exceeds `baseline_mean + sigma * sigma_eff`, where
+/// `sigma_eff` is the baseline stddev clamped from below by the floors
+/// above. Pure so tests can feed synthetic sample maps.
+pub fn gate_compare(
+    history: &BTreeMap<GateKey, Vec<f64>>,
+    candidate: &BTreeMap<GateKey, Vec<f64>>,
+    sigma: f64,
+) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    for (key, samples) in candidate {
+        let Some(base) = history.get(key) else {
+            out.skipped += 1;
+            continue;
+        };
+        let n = base.len() as f64;
+        let mu = base.iter().sum::<f64>() / n;
+        let var = base.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / n;
+        let rel = if base.len() >= 3 { GATE_REL_FLOOR } else { GATE_REL_FLOOR_THIN };
+        let sd = var.sqrt().max(rel * mu.abs()).max(GATE_ABS_FLOOR);
+        let cand = samples.iter().sum::<f64>() / samples.len() as f64;
+        let limit = mu + sigma * sd;
+        out.checked += 1;
+        if cand > limit {
+            out.regressions.push(format!(
+                "{}: {:.3e}s vs baseline mean {:.3e}s over {} run(s) \
+                 (limit {:.3e}s = mean + {:.1} x {:.3e}s)",
+                gate_label(key),
+                cand,
+                mu,
+                base.len(),
+                limit,
+                sigma,
+                sd,
+            ));
+        }
+    }
+    out
+}
+
+/// Run the statistical regression gate: every `(bench, group, dtype,
+/// transport, engine, nodes)` variant found in `dir`'s fresh artifacts is
+/// compared against the accumulated history under `history`. Missing or
+/// empty history passes with a note (first run of a new repo); fresh
+/// groups without a baseline are skipped, not failed. The caller turns a
+/// non-empty `regressions` into exit code 1.
+pub fn run_gate(dir: &Path, history: &Path, sigma: f64) -> Result<GateOutcome, String> {
+    let cand_docs = load_bench_docs(dir)?;
+    if cand_docs.is_empty() {
+        return Err(format!(
+            "no BENCH_*.json files in {} to gate (run the benches or `repro run --json` first)",
+            dir.display()
+        ));
+    }
+    let hist_docs = if history.is_dir() { load_bench_docs(history)? } else { Vec::new() };
+    if hist_docs.is_empty() {
+        return Ok(GateOutcome {
+            note: Some(format!(
+                "no history under {} — nothing to gate against (pass)",
+                history.display()
+            )),
+            ..Default::default()
+        });
+    }
+    Ok(gate_compare(&gate_samples(&hist_docs), &gate_samples(&cand_docs), sigma))
 }
 
 #[cfg(test)]
@@ -694,29 +870,27 @@ mod tests {
     fn engine_shape_is_part_of_group_identity() {
         // Scalar and batched/threaded rows of the same label must not pool
         // — the engine ablation compares their means. Rows from commits
-        // that predate the axis (no lanes/threads fields) stay their own
-        // group instead of polluting the scalar one.
+        // that predate the axis (no lanes/threads fields) were scalar runs
+        // and pool with the modern l1t1 group instead of forming a
+        // phantom one.
         let d = doc(
             "engine",
             &[
                 r#"{"label": "a", "total_s": 4.0, "lanes": 1, "threads": 1}"#,
                 r#"{"label": "a", "total_s": 2.0, "lanes": 8, "threads": 4}"#,
                 r#"{"label": "a", "total_s": 6.0, "lanes": 1, "threads": 1}"#,
-                r#"{"label": "a", "total_s": 9.0}"#,
+                r#"{"label": "a", "total_s": 5.0}"#,
             ],
         );
         let rows = aggregate(&[d]);
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 2);
         let scalar = rows.iter().find(|r| r.lanes == Some(1)).unwrap();
-        assert_eq!(scalar.count, 2);
+        assert_eq!(scalar.count, 3);
         assert_eq!(scalar.mean_total_s, Some(5.0));
         assert_eq!(scalar.engine_label(), "l1t1");
         let batched = rows.iter().find(|r| r.lanes == Some(8)).unwrap();
         assert_eq!((batched.threads, batched.mean_total_s), (Some(4), Some(2.0)));
         assert_eq!(batched.engine_label(), "l8t4");
-        let legacy = rows.iter().find(|r| r.lanes.is_none()).unwrap();
-        assert_eq!(legacy.count, 1);
-        assert_eq!(legacy.engine_label(), "-");
         // best_groups compares engine variants of the same label.
         let best = best_groups(&rows);
         assert_eq!(best.len(), 1);
@@ -727,29 +901,56 @@ mod tests {
     fn node_grouping_is_part_of_group_identity() {
         // Flat and node-grouped rows of the same label must not pool —
         // the topology ablation compares their means. Rows from commits
-        // that predate the column (no nodes field) stay their own group.
+        // that predate the column were flat-machine runs: their node count
+        // defaults to their rank count and they pool with the matching
+        // modern group.
         let d = doc(
             "topo",
             &[
-                r#"{"label": "a", "total_s": 4.0, "nodes": 4}"#,
-                r#"{"label": "a", "total_s": 2.0, "nodes": 2}"#,
-                r#"{"label": "a", "total_s": 6.0, "nodes": 4}"#,
-                r#"{"label": "a", "total_s": 9.0}"#,
+                r#"{"label": "a", "total_s": 4.0, "ranks": 4, "nodes": 4}"#,
+                r#"{"label": "a", "total_s": 2.0, "ranks": 4, "nodes": 2}"#,
+                r#"{"label": "a", "total_s": 6.0, "ranks": 4, "nodes": 4}"#,
+                r#"{"label": "a", "total_s": 5.0, "ranks": 4}"#,
             ],
         );
         let rows = aggregate(&[d]);
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 2);
         let flat4 = rows.iter().find(|r| r.nodes == Some(4)).unwrap();
-        assert_eq!(flat4.count, 2);
+        assert_eq!(flat4.count, 3);
         assert_eq!(flat4.mean_total_s, Some(5.0));
         let grouped = rows.iter().find(|r| r.nodes == Some(2)).unwrap();
         assert_eq!(grouped.mean_total_s, Some(2.0));
-        let legacy = rows.iter().find(|r| r.nodes.is_none()).unwrap();
-        assert_eq!(legacy.count, 1);
         // best_groups compares topology variants of the same label.
         let best = best_groups(&rows);
         assert_eq!(best.len(), 1);
         assert_eq!(best[0].nodes, Some(2));
+    }
+
+    #[test]
+    fn legacy_rows_default_missing_schema_fields() {
+        // Regression test for the mixed-schema split: artifacts written
+        // before the engine columns (scalar era) and before the topology
+        // column (flat era) describe the *same* workload as a modern
+        // fully-annotated row, and must land in one group — three schema
+        // generations, one trend line.
+        let d = doc(
+            "mixed",
+            &[
+                r#"{"label": "a", "ranks": 4, "total_s": 3.0}"#,
+                r#"{"label": "a", "ranks": 4, "total_s": 5.0, "lanes": 1, "threads": 1}"#,
+                r#"{"label": "a", "ranks": 4, "total_s": 4.0, "lanes": 1, "threads": 1, "nodes": 4}"#,
+            ],
+        );
+        let rows = aggregate(&[d]);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].count, 3);
+        assert_eq!(rows[0].mean_total_s, Some(4.0));
+        assert_eq!((rows[0].lanes, rows[0].threads, rows[0].nodes), (Some(1), Some(1), Some(4)));
+        // A row with no ranks field at all keeps an unknown node count —
+        // it only pools with equally bare rows.
+        let bare = doc("mixed", &[r#"{"label": "a", "total_s": 9.0}"#]);
+        let rows = aggregate(&[bare]);
+        assert_eq!(rows[0].nodes, None);
     }
 
     #[test]
@@ -856,5 +1057,91 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         assert!(run_trend(&dir, false).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gate_fails_synthetic_regression_and_passes_healthy_rows() {
+        // History: five healthy runs around 1.0s with ~2% jitter.
+        let hist = gate_samples(&[doc(
+            "gate",
+            &[
+                r#"{"label": "a", "ranks": 2, "total_s": 1.00}"#,
+                r#"{"label": "a", "ranks": 2, "total_s": 1.02}"#,
+                r#"{"label": "a", "ranks": 2, "total_s": 0.98}"#,
+                r#"{"label": "a", "ranks": 2, "total_s": 1.01}"#,
+                r#"{"label": "a", "ranks": 2, "total_s": 0.99}"#,
+            ],
+        )]);
+        // Candidate far outside the spread (sigma_eff is the 5% floor
+        // here, so 1.5s is a 10-sigma excursion): the gate must fail it.
+        let slow = gate_samples(&[doc("gate", &[r#"{"label": "a", "ranks": 2, "total_s": 1.5}"#])]);
+        let out = gate_compare(&hist, &slow, 3.0);
+        assert_eq!((out.checked, out.skipped), (1, 0));
+        assert_eq!(out.regressions.len(), 1);
+        assert!(out.regressions[0].contains("gate/a"), "{}", out.regressions[0]);
+        // A candidate within the noise band passes.
+        let ok = gate_samples(&[doc("gate", &[r#"{"label": "a", "ranks": 2, "total_s": 1.05}"#])]);
+        let out = gate_compare(&hist, &ok, 3.0);
+        assert_eq!((out.checked, out.regressions.len()), (1, 0));
+        // A brand-new label has no baseline: skipped, never failed.
+        let new = gate_samples(&[doc("gate", &[r#"{"label": "b", "ranks": 2, "total_s": 9.0}"#])]);
+        let out = gate_compare(&hist, &new, 3.0);
+        assert_eq!((out.checked, out.skipped, out.regressions.len()), (0, 1, 0));
+    }
+
+    #[test]
+    fn gate_thin_history_gets_a_wide_floor() {
+        // A single-sample baseline has zero observed variance; the thin
+        // floor (25% of the mean) keeps ordinary CI jitter from tripping
+        // the gate while still catching gross regressions.
+        let hist = gate_samples(&[doc("gate", &[r#"{"label": "a", "total_s": 1.0}"#])]);
+        let jitter = gate_samples(&[doc("gate", &[r#"{"label": "a", "total_s": 1.3}"#])]);
+        assert!(gate_compare(&hist, &jitter, 3.0).regressions.is_empty());
+        let gross = gate_samples(&[doc("gate", &[r#"{"label": "a", "total_s": 2.5}"#])]);
+        assert_eq!(gate_compare(&hist, &gross, 3.0).regressions.len(), 1);
+    }
+
+    #[test]
+    fn gate_pools_legacy_history_against_modern_rows() {
+        // The schema defaulting applies to the gate too: a pre-engine,
+        // pre-topology history row baselines a fully-annotated candidate.
+        let hist = gate_samples(&[doc("gate", &[r#"{"label": "a", "ranks": 4, "total_s": 1.0}"#])]);
+        let cand = gate_samples(&[doc(
+            "gate",
+            &[r#"{"label": "a", "ranks": 4, "total_s": 1.05, "lanes": 1, "threads": 1, "nodes": 4}"#],
+        )]);
+        let out = gate_compare(&hist, &cand, 3.0);
+        assert_eq!((out.checked, out.skipped, out.regressions.len()), (1, 0, 0));
+    }
+
+    #[test]
+    fn gate_end_to_end_over_tempdirs() {
+        let root = std::env::temp_dir().join(format!("a2wfft_gate_test_{}", std::process::id()));
+        let dir = root.join("fresh");
+        let hist = root.join("history");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("BENCH_g.json"),
+            r#"{"bench": "g", "rows": [{"label": "x", "total_s": 5.0}]}"#,
+        )
+        .unwrap();
+        // Missing history directory: pass with a note.
+        let out = run_gate(&dir, &hist, 3.0).unwrap();
+        assert!(out.regressions.is_empty());
+        assert!(out.note.is_some());
+        // Real history far below the candidate: regression.
+        std::fs::create_dir_all(&hist).unwrap();
+        std::fs::write(
+            hist.join("BENCH_g.json"),
+            r#"{"bench": "g", "rows": [{"label": "x", "total_s": 1.0}]}"#,
+        )
+        .unwrap();
+        let out = run_gate(&dir, &hist, 3.0).unwrap();
+        assert_eq!(out.regressions.len(), 1);
+        // Empty fresh dir is an error (nothing to gate).
+        let empty = root.join("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(run_gate(&empty, &hist, 3.0).is_err());
+        std::fs::remove_dir_all(&root).ok();
     }
 }

@@ -148,6 +148,7 @@ impl WorkerPool {
 
     fn launch(&self, total: usize, broadcast: bool, f: &DynJob) {
         let traced = trace::enabled();
+        let _m = crate::metrics::timer("a2wfft_fft_pool_job_seconds", crate::metrics::NO_LABELS);
         // SAFETY: lifetime erasure only — `launch` blocks until every
         // worker is done with `f`, so the borrow outlives every use.
         let f_static: &'static DynJob = unsafe { std::mem::transmute(f) };

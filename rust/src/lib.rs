@@ -93,6 +93,7 @@ pub mod coordinator;
 pub mod decomp;
 pub mod distarray;
 pub mod fft;
+pub mod metrics;
 pub mod netmodel;
 pub mod pfft;
 pub mod redistribute;

@@ -20,7 +20,10 @@
 //!   figure as a TSV table.
 //! * `repro trend [--dir .] [--best]` — aggregate every `BENCH_*.json`
 //!   artifact into a compact per-bench trend table and `BENCH_trend.json`;
-//!   `--best` prints only the fastest group per bench.
+//!   `--best` prints only the fastest group per bench. `--gate` instead
+//!   compares the fresh artifacts against the accumulated history
+//!   (`--history DIR`, default `BENCH_HISTORY`) and exits 1 when a group
+//!   regressed by more than `--sigma` (default 3) baseline stddevs.
 //! * `repro selftest` — quick end-to-end correctness pass on several
 //!   decompositions, both precisions.
 //! * `repro info` — artifact and configuration summary.
@@ -39,7 +42,7 @@ use a2wfft::tune::{tune_plan, TuneReport, WallClock};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["help", "json", "tune", "force", "best"]);
+    let args = Args::parse(argv, &["help", "json", "tune", "force", "best", "gate", "no-metrics"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
@@ -86,13 +89,14 @@ fn print_help() {
          \x20           [--inner I] [--outer O] [--json]\n\
          \x20           [--tune] [--budget tiny|normal|full] [--wisdom PATH]\n\
          \x20           [--trace PATH] [--fault-schedule SPEC] [--fault-seed S]\n\
-         \x20           [--watchdog-ms MS]\n\
+         \x20           [--watchdog-ms MS] [--metrics-out PATH] [--no-metrics]\n\
          \x20 repro tune [--global N,N,N] [--ranks R] [--ranks-per-node C]\n\
          \x20           [--kind r2c|c2c] [--dtype f32|f64]\n\
          \x20           [--budget tiny|normal|full] [--wisdom PATH] [--force] [--json]\n\
-         \x20           [--trace PATH]\n\
+         \x20           [--trace PATH] [--metrics-out PATH]\n\
          \x20 repro figure <6|7|8|9|10|11>\n\
          \x20 repro trend [--dir DIR] [--best]\n\
+         \x20 repro trend --gate [--dir DIR] [--history DIR] [--sigma N]\n\
          \x20 repro selftest [--transport mailbox|window]\n\
          \x20 repro info\n\
          \n\
@@ -168,6 +172,22 @@ fn print_help() {
          \x20 prints to stderr. Tracing off costs one atomic load per span\n\
          \x20 site; the TSV/JSON rows also carry imb_* skew ratios\n\
          \n\
+         METRICS (--metrics-out PATH, --no-metrics):\n\
+         \x20 an always-compiled per-rank registry records latency histograms\n\
+         \x20 (log-bucketed, preallocated — no steady-state allocation) and\n\
+         \x20 counters at every hot boundary: exchange latency by\n\
+         \x20 (method, transport, exec), pack/unpack/fused/one-copy engine\n\
+         \x20 timings, serial-FFT axis passes, window epoch open time,\n\
+         \x20 pipelined chunk in-flight depth, mailbox queue depth, watchdog\n\
+         \x20 near-miss margin, fault retry counts. Rank tables gather to\n\
+         \x20 rank 0 at teardown; --json rows carry a `metrics` block with\n\
+         \x20 per-metric count/p50/p90/p99/max, and --metrics-out writes the\n\
+         \x20 full histograms in Prometheus text exposition format.\n\
+         \x20 --no-metrics disables recording (one relaxed atomic load per\n\
+         \x20 site remains). On a chaos/watchdog failure the always-on\n\
+         \x20 flight recorder dumps the last spans and the failing rank's\n\
+         \x20 metric snapshot into the --json `failure.flight` field\n\
+         \n\
          CHAOS (--fault-schedule, --fault-seed, --watchdog-ms):\n\
          \x20 deterministic fault injection into the measured world. A\n\
          \x20 schedule is `kind@rank[:key=val]*` clauses joined by `;`:\n\
@@ -209,7 +229,15 @@ fn print_help() {
          \x20 BENCH_trend.json; --best prints only the fastest (dtype,\n\
          \x20 transport) variant of each (bench, label) group — the offline\n\
          \x20 cousin of the tuner's ranked table; the JSON artifact always\n\
-         \x20 carries both"
+         \x20 carries both. --gate turns the trend into a statistical\n\
+         \x20 regression check: each fresh group's mean total_s is compared\n\
+         \x20 against the per-group mean/stddev of the --history directory\n\
+         \x20 (default BENCH_HISTORY) and the command exits 1 when any group\n\
+         \x20 exceeds mean + --sigma (default 3) effective stddevs (the\n\
+         \x20 stddev is floored at a few percent of the mean so thin or\n\
+         \x20 low-jitter histories don't produce hair-trigger gates); rows\n\
+         \x20 predating the lanes/threads/nodes columns pool with their\n\
+         \x20 modern equivalents (scalar engine, flat machine)"
     );
 }
 
@@ -240,8 +268,9 @@ fn cmd_run(args: &Args) {
             "fault-schedule",
             "fault-seed",
             "watchdog-ms",
+            "metrics-out",
         ],
-        &["json", "tune", "help"],
+        &["json", "tune", "no-metrics", "help"],
     );
     let global = args.get_usizes("global").unwrap_or_else(|| vec![64, 64, 64]);
     let ranks = args.get_usize("ranks", 4);
@@ -382,6 +411,7 @@ fn cmd_run(args: &Args) {
         fault_schedule,
         fault_seed,
         watchdog_ms,
+        metrics: !args.has_flag("no-metrics"),
     };
     // Resolve Auto knobs up front so the chosen grid is printable; the
     // resolved config runs without further tuning.
@@ -407,6 +437,13 @@ fn cmd_run(args: &Args) {
         }
     };
     rep.tuned = tuned;
+    if let Some(path) = args.get("metrics-out").map(PathBuf::from) {
+        if let Err(e) = std::fs::write(&path, a2wfft::metrics::render_prometheus()) {
+            eprintln!("error: writing metrics {}: {e}", path.display());
+            std::process::exit(3);
+        }
+        eprintln!("metrics: wrote {}", path.display());
+    }
     let exec_label = if rep.overlap_depth > 0 {
         format!("{}-d{}", rep.exec, rep.overlap_depth)
     } else {
@@ -465,7 +502,17 @@ fn cmd_tune(args: &Args) {
     validated(
         args,
         "repro tune",
-        &["global", "ranks", "ranks-per-node", "kind", "dtype", "budget", "wisdom", "trace"],
+        &[
+            "global",
+            "ranks",
+            "ranks-per-node",
+            "kind",
+            "dtype",
+            "budget",
+            "wisdom",
+            "trace",
+            "metrics-out",
+        ],
         &["json", "force", "help"],
     );
     let global = args.get_usizes("global").unwrap_or_else(|| vec![64, 64, 64]);
@@ -492,6 +539,14 @@ fn cmd_tune(args: &Args) {
     let trace = args.get("trace").map(PathBuf::from);
     if trace.is_some() {
         a2wfft::trace::set_enabled(true);
+    }
+    // The tuner measures every candidate inside one world, so the exported
+    // table aggregates the whole search — per-candidate latency lands in
+    // the same histograms the candidates' labels distinguish.
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    if metrics_out.is_some() {
+        a2wfft::metrics::reset_world();
+        a2wfft::metrics::set_enabled(true);
     }
     let reports: Vec<TuneReport> = World::run(ranks, |comm| match dtype {
         Dtype::F32 => tune_plan::<f32>(
@@ -529,6 +584,14 @@ fn cmd_tune(args: &Args) {
             eprintln!("trace: wrote {} ({} world(s) gathered)", path.display(), bundles.len());
             eprint!("{}", a2wfft::trace::imbalance(b).render_text());
         }
+    }
+    if let Some(path) = &metrics_out {
+        a2wfft::metrics::set_enabled(false);
+        if let Err(e) = std::fs::write(path, a2wfft::metrics::render_prometheus()) {
+            eprintln!("error: writing metrics {}: {e}", path.display());
+            std::process::exit(3);
+        }
+        eprintln!("metrics: wrote {}", path.display());
     }
     let report = reports.into_iter().next().expect("tune world returned no report");
     if args.has_flag("json") {
@@ -640,8 +703,46 @@ fn cmd_figure(args: &Args) {
 }
 
 fn cmd_trend(args: &Args) {
-    validated(args, "repro trend", &["dir"], &["best", "help"]);
+    validated(args, "repro trend", &["dir", "history", "sigma"], &["best", "gate", "help"]);
     let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("."));
+    if args.has_flag("gate") {
+        let history = std::path::PathBuf::from(args.get("history").unwrap_or("BENCH_HISTORY"));
+        let sigma = args.get("sigma").map_or(3.0, |s| {
+            s.parse::<f64>()
+                .ok()
+                .filter(|x| x.is_finite() && *x > 0.0)
+                .unwrap_or_else(|| usage_error(&format!("--sigma: not a positive number: {s}")))
+        });
+        match trend::run_gate(&dir, &history, sigma) {
+            Ok(out) => {
+                if let Some(note) = &out.note {
+                    println!("gate: {note}");
+                }
+                println!(
+                    "gate: {} group(s) checked against {}, {} new group(s) without a baseline",
+                    out.checked,
+                    history.display(),
+                    out.skipped
+                );
+                if out.regressions.is_empty() {
+                    println!("gate OK");
+                } else {
+                    for r in &out.regressions {
+                        eprintln!("gate REGRESSION: {r}");
+                    }
+                    std::process::exit(1);
+                }
+            }
+            Err(e) => {
+                eprintln!("gate failed: {e}");
+                std::process::exit(2);
+            }
+        }
+        return;
+    }
+    if args.get("history").is_some() || args.get("sigma").is_some() {
+        usage_error("--history/--sigma only apply to `repro trend --gate`");
+    }
     match trend::run_trend(&dir, args.has_flag("best")) {
         Ok(groups) => println!("trend OK ({groups} row group(s))"),
         Err(e) => {

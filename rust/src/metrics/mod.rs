@@ -1,0 +1,921 @@
+//! Always-on metrics: per-rank counters, gauges and log-bucketed
+//! HDR-style latency histograms, plus the failure flight recorder.
+//!
+//! The span tracer (`crate::trace`) answers *where time went in one run*;
+//! this module answers *what the latency distribution of each hot
+//! boundary is* — p50/p99 exchange latency per (method × transport ×
+//! exec), copy-engine timings, axis-pass durations, queue depths, watchdog
+//! near-miss margins, fault retry counts — cheaply enough to stay on in
+//! production runs.
+//!
+//! Design contract (mirrors the PR-2 and PR-6 invariants):
+//!
+//! * **Disabled cost is one relaxed atomic load** per instrumentation
+//!   site. [`timer`] returns `None` without touching the clock.
+//! * **Allocation-free after warm-up**: each thread owns a fixed-capacity
+//!   registry of slots; a slot's bucket array is allocated the first time
+//!   its `(name, labels)` key is seen and reused forever after. Steady
+//!   state records are a thread-local lookup (pointer-compared `&'static`
+//!   keys) plus one bucket increment.
+//! * **Mergeable**: histograms are fixed log-bucketed arrays (8 linear
+//!   sub-buckets per octave), so cross-thread and cross-rank reduction is
+//!   elementwise addition — associative and deterministic.
+//!
+//! At world teardown every rank serializes its registry and ships it to
+//! rank 0 ([`rank_flush`], the same collective pattern as the trace
+//! gather), which merges into a process-wide table. Three exports:
+//!
+//! * [`summaries`] — per-histogram count/p50/p90/p99/max for the
+//!   `metrics` block of `RunReport` / `--json` rows;
+//! * [`render_prometheus`] — Prometheus text format for
+//!   `--metrics-out PATH`;
+//! * the **flight recorder** — a small process-wide ring of recent span
+//!   labels ([`flight_note`]) snapshotted on rank death or watchdog abort
+//!   ([`flight_capture`]) and dumped into the structured `failure` JSON,
+//!   so every chaos failure is post-hoc diagnosable.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::simmpi::Comm;
+
+/// Wire tag of the teardown gather; disjoint from user tags, the
+/// nonblocking tag space (`0xC000_0000+`) and the trace gather
+/// (`0x8000_007E`).
+const TAG_METRICS: u32 = 0x8000_007D;
+
+/// Linear sub-buckets per octave: 8, i.e. ≤12.5% relative quantile error.
+const SUB_BITS: usize = 3;
+const SUBS: usize = 1 << SUB_BITS;
+/// Bucket groups (group 0 is the linear 0..8 range, then one per octave).
+const GROUPS: usize = 36;
+/// Total buckets per histogram; the last bucket absorbs every larger
+/// value (the exact maximum is tracked separately).
+pub const BUCKETS: usize = GROUPS * SUBS;
+
+/// Per-thread slot capacity. A full run uses a few dozen distinct keys;
+/// overflowing records are dropped and counted, never allocated.
+const MAX_SLOTS: usize = 96;
+
+/// Flight-recorder depth: enough to cover the last few transform stages
+/// of every rank without unbounded growth.
+pub const FLIGHT_CAP: usize = 128;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is the metrics registry recording? One relaxed load — the whole cost
+/// of a disabled instrumentation site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn metrics on or off, process-wide. Flip it **outside**
+/// `World::run` so every rank agrees (the teardown gather is collective).
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = flight_epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Up to three `(label_name, label_value)` pairs; empty-name pairs are
+/// unused. Values must be `'static` (method/transport/exec names are) so
+/// recording never allocates.
+pub type Labels = [(&'static str, &'static str); 3];
+
+/// No labels at all.
+pub const NO_LABELS: Labels = [("", ""); 3];
+
+/// One label pair.
+pub const fn label1(k: &'static str, v: &'static str) -> Labels {
+    [(k, v), ("", ""), ("", "")]
+}
+
+/// What a slot is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Log-bucketed histogram of nanosecond durations (exported in
+    /// seconds).
+    HistNs = 0,
+    /// Log-bucketed histogram of unit-less magnitudes (depths, counts).
+    HistUnits = 1,
+    /// Monotonic counter.
+    Counter = 2,
+    /// Last-write gauge (merged by maximum, for determinism).
+    Gauge = 3,
+}
+
+impl Kind {
+    fn from_u64(v: u64) -> Kind {
+        match v {
+            0 => Kind::HistNs,
+            1 => Kind::HistUnits,
+            2 => Kind::Counter,
+            _ => Kind::Gauge,
+        }
+    }
+
+    fn is_hist(self) -> bool {
+        matches!(self, Kind::HistNs | Kind::HistUnits)
+    }
+}
+
+/// Bucket index of a value: exact below 8, then 8 linear sub-buckets per
+/// octave. Monotone in `v`; everything above the tracked range lands in
+/// the last bucket.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUBS as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize;
+    let group = msb - SUB_BITS + 1;
+    let sub = ((v >> (msb - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    (group * SUBS + sub).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `b` (the Prometheus `le` value).
+fn bucket_upper(b: usize) -> u64 {
+    let group = b / SUBS;
+    let sub = (b % SUBS) as u64;
+    if group == 0 {
+        sub
+    } else {
+        ((SUBS as u64 + sub + 1) << (group - 1)) - 1
+    }
+}
+
+struct Slot {
+    name: &'static str,
+    labels: Labels,
+    kind: Kind,
+    count: u64,
+    /// Sum of recorded values (histograms/counters); last/greatest value
+    /// for gauges.
+    sum: u64,
+    max: u64,
+    /// Allocated once at slot creation for histogram kinds.
+    buckets: Option<Box<[u64; BUCKETS]>>,
+}
+
+struct Registry {
+    slots: Vec<Slot>,
+    /// Records refused because every slot was taken.
+    overflow: u64,
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry { slots: Vec::with_capacity(MAX_SLOTS), overflow: 0 }
+    }
+
+    #[inline]
+    fn slot_mut(&mut self, name: &'static str, labels: Labels, kind: Kind) -> Option<&mut Slot> {
+        // Pointer-first key comparison: the same call site passes the same
+        // `&'static str` literals, so the fast path never compares bytes.
+        let pos = self.slots.iter().position(|s| {
+            std::ptr::eq(s.name, name) && labels.iter().zip(s.labels.iter()).all(|(a, b)| {
+                std::ptr::eq(a.0, b.0) && std::ptr::eq(a.1, b.1)
+            })
+        });
+        let pos = match pos {
+            Some(p) => Some(p),
+            // Slow path (first record from a new call site / monomorphized
+            // twin): compare by content before concluding the key is new.
+            None => self
+                .slots
+                .iter()
+                .position(|s| s.name == name && s.labels == labels),
+        };
+        match pos {
+            Some(p) => Some(&mut self.slots[p]),
+            None => {
+                if self.slots.len() >= MAX_SLOTS {
+                    self.overflow += 1;
+                    return None;
+                }
+                let buckets =
+                    if kind.is_hist() { Some(Box::new([0u64; BUCKETS])) } else { None };
+                self.slots.push(Slot { name, labels, kind, count: 0, sum: 0, max: 0, buckets });
+                self.slots.last_mut()
+            }
+        }
+    }
+
+    fn record(&mut self, name: &'static str, labels: Labels, kind: Kind, v: u64) {
+        if let Some(s) = self.slot_mut(name, labels, kind) {
+            match kind {
+                Kind::HistNs | Kind::HistUnits => {
+                    s.count += 1;
+                    s.sum = s.sum.saturating_add(v);
+                    s.max = s.max.max(v);
+                    if let Some(b) = s.buckets.as_deref_mut() {
+                        b[bucket_of(v)] += 1;
+                    }
+                }
+                Kind::Counter => {
+                    s.count += 1;
+                    s.sum = s.sum.saturating_add(v);
+                    s.max = s.max.max(v);
+                }
+                Kind::Gauge => {
+                    s.count += 1;
+                    s.sum = v;
+                    s.max = s.max.max(v);
+                }
+            }
+        }
+    }
+}
+
+thread_local! {
+    static REG: RefCell<Registry> = RefCell::new(Registry::new());
+}
+
+/// Record a duration in nanoseconds into a latency histogram.
+#[inline]
+pub fn observe_ns(name: &'static str, labels: Labels, ns: u64) {
+    if !enabled() {
+        return;
+    }
+    REG.with(|r| r.borrow_mut().record(name, labels, Kind::HistNs, ns));
+}
+
+/// Record a unit-less magnitude (queue depth, in-flight count) into a
+/// histogram.
+#[inline]
+pub fn observe(name: &'static str, labels: Labels, v: u64) {
+    if !enabled() {
+        return;
+    }
+    REG.with(|r| r.borrow_mut().record(name, labels, Kind::HistUnits, v));
+}
+
+/// Bump a monotonic counter by `n`.
+#[inline]
+pub fn add(name: &'static str, labels: Labels, n: u64) {
+    if !enabled() {
+        return;
+    }
+    REG.with(|r| r.borrow_mut().record(name, labels, Kind::Counter, n));
+}
+
+/// Set a gauge to `v` (merged across threads/ranks by maximum).
+#[inline]
+pub fn gauge_set(name: &'static str, labels: Labels, v: u64) {
+    if !enabled() {
+        return;
+    }
+    REG.with(|r| r.borrow_mut().record(name, labels, Kind::Gauge, v));
+}
+
+/// RAII latency sample: records `elapsed` into the named histogram on
+/// drop. [`timer`] returns `None` (no clock read) when metrics are off.
+pub struct Timer {
+    t0: Instant,
+    name: &'static str,
+    labels: Labels,
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        observe_ns(self.name, self.labels, self.t0.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Start a latency sample; `None` when metrics are disabled.
+#[inline]
+pub fn timer(name: &'static str, labels: Labels) -> Option<Timer> {
+    if !enabled() {
+        return None;
+    }
+    Some(Timer { t0: Instant::now(), name, labels })
+}
+
+// ---------------------------------------------------------------------------
+// Merged (owned) side: what rank 0 accumulates and the exports read.
+// ---------------------------------------------------------------------------
+
+/// One merged metric, with owned keys (post-gather).
+#[derive(Debug, Clone)]
+pub struct OwnedMetric {
+    pub name: String,
+    /// Only the used pairs.
+    pub labels: Vec<(String, String)>,
+    pub kind: Kind,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    /// `BUCKETS` entries for histogram kinds, empty otherwise.
+    pub buckets: Vec<u64>,
+}
+
+impl OwnedMetric {
+    fn key_eq(&self, other: &OwnedMetric) -> bool {
+        self.name == other.name && self.labels == other.labels
+    }
+
+    /// Merge `other` into `self` (same key): elementwise bucket addition,
+    /// so the merge is associative and commutative.
+    fn absorb(&mut self, other: &OwnedMetric) {
+        match self.kind {
+            Kind::Gauge => {
+                self.sum = self.sum.max(other.sum);
+                self.count += other.count;
+                self.max = self.max.max(other.max);
+            }
+            _ => {
+                self.count += other.count;
+                self.sum = self.sum.saturating_add(other.sum);
+                self.max = self.max.max(other.max);
+                for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+                    *a += b;
+                }
+            }
+        }
+    }
+
+    /// Smallest bucket upper bound covering quantile `q` (0..=1) of the
+    /// recorded distribution; the top bucket reports the exact max.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 || self.buckets.is_empty() {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if b == BUCKETS - 1 { self.max } else { bucket_upper(b) };
+            }
+        }
+        self.max
+    }
+
+    /// Rendered label selector, `{a="x",b="y"}` or empty.
+    fn selector(&self, extra: Option<(&str, String)>) -> String {
+        let mut parts: Vec<String> =
+            self.labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+        if let Some((k, v)) = extra {
+            parts.push(format!("{k}=\"{v}\""));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    }
+}
+
+/// The process-wide merged table (rank 0 side of [`rank_flush`]).
+static WORLD: Mutex<Vec<OwnedMetric>> = Mutex::new(Vec::new());
+
+fn merge_into(table: &mut Vec<OwnedMetric>, m: OwnedMetric) {
+    match table.iter_mut().find(|t| t.key_eq(&m)) {
+        Some(t) => t.absorb(&m),
+        None => table.push(m),
+    }
+}
+
+/// When latched, [`reset_world`] is a no-op: benches accumulate their
+/// whole configuration matrix into one exported table instead of keeping
+/// only the last measured world.
+static HOLD_WORLD: AtomicBool = AtomicBool::new(false);
+
+/// Latch (or release) world-table accumulation across runs — see
+/// [`reset_world`]. Benches set this once before their matrix.
+pub fn set_hold_world(on: bool) {
+    HOLD_WORLD.store(on, Ordering::Relaxed);
+}
+
+/// Drop everything merged so far (driver calls this at the start of each
+/// run so `--json`/`--metrics-out` describe exactly one world). A no-op
+/// while [`set_hold_world`] is latched.
+pub fn reset_world() {
+    if HOLD_WORLD.load(Ordering::Relaxed) {
+        return;
+    }
+    WORLD.lock().unwrap().clear();
+}
+
+/// Discard this thread's registry without flushing.
+pub fn clear_local() {
+    REG.with(|r| {
+        let mut r = r.borrow_mut();
+        r.slots.clear();
+        r.overflow = 0;
+    });
+}
+
+fn snapshot_registry(r: &Registry) -> Vec<OwnedMetric> {
+    r.slots
+        .iter()
+        .map(|s| OwnedMetric {
+            name: s.name.to_string(),
+            labels: s
+                .labels
+                .iter()
+                .filter(|(k, _)| !k.is_empty())
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            kind: s.kind,
+            count: s.count,
+            sum: s.sum,
+            max: s.max,
+            buckets: match s.buckets.as_deref() {
+                Some(b) => b.to_vec(),
+                None => Vec::new(),
+            },
+        })
+        .collect()
+}
+
+fn snapshot_local() -> Vec<OwnedMetric> {
+    REG.with(|r| snapshot_registry(&r.borrow()))
+}
+
+// Wire format (all u64 little-endian, strings length-prefixed):
+//   n_metrics, then per metric:
+//     kind, count, sum, max, name, n_labels, (lname, lvalue)*,
+//     n_nonzero_buckets, (index, count)*
+fn put_u64(wire: &mut Vec<u8>, v: u64) {
+    wire.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(wire: &mut Vec<u8>, s: &str) {
+    put_u64(wire, s.len() as u64);
+    wire.extend_from_slice(s.as_bytes());
+}
+
+fn get_u64(wire: &[u8], at: &mut usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&wire[*at..*at + 8]);
+    *at += 8;
+    u64::from_le_bytes(b)
+}
+
+fn get_str(wire: &[u8], at: &mut usize) -> String {
+    let len = get_u64(wire, at) as usize;
+    let s = String::from_utf8_lossy(&wire[*at..*at + len]).into_owned();
+    *at += len;
+    s
+}
+
+fn encode(metrics: &[OwnedMetric]) -> Vec<u8> {
+    let mut wire = Vec::new();
+    put_u64(&mut wire, metrics.len() as u64);
+    for m in metrics {
+        put_u64(&mut wire, m.kind as u64);
+        put_u64(&mut wire, m.count);
+        put_u64(&mut wire, m.sum);
+        put_u64(&mut wire, m.max);
+        put_str(&mut wire, &m.name);
+        put_u64(&mut wire, m.labels.len() as u64);
+        for (k, v) in &m.labels {
+            put_str(&mut wire, k);
+            put_str(&mut wire, v);
+        }
+        let nnz = m.buckets.iter().filter(|&&c| c != 0).count();
+        put_u64(&mut wire, nnz as u64);
+        for (i, &c) in m.buckets.iter().enumerate() {
+            if c != 0 {
+                put_u64(&mut wire, i as u64);
+                put_u64(&mut wire, c);
+            }
+        }
+    }
+    wire
+}
+
+fn decode(wire: &[u8]) -> Vec<OwnedMetric> {
+    let mut at = 0usize;
+    let n = get_u64(wire, &mut at) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let kind = Kind::from_u64(get_u64(wire, &mut at));
+        let count = get_u64(wire, &mut at);
+        let sum = get_u64(wire, &mut at);
+        let max = get_u64(wire, &mut at);
+        let name = get_str(wire, &mut at);
+        let nl = get_u64(wire, &mut at) as usize;
+        let mut labels = Vec::with_capacity(nl);
+        for _ in 0..nl {
+            let k = get_str(wire, &mut at);
+            let v = get_str(wire, &mut at);
+            labels.push((k, v));
+        }
+        let nnz = get_u64(wire, &mut at) as usize;
+        let mut buckets = if kind.is_hist() { vec![0u64; BUCKETS] } else { Vec::new() };
+        for _ in 0..nnz {
+            let i = get_u64(wire, &mut at) as usize;
+            let c = get_u64(wire, &mut at);
+            if i < buckets.len() {
+                buckets[i] = c;
+            }
+        }
+        out.push(OwnedMetric { name, labels, kind, count, sum, max, buckets });
+    }
+    out
+}
+
+/// End-of-world collective reduction: every rank drains its registry;
+/// ranks `1..n` ship theirs to rank 0, which merges everything into the
+/// process table. Same protocol and poisoned-world behaviour as the trace
+/// gather — a poisoned world skips the collective and discards locally.
+pub(crate) fn rank_flush(comm: &Comm) {
+    // Consult the world-creation snapshot, not the live global: every rank
+    // must make the same participate/skip decision or the gather deadlocks
+    // (a concurrent test could flip the global mid-teardown).
+    if !comm.ctl().metrics_on() {
+        clear_local();
+        return;
+    }
+    if comm.ctl().poisoned() {
+        clear_local();
+        return;
+    }
+    let mine = snapshot_local();
+    clear_local();
+    if comm.rank() == 0 {
+        let mut table = WORLD.lock().unwrap();
+        for m in mine {
+            merge_into(&mut table, m);
+        }
+        for p in 1..comm.size() {
+            for m in decode(&comm.recv_bytes(p, TAG_METRICS)) {
+                merge_into(&mut table, m);
+            }
+        }
+    } else {
+        comm.send_bytes(0, TAG_METRICS, encode(&mine));
+    }
+}
+
+/// Test/bench hook: merge this thread's registry straight into the
+/// process table without a world (what `rank_flush` does on rank 0).
+pub fn flush_local_to_world() {
+    let mine = snapshot_local();
+    clear_local();
+    let mut table = WORLD.lock().unwrap();
+    for m in mine {
+        merge_into(&mut table, m);
+    }
+}
+
+/// Quantile summary of one merged histogram (or total of one counter),
+/// the unit of the `metrics` block in `RunReport` / `--json` rows.
+/// Durations are in **seconds**.
+#[derive(Debug, Clone)]
+pub struct MetricSummary {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub kind: Kind,
+    pub count: u64,
+    /// p50/p90/p99/max; seconds for `HistNs`, raw units otherwise. For
+    /// counters/gauges only `max` is meaningful (the total / the value).
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+fn scale(kind: Kind, v: u64) -> f64 {
+    match kind {
+        Kind::HistNs => v as f64 * 1e-9,
+        _ => v as f64,
+    }
+}
+
+/// Summaries of everything merged so far, sorted by (name, labels) for
+/// deterministic output.
+pub fn summaries() -> Vec<MetricSummary> {
+    summaries_of(WORLD.lock().unwrap().clone())
+}
+
+/// [`summaries`] over an explicit table (unit tests and custom merges).
+pub fn summaries_of(mut table: Vec<OwnedMetric>) -> Vec<MetricSummary> {
+    table.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+    table
+        .iter()
+        .map(|m| MetricSummary {
+            name: m.name.clone(),
+            labels: m.labels.clone(),
+            kind: m.kind,
+            count: m.count,
+            p50: scale(m.kind, m.quantile(0.50)),
+            p90: scale(m.kind, m.quantile(0.90)),
+            p99: scale(m.kind, m.quantile(0.99)),
+            max: scale(
+                m.kind,
+                if m.kind == Kind::Counter { m.sum } else { m.max },
+            ),
+        })
+        .collect()
+}
+
+/// Render everything merged so far as Prometheus text exposition format.
+/// Histogram buckets are cumulative with `le` in the histogram's native
+/// unit (seconds for `*_seconds`); empty buckets are skipped (the format
+/// allows sparse `le` ladders), `+Inf`, `_sum` and `_count` always
+/// present.
+pub fn render_prometheus() -> String {
+    render_prometheus_of(WORLD.lock().unwrap().clone())
+}
+
+/// [`render_prometheus`] over an explicit table.
+pub fn render_prometheus_of(mut table: Vec<OwnedMetric>) -> String {
+    table.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+    let mut out = String::new();
+    let mut typed: Vec<String> = Vec::new();
+    for m in &table {
+        let (typ, unit_scale) = match m.kind {
+            Kind::HistNs => ("histogram", 1e-9),
+            Kind::HistUnits => ("histogram", 1.0),
+            Kind::Counter => ("counter", 1.0),
+            Kind::Gauge => ("gauge", 1.0),
+        };
+        if !typed.contains(&m.name) {
+            out.push_str(&format!("# TYPE {} {}\n", m.name, typ));
+            typed.push(m.name.clone());
+        }
+        match m.kind {
+            Kind::Counter => {
+                out.push_str(&format!("{}{} {}\n", m.name, m.selector(None), m.sum));
+            }
+            Kind::Gauge => {
+                out.push_str(&format!("{}{} {}\n", m.name, m.selector(None), m.sum));
+            }
+            _ => {
+                let mut cum = 0u64;
+                for (b, &c) in m.buckets.iter().enumerate() {
+                    if c == 0 {
+                        continue;
+                    }
+                    cum += c;
+                    let le = bucket_upper(b) as f64 * unit_scale;
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        m.name,
+                        m.selector(Some(("le", format!("{le:.9e}")))),
+                        cum
+                    ));
+                }
+                out.push_str(&format!(
+                    "{}_bucket{} {}\n",
+                    m.name,
+                    m.selector(Some(("le", "+Inf".to_string()))),
+                    m.count
+                ));
+                out.push_str(&format!(
+                    "{}_sum{} {:.9e}\n",
+                    m.name,
+                    m.selector(None),
+                    m.sum as f64 * unit_scale
+                ));
+                out.push_str(&format!("{}_count{} {}\n", m.name, m.selector(None), m.count));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder
+// ---------------------------------------------------------------------------
+
+static FLIGHT_EPOCH: OnceLock<Instant> = OnceLock::new();
+static FLIGHT: Mutex<Vec<(i32, &'static str, u64)>> = Mutex::new(Vec::new());
+static FLIGHT_DUMP: Mutex<Option<FlightSnapshot>> = Mutex::new(None);
+
+fn flight_epoch() -> Instant {
+    *FLIGHT_EPOCH.get_or_init(Instant::now)
+}
+
+/// Should span sites feed the flight recorder? True whenever anything
+/// that could consume a failure dump is live: metrics on, tracing on, or
+/// a chaos world active.
+#[inline]
+pub fn flight_active() -> bool {
+    enabled() || crate::trace::enabled() || crate::simmpi::fault::chaos_active()
+}
+
+/// Note a span entry in the process-wide flight ring (rank `-1` when the
+/// calling thread is not a bound world rank). Bounded: the oldest note is
+/// overwritten once the ring holds [`FLIGHT_CAP`] entries.
+pub fn flight_note(rank: i32, label: &'static str) {
+    let t = flight_epoch().elapsed().as_nanos() as u64;
+    let mut ring = FLIGHT.lock().unwrap();
+    if ring.len() >= FLIGHT_CAP {
+        ring.remove(0);
+    }
+    ring.push((rank, label, t));
+}
+
+/// What the failure JSON embeds: the recent-span ring plus a metrics
+/// snapshot of the capturing thread at the moment of death.
+#[derive(Debug, Clone)]
+pub struct FlightSnapshot {
+    /// Rank whose failure triggered the capture.
+    pub rank: usize,
+    /// Failure context string (same text as the `WorldError`).
+    pub context: String,
+    /// `(rank, span_label, t_ns)` notes, oldest first.
+    pub notes: Vec<(i32, String, u64)>,
+    /// Local metric summaries of the capturing thread (may be empty when
+    /// the capture runs off-thread, e.g. from the panic joiner).
+    pub metrics: Vec<MetricSummary>,
+}
+
+/// Capture the flight ring into the process dump slot — first writer
+/// wins, matching the first-recorded-failure semantics of `WorldCtl`.
+/// Called on the watchdog abort path and when a rank's panic is recorded.
+pub fn flight_capture(rank: usize, context: &str) {
+    let notes: Vec<(i32, String, u64)> = FLIGHT
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(r, l, t)| (*r, (*l).to_string(), *t))
+        .collect();
+    let local = snapshot_local();
+    let metrics = local
+        .iter()
+        .map(|m| MetricSummary {
+            name: m.name.clone(),
+            labels: m.labels.clone(),
+            kind: m.kind,
+            count: m.count,
+            p50: scale(m.kind, m.quantile(0.50)),
+            p90: scale(m.kind, m.quantile(0.90)),
+            p99: scale(m.kind, m.quantile(0.99)),
+            max: scale(m.kind, if m.kind == Kind::Counter { m.sum } else { m.max }),
+        })
+        .collect();
+    let mut slot = FLIGHT_DUMP.lock().unwrap();
+    if slot.is_none() {
+        *slot = Some(FlightSnapshot { rank, context: context.to_string(), notes, metrics });
+    }
+}
+
+/// Drain the captured flight snapshot (consumed by the failure JSON).
+pub fn take_flight() -> Option<FlightSnapshot> {
+    FLIGHT_DUMP.lock().unwrap().take()
+}
+
+/// Clear the flight ring and any captured dump (start of a fresh run).
+pub fn reset_flight() {
+    FLIGHT.lock().unwrap().clear();
+    *FLIGHT_DUMP.lock().unwrap() = None;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn owned(vals: &[u64]) -> OwnedMetric {
+        let mut m = OwnedMetric {
+            name: "t".into(),
+            labels: Vec::new(),
+            kind: Kind::HistUnits,
+            count: 0,
+            sum: 0,
+            max: 0,
+            buckets: vec![0; BUCKETS],
+        };
+        for &v in vals {
+            m.count += 1;
+            m.sum += v;
+            m.max = m.max.max(v);
+            m.buckets[bucket_of(v)] += 1;
+        }
+        m
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounded() {
+        let mut last = 0usize;
+        for v in 0..100_000u64 {
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket_of not monotone at {v}");
+            assert!(b < BUCKETS);
+            last = b;
+        }
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // Every value is ≤ its bucket's upper bound, and > the previous
+        // bucket's.
+        for v in [0u64, 1, 7, 8, 9, 255, 256, 1_000_000, 123_456_789] {
+            let b = bucket_of(v);
+            assert!(v <= bucket_upper(b), "{v} > upper({b})");
+            if b > 0 {
+                assert!(v > bucket_upper(b - 1), "{v} <= upper({})", b - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_track_scripted_workload() {
+        // 1..=1000 uniformly: p50 ≈ 500, p99 ≈ 990, with ≤12.5% bucket
+        // resolution error above, never below the true quantile.
+        let vals: Vec<u64> = (1..=1000).collect();
+        let m = owned(&vals);
+        for (q, truth) in [(0.50, 500u64), (0.90, 900), (0.99, 990)] {
+            let got = m.quantile(q);
+            assert!(got >= truth, "q{q}: {got} < {truth}");
+            assert!(
+                (got as f64) <= truth as f64 * 1.13 + 1.0,
+                "q{q}: {got} too far above {truth}"
+            );
+        }
+        assert_eq!(m.quantile(1.0), 1000);
+        assert_eq!(m.max, 1000);
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let a = owned(&[1, 5, 9, 1000]);
+        let b = owned(&[2, 6, 10_000]);
+        let c = owned(&[3, 70, 7_777_777]);
+        let mut ab_c = a.clone();
+        ab_c.absorb(&b);
+        ab_c.absorb(&c);
+        let mut bc = b.clone();
+        bc.absorb(&c);
+        let mut a_bc = a.clone();
+        a_bc.absorb(&bc);
+        assert_eq!(ab_c.count, a_bc.count);
+        assert_eq!(ab_c.sum, a_bc.sum);
+        assert_eq!(ab_c.max, a_bc.max);
+        assert_eq!(ab_c.buckets, a_bc.buckets);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_everything() {
+        let mut c = OwnedMetric {
+            name: "retries_total".into(),
+            labels: vec![("op".into(), "send".into())],
+            kind: Kind::Counter,
+            count: 3,
+            sum: 7,
+            max: 4,
+            buckets: Vec::new(),
+        };
+        let h = owned(&[1, 2, 3, 500, 1_000_000]);
+        let wire = encode(&[h.clone(), c.clone()]);
+        let back = decode(&wire);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].buckets, h.buckets);
+        assert_eq!(back[0].count, h.count);
+        assert_eq!(back[1].sum, c.sum);
+        assert_eq!(back[1].labels, c.labels);
+        c.absorb(&back[1]);
+        assert_eq!(c.sum, 14);
+    }
+
+    // The registry → summaries → Prometheus path over a local registry:
+    // the process-global table and enable flag are shared with every other
+    // test in this binary (driver tests run worlds with metrics on), so
+    // unit tests stay off them; the global plumbing is exercised by
+    // `tests/metrics_observability.rs` in its own process.
+    #[test]
+    fn registry_records_and_renders() {
+        let mut reg = Registry::new();
+        reg.record("unit_test_lat", label1("site", "here"), Kind::HistNs, 1_000);
+        reg.record("unit_test_lat", label1("site", "here"), Kind::HistNs, 2_000);
+        reg.record("unit_test_total", NO_LABELS, Kind::Counter, 5);
+        reg.record("unit_test_gauge", NO_LABELS, Kind::Gauge, 42);
+        let table = snapshot_registry(&reg);
+        assert_eq!(table.len(), 3);
+        let s = summaries_of(table.clone());
+        let lat = s.iter().find(|m| m.name == "unit_test_lat").unwrap();
+        assert_eq!(lat.count, 2);
+        assert_eq!(lat.labels, vec![("site".to_string(), "here".to_string())]);
+        assert!(lat.p50 >= 1e-6 && lat.p50 < 2e-6, "p50 {}", lat.p50);
+        let total = s.iter().find(|m| m.name == "unit_test_total").unwrap();
+        assert_eq!(total.max, 5.0);
+        let text = render_prometheus_of(table);
+        assert!(text.contains("# TYPE unit_test_lat histogram"));
+        assert!(text.contains("unit_test_lat_bucket{site=\"here\",le=\"+Inf\"} 2"));
+        assert!(text.contains("unit_test_lat_count{site=\"here\"} 2"));
+        assert!(text.contains("unit_test_total 5"));
+        assert!(text.contains("unit_test_gauge 42"));
+    }
+
+    #[test]
+    fn registry_merges_across_snapshots() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        for v in [10u64, 200, 3_000] {
+            a.record("m", NO_LABELS, Kind::HistUnits, v);
+            b.record("m", NO_LABELS, Kind::HistUnits, v * 7);
+        }
+        let mut table = Vec::new();
+        for m in snapshot_registry(&a).into_iter().chain(snapshot_registry(&b)) {
+            merge_into(&mut table, m);
+        }
+        assert_eq!(table.len(), 1);
+        assert_eq!(table[0].count, 6);
+        assert_eq!(table[0].max, 21_000);
+    }
+}

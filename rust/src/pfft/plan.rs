@@ -464,6 +464,15 @@ impl<T: Real> PfftPlan<T> {
         self.method
     }
 
+    /// Metric labels of this plan's exchange configuration.
+    fn exchange_labels(&self) -> crate::metrics::Labels {
+        [
+            ("method", self.method.name()),
+            ("transport", self.transport.name()),
+            ("exec", self.exec.name()),
+        ]
+    }
+
     /// How this plan executes its redistributions.
     pub fn exec_mode(&self) -> ExecMode {
         self.exec
@@ -679,6 +688,7 @@ impl<T: Real> PfftPlan<T> {
     /// in-flight sub-exchanges without any code on this side.
     fn descend(&mut self, engine: &mut dyn SerialFft<T>, dir: Direction) {
         let r = self.dims.len();
+        let labels = self.exchange_labels();
         for t in (0..r).rev() {
             let (lo, hi) = self.bufs.split_at_mut(t + 1);
             match &mut self.redists[t] {
@@ -694,9 +704,14 @@ impl<T: Real> PfftPlan<T> {
                         }
                         fft_s += tc.elapsed().as_secs_f64();
                     });
-                    let wall = t0.elapsed().as_secs_f64();
+                    let wall = t0.elapsed();
                     self.timers.overlap_fft += fft_s;
-                    self.timers.overlap_comm += wall - fft_s;
+                    self.timers.overlap_comm += wall.as_secs_f64() - fft_s;
+                    crate::metrics::observe_ns(
+                        "a2wfft_exchange_seconds",
+                        labels,
+                        wall.as_nanos() as u64,
+                    );
                 }
                 blocking => {
                     let t0 = Instant::now();
@@ -704,14 +719,26 @@ impl<T: Real> PfftPlan<T> {
                         crate::trace_span!(Exchange, "exchange");
                         blocking.execute(&hi[0], &mut lo[t]);
                     }
-                    self.timers.redist += t0.elapsed().as_secs_f64();
+                    let redist = t0.elapsed();
+                    self.timers.redist += redist.as_secs_f64();
+                    crate::metrics::observe_ns(
+                        "a2wfft_exchange_seconds",
+                        labels,
+                        redist.as_nanos() as u64,
+                    );
                     let t1 = Instant::now();
                     let shape = self.shapes[t].clone();
                     {
                         crate::trace_span!(Fft, crate::trace::axis_label(t));
                         engine.c2c(&mut lo[t], &shape, t, dir);
                     }
-                    self.timers.fft += t1.elapsed().as_secs_f64();
+                    let fft = t1.elapsed();
+                    self.timers.fft += fft.as_secs_f64();
+                    crate::metrics::observe_ns(
+                        "a2wfft_fft_axis_seconds",
+                        crate::metrics::label1("dtype", T::NAME),
+                        fft.as_nanos() as u64,
+                    );
                 }
             }
         }
@@ -723,6 +750,7 @@ impl<T: Real> PfftPlan<T> {
     /// previous chunk's exchange drains.
     fn ascend(&mut self, engine: &mut dyn SerialFft<T>) {
         let r = self.dims.len();
+        let labels = self.exchange_labels();
         for t in 0..r {
             let (lo, hi) = self.bufs.split_at_mut(t + 1);
             match &mut self.redists[t] {
@@ -738,9 +766,14 @@ impl<T: Real> PfftPlan<T> {
                         }
                         fft_s += tc.elapsed().as_secs_f64();
                     });
-                    let wall = t0.elapsed().as_secs_f64();
+                    let wall = t0.elapsed();
                     self.timers.overlap_fft += fft_s;
-                    self.timers.overlap_comm += wall - fft_s;
+                    self.timers.overlap_comm += wall.as_secs_f64() - fft_s;
+                    crate::metrics::observe_ns(
+                        "a2wfft_exchange_seconds",
+                        labels,
+                        wall.as_nanos() as u64,
+                    );
                 }
                 blocking => {
                     let t0 = Instant::now();
@@ -749,13 +782,25 @@ impl<T: Real> PfftPlan<T> {
                         crate::trace_span!(Fft, crate::trace::axis_label(t));
                         engine.c2c(&mut lo[t], &shape, t, Direction::Backward);
                     }
-                    self.timers.fft += t0.elapsed().as_secs_f64();
+                    let fft = t0.elapsed();
+                    self.timers.fft += fft.as_secs_f64();
+                    crate::metrics::observe_ns(
+                        "a2wfft_fft_axis_seconds",
+                        crate::metrics::label1("dtype", T::NAME),
+                        fft.as_nanos() as u64,
+                    );
                     let t1 = Instant::now();
                     {
                         crate::trace_span!(Exchange, "exchange_back");
                         blocking.execute_back(&lo[t], &mut hi[0]);
                     }
-                    self.timers.redist += t1.elapsed().as_secs_f64();
+                    let redist = t1.elapsed();
+                    self.timers.redist += redist.as_secs_f64();
+                    crate::metrics::observe_ns(
+                        "a2wfft_exchange_seconds",
+                        labels,
+                        redist.as_nanos() as u64,
+                    );
                 }
             }
         }

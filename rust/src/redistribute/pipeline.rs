@@ -406,6 +406,11 @@ impl PipelinedRedistPlan {
         for chunk in self.chunks.iter().take(depth) {
             crate::trace_span!(Chunk, "chunk_post");
             inflight.push_back(chunk.fwd.start_any(send));
+            crate::metrics::observe(
+                "a2wfft_chunk_inflight_depth",
+                crate::metrics::NO_LABELS,
+                inflight.len() as u64,
+            );
         }
         for c in 0..k {
             let req = inflight.pop_front().expect("pipeline: request queue underrun");
@@ -425,6 +430,11 @@ impl PipelinedRedistPlan {
             if c + depth < k {
                 crate::trace_span!(Chunk, "chunk_post");
                 inflight.push_back(self.chunks[c + depth].fwd.start_any(send));
+                crate::metrics::observe(
+                    "a2wfft_chunk_inflight_depth",
+                    crate::metrics::NO_LABELS,
+                    inflight.len() as u64,
+                );
             }
             let chunk = &self.chunks[c];
             crate::trace_span!(Chunk, "chunk_consume");
@@ -489,6 +499,11 @@ impl PipelinedRedistPlan {
             {
                 crate::trace_span!(Chunk, "chunk_post");
                 inflight.push_back((c, chunk.bwd.start_any(self.scratch_b[c].as_bytes())));
+                crate::metrics::observe(
+                    "a2wfft_chunk_inflight_depth",
+                    crate::metrics::NO_LABELS,
+                    inflight.len() as u64,
+                );
             }
             if inflight.len() == depth {
                 Self::drain_one_back(

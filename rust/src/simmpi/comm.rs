@@ -56,6 +56,7 @@ impl Mailbox {
         let mut g = self.m.lock().unwrap();
         let b = g.entry((src, tag)).or_insert_with(Bucket::new);
         b.q.push_back(data);
+        crate::metrics::observe("a2wfft_mailbox_queue_depth", crate::metrics::NO_LABELS, b.q.len() as u64);
         if b.waiters > 0 {
             b.cv.notify_all();
         }
@@ -71,6 +72,7 @@ impl Mailbox {
                     if b.q.is_empty() && b.waiters == 0 {
                         g.remove(&key);
                     }
+                    dl.observe_margin();
                     return data;
                 }
             }
@@ -417,6 +419,11 @@ impl Comm {
                     fault::RETRY_BACKOFF_US << attempt,
                 ));
                 attempt += 1;
+                crate::metrics::add(
+                    "a2wfft_fault_retries_total",
+                    crate::metrics::label1("op", "send"),
+                    1,
+                );
             }
         }
         self.deliver(to, tag, data);
@@ -710,6 +717,7 @@ impl World {
                     let _ = catch_unwind(AssertUnwindSafe(|| {
                         tear.fault_drain();
                         crate::trace::rank_flush(&tear);
+                        crate::metrics::rank_flush(&tear);
                     }));
                 });
             }
@@ -748,6 +756,10 @@ fn record_rank_panic(ctl: &WorldCtl, rank: usize, p: &(dyn std::any::Any + Send)
         Some(label) => format!("{context} [span {label}]"),
         None => context,
     };
+    // Snapshot the flight recorder before the failure record: the ring
+    // still holds the dead rank's recent span notes, and the dump is what
+    // the structured failure JSON embeds for post-hoc forensics.
+    crate::metrics::flight_capture(rank, &context);
     ctl.record(rank, context);
 }
 

@@ -233,6 +233,7 @@ impl Runs {
     /// re-flattening, no allocation — the persistent-plan fast path.
     pub fn pack(&self, src: &[u8], dst: &mut [u8]) {
         crate::trace_span!(Pack, "pack");
+        let _m = crate::metrics::timer("a2wfft_copy_seconds", crate::metrics::label1("op", "pack"));
         let run = self.run_len;
         let mut out = 0usize;
         self.for_each_offset(|off| {
@@ -246,6 +247,8 @@ impl Runs {
     /// [`Datatype::unpack`] over a pre-flattened representation.
     pub fn unpack(&self, src: &[u8], dst: &mut [u8]) {
         crate::trace_span!(Pack, "unpack");
+        let _m =
+            crate::metrics::timer("a2wfft_copy_seconds", crate::metrics::label1("op", "unpack"));
         let run = self.run_len;
         let mut inp = 0usize;
         self.for_each_offset(|off| {
@@ -461,6 +464,7 @@ impl TransferPlan {
     /// destination in `dst`. Zero staging, zero allocation.
     pub fn execute(&self, src: &[u8], dst: &mut [u8]) {
         crate::trace_span!(Pack, "fused");
+        let _m = crate::metrics::timer("a2wfft_copy_seconds", crate::metrics::label1("op", "fused"));
         self.run(src, dst);
         stats::add_fused(self.bytes);
     }
@@ -481,6 +485,8 @@ impl TransferPlan {
     /// driver reports can prove the pack/unpack double-copy disappeared.
     pub fn execute_one_copy(&self, src: &[u8], dst: &mut [u8]) {
         crate::trace_span!(Pack, "one_copy");
+        let _m =
+            crate::metrics::timer("a2wfft_copy_seconds", crate::metrics::label1("op", "one_copy"));
         self.run(src, dst);
         stats::add_one_copy(self.bytes);
     }

@@ -503,6 +503,13 @@ impl Drop for RankFaultGuard {
     }
 }
 
+/// Rank this thread is bound to via the fault plan, if any. Used by the
+/// flight recorder to attribute span notes to ranks in chaos worlds
+/// (threads of fault-free worlds are not bound and report no rank).
+pub(crate) fn bound_rank() -> Option<usize> {
+    RANK_FAULTS.with(|t| t.borrow().as_ref().map(|(_, r)| *r))
+}
+
 /// Trace-span entry hook, called by `trace::span` when a chaos world is
 /// live: counts the span on the bound rank and fires a scripted panic if
 /// the schedule says so. No-op on threads outside a fault world.

@@ -358,6 +358,7 @@ impl Request {
         if self.done {
             return;
         }
+        let _m = crate::metrics::timer("a2wfft_nb_wait_seconds", crate::metrics::NO_LABELS);
         self.finish(recv, false);
     }
 
@@ -375,6 +376,7 @@ impl Request {
         if self.done {
             return None;
         }
+        let _m = crate::metrics::timer("a2wfft_nb_wait_seconds", crate::metrics::NO_LABELS);
         self.finish(recv, true)
     }
 

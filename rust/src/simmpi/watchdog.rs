@@ -114,6 +114,12 @@ pub(crate) struct WorldCtl {
     /// Fault plan consulted by the transport layers (None = no injection;
     /// the hot paths branch on this once and stay fault-free).
     pub(crate) faults: Option<Arc<FaultPlan>>,
+    /// Whether the metrics registry was enabled when this world was
+    /// created. The teardown metrics gather is collective, so the
+    /// participate/skip decision must be identical on every rank — a rank
+    /// reading the live global mid-teardown could see a concurrent
+    /// toggle (parallel tests) and deadlock the gather.
+    metrics: bool,
 }
 
 impl WorldCtl {
@@ -123,7 +129,13 @@ impl WorldCtl {
             failure: Mutex::new(None),
             watchdog: opts.watchdog,
             faults: opts.faults.clone().map(|spec| FaultPlan::new(spec, opts.fault_seed, size)),
+            metrics: crate::metrics::enabled(),
         }
+    }
+
+    /// The world-consistent metrics flag (see the field docs).
+    pub(crate) fn metrics_on(&self) -> bool {
+        self.metrics
     }
 
     /// Whether this world has any chaos machinery live (gates the global
@@ -159,6 +171,9 @@ impl WorldCtl {
 
     /// Record a failure and unwind the calling rank.
     pub(crate) fn fail(&self, rank: usize, context: String) -> ! {
+        // Watchdog/fault aborts run on the failing rank itself, so the
+        // flight capture sees that rank's local metric snapshot too.
+        crate::metrics::flight_capture(rank, &context);
         self.record(rank, context);
         abort_world()
     }
@@ -192,6 +207,23 @@ impl WaitDeadline {
     #[inline]
     pub(crate) fn expired(&self) -> bool {
         matches!(self.deadline, Some(d) if Instant::now() >= d)
+    }
+
+    /// Record how close this (successfully completed) wait came to the
+    /// watchdog deadline — the near-miss margin histogram. Free when no
+    /// watchdog is armed or metrics are off.
+    #[inline]
+    pub(crate) fn observe_margin(&self) {
+        if let Some(d) = self.deadline {
+            if crate::metrics::enabled() {
+                let margin = d.saturating_duration_since(Instant::now());
+                crate::metrics::observe_ns(
+                    "a2wfft_watchdog_margin_seconds",
+                    crate::metrics::NO_LABELS,
+                    margin.as_nanos() as u64,
+                );
+            }
+        }
     }
 }
 

@@ -250,6 +250,9 @@ impl ExposureHub {
     /// the exposure and unwinds.
     pub(crate) fn wait_drained(&self, ctl: &WorldCtl, me: usize, rank: usize, tag: u32) {
         crate::trace_span!(Wait, "drain");
+        // Epoch open-time: from the owner starting its close to the last
+        // reader releasing. Dominated by slow-reader skew.
+        let _m = crate::metrics::timer("a2wfft_window_epoch_seconds", crate::metrics::NO_LABELS);
         let mut g = self.m.lock().unwrap();
         let dl = WaitDeadline::new(ctl);
         loop {

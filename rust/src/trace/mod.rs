@@ -288,6 +288,16 @@ pub fn span(cat: Category, label: &'static str) -> SpanGuard {
     if chaos {
         crate::simmpi::fault::span_entered(label);
     }
+    // Flight recorder: keep the last few span entries process-wide so a
+    // failure dump can show what every rank was doing. Gated the same way
+    // as the label stack (plus metrics-on), so a fully disabled run pays
+    // only the relaxed loads above.
+    if chaos || enabled() || crate::metrics::enabled() {
+        crate::metrics::flight_note(
+            crate::simmpi::fault::bound_rank().map_or(-1, |r| r as i32),
+            label,
+        );
+    }
     let pushed_label = chaos || enabled();
     if pushed_label {
         LABELS.with(|l| l.borrow_mut().push(label));

@@ -1,0 +1,344 @@
+//! Metrics-registry acceptance: the always-on observability stack end to
+//! end.
+//!
+//! Covers the tentpole invariants: deterministic cross-rank reduction at
+//! every world size, quantile correctness of the merged log-bucketed
+//! histograms, zero steady-state allocations with metrics **on** (the
+//! PR-2 invariant extended to the registry), the flight recorder landing
+//! in the structured `failure` JSON of a chaos run, and well-formed
+//! Prometheus text exposition output.
+//!
+//! The registry enable flag, the merged world table and the flight ring
+//! are process-global, so every test here serializes on one mutex and
+//! resets the globals on entry (this binary runs in its own process — the
+//! lib tests deliberately stay off these globals). Uses the same
+//! thread-local counting allocator as `alloc_steady_state.rs`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Mutex;
+
+use a2wfft::coordinator::benchkit::{failure_json, report_json};
+use a2wfft::coordinator::trend::JsonValue;
+use a2wfft::coordinator::{run_config, run_config_checked, RunConfig};
+use a2wfft::metrics::{self, NO_LABELS};
+use a2wfft::redistribute::PipelinedRedistPlan;
+use a2wfft::simmpi::World;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: defers to the system allocator; the counter is a plain Cell of a
+// primitive with no destructor, safe to touch from the allocator hook.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Serializes every test that touches the process-global metrics state.
+static GUARD: Mutex<()> = Mutex::new(());
+
+/// Enter the guarded region with clean global state.
+fn guarded() -> std::sync::MutexGuard<'static, ()> {
+    let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    metrics::set_enabled(false);
+    metrics::set_hold_world(false);
+    metrics::reset_world();
+    metrics::reset_flight();
+    metrics::clear_local();
+    g
+}
+
+#[test]
+fn gather_reduces_deterministically_across_world_sizes() {
+    let _g = guarded();
+    for n in [1usize, 2, 4] {
+        for repeat in 0..2 {
+            metrics::reset_world();
+            metrics::set_enabled(true);
+            World::run(n, |comm| {
+                // Rank r records r+1 scripted depths and bumps a counter
+                // by r+1: the merged table must reduce to exact, repeat-
+                // independent totals at every world size.
+                for k in 0..=comm.rank() {
+                    metrics::observe("test_depth", NO_LABELS, (comm.rank() * 10 + k) as u64);
+                }
+                metrics::add("test_ops_total", NO_LABELS, 1 + comm.rank() as u64);
+            });
+            metrics::set_enabled(false);
+            let s = metrics::summaries();
+            let depth = s.iter().find(|m| m.name == "test_depth").unwrap();
+            let records: u64 = (1..=n as u64).sum();
+            assert_eq!(depth.count, records, "world {n} repeat {repeat}");
+            assert_eq!(depth.max, (11 * (n - 1)) as f64, "world {n} repeat {repeat}");
+            let ops = s.iter().find(|m| m.name == "test_ops_total").unwrap();
+            let expect: u64 = (0..n as u64).map(|r| 1 + r).sum();
+            assert_eq!(ops.max, expect as f64, "counter total, world {n} repeat {repeat}");
+        }
+    }
+}
+
+#[test]
+fn merged_quantiles_match_scripted_distribution() {
+    let _g = guarded();
+    metrics::reset_world();
+    metrics::set_enabled(true);
+    // Four ranks record the same 250 values (4, 8, ..., 1000): the merge
+    // is elementwise bucket addition, so the merged distribution is the
+    // per-rank one with 4x the mass and identical quantiles.
+    World::run(4, |_comm| {
+        for v in 1..=250u64 {
+            metrics::observe("scripted_units", NO_LABELS, v * 4);
+        }
+    });
+    metrics::set_enabled(false);
+    let s = metrics::summaries();
+    let m = s.iter().find(|m| m.name == "scripted_units").unwrap();
+    assert_eq!(m.count, 1000);
+    assert_eq!(m.max, 1000.0);
+    // Bucket resolution is 8 linear sub-buckets per octave: the reported
+    // quantile is a bucket upper bound, at or at most ~12.5% above truth.
+    for (q, truth) in [(m.p50, 500.0f64), (m.p90, 900.0), (m.p99, 990.0)] {
+        assert!(q >= truth, "quantile {q} below truth {truth}");
+        assert!(q <= truth * 1.13 + 1.0, "quantile {q} too far above truth {truth}");
+    }
+}
+
+#[test]
+fn metrics_on_steady_state_is_allocation_free() {
+    let _g = guarded();
+    metrics::set_enabled(true);
+    // Same workload as the alloc_steady_state pipelined test, but with the
+    // registry recording every exchange/copy/depth sample: after warmup
+    // primes the slot table (and the flight ring is at capacity, as in any
+    // run older than a few milliseconds), executions must never touch the
+    // heap.
+    World::run(1, |comm| {
+        for _ in 0..metrics::FLIGHT_CAP {
+            metrics::flight_note(0, "prefill");
+        }
+        let sizes = [4usize, 6, 8];
+        let mut plan = PipelinedRedistPlan::new(&comm, 8, &sizes, 0, &sizes, 1, 4, 2);
+        assert!(plan.is_pipelined());
+        let a: Vec<f64> = (0..plan.elems_a()).map(|x| x as f64 * 1.5).collect();
+        let mut b = vec![0.0f64; plan.elems_b()];
+        let mut back = vec![0.0f64; plan.elems_a()];
+        for _ in 0..2 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        assert_eq!(a, back, "roundtrip broken");
+        let n0 = allocs_on_this_thread();
+        for _ in 0..5 {
+            plan.execute(&a, &mut b);
+            plan.execute_back(&b, &mut back);
+        }
+        let delta = allocs_on_this_thread() - n0;
+        assert_eq!(delta, 0, "metrics-on executions allocated {delta} times in 5 trips");
+    });
+    metrics::set_enabled(false);
+    // The run recorded real boundary metrics while staying heap-silent.
+    let s = metrics::summaries();
+    let depth = s.iter().find(|m| m.name == "a2wfft_chunk_inflight_depth").unwrap();
+    assert!(depth.count > 0, "no in-flight depth samples recorded");
+}
+
+#[test]
+fn chaos_failure_json_carries_the_flight_recorder() {
+    let _g = guarded();
+    // A scripted rank death mid-exchange: the driver returns the
+    // structured failure and the flight recorder must land in its JSON.
+    let cfg = RunConfig {
+        global: vec![16, 12, 10],
+        ranks: 4,
+        inner: 1,
+        outer: 1,
+        fault_schedule: Some("panic@1:span=exchange:at=1".into()),
+        watchdog_ms: Some(10_000),
+        ..Default::default()
+    };
+    let err = run_config_checked(&cfg, 2).unwrap_err();
+    let json = failure_json("chaos", &cfg.global, 4, &err);
+    let doc = JsonValue::parse(&json).expect("failure row is not valid JSON");
+    let failure = doc.get("failure").expect("failure object missing");
+    assert_eq!(failure.get("rank").and_then(|v| v.as_num()), Some(1.0));
+    let flight = failure.get("flight").expect("failure JSON missing the flight recorder");
+    assert_eq!(flight.get("rank").and_then(|v| v.as_num()), Some(1.0));
+    assert!(flight.get("context").and_then(|v| v.as_str()).unwrap().contains("exchange"));
+    let spans = flight.get("recent_spans").and_then(|v| v.as_arr()).unwrap();
+    assert!(!spans.is_empty(), "flight ring empty at capture");
+    assert!(
+        spans.iter().any(|s| s.get("span").and_then(|v| v.as_str()) == Some("exchange")),
+        "no exchange span among the recent notes"
+    );
+    for s in spans {
+        assert!(s.get("rank").and_then(|v| v.as_num()).is_some());
+        assert!(s.get("t_ns").and_then(|v| v.as_num()).is_some());
+    }
+    // The capture is drained: a second export has no flight section.
+    assert!(metrics::take_flight().is_none());
+}
+
+#[test]
+fn flight_ring_is_bounded_and_captures_once() {
+    let _g = guarded();
+    metrics::set_enabled(true);
+    for _ in 0..metrics::FLIGHT_CAP + 50 {
+        metrics::flight_note(3, "spin");
+    }
+    metrics::observe("flight_local_metric", NO_LABELS, 7);
+    metrics::flight_capture(3, "first failure");
+    metrics::flight_capture(0, "cascade");
+    metrics::set_enabled(false);
+    let snap = metrics::take_flight().unwrap();
+    // First writer wins (the primary failure), the ring stays bounded,
+    // and the capture carries the thread's local metric snapshot.
+    assert_eq!((snap.rank, snap.context.as_str()), (3, "first failure"));
+    assert_eq!(snap.notes.len(), metrics::FLIGHT_CAP);
+    assert!(snap.metrics.iter().any(|m| m.name == "flight_local_metric"));
+    assert!(metrics::take_flight().is_none(), "capture must drain exactly once");
+    metrics::clear_local();
+}
+
+/// Minimal Prometheus text-format well-formedness check: `# TYPE` lines
+/// declare a known type; every sample line is `series value` with a
+/// parseable value; histogram bucket counts are cumulative and the
+/// `+Inf` bucket equals `_count`.
+fn validate_prometheus(text: &str) {
+    use std::collections::BTreeMap;
+    let mut last_cum: BTreeMap<String, u64> = BTreeMap::new();
+    let mut inf: BTreeMap<String, u64> = BTreeMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            assert!(!it.next().unwrap().is_empty(), "unnamed TYPE line: {line}");
+            let typ = it.next().expect("TYPE line without a type");
+            assert!(
+                matches!(typ, "histogram" | "counter" | "gauge"),
+                "unknown metric type in: {line}"
+            );
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("sample line without a value: {line}")
+        });
+        assert!(!series.is_empty(), "empty series in: {line}");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in: {line}"));
+        assert!(v.is_finite() && v >= 0.0, "negative/non-finite sample: {line}");
+        if let Some(rest) = series.split_once("_bucket{") {
+            // Strip the le pair: the remaining selector identifies the
+            // series the cumulative counts belong to.
+            let (name, sel) = rest;
+            let sel = sel.trim_end_matches('}');
+            let ident: Vec<&str> =
+                sel.split(',').filter(|p| !p.starts_with("le=")).collect();
+            let key = format!("{name}{{{}}}", ident.join(","));
+            let c = v as u64;
+            if sel.contains("le=\"+Inf\"") {
+                inf.insert(key.clone(), c);
+            }
+            let prev = last_cum.entry(key).or_insert(0);
+            assert!(c >= *prev, "bucket counts not cumulative at: {line}");
+            *prev = c;
+        }
+        if let Some((name_sel, _)) = series.split_once("_count") {
+            // `_count` must equal the +Inf bucket of the same series.
+            let key = format!("{}{}", name_sel, {
+                let sel = series.split_once("_count").unwrap().1;
+                if sel.is_empty() { "{}".to_string() } else { sel.to_string() }
+            });
+            if let Some(&i) = inf.get(&key) {
+                assert_eq!(i, v as u64, "+Inf bucket != _count for {key}");
+            }
+        }
+    }
+}
+
+#[test]
+fn run_exports_are_well_formed() {
+    let _g = guarded();
+    // A plain driver run with the default metrics=on: the JSON row must
+    // carry the summaries block and the Prometheus rendering must be
+    // well-formed, with every core hot boundary represented.
+    let cfg =
+        RunConfig { global: vec![16, 12, 10], ranks: 4, inner: 1, outer: 1, ..Default::default() };
+    let rep = run_config(&cfg, 2);
+    assert!(rep.max_err < 1e-9);
+    let s = metrics::summaries();
+    for name in [
+        "a2wfft_exchange_seconds",
+        "a2wfft_fft_axis_seconds",
+        "a2wfft_copy_seconds",
+        "a2wfft_mailbox_queue_depth",
+    ] {
+        let m = s.iter().find(|m| m.name == name);
+        assert!(m.is_some_and(|m| m.count > 0), "core boundary {name} not recorded");
+    }
+    // Quantiles are monotone (p50 <= p90 <= p99) on every histogram.
+    for m in &s {
+        assert!(m.p50 <= m.p90 + 1e-12 && m.p90 <= m.p99 + 1e-12, "{}: quantile order", m.name);
+    }
+    // The --json row embeds the same summaries.
+    let row = JsonValue::parse(&report_json("m", &cfg.global, &[2, 2], 4, &rep)).unwrap();
+    let block = row.get("metrics").and_then(|v| v.as_arr()).expect("metrics block missing");
+    assert!(!block.is_empty());
+    let exch = block
+        .iter()
+        .find(|m| m.get("name").and_then(|v| v.as_str()) == Some("a2wfft_exchange_seconds"))
+        .expect("exchange histogram missing from the JSON block");
+    for field in ["count", "p50", "p90", "p99", "max"] {
+        assert!(exch.get(field).and_then(|v| v.as_num()).is_some(), "{field} missing");
+    }
+    assert!(exch.get("method").and_then(|v| v.as_str()).is_some(), "method label missing");
+    // Prometheus text export.
+    let text = metrics::render_prometheus();
+    assert!(text.contains("# TYPE a2wfft_exchange_seconds histogram"));
+    assert!(text.contains("a2wfft_exchange_seconds_bucket"));
+    assert!(text.contains("le=\"+Inf\""));
+    assert!(text.contains("a2wfft_exchange_seconds_sum"));
+    assert!(text.contains("a2wfft_exchange_seconds_count"));
+    validate_prometheus(&text);
+}
+
+#[test]
+fn no_metrics_run_records_nothing() {
+    let _g = guarded();
+    let cfg = RunConfig {
+        global: vec![16, 12, 10],
+        ranks: 2,
+        inner: 1,
+        outer: 1,
+        metrics: false,
+        ..Default::default()
+    };
+    let rep = run_config(&cfg, 1);
+    assert!(rep.max_err < 1e-9);
+    assert!(metrics::summaries().is_empty(), "--no-metrics run left merged metrics behind");
+    assert_eq!(metrics::render_prometheus(), "");
+}
